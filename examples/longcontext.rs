@@ -1,0 +1,68 @@
+//! Long-context retention demo: needle-in-a-haystack at growing context
+//! lengths for every compression policy — the Table 2 phenomenon in a
+//! runnable example (watch H2O/TOVA drop the needle while DMS keeps it).
+//!
+//! Run:  cargo run --release --example longcontext -- [--n 8]
+
+use hyperscale::compress::PolicyKind;
+use hyperscale::config::EngineConfig;
+use hyperscale::engine::{aggregate, Engine, GenRequest};
+use hyperscale::tasks::gen_niah_with_fillers;
+use hyperscale::util::Args;
+
+fn main() -> hyperscale::Result<()> {
+    let args = Args::from_env();
+    let n = args.get_usize("n", 8)?;
+    let cr = args.get_f64("cr", 4.0)?;
+    let mut engine = Engine::new(EngineConfig {
+        artifacts: args.get_str("artifacts", "artifacts").into(),
+        temperature: 0.0,
+        ..Default::default()
+    })?;
+
+    println!("NIAH accuracy by context size (CR {cr}x, greedy):\n");
+    println!("{:>12} {:>9} {:>9} {:>9}", "policy", "short", "medium", "long");
+    for (policy, variant) in [
+        (PolicyKind::Vanilla, "base"),
+        (PolicyKind::Dms, "dms_w16_cr4"),
+        (PolicyKind::Quest, "base"),
+        (PolicyKind::Tova, "base"),
+        (PolicyKind::H2o, "base"),
+        (PolicyKind::Dmc, "dmc"),
+    ] {
+        engine.set_variant(variant)?;
+        engine.set_policy(
+            policy,
+            if policy == PolicyKind::Vanilla { 1.0 } else { cr },
+        )?;
+        print!("{:>12}", policy.name());
+        for fillers in [4usize, 8, 12] {
+            let mut requests = Vec::new();
+            let mut golds = Vec::new();
+            for i in 0..n as u64 {
+                let p = gen_niah_with_fillers(3, i, fillers);
+                if p.prompt.len() + 12 > engine.geometry().slots {
+                    continue;
+                }
+                let max_len = p.prompt.len() + 12;
+                requests.push(GenRequest {
+                    prompt: p.prompt,
+                    width: 1,
+                    max_len,
+                    temperature: 0.0,
+                    seed: i,
+                });
+                golds.push(p.answer);
+            }
+            let (results, _) = engine.run(&requests)?;
+            let ok = results
+                .iter()
+                .zip(&golds)
+                .filter(|(r, g)| aggregate("niah", &r.texts(), g))
+                .count();
+            print!(" {:>8.0}%", 100.0 * ok as f64 / results.len().max(1) as f64);
+        }
+        println!();
+    }
+    Ok(())
+}

@@ -1,0 +1,147 @@
+//! End-to-end serving driver (the repo's E2E validation run): start the
+//! TCP server with the DMS model, fire a batch of concurrent client
+//! requests (parallel-scaling W=4 reasoning queries), and report
+//! accuracy, latency percentiles, throughput, and KV budget use.
+//!
+//! Run:  cargo run --release --example serve_e2e -- \
+//!           [--requests 12] [--width 4] [--policy dms --cr 4]
+//!
+//! Results are recorded in EXPERIMENTS.md §E2E.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use hyperscale::compress::PolicyKind;
+use hyperscale::config::EngineConfig;
+use hyperscale::server::{serve, Client};
+use hyperscale::tasks::gen_problem;
+use hyperscale::util::{Args, Json};
+
+fn main() -> hyperscale::Result<()> {
+    let args = Args::from_env();
+    let n_requests = args.get_usize("requests", 12)?;
+    let width = args.get_usize("width", 4)?;
+    let addr = args.get_str("addr", "127.0.0.1:7441").to_string();
+    let policy: PolicyKind = args.get_str("policy", "dms").parse()?;
+    let cr = args.get_f64("cr", 4.0)?;
+    let variant = args
+        .get("variant")
+        .map(String::from)
+        .unwrap_or_else(|| policy.default_variant(cr).to_string());
+
+    let cfg = EngineConfig {
+        artifacts: args.get_str("artifacts", "artifacts").into(),
+        variant,
+        policy,
+        cr,
+        temperature: 0.7,
+        ..Default::default()
+    };
+
+    // server thread (owns the engine)
+    let saddr = addr.clone();
+    let server = std::thread::spawn(move || {
+        if let Err(e) = serve(cfg, &saddr) {
+            eprintln!("server error: {e:#}");
+        }
+    });
+    std::thread::sleep(Duration::from_millis(300));
+    // wait for the server to accept (compilation takes a few seconds)
+    let mut probe = None;
+    for _ in 0..100 {
+        match Client::connect(&addr) {
+            Ok(c) => {
+                probe = Some(c);
+                break;
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(200)),
+        }
+    }
+    let Some(_probe) = probe else {
+        anyhow::bail!("server did not come up");
+    };
+
+    // client load: n_requests problems, 3 concurrent client threads
+    let t_start = Instant::now();
+    let (tx, rx) = mpsc::channel();
+    let n_clients = 3usize;
+    for c in 0..n_clients {
+        let tx = tx.clone();
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            let mut client = Client::connect(&addr).expect("connect");
+            let mut i = c as u64;
+            while i < n_requests as u64 {
+                let p = gen_problem("gsm8k", 7, i);
+                let req = Json::obj()
+                    .set("id", i)
+                    .set("prompt", p.prompt.as_str())
+                    .set("width", width)
+                    .set("max_len", 192usize)
+                    .set("temperature", 0.7)
+                    .set("seed", i);
+                let t0 = Instant::now();
+                let resp = client.call(&req).expect("call");
+                let latency = t0.elapsed().as_secs_f64();
+                let correct = resp.get("answer").and_then(Json::as_str)
+                    == Some(p.answer.as_str());
+                let reads = resp
+                    .get("reads")
+                    .and_then(|x| x.as_f64())
+                    .unwrap_or(0.0);
+                let peak = resp
+                    .get("peak_tokens")
+                    .and_then(|x| x.as_f64())
+                    .unwrap_or(0.0);
+                tx.send((latency, correct, reads, peak)).unwrap();
+                i += n_clients as u64;
+            }
+        });
+    }
+    drop(tx);
+
+    let mut latencies = Vec::new();
+    let mut correct = 0usize;
+    let mut reads = 0.0;
+    let mut peak: f64 = 0.0;
+    for (lat, ok, r, p) in rx {
+        latencies.push(lat);
+        if ok {
+            correct += 1;
+        }
+        reads += r;
+        peak = peak.max(p);
+    }
+    let wall = t_start.elapsed().as_secs_f64();
+
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| latencies[(p * (latencies.len() - 1) as f64) as usize];
+    println!("\n=== serve_e2e report ===");
+    println!("policy {} CR {cr} width {width}", policy.name());
+    println!("requests: {} (x{} chains)", latencies.len(), width);
+    println!(
+        "accuracy (majority vote): {:.1}%",
+        100.0 * correct as f64 / latencies.len() as f64
+    );
+    println!(
+        "latency s: p50 {:.2}  p90 {:.2}  max {:.2}",
+        pct(0.5),
+        pct(0.9),
+        latencies.last().unwrap()
+    );
+    println!(
+        "throughput: {:.2} req/s ({:.1} chains/s)",
+        latencies.len() as f64 / wall,
+        (latencies.len() * width) as f64 / wall
+    );
+    println!(
+        "KV reads total: {:.0} token-units   peak per-request memory: {:.1} tokens",
+        reads, peak
+    );
+
+    // shut the server down
+    let mut c = Client::connect(&addr)?;
+    c.shutdown()?;
+    let _ = server.join();
+    Ok(())
+}

@@ -1,0 +1,426 @@
+"""AOT build: train (cached) → export HLO text artifacts + manifest.
+
+This is the *only* entry point that runs Python; after `make artifacts`
+the Rust binary is self-contained. Interchange is HLO **text** (the
+image's xla_extension 0.5.1 rejects jax≥0.5 serialized protos whose
+instruction ids exceed INT_MAX; the text parser reassigns ids).
+
+Weights are passed to the executables as leading *inputs* rather than
+baked as constants — baking 0.57M f32 as decimal text would blow each
+HLO file up by ~20 MB, and passing them lets the Rust runtime upload the
+parameter literals once and reuse them across calls.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+Env:    HS_FAST=1   smoke mode (tiny step counts; for CI only)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+import time
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import tasks, train
+from .model import Config, decode_step, prefill_chunk, init_params
+
+FAST = os.environ.get("HS_FAST", "") == "1"
+
+# Retrofit schedule (paper: 100 steps per CR unit after the zeroing phase)
+PRETRAIN_STEPS = 60 if FAST else 3400
+W16_STEPS = 30 if FAST else 800          # reaches CR8 at step 800
+SIDE_STEPS = 20 if FAST else 400         # reaches CR4
+DMC_STEPS = 20 if FAST else 500
+SNAPSHOTS_W16 = (4, 8) if FAST else (150, 200, 300, 400, 500, 600, 800)
+SNAPSHOTS_SIDE = () if FAST else (200, 300, 400)
+SNAPSHOTS_DMC = (4, 8) if FAST else (150, 200, 300, 400, 500)
+
+PARAM_KEYS = ("ln1", "wq", "wk", "wv", "wo", "ln2", "w1", "w3", "w2")
+
+
+def param_order(cfg: Config) -> list[str]:
+    """Canonical flat parameter order shared with the Rust runtime."""
+    names = ["embed", "ln_f", "lm_head"]
+    for i in range(cfg.n_layers):
+        names += [f"layers.{i}.{k}" for k in PARAM_KEYS]
+    return names
+
+
+def params_to_list(params, cfg: Config):
+    flat = train.flatten_params(params)
+    return [flat[n] for n in param_order(cfg)]
+
+
+def list_to_params(lst, cfg: Config):
+    flat = dict(zip(param_order(cfg), lst))
+    return train.unflatten_params(flat, cfg)
+
+
+# --------------------------------------------------------------------------
+# .bin checkpoint format (JSON header + raw little-endian f32 payload)
+#   [u32 header_len][header JSON][payload]
+#   header: {"tensors": [{"name": str, "shape": [..], "offset": int}, ...]}
+# Mirrored by rust/src/runtime/weights.rs.
+# --------------------------------------------------------------------------
+
+
+def save_bin(path: str, params, cfg: Config):
+    flat = train.flatten_params(params)
+    tensors, payload = [], b""
+    for name in param_order(cfg):
+        arr = np.ascontiguousarray(np.asarray(flat[name], np.float32))
+        tensors.append(
+            {"name": name, "shape": list(arr.shape), "offset": len(payload)}
+        )
+        payload += arr.tobytes()
+    header = json.dumps({"tensors": tensors}).encode()
+    with open(path, "wb") as f:
+        f.write(struct.pack("<I", len(header)))
+        f.write(header)
+        f.write(payload)
+
+
+# --------------------------------------------------------------------------
+# HLO export
+# --------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_decode(cfg: Config, out_path: str, *, batch: int, slots: int,
+                  use_pallas: bool):
+    """Decode-step executable. Inputs: params… then
+    (k_cache, v_cache, tokens, positions, mask, pmin, pmax, quest_k)."""
+    l, h, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    p = slots // cfg.page_size
+    n_params = len(param_order(cfg))
+
+    def fn(*args):
+        prm = list_to_params(args[:n_params], cfg)
+        kc, vc, tok, pos, mask, pmin, pmax, qk = args[n_params:]
+        return decode_step(
+            prm, cfg, kc, vc, tok, pos, mask, pmin, pmax, qk,
+            use_pallas=use_pallas,
+        )
+
+    f32, i32 = np.float32, np.int32
+    specs = [
+        jax.ShapeDtypeStruct(np.asarray(a).shape, np.asarray(a).dtype)
+        for a in params_to_list(init_params(cfg), cfg)
+    ]
+    specs += [
+        jax.ShapeDtypeStruct((l, batch, h, slots, hd), f32),
+        jax.ShapeDtypeStruct((l, batch, h, slots, hd), f32),
+        jax.ShapeDtypeStruct((batch,), i32),
+        jax.ShapeDtypeStruct((batch,), i32),
+        jax.ShapeDtypeStruct((l, batch, h, slots), f32),
+        jax.ShapeDtypeStruct((l, batch, h, p, hd), f32),
+        jax.ShapeDtypeStruct((l, batch, h, p, hd), f32),
+        jax.ShapeDtypeStruct((), i32),
+    ]
+    text = to_hlo_text(jax.jit(fn).lower(*specs))
+    with open(out_path, "w") as f:
+        f.write(text)
+    return {
+        "kind": "decode", "batch": batch, "slots": slots, "pages": p,
+        "pallas": use_pallas, "file": os.path.basename(out_path),
+    }
+
+
+def export_prefill(cfg: Config, out_path: str, *, batch: int, chunk: int,
+                   slots: int, window: int, immediate: bool,
+                   dms_enabled: bool, use_pallas: bool):
+    """Prefill-chunk executable. Inputs: params… then
+    (k_cache, v_cache, cache_mask, tokens, positions, valid)."""
+    l, h, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    n_params = len(param_order(cfg))
+
+    def fn(*args):
+        prm = list_to_params(args[:n_params], cfg)
+        kc, vc, cmask, tok, pos, val = args[n_params:]
+        return prefill_chunk(
+            prm, cfg, kc, vc, cmask, tok, pos, val,
+            window=window, immediate=immediate, dms_enabled=dms_enabled,
+            use_pallas=use_pallas,
+        )
+
+    f32, i32 = np.float32, np.int32
+    specs = [
+        jax.ShapeDtypeStruct(np.asarray(a).shape, np.asarray(a).dtype)
+        for a in params_to_list(init_params(cfg), cfg)
+    ]
+    specs += [
+        jax.ShapeDtypeStruct((l, batch, h, slots, hd), f32),
+        jax.ShapeDtypeStruct((l, batch, h, slots, hd), f32),
+        jax.ShapeDtypeStruct((l, batch, h, slots), f32),
+        jax.ShapeDtypeStruct((batch, chunk), i32),
+        jax.ShapeDtypeStruct((batch, chunk), i32),
+        jax.ShapeDtypeStruct((batch, chunk), f32),
+    ]
+    text = to_hlo_text(jax.jit(fn).lower(*specs))
+    with open(out_path, "w") as f:
+        f.write(text)
+    return {
+        "kind": "prefill", "batch": batch, "chunk": chunk, "slots": slots,
+        "window": window, "immediate": immediate, "dms": dms_enabled,
+        "pallas": use_pallas, "file": os.path.basename(out_path),
+    }
+
+
+# --------------------------------------------------------------------------
+# Golden task samples (cross-language generator pinning)
+# --------------------------------------------------------------------------
+
+
+def golden_tasks() -> dict:
+    out = {}
+    for suite in sorted(tasks.SUITES):
+        rows = []
+        for i in range(3):
+            p = tasks.gen_problem(suite, 42, i)
+            rows.append(
+                {"prompt": p.prompt, "solution": p.solution, "answer": p.answer}
+            )
+        out[suite] = rows
+    return out
+
+
+# --------------------------------------------------------------------------
+# Main build
+# --------------------------------------------------------------------------
+
+
+def build(out_dir: str):
+    cfg = Config()
+    os.makedirs(out_dir, exist_ok=True)
+    ckpt_dir = os.path.join(out_dir, "ckpt")
+    hlo_dir = os.path.join(out_dir, "hlo")
+    os.makedirs(ckpt_dir, exist_ok=True)
+    os.makedirs(hlo_dir, exist_ok=True)
+    t_start = time.time()
+
+    # ---------------- stage 1: pretrain (the "public base model") --------
+    base_path = os.path.join(ckpt_dir, "base.npz")
+    warm_path = os.path.join(ckpt_dir, "base_warmstart.npz")
+    if os.path.exists(base_path):
+        base = train.load_ckpt(base_path, cfg)
+        print("[aot] loaded cached base ckpt", flush=True)
+    else:
+        warm = None
+        if os.path.exists(warm_path):
+            warm = train.load_ckpt(warm_path, cfg)
+            print("[aot] warm-starting pretrain from previous base", flush=True)
+        base = train.pretrain(cfg, PRETRAIN_STEPS, params=warm)
+        train.save_ckpt(base_path, base)
+        for task in ("math", "gsm8k", "niah", "vt"):
+            acc = train.greedy_accuracy(base, cfg, task, n=16, max_gen=80, seed=17)
+            print(f"[aot] base {task} greedy acc {acc:.2f}", flush=True)
+
+    # ---------------- stage 2: retrofit variants -------------------------
+    def retro(tag, mode, window, steps, snaps, cr_max=8.0):
+        final_path = os.path.join(ckpt_dir, f"{tag}.npz")
+        if os.path.exists(final_path):
+            print(f"[aot] cached {tag}", flush=True)
+            return train.load_ckpt(final_path, cfg)
+        p = train.retrofit(
+            cfg, base, alpha_mode=mode, window=window, steps=steps,
+            snapshot_steps=snaps, snapshot_dir=ckpt_dir, tag=tag,
+            cr_max=cr_max,
+        )
+        train.save_ckpt(final_path, p)
+        return p
+
+    retro("dms_w16", "dms", 16, W16_STEPS, SNAPSHOTS_W16)
+    retro("dms_w4", "dms", 4, SIDE_STEPS, SNAPSHOTS_SIDE, cr_max=4.0)
+    retro("dms_imm_w4", "dms_immediate", 4, SIDE_STEPS, SNAPSHOTS_SIDE,
+          cr_max=4.0)
+    retro("dms_imm_w16", "dms_immediate", 16, SIDE_STEPS, SNAPSHOTS_SIDE,
+          cr_max=4.0)
+    retro("dmc", "dmc", 16, DMC_STEPS, SNAPSHOTS_DMC, cr_max=4.0)
+
+    # ---------------- stage 3: Fig. 5 snapshot evals (python-side) -------
+    fig5_path = os.path.join(out_dir, "fig5_data.json")
+    if not os.path.exists(fig5_path):
+        fig5 = {"delayed_vs_immediate": [], "data_efficiency": []}
+        n_eval = 4 if FAST else 24
+        tok_per_step = train.BATCH * train.SEQ_LEN
+        for tag, mode, w in (
+            ("dms_w4", "dms", 4),
+            ("dms_w16", "dms", 16),
+            ("dms_imm_w4", "dms_immediate", 4),
+            ("dms_imm_w16", "dms_immediate", 16),
+        ):
+            for step in SNAPSHOTS_SIDE:
+                path = os.path.join(ckpt_dir, f"{tag}_step{step}.npz")
+                if not os.path.exists(path):
+                    continue
+                p = train.load_ckpt(path, cfg)
+                acc = train.greedy_accuracy(
+                    p, cfg, "gsm8k", n=n_eval, alpha_mode=mode, window=w
+                )
+                cr = 1.0 + max(0, step - 100) / 100
+                fig5["delayed_vs_immediate"].append(
+                    {"variant": tag, "cr": cr, "step": step, "acc": acc}
+                )
+                print(f"[fig5] {tag} step {step} cr {cr} acc {acc:.2f}",
+                      flush=True)
+        for tag, mode, snaps in (
+            ("dms_w16", "dms", SNAPSHOTS_W16),
+            ("dmc", "dmc", SNAPSHOTS_DMC),
+        ):
+            for step in snaps:
+                path = os.path.join(ckpt_dir, f"{tag}_step{step}.npz")
+                if not os.path.exists(path):
+                    continue
+                p = train.load_ckpt(path, cfg)
+                acc = train.greedy_accuracy(
+                    p, cfg, "gsm8k", n=n_eval, alpha_mode=mode, window=16
+                )
+                fig5["data_efficiency"].append(
+                    {
+                        "variant": tag, "step": step,
+                        "tokens": step * tok_per_step, "acc": acc,
+                        "cr": 1.0 + max(0, step - 100) / 100,
+                    }
+                )
+                print(f"[fig5] {tag} step {step} acc {acc:.2f}", flush=True)
+        with open(fig5_path, "w") as f:
+            json.dump(fig5, f, indent=1)
+
+    # ---------------- stage 4: export HLO + .bin weights ------------------
+    variants = {
+        "base": {"ckpt": "base.npz", "alpha_mode": "off", "window": 16,
+                 "immediate": False},
+        "dms_w16_cr2": {"ckpt": "dms_w16_step200.npz", "alpha_mode": "dms",
+                        "window": 16, "immediate": False},
+        "dms_w16_cr3": {"ckpt": "dms_w16_step300.npz", "alpha_mode": "dms",
+                        "window": 16, "immediate": False},
+        "dms_w16_cr4": {"ckpt": "dms_w16_step400.npz", "alpha_mode": "dms",
+                        "window": 16, "immediate": False},
+        "dmc_cr2": {"ckpt": "dmc_step200.npz", "alpha_mode": "dmc",
+                    "window": 16, "immediate": False},
+        "dmc_cr3": {"ckpt": "dmc_step300.npz", "alpha_mode": "dmc",
+                    "window": 16, "immediate": False},
+        "dms_w16_cr8": {"ckpt": "dms_w16.npz", "alpha_mode": "dms",
+                        "window": 16, "immediate": False},
+        "dms_w4": {"ckpt": "dms_w4.npz", "alpha_mode": "dms", "window": 4,
+                   "immediate": False},
+        "dms_imm_w16": {"ckpt": "dms_imm_w16.npz",
+                        "alpha_mode": "dms_immediate", "window": 16,
+                        "immediate": True},
+        "dmc": {"ckpt": "dmc.npz", "alpha_mode": "dmc", "window": 16,
+                "immediate": False},
+    }
+    if FAST:
+        variants["dms_w16_cr4"]["ckpt"] = "dms_w16.npz"
+
+    manifest = {
+        "config": cfg.as_dict(),
+        "param_order": param_order(cfg),
+        "vocab": tasks.VOCAB,
+        "specials": {"pad": tasks.PAD_ID, "bos": tasks.BOS_ID,
+                     "eos": tasks.EOS_ID},
+        "variants": {},
+        "executables": {},
+    }
+
+    exe_specs = [
+        ("decode_b8_s320", dict(batch=8, slots=320, use_pallas=True)),
+        ("decode_b8_s192", dict(batch=8, slots=192, use_pallas=True)),
+        ("decode_b1_s320", dict(batch=1, slots=320, use_pallas=True)),
+        ("decode_b8_s320_jnp", dict(batch=8, slots=320, use_pallas=False)),
+    ]
+    for name, kw in exe_specs:
+        path = os.path.join(hlo_dir, f"{name}.hlo.txt")
+        if not os.path.exists(path):
+            t0 = time.time()
+            meta = export_decode(cfg, path, **kw)
+            print(f"[aot] exported {name} ({time.time()-t0:.1f}s, "
+                  f"{os.path.getsize(path)//1024}KB)", flush=True)
+        else:
+            p_ = kw["slots"] // cfg.page_size
+            meta = {"kind": "decode", "batch": kw["batch"],
+                    "slots": kw["slots"], "pages": p_,
+                    "pallas": kw["use_pallas"], "file": f"{name}.hlo.txt"}
+        manifest["executables"][name] = meta
+
+    prefill_flavours = [
+        ("prefill_dense_b8", dict(window=16, immediate=False,
+                                  dms_enabled=False)),
+        ("prefill_dms_w16_b8", dict(window=16, immediate=False,
+                                    dms_enabled=True)),
+        ("prefill_dms_w4_b8", dict(window=4, immediate=False,
+                                   dms_enabled=True)),
+        ("prefill_imm_w16_b8", dict(window=16, immediate=True,
+                                    dms_enabled=True)),
+        ("prefill_dense_b1", dict(window=16, immediate=False,
+                                  dms_enabled=False, batch=1)),
+        ("prefill_dms_w16_b1", dict(window=16, immediate=False,
+                                    dms_enabled=True, batch=1)),
+        # s192 bucket (perf pass: smaller uploads for short configs)
+        ("prefill_dense_b8_s192", dict(window=16, immediate=False,
+                                       dms_enabled=False, slots=192)),
+        ("prefill_dms_w16_b8_s192", dict(window=16, immediate=False,
+                                         dms_enabled=True, slots=192)),
+    ]
+    for name, kw in prefill_flavours:
+        batch = kw.pop("batch", 8)
+        slots = kw.pop("slots", 320)
+        path = os.path.join(hlo_dir, f"{name}.hlo.txt")
+        if not os.path.exists(path):
+            t0 = time.time()
+            meta = export_prefill(cfg, path, batch=batch, chunk=32,
+                                  slots=slots, use_pallas=True, **kw)
+            print(f"[aot] exported {name} ({time.time()-t0:.1f}s)", flush=True)
+        else:
+            meta = {"kind": "prefill", "batch": batch, "chunk": 32,
+                    "slots": slots, "pallas": True,
+                    "file": f"{name}.hlo.txt",
+                    "window": kw["window"], "immediate": kw["immediate"],
+                    "dms": kw["dms_enabled"]}
+        manifest["executables"][name] = meta
+
+    for tag, spec in variants.items():
+        ck = os.path.join(ckpt_dir, spec["ckpt"])
+        if not os.path.exists(ck):
+            print(f"[aot] WARNING missing ckpt for {tag}: {ck}", flush=True)
+            continue
+        params = train.load_ckpt(ck, cfg)
+        bin_path = os.path.join(out_dir, f"weights_{tag}.bin")
+        if not os.path.exists(bin_path):
+            save_bin(bin_path, params, cfg)
+        manifest["variants"][tag] = {
+            "weights": f"weights_{tag}.bin",
+            "alpha_mode": spec["alpha_mode"],
+            "window": spec["window"],
+            "immediate": spec["immediate"],
+        }
+
+    # ---------------- stage 5: golden tasks + manifest -------------------
+    with open(os.path.join(out_dir, "tasks_golden.json"), "w") as f:
+        json.dump(golden_tasks(), f, indent=1)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] done in {time.time()-t_start:.0f}s -> {out_dir}", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    build(args.out)
+
+
+if __name__ == "__main__":
+    main()

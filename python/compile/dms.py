@@ -1,0 +1,154 @@
+"""Dynamic Memory Sparsification — training-time machinery (paper §3.2).
+
+Implements:
+  * Gumbel-sigmoid stochastic relaxation of eviction decisions (Eq. 1);
+  * the additive training mask ``M_α`` with *delayed* eviction via a
+    sliding window (Fig. 2b), plus the *immediate*-eviction variant used
+    by the §5.3 ablation;
+  * the DMC relaxation (merge-into-previous via weighted averaging) used
+    as the retrofitted baseline;
+  * the one-sided L1 compression loss and the linear CR annealing
+    schedule ``CR(t) = t/100 + 1``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e9
+ALPHA_BIAS = -5.0  # paper: b = -5 so training starts with alpha ~ 0
+GUMBEL_TAU = 0.3   # low temperature -> near-discrete decisions
+
+
+def gumbel_sigmoid(logits, key, tau: float = GUMBEL_TAU):
+    """BinConcrete / Gumbel-sigmoid sample in [0, 1] (Louizos et al.)."""
+    u = jax.random.uniform(key, logits.shape, minval=1e-6, maxval=1.0 - 1e-6)
+    noise = jnp.log(u) - jnp.log1p(-u)  # logistic noise
+    return jax.nn.sigmoid((logits + noise) / tau)
+
+
+def build_dms_mask(alpha, window: int, *, immediate: bool = False):
+    """Training mask M_α for one KV head group, shape [B, H, T, T].
+
+    Delayed (default): the decision α_j made at timestep j hides token j
+    from queries i ≥ j + w with weight log(1 − α_j); until then the token
+    is fully visible. Causality (j > i → −inf) is included.
+
+    Immediate (ablation): the decision α_{j+w} (made w steps later) hides
+    token j from queries i ≥ j + w — eviction executes as soon as the
+    decision is made, matching classic token-eviction methods.
+
+    Args:
+      alpha: f32[B, H, T] in [0, 1].
+      window: sliding-window size w ≥ 1.
+    """
+    b, h, t = alpha.shape
+    i = jnp.arange(t)[:, None]  # queries
+    j = jnp.arange(t)[None, :]  # keys
+    causal = jnp.where(j <= i, 0.0, NEG_INF)  # [T, T]
+    beyond = (i >= j + window).astype(alpha.dtype)  # [T, T]
+    if immediate:
+        # decision index is j + w (clamped); tokens near the end whose
+        # decision point lies beyond T are never evicted.
+        dec_idx = jnp.minimum(j + window, t - 1)
+        dec_alpha = alpha[:, :, dec_idx[0]]  # [B, H, T] gathered at j+w
+        in_range = (j + window <= t - 1).astype(alpha.dtype)[0]  # [T]
+        a = dec_alpha * in_range[None, None, :]
+    else:
+        a = alpha  # decision at j controls token j
+    # log(1 - α), clamped for numerical safety; α=1 -> NEG_INF.
+    evict = jnp.log1p(-jnp.clip(a, 0.0, 1.0 - 1e-6))  # [B, H, T]
+    evict = jnp.maximum(evict, NEG_INF)
+    mask = causal[None, None] + beyond[None, None] * evict[:, :, None, :]
+    return jnp.maximum(mask, NEG_INF)
+
+
+def dmc_accumulate(k, v, alpha):
+    """DMC relaxation: merge (k_t, v_t) into the running entry when α_t→1.
+
+    Running weighted average along T (lax.scan):
+        c_t  = α_t · c_{t−1} + 1
+        k̃_t = (α_t · k̃_{t−1} · c_{t−1} + k_t) / c_t      (ṽ likewise)
+
+    Token t−1 is hidden (for queries ≥ t) with weight log(1 − α_t): its
+    content now lives inside k̃_t. Returns (k̃, ṽ, absorb_mask_term) where
+    the mask term is f32[B, H, T] to be applied at key position t−1.
+
+    Args:
+      k, v:  f32[B, H, T, hd]
+      alpha: f32[B, H, T] (α_0 is forced to 0 — nothing to merge into).
+    """
+    b, h, t, hd = k.shape
+    alpha = alpha.at[:, :, 0].set(0.0)
+
+    def step(carry, xs):
+        ka, va, c = carry
+        kt, vt, at = xs
+        c_new = at * c + 1.0
+        ka_new = (at[..., None] * ka * c[..., None] + kt) / c_new[..., None]
+        va_new = (at[..., None] * va * c[..., None] + vt) / c_new[..., None]
+        return (ka_new, va_new, c_new), (ka_new, va_new)
+
+    init = (
+        jnp.zeros((b, h, hd), k.dtype),
+        jnp.zeros((b, h, hd), v.dtype),
+        jnp.zeros((b, h), k.dtype),
+    )
+    xs = (
+        jnp.moveaxis(k, 2, 0),
+        jnp.moveaxis(v, 2, 0),
+        jnp.moveaxis(alpha, 2, 0),
+    )
+    _, (ka, va) = jax.lax.scan(step, init, xs)
+    ka = jnp.moveaxis(ka, 0, 2)
+    va = jnp.moveaxis(va, 0, 2)
+    # absorb term: token j hidden by α_{j+1} for queries i ≥ j+1
+    a_next = jnp.concatenate([alpha[:, :, 1:], jnp.zeros((b, h, 1))], axis=2)
+    absorb = jnp.log1p(-jnp.clip(a_next, 0.0, 1.0 - 1e-6))
+    return ka, va, jnp.maximum(absorb, NEG_INF)
+
+
+def build_dmc_mask(alpha):
+    """Causal mask + absorb terms for the DMC relaxation. [B, H, T, T]."""
+    b, h, t = alpha.shape
+    i = jnp.arange(t)[:, None]
+    j = jnp.arange(t)[None, :]
+    causal = jnp.where(j <= i, 0.0, NEG_INF)
+    beyond = (i > j).astype(alpha.dtype)  # absorb applies to queries i ≥ j+1
+    a_next = jnp.concatenate([alpha[:, :, 1:], jnp.zeros((b, h, 1))], axis=2)
+    absorb = jnp.log1p(-jnp.clip(a_next, 0.0, 1.0 - 1e-6))
+    mask = causal[None, None] + beyond[None, None] * absorb[:, :, None, :]
+    return jnp.maximum(mask, NEG_INF)
+
+
+def aux_compression_loss(alphas, valid, target_frac):
+    """One-sided L1 loss: push mean(α) up to the target evicted fraction.
+
+    L_aux = max(α* − mean(α over layers, heads, valid tokens), 0)
+
+    Args:
+      alphas: f32[L, B, H, T] relaxed decisions.
+      valid:  f32[B, T] 1 for real tokens.
+      target_frac: α* = 1 − 1/CR(t).
+    """
+    n_layers, _, n_heads, _ = alphas.shape
+    w = valid[None, :, None, :]  # broadcasts over L and H
+    denom = jnp.maximum(jnp.sum(valid) * n_layers * n_heads, 1.0)
+    mean_alpha = jnp.sum(alphas * w) / denom
+    return jnp.maximum(target_frac - mean_alpha, 0.0)
+
+
+def cr_schedule(step: int, warmup: int = 100, per_unit: int = 100, cr_max: float = 8.0):
+    """Linear annealing: CR(t) = 1 + max(0, t − warmup)/per_unit, capped.
+
+    The paper trains 100 steps per unit of CR; `warmup` covers the App. B
+    α-neuron zeroing phase that precedes compression.
+    """
+    cr = 1.0 + max(0.0, step - warmup) / per_unit
+    return min(cr, cr_max)
+
+
+def neuron_zero_scale(step: int, n_t: int = 100) -> float:
+    """App. B: q_first[0] is annealed to zero over the first n_t steps."""
+    return max(0.0, 1.0 - step / n_t)

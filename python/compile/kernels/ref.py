@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness contract: pytest + hypothesis assert that the
+Pallas kernels in `attention.py` match these references across shapes and
+dtypes. They are also the (fast) attention path used during retrofitting,
+where interpret-mode Pallas would dominate step time; the equivalence is
+what licenses the swap.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e9
+
+
+def decode_attn_ref(q, k, v, mask):
+    """Single-step GQA decode attention over a slot cache.
+
+    Args:
+      q:    f32[B, Hkv, G, hd]   — queries, grouped per KV head.
+      k:    f32[B, Hkv, S, hd]   — key slots (S includes the current token).
+      v:    f32[B, Hkv, S, hd]
+      mask: f32[B, Hkv, S]       — additive mask (0 live, NEG_INF dead).
+
+    Returns:
+      out:  f32[B, Hkv, G, hd]
+      attn: f32[B, Hkv, S]       — softmax weights summed over the G query
+                                   heads of the group (TOVA/H2O signal).
+    """
+    hd = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, q.dtype))
+    # scores[b,h,g,s] = q . k
+    scores = jnp.einsum("bhgd,bhsd->bhgs", q, k) * scale
+    scores = scores + mask[:, :, None, :]
+    w = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    out = jnp.einsum("bhgs,bhsd->bhgd", w, v)
+    return out, jnp.sum(w, axis=2)
+
+
+def chunk_attn_ref(q, k, v, mask):
+    """Chunked (prefill/training) GQA attention.
+
+    Args:
+      q:    f32[B, Hkv, G, C, hd] — C chunk queries per group head.
+      k:    f32[B, Hkv, T, hd]    — T = cache slots + chunk (keys for all
+                                    positions the chunk may attend to).
+      v:    f32[B, Hkv, T, hd]
+      mask: f32[B, Hkv, C, T]     — additive (causality + DMS + validity
+                                    pre-combined by the caller).
+
+    Returns:
+      out:  f32[B, Hkv, G, C, hd]
+    """
+    hd = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, q.dtype))
+    scores = jnp.einsum("bhgcd,bhtd->bhgct", q, k) * scale
+    scores = scores + mask[:, :, None, :, :]
+    w = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    return jnp.einsum("bhgct,bhtd->bhgcd", w, v)

@@ -1,0 +1,399 @@
+"""Layer-2: GQA Transformer LM with DMS (paper §3), in JAX.
+
+One model definition serves three roles:
+
+  * ``forward_train`` — full-sequence forward used for pretraining and
+    for DMS/DMC retrofitting (continuous α, training mask M_α);
+  * ``prefill_chunk`` — C-token chunked prefill over an external slot
+    cache (AOT-exported; DMS sparsity applied intra-chunk with binary α);
+  * ``decode_step``  — single-token decode over the slot cache with
+    per-(layer, KV-head) additive masks and in-graph Quest page
+    selection (AOT-exported; the Rust engine drives it).
+
+α extraction follows App. B: the first neuron of the first query head in
+each query group is re-purposed as the eviction logit (no new
+parameters); after the zeroing phase that neuron no longer contributes to
+attention.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import dms
+from .kernels import attention as K
+from .kernels import ref as R
+
+NEG_INF = -1e9
+
+
+@dataclass(frozen=True)
+class Config:
+    vocab: int = 64
+    d_model: int = 128
+    n_layers: int = 4
+    n_q_heads: int = 8
+    n_kv_heads: int = 2
+    head_dim: int = 16
+    d_ff: int = 256
+    max_pos: int = 512
+    rope_base: float = 10000.0
+    page_size: int = 16
+
+    @property
+    def group(self) -> int:
+        return self.n_q_heads // self.n_kv_heads
+
+    def as_dict(self) -> dict:
+        return {
+            "vocab": self.vocab,
+            "d_model": self.d_model,
+            "n_layers": self.n_layers,
+            "n_q_heads": self.n_q_heads,
+            "n_kv_heads": self.n_kv_heads,
+            "head_dim": self.head_dim,
+            "d_ff": self.d_ff,
+            "max_pos": self.max_pos,
+            "rope_base": self.rope_base,
+            "page_size": self.page_size,
+        }
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+
+def init_params(cfg: Config, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+
+    def w(*shape, scale=0.02):
+        return jnp.asarray(rng.normal(0.0, scale, shape), jnp.float32)
+
+    d, hd = cfg.d_model, cfg.head_dim
+    params = {
+        "embed": w(cfg.vocab, d),
+        "ln_f": jnp.ones((d,), jnp.float32),
+        "lm_head": w(d, cfg.vocab),
+        "layers": [],
+    }
+    out_scale = 0.02 / np.sqrt(2 * cfg.n_layers)
+    for _ in range(cfg.n_layers):
+        params["layers"].append(
+            {
+                "ln1": jnp.ones((d,), jnp.float32),
+                "wq": w(d, cfg.n_q_heads * hd),
+                "wk": w(d, cfg.n_kv_heads * hd),
+                "wv": w(d, cfg.n_kv_heads * hd),
+                "wo": w(cfg.n_q_heads * hd, d, scale=out_scale),
+                "ln2": jnp.ones((d,), jnp.float32),
+                "w1": w(d, cfg.d_ff),
+                "w3": w(d, cfg.d_ff),
+                "w2": w(cfg.d_ff, d, scale=out_scale),
+            }
+        )
+    return params
+
+
+def rmsnorm(x, g):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6) * g
+
+
+def rope_tables(cfg: Config):
+    half = cfg.head_dim // 2
+    freqs = cfg.rope_base ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    angles = jnp.arange(cfg.max_pos, dtype=jnp.float32)[:, None] * freqs[None, :]
+    return jnp.cos(angles), jnp.sin(angles)  # [max_pos, half]
+
+
+def apply_rope(x, positions, cos_tab, sin_tab):
+    """x: [..., hd]; positions broadcastable to x.shape[:-1]."""
+    half = x.shape[-1] // 2
+    cos = jnp.take(cos_tab, positions, axis=0)
+    sin = jnp.take(sin_tab, positions, axis=0)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# Shared projection helper
+# --------------------------------------------------------------------------
+
+
+def _qkv(layer, x, cfg: Config, q_first_scale):
+    """Project x [..., d] -> q [..., Hq, hd], k/v [..., Hkv, hd], α logits.
+
+    α logit for KV head h = q[..., h*G, 0] + b  (App. B); the neuron's
+    attention contribution is scaled by ``q_first_scale`` (1 during
+    pretraining, annealed to 0 in the zeroing phase, 0 afterwards).
+    """
+    hd = cfg.head_dim
+    q = (x @ layer["wq"]).reshape(*x.shape[:-1], cfg.n_q_heads, hd)
+    k = (x @ layer["wk"]).reshape(*x.shape[:-1], cfg.n_kv_heads, hd)
+    v = (x @ layer["wv"]).reshape(*x.shape[:-1], cfg.n_kv_heads, hd)
+    first = jnp.arange(cfg.n_kv_heads) * cfg.group
+    alpha_logit = q[..., first, 0] + dms.ALPHA_BIAS  # [..., Hkv]
+    scale_vec = jnp.ones((cfg.n_q_heads,), q.dtype).at[first].set(q_first_scale)
+    q = q.at[..., 0].multiply(scale_vec)
+    return q, k, v, alpha_logit
+
+
+def _mlp(layer, x):
+    return (jax.nn.silu(x @ layer["w1"]) * (x @ layer["w3"])) @ layer["w2"]
+
+
+# --------------------------------------------------------------------------
+# Training forward (full sequence)
+# --------------------------------------------------------------------------
+
+
+def forward_train(
+    params,
+    cfg: Config,
+    tokens,           # i32[B, T]
+    valid,            # f32[B, T]
+    *,
+    alpha_mode: str = "off",   # off | dms | dms_immediate | dmc
+    window: int = 16,
+    gumbel_key=None,           # PRNGKey -> stochastic α; None -> hard α
+    q_first_scale: float = 1.0,
+):
+    """Returns (logits f32[B,T,V], alphas f32[L,B,Hkv,T])."""
+    b, t = tokens.shape
+    cos_tab, sin_tab = rope_tables(cfg)
+    positions = jnp.arange(t)[None, :].repeat(b, axis=0)
+    h = jnp.take(params["embed"], tokens, axis=0)
+
+    i = jnp.arange(t)[:, None]
+    j = jnp.arange(t)[None, :]
+    causal = jnp.where(j <= i, 0.0, NEG_INF)[None, None]              # [1,1,T,T]
+    key_valid = jnp.where(valid > 0, 0.0, NEG_INF)[:, None, None, :]  # [B,1,1,T]
+
+    alphas = []
+    for li, layer in enumerate(params["layers"]):
+        x = rmsnorm(h, layer["ln1"])
+        q, k, v, alpha_logit = _qkv(layer, x, cfg, q_first_scale)
+        if alpha_mode == "off":
+            alpha = jnp.zeros((b, t, cfg.n_kv_heads), h.dtype)
+        elif gumbel_key is not None:
+            alpha = dms.gumbel_sigmoid(
+                alpha_logit, jax.random.fold_in(gumbel_key, li)
+            )
+        else:
+            alpha = (alpha_logit > 0).astype(h.dtype)
+        alpha = alpha * valid[:, :, None]
+        alpha_bht = jnp.moveaxis(alpha, -1, 1)  # [B, Hkv, T]
+        alphas.append(alpha_bht)
+
+        q = apply_rope(q, positions[:, :, None], cos_tab, sin_tab)
+        k = apply_rope(k, positions[:, :, None], cos_tab, sin_tab)
+        qg = jnp.moveaxis(
+            q.reshape(b, t, cfg.n_kv_heads, cfg.group, cfg.head_dim), 1, 3
+        )  # [B, Hkv, G, T, hd]
+        kg = jnp.moveaxis(k, 1, 2)  # [B, Hkv, T, hd]
+        vg = jnp.moveaxis(v, 1, 2)
+
+        if alpha_mode == "dmc":
+            kg, vg, _ = dms.dmc_accumulate(kg, vg, alpha_bht)
+            mask = jnp.maximum(key_valid + dms.build_dmc_mask(alpha_bht), NEG_INF)
+        elif alpha_mode in ("dms", "dms_immediate"):
+            m_alpha = dms.build_dms_mask(
+                alpha_bht, window, immediate=(alpha_mode == "dms_immediate")
+            )
+            mask = jnp.maximum(key_valid + m_alpha, NEG_INF)
+        else:
+            mask = jnp.broadcast_to(causal + key_valid, (b, 1, t, t))
+        mask = jnp.broadcast_to(mask, (b, cfg.n_kv_heads, t, t))
+
+        out = R.chunk_attn_ref(qg, kg, vg, mask)  # [B, Hkv, G, T, hd]
+        out = jnp.moveaxis(out, 3, 1).reshape(b, t, cfg.n_q_heads * cfg.head_dim)
+        h = h + out @ layer["wo"]
+        h = h + _mlp(layer, rmsnorm(h, layer["ln2"]))
+
+    h = rmsnorm(h, params["ln_f"])
+    logits = h @ params["lm_head"]
+    return logits, jnp.stack(alphas)  # [L, B, Hkv, T]
+
+
+# --------------------------------------------------------------------------
+# Decode step (AOT-exported; fixed B, S)
+# --------------------------------------------------------------------------
+
+
+def decode_step(
+    params,
+    cfg: Config,
+    k_cache,    # f32[L, B, Hkv, S, hd]  (keys stored post-RoPE)
+    v_cache,    # f32[L, B, Hkv, S, hd]
+    tokens,     # i32[B]
+    positions,  # i32[B]
+    mask,       # f32[L, B, Hkv, S] additive (0 live / NEG_INF dead)
+    pmin,       # f32[L, B, Hkv, P, hd]  Quest page lower bounds
+    pmax,       # f32[L, B, Hkv, P, hd]  Quest page upper bounds
+    quest_k,    # i32[]  pages kept per head; >= P disables Quest
+    *,
+    use_pallas: bool = True,
+):
+    """One decode step over the slot cache.
+
+    Returns (logits [B,V], k_new [L,B,Hkv,hd], v_new, alpha [L,B,Hkv],
+    attn [L,B,Hkv,S], attn_self [L,B,Hkv], qsel [L,B,Hkv,P]).
+    """
+    l, b, hkv, s, hd = k_cache.shape
+    p = pmin.shape[3]
+    ps = s // p
+    cos_tab, sin_tab = rope_tables(cfg)
+    h = jnp.take(params["embed"], tokens, axis=0)  # [B, d]
+
+    k_news, v_news, alphas, attns, attn_selfs, qsels = [], [], [], [], [], []
+
+    def attn_fn(q_, k_, v_, m_):
+        if use_pallas:
+            return K.decode_attn(q_, k_, v_, m_)
+        return R.decode_attn_ref(q_, k_, v_, m_)
+
+    for li, layer in enumerate(params["layers"]):
+        x = rmsnorm(h, layer["ln1"])
+        q, k, v, alpha_logit = _qkv(layer, x, cfg, 0.0)  # [B,Hq,hd] / [B,Hkv,hd]
+        q = apply_rope(q, positions[:, None], cos_tab, sin_tab)
+        k = apply_rope(k, positions[:, None], cos_tab, sin_tab)
+        qg = q.reshape(b, hkv, cfg.group, hd)
+
+        lm = mask[li]  # [B, Hkv, S]
+        # ---- Quest page selection (in-graph; App. F.1 semantics) ----
+        page_live = jnp.any(
+            lm.reshape(b, hkv, p, ps) > NEG_INF / 2, axis=-1
+        )  # [B, Hkv, P]
+        qs = qg[:, :, :, None, :]  # [B,Hkv,G,1,hd]
+        hi = jnp.maximum(qs * pmin[li][:, :, None], qs * pmax[li][:, :, None])
+        scores = jnp.sum(hi, axis=-1)  # [B, Hkv, G, P]
+        scores = jnp.where(page_live[:, :, None, :], scores, NEG_INF)
+        # rank pages per query head; selected iff rank < quest_k
+        order = jnp.argsort(-scores, axis=-1)
+        ranks = jnp.argsort(order, axis=-1)
+        sel_per_qh = ranks < quest_k  # [B, Hkv, G, P]
+        selected = jnp.any(sel_per_qh, axis=2) & page_live  # union over group
+        qmask = jnp.where(selected, 0.0, NEG_INF)  # [B, Hkv, P]
+        lm = jnp.maximum(lm + jnp.repeat(qmask, ps, axis=-1), NEG_INF)
+        qsels.append(selected.astype(jnp.float32))
+
+        # ---- attention over cache ∪ {current token} ----
+        k_full = jnp.concatenate([k_cache[li], k.reshape(b, hkv, 1, hd)], axis=2)
+        v_full = jnp.concatenate([v_cache[li], v.reshape(b, hkv, 1, hd)], axis=2)
+        m_full = jnp.concatenate([lm, jnp.zeros((b, hkv, 1), lm.dtype)], axis=2)
+        out, attn_w = attn_fn(qg, k_full, v_full, m_full)
+        out = out.reshape(b, cfg.n_q_heads * hd)
+        h = h + out @ layer["wo"]
+        h = h + _mlp(layer, rmsnorm(h, layer["ln2"]))
+
+        k_news.append(k)
+        v_news.append(v)
+        alphas.append(jax.nn.sigmoid(alpha_logit))
+        attns.append(attn_w[:, :, :s])
+        attn_selfs.append(attn_w[:, :, s])
+
+    h = rmsnorm(h, params["ln_f"])
+    logits = h @ params["lm_head"]
+    return (
+        logits,
+        jnp.stack(k_news),
+        jnp.stack(v_news),
+        jnp.stack(alphas),
+        jnp.stack(attns),
+        jnp.stack(attn_selfs),
+        jnp.stack(qsels),
+    )
+
+
+# --------------------------------------------------------------------------
+# Prefill chunk (AOT-exported; fixed B, C, S)
+# --------------------------------------------------------------------------
+
+
+def prefill_chunk(
+    params,
+    cfg: Config,
+    k_cache,     # f32[L, B, Hkv, S, hd]
+    v_cache,     # f32[L, B, Hkv, S, hd]
+    cache_mask,  # f32[L, B, Hkv, S]
+    tokens,      # i32[B, C]
+    positions,   # i32[B, C]
+    valid,       # f32[B, C] (1 real token / 0 pad)
+    *,
+    window: int = 16,
+    immediate: bool = False,
+    dms_enabled: bool = True,
+    use_pallas: bool = True,
+):
+    """Process a chunk of C prompt tokens against the existing cache.
+
+    DMS sparsity is applied *within* the chunk with binary α (delayed or
+    immediate, matching the retrofit variant); cross-chunk eviction is
+    executed by the Rust engine between chunk calls using the returned α.
+
+    Returns (logits [B,C,V], k_new [L,B,Hkv,C,hd], v_new, alpha [L,B,Hkv,C]).
+    """
+    l, b, hkv, s, hd = k_cache.shape
+    c = tokens.shape[1]
+    cos_tab, sin_tab = rope_tables(cfg)
+    h = jnp.take(params["embed"], tokens, axis=0)  # [B, C, d]
+
+    i = jnp.arange(c)[:, None]
+    j = jnp.arange(c)[None, :]
+    causal = jnp.where(j <= i, 0.0, NEG_INF)[None, None]              # [1,1,C,C]
+    key_valid = jnp.where(valid > 0, 0.0, NEG_INF)[:, None, None, :]  # [B,1,1,C]
+    beyond = (i >= j + window).astype(jnp.float32)[None, None]
+
+    k_news, v_news, alphas = [], [], []
+    attn_fn = K.chunk_attn if use_pallas else R.chunk_attn_ref
+
+    for li, layer in enumerate(params["layers"]):
+        x = rmsnorm(h, layer["ln1"])
+        q, k, v, alpha_logit = _qkv(layer, x, cfg, 0.0)  # [B,C,Hq,hd]
+        if dms_enabled:
+            alpha = (alpha_logit > 0).astype(jnp.float32) * valid[:, :, None]
+        else:
+            alpha = jnp.zeros((b, c, hkv), jnp.float32)
+        alpha_bhc = jnp.moveaxis(alpha, -1, 1)  # [B, Hkv, C]
+        alphas.append(alpha_bhc)
+
+        q = apply_rope(q, positions[:, :, None], cos_tab, sin_tab)
+        k = apply_rope(k, positions[:, :, None], cos_tab, sin_tab)
+        qg = jnp.moveaxis(q.reshape(b, c, hkv, cfg.group, hd), 1, 3)
+        kg = jnp.moveaxis(k, 1, 2)  # [B,Hkv,C,hd]
+        vg = jnp.moveaxis(v, 1, 2)
+
+        # intra-chunk mask with binary α (delayed or immediate eviction)
+        if immediate:
+            dec_idx = jnp.minimum(jnp.arange(c) + window, c - 1)
+            in_range = (jnp.arange(c) + window <= c - 1).astype(jnp.float32)
+            a_eff = alpha_bhc[:, :, dec_idx] * in_range[None, None, :]
+        else:
+            a_eff = alpha_bhc
+        evict = jnp.where(a_eff > 0.5, NEG_INF, 0.0)  # [B,Hkv,C]
+        intra = causal + key_valid + beyond * evict[:, :, None, :]
+        intra = jnp.maximum(intra, NEG_INF)
+        intra = jnp.broadcast_to(intra, (b, hkv, c, c))
+
+        cache_part = jnp.broadcast_to(
+            cache_mask[li][:, :, None, :], (b, hkv, c, s)
+        )
+        m_full = jnp.concatenate([cache_part, intra], axis=-1)  # [B,Hkv,C,S+C]
+        k_full = jnp.concatenate([k_cache[li], kg], axis=2)
+        v_full = jnp.concatenate([v_cache[li], vg], axis=2)
+
+        out = attn_fn(qg, k_full, v_full, m_full)  # [B,Hkv,G,C,hd]
+        out = jnp.moveaxis(out, 3, 1).reshape(b, c, cfg.n_q_heads * hd)
+        h = h + out @ layer["wo"]
+        h = h + _mlp(layer, rmsnorm(h, layer["ln2"]))
+
+        k_news.append(kg)
+        v_news.append(vg)
+
+    h = rmsnorm(h, params["ln_f"])
+    logits = h @ params["lm_head"]
+    return logits, jnp.stack(k_news), jnp.stack(v_news), jnp.stack(alphas)

@@ -1,0 +1,366 @@
+"""Synthetic task suite + char-level tokenizer.
+
+This module is the *specification*: `rust/src/tasks/` mirrors it
+generator-for-generator, and a golden-file test (`tasks_golden.json`,
+emitted by aot.py) pins the two implementations together byte-for-byte.
+
+Tasks (paper analog in parentheses — see DESIGN.md §2):
+  * arith  — modular-arithmetic chain-of-thought      (MATH 500 / AIME 24)
+  * mcq    — 4-choice question over an arith chain    (GPQA Diamond)
+  * code   — stack-machine trace, scored pass@all     (LiveCodeBench)
+  * niah   — needle in a haystack                     (RULER NIAH)
+  * vt     — variable tracking                        (RULER VT)
+
+All generators are driven by SplitMix64 so that Python and Rust produce
+identical problems from identical seeds.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+# --------------------------------------------------------------------------
+# Tokenizer: fixed 64-symbol char vocabulary. Order is load-bearing.
+# --------------------------------------------------------------------------
+
+SPECIALS = ["<pad>", "<bos>", "<eos>"]
+CHARS = (
+    "0123456789"           # digits
+    "abcdefghijklmnopqrstuvwxyz"  # identifiers / filler words
+    "ABCD"                 # MCQ choices
+    "+-*=?"                # operators
+    " \n.,:|#"             # punctuation / separators
+    "PUSHML"               # uppercase for code task keywords (with A,B,C,D,S above)
+    "QT%"                  # Q:/T: prompt markers + one reserved symbol
+)
+VOCAB = SPECIALS + list(CHARS)
+assert len(VOCAB) == 64, f"vocab must be 64, got {len(VOCAB)}"
+
+PAD_ID, BOS_ID, EOS_ID = 0, 1, 2
+_CHAR_TO_ID = {c: i + len(SPECIALS) for i, c in enumerate(CHARS)}
+_ID_TO_CHAR = {i + len(SPECIALS): c for i, c in enumerate(CHARS)}
+
+
+def encode(text: str) -> list[int]:
+    """Encode text; raises on symbols outside the vocabulary."""
+    return [_CHAR_TO_ID[c] for c in text]
+
+
+def decode(ids: list[int]) -> str:
+    """Decode ids, skipping special tokens."""
+    return "".join(_ID_TO_CHAR.get(i, "") for i in ids)
+
+
+# --------------------------------------------------------------------------
+# SplitMix64 — tiny, portable, identical in Rust.
+# --------------------------------------------------------------------------
+
+_M64 = (1 << 64) - 1
+
+
+class SplitMix64:
+    """Deterministic RNG shared with rust/src/util/rng.rs."""
+
+    def __init__(self, seed: int):
+        self.state = seed & _M64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & _M64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _M64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _M64
+        return z ^ (z >> 31)
+
+    def below(self, n: int) -> int:
+        """Uniform in [0, n) via modulo (n << 2^32 so bias is negligible
+        and, crucially, reproducible)."""
+        return self.next_u64() % n
+
+    def choice(self, xs):
+        return xs[self.below(len(xs))]
+
+
+# --------------------------------------------------------------------------
+# Problem container
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class Problem:
+    task: str
+    prompt: str          # text fed to the model (after <bos>)
+    solution: str        # full gold completion incl. reasoning + answer
+    answer: str          # canonical final answer (for exact match)
+    meta: dict
+
+    def full_text(self) -> str:
+        return self.prompt + self.solution
+
+
+def extract_answer(text: str) -> str | None:
+    """Final answer = text following the last 'A:' marker, up to newline/end.
+
+    Mirrors rust/src/tasks/mod.rs::extract_answer.
+    """
+    idx = text.rfind("A:")
+    if idx < 0:
+        return None
+    out = []
+    for c in text[idx + 2:]:
+        if c in "\n|":
+            break
+        out.append(c)
+    ans = "".join(out).strip()
+    return ans if ans else None
+
+
+# --------------------------------------------------------------------------
+# arith — chain of single-digit modular arithmetic.
+#
+#   Q:7+5-3*4=?
+#   T:7+5=2 2-3=9 9*4=6 A:6
+#
+# All values mod 10; '-' is mod-10 subtraction. Difficulty = chain length.
+# --------------------------------------------------------------------------
+
+_OPS = "+-*"
+
+
+def _apply(op: str, a: int, b: int) -> int:
+    if op == "+":
+        return (a + b) % 10
+    if op == "-":
+        return (a - b) % 10
+    return (a * b) % 10
+
+
+def gen_arith(rng: SplitMix64, n_ops: int) -> Problem:
+    vals = [rng.below(10)]
+    ops = []
+    for _ in range(n_ops):
+        ops.append(_OPS[rng.below(3)])
+        vals.append(rng.below(10))
+    expr = str(vals[0]) + "".join(o + str(v) for o, v in zip(ops, vals[1:]))
+    acc = vals[0]
+    steps = []
+    for o, v in zip(ops, vals[1:]):
+        nxt = _apply(o, acc, v)
+        steps.append(f"{acc}{o}{v}={nxt}")
+        acc = nxt
+    prompt = f"Q:{expr}=?\nT:"
+    solution = " ".join(steps) + f" A:{acc}\n"
+    return Problem("arith", prompt, solution, str(acc), {"n_ops": n_ops})
+
+
+# --------------------------------------------------------------------------
+# mcq — the same chain, but the model must pick the letter whose option
+# equals the chain value. Options are distinct digits.
+#
+#   Q:7+5-3=? A:4 B:9 C:1 D:6\nT:7+5=2 2-3=9 A:B
+# --------------------------------------------------------------------------
+
+
+def gen_mcq(rng: SplitMix64, n_ops: int) -> Problem:
+    base = gen_arith(rng, n_ops)
+    correct = int(base.answer)
+    opts = [correct]
+    while len(opts) < 4:
+        d = rng.below(10)
+        if d not in opts:
+            opts.append(d)
+    # deterministic shuffle: Fisher-Yates
+    for i in range(3, 0, -1):
+        j = rng.below(i + 1)
+        opts[i], opts[j] = opts[j], opts[i]
+    letter = "ABCD"[opts.index(correct)]
+    expr = base.prompt[2:-5]  # strip "Q:" and "=?\nT:"
+    prompt = (
+        f"Q:{expr}=? "
+        + " ".join(f"{l}:{o}" for l, o in zip("ABCD", opts))
+        + "\nT:"
+    )
+    steps = base.solution[: base.solution.rfind(" A:")]
+    solution = steps + f" A:{letter}\n"
+    return Problem("mcq", prompt, solution, letter, {"n_ops": n_ops})
+
+
+# --------------------------------------------------------------------------
+# code — stack machine. Program of PUSH d / ADD / MUL / SUB ops; the model
+# traces the stack after each instruction and answers with the final top.
+# Keywords use only vocab letters: PUSH, ADD, MUL, SUB.
+#
+#   Q:PUSH 3|PUSH 4|ADD|PUSH 2|MUL\nT:3 34 7 72 4 A:4
+#
+# Trace prints the stack (concatenated digits, bottom->top) after each op.
+# All arithmetic mod 10 to stay in-vocab.
+# --------------------------------------------------------------------------
+
+_CODE_OPS = ["ADD", "MUL", "SUB"]
+
+
+def gen_code(rng: SplitMix64, n_instr: int) -> Problem:
+    instrs: list[str] = []
+    stack: list[int] = []
+    trace: list[str] = []
+    for _ in range(n_instr):
+        if len(stack) < 2 or rng.below(2) == 0:
+            d = rng.below(10)
+            instrs.append(f"PUSH {d}")
+            stack.append(d)
+        else:
+            op = _CODE_OPS[rng.below(3)]
+            b, a = stack.pop(), stack.pop()
+            if op == "ADD":
+                stack.append((a + b) % 10)
+            elif op == "MUL":
+                stack.append((a * b) % 10)
+            else:
+                stack.append((a - b) % 10)
+            instrs.append(op)
+        trace.append("".join(str(v) for v in stack))
+    # ensure non-empty final stack (always true: first instr is a PUSH)
+    ans = str(stack[-1])
+    prompt = "Q:" + "|".join(instrs) + "\nT:"
+    solution = " ".join(trace) + f" A:{ans}\n"
+    return Problem("code", prompt, solution, ans, {"n_instr": n_instr})
+
+
+# lowercase keyword chars must exist in vocab; check once at import
+for kw in ["PUSH", "ADD", "MUL", "SUB"]:
+    for ch in kw:
+        assert ch in _CHAR_TO_ID or ch in "ADBC", kw
+
+# 'PUSH': P,U,S,H — we appended "PUSHML" to CHARS; A,D,B,C from choices;
+# M,U,L: U comes from "PUSHML"? -> P,U,S,H,M,L are in vocab. ADD uses A,D.
+# SUB uses S,U,B — B is in "ABCD". MUL uses M,U,L. All covered.
+
+
+# --------------------------------------------------------------------------
+# niah — needle in a haystack: filler sentences + one "key" fact.
+#
+#   Q:the bird saw a tree. key u=7. the fish ate a leaf. ... ?u\nT:A:7
+# --------------------------------------------------------------------------
+
+_NOUNS = ["bird", "fish", "tree", "leaf", "rock", "star", "frog", "moon"]
+_VERBS = ["saw", "ate", "hid", "made", "took", "lost"]
+
+
+def _filler(rng: SplitMix64) -> str:
+    return (
+        f"the {_NOUNS[rng.below(8)]} {_VERBS[rng.below(6)]} "
+        f"a {_NOUNS[rng.below(8)]}."
+    )
+
+
+def gen_niah(rng: SplitMix64, n_fillers: int) -> Problem:
+    var = "uvwxyz"[rng.below(6)]
+    val = rng.below(10)
+    pos = rng.below(n_fillers + 1)
+    parts = []
+    for i in range(n_fillers + 1):
+        if i == pos:
+            parts.append(f"key {var}={val}.")
+        else:
+            parts.append(_filler(rng))
+    prompt = "Q:" + " ".join(parts) + f" ?{var}\nT:"
+    solution = f"A:{val}\n"
+    return Problem("niah", prompt, solution, str(val), {"n_fillers": n_fillers})
+
+
+# --------------------------------------------------------------------------
+# vt — variable tracking: assignment chain with copies, query a variable.
+#
+#   Q:a=5. b=a. c=b. d=2. ?c\nT:A:5
+#
+# Single-letter variables from a distinct pool; `n_chain` copies.
+# --------------------------------------------------------------------------
+
+
+def gen_vt(rng: SplitMix64, n_chain: int, n_noise: int) -> Problem:
+    pool = list("abcdefghijklmnopqrst")
+    # deterministic shuffle
+    for i in range(len(pool) - 1, 0, -1):
+        j = rng.below(i + 1)
+        pool[i], pool[j] = pool[j], pool[i]
+    chain = pool[: n_chain + 1]
+    noise = pool[n_chain + 1 : n_chain + 1 + n_noise]
+    stmts = [f"{chain[0]}={rng.below(10)}"]
+    val = int(stmts[0][-1])
+    for i in range(1, len(chain)):
+        stmts.append(f"{chain[i]}={chain[i-1]}")
+    for v in noise:
+        stmts.append(f"{v}={rng.below(10)}")
+    # interleave noise deterministically: rotate by rng
+    order = list(range(1, len(stmts)))
+    for i in range(len(order) - 1, 0, -1):
+        j = rng.below(i + 1)
+        order[i], order[j] = order[j], order[i]
+    # dependency order must be preserved for chain stmts; simple fix:
+    # sort chain statements back into relative order.
+    chain_set = set(range(1, n_chain + 1))
+    chain_positions = [k for k, idx in enumerate(order) if idx in chain_set]
+    chain_sorted = sorted(idx for idx in order if idx in chain_set)
+    for k, idx in zip(chain_positions, chain_sorted):
+        order[k] = idx
+    body = [stmts[0]] + [stmts[i] for i in order]
+    target = chain[-1] if n_chain > 0 else chain[0]
+    prompt = "Q:" + ". ".join(body) + f". ?{target}\nT:"
+    solution = f"A:{val}\n"
+    return Problem(
+        "vt", prompt, solution, str(val), {"n_chain": n_chain, "n_noise": n_noise}
+    )
+
+
+# --------------------------------------------------------------------------
+# Suite presets (difficulty bands used across experiments; the Rust side
+# mirrors these numbers in tasks/suite.rs)
+# --------------------------------------------------------------------------
+
+SUITES = {
+    # task: (gen_name, params) — eval presets
+    "math": ("arith", {"n_ops": (3, 6)}),     # MATH 500 analog (easy band)
+    "aime": ("arith", {"n_ops": (8, 13)}),    # AIME 24 analog (hard band)
+    "gpqa": ("mcq", {"n_ops": (4, 8)}),
+    "lcb": ("code", {"n_instr": (6, 10)}),
+    "gsm8k": ("arith", {"n_ops": (4, 8)}),    # ablation probe band
+    "niah": ("niah", {"n_fillers": (3, 5)}),
+    "vt": ("vt", {"n_chain": (3, 6), "n_noise": (4, 8)}),
+    # Table-1 analogs for the short-context battery (see DESIGN.md §2)
+    "mmlu": ("mcq", {"n_ops": (2, 5)}),
+    "hellaswag": ("code", {"n_instr": (3, 6)}),
+}
+
+
+def gen_problem(task: str, seed: int, index: int) -> Problem:
+    """Generate problem `index` of suite `task`. Deterministic across langs."""
+    rng = SplitMix64((seed * 0x51_7C_C1B7_2722_0A95 + index * 2 + 1) & _M64)
+    gen, params = SUITES[task]
+    if gen == "arith":
+        lo, hi = params["n_ops"]
+        return gen_arith(rng, lo + rng.below(hi - lo + 1))
+    if gen == "mcq":
+        lo, hi = params["n_ops"]
+        return gen_mcq(rng, lo + rng.below(hi - lo + 1))
+    if gen == "code":
+        lo, hi = params["n_instr"]
+        return gen_code(rng, lo + rng.below(hi - lo + 1))
+    if gen == "niah":
+        lo, hi = params["n_fillers"]
+        return gen_niah(rng, lo + rng.below(hi - lo + 1))
+    if gen == "vt":
+        lo, hi = params["n_chain"]
+        nlo, nhi = params["n_noise"]
+        n_chain = lo + rng.below(hi - lo + 1)
+        return gen_vt(rng, n_chain, nlo + rng.below(nhi - nlo + 1))
+    raise ValueError(task)
+
+
+def training_batch_texts(rng: SplitMix64, n: int) -> list[str]:
+    """Mixture used for pretraining + distillation corpora."""
+    texts = []
+    kinds = ["math", "aime", "gpqa", "lcb", "gsm8k", "niah", "vt"]
+    for _ in range(n):
+        task = kinds[rng.below(len(kinds))]
+        p = gen_problem(task, rng.next_u64() & 0x7FFFFFFF, 0)
+        texts.append(p.full_text())
+    return texts

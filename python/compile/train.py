@@ -1,0 +1,319 @@
+"""Retrofitting pipeline (paper §4, App. B/C).
+
+Stages:
+  1. **pretrain** — next-token CE on the synthetic task mixture (stands in
+     for the public base model; see DESIGN.md §2);
+  2. **retrofit** — logit distillation from the pretrained teacher plus
+     the one-sided L1 compression loss, with the α-neuron zeroing phase
+     folded into the warmup and the target CR linearly annealed
+     (CR(t) = 1 + max(0, t−warmup)/100, the paper's 100-steps-per-unit
+     schedule). Variants: DMS delayed (w=16 default, w=4), DMS immediate
+     (ablation), DMC (baseline).
+
+Snapshots are saved at fixed steps so that Fig. 5-right (accuracy vs
+training tokens) needs a single run per method.
+
+Everything here is build-time only; `aot.py` calls into it.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import dms, tasks
+from .model import Config, forward_train, init_params
+
+SEQ_LEN = 160
+BATCH = 8
+PAD = tasks.PAD_ID
+LAMBDA_AUX = 20.0
+
+
+# --------------------------------------------------------------------------
+# Data
+# --------------------------------------------------------------------------
+
+
+def make_batch(rng: tasks.SplitMix64, batch=BATCH, seq=SEQ_LEN):
+    """Token batch [B, T] (BOS + problem text, PAD-filled) + valid mask."""
+    toks = np.full((batch, seq), PAD, np.int32)
+    val = np.zeros((batch, seq), np.float32)
+    texts = tasks.training_batch_texts(rng, batch)
+    for r, text in enumerate(texts):
+        ids = [tasks.BOS_ID] + tasks.encode(text) + [tasks.EOS_ID]
+        ids = ids[:seq]
+        toks[r, : len(ids)] = ids
+        val[r, : len(ids)] = 1.0
+    return jnp.asarray(toks), jnp.asarray(val)
+
+
+# --------------------------------------------------------------------------
+# Adam (hand-rolled; optax is not in the image)
+# --------------------------------------------------------------------------
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.98, eps=1e-9):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(
+        lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads
+    )
+    v = jax.tree_util.tree_map(
+        lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads
+    )
+    mhat_scale = 1.0 / (1 - b1**t)
+    vhat_scale = 1.0 / (1 - b2**t)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale)
+        / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params,
+        m,
+        v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+# --------------------------------------------------------------------------
+# Losses
+# --------------------------------------------------------------------------
+
+
+def ce_loss(logits, tokens, valid):
+    """Next-token cross entropy over valid target positions."""
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    w = valid[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+def kl_loss(student_logits, teacher_logits, valid):
+    """Logit distillation: KL(teacher || student), mean over valid pos."""
+    t = jax.nn.log_softmax(teacher_logits, axis=-1)
+    s = jax.nn.log_softmax(student_logits, axis=-1)
+    kl = jnp.sum(jnp.exp(t) * (t - s), axis=-1)  # [B, T]
+    return jnp.sum(kl * valid) / jnp.maximum(jnp.sum(valid), 1.0)
+
+
+# --------------------------------------------------------------------------
+# Train steps (jitted; scalars enter as traced args to avoid recompiles)
+# --------------------------------------------------------------------------
+
+
+def make_pretrain_step(cfg: Config):
+    def step(params, opt, tokens, valid, lr, q_first_scale):
+        def loss_fn(p):
+            logits, _ = forward_train(
+                p, cfg, tokens, valid, alpha_mode="off",
+                q_first_scale=q_first_scale,
+            )
+            return ce_loss(logits, tokens, valid)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt = adam_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    return jax.jit(step)
+
+
+def make_retrofit_step(cfg: Config, alpha_mode: str, window: int):
+    def step(params, teacher, opt, tokens, valid, lr, target_frac,
+             q_first_scale, key):
+        t_logits, _ = forward_train(teacher, cfg, tokens, valid, alpha_mode="off")
+
+        def loss_fn(p):
+            s_logits, alphas = forward_train(
+                p, cfg, tokens, valid,
+                alpha_mode=alpha_mode, window=window,
+                gumbel_key=key, q_first_scale=q_first_scale,
+            )
+            l_d = kl_loss(s_logits, t_logits, valid)
+            l_aux = dms.aux_compression_loss(alphas, valid, target_frac)
+            return l_d + LAMBDA_AUX * l_aux, (l_d, l_aux, jnp.mean(alphas))
+
+        (loss, (l_d, l_aux, mean_a)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True
+        )(params)
+        params, opt = adam_update(params, grads, opt, lr)
+        return params, opt, loss, l_d, l_aux, mean_a
+
+    return jax.jit(step)
+
+
+# --------------------------------------------------------------------------
+# Checkpoint I/O (flat npz)
+# --------------------------------------------------------------------------
+
+
+def flatten_params(params) -> dict:
+    flat = {
+        "embed": params["embed"],
+        "ln_f": params["ln_f"],
+        "lm_head": params["lm_head"],
+    }
+    for i, layer in enumerate(params["layers"]):
+        for k, v in layer.items():
+            flat[f"layers.{i}.{k}"] = v
+    return flat
+
+
+def unflatten_params(flat: dict, cfg: Config) -> dict:
+    params = {
+        "embed": jnp.asarray(flat["embed"]),
+        "ln_f": jnp.asarray(flat["ln_f"]),
+        "lm_head": jnp.asarray(flat["lm_head"]),
+        "layers": [],
+    }
+    for i in range(cfg.n_layers):
+        params["layers"].append(
+            {
+                k: jnp.asarray(flat[f"layers.{i}.{k}"])
+                for k in ("ln1", "wq", "wk", "wv", "wo", "ln2", "w1", "w3", "w2")
+            }
+        )
+    return params
+
+
+def save_ckpt(path: str, params):
+    np.savez(path, **{k: np.asarray(v) for k, v in flatten_params(params).items()})
+
+
+def load_ckpt(path: str, cfg: Config):
+    with np.load(path) as z:
+        return unflatten_params(dict(z.items()), cfg)
+
+
+# --------------------------------------------------------------------------
+# Greedy eval (sanity probe used during training; the real evaluation
+# happens in the Rust engine over the AOT artifacts)
+# --------------------------------------------------------------------------
+
+
+def greedy_accuracy(params, cfg: Config, task: str, n=16, max_gen=90,
+                    alpha_mode="off", window=16, seed=123):
+    """Greedy decode by full re-forward (O(T²), fine for a probe)."""
+    fwd = jax.jit(
+        lambda p, t, v: forward_train(
+            p, cfg, t, v, alpha_mode=alpha_mode, window=window,
+            gumbel_key=None, q_first_scale=0.0,
+        )[0]
+    )
+    correct = 0
+    for i in range(n):
+        prob = tasks.gen_problem(task, seed, i)
+        ids = [tasks.BOS_ID] + tasks.encode(prob.prompt)
+        buf = np.full((1, SEQ_LEN), PAD, np.int32)
+        gen_start = len(ids)
+        if gen_start >= SEQ_LEN - 2:
+            continue
+        buf[0, :gen_start] = ids
+        val = np.zeros((1, SEQ_LEN), np.float32)
+        pos = gen_start
+        val[0, :pos] = 1.0
+        for _ in range(min(max_gen, SEQ_LEN - gen_start - 1)):
+            logits = fwd(params, jnp.asarray(buf), jnp.asarray(val))
+            nxt = int(jnp.argmax(logits[0, pos - 1]))
+            if nxt == tasks.EOS_ID:
+                break
+            buf[0, pos] = nxt
+            val[0, pos] = 1.0
+            pos += 1
+            if buf[0, pos - 1] == tasks.encode("\n")[0]:
+                break
+        text = tasks.decode(list(buf[0, gen_start:pos]))
+        if tasks.extract_answer(text) == prob.answer:
+            correct += 1
+    return correct / n
+
+
+# --------------------------------------------------------------------------
+# Top-level stages
+# --------------------------------------------------------------------------
+
+
+def pretrain(cfg: Config, steps: int, seed=0, log_every=50, params=None,
+             zero_steps: int | None = None):
+    """Pretrain, then run the App. B α-neuron zeroing phase.
+
+    The zeroing phase (last `zero_steps` steps) anneals the contribution
+    of q_first[0] from 1 to 0 under the LM loss, so the deployed base
+    checkpoint — like every retrofit that starts from it — operates with
+    the neuron zeroed. The base ("vanilla") baseline is therefore exactly
+    the model the inference executables compute.
+    """
+    params = params or init_params(cfg, seed)
+    opt = adam_init(params)
+    step_fn = make_pretrain_step(cfg)
+    rng = tasks.SplitMix64(seed * 7919 + 11)
+    if zero_steps is None:
+        zero_steps = max(1, steps // 7)
+    t0 = time.time()
+    total = steps + zero_steps
+    for t in range(total):
+        lr = 1e-3 * min(1.0, (t + 1) / 100) * (0.1 ** (t / max(total, 1)))
+        scale = 1.0 if t < steps else max(0.0, 1.0 - (t - steps) / max(zero_steps - 1, 1))
+        tokens, valid = make_batch(rng)
+        params, opt, loss = step_fn(params, opt, tokens, valid, lr, scale)
+        if t % log_every == 0 or t == total - 1:
+            print(
+                f"[pretrain] step {t} loss {float(loss):.4f} scale {scale:.2f} "
+                f"({time.time() - t0:.0f}s)",
+                flush=True,
+            )
+    return params
+
+
+def retrofit(
+    cfg: Config,
+    teacher,
+    *,
+    alpha_mode: str,
+    window: int,
+    steps: int,
+    warmup: int = 100,
+    per_unit: int = 100,
+    cr_max: float = 8.0,
+    snapshot_steps=(),
+    snapshot_dir: str | None = None,
+    tag: str = "dms",
+    seed: int = 1,
+    log_every: int = 50,
+):
+    """Distill-retrofit `teacher` into an eviction-aware student."""
+    params = jax.tree_util.tree_map(jnp.copy, teacher)
+    opt = adam_init(params)
+    step_fn = make_retrofit_step(cfg, alpha_mode, window)
+    rng = tasks.SplitMix64(seed * 104729 + 3)
+    key = jax.random.PRNGKey(seed)
+    t0 = time.time()
+    for t in range(steps):
+        lr = 3e-4 * min(1.0, (t + 1) / 50)
+        cr = dms.cr_schedule(t, warmup=warmup, per_unit=per_unit, cr_max=cr_max)
+        target = 1.0 - 1.0 / cr
+        scale = 0.0  # α neuron already zeroed during the pretrain phase
+        tokens, valid = make_batch(rng)
+        key, sub = jax.random.split(key)
+        params, opt, loss, l_d, l_aux, mean_a = step_fn(
+            params, teacher, opt, tokens, valid, lr, target, scale, sub
+        )
+        if t % log_every == 0 or t == steps - 1:
+            print(
+                f"[{tag}] step {t} CR {cr:.2f} loss {float(loss):.4f} "
+                f"kl {float(l_d):.4f} aux {float(l_aux):.4f} "
+                f"mean_a {float(mean_a):.3f} ({time.time() - t0:.0f}s)",
+                flush=True,
+            )
+        if (t + 1) in snapshot_steps and snapshot_dir:
+            path = os.path.join(snapshot_dir, f"{tag}_step{t + 1}.npz")
+            save_ckpt(path, params)
+            print(f"[{tag}] snapshot -> {path}", flush=True)
+    return params

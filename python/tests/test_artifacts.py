@@ -1,0 +1,95 @@
+"""Artifact integrity tests (run after `make artifacts`; skipped when
+the artifacts directory hasn't been built yet)."""
+
+import json
+import os
+import struct
+
+import numpy as np
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built",
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_schema(manifest):
+    for key in ("config", "param_order", "vocab", "specials", "variants",
+                "executables"):
+        assert key in manifest, key
+    assert len(manifest["vocab"]) == manifest["config"]["vocab"] == 64
+    assert manifest["specials"] == {"pad": 0, "bos": 1, "eos": 2}
+
+
+def test_all_referenced_files_exist(manifest):
+    for tag, v in manifest["variants"].items():
+        assert os.path.exists(os.path.join(ART, v["weights"])), tag
+    for name, e in manifest["executables"].items():
+        assert os.path.exists(os.path.join(ART, "hlo", e["file"])), name
+
+
+def test_hlo_text_is_parseable_header(manifest):
+    for name, e in manifest["executables"].items():
+        path = os.path.join(ART, "hlo", e["file"])
+        with open(path) as f:
+            head = f.read(200)
+        assert head.startswith("HloModule"), name
+
+
+def test_weights_bin_roundtrip(manifest):
+    """The .bin format must decode to the same tensors as the npz."""
+    tag, v = next(iter(manifest["variants"].items()))
+    path = os.path.join(ART, v["weights"])
+    with open(path, "rb") as f:
+        raw = f.read()
+    (hlen,) = struct.unpack("<I", raw[:4])
+    header = json.loads(raw[4 : 4 + hlen])
+    payload = raw[4 + hlen :]
+    names = [t["name"] for t in header["tensors"]]
+    assert names == manifest["param_order"]
+    total = 0
+    for t in header["tensors"]:
+        n = int(np.prod(t["shape"]))
+        arr = np.frombuffer(
+            payload, np.float32, count=n, offset=t["offset"]
+        )
+        assert np.isfinite(arr).all(), t["name"]
+        total += n
+    # ~0.57M parameter model
+    assert 3e5 < total < 2e6, total
+
+
+def test_golden_tasks_match_generators():
+    """tasks_golden.json pins the generators both languages share."""
+    from compile import tasks
+
+    with open(os.path.join(ART, "tasks_golden.json")) as f:
+        golden = json.load(f)
+    for suite, rows in golden.items():
+        for i, row in enumerate(rows):
+            p = tasks.gen_problem(suite, 42, i)
+            assert p.prompt == row["prompt"], (suite, i)
+            assert p.solution == row["solution"], (suite, i)
+            assert p.answer == row["answer"], (suite, i)
+
+
+def test_variant_weights_differ_from_base(manifest):
+    """Retrofitted variants must not be byte-identical to base."""
+    def load(tag):
+        path = os.path.join(ART, manifest["variants"][tag]["weights"])
+        with open(path, "rb") as f:
+            raw = f.read()
+        (hlen,) = struct.unpack("<I", raw[:4])
+        return raw[4 + hlen :]
+
+    if "dms_w16_cr4" in manifest["variants"]:
+        assert load("base") != load("dms_w16_cr4")

@@ -1,0 +1,134 @@
+"""DMS training machinery tests: mask semantics, losses, schedules."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import dms
+
+NEG = dms.NEG_INF
+
+
+def mk_alpha(vals):
+    """[T] -> [1, 1, T]"""
+    return jnp.asarray(np.array(vals, np.float32)[None, None, :])
+
+
+# α is clipped to 1 − 1e-6 in the training relaxation (gradient
+# stability), so a "fully evicted" token carries log(1e-6) ≈ −13.8 —
+# an attention weight of ~1e-6, i.e. effectively masked.
+EFF_MASKED = np.log(1e-6) + 0.1
+
+
+class TestDelayedMask:
+    def test_causality_always_enforced(self):
+        m = dms.build_dms_mask(mk_alpha([0, 0, 0, 0]), window=2)
+        m = np.asarray(m)[0, 0]
+        for i in range(4):
+            for j in range(4):
+                if j > i:
+                    assert m[i, j] <= NEG / 2, (i, j)
+                else:
+                    assert m[i, j] == 0.0, (i, j)
+
+    def test_evicted_token_visible_within_window(self):
+        # α_0 = 1: token 0 must remain visible to queries i < 0 + w
+        m = np.asarray(dms.build_dms_mask(mk_alpha([1, 0, 0, 0, 0]), window=3))[0, 0]
+        assert m[1, 0] == 0.0
+        assert m[2, 0] == 0.0
+        assert m[3, 0] <= EFF_MASKED  # i = j + w → evicted
+        assert m[4, 0] <= EFF_MASKED
+
+    def test_partial_alpha_partial_mask(self):
+        m = np.asarray(dms.build_dms_mask(mk_alpha([0.5, 0, 0]), window=1))[0, 0]
+        # log(1 - 0.5) ≈ -0.693 applied beyond the window
+        assert abs(m[1, 0] - np.log(0.5)) < 1e-5
+        assert m[0, 0] == 0.0
+
+    def test_immediate_uses_future_decision(self):
+        # immediate: α_{j+w} hides token j from queries ≥ j+w.
+        # α = [0, 0, 1, 0]: with w=2 the decision at t=2 evicts token 0.
+        m = np.asarray(
+            dms.build_dms_mask(mk_alpha([0, 0, 1, 0]), window=2, immediate=True)
+        )[0, 0]
+        assert m[2, 0] <= EFF_MASKED
+        assert m[3, 0] <= EFF_MASKED
+        # token 1's decision index is 3 (α=0) → stays visible
+        assert m[3, 1] == 0.0
+
+    def test_delayed_vs_immediate_differ(self):
+        a = mk_alpha([1, 0, 0, 0])
+        d = np.asarray(dms.build_dms_mask(a, window=2))
+        i = np.asarray(dms.build_dms_mask(a, window=2, immediate=True))
+        assert not np.allclose(d, i)
+
+
+class TestDmc:
+    def test_accumulate_is_running_average_when_merging(self):
+        b, h, t, hd = 1, 1, 3, 2
+        k = jnp.ones((b, h, t, hd)) * jnp.asarray([1.0, 2.0, 4.0])[None, None, :, None]
+        v = k * 10
+        alpha = mk_alpha([0, 1, 1])  # merge tokens 1 and 2 into 0
+        ka, va, _ = dms.dmc_accumulate(k, v, alpha)
+        ka = np.asarray(ka)[0, 0]
+        # t0: 1 ; t1: (1+2)/2 = 1.5 ; t2: (1.5*2+4)/3 = 7/3
+        assert abs(ka[0, 0] - 1.0) < 1e-5
+        assert abs(ka[1, 0] - 1.5) < 1e-5
+        assert abs(ka[2, 0] - 7.0 / 3.0) < 1e-5
+
+    def test_no_merge_passthrough(self):
+        rng = np.random.default_rng(0)
+        k = jnp.asarray(rng.normal(size=(2, 2, 5, 4)).astype(np.float32))
+        v = jnp.asarray(rng.normal(size=(2, 2, 5, 4)).astype(np.float32))
+        alpha = jnp.zeros((2, 2, 5))
+        ka, va, absorb = dms.dmc_accumulate(k, v, alpha)
+        np.testing.assert_allclose(np.asarray(ka), np.asarray(k), rtol=1e-5)
+        assert np.asarray(absorb).max() == 0.0
+
+    def test_dmc_mask_hides_absorbed(self):
+        m = np.asarray(dms.build_dmc_mask(mk_alpha([0, 1, 0])))[0, 0]
+        # α_1 = 1 → token 0 hidden for queries ≥ 1
+        assert m[1, 0] <= EFF_MASKED
+        assert m[2, 0] <= EFF_MASKED
+        assert m[0, 0] == 0.0
+        assert m[2, 1] == 0.0
+
+
+class TestLossesAndSchedules:
+    def test_aux_loss_one_sided(self):
+        alphas = jnp.full((2, 1, 2, 4), 0.6)
+        valid = jnp.ones((1, 4))
+        # mean α = 0.6 ≥ target 0.5 → no loss
+        assert float(dms.aux_compression_loss(alphas, valid, 0.5)) == 0.0
+        # target 0.75 → loss 0.15
+        assert abs(float(dms.aux_compression_loss(alphas, valid, 0.75)) - 0.15) < 1e-6
+
+    def test_aux_loss_ignores_padding(self):
+        alphas = jnp.concatenate(
+            [jnp.ones((1, 1, 1, 2)), jnp.zeros((1, 1, 1, 2))], axis=-1
+        )
+        valid = jnp.asarray([[1.0, 1.0, 0.0, 0.0]])
+        # valid positions all have α=1 → mean 1 → no loss even at target 1
+        assert float(dms.aux_compression_loss(alphas, valid, 1.0)) == 0.0
+
+    def test_cr_schedule_linear_after_warmup(self):
+        assert dms.cr_schedule(0) == 1.0
+        assert dms.cr_schedule(100) == 1.0
+        assert dms.cr_schedule(200) == 2.0
+        assert dms.cr_schedule(800) == 8.0
+        assert dms.cr_schedule(5000, cr_max=8.0) == 8.0
+
+    def test_gumbel_sigmoid_bounds_and_determinism(self):
+        key = jax.random.PRNGKey(0)
+        logits = jnp.asarray([[-5.0, 0.0, 5.0]])
+        a1 = dms.gumbel_sigmoid(logits, key)
+        a2 = dms.gumbel_sigmoid(logits, key)
+        np.testing.assert_allclose(np.asarray(a1), np.asarray(a2))
+        assert ((np.asarray(a1) >= 0) & (np.asarray(a1) <= 1)).all()
+
+    def test_gumbel_sigmoid_tracks_logits(self):
+        key = jax.random.PRNGKey(1)
+        logits = jnp.full((1000,), -5.0)
+        lo = float(jnp.mean(dms.gumbel_sigmoid(logits, key)))
+        hi = float(jnp.mean(dms.gumbel_sigmoid(logits + 10.0, key)))
+        assert lo < 0.1 and hi > 0.9

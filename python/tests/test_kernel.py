@@ -1,0 +1,125 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes and mask densities; assert_allclose against
+ref.py. Kernels run under interpret=True (CPU)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import attention as A
+from compile.kernels import ref as R
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+def _mask(rng, *shape, density=0.3):
+    m = np.where(rng.random(shape) < density, R.NEG_INF, 0.0).astype(np.float32)
+    return jnp.asarray(m)
+
+
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 3),
+    g=st.integers(1, 4),
+    s=st.integers(1, 40),
+    hd=st.sampled_from([4, 8, 16]),
+    density=st.floats(0.0, 0.8),
+    seed=st.integers(0, 2**16),
+)
+def test_decode_attn_matches_ref(b, h, g, s, hd, density, seed):
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, b, h, g, hd)
+    k = _rand(rng, b, h, s, hd)
+    v = _rand(rng, b, h, s, hd)
+    mask = _mask(rng, b, h, s, density=density)
+    # guarantee at least one visible slot per row
+    mask = mask.at[..., 0].set(0.0)
+    o1, a1 = A.decode_attn(q, k, v, mask)
+    o2, a2 = R.decode_attn_ref(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a2), rtol=1e-5, atol=1e-5)
+
+
+@given(
+    b=st.integers(1, 2),
+    h=st.integers(1, 2),
+    g=st.integers(1, 4),
+    c=st.integers(1, 12),
+    t_extra=st.integers(0, 24),
+    hd=st.sampled_from([4, 16]),
+    seed=st.integers(0, 2**16),
+)
+def test_chunk_attn_matches_ref(b, h, g, c, t_extra, hd, seed):
+    rng = np.random.default_rng(seed)
+    t = c + t_extra
+    q = _rand(rng, b, h, g, c, hd)
+    k = _rand(rng, b, h, t, hd)
+    v = _rand(rng, b, h, t, hd)
+    mask = _mask(rng, b, h, c, t, density=0.3)
+    mask = mask.at[..., 0].set(0.0)
+    o1 = A.chunk_attn(q, k, v, mask)
+    o2 = R.chunk_attn_ref(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-5, atol=1e-5)
+
+
+def test_decode_attn_fully_masked_rows_prefer_self():
+    """Typical engine state: all cache slots dead + live self token."""
+    rng = np.random.default_rng(0)
+    q = _rand(rng, 1, 1, 2, 8)
+    k = _rand(rng, 1, 1, 5, 8)
+    v = _rand(rng, 1, 1, 5, 8)
+    mask = jnp.full((1, 1, 5), R.NEG_INF).at[..., 4].set(0.0)  # only "self"
+    out, attn = A.decode_attn(q, k, v, mask)
+    # all attention mass on the only visible slot (2 group heads)
+    np.testing.assert_allclose(np.asarray(attn)[0, 0, 4], 2.0, rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(out)[0, 0, 0], np.asarray(v)[0, 0, 4], rtol=1e-5
+    )
+
+
+def test_attention_is_permutation_invariant_over_slots():
+    """Slot order must not matter (paged caches reorder physically)."""
+    rng = np.random.default_rng(3)
+    q = _rand(rng, 1, 1, 2, 8)
+    k = _rand(rng, 1, 1, 6, 8)
+    v = _rand(rng, 1, 1, 6, 8)
+    mask = jnp.zeros((1, 1, 6))
+    o1, _ = A.decode_attn(q, k, v, mask)
+    perm = np.array([3, 1, 5, 0, 2, 4])
+    o2, _ = A.decode_attn(q, k[:, :, perm], v[:, :, perm], mask)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-5, atol=1e-6)
+
+
+def test_mask_actually_excludes_tokens():
+    rng = np.random.default_rng(4)
+    q = _rand(rng, 1, 1, 1, 8)
+    k = _rand(rng, 1, 1, 4, 8)
+    v = _rand(rng, 1, 1, 4, 8)
+    m_all = jnp.zeros((1, 1, 4))
+    m_cut = m_all.at[0, 0, 2].set(R.NEG_INF)
+    o_all, a_all = A.decode_attn(q, k, v, m_all)
+    o_cut, a_cut = A.decode_attn(q, k, v, m_cut)
+    assert np.asarray(a_cut)[0, 0, 2] < 1e-12
+    assert not np.allclose(np.asarray(o_all), np.asarray(o_cut))
+
+
+@pytest.mark.parametrize("scale", [1.0, 10.0])
+def test_numerical_stability_large_logits(scale):
+    rng = np.random.default_rng(5)
+    q = _rand(rng, 2, 2, 4, 16)
+    k = _rand(rng, 2, 2, 33, 16) * scale
+    v = _rand(rng, 2, 2, 33, 16)
+    mask = jnp.zeros((2, 2, 33))
+    out, attn = A.decode_attn(q, k, v, mask)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(
+        np.asarray(attn).sum(-1), 4.0, rtol=1e-4
+    )  # softmax rows sum to G

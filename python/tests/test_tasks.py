@@ -1,0 +1,114 @@
+"""Task generator and tokenizer tests (the cross-language contract)."""
+
+import pytest
+
+from compile import tasks
+
+
+def test_vocab_is_64_unique_symbols():
+    assert len(tasks.VOCAB) == 64
+    assert len(set(tasks.VOCAB)) == 64
+
+
+def test_encode_decode_roundtrip():
+    text = "Q:7+5-3*4=? A:4 B:9\nT:PUSH 3|MUL key u=7."
+    assert tasks.decode(tasks.encode(text)) == text
+
+
+def test_encode_rejects_oov():
+    with pytest.raises(KeyError):
+        tasks.encode("hello!")
+
+
+def test_splitmix64_known_stream():
+    r = tasks.SplitMix64(0)
+    assert r.next_u64() == 0xE220A8397B1DCDAF
+    assert r.next_u64() == 0x6E789E6AA1B965F4
+
+
+@pytest.mark.parametrize("suite", sorted(tasks.SUITES))
+def test_all_suites_generate_valid_problems(suite):
+    for i in range(5):
+        p = tasks.gen_problem(suite, 3, i)
+        tasks.encode(p.full_text())  # in-vocab
+        assert p.prompt.startswith("Q:")
+        assert p.prompt.endswith("T:")
+        assert tasks.extract_answer(p.solution) == p.answer
+
+
+def test_gen_problem_deterministic():
+    a = tasks.gen_problem("aime", 9, 4)
+    b = tasks.gen_problem("aime", 9, 4)
+    assert a.prompt == b.prompt and a.solution == b.solution
+
+
+def test_arith_chain_is_correct():
+    rng = tasks.SplitMix64(5)
+    p = tasks.gen_arith(rng, 6)
+    # replay the trace: every step must be consistent mod 10
+    steps = p.solution.split(" A:")[0].split(" ")
+    acc = None
+    for s in steps:
+        lhs, res = s.split("=")
+        if acc is not None:
+            assert int(lhs[0]) == acc, s
+        a, op, b = int(lhs[0]), lhs[1], int(lhs[2])
+        acc = tasks._apply(op, a, b)
+        assert acc == int(res), s
+    assert str(acc) == p.answer
+
+
+def test_mcq_letter_is_correct_option():
+    for i in range(10):
+        p = tasks.gen_problem("gpqa", 2, i)
+        # find the option with the letter
+        opts = p.prompt.split("=? ")[1].split("\nT:")[0].split(" ")
+        mapping = dict(o.split(":") for o in opts)
+        # recompute the chain value from the trace's last step
+        last = p.solution.split(" A:")[0].split(" ")[-1]
+        assert mapping[p.answer] == last.split("=")[1]
+
+
+def test_code_trace_matches_stack_machine():
+    for i in range(10):
+        p = tasks.gen_problem("lcb", 4, i)
+        instrs = p.prompt[2:].split("\nT:")[0].split("|")
+        stack = []
+        for ins in instrs:
+            if ins.startswith("PUSH"):
+                stack.append(int(ins.split()[1]))
+            else:
+                b, a = stack.pop(), stack.pop()
+                stack.append(
+                    {"ADD": (a + b), "MUL": (a * b), "SUB": (a - b)}[ins] % 10
+                )
+        assert str(stack[-1]) == p.answer
+
+
+def test_vt_answer_tracks_chain():
+    for i in range(10):
+        p = tasks.gen_problem("vt", 8, i)
+        stmts = p.prompt[2:].split("\nT:")[0]
+        target = stmts.split("?")[1].strip()
+        env = {}
+        for stmt in stmts.split("?")[0].split(". "):
+            stmt = stmt.strip().rstrip(".")
+            if not stmt:
+                continue
+            k, v = stmt.split("=")
+            env[k] = env[v] if v in env else int(v)
+        assert str(env[target]) == p.answer
+
+
+def test_niah_prompt_sizes_scale_with_fillers():
+    r1 = tasks.SplitMix64(1)
+    r2 = tasks.SplitMix64(1)
+    small = tasks.gen_niah(r1, 3)
+    large = tasks.gen_niah(r2, 12)
+    assert len(large.prompt) > len(small.prompt)
+
+
+def test_extract_answer_edge_cases():
+    assert tasks.extract_answer("no marker") is None
+    assert tasks.extract_answer("A:") is None
+    assert tasks.extract_answer("x A:4 B:9 ... A:B\n") == "B"

@@ -1,0 +1,70 @@
+//! Decode-step latency/throughput bench (the L3 hot path).
+//!
+//! Measures the end-to-end decode step (literal upload + XLA execute +
+//! output download + policy work) for the Pallas and fused-jnp
+//! executable variants and both slot bucket sizes — the data behind the
+//! §Perf log in EXPERIMENTS.md.
+
+use hyperscale::compress::PolicyKind;
+use hyperscale::config::EngineConfig;
+use hyperscale::engine::{Engine, GenRequest};
+use hyperscale::util::benchkit::bench;
+use hyperscale::util::Args;
+
+fn engine(artifacts: &str, jnp: bool, slots: usize) -> hyperscale::Result<Engine> {
+    Engine::new(EngineConfig {
+        artifacts: artifacts.into(),
+        variant: "dms_w16_cr4".into(),
+        policy: PolicyKind::Dms,
+        cr: 4.0,
+        temperature: 0.7,
+        slots,
+        use_jnp_decode: jnp,
+        ..Default::default()
+    })
+}
+
+fn main() -> hyperscale::Result<()> {
+    let args = Args::from_env();
+    let artifacts = args.get_str("artifacts", "artifacts");
+    let iters = args.get_usize("iters", 3)?;
+    println!("# bench_decode — full-batch generation steps (8 lanes)");
+
+    for (name, jnp, slots) in [
+        ("decode_pallas_s320", false, 320usize),
+        ("decode_jnp_s320", true, 320),
+        ("decode_pallas_s192", false, 192),
+    ] {
+        let mut eng = match engine(artifacts, jnp, slots) {
+            Ok(e) => e,
+            Err(e) => {
+                println!("skip {name}: {e:#}");
+                continue;
+            }
+        };
+        // 8 concurrent chains, ~64 decode steps each
+        let reqs: Vec<GenRequest> = (0..8)
+            .map(|i| GenRequest {
+                prompt: hyperscale::tasks::gen_problem("aime", 3, i).prompt,
+                width: 1,
+                max_len: 120,
+                temperature: 0.7,
+                seed: i,
+            })
+            .collect();
+        let mut steps = 0u64;
+        let r = bench(name, 1, iters, || {
+            let (_, stats) = eng.run(&reqs).expect("run");
+            steps = stats.decode_steps + stats.prefill_chunks;
+            stats.decode_steps
+        });
+        r.print();
+        println!(
+            "      per-step: {:.3} ms over ~{} steps/iter ({} tokens/s at batch 8)",
+            r.mean_s * 1e3 / steps.max(1) as f64,
+            steps,
+            (steps as f64 * 8.0 / r.mean_s) as u64
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! KV-cache substrate micro-benchmarks: allocator ops, writes, forks,
+//! delayed-eviction sweeps — the L3 overhead that must stay far below
+//! the XLA step time.
+
+use hyperscale::kvcache::{CacheStore, Geometry};
+use hyperscale::util::benchkit::bench;
+
+fn geom() -> Geometry {
+    Geometry {
+        layers: 4,
+        kv_heads: 2,
+        slots: 320,
+        head_dim: 16,
+        page_size: 16,
+    }
+}
+
+fn main() {
+    println!("# bench_kvcache");
+    let g = geom();
+
+    // alloc+write+evict cycle across all (l, h)
+    let mut c = CacheStore::new(g, 8);
+    let k = vec![0.5f32; g.head_dim];
+    let v = vec![0.25f32; g.head_dim];
+    let r = bench("write_token_all_heads", 10, 200, || {
+        for l in 0..g.layers {
+            for h in 0..g.kv_heads {
+                if let Some(s) = c.alloc_slot(0, l, h) {
+                    c.write(0, l, h, s, 0, &k, &v);
+                    c.evict(0, l, h, s);
+                }
+            }
+        }
+    });
+    r.print_throughput(g.lh() as f64, "writes");
+
+    // steady-state decode pattern: write + scheduled eviction sweep
+    let mut c = CacheStore::new(g, 8);
+    let mut pos = 0usize;
+    let r = bench("decode_pattern_w16", 10, 500, || {
+        for l in 0..g.layers {
+            for h in 0..g.kv_heads {
+                if let Some(s) = c.alloc_slot(0, l, h) {
+                    c.write(0, l, h, s, pos, &k, &v);
+                    if pos % 2 == 0 {
+                        c.schedule_eviction(0, l, h, s, pos + 16);
+                    }
+                }
+            }
+        }
+        c.apply_due_evictions(0, pos);
+        pos += 1;
+        if pos % 300 == 0 {
+            c.reset_lane(0);
+        }
+    });
+    r.print();
+
+    // prefix-sharing fork (the W>1 parallel-scaling fast path)
+    let mut c = CacheStore::new(g, 8);
+    for p in 0..100 {
+        for l in 0..g.layers {
+            for h in 0..g.kv_heads {
+                let s = c.alloc_slot(0, l, h).unwrap();
+                c.write(0, l, h, s, p, &k, &v);
+            }
+        }
+    }
+    let r = bench("fork_lane_100_tokens", 10, 200, || {
+        c.fork_lane(0, 1);
+    });
+    r.print();
+
+    // mask slice access (uploaded every step)
+    let c2 = CacheStore::new(g, 8);
+    let r = bench("mask_slice_checksum", 10, 500, || {
+        c2.mask_slice().iter().sum::<f32>()
+    });
+    r.print();
+}

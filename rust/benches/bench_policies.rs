@@ -1,0 +1,77 @@
+//! Compression-policy overhead bench: per-step host cost of each
+//! eviction policy at a realistic cache occupancy (paper §2.2 claims
+//! "minimal computational overhead" for the heuristics — verify ours).
+
+use hyperscale::compress::{build_policy, PolicyKind, StepView, WriteAction};
+use hyperscale::kvcache::{CacheStore, Geometry};
+use hyperscale::util::benchkit::bench;
+
+fn main() {
+    println!("# bench_policies — host-side per-step policy cost");
+    let g = Geometry {
+        layers: 4,
+        kv_heads: 2,
+        slots: 320,
+        head_dim: 16,
+        page_size: 16,
+    };
+    let lh = g.lh();
+    let alpha = vec![0.6f32; lh];
+    let attn: Vec<f32> = (0..lh * g.slots).map(|i| (i % 97) as f32 / 97.0).collect();
+    let attn_self = vec![0.1f32; lh];
+
+    for kind in [
+        PolicyKind::Vanilla,
+        PolicyKind::Dms,
+        PolicyKind::DmsImmediate,
+        PolicyKind::Tova,
+        PolicyKind::H2o,
+        PolicyKind::Quest,
+        PolicyKind::Dmc,
+        PolicyKind::Window,
+    ] {
+        let mut cache = CacheStore::new(g, 1);
+        let mut policy = build_policy(kind, 4.0, 160, 16, g.page_size);
+        let k = vec![0.5f32; g.head_dim];
+        let v = vec![0.5f32; g.head_dim];
+        let mut pos = 0usize;
+        let mut actions: Vec<WriteAction> = Vec::new();
+        let mut written = vec![None; lh];
+        let r = bench(&format!("policy_{}", kind.name()), 20, 300, || {
+            cache.apply_due_evictions(0, pos);
+            policy.write_actions(&alpha, g.layers, g.kv_heads, &mut actions);
+            for l in 0..g.layers {
+                for h in 0..g.kv_heads {
+                    let i = l * g.kv_heads + h;
+                    written[i] = None;
+                    match actions[i] {
+                        WriteAction::Merge => {
+                            cache.merge_into_last(0, l, h, &k, &v);
+                        }
+                        WriteAction::Append => {
+                            if let Some(s) = cache.alloc_slot(0, l, h) {
+                                cache.write(0, l, h, s, pos, &k, &v);
+                                written[i] = Some(s);
+                            }
+                        }
+                    }
+                }
+            }
+            let view = StepView {
+                lane: 0,
+                pos,
+                alpha: &alpha,
+                attn: &attn,
+                attn_self: &attn_self,
+                written: &written,
+            };
+            policy.post_write(&mut cache, &view);
+            pos += 1;
+            if pos % 280 == 0 {
+                cache.reset_lane(0);
+                pos = 0;
+            }
+        });
+        r.print();
+    }
+}

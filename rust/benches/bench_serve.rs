@@ -1,0 +1,64 @@
+//! Serving throughput bench: engine-level requests/s and tokens/s for
+//! vanilla vs DMS at the same slot budget (the paper's "more tokens for
+//! the same compute" claim, measured on this testbed).
+
+use hyperscale::compress::PolicyKind;
+use hyperscale::config::EngineConfig;
+use hyperscale::engine::{Engine, GenRequest};
+use hyperscale::util::benchkit::bench;
+use hyperscale::util::Args;
+
+fn main() -> hyperscale::Result<()> {
+    let args = Args::from_env();
+    let artifacts = args.get_str("artifacts", "artifacts");
+    let iters = args.get_usize("iters", 3)?;
+    println!("# bench_serve — engine throughput (8 lanes, W=2, gsm8k prompts)");
+
+    for (name, policy, variant, cr) in [
+        ("vanilla", PolicyKind::Vanilla, "base", 1.0),
+        ("dms_cr4", PolicyKind::Dms, "dms_w16_cr4", 4.0),
+        ("dms_cr8", PolicyKind::Dms, "dms_w16_cr8", 8.0),
+        ("quest_cr4", PolicyKind::Quest, "base", 4.0),
+    ] {
+        let mut engine = match Engine::new(EngineConfig {
+            artifacts: artifacts.into(),
+            variant: variant.into(),
+            policy,
+            cr,
+            temperature: 0.7,
+            ..Default::default()
+        }) {
+            Ok(e) => e,
+            Err(e) => {
+                println!("skip {name}: {e:#}");
+                continue;
+            }
+        };
+        let reqs: Vec<GenRequest> = (0..6)
+            .map(|i| GenRequest {
+                prompt: hyperscale::tasks::gen_problem("gsm8k", 11, i).prompt,
+                width: 2,
+                max_len: 144,
+                temperature: 0.7,
+                seed: i,
+            })
+            .collect();
+        let mut gen_tokens = 0f64;
+        let mut reads = 0f64;
+        let r = bench(&format!("serve_{name}"), 1, iters, || {
+            let (results, _) = engine.run(&reqs).expect("run");
+            gen_tokens = results
+                .iter()
+                .flat_map(|r| &r.chains)
+                .map(|c| c.stats.gen_tokens as f64)
+                .sum();
+            reads = results.iter().map(|r| r.total_reads()).sum();
+        });
+        r.print_throughput(gen_tokens, "gen-tokens");
+        println!(
+            "      KV reads per generated token: {:.1}",
+            reads / gen_tokens.max(1.0)
+        );
+    }
+    Ok(())
+}

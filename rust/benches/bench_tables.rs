@@ -1,0 +1,40 @@
+//! End-to-end experiment benches — reduced-size runs of every paper
+//! table/figure driver, verifying each regenerates within budget.
+//! (`--n`/`--full` on the `hyperscale exp` CLI produce the real ones.)
+
+use hyperscale::experiments as exp;
+use hyperscale::util::{timer::timed, Args};
+
+fn main() -> hyperscale::Result<()> {
+    let args = Args::from_env();
+    let artifacts = std::path::PathBuf::from(args.get_str("artifacts", "artifacts"));
+    let n = args.get_usize("n", 4)?;
+    println!("# bench_tables — reduced paper-experiment regeneration (n={n})");
+
+    let ((), t) = timed(|| exp::run_fig7(&artifacts).expect("fig7"));
+    println!("bench table:fig7      {t:>8.2}s");
+
+    let (_, t) = timed(|| {
+        exp::run_pareto(&artifacts, &["math".to_string()], n, false).expect("pareto")
+    });
+    println!("bench table:fig3/4    {t:>8.2}s (task=math)");
+
+    let ((), t) = timed(|| exp::run_fig1(&artifacts).expect("fig1"));
+    println!("bench table:fig1      {t:>8.2}s");
+
+    let ((), t) = timed(|| exp::run_fig5(&artifacts, n).expect("fig5"));
+    println!("bench table:fig5      {t:>8.2}s");
+
+    let ((), t) = timed(|| exp::run_fig6(&artifacts, n).expect("fig6"));
+    println!("bench table:fig6      {t:>8.2}s");
+
+    let ((), t) = timed(|| exp::run_points(&artifacts, n).expect("points"));
+    println!("bench table:7/8/9     {t:>8.2}s");
+
+    let ((), t) = timed(|| exp::run_table1(&artifacts, n, false).expect("table1"));
+    println!("bench table:1/4       {t:>8.2}s");
+
+    let ((), t) = timed(|| exp::run_table2(&artifacts, n).expect("table2"));
+    println!("bench table:2         {t:>8.2}s");
+    Ok(())
+}

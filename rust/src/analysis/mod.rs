@@ -1,0 +1,6 @@
+//! Analytical models and report rendering.
+
+pub mod latency_model;
+pub mod tables;
+
+pub use latency_model::{LatencyModel, LlamaClass, H100};

@@ -1,0 +1,94 @@
+//! DMC — Dynamic Memory Compression baseline (Nawrot et al., 2024).
+//!
+//! Per head, the model's α decides append-vs-merge: on merge, the new
+//! (k, v) is accumulated into the most recent cache entry by running
+//! weighted average (`CacheStore::merge_into_last`), so the cache does
+//! not grow. No delayed window — that is precisely the training-
+//! difficulty contrast with DMS the paper exploits.
+
+use super::{Policy, PolicyKind, StepView, WriteAction};
+use crate::kvcache::CacheStore;
+
+pub struct DmcPolicy {
+    merges: u64,
+    appends: u64,
+}
+
+impl DmcPolicy {
+    pub fn new() -> Self {
+        Self {
+            merges: 0,
+            appends: 0,
+        }
+    }
+
+    /// Achieved compression ratio so far: tokens seen / entries kept.
+    pub fn achieved_cr(&self) -> f64 {
+        let kept = self.appends.max(1);
+        (self.appends + self.merges) as f64 / kept as f64
+    }
+}
+
+impl Default for DmcPolicy {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Policy for DmcPolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Dmc
+    }
+
+    fn write_actions(
+        &mut self,
+        alpha: &[f32],
+        layers: usize,
+        kv_heads: usize,
+        out: &mut Vec<WriteAction>,
+    ) {
+        out.clear();
+        for i in 0..layers * kv_heads {
+            let a = alpha.get(i).copied().unwrap_or(0.0);
+            if a > 0.5 {
+                self.merges += 1;
+                out.push(WriteAction::Merge);
+            } else {
+                self.appends += 1;
+                out.push(WriteAction::Append);
+            }
+        }
+    }
+
+    fn post_write(&mut self, _cache: &mut CacheStore, _view: &StepView<'_>) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splits_actions_on_alpha() {
+        let mut p = DmcPolicy::new();
+        let mut out = Vec::new();
+        p.write_actions(&[0.9, 0.1, 0.6, 0.4], 2, 2, &mut out);
+        assert_eq!(
+            out,
+            vec![
+                WriteAction::Merge,
+                WriteAction::Append,
+                WriteAction::Merge,
+                WriteAction::Append
+            ]
+        );
+    }
+
+    #[test]
+    fn achieved_cr_counts_merges() {
+        let mut p = DmcPolicy::new();
+        let mut out = Vec::new();
+        // 4 decisions, 3 merges -> CR 4x on that head-step set
+        p.write_actions(&[0.9, 0.9, 0.9, 0.1], 2, 2, &mut out);
+        assert!((p.achieved_cr() - 4.0).abs() < 1e-9);
+    }
+}

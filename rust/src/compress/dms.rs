@@ -1,0 +1,164 @@
+//! Dynamic Memory Sparsification — inference-side eviction executor
+//! (paper §3.3, Fig. 2a).
+//!
+//! The retrofitted model outputs α per (layer, KV-head) for every new
+//! token. Delayed mode (the paper's method): a token with α > 0.5 at
+//! position t is *scheduled* for eviction at t + w and stays fully
+//! attendable until then. Immediate mode (the §5.3 ablation): the
+//! decision made at t evicts the token from position t − w right away.
+
+use super::{Policy, PolicyKind, StepView};
+use crate::kvcache::CacheStore;
+
+pub struct DmsPolicy {
+    window: usize,
+    immediate: bool,
+}
+
+impl DmsPolicy {
+    pub fn new(window: usize, immediate: bool) -> Self {
+        Self { window, immediate }
+    }
+
+    pub fn window(&self) -> usize {
+        self.window
+    }
+}
+
+impl Policy for DmsPolicy {
+    fn kind(&self) -> PolicyKind {
+        if self.immediate {
+            PolicyKind::DmsImmediate
+        } else {
+            PolicyKind::Dms
+        }
+    }
+
+    fn post_write(&mut self, cache: &mut CacheStore, view: &StepView<'_>) {
+        let g = cache.geom;
+        for l in 0..g.layers {
+            for h in 0..g.kv_heads {
+                let i = l * g.kv_heads + h;
+                let alpha = view.alpha.get(i).copied().unwrap_or(0.0);
+                if alpha <= 0.5 {
+                    continue;
+                }
+                if self.immediate {
+                    // evict the token written `window` steps ago, now.
+                    if view.pos >= self.window {
+                        let target = view.pos - self.window;
+                        if let Some((slot, _)) = cache
+                            .live_slots(view.lane, l, h)
+                            .into_iter()
+                            .find(|&(_, p)| p == target)
+                        {
+                            cache.evict(view.lane, l, h, slot);
+                        }
+                    }
+                } else if let Some(Some(slot)) = view.written.get(i) {
+                    // delayed: this token leaves at pos + window.
+                    cache.schedule_eviction(
+                        view.lane,
+                        l,
+                        h,
+                        *slot,
+                        view.pos + self.window,
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::Geometry;
+
+    fn store() -> CacheStore {
+        CacheStore::new(
+            Geometry {
+                layers: 1,
+                kv_heads: 1,
+                slots: 16,
+                head_dim: 2,
+                page_size: 4,
+            },
+            1,
+        )
+    }
+
+    fn write_token(c: &mut CacheStore, pos: usize) -> usize {
+        let s = c.alloc_slot(0, 0, 0).unwrap();
+        c.write(0, 0, 0, s, pos, &[0.0; 2], &[0.0; 2]);
+        s
+    }
+
+    #[test]
+    fn delayed_eviction_waits_for_window() {
+        let mut c = store();
+        let mut p = DmsPolicy::new(4, false);
+        let s0 = write_token(&mut c, 0);
+        p.post_write(
+            &mut c,
+            &StepView {
+                lane: 0,
+                pos: 0,
+                alpha: &[0.9],
+                attn: &[],
+                attn_self: &[0.0],
+                written: &[Some(s0)],
+            },
+        );
+        // token survives positions 1..3
+        for pos in 1..4 {
+            c.apply_due_evictions(0, pos);
+            assert_eq!(c.live_count(0, 0, 0), 1, "pos {pos}");
+        }
+        c.apply_due_evictions(0, 4);
+        assert_eq!(c.live_count(0, 0, 0), 0);
+    }
+
+    #[test]
+    fn low_alpha_keeps_token() {
+        let mut c = store();
+        let mut p = DmsPolicy::new(4, false);
+        let s0 = write_token(&mut c, 0);
+        p.post_write(
+            &mut c,
+            &StepView {
+                lane: 0,
+                pos: 0,
+                alpha: &[0.2],
+                attn: &[],
+                attn_self: &[0.0],
+                written: &[Some(s0)],
+            },
+        );
+        c.apply_due_evictions(0, 100);
+        assert_eq!(c.live_count(0, 0, 0), 1);
+    }
+
+    #[test]
+    fn immediate_evicts_past_token() {
+        let mut c = store();
+        let mut p = DmsPolicy::new(2, true);
+        for pos in 0..3 {
+            let s = write_token(&mut c, pos);
+            p.post_write(
+                &mut c,
+                &StepView {
+                    lane: 0,
+                    pos,
+                    alpha: &[if pos == 2 { 0.9 } else { 0.1 }],
+                    attn: &[],
+                    attn_self: &[0.0],
+                    written: &[Some(s)],
+                },
+            );
+        }
+        // α=1 at pos 2 with window 2 → token at pos 0 gone immediately
+        assert_eq!(c.live_count(0, 0, 0), 2);
+        assert!(c.slot_pos(0, 0, 0, 0).is_none());
+    }
+}

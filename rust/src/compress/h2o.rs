@@ -1,0 +1,198 @@
+//! H2O — Heavy-Hitter Oracle (Zhang et al., 2023).
+//!
+//! The budget is split evenly between a recent-token window and a
+//! heavy-hitter set (App. F.1). Cumulative attention scores accumulate
+//! per slot each step; on overflow the lowest-cumulative non-recent
+//! token is evicted (layer-wide, like TOVA).
+
+use super::{Policy, PolicyKind, StepView};
+use crate::kvcache::CacheStore;
+
+pub struct H2oPolicy {
+    budget: usize,
+    recent: usize,
+    /// cumulative attention per (layer, slot)
+    cum: Vec<f32>,
+    layers: usize,
+    slots: usize,
+}
+
+impl H2oPolicy {
+    pub fn new(budget: usize) -> Self {
+        Self {
+            budget,
+            recent: budget / 2,
+            cum: Vec::new(),
+            layers: 0,
+            slots: 0,
+        }
+    }
+
+    fn ensure(&mut self, layers: usize, slots: usize) {
+        if self.cum.len() != layers * slots {
+            self.layers = layers;
+            self.slots = slots;
+            self.cum = vec![0.0; layers * slots];
+        }
+    }
+}
+
+impl Policy for H2oPolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::H2o
+    }
+
+    fn budget(&self) -> Option<usize> {
+        Some(self.budget)
+    }
+
+    fn post_write(&mut self, cache: &mut CacheStore, view: &StepView<'_>) {
+        let g = cache.geom;
+        self.ensure(g.layers, g.slots);
+        // accumulate this step's attention mass (summed over KV heads)
+        for l in 0..g.layers {
+            for slot in 0..g.slots {
+                let mut mass = 0.0f32;
+                for h in 0..g.kv_heads {
+                    mass += view.attn[(l * g.kv_heads + h) * g.slots + slot];
+                }
+                self.cum[l * g.slots + slot] += mass;
+            }
+        }
+        for l in 0..g.layers {
+            while cache.live_count(view.lane, l, 0) > self.budget {
+                // candidates: live tokens outside the recent window
+                let cutoff = view.pos.saturating_sub(self.recent);
+                let mut best = None;
+                let mut best_score = f32::INFINITY;
+                let mut oldest: Option<(usize, usize)> = None;
+                for (slot, pos) in cache.live_slots(view.lane, l, 0) {
+                    if oldest.map(|(_, p)| pos < p).unwrap_or(true) {
+                        oldest = Some((slot, pos));
+                    }
+                    if pos >= cutoff {
+                        continue;
+                    }
+                    let score = self.cum[l * g.slots + slot];
+                    if score < best_score {
+                        best_score = score;
+                        best = Some(slot);
+                    }
+                }
+                // all tokens recent → fall back to evicting the oldest
+                let slot = match best.or(oldest.map(|(s, _)| s)) {
+                    Some(s) => s,
+                    None => break,
+                };
+                for h in 0..g.kv_heads {
+                    cache.evict(view.lane, l, h, slot);
+                }
+                self.cum[l * g.slots + slot] = 0.0;
+            }
+        }
+    }
+
+    fn post_prefill(&mut self, cache: &mut CacheStore, lane: usize, _pos: usize) {
+        // dense prefill until budget, then switch (App. F.1); without
+        // prefill scores the heavy set starts from the recency prior.
+        super::window::trim_to_window(cache, lane, self.budget);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::Geometry;
+
+    fn store() -> CacheStore {
+        CacheStore::new(
+            Geometry {
+                layers: 1,
+                kv_heads: 1,
+                slots: 8,
+                head_dim: 2,
+                page_size: 4,
+            },
+            1,
+        )
+    }
+
+    fn fill(c: &mut CacheStore, n: usize) {
+        for pos in 0..n {
+            let s = c.alloc_slot(0, 0, 0).unwrap();
+            c.write(0, 0, 0, s, pos, &[0.0; 2], &[0.0; 2]);
+        }
+    }
+
+    #[test]
+    fn evicts_lowest_cumulative_outside_recent() {
+        let mut c = store();
+        fill(&mut c, 5);
+        let mut p = H2oPolicy::new(4); // recent window = 2
+        let mut attn = vec![0.0f32; 8];
+        // slots 0..4 hold positions 0..4; pos cutoff = 5-2 = 3
+        attn[0] = 0.9; // heavy hitter
+        attn[1] = 0.05; // light — should be evicted
+        attn[2] = 0.4;
+        p.post_write(
+            &mut c,
+            &StepView {
+                lane: 0,
+                pos: 5,
+                alpha: &[0.0],
+                attn: &attn,
+                attn_self: &[0.0],
+                written: &[],
+            },
+        );
+        assert_eq!(c.live_count(0, 0, 0), 4);
+        assert!(c.slot_pos(0, 0, 0, 1).is_none());
+        assert!(c.slot_pos(0, 0, 0, 0).is_some(), "heavy hitter kept");
+    }
+
+    #[test]
+    fn recent_window_is_protected() {
+        let mut c = store();
+        fill(&mut c, 5);
+        let mut p = H2oPolicy::new(4);
+        let attn = vec![0.0f32; 8];
+        p.post_write(
+            &mut c,
+            &StepView {
+                lane: 0,
+                pos: 4,
+                alpha: &[0.0],
+                attn: &attn,
+                attn_self: &[0.0],
+                written: &[],
+            },
+        );
+        // positions >= 4-2=2 are protected; eviction hit pos 0 or 1
+        let kept: Vec<usize> = c.live_slots(0, 0, 0).iter().map(|&(_, p)| p).collect();
+        assert!(kept.contains(&2) && kept.contains(&3) && kept.contains(&4));
+    }
+
+    #[test]
+    fn accumulates_across_steps() {
+        let mut c = store();
+        fill(&mut c, 3);
+        let mut p = H2oPolicy::new(2); // force eviction pressure
+        let mut attn = vec![0.0f32; 8];
+        attn[0] = 0.3;
+        attn[1] = 0.2;
+        attn[2] = 0.1;
+        // two steps of accumulation then overflow
+        p.post_write(
+            &mut c,
+            &StepView {
+                lane: 0,
+                pos: 3,
+                alpha: &[0.0],
+                attn: &attn,
+                attn_self: &[0.0],
+                written: &[],
+            },
+        );
+        assert_eq!(c.live_count(0, 0, 0), 2);
+    }
+}

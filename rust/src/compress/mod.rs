@@ -1,0 +1,220 @@
+//! KV-cache compression policy zoo (paper §2.2/§2.3/§3.3).
+//!
+//! Policies operate host-side on the paged cache store:
+//!
+//! * [`dms`]     — Dynamic Memory Sparsification: α-driven **delayed**
+//!   eviction (decision at t executes at t+w), plus the immediate-
+//!   eviction ablation variant;
+//! * [`tova`]    — evict the token with the lowest current attention;
+//! * [`h2o`]     — Heavy-Hitter Oracle: cumulative attention + recent
+//!   window, budget split half/half;
+//! * [`quest`]   — no eviction; per-step top-k page retrieval using
+//!   min/max page metadata (selection runs inside the decode HLO);
+//! * [`dmc`]     — Dynamic Memory Compression baseline: α-driven merge
+//!   into the most recent entry via weighted averaging;
+//! * vanilla / sliding-window — trivial baselines.
+
+pub mod dmc;
+pub mod dms;
+pub mod h2o;
+pub mod quest;
+pub mod tova;
+pub mod window;
+
+use std::str::FromStr;
+
+use anyhow::bail;
+
+use crate::kvcache::CacheStore;
+
+/// Policy selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyKind {
+    Vanilla,
+    Dms,
+    DmsImmediate,
+    Tova,
+    H2o,
+    Quest,
+    Dmc,
+    Window,
+}
+
+impl PolicyKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::Vanilla => "vanilla",
+            PolicyKind::Dms => "dms",
+            PolicyKind::DmsImmediate => "dms_immediate",
+            PolicyKind::Tova => "tova",
+            PolicyKind::H2o => "h2o",
+            PolicyKind::Quest => "quest",
+            PolicyKind::Dmc => "dmc",
+            PolicyKind::Window => "window",
+        }
+    }
+
+    /// Default model variant for this policy (training-free policies run
+    /// on the base model; retrofitted ones need their own weights).
+    pub fn default_variant(&self, cr: f64) -> &'static str {
+        match self {
+            PolicyKind::Dms => {
+                if cr >= 8.0 {
+                    "dms_w16_cr8"
+                } else {
+                    "dms_w16_cr4"
+                }
+            }
+            PolicyKind::DmsImmediate => "dms_imm_w16",
+            PolicyKind::Dmc => "dmc",
+            _ => "base",
+        }
+    }
+}
+
+impl FromStr for PolicyKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Ok(match s {
+            "vanilla" | "base" => PolicyKind::Vanilla,
+            "dms" => PolicyKind::Dms,
+            "dms_immediate" | "dms-immediate" => PolicyKind::DmsImmediate,
+            "tova" => PolicyKind::Tova,
+            "h2o" => PolicyKind::H2o,
+            "quest" => PolicyKind::Quest,
+            "dmc" => PolicyKind::Dmc,
+            "window" => PolicyKind::Window,
+            other => bail!("unknown policy '{other}'"),
+        })
+    }
+}
+
+/// What to do with the freshly produced (k, v) of the current token.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WriteAction {
+    /// Allocate a slot and append (possibly scheduling later eviction).
+    Append,
+    /// DMC: merge into the most recently written live slot.
+    Merge,
+}
+
+/// Per-step observation handed to policies after the executor ran.
+pub struct StepView<'a> {
+    /// Lane index inside the executor batch.
+    pub lane: usize,
+    /// Position (token index) of the token just processed.
+    pub pos: usize,
+    /// α per (layer, kv-head), sigmoid of the eviction logit.
+    pub alpha: &'a [f32],
+    /// Attention mass per (layer, kv-head, slot), group-summed.
+    pub attn: &'a [f32],
+    /// Attention mass the current token assigned to itself.
+    pub attn_self: &'a [f32],
+    /// Slot written for the current token per (layer, kv-head); None if
+    /// the write was a DMC merge or overflowed.
+    pub written: &'a [Option<usize>],
+}
+
+/// A compression policy instance (one per active chain).
+pub trait Policy: Send {
+    fn kind(&self) -> PolicyKind;
+
+    /// Token budget per KV head (None = unbounded). Paper App. F.1:
+    /// budget = (input_len + max_gen) / CR.
+    fn budget(&self) -> Option<usize> {
+        None
+    }
+
+    /// Quest: number of pages to retrieve per head (None disables).
+    fn quest_pages(&self) -> Option<usize> {
+        None
+    }
+
+    /// Decide append-vs-merge per (layer, kv-head) for the new token.
+    /// `alpha` is laid out [layers × kv_heads].
+    fn write_actions(
+        &mut self,
+        alpha: &[f32],
+        layers: usize,
+        kv_heads: usize,
+        out: &mut Vec<WriteAction>,
+    ) {
+        let _ = alpha;
+        out.clear();
+        out.resize(layers * kv_heads, WriteAction::Append);
+    }
+
+    /// Called after the new token was written (slot choices final).
+    /// This is where DMS schedules delayed evictions and TOVA/H2O
+    /// enforce their budgets.
+    fn post_write(&mut self, cache: &mut CacheStore, view: &StepView<'_>);
+
+    /// Called once after prefill finished for this lane (policies that
+    /// enforce budgets trim the prompt cache here).
+    fn post_prefill(&mut self, cache: &mut CacheStore, lane: usize, pos: usize) {
+        let _ = (cache, lane, pos);
+    }
+}
+
+/// Build a policy instance.
+///
+/// * `max_total_len` = prompt + max generation (the L budget), which
+///   parameterizes the App. F.1 budget rule (input + max_gen) / CR.
+/// * `window` is the DMS eviction delay (from the model variant).
+pub fn build_policy(
+    kind: PolicyKind,
+    cr: f64,
+    max_total_len: usize,
+    window: usize,
+    page_size: usize,
+) -> Box<dyn Policy> {
+    let budget = ((max_total_len as f64 / cr).ceil() as usize).max(window.max(1));
+    match kind {
+        PolicyKind::Vanilla => Box::new(window::VanillaPolicy),
+        PolicyKind::Window => Box::new(window::WindowPolicy::new(budget)),
+        PolicyKind::Dms => Box::new(dms::DmsPolicy::new(window, false)),
+        PolicyKind::DmsImmediate => Box::new(dms::DmsPolicy::new(window, true)),
+        PolicyKind::Tova => Box::new(tova::TovaPolicy::new(budget)),
+        PolicyKind::H2o => Box::new(h2o::H2oPolicy::new(budget)),
+        PolicyKind::Quest => Box::new(quest::QuestPolicy::new(budget, page_size)),
+        PolicyKind::Dmc => Box::new(dmc::DmcPolicy::new()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for kind in [
+            PolicyKind::Vanilla,
+            PolicyKind::Dms,
+            PolicyKind::DmsImmediate,
+            PolicyKind::Tova,
+            PolicyKind::H2o,
+            PolicyKind::Quest,
+            PolicyKind::Dmc,
+            PolicyKind::Window,
+        ] {
+            let parsed: PolicyKind = kind.name().parse().unwrap();
+            assert_eq!(parsed, kind);
+        }
+        assert!("bogus".parse::<PolicyKind>().is_err());
+    }
+
+    #[test]
+    fn budget_rule_matches_appendix_f1() {
+        // budget = (input + max_gen) / CR = 160/4
+        let p = build_policy(PolicyKind::Tova, 4.0, 160, 16, 16);
+        assert_eq!(p.budget(), Some(40));
+    }
+
+    #[test]
+    fn default_variants() {
+        assert_eq!(PolicyKind::Dms.default_variant(4.0), "dms_w16_cr4");
+        assert_eq!(PolicyKind::Dms.default_variant(8.0), "dms_w16_cr8");
+        assert_eq!(PolicyKind::Quest.default_variant(4.0), "base");
+    }
+}

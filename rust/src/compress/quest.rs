@@ -1,0 +1,96 @@
+//! Quest — query-aware page retrieval (Tang et al., 2024).
+//!
+//! Quest never evicts: the full cache stays resident (its memory cost),
+//! but each step only *reads* the top-k pages per head, ranked by the
+//! upper bound Σ_d max(q_d·min_d, q_d·max_d) computed from per-page
+//! min/max key metadata. Page selection runs inside the decode HLO
+//! (model.py); this policy only carries the page budget and the
+//! metadata overhead accounting.
+
+use super::{Policy, PolicyKind, StepView};
+use crate::kvcache::CacheStore;
+
+pub struct QuestPolicy {
+    budget_tokens: usize,
+    page_size: usize,
+}
+
+impl QuestPolicy {
+    pub fn new(budget_tokens: usize, page_size: usize) -> Self {
+        Self {
+            budget_tokens,
+            page_size,
+        }
+    }
+
+    /// Memory/read overhead of the page representatives, in token
+    /// equivalents per allocated page (a min and a max vector, each the
+    /// size of one key).
+    pub const META_TOKENS_PER_PAGE: f64 = 2.0;
+}
+
+impl Policy for QuestPolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Quest
+    }
+
+    fn budget(&self) -> Option<usize> {
+        // read budget, not a residency budget — nothing is evicted
+        Some(self.budget_tokens)
+    }
+
+    fn quest_pages(&self) -> Option<usize> {
+        Some((self.budget_tokens + self.page_size - 1) / self.page_size)
+    }
+
+    fn post_write(&mut self, _cache: &mut CacheStore, _view: &StepView<'_>) {
+        // no eviction; page bounds are maintained by CacheStore::write.
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn page_budget_rounds_up() {
+        let p = QuestPolicy::new(40, 16);
+        assert_eq!(p.quest_pages(), Some(3));
+        let p = QuestPolicy::new(48, 16);
+        assert_eq!(p.quest_pages(), Some(3));
+        let p = QuestPolicy::new(1, 16);
+        assert_eq!(p.quest_pages(), Some(1));
+    }
+
+    #[test]
+    fn never_evicts() {
+        use crate::kvcache::{CacheStore, Geometry};
+        let mut c = CacheStore::new(
+            Geometry {
+                layers: 1,
+                kv_heads: 1,
+                slots: 8,
+                head_dim: 2,
+                page_size: 4,
+            },
+            1,
+        );
+        for pos in 0..8 {
+            let s = c.alloc_slot(0, 0, 0).unwrap();
+            c.write(0, 0, 0, s, pos, &[0.0; 2], &[0.0; 2]);
+        }
+        let mut p = QuestPolicy::new(4, 4);
+        p.post_write(
+            &mut c,
+            &StepView {
+                lane: 0,
+                pos: 8,
+                alpha: &[0.0],
+                attn: &[0.0; 8],
+                attn_self: &[0.0],
+                written: &[],
+            },
+        );
+        assert_eq!(c.live_count(0, 0, 0), 8);
+    }
+}

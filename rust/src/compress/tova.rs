@@ -1,0 +1,172 @@
+//! TOVA — Token Omission Via Attention (Oren et al., 2024).
+//!
+//! At each step, if the per-head cache exceeds its budget, evict the
+//! token with the lowest attention weight in the *current* step,
+//! aggregated over the heads of each layer (§2.2: i* = argmin_i Σ_h
+//! a_h(t)_i). Eviction is layer-wide: all KV heads of a layer drop the
+//! same token, as in the reference implementation.
+
+use super::{Policy, PolicyKind, StepView};
+use crate::kvcache::CacheStore;
+
+pub struct TovaPolicy {
+    budget: usize,
+}
+
+impl TovaPolicy {
+    pub fn new(budget: usize) -> Self {
+        Self { budget }
+    }
+}
+
+impl Policy for TovaPolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Tova
+    }
+
+    fn budget(&self) -> Option<usize> {
+        Some(self.budget)
+    }
+
+    fn post_write(&mut self, cache: &mut CacheStore, view: &StepView<'_>) {
+        let g = cache.geom;
+        let s = g.slots;
+        for l in 0..g.layers {
+            // aggregate attention over the layer's KV heads
+            while cache.live_count(view.lane, l, 0) > self.budget {
+                let mut best_slot = None;
+                let mut best_score = f32::INFINITY;
+                for (slot, pos) in cache.live_slots(view.lane, l, 0) {
+                    if pos == view.pos {
+                        continue; // the token written this step has no score yet
+                    }
+                    let mut score = 0.0f32;
+                    for h in 0..g.kv_heads {
+                        score += view.attn[(l * g.kv_heads + h) * s + slot];
+                    }
+                    if score < best_score {
+                        best_score = score;
+                        best_slot = Some(slot);
+                    }
+                }
+                let Some(slot) = best_slot else { break };
+                for h in 0..g.kv_heads {
+                    cache.evict(view.lane, l, h, slot);
+                }
+            }
+        }
+    }
+
+    fn post_prefill(&mut self, cache: &mut CacheStore, lane: usize, _pos: usize) {
+        // App. F.1: standard (dense) prefill until the budget is
+        // reached, then switch to the eviction mechanism. Without
+        // per-token prefill attention we trim recency-first, which is
+        // the TOVA behaviour in the absence of scores (recent tokens
+        // dominate attention).
+        super::window::trim_to_window(cache, lane, self.budget);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::Geometry;
+
+    fn store() -> CacheStore {
+        CacheStore::new(
+            Geometry {
+                layers: 1,
+                kv_heads: 2,
+                slots: 8,
+                head_dim: 2,
+                page_size: 4,
+            },
+            1,
+        )
+    }
+
+    #[test]
+    fn evicts_lowest_attention_token() {
+        let mut c = store();
+        // 4 live tokens in both heads
+        for pos in 0..4 {
+            for h in 0..2 {
+                let s = c.alloc_slot(0, 0, h).unwrap();
+                c.write(0, 0, h, s, pos, &[0.0; 2], &[0.0; 2]);
+            }
+        }
+        let mut attn = vec![0.0f32; 2 * 8];
+        // head 0 + head 1 scores: slot 2 has lowest combined mass
+        for (slot, score) in [(0usize, 0.5f32), (1, 0.4), (2, 0.01), (3, 0.3)] {
+            attn[slot] = score; // head 0
+            attn[8 + slot] = score; // head 1
+        }
+        let mut p = TovaPolicy::new(3);
+        p.post_write(
+            &mut c,
+            &StepView {
+                lane: 0,
+                pos: 3,
+                alpha: &[0.0; 2],
+                attn: &attn,
+                attn_self: &[0.0; 2],
+                written: &[],
+            },
+        );
+        assert_eq!(c.live_count(0, 0, 0), 3);
+        assert_eq!(c.live_count(0, 0, 1), 3);
+        assert!(c.slot_pos(0, 0, 0, 2).is_none(), "slot 2 evicted");
+    }
+
+    #[test]
+    fn current_token_is_protected() {
+        let mut c = store();
+        for pos in 0..3 {
+            for h in 0..2 {
+                let s = c.alloc_slot(0, 0, h).unwrap();
+                c.write(0, 0, h, s, pos, &[0.0; 2], &[0.0; 2]);
+            }
+        }
+        // zero attention everywhere: the just-written token (pos 2)
+        // must survive; one of the others goes.
+        let attn = vec![0.0f32; 2 * 8];
+        let mut p = TovaPolicy::new(2);
+        p.post_write(
+            &mut c,
+            &StepView {
+                lane: 0,
+                pos: 2,
+                alpha: &[0.0; 2],
+                attn: &attn,
+                attn_self: &[0.0; 2],
+                written: &[],
+            },
+        );
+        assert_eq!(c.live_count(0, 0, 0), 2);
+        let kept: Vec<usize> = c.live_slots(0, 0, 0).iter().map(|&(_, p)| p).collect();
+        assert!(kept.contains(&2));
+    }
+
+    #[test]
+    fn within_budget_no_eviction() {
+        let mut c = store();
+        for h in 0..2 {
+            let s = c.alloc_slot(0, 0, h).unwrap();
+            c.write(0, 0, h, s, 0, &[0.0; 2], &[0.0; 2]);
+        }
+        let attn = vec![0.1f32; 2 * 8];
+        let mut p = TovaPolicy::new(4);
+        p.post_write(
+            &mut c,
+            &StepView {
+                lane: 0,
+                pos: 0,
+                alpha: &[0.0; 2],
+                attn: &attn,
+                attn_self: &[0.0; 2],
+                written: &[],
+            },
+        );
+        assert_eq!(c.live_count(0, 0, 0), 1);
+    }
+}

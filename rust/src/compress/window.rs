@@ -1,0 +1,117 @@
+//! Trivial policies: vanilla (no compression) and a fixed sliding
+//! window (evict everything older than the budget).
+
+use super::{Policy, PolicyKind, StepView};
+use crate::kvcache::CacheStore;
+
+/// No compression; the original dense-attention model.
+pub struct VanillaPolicy;
+
+impl Policy for VanillaPolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Vanilla
+    }
+
+    fn post_write(&mut self, _cache: &mut CacheStore, _view: &StepView<'_>) {}
+}
+
+/// Keep only the most recent `budget` tokens per head.
+pub struct WindowPolicy {
+    budget: usize,
+}
+
+impl WindowPolicy {
+    pub fn new(budget: usize) -> Self {
+        Self { budget }
+    }
+}
+
+impl Policy for WindowPolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Window
+    }
+
+    fn budget(&self) -> Option<usize> {
+        Some(self.budget)
+    }
+
+    fn post_write(&mut self, cache: &mut CacheStore, view: &StepView<'_>) {
+        trim_to_window(cache, view.lane, self.budget);
+    }
+
+    fn post_prefill(&mut self, cache: &mut CacheStore, lane: usize, _pos: usize) {
+        trim_to_window(cache, lane, self.budget);
+    }
+}
+
+/// Evict oldest-first down to `budget` live slots per (layer, head).
+pub(crate) fn trim_to_window(cache: &mut CacheStore, lane: usize, budget: usize) {
+    let g = cache.geom;
+    for l in 0..g.layers {
+        for h in 0..g.kv_heads {
+            let mut live = cache.live_slots(lane, l, h);
+            if live.len() <= budget {
+                continue;
+            }
+            live.sort_by_key(|&(_, pos)| pos);
+            let n_evict = live.len() - budget;
+            for &(slot, _) in live.iter().take(n_evict) {
+                cache.evict(lane, l, h, slot);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::Geometry;
+
+    fn store() -> CacheStore {
+        CacheStore::new(
+            Geometry {
+                layers: 1,
+                kv_heads: 1,
+                slots: 16,
+                head_dim: 2,
+                page_size: 4,
+            },
+            1,
+        )
+    }
+
+    #[test]
+    fn window_keeps_most_recent() {
+        let mut c = store();
+        for pos in 0..8 {
+            let s = c.alloc_slot(0, 0, 0).unwrap();
+            c.write(0, 0, 0, s, pos, &[pos as f32; 2], &[0.0; 2]);
+        }
+        trim_to_window(&mut c, 0, 3);
+        assert_eq!(c.live_count(0, 0, 0), 3);
+        let mut kept: Vec<usize> =
+            c.live_slots(0, 0, 0).iter().map(|&(_, p)| p).collect();
+        kept.sort_unstable();
+        assert_eq!(kept, vec![5, 6, 7]);
+    }
+
+    #[test]
+    fn vanilla_never_evicts() {
+        let mut c = store();
+        for pos in 0..8 {
+            let s = c.alloc_slot(0, 0, 0).unwrap();
+            c.write(0, 0, 0, s, pos, &[0.0; 2], &[0.0; 2]);
+        }
+        let mut p = VanillaPolicy;
+        let view = StepView {
+            lane: 0,
+            pos: 8,
+            alpha: &[0.0],
+            attn: &[],
+            attn_self: &[0.0],
+            written: &[],
+        };
+        p.post_write(&mut c, &view);
+        assert_eq!(c.live_count(0, 0, 0), 8);
+    }
+}

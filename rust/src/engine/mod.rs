@@ -1,0 +1,18 @@
+//! The serving engine (Layer 3 hot path).
+//!
+//! A fixed-width executor batch (B lanes) is continuously refilled from
+//! a pending-chain queue (vLLM-style continuous batching). Prefill runs
+//! in C-token chunks; parallel-scaling requests (W > 1) prefill once and
+//! fork the prompt cache to sibling lanes (copy-on-write prefix
+//! sharing). Every decode step drives the compression policy and the
+//! §5.1 efficiency metrics (KV reads, peak tokens).
+
+mod core;
+mod sampler;
+mod sequence;
+mod voting;
+
+pub use core::{Engine, EngineStats};
+pub use sampler::Sampler;
+pub use sequence::{ChainStats, FinishReason, GenRequest, GenResult};
+pub use voting::{aggregate, majority_vote, pass_at_all, VoteOutcome};

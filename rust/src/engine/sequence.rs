@@ -1,0 +1,149 @@
+//! Request/result types and per-chain statistics.
+
+/// Why a chain stopped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Emitted `<eos>` or a terminating newline.
+    Stop,
+    /// Hit the L budget (max total tokens).
+    Length,
+    /// Ran out of physical cache slots (vanilla at L > S only).
+    Overflow,
+}
+
+/// A generation request: one prompt, W parallel chains.
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    pub prompt: String,
+    /// Parallel chains (parallel scaling width W).
+    pub width: usize,
+    /// Max total tokens per chain (prompt + generation) — the L budget.
+    pub max_len: usize,
+    /// Sampling temperature (chains > 1 need > 0 to differ).
+    pub temperature: f64,
+    /// Base RNG seed; chain i uses seed + i.
+    pub seed: u64,
+}
+
+impl GenRequest {
+    pub fn new(prompt: impl Into<String>) -> Self {
+        Self {
+            prompt: prompt.into(),
+            width: 1,
+            max_len: 160,
+            temperature: 0.7,
+            seed: 0,
+        }
+    }
+}
+
+/// Per-chain efficiency statistics (paper §5.1 metrics).
+#[derive(Clone, Debug, Default)]
+pub struct ChainStats {
+    pub prompt_tokens: usize,
+    pub gen_tokens: usize,
+    /// KV items attended across decode steps, token units
+    /// (mean over layer×head, +1 self per step). Quest: distinct pages
+    /// × page size + page-metadata reads.
+    pub decode_reads: f64,
+    /// KV items attended during prefill chunks.
+    pub prefill_reads: f64,
+    /// Peak live tokens in memory (token units; + Quest metadata).
+    pub peak_tokens: f64,
+    /// Live tokens at completion.
+    pub final_tokens: f64,
+    /// Eviction decisions (α>0.5 count over L×H) per position —
+    /// drives Fig. 6-left (CR vs generated length).
+    pub evictions_per_pos: Vec<u16>,
+    /// (live_final, tokens_seen) per (layer, kv-head) — Fig. 6-right.
+    pub retained_per_lh: Vec<(usize, usize)>,
+    /// Wall-clock time this chain was active, seconds.
+    pub wall_s: f64,
+    /// Whether the prompt cache was forked from a sibling chain.
+    pub forked_prefill: bool,
+}
+
+impl ChainStats {
+    /// Total reads (prefill + decode) — the x-axis of Fig. 3.
+    pub fn total_reads(&self) -> f64 {
+        self.decode_reads + self.prefill_reads
+    }
+
+    /// Achieved compression ratio: tokens seen / live entries kept,
+    /// averaged over heads (compare Fig. 6).
+    pub fn achieved_cr(&self) -> f64 {
+        let (mut live, mut seen) = (0usize, 0usize);
+        for &(l, s) in &self.retained_per_lh {
+            live += l;
+            seen += s;
+        }
+        if live == 0 {
+            1.0
+        } else {
+            seen as f64 / live as f64
+        }
+    }
+}
+
+/// One finished chain.
+#[derive(Clone, Debug)]
+pub struct ChainResult {
+    pub text: String,
+    pub finish: FinishReason,
+    pub stats: ChainStats,
+}
+
+/// All chains of a request.
+#[derive(Clone, Debug)]
+pub struct GenResult {
+    pub chains: Vec<ChainResult>,
+}
+
+impl GenResult {
+    /// Sum of reads across chains (the request's compute budget use).
+    pub fn total_reads(&self) -> f64 {
+        self.chains.iter().map(|c| c.stats.total_reads()).sum()
+    }
+
+    /// Peak memory across concurrent chains (sum — chains run in
+    /// parallel lanes, so their peaks add).
+    pub fn total_peak_tokens(&self) -> f64 {
+        self.chains.iter().map(|c| c.stats.peak_tokens).sum()
+    }
+
+    pub fn texts(&self) -> Vec<&str> {
+        self.chains.iter().map(|c| c.text.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn achieved_cr_from_retention() {
+        let stats = ChainStats {
+            retained_per_lh: vec![(25, 100), (25, 100)],
+            ..Default::default()
+        };
+        assert!((stats.achieved_cr() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn result_totals_sum_chains() {
+        let mk = |reads: f64, peak: f64| ChainResult {
+            text: String::new(),
+            finish: FinishReason::Stop,
+            stats: ChainStats {
+                decode_reads: reads,
+                peak_tokens: peak,
+                ..Default::default()
+            },
+        };
+        let r = GenResult {
+            chains: vec![mk(10.0, 5.0), mk(20.0, 7.0)],
+        };
+        assert_eq!(r.total_reads(), 30.0);
+        assert_eq!(r.total_peak_tokens(), 12.0);
+    }
+}

@@ -1,0 +1,110 @@
+//! Verifier-free parallel-scaling aggregation (paper §2.1/§4):
+//! majority voting over exact-match answers, and pass@all for code.
+
+use std::collections::BTreeMap;
+
+use crate::tasks::extract_answer;
+
+/// Aggregated outcome over W chains.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VoteOutcome {
+    /// The winning answer (majority) if any chain produced one.
+    pub answer: Option<String>,
+    /// Votes per distinct answer.
+    pub votes: BTreeMap<String, usize>,
+    /// Number of chains that produced any parseable answer.
+    pub answered: usize,
+}
+
+/// Majority vote over the extracted answers of W generations.
+/// Ties break toward the answer that first reached the winning count
+/// (stable across runs).
+pub fn majority_vote(texts: &[&str]) -> VoteOutcome {
+    let mut votes: BTreeMap<String, usize> = BTreeMap::new();
+    let mut order: Vec<String> = Vec::new();
+    let mut answered = 0;
+    for t in texts {
+        if let Some(a) = extract_answer(t) {
+            answered += 1;
+            let e = votes.entry(a.clone()).or_insert(0);
+            *e += 1;
+            if !order.contains(&a) {
+                order.push(a);
+            }
+        }
+    }
+    let mut best: Option<(String, usize)> = None;
+    for a in &order {
+        let c = votes[a];
+        if best.as_ref().map(|(_, bc)| c > *bc).unwrap_or(true) {
+            best = Some((a.clone(), c));
+        }
+    }
+    VoteOutcome {
+        answer: best.map(|(a, _)| a),
+        votes,
+        answered,
+    }
+}
+
+/// pass@all: correct if ANY chain's answer matches (LiveCodeBench
+/// scoring in the paper).
+pub fn pass_at_all(texts: &[&str], gold: &str) -> bool {
+    texts
+        .iter()
+        .any(|t| extract_answer(t).as_deref() == Some(gold))
+}
+
+/// Task-appropriate aggregation: pass@all for code suites, majority
+/// vote otherwise. Returns whether the request counts as correct.
+pub fn aggregate(task: &str, texts: &[&str], gold: &str) -> bool {
+    if task == "lcb" || task == "hellaswag" || task == "code" {
+        pass_at_all(texts, gold)
+    } else {
+        majority_vote(texts).answer.as_deref() == Some(gold)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn majority_picks_most_common() {
+        let texts = ["x A:7\n", "y A:7\n", "z A:3\n"];
+        let v = majority_vote(&texts);
+        assert_eq!(v.answer.as_deref(), Some("7"));
+        assert_eq!(v.votes["7"], 2);
+        assert_eq!(v.answered, 3);
+    }
+
+    #[test]
+    fn tie_breaks_to_first_seen() {
+        let texts = ["A:1\n", "A:2\n"];
+        let v = majority_vote(&texts);
+        assert_eq!(v.answer.as_deref(), Some("1"));
+    }
+
+    #[test]
+    fn unanswered_chains_ignored() {
+        let texts = ["gibberish", "A:5\n"];
+        let v = majority_vote(&texts);
+        assert_eq!(v.answer.as_deref(), Some("5"));
+        assert_eq!(v.answered, 1);
+    }
+
+    #[test]
+    fn pass_at_all_needs_one_hit() {
+        assert!(pass_at_all(&["A:1\n", "A:9\n"], "9"));
+        assert!(!pass_at_all(&["A:1\n", "A:2\n"], "9"));
+    }
+
+    #[test]
+    fn aggregate_dispatches_by_task() {
+        // lcb: any hit counts even when the majority is wrong
+        assert!(aggregate("lcb", &["A:0\n", "A:0\n", "A:9\n"], "9"));
+        // math: majority must match
+        assert!(!aggregate("math", &["A:0\n", "A:0\n", "A:9\n"], "9"));
+        assert!(aggregate("math", &["A:9\n", "A:9\n", "A:0\n"], "9"));
+    }
+}

@@ -1,0 +1,175 @@
+//! Shared evaluation harness: run one (task, method, L-W-CR) point
+//! through the engine and score it.
+
+use anyhow::Result;
+
+use crate::compress::PolicyKind;
+use crate::config::EngineConfig;
+use crate::engine::{aggregate, Engine, GenRequest};
+use crate::tasks::gen_problem;
+
+/// One evaluation point specification.
+#[derive(Clone, Debug)]
+pub struct EvalSpec {
+    pub task: String,
+    pub policy: PolicyKind,
+    /// Model variant tag; empty → policy default for the CR.
+    pub variant: String,
+    pub max_len: usize,
+    pub width: usize,
+    pub cr: f64,
+    pub n_problems: usize,
+    pub temperature: f64,
+    pub seed: u64,
+}
+
+impl EvalSpec {
+    pub fn new(task: &str, policy: PolicyKind, cr: f64) -> Self {
+        Self {
+            task: task.to_string(),
+            policy,
+            variant: String::new(),
+            max_len: 160,
+            width: 1,
+            cr,
+            n_problems: 12,
+            temperature: 0.7,
+            seed: 17,
+        }
+    }
+
+    pub fn variant_tag(&self) -> String {
+        if self.variant.is_empty() {
+            self.policy.default_variant(self.cr).to_string()
+        } else {
+            self.variant.clone()
+        }
+    }
+
+    pub fn label(&self) -> String {
+        format!(
+            "{}-{}-{} {} {}",
+            self.max_len,
+            self.width,
+            self.cr,
+            self.policy.name(),
+            self.task
+        )
+    }
+}
+
+/// Scored outcome of one evaluation point.
+#[derive(Clone, Debug)]
+pub struct EvalOutcome {
+    pub accuracy: f64,
+    /// mean per-problem total KV reads (sum over the W chains).
+    pub mean_reads: f64,
+    /// mean per-problem peak tokens (sum over concurrent chains).
+    pub mean_peak: f64,
+    /// mean achieved compression ratio across chains.
+    pub mean_achieved_cr: f64,
+    pub n_problems: usize,
+    /// mean generated tokens per chain.
+    pub mean_gen_tokens: f64,
+    pub wall_s: f64,
+}
+
+/// Engine pool that reuses one engine across points (the runtime caches
+/// compiled executables and weights; only policy/variant switch).
+pub struct Harness {
+    engine: Engine,
+}
+
+impl Harness {
+    pub fn new(cfg: EngineConfig) -> Result<Self> {
+        Ok(Self {
+            engine: Engine::new(cfg)?,
+        })
+    }
+
+    pub fn engine_mut(&mut self) -> &mut Engine {
+        &mut self.engine
+    }
+
+    /// Evaluate one point. Problems are generated deterministically
+    /// from (task, seed); skipped if the prompt doesn't fit max_len.
+    pub fn eval(&mut self, spec: &EvalSpec) -> Result<EvalOutcome> {
+        self.engine.set_variant(&spec.variant_tag())?;
+        self.engine.set_policy(spec.policy, spec.cr)?;
+        let t0 = std::time::Instant::now();
+
+        let mut requests = Vec::new();
+        let mut golds = Vec::new();
+        let mut idx = 0u64;
+        while requests.len() < spec.n_problems {
+            let p = gen_problem(&spec.task, spec.seed, idx);
+            idx += 1;
+            // prompt + <bos> + a little generation room must fit
+            if p.prompt.len() + 24 > spec.max_len {
+                if idx > spec.n_problems as u64 * 20 {
+                    break; // task simply doesn't fit this budget
+                }
+                continue;
+            }
+            requests.push(GenRequest {
+                prompt: p.prompt.clone(),
+                width: spec.width,
+                max_len: spec.max_len,
+                temperature: if spec.width > 1 {
+                    spec.temperature.max(0.3)
+                } else {
+                    spec.temperature
+                },
+                seed: spec.seed.wrapping_mul(31).wrapping_add(idx),
+            });
+            golds.push(p.answer);
+        }
+        if requests.is_empty() {
+            return Ok(EvalOutcome {
+                accuracy: 0.0,
+                mean_reads: 0.0,
+                mean_peak: 0.0,
+                mean_achieved_cr: 1.0,
+                n_problems: 0,
+                mean_gen_tokens: 0.0,
+                wall_s: 0.0,
+            });
+        }
+
+        let (results, _stats) = self.engine.run(&requests)?;
+        let mut correct = 0usize;
+        let mut reads = 0.0;
+        let mut peak = 0.0;
+        let mut crs = 0.0;
+        let mut gen_tokens = 0.0;
+        let mut chains = 0usize;
+        for (res, gold) in results.iter().zip(&golds) {
+            let texts = res.texts();
+            if aggregate(&spec.task, &texts, gold) {
+                correct += 1;
+            }
+            reads += res.total_reads();
+            peak += res.total_peak_tokens();
+            for c in &res.chains {
+                crs += c.stats.achieved_cr();
+                gen_tokens += c.stats.gen_tokens as f64;
+                chains += 1;
+            }
+        }
+        let n = results.len() as f64;
+        Ok(EvalOutcome {
+            accuracy: correct as f64 / n,
+            mean_reads: reads / n,
+            mean_peak: peak / n,
+            mean_achieved_cr: crs / chains.max(1) as f64,
+            n_problems: results.len(),
+            mean_gen_tokens: gen_tokens / chains.max(1) as f64,
+            wall_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+/// One-shot convenience used by tests and the CLI.
+pub fn eval_point(cfg: EngineConfig, spec: &EvalSpec) -> Result<EvalOutcome> {
+    Harness::new(cfg)?.eval(spec)
+}

@@ -1,0 +1,47 @@
+//! Figure 1: average absolute Pareto improvement of DMS over vanilla
+//! per task — the headline summary, computed from the Fig. 3/4 sweep
+//! report (Tables 5/6 margins averaged per task).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use super::pareto_exp::ParetoReport;
+use super::reports_dir;
+use crate::analysis::tables::Table;
+use crate::scaling::margin;
+use crate::util::Json;
+
+pub fn run_fig1(artifacts: &Path) -> Result<()> {
+    let path = reports_dir(artifacts).join("pareto.json");
+    let j = Json::parse_file(&path)
+        .map_err(|e| anyhow!("run `hyperscale exp fig3` first ({e})"))?;
+    let report =
+        ParetoReport::from_json(&j).ok_or_else(|| anyhow!("bad pareto.json"))?;
+
+    println!("\n## Figure 1 (avg DMS improvement over vanilla, same KV budget)\n");
+    let mut t = Table::new(&["task", "Δ accuracy (reads frontier)", "Δ accuracy (memory frontier)"]);
+    let mut json_rows = Vec::new();
+    for task in report.tasks() {
+        let by = |peak: bool| {
+            let d = report.frontier_of(&task, "dms", peak);
+            let v = report.frontier_of(&task, "vanilla", peak);
+            margin(&d, &v)
+        };
+        let fmt = |m: Option<f64>| {
+            m.map(|x| format!("{:+.1}", 100.0 * x))
+                .unwrap_or_else(|| "NA".into())
+        };
+        let (r, p) = (by(false), by(true));
+        t.row(vec![task.clone(), fmt(r), fmt(p)]);
+        json_rows.push(
+            Json::obj()
+                .set("task", task.as_str())
+                .set("reads_margin", r.unwrap_or(f64::NAN))
+                .set("memory_margin", p.unwrap_or(f64::NAN)),
+        );
+    }
+    println!("{}", t.markdown());
+    super::write_report(artifacts, "fig1", &Json::Arr(json_rows))?;
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! Figure 5: retrofit ablations.
+//! Left — delayed vs immediate eviction across windows and CRs.
+//! Right — data efficiency: accuracy vs retrofit tokens, DMS vs DMC.
+//!
+//! The underlying numbers come from the retrofit snapshots evaluated at
+//! build time (`artifacts/fig5_data.json`, produced by aot.py — that is
+//! where training lives); this driver renders the two panels and adds
+//! the Rust-engine endpoint check at CR4 for each variant.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use super::evalrun::{EvalSpec, Harness};
+use crate::analysis::tables::{pct, Table};
+use crate::compress::PolicyKind;
+use crate::config::EngineConfig;
+use crate::util::Json;
+
+pub fn run_fig5(artifacts: &Path, n_problems: usize) -> Result<()> {
+    let data = Json::parse_file(&artifacts.join("fig5_data.json"))
+        .map_err(|e| anyhow!("fig5_data.json missing (run make artifacts): {e}"))?;
+
+    println!("\n## Figure 5 left (GSM8K 0-shot: delayed vs immediate eviction)\n");
+    let mut t = Table::new(&["variant", "CR2", "CR3", "CR4"]);
+    for variant in ["dms_w4", "dms_w16", "dms_imm_w4", "dms_imm_w16"] {
+        let mut cells = vec![variant.to_string()];
+        for cr in [2.0, 3.0, 4.0] {
+            let acc = data
+                .get("delayed_vs_immediate")
+                .and_then(Json::as_arr)
+                .and_then(|rows| {
+                    rows.iter().find(|r| {
+                        r.get("variant").and_then(Json::as_str) == Some(variant)
+                            && r.get("cr").and_then(|x| x.as_f64()) == Some(cr)
+                    })
+                })
+                .and_then(|r| r.get("acc").and_then(|x| x.as_f64()));
+            cells.push(acc.map(pct).unwrap_or_else(|| "-".into()));
+        }
+        t.row(cells);
+    }
+    println!("{}", t.markdown());
+
+    println!("\n## Figure 5 right (data efficiency: accuracy vs retrofit tokens)\n");
+    let mut t = Table::new(&["variant", "step", "tokens", "CR", "gsm8k acc%"]);
+    if let Some(rows) = data.get("data_efficiency").and_then(Json::as_arr) {
+        for r in rows {
+            t.row(vec![
+                r.get("variant").and_then(Json::as_str).unwrap_or("-").into(),
+                format!("{}", r.get("step").and_then(|x| x.as_i64()).unwrap_or(0)),
+                format!("{}", r.get("tokens").and_then(|x| x.as_i64()).unwrap_or(0)),
+                format!("{:.1}", r.get("cr").and_then(|x| x.as_f64()).unwrap_or(0.0)),
+                r.get("acc")
+                    .and_then(|x| x.as_f64())
+                    .map(pct)
+                    .unwrap_or_else(|| "-".into()),
+            ]);
+        }
+    }
+    println!("{}", t.markdown());
+
+    // endpoint cross-check through the full Rust inference stack
+    println!("\n### Engine endpoint check (CR4 variants on gsm8k, greedy)\n");
+    let cfg = EngineConfig {
+        artifacts: artifacts.to_path_buf(),
+        temperature: 0.0,
+        ..Default::default()
+    };
+    let mut harness = Harness::new(cfg)?;
+    let mut t = Table::new(&["variant", "policy", "acc%", "achieved CR"]);
+    for (variant, policy) in [
+        ("base", PolicyKind::Vanilla),
+        ("dms_w16_cr4", PolicyKind::Dms),
+        ("dms_imm_w16", PolicyKind::DmsImmediate),
+        ("dmc", PolicyKind::Dmc),
+    ] {
+        let mut spec = EvalSpec::new("gsm8k", policy, 4.0);
+        spec.variant = variant.to_string();
+        spec.temperature = 0.0;
+        spec.n_problems = n_problems;
+        let out = harness.eval(&spec)?;
+        t.row(vec![
+            variant.into(),
+            policy.name().into(),
+            pct(out.accuracy),
+            format!("{:.2}", out.mean_achieved_cr),
+        ]);
+    }
+    println!("{}", t.markdown());
+    Ok(())
+}

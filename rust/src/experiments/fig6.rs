@@ -1,0 +1,122 @@
+//! Figure 6: learned compression behaviour of DMS.
+//! Left — measured CR as a function of generated-sequence position.
+//! Right — per-(layer, head) retention (percentage of tokens kept).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::analysis::tables::{num, Table};
+use crate::compress::PolicyKind;
+use crate::config::EngineConfig;
+use crate::engine::{Engine, GenRequest};
+use crate::tasks::gen_problem;
+use crate::util::Json;
+
+pub fn run_fig6(artifacts: &Path, n_problems: usize) -> Result<()> {
+    let mut engine = Engine::new(EngineConfig {
+        artifacts: artifacts.to_path_buf(),
+        variant: "dms_w16_cr4".into(),
+        policy: PolicyKind::Dms,
+        cr: 4.0,
+        temperature: 0.7,
+        ..Default::default()
+    })?;
+
+    // collect eviction decisions per position bucket + per-head retention
+    let geom = engine.geometry();
+    let lh = geom.lh();
+    let bucket = 16usize;
+    let mut decided = vec![0u64; 20]; // evictions per bucket
+    let mut seen = vec![0u64; 20];    // decisions per bucket
+    let mut retained: Vec<(u64, u64)> = vec![(0, 0); lh];
+
+    for task in ["math", "aime", "gpqa"] {
+        let mut requests = Vec::new();
+        for i in 0..n_problems as u64 {
+            let p = gen_problem(task, 55, i);
+            if p.prompt.len() + 24 > 256 {
+                continue;
+            }
+            requests.push(GenRequest {
+                prompt: p.prompt,
+                width: 1,
+                max_len: 256,
+                temperature: 0.7,
+                seed: i,
+            });
+        }
+        let (results, _) = engine.run(&requests)?;
+        for r in results {
+            for c in r.chains {
+                let start = c.stats.prompt_tokens;
+                for (i, &e) in c.stats.evictions_per_pos.iter().enumerate() {
+                    let b = ((start + i) / bucket).min(19);
+                    decided[b] += e as u64;
+                    seen[b] += lh as u64;
+                }
+                for (i, &(live, total)) in c.stats.retained_per_lh.iter().enumerate() {
+                    retained[i].0 += live as u64;
+                    retained[i].1 += total as u64;
+                }
+            }
+        }
+    }
+
+    println!("\n## Figure 6 left (measured CR vs sequence position, DMS CR4)\n");
+    let mut t = Table::new(&["position bucket", "evict rate", "local CR"]);
+    let mut json_rows = Vec::new();
+    for b in 0..20 {
+        if seen[b] == 0 {
+            continue;
+        }
+        let rate = decided[b] as f64 / seen[b] as f64;
+        let cr = 1.0 / (1.0 - rate).max(1e-3);
+        t.row(vec![
+            format!("{}-{}", b * bucket, (b + 1) * bucket),
+            format!("{:.3}", rate),
+            num(cr),
+        ]);
+        json_rows.push(
+            Json::obj()
+                .set("bucket", b)
+                .set("evict_rate", rate)
+                .set("local_cr", cr),
+        );
+    }
+    println!("{}", t.markdown());
+
+    println!("\n## Figure 6 right (retained tokens per layer/head, % kept)\n");
+    let mut t = Table::new(&["layer", "head", "kept %"]);
+    let mut per_lh = Vec::new();
+    for l in 0..geom.layers {
+        for h in 0..geom.kv_heads {
+            let (live, total) = retained[l * geom.kv_heads + h];
+            let kept = if total == 0 {
+                1.0
+            } else {
+                live as f64 / total as f64
+            };
+            t.row(vec![
+                l.to_string(),
+                h.to_string(),
+                format!("{:.1}", 100.0 * kept),
+            ]);
+            per_lh.push(
+                Json::obj()
+                    .set("layer", l)
+                    .set("head", h)
+                    .set("kept", kept),
+            );
+        }
+    }
+    println!("{}", t.markdown());
+    super::write_report(
+        artifacts,
+        "fig6",
+        &Json::obj()
+            .set("cr_vs_position", Json::Arr(json_rows))
+            .set("retention", Json::Arr(per_lh)),
+    )?;
+    Ok(())
+}

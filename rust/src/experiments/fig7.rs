@@ -1,0 +1,50 @@
+//! Figure 7 (App. G): percentage of step latency attributable to KV
+//! cache reads, across batch sizes, sequence lengths, and CRs —
+//! reproduced analytically with the paper's exact constants.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::analysis::latency_model::{LatencyModel, LlamaClass, H100};
+use crate::analysis::tables::Table;
+use crate::util::Json;
+
+pub fn run_fig7(artifacts: &Path) -> Result<()> {
+    let classes = [
+        ("Llama 3.1 8B", LlamaClass::Llama8B),
+        ("Qwen-R1 1.5B", LlamaClass::Qwen1_5B),
+        ("Qwen-R1 7B", LlamaClass::Qwen7B),
+        ("Qwen-R1 32B", LlamaClass::Qwen32B),
+    ];
+    let batches = [1usize, 8, 64, 256];
+    let seqs = [1024usize, 4096, 8192, 16384, 32768];
+    let mut json_rows = Vec::new();
+    println!("\n## Figure 7 (% of step latency from KV cache reads, H100)\n");
+    for (name, class) in classes {
+        let m = LatencyModel::preset(class);
+        for cr in [1.0f64, 4.0, 8.0] {
+            println!("### {name}, CR {cr}×\n");
+            let mut t = Table::new(&["batch \\ seq", "1K", "4K", "8K", "16K", "32K"]);
+            for &b in &batches {
+                let mut cells = vec![b.to_string()];
+                for &s in &seqs {
+                    let f = m.kv_latency_fraction(&H100, b as f64, s as f64, cr);
+                    cells.push(format!("{:.1}", 100.0 * f));
+                    json_rows.push(
+                        Json::obj()
+                            .set("model", name)
+                            .set("cr", cr)
+                            .set("batch", b)
+                            .set("seq", s)
+                            .set("kv_fraction", f),
+                    );
+                }
+                t.row(cells);
+            }
+            println!("{}", t.markdown());
+        }
+    }
+    super::write_report(artifacts, "fig7", &Json::Arr(json_rows))?;
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Experiment drivers — one per paper figure/table (DESIGN.md §4).
+//!
+//! Every driver prints the regenerated rows/series in markdown and
+//! writes a JSON record under `reports/` for EXPERIMENTS.md.
+
+mod evalrun;
+mod fig1;
+mod fig5;
+mod fig6;
+mod fig7;
+mod pareto_exp;
+mod points;
+mod table1;
+mod table2;
+
+pub use evalrun::{eval_point, EvalOutcome, EvalSpec, Harness};
+pub use fig1::run_fig1;
+pub use fig5::run_fig5;
+pub use fig6::run_fig6;
+pub use fig7::run_fig7;
+pub use pareto_exp::{run_pareto, ParetoReport};
+pub use points::run_points;
+pub use table1::run_table1;
+pub use table2::run_table2;
+
+use std::path::{Path, PathBuf};
+
+use crate::util::Json;
+
+/// Where JSON experiment records land.
+pub fn reports_dir(artifacts: &Path) -> PathBuf {
+    let dir = artifacts
+        .parent()
+        .unwrap_or_else(|| Path::new("."))
+        .join("reports");
+    let _ = std::fs::create_dir_all(&dir);
+    dir
+}
+
+/// Write a JSON report file.
+pub fn write_report(artifacts: &Path, name: &str, json: &Json) -> crate::Result<PathBuf> {
+    let path = reports_dir(artifacts).join(format!("{name}.json"));
+    std::fs::write(&path, json.to_pretty())?;
+    crate::info!("report -> {}", path.display());
+    Ok(path)
+}

@@ -1,0 +1,204 @@
+//! Figures 3 & 4 + Tables 5/6: the inference-time hyper-scaling sweep.
+//!
+//! One sweep over methods × L-W-CR configurations × tasks collects
+//! (accuracy, KV reads, peak tokens) per point; Fig. 3 plots accuracy
+//! vs reads, Fig. 4 accuracy vs peak memory, and Tables 5/6 integrate
+//! the frontier margins (App. E).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::evalrun::{EvalSpec, Harness};
+use crate::analysis::tables::{num, pct, Table};
+use crate::compress::PolicyKind;
+use crate::config::EngineConfig;
+use crate::scaling::{frontier, margin, Frontier, ScalePoint};
+use crate::util::Json;
+
+/// All measured points of the sweep.
+pub struct ParetoReport {
+    /// (task, policy-name, L-W-CR label, accuracy, reads, peak)
+    pub rows: Vec<(String, String, String, f64, f64, f64)>,
+}
+
+impl ParetoReport {
+    /// Frontier of `policy` on `task` along reads (fig3) or peak (fig4).
+    pub fn frontier_of(&self, task: &str, policy: &str, by_peak: bool) -> Frontier {
+        let pts: Vec<ScalePoint> = self
+            .rows
+            .iter()
+            .filter(|(t, p, ..)| t == task && p == policy)
+            .map(|(_, _, label, acc, reads, peak)| ScalePoint {
+                budget: if by_peak { *peak } else { *reads },
+                accuracy: *acc,
+                label: label.clone(),
+            })
+            .collect();
+        frontier(&pts)
+    }
+
+    pub fn tasks(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.rows.iter().map(|r| r.0.clone()).collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.rows
+                .iter()
+                .map(|(t, p, l, a, r, m)| {
+                    Json::obj()
+                        .set("task", t.as_str())
+                        .set("policy", p.as_str())
+                        .set("config", l.as_str())
+                        .set("accuracy", *a)
+                        .set("reads", *r)
+                        .set("peak", *m)
+                })
+                .collect(),
+        )
+    }
+
+    pub fn from_json(j: &Json) -> Option<Self> {
+        let mut rows = Vec::new();
+        for item in j.as_arr()? {
+            rows.push((
+                item.get("task")?.as_str()?.to_string(),
+                item.get("policy")?.as_str()?.to_string(),
+                item.get("config")?.as_str()?.to_string(),
+                item.get("accuracy")?.as_f64()?,
+                item.get("reads")?.as_f64()?,
+                item.get("peak")?.as_f64()?,
+            ));
+        }
+        Some(Self { rows })
+    }
+}
+
+/// The scaled-down L-W-CR grid (see DESIGN.md §2). `full` widens it.
+fn grid(policy: PolicyKind, full: bool) -> Vec<(usize, usize, f64)> {
+    let lens: &[usize] = if full { &[96, 160, 256] } else { &[96, 192] };
+    let widths: &[usize] = if full { &[1, 2, 4, 8] } else { &[1, 4] };
+    let crs: &[f64] = match policy {
+        PolicyKind::Vanilla => &[1.0],
+        PolicyKind::Dms => &[4.0, 8.0],
+        _ => &[4.0],
+    };
+    let mut out = Vec::new();
+    for &l in lens {
+        for &w in widths {
+            for &cr in crs {
+                out.push((l, w, cr));
+            }
+        }
+    }
+    out
+}
+
+/// Run the sweep. Methods follow the paper's figures: DMS + vanilla +
+/// Quest (reads frontier) + TOVA (memory frontier).
+pub fn run_pareto(
+    artifacts: &Path,
+    tasks: &[String],
+    n_problems: usize,
+    full: bool,
+) -> Result<ParetoReport> {
+    let cfg = EngineConfig {
+        artifacts: artifacts.to_path_buf(),
+        ..Default::default()
+    };
+    let mut harness = Harness::new(cfg)?;
+    let methods = [
+        PolicyKind::Vanilla,
+        PolicyKind::Dms,
+        PolicyKind::Quest,
+        PolicyKind::Tova,
+    ];
+    let mut rows = Vec::new();
+    for task in tasks {
+        for &policy in &methods {
+            for (l, w, cr) in grid(policy, full) {
+                let mut spec = EvalSpec::new(task, policy, cr);
+                spec.max_len = l;
+                spec.width = w;
+                spec.n_problems = n_problems;
+                let out = harness.eval(&spec)?;
+                if out.n_problems == 0 {
+                    continue;
+                }
+                crate::info!(
+                    "{task} {} {}-{}-{}: acc {:.2} reads {:.0} peak {:.0} ({:.1}s)",
+                    policy.name(),
+                    l,
+                    w,
+                    cr,
+                    out.accuracy,
+                    out.mean_reads,
+                    out.mean_peak,
+                    out.wall_s
+                );
+                rows.push((
+                    task.clone(),
+                    policy.name().to_string(),
+                    format!("{l}-{w}-{cr}"),
+                    out.accuracy,
+                    out.mean_reads,
+                    out.mean_peak,
+                ));
+            }
+        }
+    }
+    let report = ParetoReport { rows };
+    super::write_report(artifacts, "pareto", &report.to_json())?;
+    print_pareto_tables(&report);
+    Ok(report)
+}
+
+/// Render Fig. 3/4 frontiers + Tables 5/6 margins as markdown.
+pub fn print_pareto_tables(report: &ParetoReport) {
+    for by_peak in [false, true] {
+        let (fig, t_no, base) = if by_peak {
+            ("Figure 4 (accuracy vs peak tokens)", "Table 6", "tova")
+        } else {
+            ("Figure 3 (accuracy vs KV reads)", "Table 5", "quest")
+        };
+        println!("\n## {fig}\n");
+        for task in report.tasks() {
+            println!("### {task}\n");
+            let mut t = Table::new(&["policy", "frontier (budget→acc%)"]);
+            for policy in ["vanilla", "dms", base] {
+                let f = report.frontier_of(&task, policy, by_peak);
+                let desc = f
+                    .points
+                    .iter()
+                    .map(|p| format!("{}:{}→{}", p.label, num(p.budget), pct(p.accuracy)))
+                    .collect::<Vec<_>>()
+                    .join("  ");
+                t.row(vec![policy.to_string(), desc]);
+            }
+            println!("{}", t.markdown());
+        }
+        println!("\n## {t_no} (App. E average frontier margins)\n");
+        let mut t = Table::new(&["task", "DMS vs Vanilla", &format!("DMS vs {base}"),
+                                 &format!("{base} vs Vanilla")]);
+        for task in report.tasks() {
+            let f_dms = report.frontier_of(&task, "dms", by_peak);
+            let f_van = report.frontier_of(&task, "vanilla", by_peak);
+            let f_base = report.frontier_of(&task, base, by_peak);
+            let fmt = |m: Option<f64>| match m {
+                Some(x) => format!("{:+.1}", 100.0 * x),
+                None => "NA".to_string(),
+            };
+            t.row(vec![
+                task.clone(),
+                fmt(margin(&f_dms, &f_van)),
+                fmt(margin(&f_dms, &f_base)),
+                fmt(margin(&f_base, &f_van)),
+            ]);
+        }
+        println!("{}", t.markdown());
+    }
+}

@@ -1,0 +1,81 @@
+//! Tables 7/8/9: direct point comparisons at fixed L, W = 1 — vanilla
+//! vs DMS CR4 vs Quest CR4 (Table 7), vs TOVA CR4 (Table 8), and
+//! vanilla vs DMS CR8 (Table 9).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::evalrun::{EvalSpec, Harness};
+use crate::analysis::tables::{pct, Table};
+use crate::compress::PolicyKind;
+use crate::config::EngineConfig;
+use crate::util::Json;
+
+const TASKS: [&str; 4] = ["aime", "math", "gpqa", "lcb"];
+
+pub fn run_points(artifacts: &Path, n_problems: usize) -> Result<()> {
+    let cfg = EngineConfig {
+        artifacts: artifacts.to_path_buf(),
+        ..Default::default()
+    };
+    let mut harness = Harness::new(cfg)?;
+
+    let mut json_rows = Vec::new();
+    let mut eval = |task: &str, policy: PolicyKind, cr: f64, variant: &str,
+                    max_len: usize, harness: &mut Harness|
+     -> Result<f64> {
+        let mut spec = EvalSpec::new(task, policy, cr);
+        if !variant.is_empty() {
+            spec.variant = variant.to_string();
+        }
+        spec.max_len = max_len;
+        spec.width = 1;
+        spec.temperature = 0.0;
+        spec.n_problems = n_problems;
+        let out = harness.eval(&spec)?;
+        json_rows.push(
+            Json::obj()
+                .set("task", task)
+                .set("policy", policy.name())
+                .set("cr", cr)
+                .set("max_len", max_len)
+                .set("accuracy", out.accuracy),
+        );
+        Ok(out.accuracy)
+    };
+
+    // Tables 7/8: vanilla vs {DMS, Quest, TOVA} at CR4
+    println!("\n## Tables 7/8 (fixed L, W=1, CR4 point comparisons)\n");
+    let mut t = Table::new(&["task", "L", "vanilla", "DMS CR4", "Quest CR4", "TOVA CR4"]);
+    for task in TASKS {
+        let max_len = if task == "lcb" { 160 } else { 192 };
+        let v = eval(task, PolicyKind::Vanilla, 1.0, "base", max_len, &mut harness)?;
+        let d = eval(task, PolicyKind::Dms, 4.0, "dms_w16_cr4", max_len, &mut harness)?;
+        let q = eval(task, PolicyKind::Quest, 4.0, "base", max_len, &mut harness)?;
+        let o = eval(task, PolicyKind::Tova, 4.0, "base", max_len, &mut harness)?;
+        t.row(vec![
+            task.to_string(),
+            max_len.to_string(),
+            pct(v),
+            pct(d),
+            pct(q),
+            pct(o),
+        ]);
+    }
+    println!("{}", t.markdown());
+
+    // Table 9: vanilla vs DMS CR8
+    println!("\n## Table 9 (vanilla vs DMS CR8)\n");
+    let mut t = Table::new(&["task", "L", "vanilla", "DMS CR8"]);
+    for task in TASKS {
+        let max_len = if task == "lcb" { 160 } else { 192 };
+        let v = eval(task, PolicyKind::Vanilla, 1.0, "base", max_len, &mut harness)?;
+        let d = eval(task, PolicyKind::Dms, 8.0, "dms_w16_cr8", max_len, &mut harness)?;
+        t.row(vec![task.to_string(), max_len.to_string(), pct(v), pct(d)]);
+    }
+    println!("{}", t.markdown());
+
+    super::write_report(artifacts, "points", &Json::Arr(json_rows))?;
+    Ok(())
+}

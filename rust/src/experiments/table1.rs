@@ -1,0 +1,108 @@
+//! Table 1 (+ Table 4 std devs, Table 3 base-model sanity): the broader
+//! task battery across methods × CR ∈ {2, 3, 4}, W = 1.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::evalrun::{EvalSpec, Harness};
+use crate::analysis::tables::{pct, Table};
+use crate::compress::PolicyKind;
+use crate::config::EngineConfig;
+use crate::util::Json;
+
+const TASKS: [&str; 5] = ["gsm8k", "mmlu", "hellaswag", "niah", "vt"];
+
+fn variant_for(policy: PolicyKind, cr: f64) -> String {
+    match policy {
+        PolicyKind::Dms => format!("dms_w16_cr{}", cr as usize),
+        PolicyKind::Dmc => {
+            if cr >= 4.0 {
+                "dmc".to_string()
+            } else {
+                format!("dmc_cr{}", cr as usize)
+            }
+        }
+        _ => "base".to_string(),
+    }
+}
+
+/// Binomial standard deviation of an accuracy estimate (Table 4).
+fn std_dev(acc: f64, n: usize) -> f64 {
+    if n == 0 {
+        return 0.0;
+    }
+    (acc * (1.0 - acc) / n as f64).sqrt()
+}
+
+pub fn run_table1(artifacts: &Path, n_problems: usize, base_only: bool) -> Result<()> {
+    let cfg = EngineConfig {
+        artifacts: artifacts.to_path_buf(),
+        temperature: 0.0, // zero-shot greedy, like the harness evals
+        ..Default::default()
+    };
+    let mut harness = Harness::new(cfg)?;
+    let methods: &[PolicyKind] = if base_only {
+        // Table 3 analog: base (non-instruct) model sanity — vanilla,
+        // DMS, Quest, DMC at CR4/CR8 handled by the points driver.
+        &[PolicyKind::Vanilla, PolicyKind::Dms, PolicyKind::Quest, PolicyKind::Dmc]
+    } else {
+        &[
+            PolicyKind::Vanilla,
+            PolicyKind::H2o,
+            PolicyKind::Tova,
+            PolicyKind::Quest,
+            PolicyKind::Dmc,
+            PolicyKind::Dms,
+        ]
+    };
+
+    let mut json_rows = Vec::new();
+    println!("\n## Table 1 (broader battery; CR 2/3/4, W=1, greedy)\n");
+    for &cr in &[2.0f64, 3.0, 4.0] {
+        let mut t = Table::new(&["method", "gsm8k", "mmlu", "hellaswag", "niah", "vt"]);
+        for &policy in methods {
+            if policy == PolicyKind::Vanilla && cr != 2.0 {
+                continue; // vanilla has no CR axis; print once
+            }
+            let mut cells = vec![if policy == PolicyKind::Vanilla {
+                "vanilla (CR1)".to_string()
+            } else {
+                policy.name().to_string()
+            }];
+            for task in TASKS {
+                let mut spec = EvalSpec::new(task, policy, cr);
+                spec.variant = variant_for(policy, cr);
+                spec.temperature = 0.0;
+                spec.n_problems = n_problems;
+                spec.max_len = 192;
+                if policy == PolicyKind::Vanilla {
+                    spec.cr = 1.0;
+                }
+                let out = harness.eval(&spec)?;
+                cells.push(format!(
+                    "{}±{}",
+                    pct(out.accuracy),
+                    pct(std_dev(out.accuracy, out.n_problems))
+                ));
+                json_rows.push(
+                    Json::obj()
+                        .set("cr", cr)
+                        .set("method", policy.name())
+                        .set("task", task)
+                        .set("accuracy", out.accuracy)
+                        .set("std", std_dev(out.accuracy, out.n_problems))
+                        .set("n", out.n_problems),
+                );
+            }
+            t.row(cells);
+        }
+        println!("### CR {cr}×\n\n{}", t.markdown());
+    }
+    super::write_report(
+        artifacts,
+        if base_only { "table3" } else { "table1" },
+        &Json::Arr(json_rows),
+    )?;
+    Ok(())
+}

@@ -1,0 +1,153 @@
+//! Host-authoritative paged KV cache (paper §3.3).
+//!
+//! The physical cache is laid out exactly as the decode executable's
+//! inputs expect — `k/v: [L, B, H, S, hd]`, `mask: [L, B, H, S]`,
+//! Quest page bounds `[L, B, H, P, hd]` — so uploading a step's inputs
+//! is a straight memcpy. On top of the flat arrays sits a paged
+//! allocator: each (lane, layer, KV-head) owns S slots grouped into
+//! pages of `page_size`, mirroring PagedAttention with pages allocated
+//! to individual attention heads (the layout §3.3 calls for). Evicted
+//! slots are simply overwritten by incoming tokens (keys carry RoPE, so
+//! position travels with the payload).
+
+mod paged;
+mod store;
+
+pub use paged::PageAllocator;
+pub use store::{CacheStore, Geometry, SlotState, NEG_INF};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geom() -> Geometry {
+        Geometry {
+            layers: 2,
+            kv_heads: 2,
+            slots: 32,
+            head_dim: 4,
+            page_size: 8,
+        }
+    }
+
+    #[test]
+    fn write_then_mask_live() {
+        let g = geom();
+        let mut c = CacheStore::new(g, 2);
+        let k = vec![1.0; g.head_dim];
+        let v = vec![2.0; g.head_dim];
+        let slot = c.alloc_slot(0, 0, 0).unwrap();
+        c.write(0, 0, 0, slot, 5, &k, &v);
+        assert_eq!(c.live_count(0, 0, 0), 1);
+        assert_eq!(c.slot_pos(0, 0, 0, slot), Some(5));
+        // mask flipped to live
+        let m = c.mask_value(0, 0, 0, slot);
+        assert_eq!(m, 0.0);
+        // k payload landed
+        assert_eq!(c.k_at(0, 0, 0, slot)[0], 1.0);
+    }
+
+    #[test]
+    fn evict_frees_and_masks() {
+        let g = geom();
+        let mut c = CacheStore::new(g, 1);
+        let slot = c.alloc_slot(0, 0, 0).unwrap();
+        c.write(0, 0, 0, slot, 0, &[0.0; 4], &[0.0; 4]);
+        c.evict(0, 0, 0, slot);
+        assert_eq!(c.live_count(0, 0, 0), 0);
+        assert!(c.mask_value(0, 0, 0, slot) <= NEG_INF);
+        // slot is reusable
+        assert_eq!(c.alloc_slot(0, 0, 0), Some(slot));
+    }
+
+    #[test]
+    fn delayed_eviction_fires_on_due_position() {
+        let g = geom();
+        let mut c = CacheStore::new(g, 1);
+        let slot = c.alloc_slot(0, 0, 0).unwrap();
+        c.write(0, 0, 0, slot, 3, &[0.0; 4], &[0.0; 4]);
+        c.schedule_eviction(0, 0, 0, slot, 3 + 4); // window 4
+        c.apply_due_evictions(0, 6);
+        assert_eq!(c.live_count(0, 0, 0), 1, "not due yet");
+        c.apply_due_evictions(0, 7);
+        assert_eq!(c.live_count(0, 0, 0), 0, "due at pos 7");
+    }
+
+    #[test]
+    fn merge_updates_running_average() {
+        let g = geom();
+        let mut c = CacheStore::new(g, 1);
+        let slot = c.alloc_slot(0, 0, 0).unwrap();
+        c.write(0, 0, 0, slot, 0, &[2.0; 4], &[4.0; 4]);
+        c.merge_into_last(0, 0, 0, &[4.0; 4], &[8.0; 4]);
+        // (2*1 + 4)/2 = 3 ; (4*1 + 8)/2 = 6
+        assert_eq!(c.k_at(0, 0, 0, slot)[0], 3.0);
+        assert_eq!(c.v_at(0, 0, 0, slot)[0], 6.0);
+        c.merge_into_last(0, 0, 0, &[6.0; 4], &[9.0; 4]);
+        // (3*2 + 6)/3 = 4 ; (6*2 + 9)/3 = 7
+        assert_eq!(c.k_at(0, 0, 0, slot)[0], 4.0);
+        assert_eq!(c.v_at(0, 0, 0, slot)[0], 7.0);
+        assert_eq!(c.live_count(0, 0, 0), 1);
+    }
+
+    #[test]
+    fn fork_copies_payload_and_meta() {
+        let g = geom();
+        let mut c = CacheStore::new(g, 2);
+        for i in 0..3u32 {
+            for l in 0..g.layers {
+                for h in 0..g.kv_heads {
+                    let s = c.alloc_slot(0, l, h).unwrap();
+                    c.write(0, l, h, s, i as usize, &[i as f32; 4], &[1.0; 4]);
+                }
+            }
+        }
+        c.fork_lane(0, 1);
+        assert_eq!(c.live_count(1, 0, 0), 3);
+        assert_eq!(c.k_at(1, 0, 0, 2)[0], 2.0);
+        // forked lane evolves independently
+        c.evict(1, 0, 0, 0);
+        assert_eq!(c.live_count(0, 0, 0), 3);
+        assert_eq!(c.live_count(1, 0, 0), 2);
+    }
+
+    #[test]
+    fn live_tokens_averages_heads() {
+        let g = geom();
+        let mut c = CacheStore::new(g, 1);
+        // one layer-head gets 2 tokens, others 0
+        for pos in 0..2 {
+            let s = c.alloc_slot(0, 0, 0).unwrap();
+            c.write(0, 0, 0, s, pos, &[0.0; 4], &[0.0; 4]);
+        }
+        // 2 live in 1 of 4 (l,h) pairs => 0.5 token-units
+        assert!((c.live_tokens(0) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn page_metadata_tracks_bounds() {
+        let g = geom();
+        let mut c = CacheStore::new(g, 1);
+        let s = c.alloc_slot(0, 0, 0).unwrap();
+        c.write(0, 0, 0, s, 0, &[-3.0, 5.0, 0.0, 0.0], &[0.0; 4]);
+        let s2 = c.alloc_slot(0, 0, 0).unwrap();
+        c.write(0, 0, 0, s2, 1, &[1.0, 2.0, 0.0, 0.0], &[0.0; 4]);
+        let page = 0;
+        let pm = c.pmin_at(0, 0, 0, page);
+        let px = c.pmax_at(0, 0, 0, page);
+        assert_eq!(pm[0], -3.0);
+        assert_eq!(px[0], 1.0);
+        assert_eq!(px[1], 5.0);
+    }
+
+    #[test]
+    fn slots_exhaust_then_none() {
+        let g = geom();
+        let mut c = CacheStore::new(g, 1);
+        for i in 0..g.slots {
+            let s = c.alloc_slot(0, 1, 1).unwrap();
+            c.write(0, 1, 1, s, i, &[0.0; 4], &[0.0; 4]);
+        }
+        assert!(c.alloc_slot(0, 1, 1).is_none());
+    }
+}

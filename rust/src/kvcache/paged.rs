@@ -1,0 +1,149 @@
+//! Page-granular slot allocator for one (lane, layer, KV-head).
+//!
+//! Slots are grouped into pages of `page_size`. Allocation prefers
+//! partially-used pages (first fit) so the working set stays compact —
+//! the PagedAttention property that lets evicted slots be overwritten
+//! without fragmenting whole pages.
+
+/// Allocator over `slots` physical slots in pages of `page_size`.
+#[derive(Clone, Debug)]
+pub struct PageAllocator {
+    page_size: usize,
+    /// used[s] — slot occupancy bitmap.
+    used: Vec<bool>,
+    /// per-page used-slot count.
+    page_used: Vec<u16>,
+}
+
+impl PageAllocator {
+    pub fn new(slots: usize, page_size: usize) -> Self {
+        assert!(slots % page_size == 0, "slots must be page-aligned");
+        Self {
+            page_size,
+            used: vec![false; slots],
+            page_used: vec![0; slots / page_size],
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.used.iter_mut().for_each(|u| *u = false);
+        self.page_used.iter_mut().for_each(|c| *c = 0);
+    }
+
+    /// Allocate one slot: first fit within partially-used pages, then
+    /// the first empty page.
+    pub fn alloc(&mut self) -> Option<usize> {
+        // pass 1: partially used pages
+        for (p, &cnt) in self.page_used.iter().enumerate() {
+            if cnt > 0 && (cnt as usize) < self.page_size {
+                let base = p * self.page_size;
+                for s in base..base + self.page_size {
+                    if !self.used[s] {
+                        self.used[s] = true;
+                        self.page_used[p] += 1;
+                        return Some(s);
+                    }
+                }
+            }
+        }
+        // pass 2: first empty page
+        for (p, &cnt) in self.page_used.iter().enumerate() {
+            if cnt == 0 {
+                let s = p * self.page_size;
+                self.used[s] = true;
+                self.page_used[p] = 1;
+                return Some(s);
+            }
+        }
+        None
+    }
+
+    pub fn free(&mut self, slot: usize) {
+        if self.used[slot] {
+            self.used[slot] = false;
+            self.page_used[slot / self.page_size] -= 1;
+        }
+    }
+
+    pub fn is_used(&self, slot: usize) -> bool {
+        self.used[slot]
+    }
+
+    pub fn used_slots(&self) -> usize {
+        self.page_used.iter().map(|&c| c as usize).sum()
+    }
+
+    /// Number of pages with at least one used slot.
+    pub fn allocated_pages(&self) -> usize {
+        self.page_used.iter().filter(|&&c| c > 0).count()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.used.len()
+    }
+
+    pub fn clone_from_other(&mut self, other: &PageAllocator) {
+        self.used.copy_from_slice(&other.used);
+        self.page_used.copy_from_slice(&other.page_used);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fills_page_before_opening_new() {
+        let mut a = PageAllocator::new(32, 8);
+        let s0 = a.alloc().unwrap();
+        assert_eq!(s0, 0);
+        for _ in 0..7 {
+            a.alloc().unwrap();
+        }
+        assert_eq!(a.allocated_pages(), 1);
+        let s8 = a.alloc().unwrap();
+        assert_eq!(s8, 8);
+        assert_eq!(a.allocated_pages(), 2);
+    }
+
+    #[test]
+    fn reuses_freed_slot_in_partial_page() {
+        let mut a = PageAllocator::new(32, 8);
+        for _ in 0..9 {
+            a.alloc().unwrap();
+        }
+        a.free(3);
+        // next alloc goes back into page 0's hole, not a fresh page
+        assert_eq!(a.alloc(), Some(3));
+        assert_eq!(a.allocated_pages(), 2);
+    }
+
+    #[test]
+    fn page_becomes_free_when_emptied() {
+        let mut a = PageAllocator::new(16, 8);
+        let s = a.alloc().unwrap();
+        assert_eq!(a.allocated_pages(), 1);
+        a.free(s);
+        assert_eq!(a.allocated_pages(), 0);
+        assert_eq!(a.used_slots(), 0);
+    }
+
+    #[test]
+    fn exhausts_at_capacity() {
+        let mut a = PageAllocator::new(16, 8);
+        for _ in 0..16 {
+            assert!(a.alloc().is_some());
+        }
+        assert!(a.alloc().is_none());
+        assert_eq!(a.used_slots(), 16);
+    }
+
+    #[test]
+    fn double_free_is_noop() {
+        let mut a = PageAllocator::new(16, 8);
+        let s = a.alloc().unwrap();
+        a.free(s);
+        a.free(s);
+        assert_eq!(a.used_slots(), 0);
+    }
+}

@@ -1,0 +1,402 @@
+//! The cache store: flat executor-layout arrays + per-slot metadata.
+
+use super::paged::PageAllocator;
+
+pub const NEG_INF: f32 = -1e9;
+
+/// Cache geometry (matches the exported executables).
+#[derive(Clone, Copy, Debug)]
+pub struct Geometry {
+    pub layers: usize,
+    pub kv_heads: usize,
+    pub slots: usize,
+    pub head_dim: usize,
+    pub page_size: usize,
+}
+
+impl Geometry {
+    pub fn pages(&self) -> usize {
+        self.slots / self.page_size
+    }
+    /// (layer, kv-head) pair count.
+    pub fn lh(&self) -> usize {
+        self.layers * self.kv_heads
+    }
+}
+
+/// Slot lifecycle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SlotState {
+    Free,
+    Live {
+        /// Token position this slot holds (RoPE already applied).
+        pos: u32,
+        /// Scheduled eviction position (DMS delayed eviction), if any.
+        evict_at: u32, // u32::MAX = none
+        /// DMC merge count (number of tokens averaged into this slot).
+        merges: u16,
+    },
+}
+
+const NO_EVICT: u32 = u32::MAX;
+
+/// Host-authoritative cache for all lanes of one executor.
+pub struct CacheStore {
+    pub geom: Geometry,
+    pub batch: usize,
+    /// f32[L, B, H, S, hd]
+    k: Vec<f32>,
+    /// f32[L, B, H, S, hd]
+    v: Vec<f32>,
+    /// f32[L, B, H, S] additive mask (0 live / NEG_INF dead)
+    mask: Vec<f32>,
+    /// f32[L, B, H, P, hd] Quest page bounds
+    pmin: Vec<f32>,
+    pmax: Vec<f32>,
+    /// per (b, l, h): slot metadata + allocator
+    meta: Vec<Vec<SlotState>>,
+    alloc: Vec<PageAllocator>,
+    live: Vec<usize>,
+    /// most recently written live slot per (b, l, h) (DMC merge target)
+    last_written: Vec<Option<usize>>,
+}
+
+impl CacheStore {
+    pub fn new(geom: Geometry, batch: usize) -> Self {
+        let n_lbh = batch * geom.lh();
+        let kv_len = geom.layers * batch * geom.kv_heads * geom.slots * geom.head_dim;
+        let pm_len = geom.layers * batch * geom.kv_heads * geom.pages() * geom.head_dim;
+        Self {
+            geom,
+            batch,
+            k: vec![0.0; kv_len],
+            v: vec![0.0; kv_len],
+            mask: vec![NEG_INF; geom.layers * batch * geom.kv_heads * geom.slots],
+            pmin: vec![0.0; pm_len],
+            pmax: vec![0.0; pm_len],
+            meta: (0..n_lbh).map(|_| vec![SlotState::Free; geom.slots]).collect(),
+            alloc: (0..n_lbh)
+                .map(|_| PageAllocator::new(geom.slots, geom.page_size))
+                .collect(),
+            live: vec![0; n_lbh],
+            last_written: vec![None; n_lbh],
+        }
+    }
+
+    // ---------------- index helpers ----------------
+
+    #[inline]
+    fn lbh(&self, b: usize, l: usize, h: usize) -> usize {
+        (b * self.geom.layers + l) * self.geom.kv_heads + h
+    }
+
+    #[inline]
+    fn kv_base(&self, b: usize, l: usize, h: usize, s: usize) -> usize {
+        let g = &self.geom;
+        (((l * self.batch + b) * g.kv_heads + h) * g.slots + s) * g.head_dim
+    }
+
+    #[inline]
+    fn mask_idx(&self, b: usize, l: usize, h: usize, s: usize) -> usize {
+        let g = &self.geom;
+        ((l * self.batch + b) * g.kv_heads + h) * g.slots + s
+    }
+
+    #[inline]
+    fn page_base(&self, b: usize, l: usize, h: usize, p: usize) -> usize {
+        let g = &self.geom;
+        (((l * self.batch + b) * g.kv_heads + h) * g.pages() + p) * g.head_dim
+    }
+
+    // ---------------- raw views for the executor ----------------
+
+    pub fn k_slice(&self) -> &[f32] {
+        &self.k
+    }
+    pub fn v_slice(&self) -> &[f32] {
+        &self.v
+    }
+    pub fn mask_slice(&self) -> &[f32] {
+        &self.mask
+    }
+    pub fn pmin_slice(&self) -> &[f32] {
+        &self.pmin
+    }
+    pub fn pmax_slice(&self) -> &[f32] {
+        &self.pmax
+    }
+
+    // ---------------- slot ops ----------------
+
+    pub fn alloc_slot(&mut self, b: usize, l: usize, h: usize) -> Option<usize> {
+        let i = self.lbh(b, l, h);
+        self.alloc[i].alloc()
+    }
+
+    /// Write a token's (k, v) into `slot` and mark it live.
+    pub fn write(
+        &mut self,
+        b: usize,
+        l: usize,
+        h: usize,
+        slot: usize,
+        pos: usize,
+        k: &[f32],
+        v: &[f32],
+    ) {
+        let hd = self.geom.head_dim;
+        debug_assert_eq!(k.len(), hd);
+        let base = self.kv_base(b, l, h, slot);
+        self.k[base..base + hd].copy_from_slice(k);
+        self.v[base..base + hd].copy_from_slice(v);
+        let mi = self.mask_idx(b, l, h, slot);
+        self.mask[mi] = 0.0;
+        let i = self.lbh(b, l, h);
+        if !self.alloc[i].is_used(slot) {
+            // caller may write into a pre-chosen slot (prefill fork);
+            // claim it in the allocator bitmap.
+            // PageAllocator has no direct claim API; emulate via scan.
+            self.claim_slot(i, slot);
+        }
+        if !matches!(self.meta[i][slot], SlotState::Live { .. }) {
+            self.live[i] += 1;
+        }
+        self.meta[i][slot] = SlotState::Live {
+            pos: pos as u32,
+            evict_at: NO_EVICT,
+            merges: 0,
+        };
+        self.last_written[i] = Some(slot);
+        self.update_page_bounds(b, l, h, slot, k);
+    }
+
+    fn claim_slot(&mut self, lbh: usize, slot: usize) {
+        // allocate-until-hit then free the extras — slots are claimed
+        // out of order only during fork/restore paths, which are rare.
+        let mut extras = Vec::new();
+        loop {
+            match self.alloc[lbh].alloc() {
+                Some(s) if s == slot => break,
+                Some(s) => extras.push(s),
+                None => break,
+            }
+        }
+        for s in extras {
+            self.alloc[lbh].free(s);
+        }
+    }
+
+    fn update_page_bounds(&mut self, b: usize, l: usize, h: usize, slot: usize, k: &[f32]) {
+        let page = slot / self.geom.page_size;
+        let base = self.page_base(b, l, h, page);
+        let i = self.lbh(b, l, h);
+        // first key in page initializes the bounds
+        let page_first = (page * self.geom.page_size..(page + 1) * self.geom.page_size)
+            .filter(|&s| matches!(self.meta[i][s], SlotState::Live { .. }))
+            .count()
+            == 1;
+        for (d, &kd) in k.iter().enumerate() {
+            if page_first {
+                self.pmin[base + d] = kd;
+                self.pmax[base + d] = kd;
+            } else {
+                if kd < self.pmin[base + d] {
+                    self.pmin[base + d] = kd;
+                }
+                if kd > self.pmax[base + d] {
+                    self.pmax[base + d] = kd;
+                }
+            }
+        }
+    }
+
+    /// DMC: merge (k, v) into the most recently written live slot via
+    /// running weighted average. Falls back to no-op if none exists.
+    pub fn merge_into_last(&mut self, b: usize, l: usize, h: usize, k: &[f32], v: &[f32]) -> bool {
+        let i = self.lbh(b, l, h);
+        let Some(slot) = self.last_written[i] else {
+            return false;
+        };
+        let SlotState::Live { pos, evict_at, merges } = self.meta[i][slot] else {
+            return false;
+        };
+        let n = merges as f32 + 1.0;
+        let base = self.kv_base(b, l, h, slot);
+        let hd = self.geom.head_dim;
+        for d in 0..hd {
+            self.k[base + d] = (self.k[base + d] * n + k[d]) / (n + 1.0);
+            self.v[base + d] = (self.v[base + d] * n + v[d]) / (n + 1.0);
+        }
+        self.meta[i][slot] = SlotState::Live {
+            pos,
+            evict_at,
+            merges: merges + 1,
+        };
+        let kk: Vec<f32> = self.k[base..base + hd].to_vec();
+        self.update_page_bounds(b, l, h, slot, &kk);
+        true
+    }
+
+    pub fn evict(&mut self, b: usize, l: usize, h: usize, slot: usize) {
+        let i = self.lbh(b, l, h);
+        if matches!(self.meta[i][slot], SlotState::Live { .. }) {
+            self.meta[i][slot] = SlotState::Free;
+            self.alloc[i].free(slot);
+            self.live[i] -= 1;
+            let mi = self.mask_idx(b, l, h, slot);
+            self.mask[mi] = NEG_INF;
+            if self.last_written[i] == Some(slot) {
+                self.last_written[i] = None;
+            }
+        }
+    }
+
+    /// DMS delayed eviction: mark `slot` to be evicted at `evict_at`.
+    pub fn schedule_eviction(&mut self, b: usize, l: usize, h: usize, slot: usize, evict_at: usize) {
+        let i = self.lbh(b, l, h);
+        if let SlotState::Live { pos, merges, .. } = self.meta[i][slot] {
+            self.meta[i][slot] = SlotState::Live {
+                pos,
+                evict_at: evict_at as u32,
+                merges,
+            };
+        }
+    }
+
+    /// Execute pending evictions whose time has come (pos >= evict_at).
+    pub fn apply_due_evictions(&mut self, b: usize, pos: usize) {
+        for l in 0..self.geom.layers {
+            for h in 0..self.geom.kv_heads {
+                let i = self.lbh(b, l, h);
+                for s in 0..self.geom.slots {
+                    if let SlotState::Live { evict_at, .. } = self.meta[i][s] {
+                        if evict_at != NO_EVICT && pos as u32 >= evict_at {
+                            self.evict(b, l, h, s);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // ---------------- queries ----------------
+
+    pub fn live_count(&self, b: usize, l: usize, h: usize) -> usize {
+        self.live[self.lbh(b, l, h)]
+    }
+
+    /// Live tokens in token units: mean over (layer, head) pairs.
+    pub fn live_tokens(&self, b: usize) -> f64 {
+        let mut total = 0usize;
+        for l in 0..self.geom.layers {
+            for h in 0..self.geom.kv_heads {
+                total += self.live[self.lbh(b, l, h)];
+            }
+        }
+        total as f64 / self.geom.lh() as f64
+    }
+
+    pub fn allocated_pages(&self, b: usize, l: usize, h: usize) -> usize {
+        self.alloc[self.lbh(b, l, h)].allocated_pages()
+    }
+
+    pub fn slot_state(&self, b: usize, l: usize, h: usize, s: usize) -> SlotState {
+        self.meta[self.lbh(b, l, h)][s]
+    }
+
+    pub fn slot_pos(&self, b: usize, l: usize, h: usize, s: usize) -> Option<usize> {
+        match self.meta[self.lbh(b, l, h)][s] {
+            SlotState::Live { pos, .. } => Some(pos as usize),
+            SlotState::Free => None,
+        }
+    }
+
+    pub fn mask_value(&self, b: usize, l: usize, h: usize, s: usize) -> f32 {
+        self.mask[self.mask_idx(b, l, h, s)]
+    }
+
+    pub fn k_at(&self, b: usize, l: usize, h: usize, s: usize) -> &[f32] {
+        let base = self.kv_base(b, l, h, s);
+        &self.k[base..base + self.geom.head_dim]
+    }
+
+    pub fn v_at(&self, b: usize, l: usize, h: usize, s: usize) -> &[f32] {
+        let base = self.kv_base(b, l, h, s);
+        &self.v[base..base + self.geom.head_dim]
+    }
+
+    pub fn pmin_at(&self, b: usize, l: usize, h: usize, p: usize) -> &[f32] {
+        let base = self.page_base(b, l, h, p);
+        &self.pmin[base..base + self.geom.head_dim]
+    }
+
+    pub fn pmax_at(&self, b: usize, l: usize, h: usize, p: usize) -> &[f32] {
+        let base = self.page_base(b, l, h, p);
+        &self.pmax[base..base + self.geom.head_dim]
+    }
+
+    /// Live slots of (b, l, h) with their positions (for policy evictors).
+    pub fn live_slots(&self, b: usize, l: usize, h: usize) -> Vec<(usize, usize)> {
+        let i = self.lbh(b, l, h);
+        (0..self.geom.slots)
+            .filter_map(|s| match self.meta[i][s] {
+                SlotState::Live { pos, .. } => Some((s, pos as usize)),
+                SlotState::Free => None,
+            })
+            .collect()
+    }
+
+    // ---------------- lane lifecycle ----------------
+
+    pub fn reset_lane(&mut self, b: usize) {
+        for l in 0..self.geom.layers {
+            for h in 0..self.geom.kv_heads {
+                let i = self.lbh(b, l, h);
+                self.meta[i].iter_mut().for_each(|m| *m = SlotState::Free);
+                self.alloc[i].reset();
+                self.live[i] = 0;
+                self.last_written[i] = None;
+                for s in 0..self.geom.slots {
+                    let mi = self.mask_idx(b, l, h, s);
+                    self.mask[mi] = NEG_INF;
+                }
+                let pb = self.page_base(b, l, h, 0);
+                let plen = self.geom.pages() * self.geom.head_dim;
+                self.pmin[pb..pb + plen].iter_mut().for_each(|x| *x = 0.0);
+                self.pmax[pb..pb + plen].iter_mut().for_each(|x| *x = 0.0);
+            }
+        }
+    }
+
+    /// Copy lane `src`'s full cache state into lane `dst` (prefix
+    /// sharing for parallel chains: prefill once, fork W−1 times).
+    pub fn fork_lane(&mut self, src: usize, dst: usize) {
+        assert_ne!(src, dst);
+        let g = self.geom;
+        for l in 0..g.layers {
+            for h in 0..g.kv_heads {
+                let sb = self.kv_base(src, l, h, 0);
+                let db = self.kv_base(dst, l, h, 0);
+                let n = g.slots * g.head_dim;
+                self.k.copy_within(sb..sb + n, db);
+                self.v.copy_within(sb..sb + n, db);
+                let smi = self.mask_idx(src, l, h, 0);
+                let dmi = self.mask_idx(dst, l, h, 0);
+                self.mask.copy_within(smi..smi + g.slots, dmi);
+                let spb = self.page_base(src, l, h, 0);
+                let dpb = self.page_base(dst, l, h, 0);
+                let pn = g.pages() * g.head_dim;
+                self.pmin.copy_within(spb..spb + pn, dpb);
+                self.pmax.copy_within(spb..spb + pn, dpb);
+                let si = self.lbh(src, l, h);
+                let di = self.lbh(dst, l, h);
+                let src_meta = self.meta[si].clone();
+                self.meta[di] = src_meta;
+                let src_alloc = self.alloc[si].clone();
+                self.alloc[di].clone_from_other(&src_alloc);
+                self.live[di] = self.live[si];
+                self.last_written[di] = self.last_written[si];
+            }
+        }
+    }
+}

@@ -1,0 +1,42 @@
+//! # hyperscale — Inference-Time Hyper-Scaling with KV Cache Compression
+//!
+//! Rust coordinator (Layer 3) of the three-layer reproduction of
+//! *"Inference-Time Hyper-Scaling with KV Cache Compression"* (Łańcucki
+//! et al., 2025). The compute graph (Layer 2, JAX) and the attention
+//! hot-spots (Layer 1, Pallas) are AOT-compiled at build time into HLO
+//! text artifacts that this crate loads and executes through the PJRT
+//! CPU client (`xla` crate). Python never runs on the request path.
+//!
+//! Major subsystems (see DESIGN.md for the full inventory):
+//!
+//! * [`runtime`]  — PJRT client, artifact manifest, executable wrappers;
+//! * [`kvcache`]  — paged per-(layer, KV-head) slot cache with live-mask
+//!   accounting (KV reads / peak tokens — the paper's §5.1 metrics);
+//! * [`compress`] — the policy zoo: DMS (delayed eviction), TOVA, H2O,
+//!   Quest, DMC merging, sliding window, vanilla;
+//! * [`engine`]   — continuous batcher, prefill/decode scheduler,
+//!   sampler, majority-voting / pass@all aggregation;
+//! * [`scaling`]  — L-W-CR budget controller + Pareto-frontier analysis
+//!   (App. E margin integrals);
+//! * [`analysis`] — App. G analytical latency model (Fig. 7);
+//! * [`experiments`] — one driver per paper figure/table;
+//! * [`server`]   — TCP line-JSON serving front end;
+//! * [`tasks`], [`tokenizer`] — synthetic benchmark suite, mirrored
+//!   byte-for-byte with `python/compile/tasks.py`.
+
+pub mod analysis;
+pub mod compress;
+pub mod config;
+pub mod engine;
+pub mod experiments;
+pub mod kvcache;
+pub mod metrics;
+pub mod runtime;
+pub mod scaling;
+pub mod server;
+pub mod tasks;
+pub mod tokenizer;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,201 @@
+//! `hyperscale` CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   gen        generate from a prompt (quick smoke)
+//!   eval       evaluate one (task, policy, L-W-CR) point
+//!   exp <id>   regenerate a paper figure/table (fig1 fig3 fig4 fig5
+//!              fig6 fig7 table1 table2 table7 — see DESIGN.md §4)
+//!   serve      run the TCP line-JSON server
+//!   inspect    print manifest/artifact info
+//!   selftest   load artifacts and run a tiny end-to-end generation
+
+use std::path::PathBuf;
+
+use hyperscale::compress::PolicyKind;
+use hyperscale::config::EngineConfig;
+use hyperscale::engine::{Engine, GenRequest};
+use hyperscale::experiments as exp;
+use hyperscale::util::{log, Args};
+use hyperscale::{info, Result};
+
+fn main() {
+    let args = Args::from_env();
+    if args.flag("debug") {
+        log::set_level(3);
+    }
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> &'static str {
+    "usage: hyperscale <gen|eval|exp|serve|inspect|selftest> [options]\n\
+     common options: --artifacts DIR --variant TAG --policy NAME --cr X\n\
+       gen      --prompt 'Q:1+2=?\\nT:' [--width W] [--max-len L] [--temp T]\n\
+       eval     --task math [--width W] [--max-len L] [--n N]\n\
+       exp      fig1|fig3|fig4|fig5|fig6|fig7|table1|table2|table7 [--n N] [--full]\n\
+       serve    [--addr 127.0.0.1:7333]\n\
+       inspect  | selftest"
+}
+
+fn engine_cfg(args: &Args) -> Result<EngineConfig> {
+    EngineConfig::default().with_args(args)
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
+    match cmd {
+        "gen" => cmd_gen(args),
+        "eval" => cmd_eval(args),
+        "exp" => cmd_exp(args),
+        "serve" => {
+            let cfg = engine_cfg(args)?;
+            hyperscale::server::serve(cfg, args.get_str("addr", "127.0.0.1:7333"))
+        }
+        "inspect" => cmd_inspect(args),
+        "selftest" => cmd_selftest(args),
+        _ => {
+            println!("{}", usage());
+            Ok(())
+        }
+    }
+}
+
+fn cmd_gen(args: &Args) -> Result<()> {
+    let mut cfg = engine_cfg(args)?;
+    // convenience: picking a DMS/DMC policy implies its default variant
+    if args.get("variant").is_none() && cfg.policy != PolicyKind::Vanilla {
+        cfg.variant = cfg.policy.default_variant(cfg.cr).to_string();
+    }
+    let mut engine = Engine::new(cfg)?;
+    let prompt = args
+        .get("prompt")
+        .map(|s| s.replace("\\n", "\n"))
+        .unwrap_or_else(|| "Q:7+5-3=?\nT:".to_string());
+    let req = GenRequest {
+        prompt,
+        width: args.get_usize("width", 1)?,
+        max_len: args.get_usize("max-len", 160)?,
+        temperature: args.get_f64("temp", 0.0)?,
+        seed: args.get_usize("seed", 0)? as u64,
+    };
+    let res = engine.generate(req)?;
+    for (i, c) in res.chains.iter().enumerate() {
+        println!(
+            "chain {i}: {:?} ({:?}, reads {:.0}, peak {:.1}, CR {:.2})",
+            c.text,
+            c.finish,
+            c.stats.total_reads(),
+            c.stats.peak_tokens,
+            c.stats.achieved_cr()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let cfg = engine_cfg(args)?;
+    let policy = cfg.policy;
+    let cr = cfg.cr;
+    let mut spec = exp::EvalSpec::new(args.get_str("task", "math"), policy, cr);
+    spec.max_len = args.get_usize("max-len", 160)?;
+    spec.width = args.get_usize("width", 1)?;
+    spec.n_problems = args.get_usize("n", 12)?;
+    spec.temperature = args.get_f64("temp", 0.7)?;
+    if let Some(v) = args.get("variant") {
+        spec.variant = v.to_string();
+    }
+    let out = exp::eval_point(cfg, &spec)?;
+    println!(
+        "{}: acc {:.3} reads {:.0} peak {:.1} CR {:.2} gen {:.0} tok ({} problems, {:.1}s)",
+        spec.label(),
+        out.accuracy,
+        out.mean_reads,
+        out.mean_peak,
+        out.mean_achieved_cr,
+        out.mean_gen_tokens,
+        out.n_problems,
+        out.wall_s
+    );
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let artifacts = PathBuf::from(args.get_str("artifacts", "artifacts"));
+    let n = args.get_usize("n", 12)?;
+    let full = args.flag("full");
+    let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("");
+    match which {
+        "fig1" => exp::run_fig1(&artifacts),
+        "fig3" | "fig4" | "pareto" => {
+            let tasks = hyperscale::config::parse_tasks(
+                args.get("tasks"),
+                &["math", "aime", "gpqa", "lcb"],
+            )?;
+            exp::run_pareto(&artifacts, &tasks, n, full).map(|_| ())
+        }
+        "fig5" => exp::run_fig5(&artifacts, n),
+        "fig6" => exp::run_fig6(&artifacts, n),
+        "fig7" => exp::run_fig7(&artifacts),
+        "table1" => exp::run_table1(&artifacts, n, args.flag("base")),
+        "table2" => exp::run_table2(&artifacts, n),
+        "table7" | "table8" | "table9" | "points" => exp::run_points(&artifacts, n),
+        other => anyhow::bail!("unknown experiment '{other}'\n{}", usage()),
+    }
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let cfg = engine_cfg(args)?;
+    let rt = hyperscale::runtime::Runtime::open(&cfg.artifacts)?;
+    let m = &rt.manifest;
+    println!(
+        "model: d={} layers={} q_heads={} kv_heads={} head_dim={} vocab={}",
+        m.config.d_model,
+        m.config.n_layers,
+        m.config.n_q_heads,
+        m.config.n_kv_heads,
+        m.config.head_dim,
+        m.config.vocab
+    );
+    println!("variants:");
+    for (name, v) in &m.variants {
+        println!(
+            "  {name:16} weights={} mode={} window={} immediate={}",
+            v.weights, v.alpha_mode, v.window, v.immediate
+        );
+    }
+    println!("executables:");
+    for (name, e) in &m.executables {
+        println!(
+            "  {name:24} kind={} batch={} slots={} chunk={} pallas={}",
+            e.kind, e.batch, e.slots, e.chunk, e.pallas
+        );
+    }
+    Ok(())
+}
+
+fn cmd_selftest(args: &Args) -> Result<()> {
+    let cfg = engine_cfg(args)?;
+    let mut engine = Engine::new(cfg)?;
+    let p = hyperscale::tasks::gen_problem("math", 1, 0);
+    info!("prompt: {:?} gold: {}", p.prompt, p.answer);
+    let res = engine.generate(GenRequest {
+        prompt: p.prompt.clone(),
+        width: 1,
+        max_len: 120,
+        temperature: 0.0,
+        seed: 0,
+    })?;
+    let text = &res.chains[0].text;
+    info!("generated: {text:?}");
+    let ans = hyperscale::tasks::extract_answer(text);
+    println!(
+        "selftest: generated {} tokens, answer {:?} (gold {}), reads {:.0}",
+        res.chains[0].stats.gen_tokens,
+        ans,
+        p.answer,
+        res.total_reads()
+    );
+    Ok(())
+}

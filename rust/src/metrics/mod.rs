@@ -1,0 +1,232 @@
+//! Metrics substrate: counters, gauges with peak tracking, histograms
+//! with percentile queries, and a registry for report generation.
+
+use std::collections::BTreeMap;
+
+/// Monotone counter (f64 so fractional token-unit reads accumulate).
+#[derive(Clone, Debug, Default)]
+pub struct Counter {
+    value: f64,
+}
+
+impl Counter {
+    pub fn add(&mut self, x: f64) {
+        self.value += x;
+    }
+    pub fn inc(&mut self) {
+        self.value += 1.0;
+    }
+    pub fn get(&self) -> f64 {
+        self.value
+    }
+    pub fn reset(&mut self) {
+        self.value = 0.0;
+    }
+}
+
+/// Gauge that remembers its peak — used for "peak tokens in memory".
+#[derive(Clone, Debug, Default)]
+pub struct PeakGauge {
+    value: f64,
+    peak: f64,
+}
+
+impl PeakGauge {
+    pub fn set(&mut self, x: f64) {
+        self.value = x;
+        if x > self.peak {
+            self.peak = x;
+        }
+    }
+    pub fn add(&mut self, dx: f64) {
+        self.set(self.value + dx);
+    }
+    pub fn get(&self) -> f64 {
+        self.value
+    }
+    pub fn peak(&self) -> f64 {
+        self.peak
+    }
+    pub fn reset(&mut self) {
+        self.value = 0.0;
+        self.peak = 0.0;
+    }
+}
+
+/// Fixed-capacity sampling histogram with exact percentiles (stores all
+/// samples up to `cap`, then reservoir-samples).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    samples: Vec<f64>,
+    count: u64,
+    sum: f64,
+    cap: usize,
+    rng_state: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::with_capacity(16384)
+    }
+}
+
+impl Histogram {
+    pub fn with_capacity(cap: usize) -> Self {
+        Self {
+            samples: Vec::new(),
+            count: 0,
+            sum: 0.0,
+            cap,
+            rng_state: 0x9E37_79B9,
+        }
+    }
+
+    pub fn record(&mut self, x: f64) {
+        self.count += 1;
+        self.sum += x;
+        if self.samples.len() < self.cap {
+            self.samples.push(x);
+        } else {
+            // reservoir sampling keeps percentiles unbiased
+            self.rng_state = self
+                .rng_state
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            let j = (self.rng_state >> 11) % self.count;
+            if (j as usize) < self.cap {
+                self.samples[j as usize] = x;
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Percentile in [0, 100].
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+        s[idx.min(s.len() - 1)]
+    }
+
+    pub fn reset(&mut self) {
+        self.samples.clear();
+        self.count = 0;
+        self.sum = 0.0;
+    }
+}
+
+/// Named-metric registry used by the engine and the server.
+#[derive(Debug, Default)]
+pub struct Registry {
+    pub counters: BTreeMap<String, Counter>,
+    pub gauges: BTreeMap<String, PeakGauge>,
+    pub histograms: BTreeMap<String, Histogram>,
+}
+
+impl Registry {
+    pub fn counter(&mut self, name: &str) -> &mut Counter {
+        self.counters.entry(name.to_string()).or_default()
+    }
+    pub fn gauge(&mut self, name: &str) -> &mut PeakGauge {
+        self.gauges.entry(name.to_string()).or_default()
+    }
+    pub fn histogram(&mut self, name: &str) -> &mut Histogram {
+        self.histograms.entry(name.to_string()).or_default()
+    }
+
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (name, c) in &self.counters {
+            out.push_str(&format!("counter {name} = {:.3}\n", c.get()));
+        }
+        for (name, g) in &self.gauges {
+            out.push_str(&format!(
+                "gauge   {name} = {:.3} (peak {:.3})\n",
+                g.get(),
+                g.peak()
+            ));
+        }
+        for (name, h) in &self.histograms {
+            out.push_str(&format!(
+                "hist    {name}: n={} mean={:.4} p50={:.4} p95={:.4} p99={:.4}\n",
+                h.count(),
+                h.mean(),
+                h.percentile(50.0),
+                h.percentile(95.0),
+                h.percentile(99.0)
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_accumulates() {
+        let mut c = Counter::default();
+        c.add(2.5);
+        c.inc();
+        assert_eq!(c.get(), 3.5);
+    }
+
+    #[test]
+    fn peak_gauge_tracks_max() {
+        let mut g = PeakGauge::default();
+        g.set(5.0);
+        g.set(3.0);
+        g.add(1.0);
+        assert_eq!(g.get(), 4.0);
+        assert_eq!(g.peak(), 5.0);
+    }
+
+    #[test]
+    fn histogram_percentiles() {
+        let mut h = Histogram::default();
+        for i in 1..=100 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.mean() - 50.5).abs() < 1e-9);
+        assert!((h.percentile(50.0) - 50.0).abs() <= 1.0);
+        assert!((h.percentile(99.0) - 99.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn histogram_reservoir_under_pressure() {
+        let mut h = Histogram::with_capacity(100);
+        for i in 0..10_000 {
+            h.record((i % 100) as f64);
+        }
+        assert_eq!(h.count(), 10_000);
+        let p50 = h.percentile(50.0);
+        assert!(p50 > 20.0 && p50 < 80.0, "p50={p50}");
+    }
+
+    #[test]
+    fn registry_report() {
+        let mut r = Registry::default();
+        r.counter("kv_reads").add(10.0);
+        r.gauge("live_tokens").set(42.0);
+        r.histogram("step_ms").record(1.5);
+        let rep = r.report();
+        assert!(rep.contains("kv_reads"));
+        assert!(rep.contains("peak 42"));
+    }
+}

@@ -1,0 +1,334 @@
+//! Executable wrappers: literal plumbing for decode and prefill steps.
+//!
+//! PJRT 0.5.1's CPU client returns the executable's root tuple as a
+//! single tuple buffer (no untupling), so each call copies the output
+//! tuple to host once and decomposes it. Inputs are host literals; the
+//! parameter literals are built once (`Weights::literals`) and borrowed
+//! on every call, and the cache arrays are uploaded from the
+//! `CacheStore`'s flat layout without reshuffling.
+
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::manifest::ExeMeta;
+
+/// Decode-step outputs (flat host vectors, layouts in comments).
+pub struct DecodeOutputs {
+    /// f32[B, V]
+    pub logits: Vec<f32>,
+    /// f32[L, B, H, hd]
+    pub k_new: Vec<f32>,
+    /// f32[L, B, H, hd]
+    pub v_new: Vec<f32>,
+    /// f32[L, B, H]
+    pub alpha: Vec<f32>,
+    /// f32[L, B, H, S]
+    pub attn: Vec<f32>,
+    /// f32[L, B, H]
+    pub attn_self: Vec<f32>,
+    /// f32[L, B, H, P]
+    pub qsel: Vec<f32>,
+}
+
+/// Prefill-chunk outputs.
+pub struct PrefillOutputs {
+    /// f32[B, C, V]
+    pub logits: Vec<f32>,
+    /// f32[L, B, H, C, hd]
+    pub k_new: Vec<f32>,
+    /// f32[L, B, H, C, hd]
+    pub v_new: Vec<f32>,
+    /// f32[L, B, H, C]
+    pub alpha: Vec<f32>,
+}
+
+/// A compiled executable plus its export-time metadata.
+pub struct Executor {
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    pub meta: ExeMeta,
+}
+
+/// Typed input ordering for the buffered path.
+#[derive(Clone, Copy)]
+enum InputSlot {
+    F32(usize),
+    I32(usize),
+}
+
+fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    debug_assert_eq!(n, data.len());
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, bytes)
+        .map_err(|e| anyhow!("literal f32 {dims:?}: {e:?}"))
+}
+
+fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, dims, bytes)
+        .map_err(|e| anyhow!("literal i32 {dims:?}: {e:?}"))
+}
+
+/// Parameter set resident on device (uploaded once per variant; the
+/// §Perf-pass optimization that removes ~2.3 MB of per-step uploads).
+pub struct ParamBuffers {
+    pub buffers: Vec<xla::PjRtBuffer>,
+}
+
+impl ParamBuffers {
+    pub fn from_weights(
+        client: &xla::PjRtClient,
+        weights: &crate::runtime::Weights,
+    ) -> Result<Self> {
+        let mut buffers = Vec::new();
+        for lit in weights.literals() {
+            buffers.push(
+                client
+                    .buffer_from_host_literal(None, lit)
+                    .map_err(|e| anyhow!("param upload: {e:?}"))?,
+            );
+        }
+        Ok(Self { buffers })
+    }
+}
+
+impl Executor {
+    pub fn new(exe: Rc<xla::PjRtLoadedExecutable>, meta: ExeMeta) -> Self {
+        Self { exe, meta }
+    }
+
+    fn client(&self) -> &xla::PjRtClient {
+        self.exe.client()
+    }
+
+    fn run(&self, params: &[xla::Literal], inputs: Vec<xla::Literal>) -> Result<Vec<xla::Literal>> {
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(params.len() + inputs.len());
+        args.extend(params.iter());
+        args.extend(inputs.iter());
+        let outs = self
+            .exe
+            .execute::<&xla::Literal>(&args)
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let lit = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let parts = lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        Ok(parts)
+    }
+
+    /// Buffered execution: device-resident params + direct slice→device
+    /// uploads for the per-step inputs (no intermediate Literal).
+    fn run_buffered(
+        &self,
+        params: &ParamBuffers,
+        f32_inputs: &[(&[f32], &[usize])],
+        i32_inputs: &[(&[i32], &[usize])],
+        order: &[InputSlot],
+    ) -> Result<Vec<xla::Literal>> {
+        let client = self.client().clone();
+        let mut step_bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(order.len());
+        for slot in order {
+            let buf = match *slot {
+                InputSlot::F32(i) => {
+                    let (data, dims) = f32_inputs[i];
+                    client
+                        .buffer_from_host_buffer::<f32>(data, dims, None)
+                        .map_err(|e| anyhow!("f32 upload {dims:?}: {e:?}"))?
+                }
+                InputSlot::I32(i) => {
+                    let (data, dims) = i32_inputs[i];
+                    client
+                        .buffer_from_host_buffer::<i32>(data, dims, None)
+                        .map_err(|e| anyhow!("i32 upload {dims:?}: {e:?}"))?
+                }
+            };
+            step_bufs.push(buf);
+        }
+        let mut args: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(params.buffers.len() + step_bufs.len());
+        args.extend(params.buffers.iter());
+        args.extend(step_bufs.iter());
+        let outs = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(&args)
+            .map_err(|e| anyhow!("execute_b: {e:?}"))?;
+        let lit = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))
+    }
+
+    /// One decode step. Slice lengths must match the executable's
+    /// geometry (L·B·H·S·hd etc.); `quest_k ≥ pages` disables Quest.
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode(
+        &self,
+        params: &[xla::Literal],
+        k_cache: &[f32],
+        v_cache: &[f32],
+        tokens: &[i32],
+        positions: &[i32],
+        mask: &[f32],
+        pmin: &[f32],
+        pmax: &[f32],
+        quest_k: i32,
+        geom: &crate::kvcache::Geometry,
+    ) -> Result<DecodeOutputs> {
+        let (l, h, s, hd, p) = (
+            geom.layers,
+            geom.kv_heads,
+            geom.slots,
+            geom.head_dim,
+            geom.pages(),
+        );
+        let b = self.meta.batch;
+        if self.meta.kind != "decode" {
+            bail!("not a decode executable");
+        }
+        let inputs = vec![
+            lit_f32(k_cache, &[l, b, h, s, hd])?,
+            lit_f32(v_cache, &[l, b, h, s, hd])?,
+            lit_i32(tokens, &[b])?,
+            lit_i32(positions, &[b])?,
+            lit_f32(mask, &[l, b, h, s])?,
+            lit_f32(pmin, &[l, b, h, p, hd])?,
+            lit_f32(pmax, &[l, b, h, p, hd])?,
+            xla::Literal::scalar(quest_k),
+        ];
+        let parts = self.run(params, inputs)?;
+        if parts.len() != 7 {
+            bail!("decode returned {} outputs, expected 7", parts.len());
+        }
+        let mut it = parts.into_iter();
+        let take = |l: xla::Literal| -> Result<Vec<f32>> {
+            l.to_vec::<f32>().map_err(|e| anyhow!("output: {e:?}"))
+        };
+        Ok(DecodeOutputs {
+            logits: take(it.next().unwrap())?,
+            k_new: take(it.next().unwrap())?,
+            v_new: take(it.next().unwrap())?,
+            alpha: take(it.next().unwrap())?,
+            attn: take(it.next().unwrap())?,
+            attn_self: take(it.next().unwrap())?,
+            qsel: take(it.next().unwrap())?,
+        })
+    }
+
+    /// Buffered variant of [`Executor::decode`] (see `run_buffered`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode_buffered(
+        &self,
+        params: &ParamBuffers,
+        k_cache: &[f32],
+        v_cache: &[f32],
+        tokens: &[i32],
+        positions: &[i32],
+        mask: &[f32],
+        pmin: &[f32],
+        pmax: &[f32],
+        quest_k: i32,
+        geom: &crate::kvcache::Geometry,
+    ) -> Result<DecodeOutputs> {
+        let (l, h, s, hd, p) = (
+            geom.layers,
+            geom.kv_heads,
+            geom.slots,
+            geom.head_dim,
+            geom.pages(),
+        );
+        let b = self.meta.batch;
+        if self.meta.kind != "decode" {
+            bail!("not a decode executable");
+        }
+        let kv_dims = [l, b, h, s, hd];
+        let mask_dims = [l, b, h, s];
+        let pg_dims = [l, b, h, p, hd];
+        let b_dims = [b];
+        let scalar: [usize; 0] = [];
+        let qk = [quest_k];
+        let f32_inputs: [(&[f32], &[usize]); 5] = [
+            (k_cache, &kv_dims),
+            (v_cache, &kv_dims),
+            (mask, &mask_dims),
+            (pmin, &pg_dims),
+            (pmax, &pg_dims),
+        ];
+        let i32_inputs: [(&[i32], &[usize]); 3] =
+            [(tokens, &b_dims), (positions, &b_dims), (&qk, &scalar)];
+        let order = [
+            InputSlot::F32(0),
+            InputSlot::F32(1),
+            InputSlot::I32(0),
+            InputSlot::I32(1),
+            InputSlot::F32(2),
+            InputSlot::F32(3),
+            InputSlot::F32(4),
+            InputSlot::I32(2),
+        ];
+        let parts = self.run_buffered(params, &f32_inputs, &i32_inputs, &order)?;
+        if parts.len() != 7 {
+            bail!("decode returned {} outputs, expected 7", parts.len());
+        }
+        let mut it = parts.into_iter();
+        let take = |l: xla::Literal| -> Result<Vec<f32>> {
+            l.to_vec::<f32>().map_err(|e| anyhow!("output: {e:?}"))
+        };
+        Ok(DecodeOutputs {
+            logits: take(it.next().unwrap())?,
+            k_new: take(it.next().unwrap())?,
+            v_new: take(it.next().unwrap())?,
+            alpha: take(it.next().unwrap())?,
+            attn: take(it.next().unwrap())?,
+            attn_self: take(it.next().unwrap())?,
+            qsel: take(it.next().unwrap())?,
+        })
+    }
+
+    /// One prefill chunk (C tokens per lane; pad with valid = 0).
+    #[allow(clippy::too_many_arguments)]
+    pub fn prefill(
+        &self,
+        params: &[xla::Literal],
+        k_cache: &[f32],
+        v_cache: &[f32],
+        cache_mask: &[f32],
+        tokens: &[i32],
+        positions: &[i32],
+        valid: &[f32],
+        geom: &crate::kvcache::Geometry,
+    ) -> Result<PrefillOutputs> {
+        let (l, h, s, hd) = (geom.layers, geom.kv_heads, geom.slots, geom.head_dim);
+        let b = self.meta.batch;
+        let c = self.meta.chunk;
+        if self.meta.kind != "prefill" {
+            bail!("not a prefill executable");
+        }
+        let inputs = vec![
+            lit_f32(k_cache, &[l, b, h, s, hd])?,
+            lit_f32(v_cache, &[l, b, h, s, hd])?,
+            lit_f32(cache_mask, &[l, b, h, s])?,
+            lit_i32(tokens, &[b, c])?,
+            lit_i32(positions, &[b, c])?,
+            lit_f32(valid, &[b, c])?,
+        ];
+        let parts = self.run(params, inputs)?;
+        if parts.len() != 4 {
+            bail!("prefill returned {} outputs, expected 4", parts.len());
+        }
+        let mut it = parts.into_iter();
+        let take = |l: xla::Literal| -> Result<Vec<f32>> {
+            l.to_vec::<f32>().map_err(|e| anyhow!("output: {e:?}"))
+        };
+        Ok(PrefillOutputs {
+            logits: take(it.next().unwrap())?,
+            k_new: take(it.next().unwrap())?,
+            v_new: take(it.next().unwrap())?,
+            alpha: take(it.next().unwrap())?,
+        })
+    }
+}

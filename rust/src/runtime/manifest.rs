@@ -1,0 +1,194 @@
+//! `artifacts/manifest.json` schema (written by `python/compile/aot.py`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::Json;
+
+/// Model geometry recorded at export time.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_q_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub max_pos: usize,
+    pub page_size: usize,
+}
+
+/// One exported executable.
+#[derive(Clone, Debug)]
+pub struct ExeMeta {
+    pub kind: String, // "decode" | "prefill"
+    pub file: String,
+    pub batch: usize,
+    pub slots: usize,
+    pub pages: usize,         // decode only
+    pub chunk: usize,         // prefill only
+    pub pallas: bool,
+    pub window: Option<usize>, // prefill: baked DMS window
+    pub immediate: Option<bool>,
+    pub dms: Option<bool>,
+}
+
+/// One model variant (weights + retrofit metadata).
+#[derive(Clone, Debug)]
+pub struct VariantMeta {
+    pub weights: String,
+    pub alpha_mode: String,
+    pub window: usize,
+    pub immediate: bool,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub config: ModelConfig,
+    pub param_order: Vec<String>,
+    pub vocab: Vec<String>,
+    pub pad_id: u32,
+    pub bos_id: u32,
+    pub eos_id: u32,
+    pub variants: BTreeMap<String, VariantMeta>,
+    pub executables: BTreeMap<String, ExeMeta>,
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize> {
+    j.req(key)?
+        .as_usize()
+        .ok_or_else(|| anyhow!("'{key}' must be a number"))
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let j = Json::parse_file(path)?;
+        let c = j.req("config")?;
+        let config = ModelConfig {
+            vocab: req_usize(c, "vocab")?,
+            d_model: req_usize(c, "d_model")?,
+            n_layers: req_usize(c, "n_layers")?,
+            n_q_heads: req_usize(c, "n_q_heads")?,
+            n_kv_heads: req_usize(c, "n_kv_heads")?,
+            head_dim: req_usize(c, "head_dim")?,
+            d_ff: req_usize(c, "d_ff")?,
+            max_pos: req_usize(c, "max_pos")?,
+            page_size: req_usize(c, "page_size")?,
+        };
+        let param_order = j
+            .req("param_order")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("param_order must be an array"))?
+            .iter()
+            .map(|v| v.as_str().unwrap_or("").to_string())
+            .collect();
+        let vocab: Vec<String> = j
+            .req("vocab")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("vocab must be an array"))?
+            .iter()
+            .map(|v| v.as_str().unwrap_or("").to_string())
+            .collect();
+        let specials = j.req("specials")?;
+        let mut variants = BTreeMap::new();
+        for (name, v) in j.req("variants")?.as_obj().unwrap_or(&[]) {
+            variants.insert(
+                name.clone(),
+                VariantMeta {
+                    weights: v.req("weights")?.as_str().unwrap_or("").to_string(),
+                    alpha_mode: v
+                        .req("alpha_mode")?
+                        .as_str()
+                        .unwrap_or("off")
+                        .to_string(),
+                    window: req_usize(v, "window")?,
+                    immediate: v
+                        .get("immediate")
+                        .and_then(Json::as_bool)
+                        .unwrap_or(false),
+                },
+            );
+        }
+        let mut executables = BTreeMap::new();
+        for (name, e) in j.req("executables")?.as_obj().unwrap_or(&[]) {
+            executables.insert(
+                name.clone(),
+                ExeMeta {
+                    kind: e.req("kind")?.as_str().unwrap_or("").to_string(),
+                    file: e.req("file")?.as_str().unwrap_or("").to_string(),
+                    batch: req_usize(e, "batch")?,
+                    slots: e.get("slots").and_then(Json::as_usize).unwrap_or(0),
+                    pages: e.get("pages").and_then(Json::as_usize).unwrap_or(0),
+                    chunk: e.get("chunk").and_then(Json::as_usize).unwrap_or(0),
+                    pallas: e.get("pallas").and_then(Json::as_bool).unwrap_or(true),
+                    window: e.get("window").and_then(Json::as_usize),
+                    immediate: e.get("immediate").and_then(Json::as_bool),
+                    dms: e.get("dms").and_then(Json::as_bool),
+                },
+            );
+        }
+        Ok(Self {
+            config,
+            param_order,
+            vocab,
+            pad_id: req_usize(specials, "pad")? as u32,
+            bos_id: req_usize(specials, "bos")? as u32,
+            eos_id: req_usize(specials, "eos")? as u32,
+            variants,
+            executables,
+        })
+    }
+
+    pub fn cache_geometry(&self, slots: usize) -> crate::kvcache::Geometry {
+        crate::kvcache::Geometry {
+            layers: self.config.n_layers,
+            kv_heads: self.config.n_kv_heads,
+            slots,
+            head_dim: self.config.head_dim,
+            page_size: self.config.page_size,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn sample_manifest() -> String {
+        r#"{
+          "config": {"vocab":64,"d_model":128,"n_layers":4,"n_q_heads":8,
+                     "n_kv_heads":2,"head_dim":16,"d_ff":256,"max_pos":512,
+                     "rope_base":10000.0,"page_size":16},
+          "param_order": ["embed","ln_f","lm_head"],
+          "vocab": ["<pad>","<bos>","<eos>","0"],
+          "specials": {"pad":0,"bos":1,"eos":2},
+          "variants": {"base":{"weights":"weights_base.bin",
+                       "alpha_mode":"off","window":16,"immediate":false}},
+          "executables": {"decode_b8_s320":{"kind":"decode","batch":8,
+                          "slots":320,"pages":20,"pallas":true,
+                          "file":"decode_b8_s320.hlo.txt"}}
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_sample() {
+        let dir = std::env::temp_dir().join("hs_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("manifest.json");
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(sample_manifest().as_bytes()).unwrap();
+        let m = Manifest::load(&path).unwrap();
+        assert_eq!(m.config.n_layers, 4);
+        assert_eq!(m.config.page_size, 16);
+        assert_eq!(m.pad_id, 0);
+        assert_eq!(m.variants["base"].alpha_mode, "off");
+        assert_eq!(m.executables["decode_b8_s320"].slots, 320);
+        let g = m.cache_geometry(320);
+        assert_eq!(g.pages(), 20);
+    }
+}

@@ -1,0 +1,141 @@
+//! PJRT runtime: artifact manifest, weight loading, executable wrappers.
+//!
+//! The interchange format is HLO **text** (see DESIGN.md §5 and
+//! `python/compile/aot.py`): `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `PjRtClient::compile`. Weights are
+//! executable *inputs*: loaded once from `weights_<variant>.bin` into
+//! `Literal`s and passed by reference on every call.
+
+mod executor;
+mod manifest;
+mod weights;
+
+pub use executor::{DecodeOutputs, Executor, ParamBuffers, PrefillOutputs};
+pub use manifest::{ExeMeta, Manifest, ModelConfig, VariantMeta};
+pub use weights::Weights;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, Context, Result};
+
+/// Handle to the PJRT client plus the artifact set.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    artifacts: PathBuf,
+    compiled: std::cell::RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    weights: std::cell::RefCell<HashMap<String, Rc<Weights>>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the manifest.
+    pub fn open(artifacts: &Path) -> Result<Self> {
+        let manifest = Manifest::load(&artifacts.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", artifacts.display()))?;
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Self {
+            client,
+            manifest,
+            artifacts: artifacts.to_path_buf(),
+            compiled: Default::default(),
+            weights: Default::default(),
+        })
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts
+    }
+
+    /// Compile (and cache) an executable by manifest name.
+    pub fn load_executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.compiled.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let meta = self
+            .manifest
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("executable '{name}' not in manifest"))?;
+        let path = self.artifacts.join("hlo").join(&meta.file);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        crate::debug!("compiled {name} in {:.2}s", t0.elapsed().as_secs_f64());
+        let exe = Rc::new(exe);
+        self.compiled
+            .borrow_mut()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Load (and cache) the weights for a model variant, ordered per the
+    /// manifest's `param_order`.
+    pub fn load_weights(&self, variant: &str) -> Result<Rc<Weights>> {
+        if let Some(w) = self.weights.borrow().get(variant) {
+            return Ok(w.clone());
+        }
+        let vmeta = self
+            .manifest
+            .variants
+            .get(variant)
+            .ok_or_else(|| anyhow!("variant '{variant}' not in manifest"))?;
+        let path = self.artifacts.join(&vmeta.weights);
+        let w = Weights::load(&path, &self.manifest.param_order)?;
+        let w = Rc::new(w);
+        self.weights
+            .borrow_mut()
+            .insert(variant.to_string(), w.clone());
+        Ok(w)
+    }
+
+    /// Pick the decode executable name for (batch, slots, pallas/jnp).
+    pub fn decode_exe_name(&self, batch: usize, slots: usize, jnp: bool) -> Result<String> {
+        let want_pallas = !jnp;
+        for (name, meta) in &self.manifest.executables {
+            if meta.kind == "decode"
+                && meta.batch == batch
+                && meta.slots == slots
+                && meta.pallas == want_pallas
+            {
+                return Ok(name.clone());
+            }
+        }
+        Err(anyhow!(
+            "no decode executable for batch={batch} slots={slots} jnp={jnp}"
+        ))
+    }
+
+    /// Pick the prefill executable for a variant's DMS flavour.
+    pub fn prefill_exe_name(
+        &self,
+        batch: usize,
+        slots: usize,
+        window: usize,
+        immediate: bool,
+        dms: bool,
+    ) -> Result<String> {
+        for (name, meta) in &self.manifest.executables {
+            if meta.kind == "prefill"
+                && meta.batch == batch
+                && meta.slots == slots
+                && meta.dms == Some(dms)
+                && (!dms
+                    || (meta.window == Some(window) && meta.immediate == Some(immediate)))
+            {
+                return Ok(name.clone());
+            }
+        }
+        Err(anyhow!(
+            "no prefill executable for batch={batch} slots={slots} window={window} \
+             immediate={immediate} dms={dms}"
+        ))
+    }
+}

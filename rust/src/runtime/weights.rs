@@ -1,0 +1,103 @@
+//! `.bin` weight checkpoints (format defined in `aot.py::save_bin`):
+//! `[u32 header_len][JSON header][raw little-endian f32 payload]`.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::Json;
+
+/// One loaded tensor.
+#[derive(Debug)]
+pub struct Tensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+/// The full parameter set of a model variant, with `Literal`s prepared
+/// in `param_order` for direct use as leading executable inputs.
+pub struct Weights {
+    pub tensors: Vec<Tensor>,
+    literals: Vec<xla::Literal>,
+}
+
+impl Weights {
+    pub fn load(path: &Path, param_order: &[String]) -> Result<Self> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| anyhow!("read {}: {e}", path.display()))?;
+        if bytes.len() < 4 {
+            bail!("weight file too short");
+        }
+        let header_len = u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize;
+        let header_end = 4 + header_len;
+        if bytes.len() < header_end {
+            bail!("weight header truncated");
+        }
+        let header = Json::parse(std::str::from_utf8(&bytes[4..header_end])?)?;
+        let payload = &bytes[header_end..];
+
+        let mut tensors = Vec::new();
+        for t in header
+            .req("tensors")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("tensors must be an array"))?
+        {
+            let name = t.req("name")?.as_str().unwrap_or("").to_string();
+            let shape: Vec<usize> = t
+                .req("shape")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect();
+            let offset = t.req("offset")?.as_usize().unwrap_or(0);
+            let n: usize = shape.iter().product::<usize>().max(1);
+            let end = offset + n * 4;
+            if end > payload.len() {
+                bail!("tensor '{name}' exceeds payload");
+            }
+            let mut data = vec![0f32; n];
+            for (i, chunk) in payload[offset..end].chunks_exact(4).enumerate() {
+                data[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+            }
+            tensors.push(Tensor { name, shape, data });
+        }
+
+        // order tensors per param_order and build literals once
+        let mut ordered = Vec::with_capacity(param_order.len());
+        for name in param_order {
+            let idx = tensors
+                .iter()
+                .position(|t| &t.name == name)
+                .ok_or_else(|| anyhow!("missing parameter '{name}'"))?;
+            ordered.push(idx);
+        }
+        let mut literals = Vec::with_capacity(ordered.len());
+        for &idx in &ordered {
+            let t = &tensors[idx];
+            let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(&t.data)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape {}: {e:?}", t.name))?;
+            literals.push(lit);
+        }
+        Ok(Self { tensors, literals })
+    }
+
+    /// Parameter literals in executable-input order.
+    pub fn literals(&self) -> &[xla::Literal] {
+        &self.literals
+    }
+
+    pub fn tensor(&self, name: &str) -> Option<&Tensor> {
+        self.tensors.iter().find(|t| t.name == name)
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.tensors
+            .iter()
+            .map(|t| t.shape.iter().product::<usize>())
+            .sum()
+    }
+}

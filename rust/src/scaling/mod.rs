@@ -1,0 +1,6 @@
+//! Inference-time scaling machinery: the L-W-CR budget controller and
+//! Pareto-frontier analysis (paper §5.1, App. E).
+
+pub mod pareto;
+
+pub use pareto::{frontier, margin, Frontier, ScalePoint};

@@ -1,0 +1,183 @@
+//! Pareto frontiers over (budget, accuracy) points and the App. E
+//! average-margin integral:
+//!
+//!   margin(A, B) = ∫_{x ∈ I} (A(x) − B(x)) dx / |I|
+//!
+//! where A(x), B(x) are the piecewise-linear interpolations of the two
+//! frontiers and I is the largest budget interval both cover.
+
+/// One measured scaling configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScalePoint {
+    /// Budget (KV reads or peak tokens — x axis).
+    pub budget: f64,
+    /// Accuracy in [0, 1] (y axis).
+    pub accuracy: f64,
+    /// L-W-CR label for annotation.
+    pub label: String,
+}
+
+/// A Pareto frontier: budget-ascending, accuracy-ascending points.
+#[derive(Clone, Debug, Default)]
+pub struct Frontier {
+    pub points: Vec<ScalePoint>,
+}
+
+/// Extract the Pareto frontier (max accuracy for min budget) from a
+/// point cloud: a point survives iff no other point has ≤ budget and
+/// > accuracy.
+pub fn frontier(points: &[ScalePoint]) -> Frontier {
+    let mut sorted: Vec<&ScalePoint> = points.iter().collect();
+    sorted.sort_by(|a, b| {
+        a.budget
+            .partial_cmp(&b.budget)
+            .unwrap()
+            .then(b.accuracy.partial_cmp(&a.accuracy).unwrap())
+    });
+    let mut out: Vec<ScalePoint> = Vec::new();
+    let mut best = f64::NEG_INFINITY;
+    for p in sorted {
+        // keep weakly-dominated ties: a flat terminal segment extends
+        // the frontier's budget range, which the App. E margin integral
+        // relies on (accuracy never decreases with more budget).
+        if p.accuracy > best {
+            best = p.accuracy;
+            out.push(p.clone());
+        } else if p.accuracy == best
+            && out.last().map(|q| p.budget > q.budget).unwrap_or(false)
+        {
+            out.push(p.clone());
+        }
+    }
+    Frontier { points: out }
+}
+
+impl Frontier {
+    /// Interpolated accuracy at `budget` (linear between frontier
+    /// points; clamped at the ends). None outside the covered range.
+    pub fn at(&self, budget: f64) -> Option<f64> {
+        let pts = &self.points;
+        if pts.is_empty() || budget < pts[0].budget || budget > pts[pts.len() - 1].budget
+        {
+            return None;
+        }
+        let mut prev = &pts[0];
+        for p in pts.iter().skip(1) {
+            if budget <= p.budget {
+                let span = p.budget - prev.budget;
+                if span <= 0.0 {
+                    return Some(p.accuracy.max(prev.accuracy));
+                }
+                let t = (budget - prev.budget) / span;
+                return Some(prev.accuracy + t * (p.accuracy - prev.accuracy));
+            }
+            prev = p;
+        }
+        Some(pts[pts.len() - 1].accuracy)
+    }
+
+    pub fn budget_range(&self) -> Option<(f64, f64)> {
+        if self.points.is_empty() {
+            None
+        } else {
+            Some((
+                self.points[0].budget,
+                self.points[self.points.len() - 1].budget,
+            ))
+        }
+    }
+}
+
+/// App. E average margin of frontier `a` over frontier `b` on their
+/// common budget interval (trapezoid integration over the union of
+/// both frontiers' knots). None when the projections are disjoint
+/// (the paper's "NA" cells).
+pub fn margin(a: &Frontier, b: &Frontier) -> Option<f64> {
+    let (a_lo, a_hi) = a.budget_range()?;
+    let (b_lo, b_hi) = b.budget_range()?;
+    let lo = a_lo.max(b_lo);
+    let hi = a_hi.min(b_hi);
+    if hi <= lo {
+        return None;
+    }
+    // knots: both frontiers' budgets inside [lo, hi] plus the ends
+    let mut xs: Vec<f64> = vec![lo, hi];
+    for p in a.points.iter().chain(&b.points) {
+        if p.budget > lo && p.budget < hi {
+            xs.push(p.budget);
+        }
+    }
+    xs.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    xs.dedup();
+    let mut integral = 0.0;
+    for w in xs.windows(2) {
+        let (x0, x1) = (w[0], w[1]);
+        let d0 = a.at(x0)? - b.at(x0)?;
+        let d1 = a.at(x1)? - b.at(x1)?;
+        integral += 0.5 * (d0 + d1) * (x1 - x0);
+    }
+    Some(integral / (hi - lo))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(budget: f64, acc: f64) -> ScalePoint {
+        ScalePoint {
+            budget,
+            accuracy: acc,
+            label: String::new(),
+        }
+    }
+
+    #[test]
+    fn frontier_removes_dominated() {
+        let cloud = vec![pt(1.0, 0.3), pt(2.0, 0.2), pt(2.0, 0.5), pt(3.0, 0.4)];
+        let f = frontier(&cloud);
+        // (2.0, 0.2) and (3.0, 0.4) are dominated
+        assert_eq!(f.points.len(), 2);
+        assert_eq!(f.points[0].accuracy, 0.3);
+        assert_eq!(f.points[1].accuracy, 0.5);
+    }
+
+    #[test]
+    fn interpolation_is_linear() {
+        let f = frontier(&[pt(0.0, 0.0), pt(10.0, 1.0)]);
+        assert_eq!(f.at(5.0), Some(0.5));
+        assert_eq!(f.at(0.0), Some(0.0));
+        assert_eq!(f.at(10.0), Some(1.0));
+        assert_eq!(f.at(11.0), None);
+    }
+
+    #[test]
+    fn margin_constant_gap() {
+        let a = frontier(&[pt(0.0, 0.6), pt(10.0, 0.8)]);
+        let b = frontier(&[pt(0.0, 0.4), pt(10.0, 0.6)]);
+        let m = margin(&a, &b).unwrap();
+        assert!((m - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn margin_on_partial_overlap() {
+        let a = frontier(&[pt(5.0, 1.0), pt(20.0, 1.0)]);
+        let b = frontier(&[pt(0.0, 0.5), pt(10.0, 0.5)]);
+        // common interval [5, 10]; constant gap 0.5
+        let m = margin(&a, &b).unwrap();
+        assert!((m - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn margin_disjoint_is_none() {
+        let a = frontier(&[pt(0.0, 1.0), pt(1.0, 1.0)]);
+        let b = frontier(&[pt(5.0, 0.5), pt(6.0, 0.5)]);
+        assert!(margin(&a, &b).is_none());
+    }
+
+    #[test]
+    fn margin_can_be_negative() {
+        let a = frontier(&[pt(0.0, 0.2), pt(10.0, 0.4)]);
+        let b = frontier(&[pt(0.0, 0.5), pt(10.0, 0.7)]);
+        assert!(margin(&a, &b).unwrap() < 0.0);
+    }
+}

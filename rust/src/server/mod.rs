@@ -1,0 +1,201 @@
+//! TCP line-JSON serving front end.
+//!
+//! Protocol: one JSON object per line.
+//!
+//! Request:  {"id": 1, "prompt": "Q:1+2=?\nT:", "width": 4,
+//!            "max_len": 160, "temperature": 0.7}
+//! Response: {"id": 1, "texts": [...], "answer": "3",
+//!            "reads": 1234.5, "peak_tokens": 88.0, "latency_ms": 42.1}
+//! Control:  {"cmd": "stats"} → metrics dump; {"cmd": "shutdown"}.
+//!
+//! Networking runs on std threads: an acceptor thread per listener and
+//! one engine thread owning the (non-Send) PJRT state; requests flow
+//! through mpsc channels (the offline environment has no tokio).
+
+pub mod protocol;
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::EngineConfig;
+use crate::engine::{majority_vote, Engine, GenRequest};
+use crate::util::Json;
+
+pub use protocol::{parse_request, render_response, ServeRequest, ServeResponse};
+
+enum Msg {
+    Request(ServeRequest, mpsc::Sender<String>),
+    Stats(mpsc::Sender<String>),
+    Shutdown,
+}
+
+/// Run the server until a shutdown command arrives. Binds `addr`
+/// (e.g. "127.0.0.1:7333").
+pub fn serve(cfg: EngineConfig, addr: &str) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    crate::info!("serving on {addr}");
+    let (tx, rx) = mpsc::channel::<Msg>();
+
+    // acceptor thread: parses lines, forwards to the engine thread
+    let atx = tx.clone();
+    let acceptor = std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(stream) = stream else { continue };
+            let tx = atx.clone();
+            std::thread::spawn(move || {
+                let _ = handle_client(stream, tx);
+            });
+        }
+    });
+
+    // engine loop (owns the PJRT client; must stay on this thread)
+    let mut engine = Engine::new(cfg)?;
+    loop {
+        match rx.recv() {
+            Ok(Msg::Request(req, reply)) => {
+                let t0 = Instant::now();
+                let resp = match run_request(&mut engine, &req) {
+                    Ok(mut r) => {
+                        r.latency_ms = t0.elapsed().as_secs_f64() * 1e3;
+                        r
+                    }
+                    Err(e) => ServeResponse::error(req.id, &format!("{e:#}")),
+                };
+                let _ = reply.send(render_response(&resp));
+            }
+            Ok(Msg::Stats(reply)) => {
+                let _ = reply.send(
+                    Json::obj()
+                        .set("metrics", engine.metrics.report())
+                        .to_string(),
+                );
+            }
+            Ok(Msg::Shutdown) | Err(_) => break,
+        }
+    }
+    drop(acceptor);
+    Ok(())
+}
+
+fn run_request(engine: &mut Engine, req: &ServeRequest) -> Result<ServeResponse> {
+    let (results, _) = engine.run(&[GenRequest {
+        prompt: req.prompt.clone(),
+        width: req.width,
+        max_len: req.max_len,
+        temperature: req.temperature,
+        seed: req.seed,
+    }])?;
+    let res = &results[0];
+    let texts: Vec<String> = res.chains.iter().map(|c| c.text.clone()).collect();
+    let refs: Vec<&str> = texts.iter().map(|s| s.as_str()).collect();
+    let vote = majority_vote(&refs);
+    Ok(ServeResponse {
+        id: req.id,
+        texts,
+        answer: vote.answer,
+        reads: res.total_reads(),
+        peak_tokens: res.total_peak_tokens(),
+        latency_ms: 0.0,
+        error: None,
+    })
+}
+
+fn handle_client(stream: TcpStream, tx: mpsc::Sender<Msg>) -> Result<()> {
+    let peer = stream.peer_addr()?;
+    crate::debug!("client {peer}");
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let json = match Json::parse(&line) {
+            Ok(j) => j,
+            Err(e) => {
+                writeln!(
+                    writer,
+                    "{}",
+                    Json::obj().set("error", format!("bad json: {e}")).to_string()
+                )?;
+                continue;
+            }
+        };
+        if let Some(cmd) = json.get("cmd").and_then(Json::as_str) {
+            match cmd {
+                "shutdown" => {
+                    let _ = tx.send(Msg::Shutdown);
+                    writeln!(writer, "{}", Json::obj().set("ok", true).to_string())?;
+                    return Ok(());
+                }
+                "stats" => {
+                    let (rtx, rrx) = mpsc::channel();
+                    tx.send(Msg::Stats(rtx)).ok();
+                    if let Ok(s) = rrx.recv() {
+                        writeln!(writer, "{s}")?;
+                    }
+                    continue;
+                }
+                other => {
+                    writeln!(
+                        writer,
+                        "{}",
+                        Json::obj()
+                            .set("error", format!("unknown cmd '{other}'"))
+                            .to_string()
+                    )?;
+                    continue;
+                }
+            }
+        }
+        match parse_request(&json) {
+            Ok(req) => {
+                let (rtx, rrx) = mpsc::channel();
+                tx.send(Msg::Request(req, rtx)).ok();
+                if let Ok(s) = rrx.recv() {
+                    writeln!(writer, "{s}")?;
+                }
+            }
+            Err(e) => {
+                writeln!(
+                    writer,
+                    "{}",
+                    Json::obj().set("error", format!("{e:#}")).to_string()
+                )?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Minimal blocking client for tests, benches, and examples.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        Ok(Self {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+        })
+    }
+
+    pub fn call(&mut self, req: &Json) -> Result<Json> {
+        writeln!(self.writer, "{}", req.to_string())?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Ok(Json::parse(&line)?)
+    }
+
+    pub fn shutdown(&mut self) -> Result<()> {
+        writeln!(self.writer, "{}", Json::obj().set("cmd", "shutdown").to_string())?;
+        Ok(())
+    }
+}

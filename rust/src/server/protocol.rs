@@ -1,0 +1,136 @@
+//! Line-JSON protocol types.
+
+use anyhow::{anyhow, Result};
+
+use crate::util::Json;
+
+/// Parsed generation request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeRequest {
+    pub id: u64,
+    pub prompt: String,
+    pub width: usize,
+    pub max_len: usize,
+    pub temperature: f64,
+    pub seed: u64,
+}
+
+/// Response payload.
+#[derive(Clone, Debug)]
+pub struct ServeResponse {
+    pub id: u64,
+    pub texts: Vec<String>,
+    pub answer: Option<String>,
+    pub reads: f64,
+    pub peak_tokens: f64,
+    pub latency_ms: f64,
+    pub error: Option<String>,
+}
+
+impl ServeResponse {
+    pub fn error(id: u64, msg: &str) -> Self {
+        Self {
+            id,
+            texts: Vec::new(),
+            answer: None,
+            reads: 0.0,
+            peak_tokens: 0.0,
+            latency_ms: 0.0,
+            error: Some(msg.to_string()),
+        }
+    }
+}
+
+pub fn parse_request(j: &Json) -> Result<ServeRequest> {
+    Ok(ServeRequest {
+        id: j.get("id").and_then(Json::as_i64).unwrap_or(0) as u64,
+        prompt: j
+            .req("prompt")?
+            .as_str()
+            .ok_or_else(|| anyhow!("prompt must be a string"))?
+            .to_string(),
+        width: j.get("width").and_then(Json::as_usize).unwrap_or(1).max(1),
+        max_len: j.get("max_len").and_then(Json::as_usize).unwrap_or(160),
+        temperature: j
+            .get("temperature")
+            .and_then(|x| x.as_f64())
+            .unwrap_or(0.7),
+        seed: j.get("seed").and_then(Json::as_i64).unwrap_or(0) as u64,
+    })
+}
+
+pub fn render_response(r: &ServeResponse) -> String {
+    let mut j = Json::obj().set("id", r.id);
+    if let Some(err) = &r.error {
+        return j.set("error", err.as_str()).to_string();
+    }
+    j = j.set(
+        "texts",
+        Json::Arr(r.texts.iter().map(|t| Json::Str(t.clone())).collect()),
+    );
+    j = match &r.answer {
+        Some(a) => j.set("answer", a.as_str()),
+        None => j.set("answer", Json::Null),
+    };
+    j.set("reads", r.reads)
+        .set("peak_tokens", r.peak_tokens)
+        .set("latency_ms", r.latency_ms)
+        .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_request() {
+        let j = Json::parse(
+            r#"{"id": 7, "prompt": "Q:1+1=?\nT:", "width": 4,
+                "max_len": 96, "temperature": 0.5, "seed": 9}"#,
+        )
+        .unwrap();
+        let r = parse_request(&j).unwrap();
+        assert_eq!(r.id, 7);
+        assert_eq!(r.width, 4);
+        assert_eq!(r.max_len, 96);
+        assert_eq!(r.prompt, "Q:1+1=?\nT:");
+    }
+
+    #[test]
+    fn defaults_applied() {
+        let j = Json::parse(r#"{"prompt": "x"}"#).unwrap();
+        let r = parse_request(&j).unwrap();
+        assert_eq!(r.width, 1);
+        assert_eq!(r.max_len, 160);
+    }
+
+    #[test]
+    fn missing_prompt_errors() {
+        let j = Json::parse(r#"{"id": 1}"#).unwrap();
+        assert!(parse_request(&j).is_err());
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let r = ServeResponse {
+            id: 3,
+            texts: vec!["A:4\n".into()],
+            answer: Some("4".into()),
+            reads: 120.5,
+            peak_tokens: 33.0,
+            latency_ms: 12.0,
+            error: None,
+        };
+        let s = render_response(&r);
+        let j = Json::parse(&s).unwrap();
+        assert_eq!(j.get("answer").unwrap().as_str(), Some("4"));
+        assert_eq!(j.get("reads").unwrap().as_f64(), Some(120.5));
+    }
+
+    #[test]
+    fn error_response() {
+        let r = ServeResponse::error(1, "boom");
+        let j = Json::parse(&render_response(&r)).unwrap();
+        assert_eq!(j.get("error").unwrap().as_str(), Some("boom"));
+    }
+}

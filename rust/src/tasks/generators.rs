@@ -1,0 +1,253 @@
+//! Problem generators. Every RNG call must mirror
+//! `python/compile/tasks.py` exactly (same order, same modulus) so both
+//! languages generate identical problems from identical seeds.
+
+use super::Problem;
+use crate::util::SplitMix64;
+
+const OPS: [char; 3] = ['+', '-', '*'];
+
+fn apply(op: char, a: i64, b: i64) -> i64 {
+    match op {
+        '+' => (a + b).rem_euclid(10),
+        '-' => (a - b).rem_euclid(10),
+        _ => (a * b).rem_euclid(10),
+    }
+}
+
+/// Modular-arithmetic chain-of-thought (MATH 500 / AIME 24 analog).
+pub fn gen_arith(rng: &mut SplitMix64, n_ops: usize) -> Problem {
+    let mut vals = vec![rng.below(10) as i64];
+    let mut ops = Vec::with_capacity(n_ops);
+    for _ in 0..n_ops {
+        ops.push(OPS[rng.below(3)]);
+        vals.push(rng.below(10) as i64);
+    }
+    let mut expr = vals[0].to_string();
+    for (o, v) in ops.iter().zip(&vals[1..]) {
+        expr.push(*o);
+        expr.push_str(&v.to_string());
+    }
+    let mut acc = vals[0];
+    let mut steps = Vec::with_capacity(n_ops);
+    for (o, v) in ops.iter().zip(&vals[1..]) {
+        let nxt = apply(*o, acc, *v);
+        steps.push(format!("{acc}{o}{v}={nxt}"));
+        acc = nxt;
+    }
+    Problem {
+        task: "arith".into(),
+        prompt: format!("Q:{expr}=?\nT:"),
+        solution: format!("{} A:{acc}\n", steps.join(" ")),
+        answer: acc.to_string(),
+    }
+}
+
+/// 4-choice MCQ over an arithmetic chain (GPQA Diamond analog).
+pub fn gen_mcq(rng: &mut SplitMix64, n_ops: usize) -> Problem {
+    let base = gen_arith(rng, n_ops);
+    let correct: i64 = base.answer.parse().unwrap();
+    let mut opts = vec![correct];
+    while opts.len() < 4 {
+        let d = rng.below(10) as i64;
+        if !opts.contains(&d) {
+            opts.push(d);
+        }
+    }
+    // deterministic Fisher–Yates, same iteration order as Python
+    for i in (1..=3usize).rev() {
+        let j = rng.below(i + 1);
+        opts.swap(i, j);
+    }
+    let letters = ['A', 'B', 'C', 'D'];
+    let pos = opts.iter().position(|&o| o == correct).unwrap();
+    let letter = letters[pos];
+    // strip "Q:" and "=?\nT:" from the arithmetic prompt
+    let expr = &base.prompt[2..base.prompt.len() - 5];
+    let opt_str = letters
+        .iter()
+        .zip(&opts)
+        .map(|(l, o)| format!("{l}:{o}"))
+        .collect::<Vec<_>>()
+        .join(" ");
+    let steps = &base.solution[..base.solution.rfind(" A:").unwrap()];
+    Problem {
+        task: "mcq".into(),
+        prompt: format!("Q:{expr}=? {opt_str}\nT:"),
+        solution: format!("{steps} A:{letter}\n"),
+        answer: letter.to_string(),
+    }
+}
+
+const CODE_OPS: [&str; 3] = ["ADD", "MUL", "SUB"];
+
+/// Stack-machine trace task (LiveCodeBench analog, scored pass@all).
+pub fn gen_code(rng: &mut SplitMix64, n_instr: usize) -> Problem {
+    let mut instrs: Vec<String> = Vec::with_capacity(n_instr);
+    let mut stack: Vec<i64> = Vec::new();
+    let mut trace: Vec<String> = Vec::with_capacity(n_instr);
+    for _ in 0..n_instr {
+        if stack.len() < 2 || rng.below(2) == 0 {
+            let d = rng.below(10) as i64;
+            instrs.push(format!("PUSH {d}"));
+            stack.push(d);
+        } else {
+            let op = CODE_OPS[rng.below(3)];
+            let b = stack.pop().unwrap();
+            let a = stack.pop().unwrap();
+            let r = match op {
+                "ADD" => (a + b).rem_euclid(10),
+                "MUL" => (a * b).rem_euclid(10),
+                _ => (a - b).rem_euclid(10),
+            };
+            stack.push(r);
+            instrs.push(op.to_string());
+        }
+        trace.push(stack.iter().map(|v| v.to_string()).collect::<String>());
+    }
+    let ans = stack.last().unwrap().to_string();
+    Problem {
+        task: "code".into(),
+        prompt: format!("Q:{}\nT:", instrs.join("|")),
+        solution: format!("{} A:{ans}\n", trace.join(" ")),
+        answer: ans,
+    }
+}
+
+const NOUNS: [&str; 8] = [
+    "bird", "fish", "tree", "leaf", "rock", "star", "frog", "moon",
+];
+const VERBS: [&str; 6] = ["saw", "ate", "hid", "made", "took", "lost"];
+
+fn filler(rng: &mut SplitMix64) -> String {
+    format!(
+        "the {} {} a {}.",
+        NOUNS[rng.below(8)],
+        VERBS[rng.below(6)],
+        NOUNS[rng.below(8)]
+    )
+}
+
+/// Needle in a haystack (RULER NIAH analog).
+pub fn gen_niah(rng: &mut SplitMix64, n_fillers: usize) -> Problem {
+    let vars = ['u', 'v', 'w', 'x', 'y', 'z'];
+    let var = vars[rng.below(6)];
+    let val = rng.below(10);
+    let pos = rng.below(n_fillers + 1);
+    let mut parts = Vec::with_capacity(n_fillers + 1);
+    for i in 0..=n_fillers {
+        if i == pos {
+            parts.push(format!("key {var}={val}."));
+        } else {
+            parts.push(filler(rng));
+        }
+    }
+    Problem {
+        task: "niah".into(),
+        prompt: format!("Q:{} ?{var}\nT:", parts.join(" ")),
+        solution: format!("A:{val}\n"),
+        answer: val.to_string(),
+    }
+}
+
+/// Variable tracking (RULER VT analog).
+pub fn gen_vt(rng: &mut SplitMix64, n_chain: usize, n_noise: usize) -> Problem {
+    let mut pool: Vec<char> = "abcdefghijklmnopqrst".chars().collect();
+    rng.shuffle(&mut pool);
+    let chain: Vec<char> = pool[..n_chain + 1].to_vec();
+    let noise: Vec<char> = pool[n_chain + 1..n_chain + 1 + n_noise].to_vec();
+    let val = rng.below(10);
+    let mut stmts = vec![format!("{}={val}", chain[0])];
+    for i in 1..chain.len() {
+        stmts.push(format!("{}={}", chain[i], chain[i - 1]));
+    }
+    for v in &noise {
+        stmts.push(format!("{v}={}", rng.below(10)));
+    }
+    // deterministic shuffle of statement order (excluding the first),
+    // then restore the chain statements' relative order.
+    let mut order: Vec<usize> = (1..stmts.len()).collect();
+    rng.shuffle(&mut order);
+    let chain_positions: Vec<usize> = order
+        .iter()
+        .enumerate()
+        .filter(|(_, idx)| **idx >= 1 && **idx <= n_chain)
+        .map(|(k, _)| k)
+        .collect();
+    let mut chain_sorted: Vec<usize> = order
+        .iter()
+        .copied()
+        .filter(|idx| *idx >= 1 && *idx <= n_chain)
+        .collect();
+    chain_sorted.sort_unstable();
+    for (k, idx) in chain_positions.iter().zip(chain_sorted) {
+        order[*k] = idx;
+    }
+    let mut body = vec![stmts[0].clone()];
+    body.extend(order.iter().map(|&i| stmts[i].clone()));
+    let target = if n_chain > 0 { chain[n_chain] } else { chain[0] };
+    Problem {
+        task: "vt".into(),
+        prompt: format!("Q:{}. ?{target}\nT:", body.join(". ")),
+        solution: format!("A:{val}\n"),
+        answer: val.to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasks::extract_answer;
+
+    fn rng() -> SplitMix64 {
+        SplitMix64::new(12345)
+    }
+
+    #[test]
+    fn arith_answer_matches_trace() {
+        for seed in 0..20u64 {
+            let mut r = SplitMix64::new(seed);
+            let p = gen_arith(&mut r, 5);
+            assert_eq!(extract_answer(&p.solution), Some(p.answer.clone()));
+            // answer is a digit mod 10
+            let a: i64 = p.answer.parse().unwrap();
+            assert!((0..10).contains(&a));
+        }
+    }
+
+    #[test]
+    fn mcq_letter_points_at_correct_option() {
+        for seed in 0..20u64 {
+            let mut r = SplitMix64::new(seed);
+            let p = gen_mcq(&mut r, 4);
+            assert!(["A", "B", "C", "D"].contains(&p.answer.as_str()));
+            // the option labelled with the answer letter equals the
+            // arithmetic result encoded in the trace's last step
+            let needle = format!("{}:", p.answer);
+            assert!(p.prompt.contains(&needle));
+        }
+    }
+
+    #[test]
+    fn code_trace_is_consistent() {
+        let mut r = rng();
+        let p = gen_code(&mut r, 8);
+        assert_eq!(extract_answer(&p.solution), Some(p.answer.clone()));
+        assert!(p.prompt.starts_with("Q:PUSH"));
+    }
+
+    #[test]
+    fn niah_key_is_present_once() {
+        let mut r = rng();
+        let p = gen_niah(&mut r, 6);
+        assert_eq!(p.prompt.matches("key ").count(), 1);
+    }
+
+    #[test]
+    fn vt_has_expected_statements() {
+        let mut r = rng();
+        let p = gen_vt(&mut r, 4, 5);
+        // 1 root + 4 chain + 5 noise assignments
+        assert_eq!(p.prompt.matches('=').count(), 10);
+    }
+}

@@ -1,0 +1,75 @@
+//! Synthetic benchmark suite — the exact mirror of
+//! `python/compile/tasks.py` (see DESIGN.md §2 for the paper-task
+//! mapping). Generators must match the Python implementation RNG-call
+//! for RNG-call; `artifacts/tasks_golden.json` pins both.
+
+mod generators;
+mod suite;
+
+pub use generators::{gen_arith, gen_code, gen_mcq, gen_niah, gen_vt};
+pub use suite::{gen_niah_with_fillers, gen_problem, suite_names, Suite, SUITES};
+
+use crate::util::SplitMix64;
+
+/// A benchmark problem instance.
+#[derive(Clone, Debug)]
+pub struct Problem {
+    pub task: String,
+    /// Text fed to the model (after `<bos>`).
+    pub prompt: String,
+    /// Gold completion including the reasoning trace and final answer.
+    pub solution: String,
+    /// Canonical final answer for exact-match scoring.
+    pub answer: String,
+}
+
+impl Problem {
+    pub fn full_text(&self) -> String {
+        format!("{}{}", self.prompt, self.solution)
+    }
+}
+
+/// Final answer = text after the last `A:` marker up to newline/`|`.
+/// Mirrors `tasks.extract_answer`.
+pub fn extract_answer(text: &str) -> Option<String> {
+    let idx = text.rfind("A:")?;
+    let tail = &text[idx + 2..];
+    let end = tail.find(['\n', '|']).unwrap_or(tail.len());
+    let ans = tail[..end].trim();
+    if ans.is_empty() {
+        None
+    } else {
+        Some(ans.to_string())
+    }
+}
+
+/// Seed the per-problem RNG exactly as the Python mirror does.
+pub(crate) fn problem_rng(seed: u64, index: u64) -> SplitMix64 {
+    SplitMix64::new(
+        seed.wrapping_mul(0x517C_C1B7_2722_0A95)
+            .wrapping_add(index.wrapping_mul(2).wrapping_add(1)),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extract_answer_basic() {
+        assert_eq!(extract_answer("7+5=2 A:2\n"), Some("2".into()));
+        assert_eq!(extract_answer("x A:B\nmore"), Some("B".into()));
+        assert_eq!(extract_answer("no answer"), None);
+        assert_eq!(extract_answer("A: \n"), None);
+    }
+
+    #[test]
+    fn extract_answer_takes_last_marker() {
+        // MCQ prompts contain "A:<digit>" as an option; the final answer
+        // marker must win.
+        assert_eq!(
+            extract_answer("Q:1+1=? A:4 B:2 ... A:B\n"),
+            Some("B".into())
+        );
+    }
+}

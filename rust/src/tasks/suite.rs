@@ -1,0 +1,124 @@
+//! Suite presets — mirrors `tasks.SUITES` and `tasks.gen_problem`.
+
+use super::{gen_arith, gen_code, gen_mcq, gen_niah, gen_vt, problem_rng, Problem};
+
+/// Which generator a suite uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Suite {
+    /// arith with (lo, hi) op-count band
+    Arith(usize, usize),
+    /// mcq with (lo, hi) op-count band
+    Mcq(usize, usize),
+    /// code with (lo, hi) instruction band
+    Code(usize, usize),
+    /// niah with (lo, hi) filler band
+    Niah(usize, usize),
+    /// vt with chain band and noise band
+    Vt(usize, usize, usize, usize),
+}
+
+/// Name → preset. Order/bands mirror `tasks.SUITES` exactly.
+pub const SUITES: &[(&str, Suite)] = &[
+    ("math", Suite::Arith(3, 6)),    // MATH 500 analog (easy band)
+    ("aime", Suite::Arith(8, 13)),   // AIME 24 analog (hard band)
+    ("gpqa", Suite::Mcq(4, 8)),
+    ("lcb", Suite::Code(6, 10)),
+    ("gsm8k", Suite::Arith(4, 8)),   // ablation probe band
+    ("niah", Suite::Niah(3, 5)),
+    ("vt", Suite::Vt(3, 6, 4, 8)),
+    ("mmlu", Suite::Mcq(2, 5)),      // Table-1 short-context analogs
+    ("hellaswag", Suite::Code(3, 6)),
+];
+
+pub fn suite_names() -> Vec<&'static str> {
+    SUITES.iter().map(|(n, _)| *n).collect()
+}
+
+fn lookup(task: &str) -> Option<Suite> {
+    SUITES
+        .iter()
+        .find(|(n, _)| *n == task)
+        .map(|(_, s)| *s)
+}
+
+/// Generate problem `index` of suite `task` — deterministic and
+/// identical across languages.
+pub fn gen_problem(task: &str, seed: u64, index: u64) -> Problem {
+    let mut rng = problem_rng(seed, index);
+    let suite = lookup(task).unwrap_or_else(|| panic!("unknown suite '{task}'"));
+    let mut p = match suite {
+        Suite::Arith(lo, hi) => {
+            let n = lo + rng.below(hi - lo + 1);
+            gen_arith(&mut rng, n)
+        }
+        Suite::Mcq(lo, hi) => {
+            let n = lo + rng.below(hi - lo + 1);
+            gen_mcq(&mut rng, n)
+        }
+        Suite::Code(lo, hi) => {
+            let n = lo + rng.below(hi - lo + 1);
+            gen_code(&mut rng, n)
+        }
+        Suite::Niah(lo, hi) => {
+            let n = lo + rng.below(hi - lo + 1);
+            gen_niah(&mut rng, n)
+        }
+        Suite::Vt(clo, chi, nlo, nhi) => {
+            let n_chain = clo + rng.below(chi - clo + 1);
+            let n_noise = nlo + rng.below(nhi - nlo + 1);
+            gen_vt(&mut rng, n_chain, n_noise)
+        }
+    };
+    p.task = task.to_string();
+    p
+}
+
+/// NIAH with an explicit filler count — used by the Table 2 context-
+/// length extrapolation experiment (the suite band is bypassed but the
+/// seeding scheme is unchanged).
+pub fn gen_niah_with_fillers(seed: u64, index: u64, n_fillers: usize) -> Problem {
+    let mut rng = problem_rng(seed, index);
+    let mut p = gen_niah(&mut rng, n_fillers);
+    p.task = "niah".into();
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_calls() {
+        let a = gen_problem("aime", 7, 3);
+        let b = gen_problem("aime", 7, 3);
+        assert_eq!(a.prompt, b.prompt);
+        assert_eq!(a.solution, b.solution);
+    }
+
+    #[test]
+    fn different_indices_differ() {
+        let a = gen_problem("math", 7, 0);
+        let b = gen_problem("math", 7, 1);
+        assert_ne!(a.prompt, b.prompt);
+    }
+
+    #[test]
+    fn all_suites_generate() {
+        for name in suite_names() {
+            let p = gen_problem(name, 1, 0);
+            assert!(p.prompt.starts_with("Q:"), "{name}");
+            assert!(!p.answer.is_empty(), "{name}");
+        }
+    }
+
+    #[test]
+    fn hard_band_is_longer_than_easy() {
+        let easy: usize = (0..20)
+            .map(|i| gen_problem("math", 5, i).solution.len())
+            .sum();
+        let hard: usize = (0..20)
+            .map(|i| gen_problem("aime", 5, i).solution.len())
+            .sum();
+        assert!(hard > easy);
+    }
+}

@@ -1,0 +1,157 @@
+//! Char-level tokenizer — the exact mirror of
+//! `python/compile/tasks.py` (64-symbol vocabulary, 3 specials).
+//!
+//! The vocabulary order is load-bearing: token ids index the embedding
+//! table of the AOT-compiled model. A runtime assertion cross-checks the
+//! constructed vocabulary against the one recorded in
+//! `artifacts/manifest.json`.
+
+use anyhow::{bail, Result};
+
+pub const PAD_ID: u32 = 0;
+pub const BOS_ID: u32 = 1;
+pub const EOS_ID: u32 = 2;
+pub const VOCAB_SIZE: usize = 64;
+
+/// Character list, identical to `tasks.CHARS` in Python.
+pub const CHARS: &str = concat!(
+    "0123456789",
+    "abcdefghijklmnopqrstuvwxyz",
+    "ABCD",
+    "+-*=?",
+    " \n.,:|#",
+    "PUSHML",
+    "QT%",
+);
+
+pub const SPECIALS: [&str; 3] = ["<pad>", "<bos>", "<eos>"];
+
+/// Char-level tokenizer with O(1) encode via a 128-entry ASCII table.
+pub struct Tokenizer {
+    id_of: [i8; 128],
+    char_of: Vec<char>,
+}
+
+impl Default for Tokenizer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tokenizer {
+    pub fn new() -> Self {
+        let mut id_of = [-1i8; 128];
+        let mut char_of = Vec::with_capacity(VOCAB_SIZE);
+        for (i, c) in CHARS.chars().enumerate() {
+            debug_assert!((c as usize) < 128);
+            id_of[c as usize] = (i + SPECIALS.len()) as i8;
+            char_of.push(c);
+        }
+        assert_eq!(
+            char_of.len() + SPECIALS.len(),
+            VOCAB_SIZE,
+            "vocabulary must have exactly {VOCAB_SIZE} symbols"
+        );
+        Self { id_of, char_of }
+    }
+
+    /// Encode text; errors on out-of-vocabulary symbols.
+    pub fn encode(&self, text: &str) -> Result<Vec<u32>> {
+        let mut out = Vec::with_capacity(text.len());
+        for c in text.chars() {
+            let idx = if (c as usize) < 128 {
+                self.id_of[c as usize]
+            } else {
+                -1
+            };
+            if idx < 0 {
+                bail!("character {c:?} not in vocabulary");
+            }
+            out.push(idx as u32);
+        }
+        Ok(out)
+    }
+
+    /// Decode ids, skipping special tokens.
+    pub fn decode(&self, ids: &[u32]) -> String {
+        ids.iter()
+            .filter_map(|&id| {
+                let i = id as usize;
+                if i < SPECIALS.len() || i >= VOCAB_SIZE {
+                    None
+                } else {
+                    Some(self.char_of[i - SPECIALS.len()])
+                }
+            })
+            .collect()
+    }
+
+    /// Full vocabulary (specials + chars), for manifest cross-checking.
+    pub fn vocab(&self) -> Vec<String> {
+        SPECIALS
+            .iter()
+            .map(|s| s.to_string())
+            .chain(self.char_of.iter().map(|c| c.to_string()))
+            .collect()
+    }
+
+    /// Verify against the vocabulary recorded in the manifest.
+    pub fn check_manifest_vocab(&self, vocab: &[String]) -> Result<()> {
+        let mine = self.vocab();
+        if mine != vocab {
+            bail!(
+                "tokenizer vocabulary mismatch: rust={mine:?} manifest={vocab:?}"
+            );
+        }
+        Ok(())
+    }
+
+    pub fn newline_id(&self) -> u32 {
+        self.encode("\n").unwrap()[0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocab_size_is_64() {
+        let t = Tokenizer::new();
+        assert_eq!(t.vocab().len(), 64);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let t = Tokenizer::new();
+        let text = "Q:7+5-3*4=?\nT:7+5=2 A:B PUSH 3|MUL";
+        let ids = t.encode(text).unwrap();
+        assert_eq!(t.decode(&ids), text);
+    }
+
+    #[test]
+    fn specials_skipped_on_decode() {
+        let t = Tokenizer::new();
+        let mut ids = vec![BOS_ID];
+        ids.extend(t.encode("ab").unwrap());
+        ids.push(EOS_ID);
+        ids.push(PAD_ID);
+        assert_eq!(t.decode(&ids), "ab");
+    }
+
+    #[test]
+    fn rejects_oov() {
+        let t = Tokenizer::new();
+        assert!(t.encode("hello!").is_err());
+        assert!(t.encode("é").is_err());
+    }
+
+    #[test]
+    fn digits_map_contiguously() {
+        let t = Tokenizer::new();
+        let ids = t.encode("0123456789").unwrap();
+        for (i, id) in ids.iter().enumerate() {
+            assert_eq!(*id, 3 + i as u32);
+        }
+    }
+}

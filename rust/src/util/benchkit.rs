@@ -1,0 +1,77 @@
+//! Minimal benchmarking harness (criterion is unavailable offline).
+//!
+//! Used by the `rust/benches/*.rs` targets (all `harness = false`):
+//! warms up, runs timed iterations, and prints mean / p50 / p95 /
+//! throughput lines in a stable, grep-friendly format.
+
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "bench {:<44} iters {:>4}  mean {:>10.3}ms  p50 {:>10.3}ms  p95 {:>10.3}ms",
+            self.name,
+            self.iters,
+            self.mean_s * 1e3,
+            self.p50_s * 1e3,
+            self.p95_s * 1e3
+        );
+    }
+
+    /// Print with a unit-per-second throughput derived from mean time.
+    pub fn print_throughput(&self, units: f64, unit_name: &str) {
+        println!(
+            "bench {:<44} iters {:>4}  mean {:>10.3}ms  {:>12.1} {unit_name}/s",
+            self.name,
+            self.iters,
+            self.mean_s * 1e3,
+            units / self.mean_s
+        );
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed ones.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let p95_idx = ((times.len() as f64 * 0.95) as usize).min(times.len() - 1);
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: mean,
+        p50_s: times[times.len() / 2],
+        p95_s: times[p95_idx],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_times() {
+        let r = bench("noop", 2, 10, || 1 + 1);
+        assert_eq!(r.iters, 10);
+        assert!(r.mean_s >= 0.0);
+        assert!(r.p50_s <= r.p95_s + 1e-9);
+    }
+}

@@ -1,0 +1,116 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: positional args, `--flag`, `--key value` or `--key=value`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+/// Parsed command-line arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{name} expects an integer: {e}")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{name} expects a number: {e}")),
+        }
+    }
+
+    pub fn get_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn positional_flags_options() {
+        let a = parse("exp fig3 --tasks math,aime --full --n 24 --temp=0.8");
+        assert_eq!(a.positional, vec!["exp", "fig3"]);
+        assert!(a.flag("full"));
+        assert_eq!(a.get("tasks"), Some("math,aime"));
+        assert_eq!(a.get_usize("n", 0).unwrap(), 24);
+        assert_eq!(a.get_f64("temp", 0.0).unwrap(), 0.8);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("--fast --verbose");
+        assert!(a.flag("fast") && a.flag("verbose"));
+        assert!(a.options.is_empty());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("");
+        assert_eq!(a.get_usize("n", 7).unwrap(), 7);
+        assert_eq!(a.get_str("variant", "base"), "base");
+        assert!(a.get_usize("n", 0).is_ok());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse("--n abc");
+        assert!(a.get_usize("n", 0).is_err());
+    }
+}

@@ -1,0 +1,48 @@
+//! Leveled stderr logger with wall-clock offsets.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+use std::sync::OnceLock;
+
+static LEVEL: AtomicU8 = AtomicU8::new(2); // 0=off 1=error 2=info 3=debug
+static START: OnceLock<Instant> = OnceLock::new();
+
+pub fn set_level(level: u8) {
+    LEVEL.store(level, Ordering::Relaxed);
+}
+
+pub fn level() -> u8 {
+    LEVEL.load(Ordering::Relaxed)
+}
+
+fn elapsed() -> f64 {
+    START.get_or_init(Instant::now).elapsed().as_secs_f64()
+}
+
+pub fn log(lvl: u8, tag: &str, msg: std::fmt::Arguments) {
+    if lvl <= level() {
+        eprintln!("[{:8.2}s {tag}] {msg}", elapsed());
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        $crate::util::log::log(2, "info", format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        $crate::util::log::log(3, "debug", format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warn_log {
+    ($($arg:tt)*) => {
+        $crate::util::log::log(1, "warn", format_args!($($arg)*))
+    };
+}

@@ -1,0 +1,14 @@
+//! Substrate utilities built from scratch for the offline environment:
+//! JSON, CLI parsing, deterministic RNG, logging, timing.
+
+pub mod benchkit;
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod rng;
+pub mod timer;
+
+pub use cli::Args;
+pub use json::Json;
+pub use rng::SplitMix64;
+pub use timer::Stopwatch;

@@ -1,0 +1,85 @@
+//! Timing helpers for benches and the perf pass.
+
+use std::time::Instant;
+
+/// Simple stopwatch accumulating named segments.
+#[derive(Debug, Default)]
+pub struct Stopwatch {
+    segments: Vec<(String, f64)>,
+    current: Option<(String, Instant)>,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start (or switch to) a named segment.
+    pub fn start(&mut self, name: &str) {
+        self.stop();
+        self.current = Some((name.to_string(), Instant::now()));
+    }
+
+    /// Stop the active segment, accumulating its elapsed time.
+    pub fn stop(&mut self) {
+        if let Some((name, t0)) = self.current.take() {
+            let dt = t0.elapsed().as_secs_f64();
+            if let Some(seg) = self.segments.iter_mut().find(|(n, _)| *n == name) {
+                seg.1 += dt;
+            } else {
+                self.segments.push((name, dt));
+            }
+        }
+    }
+
+    pub fn totals(&self) -> &[(String, f64)] {
+        &self.segments
+    }
+
+    pub fn total(&self) -> f64 {
+        self.segments.iter().map(|(_, t)| t).sum()
+    }
+
+    pub fn report(&self) -> String {
+        let total = self.total().max(1e-12);
+        let mut out = String::new();
+        for (name, t) in &self.segments {
+            out.push_str(&format!(
+                "{name:24} {t:9.3}s  {:5.1}%\n",
+                100.0 * t / total
+            ));
+        }
+        out
+    }
+}
+
+/// Measure a closure's wall time; returns (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_segments() {
+        let mut sw = Stopwatch::new();
+        sw.start("a");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        sw.start("b");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        sw.start("a");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        sw.stop();
+        let totals = sw.totals();
+        assert_eq!(totals.len(), 2);
+        let a = totals.iter().find(|(n, _)| n == "a").unwrap().1;
+        let b = totals.iter().find(|(n, _)| n == "b").unwrap().1;
+        assert!(a > b);
+        assert!(sw.total() >= 0.015);
+        assert!(sw.report().contains('%'));
+    }
+}

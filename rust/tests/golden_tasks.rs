@@ -1,0 +1,88 @@
+//! Cross-language generator pinning: the Rust task generators must
+//! reproduce `artifacts/tasks_golden.json` byte-for-byte (written by
+//! the Python side during `make artifacts`).
+
+use std::path::PathBuf;
+
+use hyperscale::tasks::gen_problem;
+use hyperscale::tokenizer::Tokenizer;
+use hyperscale::util::Json;
+
+fn artifacts() -> PathBuf {
+    PathBuf::from(std::env::var("HS_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()))
+}
+
+fn golden() -> Option<Json> {
+    let path = artifacts().join("tasks_golden.json");
+    if !path.exists() {
+        eprintln!("skipping: {} not built", path.display());
+        return None;
+    }
+    Some(Json::parse_file(&path).expect("parse golden"))
+}
+
+#[test]
+fn generators_match_python_byte_for_byte() {
+    let Some(golden) = golden() else { return };
+    let obj = golden.as_obj().expect("golden is an object");
+    assert!(!obj.is_empty());
+    let mut checked = 0;
+    for (suite, rows) in obj {
+        for (i, row) in rows.as_arr().unwrap().iter().enumerate() {
+            let p = gen_problem(suite, 42, i as u64);
+            assert_eq!(
+                p.prompt,
+                row.get("prompt").unwrap().as_str().unwrap(),
+                "{suite}[{i}] prompt"
+            );
+            assert_eq!(
+                p.solution,
+                row.get("solution").unwrap().as_str().unwrap(),
+                "{suite}[{i}] solution"
+            );
+            assert_eq!(
+                p.answer,
+                row.get("answer").unwrap().as_str().unwrap(),
+                "{suite}[{i}] answer"
+            );
+            checked += 1;
+        }
+    }
+    assert!(checked >= 9 * 3, "checked {checked} golden rows");
+}
+
+#[test]
+fn vocab_matches_manifest() {
+    let path = artifacts().join("manifest.json");
+    if !path.exists() {
+        eprintln!("skipping: manifest not built");
+        return;
+    }
+    let m = Json::parse_file(&path).unwrap();
+    let vocab: Vec<String> = m
+        .get("vocab")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_str().unwrap().to_string())
+        .collect();
+    Tokenizer::new().check_manifest_vocab(&vocab).unwrap();
+}
+
+#[test]
+fn golden_texts_are_tokenizable() {
+    let Some(golden) = golden() else { return };
+    let tok = Tokenizer::new();
+    for (_, rows) in golden.as_obj().unwrap() {
+        for row in rows.as_arr().unwrap() {
+            let text = format!(
+                "{}{}",
+                row.get("prompt").unwrap().as_str().unwrap(),
+                row.get("solution").unwrap().as_str().unwrap()
+            );
+            let ids = tok.encode(&text).expect("in-vocab");
+            assert_eq!(tok.decode(&ids), text);
+        }
+    }
+}

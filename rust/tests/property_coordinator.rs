@@ -1,0 +1,295 @@
+//! Property-based tests on coordinator invariants (hand-rolled
+//! generators — proptest is unavailable offline). Random operation
+//! sequences against the paged KV cache and the eviction policies must
+//! preserve the structural invariants the engine relies on.
+
+use hyperscale::compress::{build_policy, PolicyKind, StepView, WriteAction};
+use hyperscale::kvcache::{CacheStore, Geometry, SlotState};
+use hyperscale::util::SplitMix64;
+
+fn geom(slots: usize) -> Geometry {
+    Geometry {
+        layers: 2,
+        kv_heads: 2,
+        slots,
+        head_dim: 4,
+        page_size: 8,
+    }
+}
+
+/// live-count bookkeeping == mask zeros == allocator occupancy.
+fn check_consistency(c: &CacheStore, b: usize) {
+    let g = c.geom;
+    for l in 0..g.layers {
+        for h in 0..g.kv_heads {
+            let live = c.live_count(b, l, h);
+            let mask_live = (0..g.slots)
+                .filter(|&s| c.mask_value(b, l, h, s) == 0.0)
+                .count();
+            let meta_live = (0..g.slots)
+                .filter(|&s| matches!(c.slot_state(b, l, h, s), SlotState::Live { .. }))
+                .count();
+            assert_eq!(live, mask_live, "mask desync at ({l},{h})");
+            assert_eq!(live, meta_live, "meta desync at ({l},{h})");
+        }
+    }
+}
+
+#[test]
+fn random_alloc_write_evict_sequences_stay_consistent() {
+    for seed in 0..20u64 {
+        let mut rng = SplitMix64::new(seed);
+        let g = geom(32);
+        let mut c = CacheStore::new(g, 2);
+        let k = vec![1.0f32; g.head_dim];
+        let v = vec![2.0f32; g.head_dim];
+        for step in 0..300 {
+            let b = rng.below(2);
+            let l = rng.below(g.layers);
+            let h = rng.below(g.kv_heads);
+            match rng.below(5) {
+                0 | 1 => {
+                    if let Some(s) = c.alloc_slot(b, l, h) {
+                        c.write(b, l, h, s, step, &k, &v);
+                        if rng.below(3) == 0 {
+                            c.schedule_eviction(b, l, h, s, step + rng.below(8));
+                        }
+                    }
+                }
+                2 => {
+                    let live = c.live_slots(b, l, h);
+                    if !live.is_empty() {
+                        let (s, _) = live[rng.below(live.len())];
+                        c.evict(b, l, h, s);
+                    }
+                }
+                3 => c.apply_due_evictions(b, step),
+                _ => {
+                    c.merge_into_last(b, l, h, &k, &v);
+                }
+            }
+            if step % 37 == 0 {
+                check_consistency(&c, 0);
+                check_consistency(&c, 1);
+            }
+        }
+        check_consistency(&c, 0);
+        check_consistency(&c, 1);
+    }
+}
+
+#[test]
+fn due_evictions_never_leave_overdue_entries() {
+    let mut rng = SplitMix64::new(7);
+    let g = geom(32);
+    let mut c = CacheStore::new(g, 1);
+    let k = vec![0.0f32; 4];
+    for pos in 0..200usize {
+        for l in 0..g.layers {
+            for h in 0..g.kv_heads {
+                c.apply_due_evictions(0, pos);
+                if let Some(s) = c.alloc_slot(0, l, h) {
+                    c.write(0, l, h, s, pos, &k, &k);
+                    if rng.below(2) == 0 {
+                        c.schedule_eviction(0, l, h, s, pos + 4);
+                    }
+                }
+                // invariant: nothing live has evict_at <= pos
+                for s in 0..g.slots {
+                    if let SlotState::Live { evict_at, .. } = c.slot_state(0, l, h, s) {
+                        assert!(
+                            evict_at == u32::MAX || evict_at > pos as u32,
+                            "overdue entry at pos {pos}"
+                        );
+                    }
+                }
+            }
+        }
+        if c.live_count(0, 0, 0) > 24 {
+            c.reset_lane(0);
+        }
+    }
+}
+
+#[test]
+fn fork_lane_is_deep_copy() {
+    for seed in 0..10u64 {
+        let mut rng = SplitMix64::new(seed);
+        let g = geom(32);
+        let mut c = CacheStore::new(g, 2);
+        let mut payload = vec![0.0f32; 4];
+        for pos in 0..rng.below(20) + 1 {
+            payload[0] = pos as f32;
+            for l in 0..g.layers {
+                for h in 0..g.kv_heads {
+                    if let Some(s) = c.alloc_slot(0, l, h) {
+                        c.write(0, l, h, s, pos, &payload, &payload);
+                    }
+                }
+            }
+        }
+        c.fork_lane(0, 1);
+        // identical observable state
+        for l in 0..g.layers {
+            for h in 0..g.kv_heads {
+                assert_eq!(c.live_count(0, l, h), c.live_count(1, l, h));
+                for s in 0..g.slots {
+                    assert_eq!(
+                        c.mask_value(0, l, h, s),
+                        c.mask_value(1, l, h, s)
+                    );
+                    assert_eq!(c.k_at(0, l, h, s), c.k_at(1, l, h, s));
+                }
+            }
+        }
+        // divergence after fork does not leak back
+        let live = c.live_slots(1, 0, 0);
+        if let Some(&(s, _)) = live.first() {
+            c.evict(1, 0, 0, s);
+            assert_eq!(c.live_count(0, 0, 0), live.len());
+        }
+        check_consistency(&c, 0);
+        check_consistency(&c, 1);
+    }
+}
+
+#[test]
+fn budget_policies_never_exceed_budget() {
+    for (kind, budget) in [
+        (PolicyKind::Tova, 10usize),
+        (PolicyKind::H2o, 10),
+        (PolicyKind::Window, 10),
+    ] {
+        let mut rng = SplitMix64::new(11);
+        let g = geom(64);
+        let mut c = CacheStore::new(g, 1);
+        // CR chosen so build_policy yields exactly `budget`
+        let mut policy = build_policy(kind, 160.0 / budget as f64, 160, 4, 8);
+        assert_eq!(policy.budget(), Some(budget));
+        let k = vec![0.1f32; 4];
+        let lh = g.lh();
+        let alpha = vec![0.0f32; lh];
+        let attn: Vec<f32> = (0..lh * g.slots)
+            .map(|_| rng.f64() as f32)
+            .collect();
+        let attn_self = vec![0.0f32; lh];
+        let mut actions: Vec<WriteAction> = Vec::new();
+        let mut written = vec![None; lh];
+        for pos in 0..50usize {
+            c.apply_due_evictions(0, pos);
+            policy.write_actions(&alpha, g.layers, g.kv_heads, &mut actions);
+            for l in 0..g.layers {
+                for h in 0..g.kv_heads {
+                    let i = l * g.kv_heads + h;
+                    written[i] = c.alloc_slot(0, l, h);
+                    if let Some(s) = written[i] {
+                        c.write(0, l, h, s, pos, &k, &k);
+                    }
+                }
+            }
+            policy.post_write(
+                &mut c,
+                &StepView {
+                    lane: 0,
+                    pos,
+                    alpha: &alpha,
+                    attn: &attn,
+                    attn_self: &attn_self,
+                    written: &written,
+                },
+            );
+            for l in 0..g.layers {
+                for h in 0..g.kv_heads {
+                    assert!(
+                        c.live_count(0, l, h) <= budget,
+                        "{:?} exceeded budget at pos {pos}",
+                        kind
+                    );
+                }
+            }
+        }
+        check_consistency(&c, 0);
+    }
+}
+
+#[test]
+fn dms_policy_respects_window_exactly() {
+    let g = geom(64);
+    let mut c = CacheStore::new(g, 1);
+    let window = 6usize;
+    let mut policy = build_policy(PolicyKind::Dms, 4.0, 160, window, 8);
+    let k = vec![0.0f32; 4];
+    let lh = g.lh();
+    let attn = vec![0.0f32; lh * g.slots];
+    let mut actions: Vec<WriteAction> = Vec::new();
+    let mut written = vec![None; lh];
+    // evict-all alphas: every token scheduled out after `window`
+    let alpha = vec![1.0f32; lh];
+    for pos in 0..30usize {
+        c.apply_due_evictions(0, pos);
+        policy.write_actions(&alpha, g.layers, g.kv_heads, &mut actions);
+        for l in 0..g.layers {
+            for h in 0..g.kv_heads {
+                let i = l * g.kv_heads + h;
+                written[i] = c.alloc_slot(0, l, h);
+                if let Some(s) = written[i] {
+                    c.write(0, l, h, s, pos, &k, &k);
+                }
+            }
+        }
+        policy.post_write(
+            &mut c,
+            &StepView {
+                lane: 0,
+                pos,
+                alpha: &alpha,
+                attn: &attn,
+                attn_self: &attn,
+                written: &written,
+            },
+        );
+        // steady state: exactly min(pos+1, window) tokens live
+        let expect = (pos + 1).min(window);
+        assert_eq!(c.live_count(0, 0, 0), expect, "pos {pos}");
+    }
+}
+
+#[test]
+fn dmc_merges_keep_cache_flat() {
+    let g = geom(32);
+    let mut c = CacheStore::new(g, 1);
+    let mut policy = build_policy(PolicyKind::Dmc, 4.0, 160, 16, 8);
+    let lh = g.lh();
+    let mut actions: Vec<WriteAction> = Vec::new();
+    let mut written = vec![None; lh];
+    let k = vec![1.0f32; 4];
+    // alternate merge/append decisions
+    for pos in 0..40usize {
+        let a = if pos % 2 == 0 { 0.9 } else { 0.1 };
+        let alpha = vec![a; lh];
+        policy.write_actions(&alpha, g.layers, g.kv_heads, &mut actions);
+        for l in 0..g.layers {
+            for h in 0..g.kv_heads {
+                let i = l * g.kv_heads + h;
+                written[i] = None;
+                match actions[i] {
+                    WriteAction::Merge => {
+                        if !c.merge_into_last(0, l, h, &k, &k) {
+                            let s = c.alloc_slot(0, l, h).unwrap();
+                            c.write(0, l, h, s, pos, &k, &k);
+                        }
+                    }
+                    WriteAction::Append => {
+                        let s = c.alloc_slot(0, l, h).unwrap();
+                        c.write(0, l, h, s, pos, &k, &k);
+                        written[i] = Some(s);
+                    }
+                }
+            }
+        }
+    }
+    // half the tokens merged → about half the entries
+    let live = c.live_count(0, 0, 0);
+    assert!(live <= 21 && live >= 19, "live {live}");
+    check_consistency(&c, 0);
+}
