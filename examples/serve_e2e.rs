@@ -93,7 +93,11 @@ fn main() -> hyperscale::Result<()> {
                     .get("peak_tokens")
                     .and_then(|x| x.as_f64())
                     .unwrap_or(0.0);
-                tx.send((latency, correct, reads, peak)).unwrap();
+                let ttft = resp
+                    .get("ttft_ms")
+                    .and_then(|x| x.as_f64())
+                    .unwrap_or(0.0);
+                tx.send((latency, correct, reads, peak, ttft)).unwrap();
                 i += n_clients as u64;
             }
         });
@@ -101,11 +105,13 @@ fn main() -> hyperscale::Result<()> {
     drop(tx);
 
     let mut latencies = Vec::new();
+    let mut ttfts = Vec::new();
     let mut correct = 0usize;
     let mut reads = 0.0;
     let mut peak: f64 = 0.0;
-    for (lat, ok, r, p) in rx {
+    for (lat, ok, r, p, ttft) in rx {
         latencies.push(lat);
+        ttfts.push(ttft);
         if ok {
             correct += 1;
         }
@@ -128,6 +134,12 @@ fn main() -> hyperscale::Result<()> {
         pct(0.5),
         pct(0.9),
         latencies.last().unwrap()
+    );
+    ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    println!(
+        "TTFT ms (server-side): p50 {:.1}  max {:.1}",
+        ttfts[ttfts.len() / 2],
+        ttfts.last().unwrap()
     );
     println!(
         "throughput: {:.2} req/s ({:.1} chains/s)",

@@ -1,12 +1,30 @@
 //! Serving throughput bench: engine-level requests/s and tokens/s for
 //! vanilla vs DMS at the same slot budget (the paper's "more tokens for
-//! the same compute" claim, measured on this testbed).
+//! the same compute" claim, measured on this testbed), plus the
+//! continuous-batching comparison: dynamic admission (concurrent
+//! requests share the executor's lanes) vs the pre-refactor serving
+//! path that ran each request as its own static batch, leaving
+//! `batch − width` lanes idle.
 
 use hyperscale::compress::PolicyKind;
 use hyperscale::config::EngineConfig;
 use hyperscale::engine::{Engine, GenRequest};
+use std::time::Instant;
+
 use hyperscale::util::benchkit::bench;
 use hyperscale::util::Args;
+
+fn requests(n: usize, width: usize, max_len: usize) -> Vec<GenRequest> {
+    (0..n as u64)
+        .map(|i| GenRequest {
+            prompt: hyperscale::tasks::gen_problem("gsm8k", 11, i).prompt,
+            width,
+            max_len,
+            temperature: 0.7,
+            seed: i,
+        })
+        .collect()
+}
 
 fn main() -> hyperscale::Result<()> {
     let args = Args::from_env();
@@ -34,15 +52,7 @@ fn main() -> hyperscale::Result<()> {
                 continue;
             }
         };
-        let reqs: Vec<GenRequest> = (0..6)
-            .map(|i| GenRequest {
-                prompt: hyperscale::tasks::gen_problem("gsm8k", 11, i).prompt,
-                width: 2,
-                max_len: 144,
-                temperature: 0.7,
-                seed: i,
-            })
-            .collect();
+        let reqs = requests(6, 2, 144);
         let mut gen_tokens = 0f64;
         let mut reads = 0f64;
         let r = bench(&format!("serve_{name}"), 1, iters, || {
@@ -58,6 +68,70 @@ fn main() -> hyperscale::Result<()> {
         println!(
             "      KV reads per generated token: {:.1}",
             reads / gen_tokens.max(1.0)
+        );
+    }
+
+    // ------------------------------------------------------------------
+    // Dynamic admission vs per-request static batches, equal cache
+    // budget (same engine, same slots, same policy). "static" replays
+    // the pre-refactor server: one engine.run per request, so a W=2
+    // request occupies 2 of 8 lanes and the rest idle. "dynamic"
+    // submits every request into one continuous-batching session.
+    // ------------------------------------------------------------------
+    println!("\n# dynamic admission vs static per-request batches");
+    for (name, policy, variant, cr) in [
+        ("dms_cr4", PolicyKind::Dms, "dms_w16_cr4", 4.0),
+        ("vanilla", PolicyKind::Vanilla, "base", 1.0),
+    ] {
+        let mut engine = match Engine::new(EngineConfig {
+            artifacts: artifacts.into(),
+            variant: variant.into(),
+            policy,
+            cr,
+            temperature: 0.7,
+            ..Default::default()
+        }) {
+            Ok(e) => e,
+            Err(e) => {
+                println!("skip {name}: {e:#}");
+                continue;
+            }
+        };
+        let reqs = requests(12, 2, 144);
+
+        let mut static_tokens = 0f64;
+        let sw = Instant::now();
+        for req in &reqs {
+            let (results, _) = engine.run(std::slice::from_ref(req)).expect("run");
+            static_tokens += results
+                .iter()
+                .flat_map(|r| &r.chains)
+                .map(|c| c.stats.gen_tokens as f64)
+                .sum::<f64>();
+        }
+        let static_s = sw.elapsed().as_secs_f64();
+
+        let mut dynamic_tokens = 0f64;
+        let sw = Instant::now();
+        let mut session = engine.begin_session();
+        for req in &reqs {
+            engine.submit(&mut session, req).expect("submit");
+        }
+        while !engine.is_idle(&session) {
+            for done in engine.tick(&mut session).expect("tick") {
+                dynamic_tokens += done.timing.gen_tokens as f64;
+            }
+        }
+        let dynamic_s = sw.elapsed().as_secs_f64();
+
+        let st = static_tokens / static_s.max(1e-9);
+        let dt = dynamic_tokens / dynamic_s.max(1e-9);
+        println!(
+            "{name:<10} static  {static_s:>8.3}s  {st:>10.1} gen-tokens/s"
+        );
+        println!(
+            "{name:<10} dynamic {dynamic_s:>8.3}s  {dt:>10.1} gen-tokens/s   speedup {:.2}x",
+            dt / st.max(1e-9)
         );
     }
     Ok(())

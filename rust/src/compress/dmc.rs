@@ -5,6 +5,9 @@
 //! weighted average (`CacheStore::merge_into_last`), so the cache does
 //! not grow. No delayed window — that is precisely the training-
 //! difficulty contrast with DMS the paper exploits.
+//!
+//! Knobs: none at inference — the merge rate (and thus CR) is learned.
+//! See `docs/POLICIES.md`.
 
 use super::{Policy, PolicyKind, StepView, WriteAction};
 use crate::kvcache::CacheStore;

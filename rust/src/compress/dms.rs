@@ -6,6 +6,10 @@
 //! position t is *scheduled* for eviction at t + w and stays fully
 //! attendable until then. Immediate mode (the §5.3 ablation): the
 //! decision made at t evicts the token from position t − w right away.
+//!
+//! Knobs: eviction delay `window` w (from the model variant; 16 in the
+//! exported retrofits) and the `immediate` ablation flag. The achieved
+//! CR is learned, not configured. See `docs/POLICIES.md`.
 
 use super::{Policy, PolicyKind, StepView};
 use crate::kvcache::CacheStore;

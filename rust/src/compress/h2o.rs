@@ -4,6 +4,9 @@
 //! heavy-hitter set (App. F.1). Cumulative attention scores accumulate
 //! per slot each step; on overflow the lowest-cumulative non-recent
 //! token is evicted (layer-wide, like TOVA).
+//!
+//! Knobs: token `budget` per head (App. F.1: (input + max_gen) / CR);
+//! the recent window is fixed to budget / 2. See `docs/POLICIES.md`.
 
 use super::{Policy, PolicyKind, StepView};
 use crate::kvcache::CacheStore;

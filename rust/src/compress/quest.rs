@@ -6,6 +6,9 @@
 //! min/max key metadata. Page selection runs inside the decode HLO
 //! (model.py); this policy only carries the page budget and the
 //! metadata overhead accounting.
+//!
+//! Knobs: `budget_tokens` (App. F.1), rounded up to pages of
+//! `page_size`. Reduces reads, not residency. See `docs/POLICIES.md`.
 
 use super::{Policy, PolicyKind, StepView};
 use crate::kvcache::CacheStore;

@@ -5,6 +5,8 @@
 //! aggregated over the heads of each layer (§2.2: i* = argmin_i Σ_h
 //! a_h(t)_i). Eviction is layer-wide: all KV heads of a layer drop the
 //! same token, as in the reference implementation.
+//!
+//! Knobs: token `budget` per head (App. F.1). See `docs/POLICIES.md`.
 
 use super::{Policy, PolicyKind, StepView};
 use crate::kvcache::CacheStore;

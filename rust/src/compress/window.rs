@@ -1,5 +1,8 @@
 //! Trivial policies: vanilla (no compression) and a fixed sliding
 //! window (evict everything older than the budget).
+//!
+//! Knobs: token `budget` per head for the window (App. F.1); vanilla
+//! has none. See `docs/POLICIES.md`.
 
 use super::{Policy, PolicyKind, StepView};
 use crate::kvcache::CacheStore;

@@ -36,6 +36,10 @@ pub struct EngineConfig {
     /// slice→device input uploads (§Perf optimization). `--literal-exec`
     /// falls back to per-step literal uploads for comparison.
     pub buffered_exec: bool,
+    /// Parallelize per-lane host work (policy scoring, sampling) across
+    /// scoped threads, one per active lane. `--serial-lanes` disables
+    /// it for debugging/comparison; results are identical either way.
+    pub lane_threads: bool,
 }
 
 impl Default for EngineConfig {
@@ -51,6 +55,7 @@ impl Default for EngineConfig {
             top_k: 0,
             use_jnp_decode: false,
             buffered_exec: true,
+            lane_threads: true,
         }
     }
 }
@@ -79,6 +84,9 @@ impl EngineConfig {
         if args.flag("literal-exec") {
             self.buffered_exec = false;
         }
+        if args.flag("serial-lanes") {
+            self.lane_threads = false;
+        }
         Ok(self)
     }
 
@@ -106,6 +114,9 @@ impl EngineConfig {
         }
         if let Some(v) = j.get("slots").and_then(|x| x.as_usize()) {
             cfg.slots = v;
+        }
+        if let Some(v) = j.get("lane_threads").and_then(Json::as_bool) {
+            cfg.lane_threads = v;
         }
         Ok(cfg)
     }

@@ -1,0 +1,235 @@
+//! Step-batch assembly: packing active lanes into executor inputs and
+//! fanning per-lane host work out across scoped threads.
+//!
+//! One scheduler *tick* may carry both a prefill chunk (for lanes still
+//! consuming their prompt) and a decode step (for lanes generating) —
+//! the AOT artifacts export prefill and decode as separate programs, so
+//! a mixed tick issues both back-to-back instead of stalling decode
+//! lanes behind prefill as the pre-refactor engine did.
+//!
+//! After the executor returns, the per-lane host work — gathering the
+//! lane's α/attention views from the batched outputs, asking the
+//! compression policy for its write actions, and sampling the next
+//! token — is independent across lanes (each lane owns its policy and
+//! sampler, and reads disjoint slices of the outputs), so it runs on
+//! scoped threads, one per active lane. Only the cache writes
+//! themselves are applied sequentially afterwards: the `CacheStore`'s
+//! flat arrays interleave lanes within each layer, and the write volume
+//! is memcpy-bound anyway. Results are collected in lane order, so
+//! threading never changes observable behaviour.
+
+use super::scheduler::{ChainState, Phase};
+use crate::compress::WriteAction;
+use crate::kvcache::Geometry;
+use crate::runtime::DecodeOutputs;
+
+/// Executor inputs for one prefill chunk across all prefilling lanes.
+pub struct PrefillBatch {
+    /// i32[B, C] token ids (PAD on inactive positions).
+    pub tokens: Vec<i32>,
+    /// i32[B, C] absolute positions.
+    pub positions: Vec<i32>,
+    /// f32[B, C] validity mask (1.0 = real token).
+    pub valid: Vec<f32>,
+    /// Tokens packed for each lane this chunk (0 = lane not prefilling).
+    pub chunk_lens: Vec<usize>,
+}
+
+impl PrefillBatch {
+    /// True when no lane had prompt tokens left to pack.
+    pub fn is_empty(&self) -> bool {
+        self.chunk_lens.iter().all(|&n| n == 0)
+    }
+}
+
+/// Pack up to `chunk` prompt tokens per prefilling lane.
+pub fn assemble_prefill(
+    lanes: &[Option<ChainState>],
+    batch: usize,
+    chunk: usize,
+    pad: i32,
+) -> PrefillBatch {
+    let mut tokens = vec![pad; batch * chunk];
+    let mut positions = vec![0i32; batch * chunk];
+    let mut valid = vec![0f32; batch * chunk];
+    let mut chunk_lens = vec![0usize; batch];
+    for (lane, slot) in lanes.iter().enumerate().take(batch) {
+        let Some(a) = slot else { continue };
+        let Phase::Prefill { offset } = a.phase else { continue };
+        let n = (a.prefill_ids.len() - offset).min(chunk);
+        chunk_lens[lane] = n;
+        for j in 0..n {
+            tokens[lane * chunk + j] = a.prefill_ids[offset + j] as i32;
+            positions[lane * chunk + j] = (offset + j) as i32;
+            valid[lane * chunk + j] = 1.0;
+        }
+    }
+    PrefillBatch {
+        tokens,
+        positions,
+        valid,
+        chunk_lens,
+    }
+}
+
+/// Executor inputs for one decode step across all decoding lanes.
+pub struct DecodeBatch {
+    /// i32[B] current input token per lane (PAD on idle lanes).
+    pub tokens: Vec<i32>,
+    /// i32[B] position per lane.
+    pub positions: Vec<i32>,
+    /// Lanes actually decoding this step, ascending.
+    pub lanes: Vec<usize>,
+}
+
+impl DecodeBatch {
+    /// True when no lane is in decode phase.
+    pub fn is_empty(&self) -> bool {
+        self.lanes.is_empty()
+    }
+}
+
+/// Pack the current token/position of every decoding lane.
+pub fn assemble_decode(lanes: &[Option<ChainState>], batch: usize, pad: i32) -> DecodeBatch {
+    let mut tokens = vec![pad; batch];
+    let mut positions = vec![0i32; batch];
+    let mut active = Vec::new();
+    for (lane, slot) in lanes.iter().enumerate().take(batch) {
+        let Some(a) = slot else { continue };
+        if !matches!(a.phase, Phase::Decode) {
+            continue;
+        }
+        tokens[lane] = a.cur_token as i32;
+        positions[lane] = a.pos as i32;
+        active.push(lane);
+    }
+    DecodeBatch {
+        tokens,
+        positions,
+        lanes: active,
+    }
+}
+
+/// Per-lane host work computed (possibly in parallel) after a decode
+/// step: the lane's gathered output views, the policy's write actions,
+/// and the sampled next token.
+pub struct LaneStep {
+    /// Lane index inside the executor batch.
+    pub lane: usize,
+    /// α per (layer, kv-head) — `[L*H]`.
+    pub alpha: Vec<f32>,
+    /// Attention mass per (layer, kv-head, slot) — `[L*H*S]`.
+    pub attn: Vec<f32>,
+    /// Self-attention mass per (layer, kv-head) — `[L*H]`.
+    pub attn_self: Vec<f32>,
+    /// Append/merge decision per (layer, kv-head).
+    pub actions: Vec<WriteAction>,
+    /// Token sampled from this step's logits.
+    pub next_token: u32,
+    /// Quest: pages selected by the executor this step (0 otherwise).
+    pub quest_sel_pages: usize,
+}
+
+/// Below this many per-lane elements (attention view `L*H*S` — the
+/// dominant copy), spawning a thread costs more than the work it
+/// carries; such steps run inline even with `parallel` set.
+const PARALLEL_MIN_ELEMS: usize = 8192;
+
+/// Run the per-lane host work for every decoding lane. With
+/// `parallel` set, more than one active lane, and per-lane views large
+/// enough to be worth a thread spawn, each lane's work runs on its own
+/// scoped thread; policy scoring and sampling only touch the lane's
+/// own [`ChainState`] plus disjoint read-only slices of `out`, so the
+/// result is identical to the sequential order (results are collected
+/// in ascending lane order either way).
+pub fn decode_host_work(
+    lanes: &mut [Option<ChainState>],
+    out: &DecodeOutputs,
+    geom: Geometry,
+    batch: usize,
+    vocab: usize,
+    quest: bool,
+    parallel: bool,
+) -> Vec<LaneStep> {
+    let work: Vec<(usize, &mut ChainState)> = lanes
+        .iter_mut()
+        .enumerate()
+        .take(batch)
+        .filter_map(|(i, s)| s.as_mut().map(|c| (i, c)))
+        .filter(|(_, c)| matches!(c.phase, Phase::Decode))
+        .collect();
+    let per_lane = geom.lh() * geom.slots;
+    if !parallel || work.len() <= 1 || per_lane < PARALLEL_MIN_ELEMS {
+        return work
+            .into_iter()
+            .map(|(lane, c)| lane_step(lane, c, out, geom, batch, vocab, quest))
+            .collect();
+    }
+    std::thread::scope(|s| {
+        let handles: Vec<_> = work
+            .into_iter()
+            .map(|(lane, c)| {
+                s.spawn(move || lane_step(lane, c, out, geom, batch, vocab, quest))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("lane worker panicked"))
+            .collect()
+    })
+}
+
+fn lane_step(
+    lane: usize,
+    chain: &mut ChainState,
+    out: &DecodeOutputs,
+    geom: Geometry,
+    batch: usize,
+    vocab: usize,
+    quest: bool,
+) -> LaneStep {
+    let (l, h, s) = (geom.layers, geom.kv_heads, geom.slots);
+    let lh = l * h;
+    let mut alpha = vec![0f32; lh];
+    let mut attn = vec![0f32; lh * s];
+    let mut attn_self = vec![0f32; lh];
+    for li in 0..l {
+        for hi in 0..h {
+            let src = (li * batch + lane) * h + hi;
+            alpha[li * h + hi] = out.alpha[src];
+            attn_self[li * h + hi] = out.attn_self[src];
+            attn[(li * h + hi) * s..(li * h + hi + 1) * s]
+                .copy_from_slice(&out.attn[src * s..(src + 1) * s]);
+        }
+    }
+    let mut actions = Vec::with_capacity(lh);
+    chain.policy.write_actions(&alpha, l, h, &mut actions);
+    let next_token = chain
+        .sampler
+        .sample(&out.logits[lane * vocab..(lane + 1) * vocab]);
+    let quest_sel_pages = if quest {
+        let pages = geom.pages();
+        let mut sel = 0usize;
+        for li in 0..l {
+            for hi in 0..h {
+                let base = ((li * batch + lane) * h + hi) * pages;
+                sel += out.qsel[base..base + pages]
+                    .iter()
+                    .filter(|&&x| x > 0.5)
+                    .count();
+            }
+        }
+        sel
+    } else {
+        0
+    };
+    LaneStep {
+        lane,
+        alpha,
+        attn,
+        attn_self,
+        actions,
+        next_token,
+        quest_sel_pages,
+    }
+}

@@ -1,14 +1,36 @@
-//! Engine core: lane scheduler, prefill/decode loop, metric accounting.
+//! Engine core: PJRT executor plumbing around the continuous-batching
+//! scheduler.
+//!
+//! The engine owns the *data plane* — weights, compiled executables,
+//! the KV [`CacheStore`], the tokenizer — and drives the control plane
+//! in [`super::scheduler`] one *tick* at a time. A tick admits pending
+//! chains into idle lanes (optionally preempting under cache pressure),
+//! then issues at most one prefill chunk and one decode step covering
+//! every active lane, so freshly admitted requests prefill while older
+//! requests keep decoding. Batches are assembled and the per-lane host
+//! work parallelized by [`super::batch`].
+//!
+//! Two entry points sit on top of the tick loop:
+//!
+//! * [`Engine::run`] — classic static batch: submit everything, tick
+//!   until drained (all existing callers);
+//! * [`Engine::begin_session`] / [`Engine::submit`] / [`Engine::tick`]
+//!   — dynamic admission for the server: requests join and retire
+//!   mid-run, and each completion carries queueing/TTFT timing.
 
-use std::collections::VecDeque;
+use std::collections::BTreeMap;
 use std::path::Path;
 use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
-use super::sampler::Sampler;
-use super::sequence::{ChainResult, ChainStats, FinishReason, GenRequest, GenResult};
+use super::batch;
+use super::scheduler::{
+    ChainState, CompletedRequest, Phase, Scheduler, SchedulerConfig,
+};
+use super::sequence::{ChainResult, FinishReason, GenRequest, GenResult};
 use crate::compress::{build_policy, Policy, PolicyKind, StepView, WriteAction};
 use crate::config::EngineConfig;
 use crate::kvcache::{CacheStore, Geometry};
@@ -16,54 +38,60 @@ use crate::metrics::Registry;
 use crate::runtime::{Executor, ParamBuffers, Runtime, Weights};
 use crate::tokenizer::{Tokenizer, BOS_ID, EOS_ID, PAD_ID};
 
-/// Aggregate engine statistics for a `run` call.
+/// Aggregate engine statistics for a `run` call / serving session.
 #[derive(Clone, Debug, Default)]
 pub struct EngineStats {
+    /// Decode steps issued to the executor.
     pub decode_steps: u64,
+    /// Prefill chunks issued to the executor.
     pub prefill_chunks: u64,
+    /// Seconds spent inside executor calls.
     pub executor_s: f64,
+    /// Seconds spent per tick end-to-end (includes `executor_s`).
     pub host_s: f64,
+    /// Siblings that reused a leader's prefill via cache fork.
     pub forks: u64,
+    /// Chains preempted back into the queue under cache pressure.
+    pub preemptions: u64,
+    /// Scheduler ticks that did executor work.
+    pub ticks: u64,
 }
 
-enum Phase {
-    Prefill { offset: usize },
-    Decode,
+/// One continuous-batching run: the scheduler plus its accumulated
+/// statistics. Created by [`Engine::begin_session`]; requests enter via
+/// [`Engine::submit`] and leave through the completions returned by
+/// [`Engine::tick`].
+pub struct Session {
+    sched: Scheduler,
+    stats: EngineStats,
 }
 
-struct Active {
-    req_idx: usize,
-    chain_idx: usize,
-    group: usize,
-    prompt_ids: Rc<Vec<u32>>,
-    max_len: usize,
-    policy: Box<dyn Policy>,
-    sampler: Sampler,
-    phase: Phase,
-    cur_token: u32,
-    pos: usize,
-    gen_ids: Vec<u32>,
-    stats: ChainStats,
-    started: Instant,
-}
+impl Session {
+    /// Statistics accumulated so far.
+    pub fn stats(&self) -> &EngineStats {
+        &self.stats
+    }
 
-struct PendingChain {
-    req_idx: usize,
-    chain_idx: usize,
-    group: usize,
-    prompt_ids: Rc<Vec<u32>>,
-    max_len: usize,
-    temperature: f64,
-    seed: u64,
-    /// Group sibling that waits for a fork from the leader's prefill.
-    wait_fork: bool,
+    /// Chains waiting for a lane.
+    pub fn queue_depth(&self) -> usize {
+        self.sched.queue_depth()
+    }
+
+    /// Lanes currently running a chain.
+    pub fn active_lanes(&self) -> usize {
+        self.sched.active_lanes()
+    }
 }
 
 /// The inference engine: one executor batch + policy + metrics.
 pub struct Engine {
+    /// PJRT runtime (client, manifest, artifact loaders).
     pub runtime: Runtime,
+    /// Engine configuration this instance was built with.
     pub cfg: EngineConfig,
+    /// Tokenizer shared with the Python exporter.
     pub tokenizer: Tokenizer,
+    /// Serving metrics registry (counters / gauges / histograms).
     pub metrics: Registry,
     geom: Geometry,
     weights: Rc<Weights>,
@@ -139,6 +167,7 @@ impl Engine {
         })
     }
 
+    /// Cache geometry of the loaded executables.
     pub fn geometry(&self) -> Geometry {
         self.geom
     }
@@ -196,8 +225,9 @@ impl Engine {
         self.metrics.report()
     }
 
-    /// Quest page budget for a run configuration (scalar for the whole
-    /// batch — all chains in a run share max_len and CR).
+    /// Quest page budget for a step (scalar for the whole batch — the
+    /// decode executable takes one `k`; the largest active `max_len`
+    /// sets it).
     fn quest_k(&self, max_len: usize) -> i32 {
         if self.cfg.policy == PolicyKind::Quest {
             let budget = (max_len as f64 / self.cfg.cr).ceil() as usize;
@@ -217,128 +247,158 @@ impl Engine {
         )
     }
 
-    /// Run a batch of requests to completion (continuous batching).
-    pub fn run(&mut self, requests: &[GenRequest]) -> Result<(Vec<GenResult>, EngineStats)> {
-        let b = self.cfg.batch;
-        let mut stats = EngineStats::default();
-        let mut pending: VecDeque<PendingChain> = VecDeque::new();
-        let mut results: Vec<Vec<Option<ChainResult>>> = Vec::new();
+    // ------------------------------------------------------------------
+    // Session API (dynamic admission)
+    // ------------------------------------------------------------------
 
-        let mut group_counter = 0usize;
-        for (ri, req) in requests.iter().enumerate() {
-            let ids: Vec<u32> = {
-                let mut v = vec![BOS_ID];
-                v.extend(self.tokenizer.encode(&req.prompt)?);
-                v
-            };
-            if ids.len() + 2 > req.max_len {
-                bail!(
-                    "prompt ({} tokens) does not fit max_len {}",
-                    ids.len(),
-                    req.max_len
-                );
-            }
-            if req.max_len > self.geom.slots {
-                bail!("max_len {} exceeds slot capacity {}", req.max_len, self.geom.slots);
-            }
-            let ids = Rc::new(ids);
-            results.push(vec![None; req.width]);
-            let group = group_counter;
-            group_counter += 1;
-            for w in 0..req.width {
-                pending.push_back(PendingChain {
-                    req_idx: ri,
-                    chain_idx: w,
-                    group,
-                    prompt_ids: ids.clone(),
-                    max_len: req.max_len,
-                    temperature: req.temperature,
-                    seed: req.seed.wrapping_add(w as u64),
-                    wait_fork: w > 0,
-                });
-            }
-        }
-
-        let mut lanes: Vec<Option<Active>> = (0..b).map(|_| None).collect();
-        let run_quest_k = self.quest_k(requests.first().map(|r| r.max_len).unwrap_or(160));
-
-        loop {
-            // ---- fill idle lanes ----
-            self.fill_lanes(&mut lanes, &mut pending, &mut stats);
-            if lanes.iter().all(Option::is_none) {
-                break;
-            }
-            let any_prefill = lanes
-                .iter()
-                .flatten()
-                .any(|a| matches!(a.phase, Phase::Prefill { .. }));
-            let t0 = Instant::now();
-            if any_prefill {
-                self.prefill_step(&mut lanes, &mut pending, &mut results, &mut stats)?;
-                stats.prefill_chunks += 1;
-            } else {
-                self.decode_step(&mut lanes, &mut results, &mut stats, run_quest_k)?;
-                stats.decode_steps += 1;
-            }
-            stats.host_s += t0.elapsed().as_secs_f64();
-        }
-
-        let out = results
-            .into_iter()
-            .map(|chains| GenResult {
-                chains: chains.into_iter().map(|c| c.unwrap()).collect(),
-            })
-            .collect();
-        Ok((out, stats))
+    /// Start a serving session with default scheduling (FCFS admission,
+    /// no preemption).
+    pub fn begin_session(&self) -> Session {
+        self.begin_session_with(SchedulerConfig::default())
     }
 
-    fn fill_lanes(
-        &mut self,
-        lanes: &mut [Option<Active>],
-        pending: &mut VecDeque<PendingChain>,
-        _stats: &mut EngineStats,
-    ) {
-        for lane in 0..lanes.len() {
-            if lanes[lane].is_some() {
-                continue;
-            }
-            // prefer chains that are not waiting for a fork; a waiting
-            // sibling whose leader is gone is promoted to self-prefill.
-            let idx = pending.iter().position(|p| !p.wait_fork).or_else(|| {
-                pending.iter().position(|p| {
-                    // leader no longer active or pending → self-prefill
-                    let leader_active = lanes.iter().flatten().any(|a| {
-                        a.group == p.group && matches!(a.phase, Phase::Prefill { .. })
-                    });
-                    let leader_pending = pending
-                        .iter()
-                        .any(|q| q.group == p.group && !q.wait_fork);
-                    !leader_active && !leader_pending
-                })
-            });
-            let Some(idx) = idx else { continue };
-            let p = pending.remove(idx).unwrap();
+    /// Start a serving session with explicit scheduler configuration.
+    pub fn begin_session_with(&self, scfg: SchedulerConfig) -> Session {
+        Session {
+            sched: Scheduler::new(self.cfg.batch, scfg),
+            stats: EngineStats::default(),
+        }
+    }
+
+    /// Tokenize, validate, and enqueue one request; returns the ticket
+    /// that identifies it in [`Engine::tick`] completions. Invalid
+    /// requests fail here without affecting in-flight work.
+    pub fn submit(&mut self, session: &mut Session, req: &GenRequest) -> Result<u64> {
+        let mut ids = vec![BOS_ID];
+        ids.extend(self.tokenizer.encode(&req.prompt)?);
+        if ids.len() + 2 > req.max_len {
+            bail!(
+                "prompt ({} tokens) does not fit max_len {}",
+                ids.len(),
+                req.max_len
+            );
+        }
+        if req.max_len > self.geom.slots {
+            bail!(
+                "max_len {} exceeds slot capacity {}",
+                req.max_len,
+                self.geom.slots
+            );
+        }
+        Ok(session.sched.submit(req, Arc::new(ids)))
+    }
+
+    /// Whether the session has no running or queued chains.
+    pub fn is_idle(&self, session: &Session) -> bool {
+        !session.sched.has_work()
+    }
+
+    /// Advance the session by one scheduler tick: admit (and possibly
+    /// preempt), then issue one prefill chunk and/or one decode step
+    /// across the active lanes. Returns every request whose last chain
+    /// finished during the tick.
+    pub fn tick(&mut self, session: &mut Session) -> Result<Vec<CompletedRequest>> {
+        let sched = &mut session.sched;
+        let stats = &mut session.stats;
+        let mut completed = Vec::new();
+
+        self.admit(sched);
+        let live_fraction = self.cache.live_fraction();
+        if let Some(lane) = sched.maybe_preempt(live_fraction) {
+            self.cache.recycle_lane(lane);
+            stats.preemptions += 1;
+            self.admit(sched);
+        }
+        if sched.active_lanes() == 0 {
+            return Ok(completed);
+        }
+
+        stats.ticks += 1;
+        let t0 = Instant::now();
+        if self.prefill_step(sched, stats, &mut completed)? {
+            stats.prefill_chunks += 1;
+        }
+        if self.decode_step(sched, stats, &mut completed)? {
+            stats.decode_steps += 1;
+        }
+        stats.host_s += t0.elapsed().as_secs_f64();
+
+        let live_fraction = self.cache.live_fraction();
+        let max_lane_fraction = (0..self.cfg.batch)
+            .map(|lane| self.cache.lane_live_fraction(lane))
+            .fold(0.0f64, f64::max);
+        self.metrics
+            .gauge("engine.active_lanes")
+            .set(sched.active_lanes() as f64);
+        self.metrics
+            .gauge("engine.queue_depth")
+            .set(sched.queue_depth() as f64);
+        self.metrics.gauge("kv.live_fraction").set(live_fraction);
+        self.metrics
+            .gauge("kv.max_lane_live_fraction")
+            .set(max_lane_fraction);
+        for c in &completed {
+            let t = &c.timing;
+            self.metrics.histogram("serve.queue_ms").record(t.queue_ms);
+            self.metrics.histogram("serve.ttft_ms").record(t.ttft_ms);
+            self.metrics.histogram("serve.e2e_ms").record(t.e2e_ms);
+            self.metrics
+                .histogram("serve.req_tokens_per_s")
+                .record(t.tokens_per_s());
+            self.metrics.counter("serve.requests").inc();
+            self.metrics
+                .counter("serve.gen_tokens")
+                .add(t.gen_tokens as f64);
+        }
+        Ok(completed)
+    }
+
+    /// Fill idle lanes from the admission queue.
+    fn admit(&mut self, sched: &mut Scheduler) {
+        while let Some(lane) = sched.idle_lane() {
+            let Some(p) = sched.next_admission() else { break };
             self.cache.reset_lane(lane);
             let policy = self.build_chain_policy(p.max_len);
-            lanes[lane] = Some(Active {
-                req_idx: p.req_idx,
-                chain_idx: p.chain_idx,
-                group: p.group,
-                prompt_ids: p.prompt_ids.clone(),
-                max_len: p.max_len,
-                policy,
-                sampler: Sampler::new(p.temperature, self.cfg.top_k, p.seed),
-                phase: Phase::Prefill { offset: 0 },
-                cur_token: PAD_ID,
-                pos: 0,
-                gen_ids: Vec::new(),
-                stats: ChainStats {
-                    prompt_tokens: p.prompt_ids.len(),
-                    ..Default::default()
-                },
-                started: Instant::now(),
-            });
+            sched.install(lane, ChainState::new(p, policy, self.cfg.top_k));
         }
+    }
+
+    // ------------------------------------------------------------------
+    // Static-batch API (unchanged signature)
+    // ------------------------------------------------------------------
+
+    /// Run a batch of requests to completion (continuous batching).
+    pub fn run(&mut self, requests: &[GenRequest]) -> Result<(Vec<GenResult>, EngineStats)> {
+        let mut session = self.begin_session();
+        let mut tickets = Vec::with_capacity(requests.len());
+        for req in requests {
+            tickets.push(self.submit(&mut session, req)?);
+        }
+        let mut done: BTreeMap<u64, GenResult> = BTreeMap::new();
+        while !self.is_idle(&session) {
+            for c in self.tick(&mut session)? {
+                done.insert(c.ticket, c.result);
+            }
+        }
+        let out = tickets
+            .iter()
+            .map(|t| done.remove(t).expect("request completed"))
+            .collect();
+        Ok((out, session.stats.clone()))
+    }
+
+    /// Convenience: run a single request.
+    pub fn generate(&mut self, req: GenRequest) -> Result<GenResult> {
+        let (mut out, _) = self.run(std::slice::from_ref(&req))?;
+        Ok(out.remove(0))
+    }
+
+    /// Open an engine from an artifacts path with defaults.
+    pub fn open(artifacts: &Path) -> Result<Self> {
+        Engine::new(EngineConfig {
+            artifacts: artifacts.to_path_buf(),
+            ..Default::default()
+        })
     }
 
     // ------------------------------------------------------------------
@@ -347,30 +407,17 @@ impl Engine {
 
     fn prefill_step(
         &mut self,
-        lanes: &mut [Option<Active>],
-        pending: &mut VecDeque<PendingChain>,
-        results: &mut [Vec<Option<ChainResult>>],
+        sched: &mut Scheduler,
         stats: &mut EngineStats,
-    ) -> Result<()> {
+        completed: &mut Vec<CompletedRequest>,
+    ) -> Result<bool> {
         let b = self.cfg.batch;
         let c = self.prefill_exec.meta.chunk;
         let (l, h, hd) = (self.geom.layers, self.geom.kv_heads, self.geom.head_dim);
 
-        let mut tokens = vec![PAD_ID as i32; b * c];
-        let mut positions = vec![0i32; b * c];
-        let mut valid = vec![0f32; b * c];
-        let mut chunk_lens = vec![0usize; b];
-
-        for (lane, slot) in lanes.iter().enumerate() {
-            let Some(a) = slot else { continue };
-            let Phase::Prefill { offset } = a.phase else { continue };
-            let n = (a.prompt_ids.len() - offset).min(c);
-            chunk_lens[lane] = n;
-            for j in 0..n {
-                tokens[lane * c + j] = a.prompt_ids[offset + j] as i32;
-                positions[lane * c + j] = (offset + j) as i32;
-                valid[lane * c + j] = 1.0;
-            }
+        let pb = batch::assemble_prefill(sched.lanes(), b, c, PAD_ID as i32);
+        if pb.is_empty() {
+            return Ok(false);
         }
 
         let t0 = Instant::now();
@@ -379,35 +426,36 @@ impl Engine {
             self.cache.k_slice(),
             self.cache.v_slice(),
             self.cache.mask_slice(),
-            &tokens,
-            &positions,
-            &valid,
+            &pb.tokens,
+            &pb.positions,
+            &pb.valid,
             &self.geom,
         )?;
         stats.executor_s += t0.elapsed().as_secs_f64();
 
         // write chunk outputs per prefilling lane
+        let honor_alpha = self.dms_variant
+            && matches!(
+                self.cfg.policy,
+                PolicyKind::Dms | PolicyKind::DmsImmediate
+            );
         for lane in 0..b {
-            let n = chunk_lens[lane];
+            let n = pb.chunk_lens[lane];
             if n == 0 {
                 continue;
             }
-            let Some(a) = lanes[lane].as_mut() else { continue };
-            let Phase::Prefill { offset } = a.phase else { continue };
+            let offset = match sched.lane(lane).map(|a| a.phase) {
+                Some(Phase::Prefill { offset }) => offset,
+                _ => continue,
+            };
             let cache_live_before = self.cache.live_tokens(lane);
-            let honor_alpha = self.dms_variant
-                && matches!(
-                    self.cfg.policy,
-                    PolicyKind::Dms | PolicyKind::DmsImmediate
-                );
 
             for j in 0..n {
                 let pos = offset + j;
                 let mut overflow = false;
                 for li in 0..l {
                     for hi in 0..h {
-                        let base =
-                            ((((li * b) + lane) * h + hi) * c + j) * hd;
+                        let base = ((((li * b) + lane) * h + hi) * c + j) * hd;
                         let kk = &out.k_new[base..base + hd];
                         let vv = &out.v_new[base..base + hd];
                         match self.cache.alloc_slot(lane, li, hi) {
@@ -445,103 +493,81 @@ impl Engine {
                     }
                 }
                 // reads: existing cache + intra-chunk causal visibility
-                a.stats.prefill_reads += cache_live_before + (j + 1) as f64;
+                sched.lane_mut(lane).unwrap().stats.prefill_reads +=
+                    cache_live_before + (j + 1) as f64;
                 if overflow {
                     // prompt doesn't fit (vanilla long-context): finish now
-                    let a = lanes[lane].take().unwrap();
-                    self.finish_chain(a, lane, FinishReason::Overflow, results);
+                    let chain = sched.take(lane).unwrap();
+                    if let Some(done) =
+                        self.finish_chain(chain, lane, FinishReason::Overflow, sched)
+                    {
+                        completed.push(done);
+                    }
                     break;
                 }
             }
-            if lanes[lane].is_none() {
+            if sched.lane(lane).is_none() {
                 continue; // overflowed above
             }
-            let a = lanes[lane].as_mut().unwrap();
             self.cache.apply_due_evictions(lane, offset + n);
-            let peak = self.lane_peak_tokens(lane);
+            let peak = self.cache.live_tokens(lane);
+            let a = sched.lane_mut(lane).unwrap();
             if peak > a.stats.peak_tokens {
                 a.stats.peak_tokens = peak;
             }
 
             let new_offset = offset + n;
-            if new_offset == a.prompt_ids.len() {
+            if new_offset == a.prefill_ids.len() {
                 // prefill complete: trim to budget, sample first token
                 a.policy.post_prefill(&mut self.cache, lane, new_offset);
                 let v = self.runtime.manifest.config.vocab;
                 let last = n - 1;
                 let logits = &out.logits[(lane * c + last) * v..(lane * c + last + 1) * v];
-                let tok = a.sampler.sample(logits);
+                // a resumed chain already sampled its next token before
+                // the preemption — continue with it, untouched RNG.
+                let resumed = a.resume_token.is_some();
+                let tok = match a.resume_token.take() {
+                    Some(t) => t,
+                    None => a.sampler.sample(logits),
+                };
                 a.cur_token = tok;
                 a.pos = new_offset;
                 a.phase = Phase::Decode;
-                let group = a.group;
-                // fork siblings into idle lanes (prefix sharing)
-                self.fork_siblings(lanes, pending, lane, group, stats);
+                let ticket = a.ticket;
+                sched.note_first_token(ticket);
+                // fork siblings into idle lanes (prefix sharing) — but
+                // never off a resumed chain: its re-prefilled cache
+                // holds generated tokens, not just the prompt, so
+                // stranded siblings self-prefill via promotion instead.
+                if !resumed {
+                    self.fork_siblings(sched, lane, ticket, tok, new_offset, stats);
+                }
             } else {
                 a.phase = Phase::Prefill { offset: new_offset };
             }
         }
-        Ok(())
+        Ok(true)
     }
 
     fn fork_siblings(
         &mut self,
-        lanes: &mut [Option<Active>],
-        pending: &mut VecDeque<PendingChain>,
+        sched: &mut Scheduler,
         src_lane: usize,
-        group: usize,
+        ticket: u64,
+        leader_token: u32,
+        leader_pos: usize,
         stats: &mut EngineStats,
     ) {
+        // src_lane is occupied, so idle_lane() can never return it.
         loop {
-            let Some(dst) = (0..lanes.len()).find(|&i| i != src_lane && lanes[i].is_none())
-            else {
-                break;
-            };
-            let Some(pi) = pending.iter().position(|p| p.group == group && p.wait_fork)
-            else {
-                break;
-            };
-            let p = pending.remove(pi).unwrap();
+            let Some(dst) = sched.idle_lane() else { break };
+            let Some(p) = sched.take_fork_sibling(ticket) else { break };
             self.cache.fork_lane(src_lane, dst);
-            let src = lanes[src_lane].as_ref().unwrap();
-            let mut sampler = Sampler::new(p.temperature, self.cfg.top_k, p.seed);
-            // the sibling samples its own first token from the same
-            // prefill logits — approximated by re-sampling from the
-            // leader's: we reuse the leader's first token distribution
-            // by sampling with the sibling's RNG on the next decode
-            // step. Simplest faithful approach: sibling starts from the
-            // leader's first sampled token only if greedy; otherwise we
-            // resample on first decode by feeding the same position.
-            let cur = if p.temperature <= 0.0 {
-                src.cur_token
-            } else {
-                // diversity: sample from leader's logits is not stored;
-                // use leader token but rely on temperature at later
-                // steps (first tokens of reasoning traces are nearly
-                // deterministic in this task family).
-                src.cur_token
-            };
-            let stats_c = ChainStats {
-                prompt_tokens: src.prompt_ids.len(),
-                forked_prefill: true,
-                ..Default::default()
-            };
-            sampler.sample(&[0.0]); // decorrelate RNG streams
-            lanes[dst] = Some(Active {
-                req_idx: p.req_idx,
-                chain_idx: p.chain_idx,
-                group,
-                prompt_ids: p.prompt_ids.clone(),
-                max_len: p.max_len,
-                policy: self.build_chain_policy(p.max_len),
-                sampler,
-                phase: Phase::Decode,
-                cur_token: cur,
-                pos: src.pos,
-                gen_ids: Vec::new(),
-                stats: stats_c,
-                started: Instant::now(),
-            });
+            let policy = self.build_chain_policy(p.max_len);
+            sched.install(
+                dst,
+                ChainState::forked(p, policy, self.cfg.top_k, leader_token, leader_pos),
+            );
             stats.forks += 1;
         }
     }
@@ -552,49 +578,54 @@ impl Engine {
 
     fn decode_step(
         &mut self,
-        lanes: &mut [Option<Active>],
-        results: &mut [Vec<Option<ChainResult>>],
+        sched: &mut Scheduler,
         stats: &mut EngineStats,
-        quest_k: i32,
-    ) -> Result<()> {
+        completed: &mut Vec<CompletedRequest>,
+    ) -> Result<bool> {
         let b = self.cfg.batch;
-        let (l, h, s, hd) = (
-            self.geom.layers,
-            self.geom.kv_heads,
-            self.geom.slots,
-            self.geom.head_dim,
-        );
+        let (l, h, hd) = (self.geom.layers, self.geom.kv_heads, self.geom.head_dim);
         let lh = l * h;
         let v = self.runtime.manifest.config.vocab;
 
-        let mut tokens = vec![PAD_ID as i32; b];
-        let mut positions = vec![0i32; b];
-        for (lane, slot) in lanes.iter().enumerate() {
-            if let Some(a) = slot {
+        // execute due delayed evictions before packing the step
+        for lane in 0..b {
+            if let Some(a) = sched.lane(lane) {
                 if matches!(a.phase, Phase::Decode) {
-                    tokens[lane] = a.cur_token as i32;
-                    positions[lane] = a.pos as i32;
-                    self.cache.apply_due_evictions(lane, a.pos);
+                    let pos = a.pos;
+                    self.cache.apply_due_evictions(lane, pos);
                 }
             }
         }
+        let db = batch::assemble_decode(sched.lanes(), b, PAD_ID as i32);
+        if db.is_empty() {
+            return Ok(false);
+        }
 
         let quest = self.cfg.policy == PolicyKind::Quest;
+        let quest_k = {
+            let ml = db
+                .lanes
+                .iter()
+                .filter_map(|&i| sched.lane(i))
+                .map(|a| a.max_len)
+                .max()
+                .unwrap_or(160);
+            self.quest_k(ml)
+        };
+
         // reads observed by this step (before the new token is written)
         let mut live_before = vec![0f64; b];
         let mut pages_before = vec![0usize; b];
-        for lane in 0..b {
-            if lanes[lane].is_some() {
-                live_before[lane] = self.cache.live_tokens(lane);
-                if quest {
-                    let mut pages = 0;
-                    for li in 0..l {
-                        for hi in 0..h {
-                            pages += self.cache.allocated_pages(lane, li, hi);
-                        }
+        for &lane in &db.lanes {
+            live_before[lane] = self.cache.live_tokens(lane);
+            if quest {
+                let mut pages = 0;
+                for li in 0..l {
+                    for hi in 0..h {
+                        pages += self.cache.allocated_pages(lane, li, hi);
                     }
-                    pages_before[lane] = pages;
                 }
+                pages_before[lane] = pages;
             }
         }
 
@@ -604,8 +635,8 @@ impl Engine {
                 pb,
                 self.cache.k_slice(),
                 self.cache.v_slice(),
-                &tokens,
-                &positions,
+                &db.tokens,
+                &db.positions,
                 self.cache.mask_slice(),
                 self.cache.pmin_slice(),
                 self.cache.pmax_slice(),
@@ -616,8 +647,8 @@ impl Engine {
                 self.weights.literals(),
                 self.cache.k_slice(),
                 self.cache.v_slice(),
-                &tokens,
-                &positions,
+                &db.tokens,
+                &db.positions,
                 self.cache.mask_slice(),
                 self.cache.pmin_slice(),
                 self.cache.pmax_slice(),
@@ -627,43 +658,27 @@ impl Engine {
         };
         stats.executor_s += t0.elapsed().as_secs_f64();
 
-        let pages_total = self.geom.pages();
-        let mut alpha_lane = vec![0f32; lh];
-        let mut attn_lane = vec![0f32; lh * s];
-        let mut attn_self_lane = vec![0f32; lh];
-        let mut actions: Vec<WriteAction> = Vec::with_capacity(lh);
-        let mut written: Vec<Option<usize>> = vec![None; lh];
+        // per-lane host work (view gather, policy scoring, sampling) —
+        // parallel across lanes, results in ascending lane order.
+        let steps = batch::decode_host_work(
+            sched.lanes_mut(),
+            &out,
+            self.geom,
+            b,
+            v,
+            quest,
+            self.cfg.lane_threads,
+        );
 
-        for lane in 0..b {
-            let Some(a) = lanes[lane].as_mut() else { continue };
-            if !matches!(a.phase, Phase::Decode) {
-                continue;
-            }
-            // gather per-lane views from the batched outputs
-            for li in 0..l {
-                for hi in 0..h {
-                    let src = (li * b + lane) * h + hi;
-                    alpha_lane[li * h + hi] = out.alpha[src];
-                    attn_self_lane[li * h + hi] = out.attn_self[src];
-                    attn_lane[(li * h + hi) * s..(li * h + hi + 1) * s]
-                        .copy_from_slice(&out.attn[src * s..(src + 1) * s]);
-                }
-            }
+        let mut written: Vec<Option<usize>> = vec![None; lh];
+        for step in &steps {
+            let lane = step.lane;
+            let a = sched.lane_mut(lane).unwrap();
 
             // ---- reads accounting (§5.1) ----
             if quest {
-                let mut sel_pages = 0usize;
-                for li in 0..l {
-                    for hi in 0..h {
-                        let base = ((li * b + lane) * h + hi) * pages_total;
-                        sel_pages += out.qsel[base..base + pages_total]
-                            .iter()
-                            .filter(|&&x| x > 0.5)
-                            .count();
-                    }
-                }
                 let page_reads =
-                    sel_pages as f64 * self.geom.page_size as f64 / lh as f64;
+                    step.quest_sel_pages as f64 * self.geom.page_size as f64 / lh as f64;
                 let meta_reads = pages_before[lane] as f64
                     * crate::compress::quest::QuestPolicy::META_TOKENS_PER_PAGE
                     / lh as f64;
@@ -673,7 +688,7 @@ impl Engine {
             }
 
             // ---- write the new token ----
-            a.policy.write_actions(&alpha_lane, l, h, &mut actions);
+            let pos = a.pos;
             let mut overflow = false;
             for li in 0..l {
                 for hi in 0..h {
@@ -682,14 +697,13 @@ impl Engine {
                     let kk = &out.k_new[base * hd..(base + 1) * hd];
                     let vv = &out.v_new[base * hd..(base + 1) * hd];
                     written[i] = None;
-                    match actions[i] {
+                    match step.actions[i] {
                         WriteAction::Merge => {
                             if !self.cache.merge_into_last(lane, li, hi, kk, vv) {
                                 // nothing to merge into: fall back to append
                                 match self.cache.alloc_slot(lane, li, hi) {
                                     Some(slot) => {
-                                        self.cache
-                                            .write(lane, li, hi, slot, a.pos, kk, vv);
+                                        self.cache.write(lane, li, hi, slot, pos, kk, vv);
                                         written[i] = Some(slot);
                                     }
                                     None => overflow = true,
@@ -698,7 +712,7 @@ impl Engine {
                         }
                         WriteAction::Append => match self.cache.alloc_slot(lane, li, hi) {
                             Some(slot) => {
-                                self.cache.write(lane, li, hi, slot, a.pos, kk, vv);
+                                self.cache.write(lane, li, hi, slot, pos, kk, vv);
                                 written[i] = Some(slot);
                             }
                             None => overflow = true,
@@ -709,17 +723,17 @@ impl Engine {
 
             let view = StepView {
                 lane,
-                pos: a.pos,
-                alpha: &alpha_lane,
-                attn: &attn_lane,
-                attn_self: &attn_self_lane,
+                pos,
+                alpha: &step.alpha,
+                attn: &step.attn,
+                attn_self: &step.attn_self,
                 written: &written,
             };
             a.policy.post_write(&mut self.cache, &view);
 
             // ---- per-chain bookkeeping ----
             let evict_decisions =
-                alpha_lane.iter().filter(|&&x| x > 0.5).count() as u16;
+                step.alpha.iter().filter(|&&x| x > 0.5).count() as u16;
             a.stats.evictions_per_pos.push(evict_decisions);
             let mut peak = self.cache.live_tokens(lane);
             if quest {
@@ -737,9 +751,8 @@ impl Engine {
                 a.stats.peak_tokens = peak;
             }
 
-            // ---- sample next token & check termination ----
-            let logits = &out.logits[lane * v..(lane + 1) * v];
-            let tok = a.sampler.sample(logits);
+            // ---- advance & check termination ----
+            let tok = step.next_token;
             a.gen_ids.push(a.cur_token);
             a.pos += 1;
             a.cur_token = tok;
@@ -759,24 +772,25 @@ impl Engine {
             };
 
             if let Some(reason) = finish {
-                let a = lanes[lane].take().unwrap();
-                self.finish_chain(a, lane, reason, results);
+                let chain = sched.take(lane).unwrap();
+                if let Some(done) = self.finish_chain(chain, lane, reason, sched) {
+                    completed.push(done);
+                }
             }
         }
-        Ok(())
+        Ok(true)
     }
 
-    fn lane_peak_tokens(&self, lane: usize) -> f64 {
-        self.cache.live_tokens(lane)
-    }
-
+    /// Retire a chain: record its final stats, decode its text, recycle
+    /// the lane's cache slots back to the allocator, and report the
+    /// request if this was its last chain.
     fn finish_chain(
         &mut self,
-        mut a: Active,
+        mut a: ChainState,
         lane: usize,
         finish: FinishReason,
-        results: &mut [Vec<Option<ChainResult>>],
-    ) {
+        sched: &mut Scheduler,
+    ) -> Option<CompletedRequest> {
         let (l, h) = (self.geom.layers, self.geom.kv_heads);
         let mut retained = Vec::with_capacity(l * h);
         for li in 0..l {
@@ -786,31 +800,21 @@ impl Engine {
         }
         a.stats.retained_per_lh = retained;
         a.stats.final_tokens = self.cache.live_tokens(lane);
-        a.stats.gen_tokens = a.gen_ids.len().saturating_sub(a.prompt_ids.len().min(0));
         a.stats.gen_tokens = a.gen_ids.len();
-        a.stats.wall_s = a.started.elapsed().as_secs_f64();
+        a.stats.wall_s += a.started.elapsed().as_secs_f64();
         // generated text excludes the prompt (gen_ids holds only
         // generated tokens)
         let text = self.tokenizer.decode(&a.gen_ids);
-        self.cache.reset_lane(lane);
-        results[a.req_idx][a.chain_idx] = Some(ChainResult {
-            text,
-            finish,
-            stats: a.stats,
-        });
-    }
-
-    /// Convenience: run a single request.
-    pub fn generate(&mut self, req: GenRequest) -> Result<GenResult> {
-        let (mut out, _) = self.run(std::slice::from_ref(&req))?;
-        Ok(out.remove(0))
-    }
-
-    /// Open an engine from an artifacts path with defaults.
-    pub fn open(artifacts: &Path) -> Result<Self> {
-        Engine::new(EngineConfig {
-            artifacts: artifacts.to_path_buf(),
-            ..Default::default()
-        })
+        let freed = self.cache.recycle_lane(lane);
+        self.metrics.counter("kv.slots_recycled").add(freed as f64);
+        sched.complete(
+            a.ticket,
+            a.chain_idx,
+            ChainResult {
+                text,
+                finish,
+                stats: a.stats,
+            },
+        )
     }
 }

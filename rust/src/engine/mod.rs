@@ -1,18 +1,41 @@
 //! The serving engine (Layer 3 hot path).
 //!
 //! A fixed-width executor batch (B lanes) is continuously refilled from
-//! a pending-chain queue (vLLM-style continuous batching). Prefill runs
-//! in C-token chunks; parallel-scaling requests (W > 1) prefill once and
-//! fork the prompt cache to sibling lanes (copy-on-write prefix
-//! sharing). Every decode step drives the compression policy and the
-//! §5.1 efficiency metrics (KV reads, peak tokens).
+//! a pending-chain queue (vLLM-style continuous batching). The
+//! subsystem splits into:
+//!
+//! * [`scheduler`] — the control plane: admission queue, lane
+//!   assignment, FCFS/shortest-first ordering, fork-sibling promotion,
+//!   and recompute-style preemption under cache pressure;
+//! * [`batch`] — step-batch assembly (one tick can carry a prefill
+//!   chunk *and* a decode step across different lanes) and the
+//!   scoped-thread fan-out of per-lane host work (policy scoring,
+//!   sampling);
+//! * `core` — the [`Engine`]: executors, weights, KV cache, and the
+//!   tick loop; plus the dynamic-admission [`Session`] API the server
+//!   uses to admit and retire concurrent requests mid-run.
+//!
+//! Prefill runs in C-token chunks; parallel-scaling requests (W > 1)
+//! prefill once and fork the prompt cache to sibling lanes
+//! (copy-on-write prefix sharing). Every decode step drives the
+//! compression policy and the §5.1 efficiency metrics (KV reads, peak
+//! tokens).
+
+pub mod batch;
+pub mod scheduler;
 
 mod core;
 mod sampler;
 mod sequence;
 mod voting;
 
-pub use core::{Engine, EngineStats};
+pub use self::core::{Engine, EngineStats, Session};
 pub use sampler::Sampler;
-pub use sequence::{ChainStats, FinishReason, GenRequest, GenResult};
+pub use scheduler::{
+    AdmissionPolicy, ChainState, CompletedRequest, PendingChain, Phase, ResumeState,
+    Scheduler, SchedulerConfig,
+};
+pub use sequence::{
+    ChainResult, ChainStats, FinishReason, GenRequest, GenResult, RequestTiming,
+};
 pub use voting::{aggregate, majority_vote, pass_at_all, VoteOutcome};

@@ -1,0 +1,621 @@
+//! Continuous-batching scheduler: admission queue, lane assignment,
+//! admission ordering (FCFS / shortest-first), and preemption on cache
+//! pressure.
+//!
+//! The scheduler owns the *control plane* of the engine: which chain
+//! occupies which executor lane, which pending chain is admitted next,
+//! and when a running chain is preempted back into the queue. It knows
+//! nothing about the executor, the KV cache payload, or tokenization —
+//! the [`Engine`](super::Engine) (or a test harness) drives it through
+//! a small imperative API:
+//!
+//! ```text
+//! submit(req, ids) -> ticket          // enqueue W chains, FCFS by ticket
+//! idle_lane() + next_admission()      // pick (lane, chain) pairs
+//! install(lane, ChainState::new(..))  // place a chain on a lane
+//! take(lane) + complete(..)           // retire a chain, maybe a request
+//! maybe_preempt(live_fraction)        // recompute-style preemption
+//! ```
+//!
+//! Decoupling the scheduler from the PJRT executor keeps every policy
+//! decision (ordering, promotion of stranded fork-siblings, preemption)
+//! testable with a simulated model — see `tests/property_coordinator.rs`.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::sampler::Sampler;
+use super::sequence::{ChainResult, ChainStats, GenRequest, GenResult, RequestTiming};
+use crate::compress::Policy;
+
+/// Which pending chain gets an idle lane first.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Strict first-come-first-served by submission order. This is the
+    /// fairness guarantee: no request starves, because admission order
+    /// is exactly arrival order.
+    #[default]
+    Fcfs,
+    /// Shortest-job-first by `max_len` (ties broken FCFS). Improves
+    /// mean latency under mixed workloads at the cost of delaying long
+    /// requests; long requests cannot starve forever because new
+    /// arrivals behind them are only preferred while strictly shorter.
+    ShortestFirst,
+}
+
+/// Scheduler tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct SchedulerConfig {
+    /// Admission ordering for pending chains.
+    pub admission: AdmissionPolicy,
+    /// Live-slot fraction of the cache above which the scheduler
+    /// preempts the youngest running chain whenever other chains are
+    /// waiting and no lane is idle. Preempted chains are re-queued at
+    /// the back (they yield their turn) and later resume by
+    /// recomputation: the prompt plus everything generated so far is
+    /// re-prefilled and decoding continues with the preserved sampler
+    /// state. `None` disables preemption.
+    pub preempt_watermark: Option<f64>,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        Self {
+            admission: AdmissionPolicy::Fcfs,
+            preempt_watermark: None,
+        }
+    }
+}
+
+/// Where a lane's chain is in its lifecycle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// The first `offset` tokens of `prefill_ids` are in the cache.
+    Prefill {
+        /// Number of prompt tokens already written to the cache.
+        offset: usize,
+    },
+    /// Prefill done; one new token per step.
+    Decode,
+}
+
+/// Decode-time state preserved across a preemption, so a chain resumes
+/// exactly where it stopped once it is re-admitted.
+pub struct ResumeState {
+    /// Sampler with its RNG stream advanced to the preemption point.
+    pub sampler: Sampler,
+    /// The sampled-but-not-yet-fed next input token.
+    pub cur_token: u32,
+    /// Tokens generated before the preemption.
+    pub gen_ids: Vec<u32>,
+    /// Per-chain statistics accumulated so far.
+    pub stats: ChainStats,
+}
+
+/// A chain waiting in the admission queue.
+pub struct PendingChain {
+    /// Request ticket this chain belongs to (doubles as the fork group).
+    pub ticket: u64,
+    /// Index of this chain within its request (0..width).
+    pub chain_idx: usize,
+    /// Token sequence to prefill: BOS + prompt, and on resume also the
+    /// tokens generated before preemption.
+    pub prefill_ids: Arc<Vec<u32>>,
+    /// Original prompt length in tokens (for stats; `prefill_ids` may
+    /// be longer after a preemption).
+    pub prompt_tokens: usize,
+    /// Max total tokens for the chain (the L budget).
+    pub max_len: usize,
+    /// Sampling temperature.
+    pub temperature: f64,
+    /// Chain RNG seed (ignored when `resume` carries a sampler).
+    pub seed: u64,
+    /// Sibling that waits to fork from its group leader's prefill
+    /// instead of prefilling by itself.
+    pub wait_fork: bool,
+    /// Present when the chain was preempted mid-decode.
+    pub resume: Option<ResumeState>,
+    /// When the chain entered the queue (first submission).
+    pub enqueued: Instant,
+}
+
+/// A chain occupying an executor lane.
+pub struct ChainState {
+    /// Request ticket (also the fork group id).
+    pub ticket: u64,
+    /// Index of this chain within its request.
+    pub chain_idx: usize,
+    /// Token sequence being / already prefilled.
+    pub prefill_ids: Arc<Vec<u32>>,
+    /// Max total tokens (prompt + generation).
+    pub max_len: usize,
+    /// Compression policy instance (one per chain).
+    pub policy: Box<dyn Policy>,
+    /// Sampler (owns the chain's RNG stream).
+    pub sampler: Sampler,
+    /// Prefill/decode phase.
+    pub phase: Phase,
+    /// Next input token (valid in `Decode` phase).
+    pub cur_token: u32,
+    /// Tokens fed to the model so far.
+    pub pos: usize,
+    /// Generated tokens emitted so far.
+    pub gen_ids: Vec<u32>,
+    /// Per-chain efficiency statistics.
+    pub stats: ChainStats,
+    /// When the current residency on a lane started.
+    pub started: Instant,
+    /// Original seed (kept so a prefill-phase preemption can re-queue
+    /// the chain without losing its identity).
+    pub seed: u64,
+    /// On resume: token to continue with instead of sampling from the
+    /// prefill logits (that token was already sampled pre-preemption).
+    pub resume_token: Option<u32>,
+    /// Monotone admission sequence number; the maximum identifies the
+    /// youngest chain (the preemption victim).
+    pub admitted_seq: u64,
+}
+
+impl ChainState {
+    /// Build the lane state for a freshly admitted pending chain.
+    pub fn new(p: PendingChain, policy: Box<dyn Policy>, top_k: usize) -> Self {
+        let prompt_tokens = p.prompt_tokens;
+        let (sampler, gen_ids, stats, resume_token) = match p.resume {
+            Some(r) => (r.sampler, r.gen_ids, r.stats, Some(r.cur_token)),
+            None => (
+                Sampler::new(p.temperature, top_k, p.seed),
+                Vec::new(),
+                ChainStats {
+                    prompt_tokens,
+                    ..Default::default()
+                },
+                None,
+            ),
+        };
+        Self {
+            ticket: p.ticket,
+            chain_idx: p.chain_idx,
+            prefill_ids: p.prefill_ids,
+            max_len: p.max_len,
+            policy,
+            sampler,
+            phase: Phase::Prefill { offset: 0 },
+            cur_token: 0,
+            pos: 0,
+            gen_ids,
+            stats,
+            started: Instant::now(),
+            seed: p.seed,
+            resume_token,
+            admitted_seq: 0,
+        }
+    }
+
+    /// Build the lane state for a sibling forked from its group
+    /// leader's completed prefill (copy-on-write prefix sharing). The
+    /// sibling starts directly in `Decode` at the leader's position,
+    /// reusing the leader's first sampled token; its own RNG stream is
+    /// decorrelated with one warm-up draw.
+    pub fn forked(
+        p: PendingChain,
+        policy: Box<dyn Policy>,
+        top_k: usize,
+        leader_token: u32,
+        leader_pos: usize,
+    ) -> Self {
+        let mut sampler = Sampler::new(p.temperature, top_k, p.seed);
+        sampler.sample(&[0.0]); // decorrelate RNG streams
+        Self {
+            ticket: p.ticket,
+            chain_idx: p.chain_idx,
+            prefill_ids: p.prefill_ids,
+            max_len: p.max_len,
+            policy,
+            sampler,
+            phase: Phase::Decode,
+            cur_token: leader_token,
+            pos: leader_pos,
+            gen_ids: Vec::new(),
+            stats: ChainStats {
+                prompt_tokens: p.prompt_tokens,
+                forked_prefill: true,
+                ..Default::default()
+            },
+            started: Instant::now(),
+            seed: p.seed,
+            resume_token: None,
+            admitted_seq: 0,
+        }
+    }
+
+    /// Tokens this chain may still generate before hitting `max_len`.
+    pub fn remaining_budget(&self) -> usize {
+        self.max_len.saturating_sub(self.pos)
+    }
+}
+
+/// A fully answered request handed back by [`Scheduler::complete`].
+pub struct CompletedRequest {
+    /// Ticket returned by [`Scheduler::submit`].
+    pub ticket: u64,
+    /// All chains of the request, in chain order.
+    pub result: GenResult,
+    /// Queueing / first-token / end-to-end timing.
+    pub timing: RequestTiming,
+}
+
+/// Book-keeping for one in-flight request.
+struct RequestState {
+    chains: Vec<Option<ChainResult>>,
+    remaining: usize,
+    submitted: Instant,
+    first_admit: Option<Instant>,
+    first_token: Option<Instant>,
+}
+
+/// The continuous-batching scheduler (see module docs).
+pub struct Scheduler {
+    cfg: SchedulerConfig,
+    lanes: Vec<Option<ChainState>>,
+    pending: VecDeque<PendingChain>,
+    requests: BTreeMap<u64, RequestState>,
+    next_ticket: u64,
+    admit_seq: u64,
+    preemptions: u64,
+}
+
+impl Scheduler {
+    /// A scheduler over `n_lanes` executor lanes.
+    pub fn new(n_lanes: usize, cfg: SchedulerConfig) -> Self {
+        Self {
+            cfg,
+            lanes: (0..n_lanes).map(|_| None).collect(),
+            pending: VecDeque::new(),
+            requests: BTreeMap::new(),
+            next_ticket: 0,
+            admit_seq: 0,
+            preemptions: 0,
+        }
+    }
+
+    /// Number of executor lanes managed.
+    pub fn n_lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Enqueue all `width` chains of a request; returns its ticket.
+    /// Chain 0 is the fork-group leader; siblings wait to fork from its
+    /// prefill (and are promoted to self-prefill if the leader is gone).
+    /// A width of 0 is clamped to 1 — a request with no chains could
+    /// never complete.
+    pub fn submit(&mut self, req: &GenRequest, prompt_ids: Arc<Vec<u32>>) -> u64 {
+        let width = req.width.max(1);
+        let ticket = self.next_ticket;
+        self.next_ticket += 1;
+        let now = Instant::now();
+        self.requests.insert(
+            ticket,
+            RequestState {
+                chains: vec![None; width],
+                remaining: width,
+                submitted: now,
+                first_admit: None,
+                first_token: None,
+            },
+        );
+        for w in 0..width {
+            self.pending.push_back(PendingChain {
+                ticket,
+                chain_idx: w,
+                prefill_ids: prompt_ids.clone(),
+                prompt_tokens: prompt_ids.len(),
+                max_len: req.max_len,
+                temperature: req.temperature,
+                seed: req.seed.wrapping_add(w as u64),
+                wait_fork: w > 0,
+                resume: None,
+                enqueued: now,
+            });
+        }
+        ticket
+    }
+
+    /// Whether any chain is running or waiting.
+    pub fn has_work(&self) -> bool {
+        !self.pending.is_empty() || self.lanes.iter().any(Option::is_some)
+    }
+
+    /// Chains waiting in the admission queue.
+    pub fn queue_depth(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Lanes currently running a chain.
+    pub fn active_lanes(&self) -> usize {
+        self.lanes.iter().filter(|l| l.is_some()).count()
+    }
+
+    /// Total preemptions since construction.
+    pub fn preemptions(&self) -> u64 {
+        self.preemptions
+    }
+
+    /// Lowest-indexed idle lane, if any.
+    pub fn idle_lane(&self) -> Option<usize> {
+        self.lanes.iter().position(Option::is_none)
+    }
+
+    /// All lanes (read-only view for batch assembly).
+    pub fn lanes(&self) -> &[Option<ChainState>] {
+        &self.lanes
+    }
+
+    /// All lanes (mutable view for per-lane host work).
+    pub fn lanes_mut(&mut self) -> &mut [Option<ChainState>] {
+        &mut self.lanes
+    }
+
+    /// One lane's chain, if running.
+    pub fn lane(&self, lane: usize) -> Option<&ChainState> {
+        self.lanes[lane].as_ref()
+    }
+
+    /// One lane's chain, mutably.
+    pub fn lane_mut(&mut self, lane: usize) -> Option<&mut ChainState> {
+        self.lanes[lane].as_mut()
+    }
+
+    /// Pop the next chain to admit under the configured admission
+    /// policy. Self-prefilling chains are preferred; a `wait_fork`
+    /// sibling is only promoted to self-prefill when its leader is
+    /// neither mid-prefill on a lane nor still waiting in the queue.
+    pub fn next_admission(&mut self) -> Option<PendingChain> {
+        let idx = match self.cfg.admission {
+            AdmissionPolicy::Fcfs => self.pending.iter().position(|p| !p.wait_fork),
+            AdmissionPolicy::ShortestFirst => self
+                .pending
+                .iter()
+                .enumerate()
+                .filter(|(_, p)| !p.wait_fork)
+                .min_by_key(|(i, p)| (p.max_len, *i))
+                .map(|(i, _)| i),
+        };
+        let idx = idx.or_else(|| {
+            let blocked = self.blocked_fork_tickets();
+            self.pending
+                .iter()
+                .position(|p| !blocked.contains(&p.ticket))
+        })?;
+        let p = self.pending.remove(idx).unwrap();
+        if let Some(r) = self.requests.get_mut(&p.ticket) {
+            if r.first_admit.is_none() {
+                r.first_admit = Some(Instant::now());
+            }
+        }
+        Some(p)
+    }
+
+    /// Tickets whose `wait_fork` siblings must keep waiting: the group
+    /// leader is either mid-prefill on a lane (a fork is coming) or
+    /// still in the queue as a self-prefilling chain. One O(pending +
+    /// lanes) pre-pass so admission scans stay linear in queue depth.
+    fn blocked_fork_tickets(&self) -> BTreeSet<u64> {
+        let mut blocked: BTreeSet<u64> = self
+            .pending
+            .iter()
+            .filter(|q| !q.wait_fork)
+            .map(|q| q.ticket)
+            .collect();
+        blocked.extend(
+            self.lanes
+                .iter()
+                .flatten()
+                .filter(|a| matches!(a.phase, Phase::Prefill { .. }))
+                .map(|a| a.ticket),
+        );
+        blocked
+    }
+
+    /// Place a chain on an idle lane.
+    ///
+    /// # Panics
+    /// Panics if the lane is already occupied.
+    pub fn install(&mut self, lane: usize, mut chain: ChainState) {
+        assert!(self.lanes[lane].is_none(), "lane {lane} is occupied");
+        self.admit_seq += 1;
+        chain.admitted_seq = self.admit_seq;
+        chain.started = Instant::now();
+        self.lanes[lane] = Some(chain);
+    }
+
+    /// Pop a queued fork-sibling of `ticket`, if one is waiting.
+    pub fn take_fork_sibling(&mut self, ticket: u64) -> Option<PendingChain> {
+        let idx = self
+            .pending
+            .iter()
+            .position(|p| p.ticket == ticket && p.wait_fork)?;
+        let p = self.pending.remove(idx).unwrap();
+        if let Some(r) = self.requests.get_mut(&ticket) {
+            if r.first_admit.is_none() {
+                r.first_admit = Some(Instant::now());
+            }
+        }
+        Some(p)
+    }
+
+    /// Record the request's first sampled token (TTFT), once.
+    pub fn note_first_token(&mut self, ticket: u64) {
+        if let Some(r) = self.requests.get_mut(&ticket) {
+            if r.first_token.is_none() {
+                r.first_token = Some(Instant::now());
+            }
+        }
+    }
+
+    /// Remove and return the chain running on `lane`.
+    pub fn take(&mut self, lane: usize) -> Option<ChainState> {
+        self.lanes[lane].take()
+    }
+
+    /// Record a finished chain; returns the whole request when its last
+    /// chain completes.
+    pub fn complete(
+        &mut self,
+        ticket: u64,
+        chain_idx: usize,
+        result: ChainResult,
+    ) -> Option<CompletedRequest> {
+        let r = self.requests.get_mut(&ticket)?;
+        if r.chains[chain_idx].is_none() {
+            r.remaining -= 1;
+        }
+        r.chains[chain_idx] = Some(result);
+        if r.remaining > 0 {
+            return None;
+        }
+        let r = self.requests.remove(&ticket)?;
+        let chains: Vec<ChainResult> = r.chains.into_iter().map(|c| c.unwrap()).collect();
+        let gen_tokens = chains.iter().map(|c| c.stats.gen_tokens).sum();
+        let e2e_ms = r.submitted.elapsed().as_secs_f64() * 1e3;
+        let ms = |t: Option<Instant>| {
+            t.map(|t| t.duration_since(r.submitted).as_secs_f64() * 1e3)
+                .unwrap_or(0.0)
+        };
+        Some(CompletedRequest {
+            ticket,
+            result: GenResult { chains },
+            timing: RequestTiming {
+                queue_ms: ms(r.first_admit),
+                ttft_ms: ms(r.first_token),
+                e2e_ms,
+                gen_tokens,
+            },
+        })
+    }
+
+    /// Preempt under cache pressure: when the live-slot fraction
+    /// exceeds the configured watermark, chains are waiting, and no
+    /// lane is idle, the youngest running chain is pushed back into the
+    /// queue (at the back, yielding its turn) with its decode state
+    /// preserved for recompute-resume. Returns the freed lane so the
+    /// caller can recycle its cache slots. At most one preemption per
+    /// call keeps the scheduler's behaviour gradual.
+    pub fn maybe_preempt(&mut self, live_fraction: f64) -> Option<usize> {
+        let watermark = self.cfg.preempt_watermark?;
+        if live_fraction < watermark
+            || self.pending.is_empty()
+            || self.idle_lane().is_some()
+        {
+            return None;
+        }
+        let lane = self.preempt_candidate()?;
+        let victim_max_len = self.lanes[lane].as_ref()?.max_len;
+        if !self.admission_would_benefit(victim_max_len) {
+            return None;
+        }
+        self.preempt(lane);
+        Some(lane)
+    }
+
+    /// Whether some currently waiting chain would actually be admitted
+    /// ahead of the preemption victim once it is re-queued at the back.
+    /// Without this check, preempting could free a lane only for the
+    /// follow-up admission to reinstall the victim itself — a pure
+    /// recompute of its KV cache with zero capacity gained.
+    fn admission_would_benefit(&self, victim_max_len: usize) -> bool {
+        let blocked = self.blocked_fork_tickets();
+        self.pending.iter().any(|p| {
+            let admissible = !p.wait_fork || !blocked.contains(&p.ticket);
+            admissible
+                && match self.cfg.admission {
+                    // FCFS: anything already queued sits ahead of the
+                    // re-queued victim.
+                    AdmissionPolicy::Fcfs => true,
+                    // shortest-first: the waiting chain wins only if it
+                    // is no longer than the victim (ties break FCFS,
+                    // and the victim re-enters at the back).
+                    AdmissionPolicy::ShortestFirst => p.max_len <= victim_max_len,
+                }
+        })
+    }
+
+    /// The preferred preemption victim: the youngest chain in decode
+    /// phase, falling back to the youngest prefilling chain.
+    pub fn preempt_candidate(&self) -> Option<usize> {
+        let youngest = |decode: bool| {
+            self.lanes
+                .iter()
+                .enumerate()
+                .filter_map(|(i, l)| l.as_ref().map(|c| (i, c)))
+                .filter(|(_, c)| matches!(c.phase, Phase::Decode) == decode)
+                .max_by_key(|(_, c)| c.admitted_seq)
+                .map(|(i, _)| i)
+        };
+        youngest(true).or_else(|| youngest(false))
+    }
+
+    /// Move the chain on `lane` back into the pending queue. Decode
+    /// progress is preserved in a [`ResumeState`]; a chain still in its
+    /// first prefill is simply re-queued from scratch. The freed lane's
+    /// cache must be recycled by the caller.
+    pub fn preempt(&mut self, lane: usize) {
+        let Some(mut chain) = self.lanes[lane].take() else {
+            return;
+        };
+        chain.stats.wall_s += chain.started.elapsed().as_secs_f64();
+        // the token the chain will feed next, if it already sampled one:
+        // mid-decode that is `cur_token`; mid-*re*-prefill (a resumed
+        // chain preempted again) it is the preserved `resume_token`; a
+        // chain in its first prefill has none and restarts cleanly.
+        let next_token = match chain.phase {
+            Phase::Decode => Some(chain.cur_token),
+            Phase::Prefill { .. } => chain.resume_token,
+        };
+        let pending = match next_token {
+            Some(cur) => {
+                // the sequence fed (or being re-fed) so far is prompt +
+                // generated tokens; re-prefilling it reproduces the
+                // decode-time cache shape up to policy recompute
+                // differences. Rebuild from the original prompt prefix
+                // — after an earlier resume, `prefill_ids` already
+                // contains generated tokens, and `gen_ids` always holds
+                // all of them.
+                let mut ids: Vec<u32> =
+                    chain.prefill_ids[..chain.stats.prompt_tokens].to_vec();
+                ids.extend_from_slice(&chain.gen_ids);
+                PendingChain {
+                    ticket: chain.ticket,
+                    chain_idx: chain.chain_idx,
+                    prefill_ids: Arc::new(ids),
+                    prompt_tokens: chain.stats.prompt_tokens,
+                    max_len: chain.max_len,
+                    temperature: chain.sampler.temperature,
+                    seed: chain.seed,
+                    wait_fork: false,
+                    resume: Some(ResumeState {
+                        sampler: chain.sampler,
+                        cur_token: cur,
+                        gen_ids: chain.gen_ids,
+                        stats: chain.stats,
+                    }),
+                    enqueued: Instant::now(),
+                }
+            }
+            None => PendingChain {
+                ticket: chain.ticket,
+                chain_idx: chain.chain_idx,
+                prefill_ids: chain.prefill_ids,
+                prompt_tokens: chain.stats.prompt_tokens,
+                max_len: chain.max_len,
+                temperature: chain.sampler.temperature,
+                seed: chain.seed,
+                wait_fork: false,
+                resume: None,
+                enqueued: Instant::now(),
+            },
+        };
+        self.pending.push_back(pending);
+        self.preemptions += 1;
+    }
+}

@@ -93,6 +93,33 @@ pub struct ChainResult {
     pub stats: ChainStats,
 }
 
+/// Per-request serving timings, measured by the scheduler from
+/// submission to completion.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RequestTiming {
+    /// Milliseconds between submission and the first chain's admission
+    /// to a lane (pure queueing delay).
+    pub queue_ms: f64,
+    /// Milliseconds between submission and the request's first sampled
+    /// token (time-to-first-token).
+    pub ttft_ms: f64,
+    /// Milliseconds between submission and the last chain finishing.
+    pub e2e_ms: f64,
+    /// Tokens generated across all chains of the request.
+    pub gen_tokens: usize,
+}
+
+impl RequestTiming {
+    /// Request-level generation throughput (tokens per wall second).
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.e2e_ms <= 0.0 {
+            0.0
+        } else {
+            self.gen_tokens as f64 / (self.e2e_ms / 1e3)
+        }
+    }
+}
+
 /// All chains of a request.
 #[derive(Clone, Debug)]
 pub struct GenResult {

@@ -141,6 +141,45 @@ mod tests {
     }
 
     #[test]
+    fn recycle_lane_returns_freed_slots() {
+        let g = geom();
+        let mut c = CacheStore::new(g, 2);
+        for pos in 0..3 {
+            for l in 0..g.layers {
+                for h in 0..g.kv_heads {
+                    let s = c.alloc_slot(0, l, h).unwrap();
+                    c.write(0, l, h, s, pos, &[0.0; 4], &[0.0; 4]);
+                }
+            }
+        }
+        // 3 tokens in each of the lane's 4 (l,h) pairs
+        let freed = c.recycle_lane(0);
+        assert_eq!(freed, 3 * g.lh());
+        assert_eq!(c.live_count(0, 0, 0), 0);
+        // slots immediately allocatable again
+        assert!(c.alloc_slot(0, 0, 0).is_some());
+    }
+
+    #[test]
+    fn live_fractions_track_occupancy() {
+        let g = geom();
+        let mut c = CacheStore::new(g, 2);
+        assert_eq!(c.live_fraction(), 0.0);
+        for pos in 0..4 {
+            for l in 0..g.layers {
+                for h in 0..g.kv_heads {
+                    let s = c.alloc_slot(0, l, h).unwrap();
+                    c.write(0, l, h, s, pos, &[0.0; 4], &[0.0; 4]);
+                }
+            }
+        }
+        // lane 0 holds 4 of its 32 slots per pair; lane 1 empty
+        assert!((c.lane_live_fraction(0) - 4.0 / 32.0).abs() < 1e-9);
+        assert!((c.lane_live_fraction(1)).abs() < 1e-9);
+        assert!((c.live_fraction() - 4.0 / 64.0).abs() < 1e-9);
+    }
+
+    #[test]
     fn slots_exhaust_then_none() {
         let g = geom();
         let mut c = CacheStore::new(g, 1);

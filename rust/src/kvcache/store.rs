@@ -300,6 +300,20 @@ impl CacheStore {
         self.alloc[self.lbh(b, l, h)].allocated_pages()
     }
 
+    /// Fraction of this lane's slot capacity that is live (mean over
+    /// the lane's (layer, head) pairs, in [0, 1]).
+    pub fn lane_live_fraction(&self, b: usize) -> f64 {
+        self.live_tokens(b) / self.geom.slots as f64
+    }
+
+    /// Fraction of the whole store's slot capacity that is live, across
+    /// all lanes — the cache-pressure signal the scheduler's preemption
+    /// watermark compares against.
+    pub fn live_fraction(&self) -> f64 {
+        let total: usize = self.live.iter().sum();
+        total as f64 / (self.batch * self.geom.lh() * self.geom.slots) as f64
+    }
+
     pub fn slot_state(&self, b: usize, l: usize, h: usize, s: usize) -> SlotState {
         self.meta[self.lbh(b, l, h)][s]
     }
@@ -347,6 +361,17 @@ impl CacheStore {
     }
 
     // ---------------- lane lifecycle ----------------
+
+    /// Retire a lane mid-run: clear its state and return the number of
+    /// slots handed back to the allocator. This is what turns a
+    /// finished (or preempted) chain's compressed footprint directly
+    /// into admission capacity for the next queued chain.
+    pub fn recycle_lane(&mut self, b: usize) -> usize {
+        let lh = self.geom.lh();
+        let freed: usize = self.live[b * lh..(b + 1) * lh].iter().sum();
+        self.reset_lane(b);
+        freed
+    }
 
     pub fn reset_lane(&mut self, b: usize) {
         for l in 0..self.geom.layers {

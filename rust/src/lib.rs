@@ -7,15 +7,17 @@
 //! text artifacts that this crate loads and executes through the PJRT
 //! CPU client (`xla` crate). Python never runs on the request path.
 //!
-//! Major subsystems (see DESIGN.md for the full inventory):
+//! Major subsystems (see `docs/ARCHITECTURE.md` for the full data
+//! flow and `docs/POLICIES.md` for the policy zoo):
 //!
 //! * [`runtime`]  — PJRT client, artifact manifest, executable wrappers;
 //! * [`kvcache`]  — paged per-(layer, KV-head) slot cache with live-mask
 //!   accounting (KV reads / peak tokens — the paper's §5.1 metrics);
 //! * [`compress`] — the policy zoo: DMS (delayed eviction), TOVA, H2O,
 //!   Quest, DMC merging, sliding window, vanilla;
-//! * [`engine`]   — continuous batcher, prefill/decode scheduler,
-//!   sampler, majority-voting / pass@all aggregation;
+//! * [`engine`]   — continuous-batching scheduler (dynamic admission,
+//!   preemption), step-batch assembly, sampler, majority-voting /
+//!   pass@all aggregation;
 //! * [`scaling`]  — L-W-CR budget controller + Pareto-frontier analysis
 //!   (App. E margin integrals);
 //! * [`analysis`] — App. G analytical latency model (Fig. 7);

@@ -1,28 +1,38 @@
-//! TCP line-JSON serving front end.
+//! TCP line-JSON serving front end with dynamic admission.
 //!
 //! Protocol: one JSON object per line.
 //!
 //! Request:  {"id": 1, "prompt": "Q:1+2=?\nT:", "width": 4,
 //!            "max_len": 160, "temperature": 0.7}
 //! Response: {"id": 1, "texts": [...], "answer": "3",
-//!            "reads": 1234.5, "peak_tokens": 88.0, "latency_ms": 42.1}
+//!            "reads": 1234.5, "peak_tokens": 88.0, "latency_ms": 42.1,
+//!            "queue_ms": 1.3, "ttft_ms": 9.8, "tokens_per_s": 210.0}
 //! Control:  {"cmd": "stats"} → metrics dump; {"cmd": "shutdown"}.
 //!
 //! Networking runs on std threads: an acceptor thread per listener and
 //! one engine thread owning the (non-Send) PJRT state; requests flow
 //! through mpsc channels (the offline environment has no tokio).
+//!
+//! The engine thread runs a continuous-batching loop over a single
+//! [`Session`](crate::engine::Session): every incoming request is
+//! *submitted* into the shared scheduler immediately (not queued behind
+//! the previous request's whole batch), chains from different requests
+//! share the executor's lanes, and each request is answered the moment
+//! its last chain retires. Requests from concurrent connections
+//! therefore overlap arbitrarily; responses carry the echoed `id` plus
+//! queueing/TTFT timings so clients can attribute latency.
 
 pub mod protocol;
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc;
-use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::config::EngineConfig;
-use crate::engine::{majority_vote, Engine, GenRequest};
+use crate::engine::{majority_vote, CompletedRequest, Engine, GenRequest, Session};
 use crate::util::Json;
 
 pub use protocol::{parse_request, render_response, ServeRequest, ServeResponse};
@@ -31,6 +41,12 @@ enum Msg {
     Request(ServeRequest, mpsc::Sender<String>),
     Stats(mpsc::Sender<String>),
     Shutdown,
+}
+
+/// A request admitted to the engine, waiting for its completion.
+struct Inflight {
+    req: ServeRequest,
+    reply: mpsc::Sender<String>,
 }
 
 /// Run the server until a shutdown command arrives. Binds `addr`
@@ -54,54 +70,132 @@ pub fn serve(cfg: EngineConfig, addr: &str) -> Result<()> {
 
     // engine loop (owns the PJRT client; must stay on this thread)
     let mut engine = Engine::new(cfg)?;
-    loop {
-        match rx.recv() {
-            Ok(Msg::Request(req, reply)) => {
-                let t0 = Instant::now();
-                let resp = match run_request(&mut engine, &req) {
-                    Ok(mut r) => {
-                        r.latency_ms = t0.elapsed().as_secs_f64() * 1e3;
-                        r
+    let mut session = engine.begin_session();
+    let mut inflight: HashMap<u64, Inflight> = HashMap::new();
+    let mut shutdown = false;
+    while !shutdown {
+        // intake: block while idle, drain without blocking while busy
+        if engine.is_idle(&session) && inflight.is_empty() {
+            match rx.recv() {
+                Ok(msg) => {
+                    if handle_msg(&mut engine, &mut session, &mut inflight, msg) {
+                        break;
                     }
-                    Err(e) => ServeResponse::error(req.id, &format!("{e:#}")),
-                };
-                let _ = reply.send(render_response(&resp));
+                }
+                Err(_) => break,
             }
-            Ok(Msg::Stats(reply)) => {
-                let _ = reply.send(
-                    Json::obj()
-                        .set("metrics", engine.metrics.report())
-                        .to_string(),
-                );
+        }
+        loop {
+            match rx.try_recv() {
+                Ok(msg) => {
+                    if handle_msg(&mut engine, &mut session, &mut inflight, msg) {
+                        shutdown = true;
+                        break;
+                    }
+                }
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    shutdown = true;
+                    break;
+                }
             }
-            Ok(Msg::Shutdown) | Err(_) => break,
+        }
+        if shutdown {
+            break;
+        }
+        // advance every in-flight request by one scheduler tick
+        match engine.tick(&mut session) {
+            Ok(completed) => {
+                for done in completed {
+                    if let Some(inf) = inflight.remove(&done.ticket) {
+                        let resp = response_from(&inf.req, &done);
+                        let _ = inf.reply.send(render_response(&resp));
+                    }
+                }
+            }
+            Err(e) => {
+                // engine failure is fatal for the server, but every
+                // waiting client gets an error response instead of EOF
+                reply_all_errors(&mut inflight, &format!("{e:#}"));
+                return Err(e);
+            }
         }
     }
+    // shutdown: requests still in flight are answered, not dropped
+    reply_all_errors(&mut inflight, "server shutting down");
     drop(acceptor);
     Ok(())
 }
 
-fn run_request(engine: &mut Engine, req: &ServeRequest) -> Result<ServeResponse> {
-    let (results, _) = engine.run(&[GenRequest {
-        prompt: req.prompt.clone(),
-        width: req.width,
-        max_len: req.max_len,
-        temperature: req.temperature,
-        seed: req.seed,
-    }])?;
-    let res = &results[0];
+/// Answer every in-flight request with an error payload (used on
+/// shutdown and on fatal engine errors, so clients never see bare EOF).
+fn reply_all_errors(inflight: &mut HashMap<u64, Inflight>, msg: &str) {
+    for (_, inf) in inflight.drain() {
+        let resp = ServeResponse::error(inf.req.id, msg);
+        let _ = inf.reply.send(render_response(&resp));
+    }
+}
+
+/// Handle one control/request message; returns true on shutdown.
+fn handle_msg(
+    engine: &mut Engine,
+    session: &mut Session,
+    inflight: &mut HashMap<u64, Inflight>,
+    msg: Msg,
+) -> bool {
+    match msg {
+        Msg::Request(req, reply) => {
+            let gen = GenRequest {
+                prompt: req.prompt.clone(),
+                width: req.width,
+                max_len: req.max_len,
+                temperature: req.temperature,
+                seed: req.seed,
+            };
+            match engine.submit(session, &gen) {
+                Ok(ticket) => {
+                    inflight.insert(ticket, Inflight { req, reply });
+                }
+                Err(e) => {
+                    let resp = ServeResponse::error(req.id, &format!("{e:#}"));
+                    let _ = reply.send(render_response(&resp));
+                }
+            }
+            false
+        }
+        Msg::Stats(reply) => {
+            let _ = reply.send(
+                Json::obj()
+                    .set("metrics", engine.metrics.report())
+                    .set("active_lanes", session.active_lanes())
+                    .set("queue_depth", session.queue_depth())
+                    .to_string(),
+            );
+            false
+        }
+        Msg::Shutdown => true,
+    }
+}
+
+/// Build the response for a completed request.
+fn response_from(req: &ServeRequest, done: &CompletedRequest) -> ServeResponse {
+    let res = &done.result;
     let texts: Vec<String> = res.chains.iter().map(|c| c.text.clone()).collect();
     let refs: Vec<&str> = texts.iter().map(|s| s.as_str()).collect();
     let vote = majority_vote(&refs);
-    Ok(ServeResponse {
+    ServeResponse {
         id: req.id,
         texts,
         answer: vote.answer,
         reads: res.total_reads(),
         peak_tokens: res.total_peak_tokens(),
         latency_ms: 0.0,
+        queue_ms: 0.0,
+        ttft_ms: 0.0,
+        tokens_per_s: 0.0,
         error: None,
-    })
+    }
+    .with_timing(&done.timing)
 }
 
 fn handle_client(stream: TcpStream, tx: mpsc::Sender<Msg>) -> Result<()> {
@@ -179,6 +273,7 @@ pub struct Client {
 }
 
 impl Client {
+    /// Connect to a running server.
     pub fn connect(addr: &str) -> Result<Self> {
         let stream = TcpStream::connect(addr)?;
         Ok(Self {
@@ -187,6 +282,7 @@ impl Client {
         })
     }
 
+    /// Send one JSON line and block for the one-line reply.
     pub fn call(&mut self, req: &Json) -> Result<Json> {
         writeln!(self.writer, "{}", req.to_string())?;
         let mut line = String::new();
@@ -194,6 +290,7 @@ impl Client {
         Ok(Json::parse(&line)?)
     }
 
+    /// Ask the server to shut down.
     pub fn shutdown(&mut self) -> Result<()> {
         writeln!(self.writer, "{}", Json::obj().set("cmd", "shutdown").to_string())?;
         Ok(())

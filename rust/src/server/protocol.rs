@@ -1,33 +1,61 @@
 //! Line-JSON protocol types.
+//!
+//! One JSON object per line in both directions. Requests carry the
+//! prompt plus sampling/budget knobs; responses carry the generated
+//! chains, the majority-vote answer, the paper's §5.1 efficiency
+//! numbers (KV reads, peak tokens), and — since the continuous-batching
+//! server — per-request serving timings (queueing delay, TTFT,
+//! end-to-end latency, generation throughput).
 
 use anyhow::{anyhow, Result};
 
+use crate::engine::RequestTiming;
 use crate::util::Json;
 
 /// Parsed generation request.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ServeRequest {
+    /// Client-chosen request id, echoed back in the response.
     pub id: u64,
+    /// Prompt text.
     pub prompt: String,
+    /// Parallel chains (parallel-scaling width W).
     pub width: usize,
+    /// Max total tokens per chain (prompt + generation).
     pub max_len: usize,
+    /// Sampling temperature.
     pub temperature: f64,
+    /// Base RNG seed; chain i uses seed + i.
     pub seed: u64,
 }
 
 /// Response payload.
 #[derive(Clone, Debug)]
 pub struct ServeResponse {
+    /// Echo of the request id.
     pub id: u64,
+    /// Generated text per chain.
     pub texts: Vec<String>,
+    /// Majority-vote answer across chains, if any chain answered.
     pub answer: Option<String>,
+    /// Total KV reads across chains (token units).
     pub reads: f64,
+    /// Summed peak live tokens across concurrent chains.
     pub peak_tokens: f64,
+    /// End-to-end latency: submission to last chain finished.
     pub latency_ms: f64,
+    /// Queueing delay before the first chain got a lane.
+    pub queue_ms: f64,
+    /// Time to the request's first sampled token.
+    pub ttft_ms: f64,
+    /// Generation throughput of this request (tokens per second).
+    pub tokens_per_s: f64,
+    /// Error message (all other payload fields are omitted when set).
     pub error: Option<String>,
 }
 
 impl ServeResponse {
+    /// An error response for request `id`.
     pub fn error(id: u64, msg: &str) -> Self {
         Self {
             id,
@@ -36,11 +64,24 @@ impl ServeResponse {
             reads: 0.0,
             peak_tokens: 0.0,
             latency_ms: 0.0,
+            queue_ms: 0.0,
+            ttft_ms: 0.0,
+            tokens_per_s: 0.0,
             error: Some(msg.to_string()),
         }
     }
+
+    /// Copy the scheduler's per-request timings into the response.
+    pub fn with_timing(mut self, t: &RequestTiming) -> Self {
+        self.latency_ms = t.e2e_ms;
+        self.queue_ms = t.queue_ms;
+        self.ttft_ms = t.ttft_ms;
+        self.tokens_per_s = t.tokens_per_s();
+        self
+    }
 }
 
+/// Parse a request object (`prompt` is the only required field).
 pub fn parse_request(j: &Json) -> Result<ServeRequest> {
     Ok(ServeRequest {
         id: j.get("id").and_then(Json::as_i64).unwrap_or(0) as u64,
@@ -59,6 +100,7 @@ pub fn parse_request(j: &Json) -> Result<ServeRequest> {
     })
 }
 
+/// Render a response as one JSON line (no trailing newline).
 pub fn render_response(r: &ServeResponse) -> String {
     let mut j = Json::obj().set("id", r.id);
     if let Some(err) = &r.error {
@@ -75,6 +117,9 @@ pub fn render_response(r: &ServeResponse) -> String {
     j.set("reads", r.reads)
         .set("peak_tokens", r.peak_tokens)
         .set("latency_ms", r.latency_ms)
+        .set("queue_ms", r.queue_ms)
+        .set("ttft_ms", r.ttft_ms)
+        .set("tokens_per_s", r.tokens_per_s)
         .to_string()
 }
 
@@ -119,12 +164,36 @@ mod tests {
             reads: 120.5,
             peak_tokens: 33.0,
             latency_ms: 12.0,
+            queue_ms: 1.5,
+            ttft_ms: 4.0,
+            tokens_per_s: 80.0,
             error: None,
         };
         let s = render_response(&r);
         let j = Json::parse(&s).unwrap();
         assert_eq!(j.get("answer").unwrap().as_str(), Some("4"));
         assert_eq!(j.get("reads").unwrap().as_f64(), Some(120.5));
+        assert_eq!(j.get("queue_ms").unwrap().as_f64(), Some(1.5));
+        assert_eq!(j.get("ttft_ms").unwrap().as_f64(), Some(4.0));
+        assert_eq!(j.get("tokens_per_s").unwrap().as_f64(), Some(80.0));
+    }
+
+    #[test]
+    fn timing_copied_into_response() {
+        let t = RequestTiming {
+            queue_ms: 2.0,
+            ttft_ms: 5.0,
+            e2e_ms: 500.0,
+            gen_tokens: 100,
+        };
+        let r = ServeResponse::error(1, "placeholder");
+        let mut r = r;
+        r.error = None;
+        let r = r.with_timing(&t);
+        assert_eq!(r.latency_ms, 500.0);
+        assert_eq!(r.queue_ms, 2.0);
+        assert_eq!(r.ttft_ms, 5.0);
+        assert!((r.tokens_per_s - 200.0).abs() < 1e-9);
     }
 
     #[test]

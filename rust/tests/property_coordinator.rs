@@ -1,9 +1,19 @@
 //! Property-based tests on coordinator invariants (hand-rolled
 //! generators — proptest is unavailable offline). Random operation
 //! sequences against the paged KV cache and the eviction policies must
-//! preserve the structural invariants the engine relies on.
+//! preserve the structural invariants the engine relies on; a
+//! simulated executor drives the continuous-batching scheduler to check
+//! admission ordering, lane recycling, fork promotion, preemption
+//! resume, and that concurrent admission leaves per-chain token streams
+//! identical to sequential runs.
+
+use std::sync::Arc;
 
 use hyperscale::compress::{build_policy, PolicyKind, StepView, WriteAction};
+use hyperscale::engine::{
+    AdmissionPolicy, ChainResult, ChainState, CompletedRequest, FinishReason, GenRequest,
+    Phase, Scheduler, SchedulerConfig,
+};
 use hyperscale::kvcache::{CacheStore, Geometry, SlotState};
 use hyperscale::util::SplitMix64;
 
@@ -292,4 +302,313 @@ fn dmc_merges_keep_cache_flat() {
     let live = c.live_count(0, 0, 0);
     assert!(live <= 21 && live >= 19, "live {live}");
     check_consistency(&c, 0);
+}
+
+// ----------------------------------------------------------------------
+// Continuous-batching scheduler properties (simulated executor)
+// ----------------------------------------------------------------------
+
+/// Deterministic fake model: logits depend only on the position, so a
+/// chain's token stream is a pure function of its own sampler (seed)
+/// and positions — independent of lane assignment, admission order, and
+/// batch composition. Any scheduler-induced difference in output is a
+/// cross-chain state leak.
+fn sim_logits(pos: usize) -> Vec<f32> {
+    let mut r = SplitMix64::new(0xC0FFEE ^ (pos as u64).wrapping_mul(0x9E37));
+    (0..16).map(|_| r.f64() as f32).collect()
+}
+
+/// Token 0 terminates a simulated chain (stands in for EOS).
+const SIM_EOS: u32 = 0;
+
+fn sim_policy(max_len: usize) -> Box<dyn hyperscale::compress::Policy> {
+    build_policy(PolicyKind::Vanilla, 1.0, max_len, 4, 8)
+}
+
+/// The engine's tick loop with the executor stubbed out: prefill
+/// completes instantly and decode samples from `sim_logits`. Exercises
+/// the real `Scheduler` exactly as `Engine::tick` does.
+struct Sim {
+    sched: Scheduler,
+    admitted_order: Vec<u64>,
+    lanes_used: Vec<usize>,
+    done: Vec<CompletedRequest>,
+}
+
+impl Sim {
+    fn new(lanes: usize, cfg: SchedulerConfig) -> Self {
+        Self {
+            sched: Scheduler::new(lanes, cfg),
+            admitted_order: Vec::new(),
+            lanes_used: Vec::new(),
+            done: Vec::new(),
+        }
+    }
+
+    fn submit(
+        &mut self,
+        width: usize,
+        prompt_len: usize,
+        max_len: usize,
+        temperature: f64,
+        seed: u64,
+    ) -> u64 {
+        let req = GenRequest {
+            prompt: String::new(),
+            width,
+            max_len,
+            temperature,
+            seed,
+        };
+        self.sched.submit(&req, Arc::new(vec![1u32; prompt_len]))
+    }
+
+    fn admit(&mut self) {
+        while let Some(lane) = self.sched.idle_lane() {
+            let Some(p) = self.sched.next_admission() else { break };
+            self.admitted_order.push(p.ticket);
+            self.lanes_used.push(lane);
+            let policy = sim_policy(p.max_len);
+            self.sched.install(lane, ChainState::new(p, policy, 0));
+        }
+    }
+
+    fn tick(&mut self) {
+        self.admit();
+        let n = self.sched.n_lanes();
+        // prefill: completes instantly, then forks waiting siblings
+        for lane in 0..n {
+            let leader = {
+                let Some(a) = self.sched.lane_mut(lane) else { continue };
+                let Phase::Prefill { .. } = a.phase else { continue };
+                let len = a.prefill_ids.len();
+                a.pos = len;
+                a.phase = Phase::Decode;
+                let resumed = a.resume_token.is_some();
+                let tok = match a.resume_token.take() {
+                    Some(t) => t,
+                    None => a.sampler.sample(&sim_logits(len - 1)),
+                };
+                a.cur_token = tok;
+                (a.ticket, tok, len, resumed)
+            };
+            let (ticket, tok, pos, resumed) = leader;
+            self.sched.note_first_token(ticket);
+            // as in the engine: a resumed chain's cache holds generated
+            // tokens, so siblings never fork from it (they promote)
+            if resumed {
+                continue;
+            }
+            loop {
+                let Some(dst) = self.sched.idle_lane() else { break };
+                let Some(p) = self.sched.take_fork_sibling(ticket) else { break };
+                self.admitted_order.push(p.ticket);
+                self.lanes_used.push(dst);
+                let policy = sim_policy(p.max_len);
+                self.sched
+                    .install(dst, ChainState::forked(p, policy, 0, tok, pos));
+            }
+        }
+        // decode: one token per decoding lane
+        for lane in 0..n {
+            let finish = {
+                let Some(a) = self.sched.lane_mut(lane) else { continue };
+                if !matches!(a.phase, Phase::Decode) {
+                    continue;
+                }
+                let tok = a.sampler.sample(&sim_logits(a.pos));
+                a.gen_ids.push(a.cur_token);
+                a.pos += 1;
+                a.cur_token = tok;
+                if tok == SIM_EOS {
+                    Some(FinishReason::Stop)
+                } else if a.pos + 1 >= a.max_len {
+                    a.gen_ids.push(tok);
+                    Some(FinishReason::Length)
+                } else {
+                    None
+                }
+            };
+            if let Some(reason) = finish {
+                let c = self.sched.take(lane).unwrap();
+                let mut stats = c.stats;
+                stats.gen_tokens = c.gen_ids.len();
+                let result = ChainResult {
+                    text: format!("{:?}", c.gen_ids),
+                    finish: reason,
+                    stats,
+                };
+                if let Some(done) = self.sched.complete(c.ticket, c.chain_idx, result) {
+                    self.done.push(done);
+                }
+            }
+        }
+    }
+
+    fn run_to_completion(&mut self) {
+        let mut ticks = 0;
+        while self.sched.has_work() {
+            self.tick();
+            ticks += 1;
+            assert!(ticks < 10_000, "scheduler failed to drain");
+        }
+    }
+}
+
+#[test]
+fn fcfs_admission_preserves_submission_order() {
+    let mut sim = Sim::new(2, SchedulerConfig::default());
+    let tickets: Vec<u64> = (0..6).map(|i| sim.submit(1, 4, 16, 0.0, i)).collect();
+    sim.run_to_completion();
+    assert_eq!(sim.admitted_order, tickets, "FCFS must admit in arrival order");
+    assert_eq!(sim.done.len(), 6);
+}
+
+#[test]
+fn shortest_first_admission_orders_by_budget() {
+    let cfg = SchedulerConfig {
+        admission: AdmissionPolicy::ShortestFirst,
+        preempt_watermark: None,
+    };
+    let mut sim = Sim::new(1, cfg);
+    let t_long = sim.submit(1, 4, 40, 0.0, 1);
+    let t_short = sim.submit(1, 4, 12, 0.0, 2);
+    let t_mid = sim.submit(1, 4, 20, 0.0, 3);
+    sim.run_to_completion();
+    assert_eq!(sim.admitted_order, vec![t_short, t_mid, t_long]);
+}
+
+#[test]
+fn lanes_recycle_to_queued_chains() {
+    let mut sim = Sim::new(2, SchedulerConfig::default());
+    for i in 0..5 {
+        sim.submit(1, 4, 12, 0.0, i);
+    }
+    sim.run_to_completion();
+    assert_eq!(sim.done.len(), 5);
+    assert_eq!(sim.admitted_order.len(), 5);
+    // every admission landed on a real lane and both lanes were reused
+    assert!(sim.lanes_used.iter().all(|&l| l < 2));
+    assert!(sim.lanes_used.contains(&0) && sim.lanes_used.contains(&1));
+    assert_eq!(sim.sched.active_lanes(), 0, "all lanes returned idle");
+}
+
+#[test]
+fn fork_siblings_share_leader_prefill() {
+    let mut sim = Sim::new(3, SchedulerConfig::default());
+    sim.submit(3, 4, 16, 0.0, 5);
+    sim.run_to_completion();
+    assert_eq!(sim.done.len(), 1);
+    let chains = &sim.done[0].result.chains;
+    assert_eq!(chains.len(), 3);
+    let forked = chains.iter().filter(|c| c.stats.forked_prefill).count();
+    assert_eq!(forked, 2, "both siblings fork from the leader");
+    // greedy chains from a forked prefix match the leader exactly
+    assert_eq!(chains[0].text, chains[1].text);
+    assert_eq!(chains[1].text, chains[2].text);
+}
+
+#[test]
+fn stranded_fork_siblings_are_promoted() {
+    // width 3 on a single lane: no idle lane ever exists while the
+    // leader runs, so the siblings must be promoted to self-prefill
+    // once the leader retires.
+    let mut sim = Sim::new(1, SchedulerConfig::default());
+    let t = sim.submit(3, 4, 12, 0.5, 9);
+    sim.run_to_completion();
+    assert_eq!(sim.done.len(), 1);
+    assert_eq!(sim.done[0].result.chains.len(), 3);
+    assert_eq!(sim.admitted_order, vec![t, t, t]);
+    let forked = sim.done[0]
+        .result
+        .chains
+        .iter()
+        .filter(|c| c.stats.forked_prefill)
+        .count();
+    assert_eq!(forked, 0, "promoted siblings prefill by themselves");
+}
+
+#[test]
+fn concurrent_admission_matches_sequential_tokens() {
+    // Per-chain token streams are a pure function of (seed, positions);
+    // if lane sharing, admission order, or recycling leaked any state
+    // across chains, the streams would differ between schedules.
+    let spec: Vec<(usize, usize, f64, u64)> = (0..8)
+        .map(|i| (4 + (i % 3), 20 + (i % 5), 0.7, 100 + i as u64))
+        .collect();
+
+    // sequential: each request alone on a single-lane scheduler
+    let mut sequential: Vec<String> = Vec::new();
+    for &(plen, mlen, temp, seed) in &spec {
+        let mut sim = Sim::new(1, SchedulerConfig::default());
+        sim.submit(1, plen, mlen, temp, seed);
+        sim.run_to_completion();
+        assert_eq!(sim.done.len(), 1);
+        sequential.push(sim.done[0].result.chains[0].text.clone());
+    }
+
+    // concurrent: all eight requests share three lanes, submitted upfront
+    let mut sim = Sim::new(3, SchedulerConfig::default());
+    let tickets: Vec<u64> = spec
+        .iter()
+        .map(|&(p, m, t, s)| sim.submit(1, p, m, t, s))
+        .collect();
+    sim.run_to_completion();
+    assert_eq!(sim.done.len(), 8);
+    for (i, t) in tickets.iter().enumerate() {
+        let done = sim.done.iter().find(|d| d.ticket == *t).unwrap();
+        assert_eq!(done.result.chains[0].text, sequential[i], "request {i}");
+    }
+
+    // staggered submission (requests arrive while others run) must
+    // produce the same streams too
+    let mut sim = Sim::new(3, SchedulerConfig::default());
+    let mut tickets = Vec::new();
+    for &(p, m, t, s) in &spec {
+        tickets.push(sim.submit(1, p, m, t, s));
+        sim.tick();
+    }
+    sim.run_to_completion();
+    assert_eq!(sim.done.len(), 8);
+    for (i, t) in tickets.iter().enumerate() {
+        let done = sim.done.iter().find(|d| d.ticket == *t).unwrap();
+        assert_eq!(done.result.chains[0].text, sequential[i], "staggered request {i}");
+    }
+}
+
+#[test]
+fn preemption_requeues_and_resumes_exactly() {
+    // reference: the request runs alone, never preempted
+    let mut r = Sim::new(1, SchedulerConfig::default());
+    r.submit(1, 4, 24, 0.7, 42);
+    r.run_to_completion();
+    let reference = r.done[0].result.chains[0].text.clone();
+
+    let cfg = SchedulerConfig {
+        admission: AdmissionPolicy::Fcfs,
+        preempt_watermark: Some(0.5),
+    };
+    let mut sim = Sim::new(1, cfg);
+    let t0 = sim.submit(1, 4, 24, 0.7, 42);
+    let t1 = sim.submit(1, 4, 12, 0.7, 43);
+    // let request 0 decode a few tokens, request 1 starves in the queue
+    sim.tick();
+    sim.tick();
+    sim.tick();
+    // cache pressure above the watermark with a waiting chain and no
+    // idle lane → the running chain is preempted
+    let lane = sim.sched.maybe_preempt(0.9);
+    assert_eq!(lane, Some(0));
+    assert_eq!(sim.sched.preemptions(), 1);
+    assert_eq!(sim.sched.queue_depth(), 2);
+    // below the watermark nothing happens
+    assert_eq!(sim.sched.maybe_preempt(0.1), None);
+
+    sim.run_to_completion();
+    assert_eq!(sim.done.len(), 2);
+    // the preempted chain yielded its turn: the short request finishes first
+    assert_eq!(sim.done[0].ticket, t1);
+    assert_eq!(sim.done[1].ticket, t0);
+    // and resumes to exactly the tokens of the unpreempted run
+    assert_eq!(sim.done[1].result.chains[0].text, reference);
 }
