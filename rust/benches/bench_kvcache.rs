@@ -57,20 +57,42 @@ fn main() {
     });
     r.print();
 
-    // prefix-sharing fork (the W>1 parallel-scaling fast path)
-    let mut c = CacheStore::new(g, 8);
-    for p in 0..100 {
-        for l in 0..g.layers {
-            for h in 0..g.kv_heads {
-                let s = c.alloc_slot(0, l, h).unwrap();
-                c.write(0, l, h, s, p, &k, &v);
+    // prefix-sharing fork (the W>1 parallel-scaling fast path):
+    // legacy full-lane memcpy vs COW refcount-bump fork, across prompt
+    // lengths. The memcpy fork copies the whole lane (O(S·hd)); the COW
+    // fork is metadata-only (flat in prompt length), with the payload
+    // copy deferred to materialize_pending and page-granular (O(live)).
+    for tokens in [32usize, 128, 304] {
+        let mut c = CacheStore::new(g, 8);
+        for p in 0..tokens {
+            for l in 0..g.layers {
+                for h in 0..g.kv_heads {
+                    let s = c.alloc_slot(0, l, h).unwrap();
+                    c.write(0, l, h, s, p, &k, &v);
+                }
             }
         }
+        let r = bench(&format!("fork_memcpy_{tokens}_tokens"), 10, 200, || {
+            c.fork_lane(0, 1);
+        });
+        r.print();
+        let r = bench(&format!("fork_cow_{tokens}_tokens"), 10, 200, || {
+            c.fork_lane_cow(0, 2);
+            c.reset_lane(2); // teardown (zeroing only, no payload copy)
+        });
+        r.print();
+        let r = bench(
+            &format!("fork_cow_materialized_{tokens}_tokens"),
+            10,
+            200,
+            || {
+                c.fork_lane_cow(0, 2);
+                c.materialize_pending();
+                c.reset_lane(2);
+            },
+        );
+        r.print();
     }
-    let r = bench("fork_lane_100_tokens", 10, 200, || {
-        c.fork_lane(0, 1);
-    });
-    r.print();
 
     // mask slice access (uploaded every step)
     let c2 = CacheStore::new(g, 8);

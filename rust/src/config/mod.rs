@@ -40,6 +40,13 @@ pub struct EngineConfig {
     /// scoped threads, one per active lane. `--serial-lanes` disables
     /// it for debugging/comparison; results are identical either way.
     pub lane_threads: bool,
+    /// Retain clean prompt pages of completed requests in the radix
+    /// prefix index and admit repeated prompts at the divergence point.
+    /// `--no-prefix-cache` disables it for comparison.
+    pub prefix_cache: bool,
+    /// Retained-page budget of the prefix index; least-recently-used
+    /// prefixes are released beyond it (`--prefix-pages`).
+    pub prefix_cache_pages: usize,
 }
 
 impl Default for EngineConfig {
@@ -56,6 +63,8 @@ impl Default for EngineConfig {
             use_jnp_decode: false,
             buffered_exec: true,
             lane_threads: true,
+            prefix_cache: true,
+            prefix_cache_pages: 1024,
         }
     }
 }
@@ -87,6 +96,10 @@ impl EngineConfig {
         if args.flag("serial-lanes") {
             self.lane_threads = false;
         }
+        if args.flag("no-prefix-cache") {
+            self.prefix_cache = false;
+        }
+        self.prefix_cache_pages = args.get_usize("prefix-pages", self.prefix_cache_pages)?;
         Ok(self)
     }
 
@@ -117,6 +130,12 @@ impl EngineConfig {
         }
         if let Some(v) = j.get("lane_threads").and_then(Json::as_bool) {
             cfg.lane_threads = v;
+        }
+        if let Some(v) = j.get("prefix_cache").and_then(Json::as_bool) {
+            cfg.prefix_cache = v;
+        }
+        if let Some(v) = j.get("prefix_cache_pages").and_then(|x| x.as_usize()) {
+            cfg.prefix_cache_pages = v;
         }
         Ok(cfg)
     }

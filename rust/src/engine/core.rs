@@ -33,7 +33,7 @@ use super::scheduler::{
 use super::sequence::{ChainResult, FinishReason, GenRequest, GenResult};
 use crate::compress::{build_policy, Policy, PolicyKind, StepView, WriteAction};
 use crate::config::EngineConfig;
-use crate::kvcache::{CacheStore, Geometry};
+use crate::kvcache::{CacheStore, Geometry, RadixPrefixIndex};
 use crate::metrics::Registry;
 use crate::runtime::{Executor, ParamBuffers, Runtime, Weights};
 use crate::tokenizer::{Tokenizer, BOS_ID, EOS_ID, PAD_ID};
@@ -55,6 +55,9 @@ pub struct EngineStats {
     pub preemptions: u64,
     /// Scheduler ticks that did executor work.
     pub ticks: u64,
+    /// Prompt tokens restored from the radix prefix cache instead of
+    /// being prefilled.
+    pub prefix_hit_tokens: u64,
 }
 
 /// One continuous-batching run: the scheduler plus its accumulated
@@ -100,6 +103,9 @@ pub struct Engine {
     decode_exec: Executor,
     prefill_exec: Executor,
     cache: CacheStore,
+    /// Radix index over clean prompt pages retained from completed
+    /// requests (prefix-cache admission).
+    prefix_index: RadixPrefixIndex,
     /// Retrofit metadata of the loaded variant.
     window: usize,
     immediate: bool,
@@ -143,6 +149,7 @@ impl Engine {
 
         let geom = runtime.manifest.cache_geometry(cfg.slots);
         let cache = CacheStore::new(geom, cfg.batch);
+        let prefix_index = RadixPrefixIndex::new(geom.page_size);
         let newline_id = tokenizer.newline_id();
         let param_bufs = if cfg.buffered_exec {
             Some(ParamBuffers::from_weights(&runtime.client, &weights)?)
@@ -159,6 +166,7 @@ impl Engine {
             decode_exec,
             prefill_exec,
             cache,
+            prefix_index,
             window: vmeta.window,
             immediate: vmeta.immediate,
             dms_variant,
@@ -174,9 +182,12 @@ impl Engine {
 
     /// Switch the compression policy (+ CR) without recompiling the
     /// decode executable; the prefill flavour is re-selected (cached).
+    /// Retained prefixes are flushed: they encode the old policy's
+    /// prefill behaviour.
     pub fn set_policy(&mut self, kind: PolicyKind, cr: f64) -> Result<()> {
         self.cfg.policy = kind;
         self.cfg.cr = cr;
+        self.flush_prefix_cache();
         self.reload_prefill()
     }
 
@@ -199,7 +210,17 @@ impl Engine {
         self.window = vmeta.window;
         self.immediate = vmeta.immediate;
         self.dms_variant = vmeta.alpha_mode.starts_with("dms");
+        // retained prefixes hold the previous variant's K/V values
+        self.flush_prefix_cache();
         self.reload_prefill()
+    }
+
+    /// Release every retained prefix page (policy/variant switch).
+    fn flush_prefix_cache(&mut self) {
+        for id in self.prefix_index.release_all() {
+            self.cache.release_page(id);
+        }
+        self.metrics.gauge("kv.prefix_pages_retained").set(0.0);
     }
 
     fn reload_prefill(&mut self) -> Result<()> {
@@ -285,7 +306,32 @@ impl Engine {
                 self.geom.slots
             );
         }
-        Ok(session.sched.submit(req, Arc::new(ids)))
+        // prefix-cache admission: match the prompt against retained
+        // prefixes; on a hit every chain of the request carries the
+        // matched pages (one pool reference per page while queued) and
+        // will start prefill at the divergence point.
+        let mut prefix_pages: Vec<u64> = Vec::new();
+        let mut prefix_tokens = 0usize;
+        if self.cfg.prefix_cache {
+            self.metrics.counter("kv.prefix_lookups").inc();
+            let hit = self.prefix_index.lookup(&ids);
+            if hit.tokens > 0 {
+                self.metrics.counter("kv.prefix_hits").inc();
+                self.metrics
+                    .counter("kv.prefix_hit_tokens")
+                    .add(hit.tokens as f64);
+                for _ in 0..req.width.max(1) {
+                    for &id in &hit.pages {
+                        self.cache.retain_page(id);
+                    }
+                }
+                prefix_pages = hit.pages;
+                prefix_tokens = hit.tokens;
+            }
+        }
+        Ok(session
+            .sched
+            .submit_with_prefix(req, Arc::new(ids), &prefix_pages, prefix_tokens))
     }
 
     /// Whether the session has no running or queued chains.
@@ -302,12 +348,12 @@ impl Engine {
         let stats = &mut session.stats;
         let mut completed = Vec::new();
 
-        self.admit(sched);
+        self.admit(sched, stats);
         let live_fraction = self.cache.live_fraction();
         if let Some(lane) = sched.maybe_preempt(live_fraction) {
             self.cache.recycle_lane(lane);
             stats.preemptions += 1;
-            self.admit(sched);
+            self.admit(sched, stats);
         }
         if sched.active_lanes() == 0 {
             return Ok(completed);
@@ -337,6 +383,13 @@ impl Engine {
         self.metrics
             .gauge("kv.max_lane_live_fraction")
             .set(max_lane_fraction);
+        self.metrics
+            .gauge("kv.pool_pages")
+            .set(self.cache.pool_pages() as f64);
+        // cumulative COW snapshots; the store is the source of truth
+        self.metrics
+            .gauge("kv.cow_published_pages")
+            .set(self.cache.cow_published() as f64);
         for c in &completed {
             let t = &c.timing;
             self.metrics.histogram("serve.queue_ms").record(t.queue_ms);
@@ -353,13 +406,27 @@ impl Engine {
         Ok(completed)
     }
 
-    /// Fill idle lanes from the admission queue.
-    fn admit(&mut self, sched: &mut Scheduler) {
+    /// Fill idle lanes from the admission queue. A chain carrying a
+    /// prefix-cache hit has the retained pages mapped into its lane
+    /// (consuming the references it held while queued) and starts
+    /// prefill at the divergence point.
+    fn admit(&mut self, sched: &mut Scheduler, stats: &mut EngineStats) {
         while let Some(lane) = sched.idle_lane() {
-            let Some(p) = sched.next_admission() else { break };
+            let Some(mut p) = sched.next_admission() else { break };
             self.cache.reset_lane(lane);
+            let prefix_pages = std::mem::take(&mut p.prefix_pages);
+            let prefix_tokens = p.prefix_tokens;
             let policy = self.build_chain_policy(p.max_len);
-            sched.install(lane, ChainState::new(p, policy, self.cfg.top_k));
+            let mut chain = ChainState::new(p, policy, self.cfg.top_k);
+            if !prefix_pages.is_empty() {
+                self.cache.map_prefix_pages(lane, &prefix_pages);
+                chain.phase = Phase::Prefill {
+                    offset: prefix_tokens,
+                };
+                chain.stats.prefix_hit_tokens = prefix_tokens;
+                stats.prefix_hit_tokens += prefix_tokens as u64;
+            }
+            sched.install(lane, chain);
         }
     }
 
@@ -419,6 +486,9 @@ impl Engine {
         if pb.is_empty() {
             return Ok(false);
         }
+        // shared pages mapped at admission (prefix hits) must be
+        // resident in their lanes' regions before the executor reads
+        self.cache.materialize_pending();
 
         let t0 = Instant::now();
         let out = self.prefill_exec.prefill(
@@ -561,8 +631,19 @@ impl Engine {
         // src_lane is occupied, so idle_lane() can never return it.
         loop {
             let Some(dst) = sched.idle_lane() else { break };
-            let Some(p) = sched.take_fork_sibling(ticket) else { break };
-            self.cache.fork_lane(src_lane, dst);
+            let Some(mut p) = sched.take_fork_sibling(ticket) else { break };
+            // the sibling shares the leader's lane instead of using its
+            // queued prefix hit: drop the references it held
+            for id in std::mem::take(&mut p.prefix_pages) {
+                self.cache.release_page(id);
+            }
+            // refcount-bump fork: siblings share the leader's prefill
+            // pages copy-on-write; payload copies are page-granular and
+            // deferred to the next materialize_pending
+            let shared = self.cache.fork_lane_cow(src_lane, dst);
+            self.metrics
+                .counter("kv.fork_shared_pages")
+                .add(shared as f64);
             let policy = self.build_chain_policy(p.max_len);
             sched.install(
                 dst,
@@ -600,6 +681,9 @@ impl Engine {
         if db.is_empty() {
             return Ok(false);
         }
+        // COW-forked siblings installed this tick carry unmaterialized
+        // shared pages; fill their regions before the executor reads
+        self.cache.materialize_pending();
 
         let quest = self.cfg.policy == PolicyKind::Quest;
         let quest_k = {
@@ -805,6 +889,27 @@ impl Engine {
         // generated text excludes the prompt (gen_ids holds only
         // generated tokens)
         let text = self.tokenizer.decode(&a.gen_ids);
+        // prefix retention: if the leading prompt pages survived every
+        // compression decision untouched (identity slot layout, no
+        // pending evictions, no merges), publish them into the pool and
+        // index them under the prompt's token ids, then trim the index
+        // back under its LRU budget.
+        if self.cfg.prefix_cache {
+            let n = self.cache.clean_prefix_pages(lane, a.stats.prompt_tokens);
+            if n > 0 {
+                let ps = self.geom.page_size;
+                let ids = &a.prefill_ids[..n * ps];
+                let cache = &mut self.cache;
+                self.prefix_index
+                    .insert(ids, |p| cache.export_page(lane, p));
+                for id in self.prefix_index.trim(self.cfg.prefix_cache_pages) {
+                    self.cache.release_page(id);
+                }
+                self.metrics
+                    .gauge("kv.prefix_pages_retained")
+                    .set(self.prefix_index.pages_retained() as f64);
+            }
+        }
         let freed = self.cache.recycle_lane(lane);
         self.metrics.counter("kv.slots_recycled").add(freed as f64);
         sched.complete(

@@ -118,6 +118,14 @@ pub struct PendingChain {
     pub resume: Option<ResumeState>,
     /// When the chain entered the queue (first submission).
     pub enqueued: Instant,
+    /// Prefix-cache hit: retained KV pages covering `prefix_tokens`
+    /// leading prompt tokens. The chain holds one pool reference per
+    /// page while queued (opaque handles — the engine owns the pool);
+    /// the engine consumes them at install time (mapping the pages) or
+    /// releases them when the chain forks off a leader instead.
+    pub prefix_pages: Vec<u64>,
+    /// Tokens covered by `prefix_pages` (prefill starts there).
+    pub prefix_tokens: usize,
 }
 
 /// A chain occupying an executor lane.
@@ -290,6 +298,20 @@ impl Scheduler {
     /// A width of 0 is clamped to 1 — a request with no chains could
     /// never complete.
     pub fn submit(&mut self, req: &GenRequest, prompt_ids: Arc<Vec<u32>>) -> u64 {
+        self.submit_with_prefix(req, prompt_ids, &[], 0)
+    }
+
+    /// Like [`Scheduler::submit`], carrying a prefix-cache hit: every
+    /// chain of the request gets a copy of the page handles (the caller
+    /// must hold one pool reference per page per chain) and will start
+    /// prefill at `prefix_tokens` once installed.
+    pub fn submit_with_prefix(
+        &mut self,
+        req: &GenRequest,
+        prompt_ids: Arc<Vec<u32>>,
+        prefix_pages: &[u64],
+        prefix_tokens: usize,
+    ) -> u64 {
         let width = req.width.max(1);
         let ticket = self.next_ticket;
         self.next_ticket += 1;
@@ -316,6 +338,8 @@ impl Scheduler {
                 wait_fork: w > 0,
                 resume: None,
                 enqueued: now,
+                prefix_pages: prefix_pages.to_vec(),
+                prefix_tokens,
             });
         }
         ticket
@@ -600,6 +624,8 @@ impl Scheduler {
                         stats: chain.stats,
                     }),
                     enqueued: Instant::now(),
+                    prefix_pages: Vec::new(),
+                    prefix_tokens: 0,
                 }
             }
             None => PendingChain {
@@ -613,6 +639,8 @@ impl Scheduler {
                 wait_fork: false,
                 resume: None,
                 enqueued: Instant::now(),
+                prefix_pages: Vec::new(),
+                prefix_tokens: 0,
             },
         };
         self.pending.push_back(pending);

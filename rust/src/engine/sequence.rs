@@ -61,6 +61,9 @@ pub struct ChainStats {
     pub wall_s: f64,
     /// Whether the prompt cache was forked from a sibling chain.
     pub forked_prefill: bool,
+    /// Prompt tokens restored from the radix prefix cache instead of
+    /// being prefilled (0 when the chain prefilled from scratch).
+    pub prefix_hit_tokens: usize,
 }
 
 impl ChainStats {

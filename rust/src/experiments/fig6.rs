@@ -20,6 +20,8 @@ pub fn run_fig6(artifacts: &Path, n_problems: usize) -> Result<()> {
         policy: PolicyKind::Dms,
         cr: 4.0,
         temperature: 0.7,
+        // paper metrics exclude cross-request prefix caching
+        prefix_cache: false,
         ..Default::default()
     })?;
 

@@ -108,6 +108,8 @@ pub fn run_pareto(
 ) -> Result<ParetoReport> {
     let cfg = EngineConfig {
         artifacts: artifacts.to_path_buf(),
+        // paper metrics exclude cross-request prefix caching
+        prefix_cache: false,
         ..Default::default()
     };
     let mut harness = Harness::new(cfg)?;

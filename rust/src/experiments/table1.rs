@@ -39,6 +39,8 @@ pub fn run_table1(artifacts: &Path, n_problems: usize, base_only: bool) -> Resul
     let cfg = EngineConfig {
         artifacts: artifacts.to_path_buf(),
         temperature: 0.0, // zero-shot greedy, like the harness evals
+        // paper metrics exclude cross-request prefix caching
+        prefix_cache: false,
         ..Default::default()
     };
     let mut harness = Harness::new(cfg)?;

@@ -31,6 +31,8 @@ pub fn run_table2(artifacts: &Path, n_problems: usize) -> Result<()> {
     let cfg = EngineConfig {
         artifacts: artifacts.to_path_buf(),
         temperature: 0.0,
+        // paper metrics exclude cross-request prefix caching
+        prefix_cache: false,
         ..Default::default()
     };
     let mut harness = Harness::new(cfg)?;

@@ -1,0 +1,252 @@
+//! Copy-on-write page pool: refcounted ownership of shared KV pages.
+//!
+//! The executor ABI is fixed — every step uploads dense per-lane arrays
+//! `k/v: [L, B, H, S, hd]` — so a lane's *region* of the flat arrays is
+//! only a materialized view. Ownership of shared content lives here:
+//! a [`PagePool`] entry represents one **token page** (all layers and
+//! KV-heads of `page_size` consecutive slots) that more than one owner
+//! references. Owners are lane mappings (`CacheStore::page_map`) and
+//! the radix prefix index; each holds one reference.
+//!
+//! A page's payload is in one of two states:
+//!
+//! * [`Payload::Borrowed`] — the bytes still live in the borrowing
+//!   lane's region of the flat arrays (the common fork case: siblings
+//!   reference the leader's prefill pages with zero copies);
+//! * [`Payload::Owned`] — the pool holds its own snapshot
+//!   ([`PageData`]), taken the moment the borrowing lane was about to
+//!   diverge (copy-on-write) or retire (prefix retention).
+//!
+//! The COW rule enforced by `CacheStore`'s mutation guards: **any**
+//! mutation of a shared page — a token write, a DMS/TOVA/H2O eviction,
+//! a DMC merge — first detaches the mutating lane from the entry, and
+//! if that lane was the payload borrower with other references
+//! outstanding, publishes a pristine snapshot into the pool first.
+//! Compression decisions therefore can never reach through a shared
+//! prefix into a sibling's view.
+//!
+//! Releasing a reference that is not held panics: a double-free of a
+//! KV page is a cache-corruption bug, never recoverable bookkeeping.
+
+use std::collections::BTreeMap;
+
+use super::store::SlotState;
+
+/// Opaque handle to a pooled page.
+pub type PageId = u64;
+
+/// Snapshot of one token page across all (layer, KV-head) pairs.
+#[derive(Clone, Debug)]
+pub struct PageData {
+    /// f32[lh, page_size, hd]
+    pub k: Vec<f32>,
+    /// f32[lh, page_size, hd]
+    pub v: Vec<f32>,
+    /// f32[lh, page_size] additive mask.
+    pub mask: Vec<f32>,
+    /// Slot metadata per (lh, page_size).
+    pub meta: Vec<SlotState>,
+    /// f32[lh, hd] Quest page bounds.
+    pub pmin: Vec<f32>,
+    /// f32[lh, hd] Quest page bounds.
+    pub pmax: Vec<f32>,
+}
+
+/// Where a pooled page's bytes currently live.
+#[derive(Debug)]
+pub enum Payload {
+    /// Still resident in `lane`'s region of the flat arrays.
+    Borrowed {
+        /// The lane whose region holds the authoritative bytes.
+        lane: usize,
+    },
+    /// Snapshotted into the pool (survives lane recycling).
+    Owned(Box<PageData>),
+}
+
+#[derive(Debug)]
+struct Entry {
+    payload: Payload,
+    /// Outstanding references: lane mappings + pending-chain holds +
+    /// prefix-index retention.
+    refs: usize,
+    /// Page index within the slot space (identical in every mapper:
+    /// shared pages are position-aligned).
+    page: usize,
+}
+
+/// Refcounted registry of shared pages (see module docs).
+#[derive(Debug, Default)]
+pub struct PagePool {
+    entries: BTreeMap<PageId, Entry>,
+    next_id: PageId,
+}
+
+impl PagePool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of live pool entries (shared or retained pages).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Total references outstanding across all entries.
+    pub fn total_refs(&self) -> usize {
+        self.entries.values().map(|e| e.refs).sum()
+    }
+
+    /// Register a page whose payload stays borrowed from `lane`'s
+    /// region, with one reference (the borrower's own mapping).
+    pub fn adopt_borrowed(&mut self, lane: usize, page: usize) -> PageId {
+        self.insert(Payload::Borrowed { lane }, page)
+    }
+
+    /// Register an owned snapshot with one reference (the caller's).
+    pub fn insert_owned(&mut self, data: PageData, page: usize) -> PageId {
+        self.insert(Payload::Owned(Box::new(data)), page)
+    }
+
+    fn insert(&mut self, payload: Payload, page: usize) -> PageId {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.entries.insert(
+            id,
+            Entry {
+                payload,
+                refs: 1,
+                page,
+            },
+        );
+        id
+    }
+
+    /// Add one reference.
+    ///
+    /// # Panics
+    /// Panics if `id` is not a live entry.
+    pub fn retain(&mut self, id: PageId) {
+        self.entries
+            .get_mut(&id)
+            .unwrap_or_else(|| panic!("retain of dead page {id}"))
+            .refs += 1;
+    }
+
+    /// Drop one reference; the entry is freed when the count reaches
+    /// zero. Returns true when this release freed the entry.
+    ///
+    /// # Panics
+    /// Panics if `id` is not a live entry — releasing a page that was
+    /// already freed is a double-free.
+    pub fn release(&mut self, id: PageId) -> bool {
+        let e = self
+            .entries
+            .get_mut(&id)
+            .unwrap_or_else(|| panic!("double-free of page {id}"));
+        e.refs -= 1;
+        if e.refs == 0 {
+            self.entries.remove(&id);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Current reference count (0 for unknown ids).
+    pub fn refs(&self, id: PageId) -> usize {
+        self.entries.get(&id).map(|e| e.refs).unwrap_or(0)
+    }
+
+    /// The slot-space page index this entry restores into.
+    pub fn page_index(&self, id: PageId) -> usize {
+        self.entries[&id].page
+    }
+
+    /// Whether the payload is still borrowed from `lane`.
+    pub fn is_borrowed_from(&self, id: PageId, lane: usize) -> bool {
+        matches!(
+            self.entries.get(&id).map(|e| &e.payload),
+            Some(Payload::Borrowed { lane: l }) if *l == lane
+        )
+    }
+
+    /// Payload view for materialization.
+    pub fn payload(&self, id: PageId) -> &Payload {
+        &self.entries[&id].payload
+    }
+
+    /// Promote a borrowed payload to an owned snapshot (COW publish).
+    pub fn publish(&mut self, id: PageId, data: PageData) {
+        let e = self.entries.get_mut(&id).expect("publish of dead page");
+        debug_assert!(
+            matches!(e.payload, Payload::Borrowed { .. }),
+            "publish of already-owned page"
+        );
+        e.payload = Payload::Owned(Box::new(data));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn data() -> PageData {
+        PageData {
+            k: vec![1.0; 8],
+            v: vec![2.0; 8],
+            mask: vec![0.0; 2],
+            meta: vec![SlotState::Free; 2],
+            pmin: vec![0.0; 4],
+            pmax: vec![0.0; 4],
+        }
+    }
+
+    #[test]
+    fn refcount_lifecycle() {
+        let mut p = PagePool::new();
+        let id = p.adopt_borrowed(0, 3);
+        assert_eq!(p.refs(id), 1);
+        assert_eq!(p.page_index(id), 3);
+        p.retain(id);
+        assert_eq!(p.refs(id), 2);
+        assert!(!p.release(id));
+        assert!(p.release(id));
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "double-free")]
+    fn double_free_panics() {
+        let mut p = PagePool::new();
+        let id = p.insert_owned(data(), 0);
+        p.release(id);
+        p.release(id);
+    }
+
+    #[test]
+    #[should_panic(expected = "dead page")]
+    fn retain_after_free_panics() {
+        let mut p = PagePool::new();
+        let id = p.insert_owned(data(), 0);
+        p.release(id);
+        p.retain(id);
+    }
+
+    #[test]
+    fn publish_promotes_borrowed() {
+        let mut p = PagePool::new();
+        let id = p.adopt_borrowed(2, 0);
+        assert!(p.is_borrowed_from(id, 2));
+        p.publish(id, data());
+        assert!(!p.is_borrowed_from(id, 2));
+        match p.payload(id) {
+            Payload::Owned(d) => assert_eq!(d.k[0], 1.0),
+            Payload::Borrowed { .. } => panic!("still borrowed"),
+        }
+    }
+}

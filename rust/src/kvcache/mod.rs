@@ -1,4 +1,5 @@
-//! Host-authoritative paged KV cache (paper §3.3).
+//! Host-authoritative paged KV cache (paper §3.3) with copy-on-write
+//! prefix sharing.
 //!
 //! The physical cache is laid out exactly as the decode executable's
 //! inputs expect — `k/v: [L, B, H, S, hd]`, `mask: [L, B, H, S]`,
@@ -9,11 +10,24 @@
 //! to individual attention heads (the layout §3.3 calls for). Evicted
 //! slots are simply overwritten by incoming tokens (keys carry RoPE, so
 //! position travels with the payload).
+//!
+//! Cache *ownership* is a separate layer (see [`cow`]): pages shared
+//! between lanes — fork-siblings referencing a leader's prefill,
+//! prefix-cache hits referencing pages retained from completed
+//! requests — live in a refcounted [`PagePool`], and every mutation of
+//! a shared page copies-on-write first. The [`prefix`] module indexes
+//! retained pages by token ids (a radix tree with page-quantized
+//! edges) so repeated prompts prefill only from the divergence point.
+
+pub mod cow;
+pub mod prefix;
 
 mod paged;
 mod store;
 
+pub use cow::{PageData, PageId, PagePool, Payload};
 pub use paged::PageAllocator;
+pub use prefix::{PrefixHit, RadixPrefixIndex};
 pub use store::{CacheStore, Geometry, SlotState, NEG_INF};
 
 #[cfg(test)]
@@ -188,5 +202,243 @@ mod tests {
             c.write(0, 1, 1, s, i, &[0.0; 4], &[0.0; 4]);
         }
         assert!(c.alloc_slot(0, 1, 1).is_none());
+    }
+
+    // ------------------------------------------------------------------
+    // Copy-on-write sharing
+    // ------------------------------------------------------------------
+
+    /// Prefill-shaped writes: token `pos` lands in slot `pos` of every
+    /// (l, h) — identity layout, payload tagged with `pos`.
+    fn prefill(c: &mut CacheStore, lane: usize, n: usize) {
+        let g = c.geom;
+        for pos in 0..n {
+            for l in 0..g.layers {
+                for h in 0..g.kv_heads {
+                    let s = c.alloc_slot(lane, l, h).unwrap();
+                    c.write(lane, l, h, s, pos, &[pos as f32; 4], &[0.5; 4]);
+                }
+            }
+        }
+    }
+
+    fn assert_lanes_equal(c: &CacheStore, a: usize, b: usize) {
+        let g = c.geom;
+        for l in 0..g.layers {
+            for h in 0..g.kv_heads {
+                assert_eq!(c.live_count(a, l, h), c.live_count(b, l, h));
+                for s in 0..g.slots {
+                    assert_eq!(c.slot_state(a, l, h, s), c.slot_state(b, l, h, s));
+                    assert_eq!(c.mask_value(a, l, h, s), c.mask_value(b, l, h, s));
+                    assert_eq!(c.k_at(a, l, h, s), c.k_at(b, l, h, s));
+                    assert_eq!(c.v_at(a, l, h, s), c.v_at(b, l, h, s));
+                }
+                for p in 0..g.pages() {
+                    assert_eq!(c.pmin_at(a, l, h, p), c.pmin_at(b, l, h, p));
+                    assert_eq!(c.pmax_at(a, l, h, p), c.pmax_at(b, l, h, p));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cow_fork_matches_full_copy_after_materialize() {
+        let g = geom();
+        let mut c = CacheStore::new(g, 3);
+        prefill(&mut c, 0, 11);
+        c.fork_lane(0, 1); // reference: legacy deep copy
+        let shared = c.fork_lane_cow(0, 2); // COW: metadata only
+        assert_eq!(shared, 2, "11 tokens span 2 pages of 8");
+        assert!(c.pending_pages(2) > 0);
+        c.materialize_pending();
+        assert_eq!(c.pending_pages(2), 0);
+        assert_lanes_equal(&c, 1, 2);
+        assert_lanes_equal(&c, 0, 2);
+    }
+
+    #[test]
+    fn cow_fork_is_metadata_only_until_materialized() {
+        let g = geom();
+        let mut c = CacheStore::new(g, 2);
+        prefill(&mut c, 0, 10);
+        c.fork_lane_cow(0, 1);
+        // metadata visible immediately (scheduler relies on it)
+        assert_eq!(c.live_count(1, 0, 0), 10);
+        assert_eq!(c.slot_pos(1, 0, 0, 7), Some(7));
+        // pool holds one entry per shared page, two refs each
+        assert_eq!(c.pool_pages(), 2);
+        assert_eq!(c.pool_refs(), 4);
+        assert_eq!(c.shared_pages(0), 2);
+        assert_eq!(c.shared_pages(1), 2);
+    }
+
+    #[test]
+    fn cow_on_evict_preserves_sibling_view() {
+        let g = geom();
+        let mut c = CacheStore::new(g, 2);
+        prefill(&mut c, 0, 8);
+        c.fork_lane_cow(0, 1);
+        // the leader's compression policy evicts from the shared page
+        // BEFORE the sibling ever materialized it
+        c.evict(0, 0, 0, 3);
+        assert_eq!(c.cow_published(), 1, "eviction broke the share");
+        assert_eq!(c.live_count(0, 0, 0), 7);
+        c.materialize_pending();
+        // sibling's view is the pristine pre-eviction state
+        assert_eq!(c.live_count(1, 0, 0), 8);
+        assert_eq!(c.mask_value(1, 0, 0, 3), 0.0);
+        assert_eq!(c.k_at(1, 0, 0, 3)[0], 3.0);
+        // and the leader's own view took the eviction
+        assert!(c.mask_value(0, 0, 0, 3) <= NEG_INF);
+    }
+
+    #[test]
+    fn cow_on_write_diverges_only_the_writer() {
+        let g = geom();
+        let mut c = CacheStore::new(g, 2);
+        prefill(&mut c, 0, 6); // slots 0..5 of page 0
+        c.fork_lane_cow(0, 1);
+        c.materialize_pending();
+        // sibling writes its own token into the shared partial page
+        let s = c.alloc_slot(1, 0, 0).unwrap();
+        assert_eq!(s, 6);
+        c.write(1, 0, 0, s, 6, &[9.0; 4], &[9.0; 4]);
+        assert_eq!(c.live_count(1, 0, 0), 7);
+        assert_eq!(c.live_count(0, 0, 0), 6, "leader untouched");
+        assert!(!c.page_shared(1, 0), "writer detached from the share");
+        assert!(c.page_shared(0, 0), "leader still owns the pool entry");
+    }
+
+    #[test]
+    fn pool_drains_after_all_lanes_recycle() {
+        let g = geom();
+        let mut c = CacheStore::new(g, 4);
+        prefill(&mut c, 0, 15);
+        for dst in 1..4 {
+            c.fork_lane_cow(0, dst);
+        }
+        assert!(c.pool_pages() > 0);
+        // retire in arbitrary order, with the borrower first (forces a
+        // publish so the survivors keep their view)
+        c.recycle_lane(0);
+        c.materialize_pending();
+        assert_eq!(c.live_count(2, 0, 0), 15);
+        c.recycle_lane(2);
+        c.recycle_lane(1);
+        c.recycle_lane(3);
+        assert_eq!(c.pool_pages(), 0, "no leaked pool entries");
+        assert_eq!(c.pool_refs(), 0);
+    }
+
+    #[test]
+    fn borrower_recycle_publishes_for_survivors() {
+        let g = geom();
+        let mut c = CacheStore::new(g, 2);
+        prefill(&mut c, 0, 9);
+        c.fork_lane_cow(0, 1);
+        // leader retires before the sibling ever materialized
+        c.recycle_lane(0);
+        c.materialize_pending();
+        assert_eq!(c.live_count(1, 0, 0), 9);
+        assert_eq!(c.k_at(1, 0, 0, 8)[0], 8.0);
+        c.recycle_lane(1);
+        assert_eq!(c.pool_pages(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "double-free")]
+    fn double_release_of_exported_page_panics() {
+        let g = geom();
+        let mut c = CacheStore::new(g, 1);
+        prefill(&mut c, 0, 8);
+        let id = c.export_page(0, 0);
+        c.release_page(id);
+        c.release_page(id);
+    }
+
+    // ------------------------------------------------------------------
+    // Prefix retention
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn clean_prefix_requires_identity_and_no_compression_marks() {
+        let g = geom();
+        let mut c = CacheStore::new(g, 1);
+        prefill(&mut c, 0, 20);
+        // 20-token prompt: pages 0 and 1 full and clean; cap is
+        // (20-1)/8 = 2 pages
+        assert_eq!(c.clean_prefix_pages(0, 20), 2);
+        // an eviction in page 0 dirties the prefix from page 0 on
+        c.evict(0, 1, 1, 2);
+        assert_eq!(c.clean_prefix_pages(0, 20), 0);
+    }
+
+    #[test]
+    fn clean_prefix_stops_at_scheduled_eviction() {
+        let g = geom();
+        let mut c = CacheStore::new(g, 1);
+        prefill(&mut c, 0, 20);
+        c.schedule_eviction(0, 0, 0, 9, 100); // pending DMS decision in page 1
+        assert_eq!(c.clean_prefix_pages(0, 20), 1);
+    }
+
+    #[test]
+    fn exported_prefix_restores_bit_exact_into_fresh_lane() {
+        let g = geom();
+        let mut c = CacheStore::new(g, 2);
+        prefill(&mut c, 0, 17);
+        let n = c.clean_prefix_pages(0, 17);
+        assert_eq!(n, 2);
+        let ids: Vec<PageId> = (0..n).map(|p| c.export_page(0, p)).collect();
+        c.recycle_lane(0);
+        // restore into a different, clean lane: the mapping consumes
+        // its own reference, the export reference stands for the index
+        for &id in &ids {
+            c.retain_page(id);
+        }
+        c.map_prefix_pages(1, &ids);
+        c.materialize_pending();
+        for l in 0..g.layers {
+            for h in 0..g.kv_heads {
+                assert_eq!(c.live_count(1, l, h), 16);
+                for s in 0..16 {
+                    assert_eq!(c.slot_pos(1, l, h, s), Some(s));
+                    assert_eq!(c.k_at(1, l, h, s)[0], s as f32);
+                    assert_eq!(c.mask_value(1, l, h, s), 0.0);
+                }
+            }
+        }
+        // prefill continues exactly at the divergence point
+        assert_eq!(c.alloc_slot(1, 0, 0), Some(16));
+        // index drops its references → pool drains once the lane does
+        c.recycle_lane(1);
+        for id in ids {
+            c.release_page(id);
+        }
+        assert_eq!(c.pool_pages(), 0);
+    }
+
+    #[test]
+    fn prefix_restore_write_does_not_corrupt_retained_page() {
+        let g = geom();
+        let mut c = CacheStore::new(g, 2);
+        prefill(&mut c, 0, 9);
+        let id = c.export_page(0, 0);
+        c.recycle_lane(0);
+        c.map_prefix_pages(1, &[id]);
+        c.retain_page(id); // stand-in for the index's reference
+        c.materialize_pending();
+        // the restored lane evicts inside the retained page (policy)
+        c.evict(1, 0, 0, 0);
+        assert!(!c.page_shared(1, 0), "mutation detached the lane");
+        // a second consumer still sees the pristine snapshot
+        c.recycle_lane(1);
+        c.map_prefix_pages(0, &[id]);
+        c.materialize_pending();
+        assert_eq!(c.live_count(0, 0, 0), 8);
+        assert_eq!(c.k_at(0, 0, 0, 0)[0], 0.0);
+        assert_eq!(c.mask_value(0, 0, 0, 0), 0.0);
+        c.recycle_lane(0);
+        assert_eq!(c.pool_pages(), 0);
     }
 }

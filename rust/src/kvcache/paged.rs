@@ -4,6 +4,15 @@
 //! partially-used pages (first fit) so the working set stays compact —
 //! the PagedAttention property that lets evicted slots be overwritten
 //! without fragmenting whole pages.
+//!
+//! Free-page bookkeeping is kept in two ordered sets (partially-used
+//! and empty page indices), so `alloc` is O(log P + page_size) instead
+//! of the former O(slots) two-pass scan; page order is preserved
+//! (lowest partial page first, then lowest empty page), which keeps the
+//! allocation sequence — and therefore every downstream test and token
+//! stream — identical to the linear-scan allocator.
+
+use std::collections::BTreeSet;
 
 /// Allocator over `slots` physical slots in pages of `page_size`.
 #[derive(Clone, Debug)]
@@ -13,55 +22,89 @@ pub struct PageAllocator {
     used: Vec<bool>,
     /// per-page used-slot count.
     page_used: Vec<u16>,
+    /// pages with 0 < used < page_size, ascending.
+    partial: BTreeSet<usize>,
+    /// pages with used == 0, ascending.
+    empty: BTreeSet<usize>,
 }
 
 impl PageAllocator {
     pub fn new(slots: usize, page_size: usize) -> Self {
         assert!(slots % page_size == 0, "slots must be page-aligned");
+        let pages = slots / page_size;
         Self {
             page_size,
             used: vec![false; slots],
-            page_used: vec![0; slots / page_size],
+            page_used: vec![0; pages],
+            partial: BTreeSet::new(),
+            empty: (0..pages).collect(),
         }
     }
 
     pub fn reset(&mut self) {
         self.used.iter_mut().for_each(|u| *u = false);
         self.page_used.iter_mut().for_each(|c| *c = 0);
+        self.partial.clear();
+        self.empty = (0..self.page_used.len()).collect();
     }
 
-    /// Allocate one slot: first fit within partially-used pages, then
-    /// the first empty page.
+    /// Re-file page `p` into the partial/empty sets after a count change.
+    fn refile(&mut self, p: usize) {
+        let cnt = self.page_used[p] as usize;
+        if cnt == 0 {
+            self.partial.remove(&p);
+            self.empty.insert(p);
+        } else if cnt < self.page_size {
+            self.empty.remove(&p);
+            self.partial.insert(p);
+        } else {
+            self.partial.remove(&p);
+            self.empty.remove(&p);
+        }
+    }
+
+    /// Allocate one slot: first fit within the lowest partially-used
+    /// page, then the lowest empty page. Amortized O(1) in `slots`.
     pub fn alloc(&mut self) -> Option<usize> {
-        // pass 1: partially used pages
-        for (p, &cnt) in self.page_used.iter().enumerate() {
-            if cnt > 0 && (cnt as usize) < self.page_size {
-                let base = p * self.page_size;
-                for s in base..base + self.page_size {
-                    if !self.used[s] {
-                        self.used[s] = true;
-                        self.page_used[p] += 1;
-                        return Some(s);
-                    }
+        if let Some(&p) = self.partial.iter().next() {
+            let base = p * self.page_size;
+            for s in base..base + self.page_size {
+                if !self.used[s] {
+                    self.used[s] = true;
+                    self.page_used[p] += 1;
+                    self.refile(p);
+                    return Some(s);
                 }
             }
+            unreachable!("partial page {p} had no free slot");
         }
-        // pass 2: first empty page
-        for (p, &cnt) in self.page_used.iter().enumerate() {
-            if cnt == 0 {
-                let s = p * self.page_size;
-                self.used[s] = true;
-                self.page_used[p] = 1;
-                return Some(s);
-            }
+        if let Some(&p) = self.empty.iter().next() {
+            let s = p * self.page_size;
+            self.used[s] = true;
+            self.page_used[p] = 1;
+            self.refile(p);
+            return Some(s);
         }
         None
+    }
+
+    /// Claim a specific slot (fork / prefix-restore paths that must
+    /// reproduce another lane's exact slot layout). No-op if used.
+    pub fn claim(&mut self, slot: usize) {
+        if !self.used[slot] {
+            self.used[slot] = true;
+            let p = slot / self.page_size;
+            self.page_used[p] += 1;
+            self.refile(p);
+        }
     }
 
     pub fn free(&mut self, slot: usize) {
         if self.used[slot] {
             self.used[slot] = false;
-            self.page_used[slot / self.page_size] -= 1;
+            let p = slot / self.page_size;
+            self.page_used[p] -= 1;
+            self.refile(p);
         }
     }
 
@@ -73,9 +116,14 @@ impl PageAllocator {
         self.page_used.iter().map(|&c| c as usize).sum()
     }
 
+    /// Used-slot count of one page.
+    pub fn page_used_count(&self, page: usize) -> usize {
+        self.page_used[page] as usize
+    }
+
     /// Number of pages with at least one used slot.
     pub fn allocated_pages(&self) -> usize {
-        self.page_used.iter().filter(|&&c| c > 0).count()
+        self.page_used.len() - self.empty.len()
     }
 
     pub fn capacity(&self) -> usize {
@@ -85,6 +133,8 @@ impl PageAllocator {
     pub fn clone_from_other(&mut self, other: &PageAllocator) {
         self.used.copy_from_slice(&other.used);
         self.page_used.copy_from_slice(&other.page_used);
+        self.partial = other.partial.clone();
+        self.empty = other.empty.clone();
     }
 }
 
@@ -145,5 +195,72 @@ mod tests {
         a.free(s);
         a.free(s);
         assert_eq!(a.used_slots(), 0);
+    }
+
+    #[test]
+    fn claim_specific_slot_then_alloc_fills_around_it() {
+        let mut a = PageAllocator::new(16, 8);
+        a.claim(3);
+        assert!(a.is_used(3));
+        assert_eq!(a.allocated_pages(), 1);
+        // first-fit returns the lower holes of the now-partial page
+        assert_eq!(a.alloc(), Some(0));
+        assert_eq!(a.alloc(), Some(1));
+        assert_eq!(a.alloc(), Some(2));
+        assert_eq!(a.alloc(), Some(4));
+        // claiming an already-used slot is a no-op
+        a.claim(3);
+        assert_eq!(a.used_slots(), 5);
+    }
+
+    #[test]
+    fn matches_linear_scan_order_under_random_ops() {
+        // the set-based allocator must produce exactly the sequence of
+        // the old two-pass scan: lowest partial page first, then lowest
+        // empty page, first free slot within the page.
+        let mut a = PageAllocator::new(64, 8);
+        let mut reference: Vec<bool> = vec![false; 64];
+        let mut rng = 0x1234_5678_u64;
+        let mut next = |m: usize| {
+            rng = rng.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (rng >> 33) as usize % m
+        };
+        for _ in 0..500 {
+            if next(3) == 0 {
+                let s = next(64);
+                a.free(s);
+                reference[s] = false;
+            } else {
+                // reference: first free slot in lowest partial page, else
+                // first slot of lowest empty page
+                let ref_pick = {
+                    let page_cnt = |p: usize| {
+                        reference[p * 8..(p + 1) * 8].iter().filter(|&&u| u).count()
+                    };
+                    let mut pick = None;
+                    for p in 0..8 {
+                        let c = page_cnt(p);
+                        if c > 0 && c < 8 {
+                            pick = (p * 8..(p + 1) * 8).find(|&s| !reference[s]);
+                            break;
+                        }
+                    }
+                    if pick.is_none() {
+                        for p in 0..8 {
+                            if page_cnt(p) == 0 {
+                                pick = Some(p * 8);
+                                break;
+                            }
+                        }
+                    }
+                    pick
+                };
+                let got = a.alloc();
+                assert_eq!(got, ref_pick);
+                if let Some(s) = got {
+                    reference[s] = true;
+                }
+            }
+        }
     }
 }

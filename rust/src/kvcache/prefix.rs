@@ -1,0 +1,416 @@
+//! Radix prefix index: token-id → retained KV pages.
+//!
+//! Completed requests leave their clean prompt pages behind in the
+//! [`PagePool`](super::cow::PagePool) (see
+//! `CacheStore::clean_prefix_pages` / `export_page`); this index maps
+//! token-id prefixes to those pages so the scheduler can admit a
+//! repeated prompt with its prefill started at the divergence point.
+//!
+//! The tree is a radix tree over token ids with **page-quantized
+//! edges**: every edge label is a whole number of `page_size`-token
+//! pages, because a KV page is the unit of reuse — two prompts that
+//! diverge mid-page cannot share that page's cache, so finer splits
+//! would index unusable state. Each edge carries one [`PageId`] per
+//! label page and an LRU stamp; `trim` releases least-recently-used
+//! leaf edges until the retained-page budget holds.
+//!
+//! Reference discipline: `insert` stores handles produced by the
+//! caller-supplied provider (which must hand over one reference per
+//! page); `trim` / `release_all` return the handles they dropped so the
+//! caller can release the pool references. The index never touches the
+//! pool directly — it is a pure data structure over opaque ids, which
+//! keeps it unit-testable without a `CacheStore`.
+
+use super::cow::PageId;
+
+/// A prefix-cache match: pages to map and the token count they cover.
+#[derive(Clone, Debug, Default)]
+pub struct PrefixHit {
+    /// Pool pages covering `tokens` leading tokens, in order.
+    pub pages: Vec<PageId>,
+    /// Matched token count (multiple of `page_size`, strictly shorter
+    /// than the looked-up prompt).
+    pub tokens: usize,
+}
+
+#[derive(Debug)]
+struct Edge {
+    /// Token ids covered (len is a multiple of `page_size`).
+    label: Vec<u32>,
+    /// One retained page per `page_size` tokens of `label`.
+    pages: Vec<PageId>,
+    /// LRU stamp of the last walk through this edge.
+    stamp: u64,
+    children: Vec<Edge>,
+}
+
+impl Edge {
+    fn count_pages(&self) -> usize {
+        self.pages.len() + self.children.iter().map(Edge::count_pages).sum::<usize>()
+    }
+
+    fn drain_pages(self, out: &mut Vec<PageId>) {
+        out.extend(self.pages);
+        for c in self.children {
+            c.drain_pages(out);
+        }
+    }
+}
+
+/// The radix prefix index (see module docs).
+#[derive(Debug)]
+pub struct RadixPrefixIndex {
+    page_size: usize,
+    roots: Vec<Edge>,
+    clock: u64,
+    retained: usize,
+}
+
+impl RadixPrefixIndex {
+    pub fn new(page_size: usize) -> Self {
+        assert!(page_size > 0);
+        Self {
+            page_size,
+            roots: Vec::new(),
+            clock: 0,
+            retained: 0,
+        }
+    }
+
+    /// Pages currently retained by the index.
+    pub fn pages_retained(&self) -> usize {
+        self.retained
+    }
+
+    /// Longest indexed page-aligned prefix of `ids`, capped one page
+    /// short of covering the whole prompt (a reusing request must keep
+    /// at least one token to prefill — its logits seed sampling).
+    pub fn lookup(&mut self, ids: &[u32]) -> PrefixHit {
+        let ps = self.page_size;
+        if ids.is_empty() {
+            return PrefixHit::default();
+        }
+        let max_pages = (ids.len() - 1) / ps;
+        self.clock += 1;
+        let mut pages = Vec::new();
+        lookup_rec(&mut self.roots, ids, ps, self.clock, max_pages, &mut pages);
+        let tokens = pages.len() * ps;
+        PrefixHit { pages, tokens }
+    }
+
+    /// Index the page-aligned prefix `ids` (its length must be a
+    /// multiple of `page_size`). For every page not already present,
+    /// `provide(page_index)` is called with the slot-space page number
+    /// and must return a pool handle carrying one reference for the
+    /// index. Already-indexed pages are left untouched (and their LRU
+    /// stamps refreshed), so repeat insertion is cheap and never
+    /// double-retains.
+    pub fn insert(&mut self, ids: &[u32], mut provide: impl FnMut(usize) -> PageId) {
+        let ps = self.page_size;
+        assert!(ids.len() % ps == 0, "prefix must be page-aligned");
+        self.clock += 1;
+        self.retained += insert_rec(
+            &mut self.roots,
+            ids,
+            0,
+            ps,
+            self.clock,
+            &mut provide,
+        );
+    }
+
+    /// Release least-recently-used leaf edges until at most
+    /// `max_pages` pages stay retained. Returns the dropped handles;
+    /// the caller must release their pool references.
+    pub fn trim(&mut self, max_pages: usize) -> Vec<PageId> {
+        let mut dropped = Vec::new();
+        while self.retained > max_pages {
+            let Some(edge) = pop_lru_leaf(&mut self.roots) else {
+                break;
+            };
+            self.retained -= edge.pages.len();
+            dropped.extend(edge.pages);
+        }
+        dropped
+    }
+
+    /// Drop the whole index (policy/variant switch invalidates every
+    /// retained page). Returns all handles for release.
+    pub fn release_all(&mut self) -> Vec<PageId> {
+        let mut out = Vec::with_capacity(self.retained);
+        for e in std::mem::take(&mut self.roots) {
+            e.drain_pages(&mut out);
+        }
+        self.retained = 0;
+        out
+    }
+
+    /// Recount retained pages from the tree (test/debug invariant).
+    pub fn recount(&self) -> usize {
+        self.roots.iter().map(Edge::count_pages).sum()
+    }
+}
+
+fn lookup_rec(
+    edges: &mut [Edge],
+    ids: &[u32],
+    ps: usize,
+    clock: u64,
+    max_pages: usize,
+    out: &mut Vec<PageId>,
+) {
+    if out.len() >= max_pages || ids.len() < ps {
+        return;
+    }
+    let Some(edge) = edges.iter_mut().find(|e| e.label[..ps] == ids[..ps]) else {
+        return;
+    };
+    edge.stamp = clock;
+    let mut m = 0usize;
+    while m < edge.pages.len()
+        && out.len() < max_pages
+        && (m + 1) * ps <= ids.len()
+        && edge.label[m * ps..(m + 1) * ps] == ids[m * ps..(m + 1) * ps]
+    {
+        out.push(edge.pages[m]);
+        m += 1;
+    }
+    if m == edge.pages.len() {
+        lookup_rec(&mut edge.children, &ids[m * ps..], ps, clock, max_pages, out);
+    }
+}
+
+/// Returns the number of pages newly added under `edges`.
+fn insert_rec<F: FnMut(usize) -> PageId>(
+    edges: &mut Vec<Edge>,
+    ids: &[u32],
+    page0: usize,
+    ps: usize,
+    clock: u64,
+    provide: &mut F,
+) -> usize {
+    if ids.is_empty() {
+        return 0;
+    }
+    let Some(pos) = edges.iter().position(|e| e.label[..ps] == ids[..ps]) else {
+        // no matching child: append the whole remainder as a leaf
+        let pages: Vec<PageId> = (0..ids.len() / ps).map(|i| provide(page0 + i)).collect();
+        let added = pages.len();
+        edges.push(Edge {
+            label: ids.to_vec(),
+            pages,
+            stamp: clock,
+            children: Vec::new(),
+        });
+        return added;
+    };
+    let edge = &mut edges[pos];
+    let old_stamp = edge.stamp;
+    edge.stamp = clock;
+    // pages of this edge matching the remaining ids
+    let mut m = 0usize;
+    while m < edge.pages.len()
+        && (m + 1) * ps <= ids.len()
+        && edge.label[m * ps..(m + 1) * ps] == ids[m * ps..(m + 1) * ps]
+    {
+        m += 1;
+    }
+    if m < edge.pages.len() {
+        // diverged mid-edge: split at the page boundary
+        let tail_label = edge.label.split_off(m * ps);
+        let tail_pages = edge.pages.split_off(m);
+        let tail_children = std::mem::take(&mut edge.children);
+        edge.children.push(Edge {
+            label: tail_label,
+            pages: tail_pages,
+            stamp: old_stamp,
+            children: tail_children,
+        });
+    }
+    insert_rec(
+        &mut edges[pos].children,
+        &ids[m * ps..],
+        page0 + m,
+        ps,
+        clock,
+        provide,
+    )
+}
+
+/// Remove the leaf edge with the smallest stamp anywhere under `edges`.
+fn pop_lru_leaf(edges: &mut Vec<Edge>) -> Option<Edge> {
+    fn min_leaf_stamp(edges: &[Edge]) -> Option<u64> {
+        edges
+            .iter()
+            .filter_map(|e| {
+                if e.children.is_empty() {
+                    Some(e.stamp)
+                } else {
+                    min_leaf_stamp(&e.children)
+                }
+            })
+            .min()
+    }
+    fn remove_leaf(edges: &mut Vec<Edge>, stamp: u64) -> Option<Edge> {
+        if let Some(i) = edges
+            .iter()
+            .position(|e| e.children.is_empty() && e.stamp == stamp)
+        {
+            return Some(edges.remove(i));
+        }
+        for e in edges.iter_mut() {
+            if let Some(found) = remove_leaf(&mut e.children, stamp) {
+                return Some(found);
+            }
+        }
+        None
+    }
+    let stamp = min_leaf_stamp(edges)?;
+    remove_leaf(edges, stamp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::Cell;
+
+    /// Unique-id provider: records requested page indices, returns
+    /// sequentially unique handles starting at 1000.
+    struct Prov {
+        seq: Cell<PageId>,
+        calls: std::cell::RefCell<Vec<usize>>,
+    }
+
+    impl Prov {
+        fn new() -> Self {
+            Self {
+                seq: Cell::new(1000),
+                calls: std::cell::RefCell::new(Vec::new()),
+            }
+        }
+        fn f(&self) -> impl FnMut(usize) -> PageId + '_ {
+            |p| {
+                self.calls.borrow_mut().push(p);
+                let id = self.seq.get();
+                self.seq.set(id + 1);
+                id
+            }
+        }
+        fn calls(&self) -> Vec<usize> {
+            self.calls.borrow().clone()
+        }
+    }
+
+    #[test]
+    fn insert_then_lookup_full_pages() {
+        let mut idx = RadixPrefixIndex::new(4);
+        let p = Prov::new();
+        idx.insert(&[1, 2, 3, 4, 5, 6, 7, 8], p.f());
+        assert_eq!(p.calls(), vec![0, 1]);
+        assert_eq!(idx.pages_retained(), 2);
+        // prompt repeating the prefix + one extra token matches both pages
+        let hit = idx.lookup(&[1, 2, 3, 4, 5, 6, 7, 8, 9]);
+        assert_eq!(hit.tokens, 8);
+        assert_eq!(hit.pages, vec![1000, 1001]);
+        // a prompt that IS exactly the prefix only matches one page
+        // (at least one token must remain to prefill)
+        let hit = idx.lookup(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        assert_eq!(hit.tokens, 4);
+        // divergence in the second page stops the match there
+        let hit = idx.lookup(&[1, 2, 3, 4, 9, 9, 9, 9, 9]);
+        assert_eq!(hit.tokens, 4);
+        assert_eq!(hit.pages, vec![1000]);
+        // no match at all
+        let hit = idx.lookup(&[9, 9, 9, 9, 9]);
+        assert_eq!(hit.tokens, 0);
+    }
+
+    #[test]
+    fn shared_prefix_splits_edge_at_page_boundary() {
+        let mut idx = RadixPrefixIndex::new(2);
+        let p = Prov::new();
+        idx.insert(&[1, 2, 3, 4, 5, 6], p.f()); // pages 1000..=1002
+        idx.insert(&[1, 2, 3, 4, 9, 9], p.f()); // shares 2, adds 1003
+        // only the diverging page is provided anew, at page index 2
+        assert_eq!(p.calls(), vec![0, 1, 2, 2]);
+        assert_eq!(idx.pages_retained(), 4);
+        assert_eq!(idx.recount(), 4);
+        let hit = idx.lookup(&[1, 2, 3, 4, 9, 9, 7]);
+        assert_eq!(hit.pages, vec![1000, 1001, 1003]);
+        assert_eq!(hit.tokens, 6);
+        let hit = idx.lookup(&[1, 2, 3, 4, 5, 6, 7]);
+        assert_eq!(hit.pages, vec![1000, 1001, 1002]);
+    }
+
+    #[test]
+    fn reinsert_provides_nothing_new() {
+        let mut idx = RadixPrefixIndex::new(2);
+        let p = Prov::new();
+        idx.insert(&[1, 2, 3, 4], p.f());
+        idx.insert(&[1, 2, 3, 4], p.f());
+        assert_eq!(p.calls(), vec![0, 1], "repeat insert must not re-provide");
+        assert_eq!(idx.pages_retained(), 2);
+        // extending an indexed prefix only provides the suffix
+        idx.insert(&[1, 2, 3, 4, 5, 6], p.f());
+        assert_eq!(p.calls(), vec![0, 1, 2]);
+        assert_eq!(idx.pages_retained(), 3);
+    }
+
+    #[test]
+    fn trim_releases_lru_leaves_first() {
+        let mut idx = RadixPrefixIndex::new(2);
+        let p = Prov::new();
+        idx.insert(&[1, 1, 2, 2], p.f()); // 1000, 1001
+        idx.insert(&[7, 7, 8, 8], p.f()); // 1002, 1003
+        // touch the first prefix so the second becomes LRU
+        let _ = idx.lookup(&[1, 1, 2, 2, 3]);
+        let dropped = idx.trim(2);
+        assert_eq!(idx.pages_retained(), 2);
+        assert_eq!(idx.recount(), 2);
+        // the untouched [7,7,8,8] chain was dropped
+        assert_eq!(dropped, vec![1002, 1003]);
+        assert_eq!(idx.lookup(&[7, 7, 8, 8, 9]).tokens, 0);
+        assert_eq!(idx.lookup(&[1, 1, 2, 2, 3]).tokens, 4);
+    }
+
+    #[test]
+    fn trim_on_split_tree_drops_deep_leaf() {
+        let mut idx = RadixPrefixIndex::new(2);
+        let p = Prov::new();
+        idx.insert(&[1, 1, 2, 2, 3, 3], p.f()); // 1000..=1002
+        idx.insert(&[1, 1, 2, 2, 9, 9], p.f()); // splits, adds 1003
+        // refresh the second branch; the [3,3] tail is now LRU
+        let _ = idx.lookup(&[1, 1, 2, 2, 9, 9, 0]);
+        let dropped = idx.trim(3);
+        assert_eq!(dropped, vec![1002]);
+        assert_eq!(idx.lookup(&[1, 1, 2, 2, 3, 3, 0]).tokens, 4);
+        assert_eq!(idx.lookup(&[1, 1, 2, 2, 9, 9, 0]).tokens, 6);
+        assert_eq!(idx.recount(), idx.pages_retained());
+    }
+
+    #[test]
+    fn release_all_returns_every_page() {
+        let mut idx = RadixPrefixIndex::new(2);
+        let p = Prov::new();
+        idx.insert(&[1, 1, 2, 2, 3, 3], p.f());
+        idx.insert(&[1, 1, 9, 9], p.f());
+        let n = idx.pages_retained();
+        let all = idx.release_all();
+        assert_eq!(all.len(), n);
+        assert_eq!(idx.pages_retained(), 0);
+        assert_eq!(idx.lookup(&[1, 1, 2, 2, 3]).tokens, 0);
+    }
+
+    #[test]
+    fn lookup_respects_prompt_length_cap() {
+        let mut idx = RadixPrefixIndex::new(4);
+        let p = Prov::new();
+        idx.insert(&[1, 2, 3, 4, 5, 6, 7, 8], p.f());
+        // 6-token prompt: only one full page fits under the cap
+        let hit = idx.lookup(&[1, 2, 3, 4, 5, 6]);
+        assert_eq!(hit.tokens, 4);
+        // 4-token prompt: the cap forbids any hit
+        let hit = idx.lookup(&[1, 2, 3, 4]);
+        assert_eq!(hit.tokens, 0);
+    }
+}

@@ -1,5 +1,21 @@
-//! The cache store: flat executor-layout arrays + per-slot metadata.
+//! The cache store: flat executor-layout arrays + per-slot metadata,
+//! with copy-on-write page sharing across lanes.
+//!
+//! The flat `k/v/mask/pmin/pmax` arrays are the executor's input view
+//! and are re-uploaded every step; a lane's region of them is therefore
+//! only a *materialized view* of the lane's logical cache. Ownership of
+//! content shared between lanes (fork-siblings referencing a leader's
+//! prefill, prefix-cache hits referencing retained pages) lives in the
+//! [`PagePool`]: `page_map[lane][page]` marks a page of the lane's slot
+//! space as shared, and every mutating operation (`write`, `evict`,
+//! `merge_into_last`) first detaches the lane from the shared entry —
+//! publishing a pristine snapshot into the pool if the lane was the
+//! payload borrower — before touching the bytes. Payload copies into a
+//! sharer's region are deferred to [`CacheStore::materialize_pending`],
+//! which the engine runs once per tick before calling the executor, so
+//! forking W siblings is pure metadata work.
 
+use super::cow::{PageData, PageId, PagePool, Payload};
 use super::paged::PageAllocator;
 
 pub const NEG_INF: f32 = -1e9;
@@ -38,7 +54,7 @@ pub enum SlotState {
     },
 }
 
-const NO_EVICT: u32 = u32::MAX;
+pub(super) const NO_EVICT: u32 = u32::MAX;
 
 /// Host-authoritative cache for all lanes of one executor.
 pub struct CacheStore {
@@ -59,6 +75,16 @@ pub struct CacheStore {
     live: Vec<usize>,
     /// most recently written live slot per (b, l, h) (DMC merge target)
     last_written: Vec<Option<usize>>,
+    /// Shared-page registry (copy-on-write ownership).
+    pool: PagePool,
+    /// per lane, per page: the pool entry this page is shared through.
+    page_map: Vec<Vec<Option<PageId>>>,
+    /// per lane, per page: payload not yet copied into this lane's
+    /// region of the flat arrays.
+    pending_fill: Vec<Vec<bool>>,
+    pending_count: Vec<usize>,
+    /// Pages snapshotted into the pool by copy-on-write breaks.
+    cow_published: u64,
 }
 
 impl CacheStore {
@@ -80,6 +106,11 @@ impl CacheStore {
                 .collect(),
             live: vec![0; n_lbh],
             last_written: vec![None; n_lbh],
+            pool: PagePool::new(),
+            page_map: (0..batch).map(|_| vec![None; geom.pages()]).collect(),
+            pending_fill: (0..batch).map(|_| vec![false; geom.pages()]).collect(),
+            pending_count: vec![0; batch],
+            cow_published: 0,
         }
     }
 
@@ -144,6 +175,7 @@ impl CacheStore {
         k: &[f32],
         v: &[f32],
     ) {
+        self.ensure_private(b, slot / self.geom.page_size);
         let hd = self.geom.head_dim;
         debug_assert_eq!(k.len(), hd);
         let base = self.kv_base(b, l, h, slot);
@@ -152,12 +184,9 @@ impl CacheStore {
         let mi = self.mask_idx(b, l, h, slot);
         self.mask[mi] = 0.0;
         let i = self.lbh(b, l, h);
-        if !self.alloc[i].is_used(slot) {
-            // caller may write into a pre-chosen slot (prefill fork);
-            // claim it in the allocator bitmap.
-            // PageAllocator has no direct claim API; emulate via scan.
-            self.claim_slot(i, slot);
-        }
+        // caller may write into a pre-chosen slot (restore paths);
+        // claim it in the allocator bitmap.
+        self.alloc[i].claim(slot);
         if !matches!(self.meta[i][slot], SlotState::Live { .. }) {
             self.live[i] += 1;
         }
@@ -168,22 +197,6 @@ impl CacheStore {
         };
         self.last_written[i] = Some(slot);
         self.update_page_bounds(b, l, h, slot, k);
-    }
-
-    fn claim_slot(&mut self, lbh: usize, slot: usize) {
-        // allocate-until-hit then free the extras — slots are claimed
-        // out of order only during fork/restore paths, which are rare.
-        let mut extras = Vec::new();
-        loop {
-            match self.alloc[lbh].alloc() {
-                Some(s) if s == slot => break,
-                Some(s) => extras.push(s),
-                None => break,
-            }
-        }
-        for s in extras {
-            self.alloc[lbh].free(s);
-        }
     }
 
     fn update_page_bounds(&mut self, b: usize, l: usize, h: usize, slot: usize, k: &[f32]) {
@@ -220,6 +233,7 @@ impl CacheStore {
         let SlotState::Live { pos, evict_at, merges } = self.meta[i][slot] else {
             return false;
         };
+        self.ensure_private(b, slot / self.geom.page_size);
         let n = merges as f32 + 1.0;
         let base = self.kv_base(b, l, h, slot);
         let hd = self.geom.head_dim;
@@ -239,19 +253,25 @@ impl CacheStore {
 
     pub fn evict(&mut self, b: usize, l: usize, h: usize, slot: usize) {
         let i = self.lbh(b, l, h);
-        if matches!(self.meta[i][slot], SlotState::Live { .. }) {
-            self.meta[i][slot] = SlotState::Free;
-            self.alloc[i].free(slot);
-            self.live[i] -= 1;
-            let mi = self.mask_idx(b, l, h, slot);
-            self.mask[mi] = NEG_INF;
-            if self.last_written[i] == Some(slot) {
-                self.last_written[i] = None;
-            }
+        if !matches!(self.meta[i][slot], SlotState::Live { .. }) {
+            return;
+        }
+        // an eviction decision on a shared page must never mutate a
+        // sibling's (or the prefix cache's) view: detach first.
+        self.ensure_private(b, slot / self.geom.page_size);
+        self.meta[i][slot] = SlotState::Free;
+        self.alloc[i].free(slot);
+        self.live[i] -= 1;
+        let mi = self.mask_idx(b, l, h, slot);
+        self.mask[mi] = NEG_INF;
+        if self.last_written[i] == Some(slot) {
+            self.last_written[i] = None;
         }
     }
 
     /// DMS delayed eviction: mark `slot` to be evicted at `evict_at`.
+    /// Metadata-only (per-lane), so it needs no COW break; the eviction
+    /// itself goes through [`CacheStore::evict`] when due.
     pub fn schedule_eviction(&mut self, b: usize, l: usize, h: usize, slot: usize, evict_at: usize) {
         let i = self.lbh(b, l, h);
         if let SlotState::Live { pos, merges, .. } = self.meta[i][slot] {
@@ -374,6 +394,7 @@ impl CacheStore {
     }
 
     pub fn reset_lane(&mut self, b: usize) {
+        self.release_lane_pages(b);
         for l in 0..self.geom.layers {
             for h in 0..self.geom.kv_heads {
                 let i = self.lbh(b, l, h);
@@ -393,10 +414,14 @@ impl CacheStore {
         }
     }
 
-    /// Copy lane `src`'s full cache state into lane `dst` (prefix
-    /// sharing for parallel chains: prefill once, fork W−1 times).
+    /// Copy lane `src`'s full cache state into lane `dst` (legacy
+    /// full-copy fork, kept as the reference the COW fork is validated
+    /// against).
     pub fn fork_lane(&mut self, src: usize, dst: usize) {
         assert_ne!(src, dst);
+        // a full-copy fork overwrites dst wholesale: drop any sharing
+        // first so pool bookkeeping stays exact.
+        self.release_lane_pages(dst);
         let g = self.geom;
         for l in 0..g.layers {
             for h in 0..g.kv_heads {
@@ -423,5 +448,420 @@ impl CacheStore {
                 self.last_written[di] = self.last_written[si];
             }
         }
+        // src pages may be lazily shared with other lanes; dst's copy is
+        // private, but any pages src itself still needs to fill must be
+        // resolved into dst too.
+        for p in 0..g.pages() {
+            if self.pending_fill[src][p] {
+                // dst copied src's unmaterialized region: fill both.
+                self.materialize_page(src, p);
+                self.copy_page_between_lanes(src, dst, p);
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Copy-on-write sharing
+    // ------------------------------------------------------------------
+
+    /// Share lane `src`'s live pages with (clean) lane `dst` via
+    /// refcount bumps — no payload memcpy. Metadata (slot states,
+    /// allocator occupancy, live counts) is cloned eagerly so the
+    /// scheduler sees `dst` fully populated; payload lands in `dst`'s
+    /// region of the flat arrays at the next
+    /// [`CacheStore::materialize_pending`]. Returns the number of pages
+    /// shared.
+    pub fn fork_lane_cow(&mut self, src: usize, dst: usize) -> usize {
+        assert_ne!(src, dst);
+        let g = self.geom;
+        let ps = g.page_size;
+        debug_assert!(
+            (0..g.layers)
+                .all(|l| (0..g.kv_heads).all(|h| self.live[self.lbh(dst, l, h)] == 0)),
+            "fork_lane_cow requires a clean destination lane"
+        );
+        let mut shared = 0usize;
+        for p in 0..g.pages() {
+            let any_used = (0..g.layers).any(|l| {
+                (0..g.kv_heads)
+                    .any(|h| self.alloc[self.lbh(src, l, h)].page_used_count(p) > 0)
+            });
+            if !any_used {
+                continue;
+            }
+            let id = match self.page_map[src][p] {
+                Some(id) => id,
+                None => {
+                    let id = self.pool.adopt_borrowed(src, p);
+                    self.page_map[src][p] = Some(id);
+                    id
+                }
+            };
+            self.pool.retain(id);
+            self.page_map[dst][p] = Some(id);
+            if !self.pending_fill[dst][p] {
+                self.pending_fill[dst][p] = true;
+                self.pending_count[dst] += 1;
+            }
+            shared += 1;
+            // eager metadata clone for this page
+            for l in 0..g.layers {
+                for h in 0..g.kv_heads {
+                    let si = self.lbh(src, l, h);
+                    let di = self.lbh(dst, l, h);
+                    for s in p * ps..(p + 1) * ps {
+                        let m = self.meta[si][s];
+                        if matches!(m, SlotState::Live { .. }) {
+                            self.live[di] += 1;
+                            self.alloc[di].claim(s);
+                        }
+                        self.meta[di][s] = m;
+                    }
+                }
+            }
+        }
+        for l in 0..g.layers {
+            for h in 0..g.kv_heads {
+                let si = self.lbh(src, l, h);
+                let di = self.lbh(dst, l, h);
+                self.last_written[di] = self.last_written[si];
+            }
+        }
+        shared
+    }
+
+    /// Map retained prefix pages (Owned pool snapshots) into a clean
+    /// lane, consuming one caller-held reference per page. Metadata is
+    /// restored eagerly; payload follows at the next
+    /// [`CacheStore::materialize_pending`].
+    pub fn map_prefix_pages(&mut self, lane: usize, ids: &[PageId]) {
+        let g = self.geom;
+        let ps = g.page_size;
+        for &id in ids {
+            let p = self.pool.page_index(id);
+            debug_assert!(
+                self.page_map[lane][p].is_none(),
+                "prefix page {p} double-mapped on lane {lane}"
+            );
+            self.page_map[lane][p] = Some(id);
+            if !self.pending_fill[lane][p] {
+                self.pending_fill[lane][p] = true;
+                self.pending_count[lane] += 1;
+            }
+            let Payload::Owned(data) = self.pool.payload(id) else {
+                panic!("prefix page {id} not owned by the pool");
+            };
+            for l in 0..g.layers {
+                for h in 0..g.kv_heads {
+                    let lh_i = l * g.kv_heads + h;
+                    let i = (lane * g.layers + l) * g.kv_heads + h;
+                    for j in 0..ps {
+                        let m = data.meta[lh_i * ps + j];
+                        let s = p * ps + j;
+                        if matches!(m, SlotState::Live { .. }) {
+                            self.live[i] += 1;
+                            self.alloc[i].claim(s);
+                        }
+                        self.meta[i][s] = m;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Copy every pending shared page's payload into its lane's region
+    /// of the flat arrays. The engine runs this once per tick, before
+    /// the executor reads the arrays; mutation guards also trigger it
+    /// per page, so correctness never depends on the batching.
+    pub fn materialize_pending(&mut self) {
+        for b in 0..self.batch {
+            if self.pending_count[b] == 0 {
+                continue;
+            }
+            for p in 0..self.geom.pages() {
+                if self.pending_fill[b][p] {
+                    self.materialize_page(b, p);
+                }
+            }
+        }
+    }
+
+    /// Pages still awaiting materialization on `lane`.
+    pub fn pending_pages(&self, lane: usize) -> usize {
+        self.pending_count[lane]
+    }
+
+    fn materialize_page(&mut self, b: usize, page: usize) {
+        if !self.pending_fill[b][page] {
+            return;
+        }
+        self.pending_fill[b][page] = false;
+        self.pending_count[b] -= 1;
+        let Some(id) = self.page_map[b][page] else {
+            unreachable!("pending page without mapping");
+        };
+        let borrowed_src = match self.pool.payload(id) {
+            Payload::Borrowed { lane } => Some(*lane),
+            Payload::Owned(_) => None,
+        };
+        match borrowed_src {
+            Some(src) => {
+                debug_assert_ne!(src, b, "borrower cannot be pending");
+                self.copy_page_between_lanes(src, b, page);
+            }
+            None => self.copy_page_from_pool(id, b, page),
+        }
+    }
+
+    /// Page-granular region copy src → dst (payload + mask + bounds).
+    fn copy_page_between_lanes(&mut self, src: usize, dst: usize, page: usize) {
+        let g = self.geom;
+        let (ps, hd) = (g.page_size, g.head_dim);
+        for l in 0..g.layers {
+            for h in 0..g.kv_heads {
+                let sb = self.kv_base(src, l, h, page * ps);
+                let db = self.kv_base(dst, l, h, page * ps);
+                self.k.copy_within(sb..sb + ps * hd, db);
+                self.v.copy_within(sb..sb + ps * hd, db);
+                let smi = self.mask_idx(src, l, h, page * ps);
+                let dmi = self.mask_idx(dst, l, h, page * ps);
+                self.mask.copy_within(smi..smi + ps, dmi);
+                let spb = self.page_base(src, l, h, page);
+                let dpb = self.page_base(dst, l, h, page);
+                self.pmin.copy_within(spb..spb + hd, dpb);
+                self.pmax.copy_within(spb..spb + hd, dpb);
+            }
+        }
+    }
+
+    fn copy_page_from_pool(&mut self, id: PageId, b: usize, page: usize) {
+        let g = self.geom;
+        let (ps, hd) = (g.page_size, g.head_dim);
+        // precompute region bases (cannot call &self helpers while the
+        // pool payload is borrowed below)
+        let mut bases = Vec::with_capacity(g.lh());
+        for l in 0..g.layers {
+            for h in 0..g.kv_heads {
+                bases.push((
+                    self.kv_base(b, l, h, page * ps),
+                    self.mask_idx(b, l, h, page * ps),
+                    self.page_base(b, l, h, page),
+                ));
+            }
+        }
+        let Payload::Owned(data) = self.pool.payload(id) else {
+            unreachable!("copy_page_from_pool on borrowed payload");
+        };
+        for (lh_i, &(kb, mb, pb)) in bases.iter().enumerate() {
+            self.k[kb..kb + ps * hd].copy_from_slice(&data.k[lh_i * ps * hd..(lh_i + 1) * ps * hd]);
+            self.v[kb..kb + ps * hd].copy_from_slice(&data.v[lh_i * ps * hd..(lh_i + 1) * ps * hd]);
+            self.mask[mb..mb + ps].copy_from_slice(&data.mask[lh_i * ps..(lh_i + 1) * ps]);
+            self.pmin[pb..pb + hd].copy_from_slice(&data.pmin[lh_i * hd..(lh_i + 1) * hd]);
+            self.pmax[pb..pb + hd].copy_from_slice(&data.pmax[lh_i * hd..(lh_i + 1) * hd]);
+        }
+    }
+
+    /// Snapshot one token page of `lane`'s region into pool-owned form.
+    fn snapshot_page(&self, lane: usize, page: usize) -> PageData {
+        let g = self.geom;
+        let (ps, hd) = (g.page_size, g.head_dim);
+        let lh = g.lh();
+        let mut data = PageData {
+            k: vec![0.0; lh * ps * hd],
+            v: vec![0.0; lh * ps * hd],
+            mask: vec![NEG_INF; lh * ps],
+            meta: vec![SlotState::Free; lh * ps],
+            pmin: vec![0.0; lh * hd],
+            pmax: vec![0.0; lh * hd],
+        };
+        for l in 0..g.layers {
+            for h in 0..g.kv_heads {
+                let lh_i = l * g.kv_heads + h;
+                let kb = self.kv_base(lane, l, h, page * ps);
+                data.k[lh_i * ps * hd..(lh_i + 1) * ps * hd]
+                    .copy_from_slice(&self.k[kb..kb + ps * hd]);
+                data.v[lh_i * ps * hd..(lh_i + 1) * ps * hd]
+                    .copy_from_slice(&self.v[kb..kb + ps * hd]);
+                let mb = self.mask_idx(lane, l, h, page * ps);
+                data.mask[lh_i * ps..(lh_i + 1) * ps].copy_from_slice(&self.mask[mb..mb + ps]);
+                let i = self.lbh(lane, l, h);
+                data.meta[lh_i * ps..(lh_i + 1) * ps]
+                    .copy_from_slice(&self.meta[i][page * ps..(page + 1) * ps]);
+                let pb = self.page_base(lane, l, h, page);
+                data.pmin[lh_i * hd..(lh_i + 1) * hd].copy_from_slice(&self.pmin[pb..pb + hd]);
+                data.pmax[lh_i * hd..(lh_i + 1) * hd].copy_from_slice(&self.pmax[pb..pb + hd]);
+            }
+        }
+        data
+    }
+
+    /// COW guard: before lane `b` mutates anything in `page`, detach it
+    /// from any shared entry. If `b` is the payload borrower and other
+    /// references remain, the pristine bytes are snapshotted into the
+    /// pool first so every other sharer's view survives the mutation.
+    #[inline]
+    fn ensure_private(&mut self, b: usize, page: usize) {
+        if self.page_map[b][page].is_none() {
+            return;
+        }
+        self.detach_page(b, page);
+    }
+
+    fn detach_page(&mut self, b: usize, page: usize) {
+        // the lane's region must hold the bytes before it diverges
+        self.materialize_page(b, page);
+        let id = self.page_map[b][page].take().expect("detach of unshared page");
+        if self.pool.refs(id) > 1 && self.pool.is_borrowed_from(id, b) {
+            let snap = self.snapshot_page(b, page);
+            self.pool.publish(id, snap);
+            self.cow_published += 1;
+        }
+        self.pool.release(id);
+    }
+
+    /// Drop every shared-page reference `b` holds (lane retirement),
+    /// publishing borrowed payloads that other references still need.
+    fn release_lane_pages(&mut self, b: usize) {
+        for p in 0..self.geom.pages() {
+            let Some(id) = self.page_map[b][p].take() else {
+                continue;
+            };
+            if self.pending_fill[b][p] {
+                self.pending_fill[b][p] = false;
+                self.pending_count[b] -= 1;
+            } else if self.pool.refs(id) > 1 && self.pool.is_borrowed_from(id, b) {
+                let snap = self.snapshot_page(b, p);
+                self.pool.publish(id, snap);
+                self.cow_published += 1;
+            }
+            self.pool.release(id);
+        }
+    }
+
+    // ---------------- prefix retention ----------------
+
+    /// Longest clean page-aligned prompt prefix of `lane`, in pages. A
+    /// page is clean when every slot across every (layer, head) is live
+    /// with identity position (`pos == slot`), no scheduled eviction,
+    /// and no DMC merges — i.e. the page is byte-identical to what
+    /// prefilling those tokens produces, untouched by any compression
+    /// decision. The count is capped below the full prompt so a reusing
+    /// request always has at least one token to prefill (the token
+    /// whose logits seed sampling).
+    pub fn clean_prefix_pages(&self, lane: usize, prompt_len: usize) -> usize {
+        let ps = self.geom.page_size;
+        if prompt_len == 0 {
+            return 0;
+        }
+        let max_pages = (prompt_len - 1) / ps;
+        let mut n = 0;
+        'pages: for p in 0..max_pages {
+            for l in 0..self.geom.layers {
+                for h in 0..self.geom.kv_heads {
+                    let i = self.lbh(lane, l, h);
+                    for s in p * ps..(p + 1) * ps {
+                        match self.meta[i][s] {
+                            SlotState::Live {
+                                pos,
+                                evict_at: NO_EVICT,
+                                merges: 0,
+                            } if pos as usize == s => {}
+                            _ => break 'pages,
+                        }
+                    }
+                }
+            }
+            n = p + 1;
+        }
+        n
+    }
+
+    /// Export page `page` of `lane` as a pool-owned snapshot for the
+    /// prefix index, returning a handle with one reference held for the
+    /// caller. Reuses the existing pool entry when the lane already
+    /// shares the page and the snapshot still matches the lane's state.
+    pub fn export_page(&mut self, lane: usize, page: usize) -> PageId {
+        // the lane's region must hold the bytes we snapshot
+        self.materialize_page(lane, page);
+        if let Some(id) = self.page_map[lane][page] {
+            if matches!(self.pool.payload(id), Payload::Borrowed { .. }) {
+                // lane's region is materialized; its bytes are the
+                // authoritative shared payload
+                let snap = self.snapshot_page(lane, page);
+                self.pool.publish(id, snap);
+            } else if !self.owned_matches_lane(id, lane, page) {
+                // the snapshot predates lane-local metadata drift:
+                // index a fresh copy of the lane's current clean state
+                let snap = self.snapshot_page(lane, page);
+                return self.pool.insert_owned(snap, page);
+            }
+            self.pool.retain(id);
+            id
+        } else {
+            let snap = self.snapshot_page(lane, page);
+            self.pool.insert_owned(snap, page)
+        }
+    }
+
+    /// Whether an Owned snapshot's slot metadata equals the lane's.
+    fn owned_matches_lane(&self, id: PageId, lane: usize, page: usize) -> bool {
+        let g = self.geom;
+        let ps = g.page_size;
+        let Payload::Owned(data) = self.pool.payload(id) else {
+            return false;
+        };
+        for l in 0..g.layers {
+            for h in 0..g.kv_heads {
+                let lh_i = l * g.kv_heads + h;
+                let i = (lane * g.layers + l) * g.kv_heads + h;
+                if data.meta[lh_i * ps..(lh_i + 1) * ps]
+                    != self.meta[i][page * ps..(page + 1) * ps]
+                {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Add one pool reference (pending prefix-hit chains hold pages
+    /// alive while queued).
+    pub fn retain_page(&mut self, id: PageId) {
+        self.pool.retain(id);
+    }
+
+    /// Drop one pool reference.
+    ///
+    /// # Panics
+    /// Panics on double-free (see [`PagePool::release`]).
+    pub fn release_page(&mut self, id: PageId) {
+        self.pool.release(id);
+    }
+
+    // ---------------- pool introspection ----------------
+
+    /// Live pool entries (shared and retained pages).
+    pub fn pool_pages(&self) -> usize {
+        self.pool.len()
+    }
+
+    /// Outstanding pool references across all entries.
+    pub fn pool_refs(&self) -> usize {
+        self.pool.total_refs()
+    }
+
+    /// Whether `page` of `lane` is currently shared through the pool.
+    pub fn page_shared(&self, lane: usize, page: usize) -> bool {
+        self.page_map[lane][page].is_some()
+    }
+
+    /// Pages this lane shares through the pool.
+    pub fn shared_pages(&self, lane: usize) -> usize {
+        self.page_map[lane].iter().filter(|m| m.is_some()).count()
+    }
+
+    /// COW snapshots published since construction.
+    pub fn cow_published(&self) -> u64 {
+        self.cow_published
     }
 }

@@ -35,7 +35,7 @@ fn usage() -> &'static str {
        gen      --prompt 'Q:1+2=?\\nT:' [--width W] [--max-len L] [--temp T]\n\
        eval     --task math [--width W] [--max-len L] [--n N]\n\
        exp      fig1|fig3|fig4|fig5|fig6|fig7|table1|table2|table7 [--n N] [--full]\n\
-       serve    [--addr 127.0.0.1:7333]\n\
+       serve    [--addr 127.0.0.1:7333] [--no-prefix-cache] [--prefix-pages N]\n\
        inspect  | selftest"
 }
 

@@ -183,6 +183,11 @@ fn response_from(req: &ServeRequest, done: &CompletedRequest) -> ServeResponse {
     let texts: Vec<String> = res.chains.iter().map(|c| c.text.clone()).collect();
     let refs: Vec<&str> = texts.iter().map(|s| s.as_str()).collect();
     let vote = majority_vote(&refs);
+    let prefix_hit_tokens: usize = res
+        .chains
+        .iter()
+        .map(|c| c.stats.prefix_hit_tokens)
+        .sum();
     ServeResponse {
         id: req.id,
         texts,
@@ -193,6 +198,7 @@ fn response_from(req: &ServeRequest, done: &CompletedRequest) -> ServeResponse {
         queue_ms: 0.0,
         ttft_ms: 0.0,
         tokens_per_s: 0.0,
+        prefix_hit_tokens: prefix_hit_tokens as f64,
         error: None,
     }
     .with_timing(&done.timing)

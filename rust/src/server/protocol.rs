@@ -50,6 +50,9 @@ pub struct ServeResponse {
     pub ttft_ms: f64,
     /// Generation throughput of this request (tokens per second).
     pub tokens_per_s: f64,
+    /// Prompt tokens restored from the radix prefix cache instead of
+    /// being prefilled, summed across chains.
+    pub prefix_hit_tokens: f64,
     /// Error message (all other payload fields are omitted when set).
     pub error: Option<String>,
 }
@@ -67,6 +70,7 @@ impl ServeResponse {
             queue_ms: 0.0,
             ttft_ms: 0.0,
             tokens_per_s: 0.0,
+            prefix_hit_tokens: 0.0,
             error: Some(msg.to_string()),
         }
     }
@@ -120,6 +124,7 @@ pub fn render_response(r: &ServeResponse) -> String {
         .set("queue_ms", r.queue_ms)
         .set("ttft_ms", r.ttft_ms)
         .set("tokens_per_s", r.tokens_per_s)
+        .set("prefix_hit_tokens", r.prefix_hit_tokens)
         .to_string()
 }
 
@@ -167,6 +172,7 @@ mod tests {
             queue_ms: 1.5,
             ttft_ms: 4.0,
             tokens_per_s: 80.0,
+            prefix_hit_tokens: 16.0,
             error: None,
         };
         let s = render_response(&r);
@@ -176,6 +182,7 @@ mod tests {
         assert_eq!(j.get("queue_ms").unwrap().as_f64(), Some(1.5));
         assert_eq!(j.get("ttft_ms").unwrap().as_f64(), Some(4.0));
         assert_eq!(j.get("tokens_per_s").unwrap().as_f64(), Some(80.0));
+        assert_eq!(j.get("prefix_hit_tokens").unwrap().as_f64(), Some(16.0));
     }
 
     #[test]

@@ -612,3 +612,290 @@ fn preemption_requeues_and_resumes_exactly() {
     // and resumes to exactly the tokens of the unpreempted run
     assert_eq!(sim.done[1].result.chains[0].text, reference);
 }
+
+// ----------------------------------------------------------------------
+// Copy-on-write fork equivalence & pool refcount invariants
+// ----------------------------------------------------------------------
+
+/// Pseudo-model whose logits are a pure function of the lane's
+/// *observable* cache state (positions, key payloads, mask). Any COW
+/// corruption — a sibling seeing a leader's eviction, a stale
+/// materialization, a mask desync — changes the token stream.
+fn cache_logits(c: &CacheStore, lane: usize, pos: usize) -> Vec<f32> {
+    let g = c.geom;
+    let mut acc = 0x9E37_79B9_7F4A_7C15u64 ^ (pos as u64);
+    for l in 0..g.layers {
+        for h in 0..g.kv_heads {
+            for s in 0..g.slots {
+                if let Some(p) = c.slot_pos(lane, l, h, s) {
+                    let kbits = c.k_at(lane, l, h, s)[0].to_bits() as u64;
+                    acc = acc
+                        .wrapping_mul(0x0100_0000_01B3)
+                        .wrapping_add(kbits ^ ((s as u64) << 32) ^ p as u64);
+                    acc ^= (c.mask_value(lane, l, h, s).to_bits() as u64).rotate_left(17);
+                }
+            }
+        }
+    }
+    let mut r = SplitMix64::new(acc);
+    (0..16).map(|_| r.f64() as f32).collect()
+}
+
+/// One simulated decode step, mirroring the engine's write path:
+/// due evictions, policy write-actions, append/merge, post_write.
+fn drive_chain_step(
+    c: &mut CacheStore,
+    lane: usize,
+    policy: &mut Box<dyn hyperscale::compress::Policy>,
+    pos: usize,
+) -> u32 {
+    let g = c.geom;
+    let lh = g.lh();
+    let logits = cache_logits(c, lane, pos);
+    let tok = logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0 as u32;
+    // α/attention streams are deterministic in (lane, pos) so sibling
+    // lanes diverge (exercising COW breaks) but the two fork modes see
+    // identical inputs
+    let mut rng = SplitMix64::new(0xA11CE ^ ((lane as u64) << 40) ^ pos as u64);
+    let alpha: Vec<f32> = (0..lh).map(|_| rng.f64() as f32).collect();
+    let attn: Vec<f32> = (0..lh * g.slots).map(|_| rng.f64() as f32).collect();
+    let attn_self: Vec<f32> = (0..lh).map(|_| rng.f64() as f32).collect();
+    c.apply_due_evictions(lane, pos);
+    let mut actions: Vec<WriteAction> = Vec::new();
+    policy.write_actions(&alpha, g.layers, g.kv_heads, &mut actions);
+    let payload: Vec<f32> = (0..g.head_dim)
+        .map(|d| tok as f32 + d as f32 + pos as f32 * 0.25)
+        .collect();
+    let mut written = vec![None; lh];
+    for l in 0..g.layers {
+        for h in 0..g.kv_heads {
+            let i = l * g.kv_heads + h;
+            written[i] = None;
+            let append = match actions[i] {
+                WriteAction::Merge => !c.merge_into_last(lane, l, h, &payload, &payload),
+                WriteAction::Append => true,
+            };
+            if append {
+                if let Some(s) = c.alloc_slot(lane, l, h) {
+                    c.write(lane, l, h, s, pos, &payload, &payload);
+                    written[i] = Some(s);
+                }
+            }
+        }
+    }
+    policy.post_write(
+        c,
+        &StepView {
+            lane,
+            pos,
+            alpha: &alpha,
+            attn: &attn,
+            attn_self: &attn_self,
+            written: &written,
+        },
+    );
+    tok
+}
+
+fn prefill_identity(c: &mut CacheStore, lane: usize, n: usize) {
+    let g = c.geom;
+    for pos in 0..n {
+        let payload: Vec<f32> = (0..g.head_dim).map(|d| pos as f32 + d as f32 * 0.5).collect();
+        for l in 0..g.layers {
+            for h in 0..g.kv_heads {
+                let s = c.alloc_slot(lane, l, h).unwrap();
+                c.write(lane, l, h, s, pos, &payload, &payload);
+            }
+        }
+    }
+}
+
+fn assert_lane_state_equal(a: &CacheStore, b: &CacheStore, lane: usize, ctx: &str) {
+    let g = a.geom;
+    for l in 0..g.layers {
+        for h in 0..g.kv_heads {
+            assert_eq!(
+                a.live_count(lane, l, h),
+                b.live_count(lane, l, h),
+                "{ctx}: live desync at ({l},{h})"
+            );
+            for s in 0..g.slots {
+                assert_eq!(
+                    a.slot_state(lane, l, h, s),
+                    b.slot_state(lane, l, h, s),
+                    "{ctx}: meta desync at ({l},{h},{s})"
+                );
+                assert_eq!(
+                    a.mask_value(lane, l, h, s),
+                    b.mask_value(lane, l, h, s),
+                    "{ctx}: mask desync at ({l},{h},{s})"
+                );
+                assert_eq!(
+                    a.k_at(lane, l, h, s),
+                    b.k_at(lane, l, h, s),
+                    "{ctx}: k desync at ({l},{h},{s})"
+                );
+                assert_eq!(
+                    a.v_at(lane, l, h, s),
+                    b.v_at(lane, l, h, s),
+                    "{ctx}: v desync at ({l},{h},{s})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn cow_fork_streams_bit_exact_vs_full_copy_across_policies() {
+    use hyperscale::compress::PolicyKind as PK;
+    for kind in [
+        PK::Vanilla,
+        PK::Dms,
+        PK::DmsImmediate,
+        PK::Tova,
+        PK::H2o,
+        PK::Dmc,
+        PK::Window,
+        PK::Quest,
+    ] {
+        let g = geom(64);
+        let (prompt, steps, max_len, window) = (19usize, 25usize, 64usize, 4usize);
+        let mk = || build_policy(kind, 4.0, max_len, window, g.page_size);
+
+        // store A forks the sibling by full-lane memcpy, store B by
+        // COW refcount bump; everything else is identical.
+        let mut a = CacheStore::new(g, 2);
+        let mut b = CacheStore::new(g, 2);
+        prefill_identity(&mut a, 0, prompt);
+        prefill_identity(&mut b, 0, prompt);
+        a.fork_lane(0, 1);
+        b.fork_lane_cow(0, 1);
+
+        let mut pol_a = [mk(), mk()];
+        let mut pol_b = [mk(), mk()];
+        let mut stream_a: Vec<Vec<u32>> = vec![Vec::new(), Vec::new()];
+        let mut stream_b: Vec<Vec<u32>> = vec![Vec::new(), Vec::new()];
+        for step in 0..steps {
+            let pos = prompt + step;
+            // the engine materializes shared pages once per tick
+            b.materialize_pending();
+            for lane in 0..2 {
+                stream_a[lane].push(drive_chain_step(&mut a, lane, &mut pol_a[lane], pos));
+                stream_b[lane].push(drive_chain_step(&mut b, lane, &mut pol_b[lane], pos));
+            }
+        }
+        assert_eq!(
+            stream_a, stream_b,
+            "{kind:?}: COW fork changed a token stream"
+        );
+        b.materialize_pending();
+        for lane in 0..2 {
+            assert_lane_state_equal(&a, &b, lane, &format!("{kind:?} lane {lane}"));
+            check_consistency(&b, lane);
+        }
+    }
+}
+
+#[test]
+fn cow_pool_refcounts_balance_under_random_lifecycle() {
+    for seed in 0..12u64 {
+        let mut rng = SplitMix64::new(0xBEEF ^ seed);
+        let g = geom(32);
+        let lanes = 4usize;
+        let mut c = CacheStore::new(g, lanes);
+        let mut active = vec![false; lanes];
+        let mut held: Vec<u64> = Vec::new();
+        let payload = vec![0.25f32; g.head_dim];
+
+        let check_refs = |c: &CacheStore, held: &Vec<u64>| {
+            let mapped: usize = (0..lanes).map(|b| c.shared_pages(b)).sum();
+            assert_eq!(
+                c.pool_refs(),
+                mapped + held.len(),
+                "pool refs != lane mappings + held handles"
+            );
+        };
+
+        for _ in 0..300 {
+            let lane = rng.below(lanes);
+            match rng.below(7) {
+                0 => {
+                    // (re)start a lane with a fresh identity prefill
+                    if !active[lane] {
+                        prefill_identity(&mut c, lane, 1 + rng.below(16));
+                        active[lane] = true;
+                    }
+                }
+                1 => {
+                    // COW-fork into an idle lane
+                    if active[lane] {
+                        if let Some(dst) = (0..lanes).find(|&d| !active[d]) {
+                            c.fork_lane_cow(lane, dst);
+                            active[dst] = true;
+                        }
+                    }
+                }
+                2 => {
+                    // policy-style eviction (may break a share)
+                    if active[lane] {
+                        let live = c.live_slots(lane, 0, 0);
+                        if !live.is_empty() {
+                            let (s, _) = live[rng.below(live.len())];
+                            c.evict(lane, 0, 0, s);
+                        }
+                    }
+                }
+                3 => {
+                    // decode-style write (may break a share)
+                    if active[lane] {
+                        if let Some(s) = c.alloc_slot(lane, 0, 1) {
+                            c.write(lane, 0, 1, s, 99, &payload, &payload);
+                        }
+                    }
+                }
+                4 => {
+                    // retire / preempt: recycle the lane
+                    if active[lane] {
+                        c.recycle_lane(lane);
+                        active[lane] = false;
+                    }
+                }
+                5 => {
+                    // prefix retention: export a full clean page
+                    if active[lane] && c.clean_prefix_pages(lane, g.page_size + 1) > 0 {
+                        held.push(c.export_page(lane, 0));
+                    }
+                }
+                _ => {
+                    // index release or prefix-hit mapping of a held page
+                    if let Some(id) = held.pop() {
+                        let target = (0..lanes).find(|&d| !active[d]);
+                        match target {
+                            Some(dst) if rng.below(2) == 0 => {
+                                c.map_prefix_pages(dst, &[id]);
+                                active[dst] = true;
+                            }
+                            _ => c.release_page(id),
+                        }
+                    }
+                }
+            }
+            check_refs(&c, &held);
+        }
+        // drain everything: no entry may survive
+        c.materialize_pending();
+        for lane in 0..lanes {
+            c.recycle_lane(lane);
+        }
+        for id in held.drain(..) {
+            c.release_page(id);
+        }
+        assert_eq!(c.pool_pages(), 0, "seed {seed}: leaked pool pages");
+        assert_eq!(c.pool_refs(), 0);
+    }
+}
