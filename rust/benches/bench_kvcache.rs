@@ -1,8 +1,8 @@
 //! KV-cache substrate micro-benchmarks: allocator ops, writes, forks,
-//! delayed-eviction sweeps — the L3 overhead that must stay far below
-//! the XLA step time.
+//! delayed-eviction sweeps, quantized-payload publish/restore costs —
+//! the L3 overhead that must stay far below the XLA step time.
 
-use hyperscale::kvcache::{CacheStore, Geometry};
+use hyperscale::kvcache::{CacheStore, Geometry, KvDtype};
 use hyperscale::util::benchkit::bench;
 
 fn geom() -> Geometry {
@@ -11,6 +11,18 @@ fn geom() -> Geometry {
         kv_heads: 2,
         slots: 320,
         head_dim: 16,
+        page_size: 16,
+    }
+}
+
+/// A head-dim-64 geometry (realistic GQA head size) for the payload
+/// format comparison — quant metadata amortizes better at larger hd.
+fn geom_hd64() -> Geometry {
+    Geometry {
+        layers: 2,
+        kv_heads: 2,
+        slots: 128,
+        head_dim: 64,
         page_size: 16,
     }
 }
@@ -100,4 +112,75 @@ fn main() {
         c2.mask_slice().iter().sum::<f32>()
     });
     r.print();
+
+    // ------------------------------------------------------------------
+    // Quantized pool payloads: host bytes per cached token, publish
+    // (quantize) + restore (dequant-on-upload) latency, and pool
+    // capacity at a fixed host-memory budget, per dtype.
+    // ------------------------------------------------------------------
+    for (label, g2) in [("hd16", geom()), ("hd64", geom_hd64())] {
+        println!("\n# pool payload formats ({label})");
+        let tokens = 4 * g2.page_size; // 4 full pages
+        let mut f32_per_token = 0.0f64;
+        for dtype in [KvDtype::F32, KvDtype::Q8, KvDtype::Q4] {
+            let mut c = CacheStore::with_dtype(g2, 2, dtype);
+            for pos in 0..tokens {
+                let payload: Vec<f32> = (0..g2.head_dim)
+                    .map(|d| (pos as f32) * 0.31 + (d as f32) * 0.07 - 1.5)
+                    .collect();
+                for l in 0..g2.layers {
+                    for h in 0..g2.kv_heads {
+                        let s = c.alloc_slot(0, l, h).unwrap();
+                        c.write(0, l, h, s, pos, &payload, &payload);
+                    }
+                }
+            }
+            let n_pages = tokens / g2.page_size;
+
+            // publish cost: snapshot + encode one page into the pool
+            let r = bench(&format!("publish_{dtype}_{label}"), 5, 100, || {
+                let id = c.export_page(0, 0);
+                c.release_page(id);
+            });
+            r.print();
+
+            // bytes-per-cached-token accounting over retained pages
+            let ids: Vec<_> = (0..n_pages).map(|p| c.export_page(0, p)).collect();
+            let bytes = c.pool_payload_bytes();
+            let per_token = bytes as f64 / (tokens * g2.lh()) as f64;
+            if dtype == KvDtype::F32 {
+                f32_per_token = per_token;
+            }
+            let budget_mib = 64.0;
+            let cap_tokens = budget_mib * 1024.0 * 1024.0 / (per_token * g2.lh() as f64);
+            println!(
+                "{dtype}: {bytes} B pooled, {per_token:.1} B/token/(l,h) \
+                 (nominal {:.1}), {:.2}x vs f32, {:.0} tokens per {budget_mib} MiB pool",
+                c.payload_bytes_per_token(),
+                f32_per_token / per_token,
+                cap_tokens
+            );
+            if dtype == KvDtype::Q8 {
+                assert!(
+                    f32_per_token / per_token >= 3.0,
+                    "q8 must shrink host bytes-per-cached-token >= 3x \
+                     (got {:.2}x at {label})",
+                    f32_per_token / per_token
+                );
+            }
+
+            // restore cost: map retained pages into a clean lane and
+            // materialize (the dequant-on-upload path)
+            let r = bench(&format!("restore_{dtype}_{label}"), 5, 100, || {
+                for &id in &ids {
+                    c.retain_page(id);
+                }
+                c.map_prefix_pages(1, &ids);
+                c.materialize_pending();
+                c.recycle_lane(1);
+            });
+            r.print();
+            println!("{dtype}: cumulative dequant-on-upload {:.1} us", c.dequant_us());
+        }
+    }
 }

@@ -7,6 +7,15 @@
 //! (Eq. 3 in the paper is written with an implicit 2 bytes/param for
 //! 16-bit weights; we carry the factor explicitly. The paper's sanity
 //! check Reads(1,0)/2 ≈ 7.5B parameters holds — tested below.)
+//!
+//! The KV term carries its own bytes-per-element factor, separate from
+//! the weight precision: with quantized page payloads
+//! ([`KvDtype`](crate::kvcache::KvDtype), docs/NUMERICS.md) the cache
+//! is read at ~1 byte/element (q8) or ~0.5 (q4) plus per-row
+//! scale/zero-point overhead, while weights stay bf16. Configure it
+//! with [`LatencyModel::with_kv_dtype`]; the memory-reads axis of the
+//! Pareto analysis then reflects what quantized payloads actually pull
+//! from memory.
 
 /// Hardware peak numbers (NVIDIA H100 SXM, BF16 dense).
 #[derive(Clone, Copy, Debug)]
@@ -34,8 +43,11 @@ pub struct LatencyModel {
     pub d_kv: f64,
     /// vocabulary size V
     pub vocab: f64,
-    /// bytes per element (2 for bf16)
+    /// bytes per element of weights/activations (2 for bf16)
     pub bytes: f64,
+    /// bytes per element of the KV cache (defaults to `bytes`; lower
+    /// under quantized payloads — see [`LatencyModel::with_kv_dtype`])
+    pub kv_bytes: f64,
 }
 
 /// Preset model classes used by Fig. 7.
@@ -57,6 +69,7 @@ impl LatencyModel {
             d_kv: 1024.0,
             vocab: 128256.0,
             bytes: 2.0,
+            kv_bytes: 2.0,
         }
     }
 
@@ -71,6 +84,7 @@ impl LatencyModel {
                 d_kv: 256.0,
                 vocab: 151936.0,
                 bytes: 2.0,
+                kv_bytes: 2.0,
             },
             LlamaClass::Qwen7B => Self {
                 n_layers: 28.0,
@@ -79,6 +93,7 @@ impl LatencyModel {
                 d_kv: 512.0,
                 vocab: 152064.0,
                 bytes: 2.0,
+                kv_bytes: 2.0,
             },
             LlamaClass::Qwen32B => Self {
                 n_layers: 64.0,
@@ -87,8 +102,19 @@ impl LatencyModel {
                 d_kv: 1024.0,
                 vocab: 152064.0,
                 bytes: 2.0,
+                kv_bytes: 2.0,
             },
         }
+    }
+
+    /// Set the KV-cache read precision from a payload dtype: effective
+    /// bytes/element = per-row storage (codes + scale/zero-point) ÷
+    /// `head_dim`. Note [`KvDtype::F32`](crate::kvcache::KvDtype)
+    /// yields 4.0 — what this repo's host store pays for exact
+    /// payloads — while the presets default to the paper's 2.0 (bf16).
+    pub fn with_kv_dtype(mut self, dtype: crate::kvcache::KvDtype, head_dim: usize) -> Self {
+        self.kv_bytes = dtype.row_payload_bytes(head_dim) as f64 / head_dim as f64;
+        self
     }
 
     /// Eq. 2: FLOPs of one auto-regressive step.
@@ -103,21 +129,21 @@ impl LatencyModel {
     /// Eq. 3: bytes read from HBM for one step. The paper's
     /// coefficients (6·d·d_ff etc.) already include the 2 bytes/param
     /// factor — e.g. 6·d·d_ff = (3·d·d_ff params)·(2 bytes); we write
-    /// that as param-count × `bytes` to stay precision-generic.
+    /// that as param-count × `bytes` to stay precision-generic, and
+    /// price the KV term at `kv_bytes` so quantized cache payloads are
+    /// reflected without touching the weight precision.
     pub fn reads(&self, batch: f64, seq: f64) -> f64 {
         let params_per_layer = 3.0 * self.d_model * self.d_ff
             + 2.0 * self.d_model * self.d_model
             + 2.0 * self.d_model * self.d_kv;
-        let kv_per_layer = 2.0 * batch * seq * self.d_kv; // K and V elements
-        (self.n_layers * (params_per_layer + kv_per_layer)
-            + self.d_model * self.vocab)
-            * self.bytes
+        (self.n_layers * params_per_layer + self.d_model * self.vocab) * self.bytes
+            + self.kv_reads(batch, seq)
     }
 
     /// Bytes read for the KV cache alone (the paper's 4·n·B·L·d_kv
-    /// term — 2 tensors × 2 bytes).
+    /// term — 2 tensors × `kv_bytes` bytes/element).
     pub fn kv_reads(&self, batch: f64, seq: f64) -> f64 {
-        self.n_layers * 2.0 * batch * seq * self.d_kv * self.bytes
+        self.n_layers * 2.0 * batch * seq * self.d_kv * self.kv_bytes
     }
 
     /// Eq. 6: step latency assuming ideal compute/memory overlap.
@@ -197,6 +223,28 @@ mod tests {
         let f4 = m.kv_latency_fraction(&H100, 64.0, 16384.0, 4.0);
         let f8 = m.kv_latency_fraction(&H100, 64.0, 16384.0, 8.0);
         assert!(f1 > f4 && f4 > f8);
+    }
+
+    #[test]
+    fn quantized_kv_dtype_scales_only_the_kv_term() {
+        use crate::kvcache::KvDtype;
+        let hd = 64;
+        let base = LatencyModel::llama31_8b();
+        let q8 = LatencyModel::llama31_8b().with_kv_dtype(KvDtype::Q8, hd);
+        let q4 = LatencyModel::llama31_8b().with_kv_dtype(KvDtype::Q4, hd);
+        // weight reads untouched (seq = 0 has no KV term)
+        assert_eq!(base.reads(4.0, 0.0), q8.reads(4.0, 0.0));
+        // kv reads scale with the per-element storage cost:
+        // bf16 2.0 → q8 (64+5)/64 ≈ 1.078 → q4 (32+5)/64 ≈ 0.578
+        let r = |m: &LatencyModel| m.kv_reads(64.0, 8192.0);
+        assert!((r(&base) / r(&q8) - 2.0 / (69.0 / 64.0)).abs() < 1e-9);
+        assert!((r(&base) / r(&q4) - 2.0 / (37.0 / 64.0)).abs() < 1e-9);
+        // and the KV latency share falls accordingly
+        let f = |m: &LatencyModel| m.kv_latency_fraction(&H100, 64.0, 16384.0, 1.0);
+        assert!(f(&base) > f(&q8) && f(&q8) > f(&q4));
+        // f32 host payloads cost MORE than the bf16 paper default
+        let f32m = LatencyModel::llama31_8b().with_kv_dtype(KvDtype::F32, hd);
+        assert!((f32m.kv_bytes - 4.0).abs() < 1e-12);
     }
 
     #[test]

@@ -8,6 +8,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Result};
 
 use crate::compress::PolicyKind;
+use crate::kvcache::KvDtype;
 use crate::util::{Args, Json};
 
 /// Engine-level configuration.
@@ -47,6 +48,12 @@ pub struct EngineConfig {
     /// Retained-page budget of the prefix index; least-recently-used
     /// prefixes are released beyond it (`--prefix-pages`).
     pub prefix_cache_pages: usize,
+    /// Storage format of pool-owned KV page payloads (`--kv-dtype
+    /// f32|q8|q4`). Quantized formats shrink host bytes-per-cached-
+    /// token of the COW pool and prefix cache ~3–5× at a bounded,
+    /// documented precision cost (docs/NUMERICS.md); lane views and
+    /// executor uploads stay f32 either way.
+    pub kv_dtype: KvDtype,
 }
 
 impl Default for EngineConfig {
@@ -65,6 +72,7 @@ impl Default for EngineConfig {
             lane_threads: true,
             prefix_cache: true,
             prefix_cache_pages: 1024,
+            kv_dtype: KvDtype::F32,
         }
     }
 }
@@ -100,7 +108,25 @@ impl EngineConfig {
             self.prefix_cache = false;
         }
         self.prefix_cache_pages = args.get_usize("prefix-pages", self.prefix_cache_pages)?;
+        if let Some(v) = args.get("kv-dtype") {
+            self.kv_dtype = v.parse()?;
+        }
         Ok(self)
+    }
+
+    /// Configuration every paper experiment driver starts from: the
+    /// paper's metrics exclude cross-request prefix caching, and its
+    /// figures assume exact (f32) cache payloads, so both are pinned
+    /// here **by construction** instead of per-driver — experiment
+    /// outputs stay byte-identical no matter how the serving defaults
+    /// evolve.
+    pub fn paper_fidelity(artifacts: &Path) -> Self {
+        Self {
+            artifacts: artifacts.to_path_buf(),
+            prefix_cache: false,
+            kv_dtype: KvDtype::F32,
+            ..Self::default()
+        }
     }
 
     /// Load overrides from a JSON config file, then CLI on top.
@@ -136,6 +162,9 @@ impl EngineConfig {
         }
         if let Some(v) = j.get("prefix_cache_pages").and_then(|x| x.as_usize()) {
             cfg.prefix_cache_pages = v;
+        }
+        if let Some(v) = j.get("kv_dtype").and_then(Json::as_str) {
+            cfg.kv_dtype = v.parse()?;
         }
         Ok(cfg)
     }
@@ -215,6 +244,26 @@ mod tests {
         assert_eq!(cfg.policy, PolicyKind::Dms);
         assert_eq!(cfg.cr, 4.0);
         assert_eq!(cfg.temperature, 0.9);
+        assert_eq!(cfg.kv_dtype, KvDtype::F32, "exact payloads by default");
+    }
+
+    #[test]
+    fn kv_dtype_override_and_validation() {
+        let args = Args::parse("--kv-dtype q8".split_whitespace().map(String::from));
+        let cfg = EngineConfig::default().with_args(&args).unwrap();
+        assert_eq!(cfg.kv_dtype, KvDtype::Q8);
+        let args = Args::parse("--kv-dtype bf16".split_whitespace().map(String::from));
+        assert!(EngineConfig::default().with_args(&args).is_err());
+    }
+
+    #[test]
+    fn paper_fidelity_pins_cache_free_exact_payloads() {
+        let cfg = EngineConfig::paper_fidelity(Path::new("arts"));
+        assert!(!cfg.prefix_cache, "paper metrics exclude the prefix cache");
+        assert_eq!(cfg.kv_dtype, KvDtype::F32, "paper figures assume exact K/V");
+        assert_eq!(cfg.artifacts, PathBuf::from("arts"));
+        // everything else follows the serving defaults
+        assert_eq!(cfg.batch, EngineConfig::default().batch);
     }
 
     #[test]

@@ -148,7 +148,10 @@ impl Engine {
         let prefill_exec = Executor::new(runtime.load_executable(&pname)?, pmeta);
 
         let geom = runtime.manifest.cache_geometry(cfg.slots);
-        let cache = CacheStore::new(geom, cfg.batch);
+        // pool-owned payloads (COW snapshots, prefix-retained pages)
+        // are stored under the configured dtype; lane regions and
+        // executor uploads stay f32 (see docs/NUMERICS.md)
+        let cache = CacheStore::with_dtype(geom, cfg.batch, cfg.kv_dtype);
         let prefix_index = RadixPrefixIndex::new(geom.page_size);
         let newline_id = tokenizer.newline_id();
         let param_bufs = if cfg.buffered_exec {
@@ -390,6 +393,18 @@ impl Engine {
         self.metrics
             .gauge("kv.cow_published_pages")
             .set(self.cache.cow_published() as f64);
+        // quantized-payload accounting: nominal K+V bytes per cached
+        // token per (layer, head) pair, actual pool payload bytes, and
+        // the cumulative dequant-on-upload cost
+        self.metrics
+            .gauge("kv.bytes_per_token")
+            .set(self.cache.payload_bytes_per_token());
+        self.metrics
+            .gauge("kv.pool_payload_bytes")
+            .set(self.cache.pool_payload_bytes() as f64);
+        self.metrics
+            .gauge("kv.dequant_us")
+            .set(self.cache.dequant_us());
         for c in &completed {
             let t = &c.timing;
             self.metrics.histogram("serve.queue_ms").record(t.queue_ms);

@@ -63,11 +63,8 @@ pub fn run_fig5(artifacts: &Path, n_problems: usize) -> Result<()> {
     // endpoint cross-check through the full Rust inference stack
     println!("\n### Engine endpoint check (CR4 variants on gsm8k, greedy)\n");
     let cfg = EngineConfig {
-        artifacts: artifacts.to_path_buf(),
         temperature: 0.0,
-        // paper metrics exclude cross-request prefix caching
-        prefix_cache: false,
-        ..Default::default()
+        ..EngineConfig::paper_fidelity(artifacts)
     };
     let mut harness = Harness::new(cfg)?;
     let mut t = Table::new(&["variant", "policy", "acc%", "achieved CR"]);

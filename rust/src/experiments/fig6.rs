@@ -15,14 +15,11 @@ use crate::util::Json;
 
 pub fn run_fig6(artifacts: &Path, n_problems: usize) -> Result<()> {
     let mut engine = Engine::new(EngineConfig {
-        artifacts: artifacts.to_path_buf(),
         variant: "dms_w16_cr4".into(),
         policy: PolicyKind::Dms,
         cr: 4.0,
         temperature: 0.7,
-        // paper metrics exclude cross-request prefix caching
-        prefix_cache: false,
-        ..Default::default()
+        ..EngineConfig::paper_fidelity(artifacts)
     })?;
 
     // collect eviction decisions per position bucket + per-head retention

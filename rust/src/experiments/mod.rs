@@ -10,6 +10,7 @@ mod fig6;
 mod fig7;
 mod pareto_exp;
 mod points;
+mod quant_bits;
 mod table1;
 mod table2;
 
@@ -20,6 +21,7 @@ pub use fig6::run_fig6;
 pub use fig7::run_fig7;
 pub use pareto_exp::{run_pareto, ParetoReport};
 pub use points::run_points;
+pub use quant_bits::run_quant_bits;
 pub use table1::run_table1;
 pub use table2::run_table2;
 

@@ -106,12 +106,7 @@ pub fn run_pareto(
     n_problems: usize,
     full: bool,
 ) -> Result<ParetoReport> {
-    let cfg = EngineConfig {
-        artifacts: artifacts.to_path_buf(),
-        // paper metrics exclude cross-request prefix caching
-        prefix_cache: false,
-        ..Default::default()
-    };
+    let cfg = EngineConfig::paper_fidelity(artifacts);
     let mut harness = Harness::new(cfg)?;
     let methods = [
         PolicyKind::Vanilla,

@@ -15,12 +15,7 @@ use crate::util::Json;
 const TASKS: [&str; 4] = ["aime", "math", "gpqa", "lcb"];
 
 pub fn run_points(artifacts: &Path, n_problems: usize) -> Result<()> {
-    let cfg = EngineConfig {
-        artifacts: artifacts.to_path_buf(),
-        // paper metrics exclude cross-request prefix caching
-        prefix_cache: false,
-        ..Default::default()
-    };
+    let cfg = EngineConfig::paper_fidelity(artifacts);
     let mut harness = Harness::new(cfg)?;
 
     let mut json_rows = Vec::new();

@@ -1,0 +1,151 @@
+//! Accuracy-vs-bits: how quantized KV page payloads (q8/q4) trade
+//! host bytes-per-cached-token against end-task accuracy.
+//!
+//! Quantization only touches pool-owned payloads (COW snapshots and
+//! prefix-retained pages; see docs/NUMERICS.md), so a cache-cold run
+//! is bit-identical across dtypes. The experiment therefore runs every
+//! request set **twice** per dtype with the prefix cache enabled: the
+//! cold pass prefills from scratch (and retains clean prompt pages,
+//! quantized at export), the warm pass restores those pages through
+//! dequant-on-upload — the path where precision can move accuracy.
+//! Reported per dtype: bytes/token (whole model), cold/warm accuracy,
+//! prefix tokens restored, cumulative dequant time, mean KV reads on
+//! the byte axis, and the fraction of warm streams identical to the
+//! f32 engine's (greedy decoding, so any difference is payload
+//! precision, not sampling noise).
+//!
+//! This is intentionally *not* paper-fidelity: the paper's figures pin
+//! `kv_dtype: f32` + no prefix cache (`EngineConfig::paper_fidelity`);
+//! this driver measures the serving-mode extension.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::analysis::tables::{num, pct, Table};
+use crate::config::EngineConfig;
+use crate::engine::{aggregate, Engine, GenRequest, GenResult};
+use crate::kvcache::KvDtype;
+use crate::scaling::kv_bytes_per_token;
+use crate::tasks::gen_problem;
+use crate::util::Json;
+
+const TASK: &str = "math";
+const MAX_LEN: usize = 160;
+const SEED: u64 = 17;
+
+fn build_requests(n_problems: usize) -> (Vec<GenRequest>, Vec<String>) {
+    let mut requests = Vec::new();
+    let mut golds = Vec::new();
+    let mut idx = 0u64;
+    while requests.len() < n_problems && idx < n_problems as u64 * 20 {
+        let p = gen_problem(TASK, SEED, idx);
+        idx += 1;
+        if p.prompt.len() + 24 > MAX_LEN {
+            continue;
+        }
+        requests.push(GenRequest {
+            prompt: p.prompt.clone(),
+            width: 1,
+            max_len: MAX_LEN,
+            temperature: 0.0, // greedy: divergence is payload-driven only
+            seed: SEED.wrapping_mul(31).wrapping_add(idx),
+        });
+        golds.push(p.answer);
+    }
+    (requests, golds)
+}
+
+fn accuracy(results: &[GenResult], golds: &[String]) -> f64 {
+    let correct = results
+        .iter()
+        .zip(golds)
+        .filter(|(r, gold)| aggregate(TASK, &r.texts(), gold))
+        .count();
+    correct as f64 / results.len().max(1) as f64
+}
+
+pub fn run_quant_bits(artifacts: &Path, n_problems: usize) -> Result<()> {
+    let (requests, golds) = build_requests(n_problems);
+    if requests.is_empty() {
+        anyhow::bail!("no {TASK} problems fit max_len {MAX_LEN}");
+    }
+
+    println!("\n## Accuracy vs payload bits (prefix-cache warm restores)\n");
+    let mut t = Table::new(&[
+        "kv_dtype",
+        "B/token",
+        "cold acc",
+        "warm acc",
+        "hit toks",
+        "dequant ms",
+        "byte reads",
+        "agree f32",
+    ]);
+    let mut json_rows = Vec::new();
+    let mut f32_warm_texts: Vec<Vec<String>> = Vec::new();
+
+    for dtype in [KvDtype::F32, KvDtype::Q8, KvDtype::Q4] {
+        let cfg = EngineConfig {
+            kv_dtype: dtype,
+            prefix_cache: true,
+            ..EngineConfig::paper_fidelity(artifacts)
+        };
+        let mut engine = Engine::new(cfg)?;
+        let geom = engine.geometry();
+        let bytes_per_token = kv_bytes_per_token(dtype, geom.layers, geom.kv_heads, geom.head_dim);
+
+        let (cold, _) = engine.run(&requests)?;
+        let (warm, warm_stats) = engine.run(&requests)?;
+
+        let warm_texts: Vec<Vec<String>> = warm
+            .iter()
+            .map(|r| r.texts().iter().map(|s| s.to_string()).collect())
+            .collect();
+        if dtype == KvDtype::F32 {
+            f32_warm_texts = warm_texts.clone();
+        }
+        let agree = warm_texts
+            .iter()
+            .zip(&f32_warm_texts)
+            .filter(|(a, b)| a == b)
+            .count() as f64
+            / warm_texts.len() as f64;
+
+        let mean_reads: f64 =
+            warm.iter().map(GenResult::total_reads).sum::<f64>() / warm.len() as f64;
+        let dequant_ms = engine.metrics.gauge("kv.dequant_us").get() / 1000.0;
+        let cold_acc = accuracy(&cold, &golds);
+        let warm_acc = accuracy(&warm, &golds);
+
+        t.row(vec![
+            dtype.name().to_string(),
+            num(bytes_per_token),
+            pct(cold_acc),
+            pct(warm_acc),
+            format!("{}", warm_stats.prefix_hit_tokens),
+            num(dequant_ms),
+            num(mean_reads * bytes_per_token),
+            pct(agree),
+        ]);
+        json_rows.push(
+            Json::obj()
+                .set("kv_dtype", dtype.name())
+                .set("bytes_per_token", bytes_per_token)
+                .set("cold_accuracy", cold_acc)
+                .set("warm_accuracy", warm_acc)
+                .set("prefix_hit_tokens", warm_stats.prefix_hit_tokens as f64)
+                .set("dequant_ms", dequant_ms)
+                .set("mean_byte_reads", mean_reads * bytes_per_token)
+                .set("warm_stream_agreement_vs_f32", agree),
+        );
+    }
+    println!("{}", t.markdown());
+    println!(
+        "(cold passes are dtype-invariant by construction; warm passes \
+         restore quantized prefix pages — see docs/NUMERICS.md)"
+    );
+
+    super::write_report(artifacts, "quant_bits", &Json::Arr(json_rows))?;
+    Ok(())
+}

@@ -37,11 +37,8 @@ fn std_dev(acc: f64, n: usize) -> f64 {
 
 pub fn run_table1(artifacts: &Path, n_problems: usize, base_only: bool) -> Result<()> {
     let cfg = EngineConfig {
-        artifacts: artifacts.to_path_buf(),
         temperature: 0.0, // zero-shot greedy, like the harness evals
-        // paper metrics exclude cross-request prefix caching
-        prefix_cache: false,
-        ..Default::default()
+        ..EngineConfig::paper_fidelity(artifacts)
     };
     let mut harness = Harness::new(cfg)?;
     let methods: &[PolicyKind] = if base_only {

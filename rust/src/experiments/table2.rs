@@ -29,11 +29,8 @@ fn vt_problem(seed: u64, index: u64, scale: usize) -> Problem {
 
 pub fn run_table2(artifacts: &Path, n_problems: usize) -> Result<()> {
     let cfg = EngineConfig {
-        artifacts: artifacts.to_path_buf(),
         temperature: 0.0,
-        // paper metrics exclude cross-request prefix caching
-        prefix_cache: false,
-        ..Default::default()
+        ..EngineConfig::paper_fidelity(artifacts)
     };
     let mut harness = Harness::new(cfg)?;
     let methods = [

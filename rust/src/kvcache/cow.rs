@@ -27,9 +27,54 @@
 //!
 //! Releasing a reference that is not held panics: a double-free of a
 //! KV page is a cache-corruption bug, never recoverable bookkeeping.
+//!
+//! ## Payload storage format
+//!
+//! Owned payloads carry their K/V as [`KvBlock`]s: exact f32, or
+//! per-row q8/q4 quantized blocks with scale/zero-point metadata (see
+//! [`super::quant`] and `docs/NUMERICS.md`). The store quantizes
+//! exactly once, at the publish/export boundary where a page enters
+//! the pool; the pool itself never re-encodes a payload, so a shared
+//! page's code lattice — and therefore every consumer's dequantized
+//! view — is stable for the entry's whole lifetime.
+//!
+//! ## Lifecycle example
+//!
+//! ```
+//! use hyperscale::kvcache::{KvBlock, KvDtype, PageData, PagePool, Payload, SlotState};
+//!
+//! let mut pool = PagePool::new();
+//!
+//! // a fork registers the leader's page as borrowed (zero-copy)...
+//! let id = pool.adopt_borrowed(/*lane=*/ 0, /*page=*/ 3);
+//! pool.retain(id); // ...and the sibling takes its reference
+//! assert_eq!(pool.refs(id), 2);
+//! assert!(pool.is_borrowed_from(id, 0));
+//!
+//! // before the leader mutates (or retires), the pristine bytes are
+//! // published into the pool — quantized here at q8, the single lossy
+//! // step of the payload's lifetime
+//! let snap = PageData {
+//!     k: KvBlock::from_f32(KvDtype::Q8, 2, 4, vec![1.0; 8]),
+//!     v: KvBlock::from_f32(KvDtype::Q8, 2, 4, vec![2.0; 8]),
+//!     mask: vec![0.0; 2],
+//!     meta: vec![SlotState::Free; 2],
+//!     pmin: vec![0.0; 4],
+//!     pmax: vec![0.0; 4],
+//! };
+//! pool.publish(id, snap);
+//! assert!(matches!(pool.payload(id), Payload::Owned(_)));
+//! assert!(pool.owned_payload_bytes() > 0);
+//!
+//! // both owners release; the entry is freed on the last reference
+//! assert!(!pool.release(id));
+//! assert!(pool.release(id));
+//! assert!(pool.is_empty());
+//! ```
 
 use std::collections::BTreeMap;
 
+use super::quant::KvBlock;
 use super::store::SlotState;
 
 /// Opaque handle to a pooled page.
@@ -38,10 +83,11 @@ pub type PageId = u64;
 /// Snapshot of one token page across all (layer, KV-head) pairs.
 #[derive(Clone, Debug)]
 pub struct PageData {
-    /// f32[lh, page_size, hd]
-    pub k: Vec<f32>,
-    /// f32[lh, page_size, hd]
-    pub v: Vec<f32>,
+    /// K payload, `lh × page_size` rows of `hd` values (f32 or
+    /// quantized — see [`KvBlock`]).
+    pub k: KvBlock,
+    /// V payload, same shape as `k`.
+    pub v: KvBlock,
     /// f32[lh, page_size] additive mask.
     pub mask: Vec<f32>,
     /// Slot metadata per (lh, page_size).
@@ -50,6 +96,14 @@ pub struct PageData {
     pub pmin: Vec<f32>,
     /// f32[lh, hd] Quest page bounds.
     pub pmax: Vec<f32>,
+}
+
+impl PageData {
+    /// Host bytes of the K+V payload (codes + quant metadata; excludes
+    /// the slot mask/meta/bounds sidecar, which is precision-invariant).
+    pub fn payload_bytes(&self) -> usize {
+        self.k.payload_bytes() + self.v.payload_bytes()
+    }
 }
 
 /// Where a pooled page's bytes currently live.
@@ -99,6 +153,27 @@ impl PagePool {
     /// Total references outstanding across all entries.
     pub fn total_refs(&self) -> usize {
         self.entries.values().map(|e| e.refs).sum()
+    }
+
+    /// Entries whose payload is an owned snapshot (vs still borrowed
+    /// from a lane's region of the flat arrays).
+    pub fn owned_pages(&self) -> usize {
+        self.entries
+            .values()
+            .filter(|e| matches!(e.payload, Payload::Owned(_)))
+            .count()
+    }
+
+    /// Host bytes of K+V payload held by owned snapshots — the number
+    /// quantization shrinks (borrowed payloads cost the pool nothing).
+    pub fn owned_payload_bytes(&self) -> usize {
+        self.entries
+            .values()
+            .map(|e| match &e.payload {
+                Payload::Owned(d) => d.payload_bytes(),
+                Payload::Borrowed { .. } => 0,
+            })
+            .sum()
     }
 
     /// Register a page whose payload stays borrowed from `lane`'s
@@ -194,11 +269,12 @@ impl PagePool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kvcache::KvDtype;
 
     fn data() -> PageData {
         PageData {
-            k: vec![1.0; 8],
-            v: vec![2.0; 8],
+            k: KvBlock::from_f32(KvDtype::F32, 2, 4, vec![1.0; 8]),
+            v: KvBlock::from_f32(KvDtype::F32, 2, 4, vec![2.0; 8]),
             mask: vec![0.0; 2],
             meta: vec![SlotState::Free; 2],
             pmin: vec![0.0; 4],
@@ -245,8 +321,23 @@ mod tests {
         p.publish(id, data());
         assert!(!p.is_borrowed_from(id, 2));
         match p.payload(id) {
-            Payload::Owned(d) => assert_eq!(d.k[0], 1.0),
+            Payload::Owned(d) => assert_eq!(d.k.to_f32()[0], 1.0),
             Payload::Borrowed { .. } => panic!("still borrowed"),
         }
+    }
+
+    #[test]
+    fn owned_accounting_tracks_payload_bytes() {
+        let mut p = PagePool::new();
+        let b = p.adopt_borrowed(0, 0);
+        assert_eq!(p.owned_pages(), 0);
+        assert_eq!(p.owned_payload_bytes(), 0, "borrowed payloads are free");
+        let o = p.insert_owned(data(), 1);
+        assert_eq!(p.owned_pages(), 1);
+        // 8 f32 K + 8 f32 V
+        assert_eq!(p.owned_payload_bytes(), 16 * 4);
+        p.release(o);
+        assert_eq!(p.owned_payload_bytes(), 0);
+        p.release(b);
     }
 }

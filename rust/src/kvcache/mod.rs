@@ -18,9 +18,48 @@
 //! a shared page copies-on-write first. The [`prefix`] module indexes
 //! retained pages by token ids (a radix tree with page-quantized
 //! edges) so repeated prompts prefill only from the divergence point.
+//!
+//! Cache *precision* is a third layer (see [`quant`]): pool-owned
+//! payloads are stored under the store's [`KvDtype`] — exact f32, or
+//! per-row q8/q4 blocks with scale/zero-point metadata — quantized
+//! exactly once at the publish/export boundary and dequantized into a
+//! lane's f32 region on upload. The full numerics contract (what is
+//! exact, what is lossy, the requantize-once rule, divergence bounds)
+//! is in `docs/NUMERICS.md`.
+//!
+//! End-to-end: write a prompt page, retain it quantized, restore it
+//! into a fresh lane within the quantization error bound:
+//!
+//! ```
+//! use hyperscale::kvcache::{CacheStore, Geometry, KvDtype};
+//!
+//! let geom = Geometry {
+//!     layers: 1, kv_heads: 1, slots: 16, head_dim: 4, page_size: 8,
+//! };
+//! let mut store = CacheStore::with_dtype(geom, 2, KvDtype::Q8);
+//! // prefill one full page on lane 0 (identity slot layout)
+//! for pos in 0..8 {
+//!     let s = store.alloc_slot(0, 0, 0).unwrap();
+//!     let k = [pos as f32 * 0.3; 4];
+//!     store.write(0, 0, 0, s, pos, &k, &k);
+//! }
+//! // publish boundary: the page is quantized here, exactly once
+//! let id = store.export_page(0, 0);
+//! assert!(store.pool_payload_bytes() > 0);
+//! store.recycle_lane(0);
+//!
+//! // restore into lane 1: metadata exact, payload dequantized
+//! store.map_prefix_pages(1, &[id]);
+//! store.materialize_pending();
+//! assert_eq!(store.live_count(1, 0, 0), 8);
+//! let k5 = store.k_at(1, 0, 0, 5)[0];
+//! assert!((k5 - 1.5).abs() <= 0.3 * 7.0 / 255.0, "bounded error");
+//! store.recycle_lane(1);
+//! ```
 
 pub mod cow;
 pub mod prefix;
+pub mod quant;
 
 mod paged;
 mod store;
@@ -28,6 +67,7 @@ mod store;
 pub use cow::{PageData, PageId, PagePool, Payload};
 pub use paged::PageAllocator;
 pub use prefix::{PrefixHit, RadixPrefixIndex};
+pub use quant::{KvBlock, KvDtype, QuantBlock};
 pub use store::{CacheStore, Geometry, SlotState, NEG_INF};
 
 #[cfg(test)]

@@ -1,0 +1,499 @@
+//! Quantized KV page payloads: q8 / q4 storage blocks with per-row
+//! scale/zero-point metadata.
+//!
+//! The paper's hyper-scaling argument treats compression ratio as a
+//! budget multiplier: every factor saved on the KV cache converts into
+//! more generated or parallel tokens at the same memory cost. Eviction
+//! (DMS/TOVA/H2O) supplies the *sparsity* axis; this module supplies
+//! the orthogonal *numeric-precision* axis (KVComp-style lossy
+//! compression), so an 8× eviction ratio compounds with a ~4× payload
+//! shrink into ~32× effective compression of pool-resident state.
+//!
+//! ## Layout
+//!
+//! A pooled KV page holds, per (layer, KV-head) pair, `page_size` rows
+//! of `head_dim` f32 values (one row per token slot). A [`QuantBlock`]
+//! stores those rows with **per-row, zero-anchored affine
+//! quantization** (the row's representable interval is extended to
+//! include 0, so the u8 zero-point always lands inside `[0, qmax]` and
+//! zero values encode exactly):
+//!
+//! ```text
+//! x ≈ scale · (q − zero_point)        q ∈ [0, 255] (q8) / [0, 15] (q4)
+//! lo = min(min_row, 0)   hi = max(max_row, 0)
+//! scale      = (hi − lo) / qmax                    (f32, one per row)
+//! zero_point = round(−lo / scale)                  (u8, one per row)
+//! ```
+//!
+//! Constant rows use a degenerate exact code (`scale = value`,
+//! `q ≡ 1`); all-zero rows (unwritten slots) encode as `scale = 0`.
+//! q4 codes are nibble-packed two per byte. Per-row metadata costs
+//! 5 bytes (f32 scale + u8 zero-point), so for `head_dim = hd` the
+//! payload shrinks from `4·hd` to `hd + 5` bytes per row at q8
+//! (≥ 3× for hd ≥ 16) and `⌈hd/2⌉ + 5` at q4 (≈ 5–7×).
+//!
+//! ## Numerics contract (see `docs/NUMERICS.md`)
+//!
+//! * Quantization is **lossy** with per-element error ≤ `scale/2` =
+//!   `(hi − lo) / (2·qmax)` over the zero-anchored row range
+//!   (constant and all-zero rows round-trip exactly, up to one float
+//!   rounding of `scale·q` for constant rows — exactly zero error in
+//!   the `q ≡ 1` encoding).
+//! * Dequantization is **deterministic and exact** over the code
+//!   lattice: the same block dequantizes to bit-identical f32 forever.
+//! * Blocks are produced exactly once, at page publish/export
+//!   boundaries ([`CacheStore`](super::CacheStore) never re-quantizes
+//!   a shared page — see the requantize-once rule in the store docs).
+//!
+//! ## Round-trip example
+//!
+//! ```
+//! use hyperscale::kvcache::{KvDtype, QuantBlock};
+//!
+//! // two rows of four values each
+//! let src = [0.0f32, 0.5, 1.0, 2.0, -1.0, -0.25, 0.25, 1.0];
+//! let block = QuantBlock::quantize(KvDtype::Q8, 2, 4, &src);
+//!
+//! let mut out = [0.0f32; 8];
+//! block.dequantize_rows_into(0, 2, &mut out);
+//! for (x, y) in src.iter().zip(&out) {
+//!     // per-element error is bounded by half the row's quant step
+//!     assert!((x - y).abs() <= 2.0 / 255.0 * 0.5 + 1e-6);
+//! }
+//! // storage: 8 code bytes + 2 × (4-byte scale + 1-byte zero-point)
+//! assert_eq!(block.payload_bytes(), 8 + 2 * 5);
+//! ```
+
+use std::fmt;
+use std::str::FromStr;
+
+use anyhow::bail;
+
+/// Storage format of KV page payloads held by the
+/// [`PagePool`](super::PagePool).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvDtype {
+    /// Full-precision f32 (exact; 4 bytes/element).
+    F32,
+    /// 8-bit affine quantization (per-row scale/zero-point).
+    Q8,
+    /// 4-bit affine quantization, nibble-packed.
+    Q4,
+}
+
+impl KvDtype {
+    /// Human-readable name, matching the CLI/config spelling.
+    pub fn name(&self) -> &'static str {
+        match self {
+            KvDtype::F32 => "f32",
+            KvDtype::Q8 => "q8",
+            KvDtype::Q4 => "q4",
+        }
+    }
+
+    /// Code bits per element.
+    pub fn bits(&self) -> u32 {
+        match self {
+            KvDtype::F32 => 32,
+            KvDtype::Q8 => 8,
+            KvDtype::Q4 => 4,
+        }
+    }
+
+    /// Whether payloads of this dtype go through quantize/dequantize.
+    pub fn is_quantized(&self) -> bool {
+        !matches!(self, KvDtype::F32)
+    }
+
+    /// Largest code value (`qmax`); 0 for f32 (unused).
+    fn qmax(&self) -> u32 {
+        match self {
+            KvDtype::F32 => 0,
+            KvDtype::Q8 => 255,
+            KvDtype::Q4 => 15,
+        }
+    }
+
+    /// Code bytes one row of `row_len` elements occupies (excluding
+    /// scale/zero-point metadata).
+    fn row_code_bytes(&self, row_len: usize) -> usize {
+        match self {
+            KvDtype::F32 => row_len * 4,
+            KvDtype::Q8 => row_len,
+            KvDtype::Q4 => row_len.div_ceil(2),
+        }
+    }
+
+    /// Host bytes one stored row of `row_len` elements occupies,
+    /// including per-row scale/zero-point metadata for the quantized
+    /// formats. This is the number the `kv.bytes_per_token` gauge and
+    /// the Pareto byte-axis rescale are built from.
+    pub fn row_payload_bytes(&self, row_len: usize) -> usize {
+        match self {
+            KvDtype::F32 => row_len * 4,
+            // codes + f32 scale + u8 zero-point
+            _ => self.row_code_bytes(row_len) + 5,
+        }
+    }
+}
+
+impl fmt::Display for KvDtype {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for KvDtype {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Ok(match s {
+            "f32" | "fp32" | "float32" => KvDtype::F32,
+            "q8" | "int8" => KvDtype::Q8,
+            "q4" | "int4" => KvDtype::Q4,
+            other => bail!("unknown kv dtype '{other}' (expected f32, q8, or q4)"),
+        })
+    }
+}
+
+/// Decode one affine code: `scale · (q − zero_point)`. Shared by the
+/// page codec below and the checkpoint loader
+/// (`runtime::parse_tensors`) so the convention lives in one place.
+#[inline]
+pub fn dequant_code(q: u8, scale: f32, zp: f32) -> f32 {
+    scale * (q as f32 - zp)
+}
+
+/// Extract element `i` from a low-nibble-first packed q4 code stream
+/// (the packing convention of [`QuantBlock`] and q4 checkpoint
+/// tensors).
+#[inline]
+pub fn unpack_q4(codes: &[u8], i: usize) -> u8 {
+    (codes[i / 2] >> ((i % 2) * 4)) & 0x0F
+}
+
+/// A quantized block of `rows × row_len` values (see module docs for
+/// the per-row affine scheme and the error bound).
+#[derive(Clone, Debug)]
+pub struct QuantBlock {
+    dtype: KvDtype,
+    rows: usize,
+    row_len: usize,
+    /// Packed codes, `rows × row_stride` bytes.
+    data: Vec<u8>,
+    /// Per-row scale (may be negative for constant negative rows).
+    scale: Vec<f32>,
+    /// Per-row zero-point in the quantized domain.
+    zp: Vec<u8>,
+}
+
+impl QuantBlock {
+    /// Quantize `src` (length `rows × row_len`) into a block.
+    ///
+    /// # Panics
+    /// Panics if `dtype` is [`KvDtype::F32`] (nothing to quantize) or
+    /// if `src` has the wrong length.
+    pub fn quantize(dtype: KvDtype, rows: usize, row_len: usize, src: &[f32]) -> Self {
+        assert!(dtype.is_quantized(), "QuantBlock requires q8/q4");
+        assert_eq!(src.len(), rows * row_len, "source length mismatch");
+        let qmax = dtype.qmax() as f32;
+        let stride = dtype.row_code_bytes(row_len);
+        let mut data = vec![0u8; rows * stride];
+        let mut scale = vec![0f32; rows];
+        let mut zp = vec![0u8; rows];
+        for r in 0..rows {
+            let xs = &src[r * row_len..(r + 1) * row_len];
+            let mut lo = f32::INFINITY;
+            let mut hi = f32::NEG_INFINITY;
+            for &x in xs {
+                lo = lo.min(x);
+                hi = hi.max(x);
+            }
+            // constant rows take a degenerate exact encoding; varying
+            // rows anchor the representable interval at zero so the
+            // u8 zero-point is always in range (and zeros are exact)
+            #[derive(Clone, Copy)]
+            enum Enc {
+                Zero,
+                Const,
+                Affine { s: f32, z: f32 },
+            }
+            let enc = if hi > lo {
+                let (lo0, hi0) = (lo.min(0.0), hi.max(0.0));
+                let s = (hi0 - lo0) / qmax;
+                let z = (-lo0 / s).round().clamp(0.0, qmax);
+                scale[r] = s;
+                zp[r] = z as u8;
+                Enc::Affine { s, z }
+            } else if lo == 0.0 {
+                // all-zero row (unwritten slots): exact zero codes
+                Enc::Zero
+            } else {
+                // constant non-zero row: scale·(1 − 0) == value, exact
+                scale[r] = lo;
+                Enc::Const
+            };
+            let row = &mut data[r * stride..(r + 1) * stride];
+            for (d, &x) in xs.iter().enumerate() {
+                let q = match enc {
+                    Enc::Zero => 0u8,
+                    Enc::Const => 1u8,
+                    Enc::Affine { s, z } => (x / s + z).round().clamp(0.0, qmax) as u8,
+                };
+                match dtype {
+                    KvDtype::Q8 => row[d] = q,
+                    KvDtype::Q4 => row[d / 2] |= q << ((d % 2) * 4),
+                    KvDtype::F32 => unreachable!(),
+                }
+            }
+        }
+        Self {
+            dtype,
+            rows,
+            row_len,
+            data,
+            scale,
+            zp,
+        }
+    }
+
+    /// Dequantize rows `[row0, row0 + n_rows)` into `out` (length
+    /// `n_rows × row_len`). Deterministic: identical output on every
+    /// call.
+    pub fn dequantize_rows_into(&self, row0: usize, n_rows: usize, out: &mut [f32]) {
+        assert!(row0 + n_rows <= self.rows, "row range out of bounds");
+        assert_eq!(out.len(), n_rows * self.row_len, "output length mismatch");
+        let stride = self.dtype.row_code_bytes(self.row_len);
+        for i in 0..n_rows {
+            let r = row0 + i;
+            let s = self.scale[r];
+            let z = self.zp[r] as f32;
+            let row = &self.data[r * stride..(r + 1) * stride];
+            let dst = &mut out[i * self.row_len..(i + 1) * self.row_len];
+            for (d, y) in dst.iter_mut().enumerate() {
+                let q = match self.dtype {
+                    KvDtype::Q8 => row[d],
+                    KvDtype::Q4 => unpack_q4(row, d),
+                    KvDtype::F32 => unreachable!(),
+                };
+                *y = dequant_code(q, s, z);
+            }
+        }
+    }
+
+    /// Storage format of this block.
+    pub fn dtype(&self) -> KvDtype {
+        self.dtype
+    }
+
+    /// Row count.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Elements per row.
+    pub fn row_len(&self) -> usize {
+        self.row_len
+    }
+
+    /// Quantization step of one row: for varying rows the per-element
+    /// round-trip error is bounded by `|scale|/2`; for constant rows
+    /// `scale` holds the (exactly reproduced) value itself.
+    pub fn row_scale(&self, row: usize) -> f32 {
+        self.scale[row]
+    }
+
+    /// Host bytes this block occupies (codes + scale/zero-point).
+    pub fn payload_bytes(&self) -> usize {
+        self.data.len() + self.scale.len() * 4 + self.zp.len()
+    }
+}
+
+/// A KV payload block: either exact f32 or a quantized [`QuantBlock`].
+///
+/// This is the storage type behind [`PageData`](super::PageData) —
+/// every pool-owned page's K and V live in one of these.
+#[derive(Clone, Debug)]
+pub enum KvBlock {
+    /// Exact f32 payload (`rows × row_len` values).
+    F32(Vec<f32>),
+    /// Quantized payload with per-row scale/zero-point.
+    Quant(QuantBlock),
+}
+
+impl KvBlock {
+    /// Encode `data` (length `rows × row_len`) under `dtype`. For
+    /// [`KvDtype::F32`] the vector is stored as-is (exact, zero cost);
+    /// otherwise it is quantized — this is the *single* lossy step of a
+    /// payload's lifetime (requantize-once rule).
+    pub fn from_f32(dtype: KvDtype, rows: usize, row_len: usize, data: Vec<f32>) -> Self {
+        debug_assert_eq!(data.len(), rows * row_len);
+        match dtype {
+            KvDtype::F32 => KvBlock::F32(data),
+            _ => KvBlock::Quant(QuantBlock::quantize(dtype, rows, row_len, &data)),
+        }
+    }
+
+    /// Decode rows `[row0, row0 + n_rows)` into `out`. Exact copy for
+    /// f32 payloads; deterministic dequantization otherwise.
+    pub fn read_rows_into(&self, row0: usize, n_rows: usize, row_len: usize, out: &mut [f32]) {
+        match self {
+            KvBlock::F32(data) => {
+                out.copy_from_slice(&data[row0 * row_len..(row0 + n_rows) * row_len]);
+            }
+            KvBlock::Quant(q) => {
+                debug_assert_eq!(q.row_len(), row_len);
+                q.dequantize_rows_into(row0, n_rows, out);
+            }
+        }
+    }
+
+    /// Decode the whole block to f32.
+    pub fn to_f32(&self) -> Vec<f32> {
+        match self {
+            KvBlock::F32(data) => data.clone(),
+            KvBlock::Quant(q) => {
+                let mut out = vec![0f32; q.rows() * q.row_len()];
+                q.dequantize_rows_into(0, q.rows(), &mut out);
+                out
+            }
+        }
+    }
+
+    /// Host bytes this payload occupies.
+    pub fn payload_bytes(&self) -> usize {
+        match self {
+            KvBlock::F32(data) => data.len() * 4,
+            KvBlock::Quant(q) => q.payload_bytes(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Pseudo-random but deterministic row values.
+    fn row_values(rows: usize, row_len: usize, seed: u64) -> Vec<f32> {
+        let mut state = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1;
+        (0..rows * row_len)
+            .map(|_| {
+                state = state
+                    .wrapping_mul(6364136223846793005)
+                    .wrapping_add(1442695040888963407);
+                ((state >> 33) as f64 / (1u64 << 31) as f64 - 0.5) as f32 * 4.0
+            })
+            .collect()
+    }
+
+    fn roundtrip_bound(dtype: KvDtype, rows: usize, row_len: usize) {
+        let src = row_values(rows, row_len, 7 + dtype.bits() as u64);
+        let b = QuantBlock::quantize(dtype, rows, row_len, &src);
+        let mut out = vec![0f32; rows * row_len];
+        b.dequantize_rows_into(0, rows, &mut out);
+        for r in 0..rows {
+            let bound = b.row_scale(r).abs() * 0.5001 + 1e-6;
+            for d in 0..row_len {
+                let (x, y) = (src[r * row_len + d], out[r * row_len + d]);
+                assert!(
+                    (x - y).abs() <= bound,
+                    "{dtype}: row {r} elem {d}: |{x} - {y}| > {bound}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn q8_roundtrip_within_half_step() {
+        roundtrip_bound(KvDtype::Q8, 13, 16);
+    }
+
+    #[test]
+    fn q4_roundtrip_within_half_step() {
+        roundtrip_bound(KvDtype::Q4, 13, 16);
+    }
+
+    #[test]
+    fn q4_handles_odd_row_length() {
+        roundtrip_bound(KvDtype::Q4, 5, 7);
+    }
+
+    #[test]
+    fn constant_and_zero_rows_are_exact() {
+        for dtype in [KvDtype::Q8, KvDtype::Q4] {
+            // zero row, positive constant, negative constant
+            let src = [0.0f32, 0.0, 0.0, 2.5, 2.5, 2.5, -1.75, -1.75, -1.75];
+            let b = QuantBlock::quantize(dtype, 3, 3, &src);
+            let mut out = [0f32; 9];
+            b.dequantize_rows_into(0, 3, &mut out);
+            assert_eq!(&src[..], &out[..], "{dtype}: constant rows must round-trip");
+        }
+    }
+
+    #[test]
+    fn dequantization_is_deterministic() {
+        let src = row_values(8, 12, 42);
+        let b = QuantBlock::quantize(KvDtype::Q8, 8, 12, &src);
+        let mut a = vec![0f32; 8 * 12];
+        let mut c = vec![0f32; 8 * 12];
+        b.dequantize_rows_into(0, 8, &mut a);
+        b.dequantize_rows_into(0, 8, &mut c);
+        assert_eq!(a, c);
+        // and a re-encode of the same source yields identical codes
+        let b2 = QuantBlock::quantize(KvDtype::Q8, 8, 12, &src);
+        let mut d = vec![0f32; 8 * 12];
+        b2.dequantize_rows_into(0, 8, &mut d);
+        assert_eq!(a, d);
+    }
+
+    #[test]
+    fn partial_row_reads_match_full_reads() {
+        let src = row_values(10, 6, 3);
+        let b = QuantBlock::quantize(KvDtype::Q4, 10, 6, &src);
+        let mut full = vec![0f32; 60];
+        b.dequantize_rows_into(0, 10, &mut full);
+        let mut part = vec![0f32; 18];
+        b.dequantize_rows_into(4, 3, &mut part);
+        assert_eq!(&full[24..42], &part[..]);
+    }
+
+    #[test]
+    fn payload_bytes_hit_compression_targets() {
+        // hd = 16: f32 64 B/row, q8 21 B/row (3.05×), q4 13 B/row (4.9×)
+        let hd = 16;
+        let f32_bytes = KvDtype::F32.row_payload_bytes(hd);
+        let q8_bytes = KvDtype::Q8.row_payload_bytes(hd);
+        let q4_bytes = KvDtype::Q4.row_payload_bytes(hd);
+        assert_eq!(f32_bytes, 64);
+        assert_eq!(q8_bytes, 21);
+        assert_eq!(q4_bytes, 13);
+        assert!(
+            f32_bytes as f64 / q8_bytes as f64 >= 3.0,
+            "q8 must shrink host bytes-per-token ≥ 3×"
+        );
+        assert!(f32_bytes as f64 / q4_bytes as f64 >= 4.5);
+        // a block's actual accounting matches the nominal figure
+        let src = row_values(4, hd, 1);
+        let b = QuantBlock::quantize(KvDtype::Q8, 4, hd, &src);
+        assert_eq!(b.payload_bytes(), 4 * q8_bytes);
+    }
+
+    #[test]
+    fn kvblock_f32_is_exact_and_cheap() {
+        let src = row_values(3, 5, 9);
+        let b = KvBlock::from_f32(KvDtype::F32, 3, 5, src.clone());
+        assert_eq!(b.to_f32(), src);
+        assert_eq!(b.payload_bytes(), src.len() * 4);
+        let mut out = vec![0f32; 5];
+        b.read_rows_into(1, 1, 5, &mut out);
+        assert_eq!(&out[..], &src[5..10]);
+    }
+
+    #[test]
+    fn dtype_parsing_roundtrip() {
+        for d in [KvDtype::F32, KvDtype::Q8, KvDtype::Q4] {
+            assert_eq!(d.name().parse::<KvDtype>().unwrap(), d);
+        }
+        assert!("bf16".parse::<KvDtype>().is_err());
+    }
+}

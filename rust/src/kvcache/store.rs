@@ -14,9 +14,44 @@
 //! sharer's region are deferred to [`CacheStore::materialize_pending`],
 //! which the engine runs once per tick before calling the executor, so
 //! forking W siblings is pure metadata work.
+//!
+//! # Quantized page payloads and the requantize-once rule
+//!
+//! The store carries a [`KvDtype`]: pool-owned payloads (COW snapshots
+//! and prefix-retained pages) store K/V as per-row q8/q4 blocks with
+//! scale/zero-point metadata instead of raw f32 (see [`super::quant`]).
+//! Lane regions of the flat arrays stay f32 — they are the executor's
+//! ABI — so the store is a two-tier memory: a cheap quantized pool
+//! behind exact f32 working views.
+//!
+//! Where the precision boundary sits (the full contract lives in
+//! `docs/NUMERICS.md`):
+//!
+//! * **Quantize exactly once**, when a page's pristine f32 bytes enter
+//!   the pool: a COW publish (`ensure_private` / `release_lane_pages`
+//!   on a borrowed payload with other references) or a prefix export
+//!   (`export_page`). Both encode from the owning lane's f32 region.
+//! * **Dequantize on upload**: `materialize_pending` /
+//!   `materialize_page` decode owned payloads into the consuming
+//!   lane's f32 region — the bytes the executor uploads next tick.
+//!   Decoding is deterministic and side-effect-free; the cumulative
+//!   cost is tracked in [`CacheStore::dequant_us`].
+//! * **Never requantize a shared page.** A lane that mutates its view
+//!   of an *owned* page detaches without publishing (the pool already
+//!   holds the authoritative snapshot), and `export_page` reuses the
+//!   existing pool entry whenever the lane's metadata still matches it
+//!   — so a logical page is encoded once and its code lattice never
+//!   drifts, no matter how many forks, restores, and sibling
+//!   evictions it survives.
+//! * Lane-to-lane materialization of *borrowed* payloads is an exact
+//!   f32 memcpy: sibling forks whose leader never retires or mutates
+//!   pay zero precision cost.
+
+use std::time::Instant;
 
 use super::cow::{PageData, PageId, PagePool, Payload};
 use super::paged::PageAllocator;
+use super::quant::{KvBlock, KvDtype};
 
 pub const NEG_INF: f32 = -1e9;
 
@@ -85,10 +120,23 @@ pub struct CacheStore {
     pending_count: Vec<usize>,
     /// Pages snapshotted into the pool by copy-on-write breaks.
     cow_published: u64,
+    /// Storage format of pool-owned page payloads (lane regions of the
+    /// flat arrays are always f32 — the executor ABI).
+    kv_dtype: KvDtype,
+    /// Cumulative nanoseconds spent decoding pool payloads into lane
+    /// regions (the dequant-on-upload cost; `kv.dequant_us`).
+    dequant_ns: u64,
 }
 
 impl CacheStore {
+    /// Store with exact f32 pool payloads (every pre-quantization
+    /// call site; bit-identical to the original store).
     pub fn new(geom: Geometry, batch: usize) -> Self {
+        Self::with_dtype(geom, batch, KvDtype::F32)
+    }
+
+    /// Store whose pool-owned payloads are encoded under `kv_dtype`.
+    pub fn with_dtype(geom: Geometry, batch: usize, kv_dtype: KvDtype) -> Self {
         let n_lbh = batch * geom.lh();
         let kv_len = geom.layers * batch * geom.kv_heads * geom.slots * geom.head_dim;
         let pm_len = geom.layers * batch * geom.kv_heads * geom.pages() * geom.head_dim;
@@ -111,6 +159,8 @@ impl CacheStore {
             pending_fill: (0..batch).map(|_| vec![false; geom.pages()]).collect(),
             pending_count: vec![0; batch],
             cow_published: 0,
+            kv_dtype,
+            dequant_ns: 0,
         }
     }
 
@@ -414,9 +464,17 @@ impl CacheStore {
         }
     }
 
-    /// Copy lane `src`'s full cache state into lane `dst` (legacy
-    /// full-copy fork, kept as the reference the COW fork is validated
-    /// against).
+    /// Copy lane `src`'s full cache state into lane `dst` by whole-lane
+    /// memcpy.
+    ///
+    /// **Test-reference-only.** This is the legacy O(S·hd) fork the
+    /// engine used before the COW page pool; the serving path forks
+    /// exclusively through [`CacheStore::fork_lane_cow`]. It is kept
+    /// (and must stay behaviorally frozen) because the property suite
+    /// validates COW forks bit-exactly against it
+    /// (`tests/property_coordinator.rs::cow_fork_streams_bit_exact_vs_full_copy_across_policies`)
+    /// and `bench_kvcache` uses it as the cost baseline. Do not call it
+    /// from engine code.
     pub fn fork_lane(&mut self, src: usize, dst: usize) {
         assert_ne!(src, dst);
         // a full-copy fork overwrites dst wholesale: drop any sharing
@@ -634,6 +692,10 @@ impl CacheStore {
         }
     }
 
+    /// Decode one pool-owned page into lane `b`'s region of the flat
+    /// arrays — the dequant-on-upload step for quantized payloads, an
+    /// exact memcpy for f32 ones. Deterministic either way: restoring
+    /// the same entry twice yields bit-identical lane bytes.
     fn copy_page_from_pool(&mut self, id: PageId, b: usize, page: usize) {
         let g = self.geom;
         let (ps, hd) = (g.page_size, g.head_dim);
@@ -649,26 +711,35 @@ impl CacheStore {
                 ));
             }
         }
+        let t0 = Instant::now();
         let Payload::Owned(data) = self.pool.payload(id) else {
             unreachable!("copy_page_from_pool on borrowed payload");
         };
         for (lh_i, &(kb, mb, pb)) in bases.iter().enumerate() {
-            self.k[kb..kb + ps * hd].copy_from_slice(&data.k[lh_i * ps * hd..(lh_i + 1) * ps * hd]);
-            self.v[kb..kb + ps * hd].copy_from_slice(&data.v[lh_i * ps * hd..(lh_i + 1) * ps * hd]);
+            data.k
+                .read_rows_into(lh_i * ps, ps, hd, &mut self.k[kb..kb + ps * hd]);
+            data.v
+                .read_rows_into(lh_i * ps, ps, hd, &mut self.v[kb..kb + ps * hd]);
             self.mask[mb..mb + ps].copy_from_slice(&data.mask[lh_i * ps..(lh_i + 1) * ps]);
             self.pmin[pb..pb + hd].copy_from_slice(&data.pmin[lh_i * hd..(lh_i + 1) * hd]);
             self.pmax[pb..pb + hd].copy_from_slice(&data.pmax[lh_i * hd..(lh_i + 1) * hd]);
         }
+        self.dequant_ns += t0.elapsed().as_nanos() as u64;
     }
 
-    /// Snapshot one token page of `lane`'s region into pool-owned form.
+    /// Snapshot one token page of `lane`'s region into pool-owned
+    /// form, encoding the K/V payload under the store's [`KvDtype`].
+    /// This is the publish boundary — the single point where a
+    /// payload's (only) quantization happens.
     fn snapshot_page(&self, lane: usize, page: usize) -> PageData {
         let g = self.geom;
         let (ps, hd) = (g.page_size, g.head_dim);
         let lh = g.lh();
+        let mut kvec = vec![0f32; lh * ps * hd];
+        let mut vvec = vec![0f32; lh * ps * hd];
         let mut data = PageData {
-            k: vec![0.0; lh * ps * hd],
-            v: vec![0.0; lh * ps * hd],
+            k: KvBlock::F32(Vec::new()),
+            v: KvBlock::F32(Vec::new()),
             mask: vec![NEG_INF; lh * ps],
             meta: vec![SlotState::Free; lh * ps],
             pmin: vec![0.0; lh * hd],
@@ -678,9 +749,9 @@ impl CacheStore {
             for h in 0..g.kv_heads {
                 let lh_i = l * g.kv_heads + h;
                 let kb = self.kv_base(lane, l, h, page * ps);
-                data.k[lh_i * ps * hd..(lh_i + 1) * ps * hd]
+                kvec[lh_i * ps * hd..(lh_i + 1) * ps * hd]
                     .copy_from_slice(&self.k[kb..kb + ps * hd]);
-                data.v[lh_i * ps * hd..(lh_i + 1) * ps * hd]
+                vvec[lh_i * ps * hd..(lh_i + 1) * ps * hd]
                     .copy_from_slice(&self.v[kb..kb + ps * hd]);
                 let mb = self.mask_idx(lane, l, h, page * ps);
                 data.mask[lh_i * ps..(lh_i + 1) * ps].copy_from_slice(&self.mask[mb..mb + ps]);
@@ -692,6 +763,8 @@ impl CacheStore {
                 data.pmax[lh_i * hd..(lh_i + 1) * hd].copy_from_slice(&self.pmax[pb..pb + hd]);
             }
         }
+        data.k = KvBlock::from_f32(self.kv_dtype, lh * ps, hd, kvec);
+        data.v = KvBlock::from_f32(self.kv_dtype, lh * ps, hd, vvec);
         data
     }
 
@@ -711,6 +784,12 @@ impl CacheStore {
         // the lane's region must hold the bytes before it diverges
         self.materialize_page(b, page);
         let id = self.page_map[b][page].take().expect("detach of unshared page");
+        // requantize-once: a publish happens only when `b` holds the
+        // sole pristine copy (borrowed payload). Detaching from an
+        // *owned* entry never re-encodes — the pool already holds the
+        // authoritative (possibly quantized) snapshot, so a lane that
+        // mutates its dequantized view can never perturb, or lossily
+        // re-encode, what other sharers see.
         if self.pool.refs(id) > 1 && self.pool.is_borrowed_from(id, b) {
             let snap = self.snapshot_page(b, page);
             self.pool.publish(id, snap);
@@ -779,7 +858,11 @@ impl CacheStore {
     /// Export page `page` of `lane` as a pool-owned snapshot for the
     /// prefix index, returning a handle with one reference held for the
     /// caller. Reuses the existing pool entry when the lane already
-    /// shares the page and the snapshot still matches the lane's state.
+    /// shares the page and the snapshot still matches the lane's state
+    /// — which is also the requantize-once guarantee for prefix
+    /// retention: a page that was restored from a quantized snapshot
+    /// and re-exported hands back the *same* entry, never a re-encoded
+    /// (and thus drifted) copy of its dequantized view.
     pub fn export_page(&mut self, lane: usize, page: usize) -> PageId {
         // the lane's region must hold the bytes we snapshot
         self.materialize_page(lane, page);
@@ -863,5 +946,39 @@ impl CacheStore {
     /// COW snapshots published since construction.
     pub fn cow_published(&self) -> u64 {
         self.cow_published
+    }
+
+    // ---------------- quantization accounting ----------------
+
+    /// Storage format of pool-owned page payloads.
+    pub fn kv_dtype(&self) -> KvDtype {
+        self.kv_dtype
+    }
+
+    /// Cumulative microseconds spent decoding pool payloads into lane
+    /// regions (the `kv.dequant_us` gauge; includes the memcpy cost of
+    /// f32 restores, which share the same path).
+    pub fn dequant_us(&self) -> f64 {
+        self.dequant_ns as f64 / 1_000.0
+    }
+
+    /// Host bytes of K+V payload currently held by pool-owned
+    /// snapshots (codes + quant metadata; borrowed payloads cost the
+    /// pool nothing).
+    pub fn pool_payload_bytes(&self) -> usize {
+        self.pool.owned_payload_bytes()
+    }
+
+    /// Pool entries whose payload is an owned snapshot.
+    pub fn pool_owned_pages(&self) -> usize {
+        self.pool.owned_pages()
+    }
+
+    /// Nominal K+V payload bytes one cached token costs per
+    /// (layer, KV-head) pair under the store's dtype — `8·hd` for f32,
+    /// `2·(hd + 5)` for q8, `2·(⌈hd/2⌉ + 5)` for q4. Reported as the
+    /// `kv.bytes_per_token` gauge.
+    pub fn payload_bytes_per_token(&self) -> f64 {
+        2.0 * self.kv_dtype.row_payload_bytes(self.geom.head_dim) as f64
     }
 }

@@ -32,9 +32,11 @@ fn main() {
 fn usage() -> &'static str {
     "usage: hyperscale <gen|eval|exp|serve|inspect|selftest> [options]\n\
      common options: --artifacts DIR --variant TAG --policy NAME --cr X\n\
+                     --kv-dtype f32|q8|q4 (pool payload precision)\n\
        gen      --prompt 'Q:1+2=?\\nT:' [--width W] [--max-len L] [--temp T]\n\
        eval     --task math [--width W] [--max-len L] [--n N]\n\
-       exp      fig1|fig3|fig4|fig5|fig6|fig7|table1|table2|table7 [--n N] [--full]\n\
+       exp      fig1|fig3|fig4|fig5|fig6|fig7|table1|table2|table7|quant\n\
+                [--n N] [--full]\n\
        serve    [--addr 127.0.0.1:7333] [--no-prefix-cache] [--prefix-pages N]\n\
        inspect  | selftest"
 }
@@ -141,6 +143,7 @@ fn cmd_exp(args: &Args) -> Result<()> {
         "table1" => exp::run_table1(&artifacts, n, args.flag("base")),
         "table2" => exp::run_table2(&artifacts, n),
         "table7" | "table8" | "table9" | "points" => exp::run_points(&artifacts, n),
+        "quant" => exp::run_quant_bits(&artifacts, n),
         other => anyhow::bail!("unknown experiment '{other}'\n{}", usage()),
     }
 }

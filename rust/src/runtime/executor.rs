@@ -6,12 +6,47 @@
 //! parameter literals are built once (`Weights::literals`) and borrowed
 //! on every call, and the cache arrays are uploaded from the
 //! `CacheStore`'s flat layout without reshuffling.
+//!
+//! ## Dequant-on-upload
+//!
+//! The k/v/mask/pmin/pmax slices these wrappers upload are the store's
+//! **dequantized lane views**: with a quantized `kv_dtype`, pool-owned
+//! page payloads are decoded into the lanes' f32 regions by
+//! `CacheStore::materialize_pending` (which the engine runs right
+//! before each executor call), and the upload itself is always plain
+//! f32 — the compiled executables are precision-agnostic and never
+//! recompile when the storage format changes. The decode cost is
+//! accounted in `CacheStore::dequant_us` (`kv.dequant_us` gauge);
+//! the upload *volume* is [`cache_upload_bytes`]. See
+//! `docs/NUMERICS.md` for the full contract.
 
 use std::rc::Rc;
 
 use anyhow::{anyhow, bail, Result};
 
 use super::manifest::ExeMeta;
+
+/// Bytes of cache state one decode step uploads to the device: the
+/// dequantized f32 lane views of K, V, the additive mask, and the
+/// Quest page bounds. Upload volume is fixed by the executor ABI —
+/// quantization shrinks *host pool* bytes (`kv.bytes_per_token`), not
+/// this per-step figure.
+///
+/// ```
+/// use hyperscale::kvcache::Geometry;
+/// use hyperscale::runtime::cache_upload_bytes;
+///
+/// let g = Geometry { layers: 2, kv_heads: 2, slots: 32, head_dim: 4, page_size: 8 };
+/// // k + v: 2·(L·B·H·S·hd), mask: L·B·H·S, bounds: 2·(L·B·H·P·hd)
+/// let elems = 2 * 2 * 3 * 2 * 32 * 4 + 2 * 3 * 2 * 32 + 2 * 2 * 3 * 2 * 4 * 4;
+/// assert_eq!(cache_upload_bytes(&g, 3), elems * 4);
+/// ```
+pub fn cache_upload_bytes(geom: &crate::kvcache::Geometry, batch: usize) -> usize {
+    let kv = 2 * geom.layers * batch * geom.kv_heads * geom.slots * geom.head_dim;
+    let mask = geom.layers * batch * geom.kv_heads * geom.slots;
+    let bounds = 2 * geom.layers * batch * geom.kv_heads * geom.pages() * geom.head_dim;
+    (kv + mask + bounds) * 4
+}
 
 /// Decode-step outputs (flat host vectors, layouts in comments).
 pub struct DecodeOutputs {

@@ -5,14 +5,21 @@
 //! `XlaComputation::from_proto` → `PjRtClient::compile`. Weights are
 //! executable *inputs*: loaded once from `weights_<variant>.bin` into
 //! `Literal`s and passed by reference on every call.
+//!
+//! Precision boundary: the executor ABI is f32 end to end. Quantized
+//! storage — q8/q4 checkpoint tensors ([`parse_tensors`]) and
+//! q8/q4 KV page payloads (`kvcache::quant`) — is dequantized to f32
+//! *before* anything reaches a `Literal` or device buffer, so
+//! compiled HLO never changes with the storage format. See
+//! `docs/NUMERICS.md`.
 
 mod executor;
 mod manifest;
 mod weights;
 
-pub use executor::{DecodeOutputs, Executor, ParamBuffers, PrefillOutputs};
+pub use executor::{cache_upload_bytes, DecodeOutputs, Executor, ParamBuffers, PrefillOutputs};
 pub use manifest::{ExeMeta, Manifest, ModelConfig, VariantMeta};
-pub use weights::Weights;
+pub use weights::{parse_tensors, Tensor, Weights};
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};

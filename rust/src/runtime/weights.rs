@@ -1,18 +1,110 @@
 //! `.bin` weight checkpoints (format defined in `aot.py::save_bin`):
-//! `[u32 header_len][JSON header][raw little-endian f32 payload]`.
+//! `[u32 header_len][JSON header][raw little-endian payload]`.
+//!
+//! Tensor payloads are f32 by default; a header entry may also declare
+//! `"dtype": "q8"` / `"dtype": "q4"` with per-tensor `"scale"` and
+//! `"zero_point"` metadata (the checkpoint-level sibling of the KV
+//! cache's per-row page quantization — see `docs/NUMERICS.md`). The
+//! loader **dequantizes on load**: whatever the storage format, the
+//! parameter `Literal`s handed to the executor are f32, so the
+//! executable ABI never changes and quantization stays a pure storage
+//! concern:
+//!
+//! ```text
+//! x = scale · (q − zero_point)     q8: one byte/element
+//!                                  q4: nibble-packed, low nibble first
+//! ```
+//!
+//! Parsing is split from literal construction (`parse_tensors`) so the
+//! byte format — including the quantized paths — is unit-testable
+//! without a PJRT client.
 
 use std::path::Path;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::kvcache::quant::{dequant_code, unpack_q4};
 use crate::util::Json;
 
-/// One loaded tensor.
+/// One loaded tensor (always f32 on the host, whatever the storage).
 #[derive(Debug)]
 pub struct Tensor {
     pub name: String,
     pub shape: Vec<usize>,
     pub data: Vec<f32>,
+}
+
+/// Decode the `[u32 header_len][JSON header][payload]` container into
+/// host-f32 tensors, dequantizing q8/q4 entries on the fly.
+pub fn parse_tensors(bytes: &[u8]) -> Result<Vec<Tensor>> {
+    if bytes.len() < 4 {
+        bail!("weight file too short");
+    }
+    let header_len = u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize;
+    let header_end = 4 + header_len;
+    if bytes.len() < header_end {
+        bail!("weight header truncated");
+    }
+    let header = Json::parse(std::str::from_utf8(&bytes[4..header_end])?)?;
+    let payload = &bytes[header_end..];
+
+    let mut tensors = Vec::new();
+    for t in header
+        .req("tensors")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("tensors must be an array"))?
+    {
+        let name = t.req("name")?.as_str().unwrap_or("").to_string();
+        let shape: Vec<usize> = t
+            .req("shape")?
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+        let offset = t.req("offset")?.as_usize().unwrap_or(0);
+        let n: usize = shape.iter().product::<usize>().max(1);
+        let dtype = t.get("dtype").and_then(Json::as_str).unwrap_or("f32");
+        let data = match dtype {
+            "f32" => {
+                let end = offset + n * 4;
+                if end > payload.len() {
+                    bail!("tensor '{name}' exceeds payload");
+                }
+                let mut data = vec![0f32; n];
+                for (i, chunk) in payload[offset..end].chunks_exact(4).enumerate() {
+                    data[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+                }
+                data
+            }
+            "q8" | "q4" => {
+                let Some(scale) = t.req("scale")?.as_f64() else {
+                    bail!("tensor '{name}': scale must be a number");
+                };
+                let scale = scale as f32;
+                let zp = t.get("zero_point").and_then(|x| x.as_f64()).unwrap_or(0.0) as f32;
+                let nbytes = if dtype == "q8" { n } else { n.div_ceil(2) };
+                let end = offset + nbytes;
+                if end > payload.len() {
+                    bail!("tensor '{name}' exceeds payload");
+                }
+                let codes = &payload[offset..end];
+                let mut data = vec![0f32; n];
+                for (i, x) in data.iter_mut().enumerate() {
+                    let q = if dtype == "q8" {
+                        codes[i]
+                    } else {
+                        unpack_q4(codes, i)
+                    };
+                    *x = dequant_code(q, scale, zp);
+                }
+                data
+            }
+            other => bail!("tensor '{name}': unknown dtype '{other}'"),
+        };
+        tensors.push(Tensor { name, shape, data });
+    }
+    Ok(tensors)
 }
 
 /// The full parameter set of a model variant, with `Literal`s prepared
@@ -26,45 +118,10 @@ impl Weights {
     pub fn load(path: &Path, param_order: &[String]) -> Result<Self> {
         let bytes = std::fs::read(path)
             .map_err(|e| anyhow!("read {}: {e}", path.display()))?;
-        if bytes.len() < 4 {
-            bail!("weight file too short");
-        }
-        let header_len = u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize;
-        let header_end = 4 + header_len;
-        if bytes.len() < header_end {
-            bail!("weight header truncated");
-        }
-        let header = Json::parse(std::str::from_utf8(&bytes[4..header_end])?)?;
-        let payload = &bytes[header_end..];
+        let tensors = parse_tensors(&bytes)?;
 
-        let mut tensors = Vec::new();
-        for t in header
-            .req("tensors")?
-            .as_arr()
-            .ok_or_else(|| anyhow!("tensors must be an array"))?
-        {
-            let name = t.req("name")?.as_str().unwrap_or("").to_string();
-            let shape: Vec<usize> = t
-                .req("shape")?
-                .as_arr()
-                .unwrap_or(&[])
-                .iter()
-                .filter_map(Json::as_usize)
-                .collect();
-            let offset = t.req("offset")?.as_usize().unwrap_or(0);
-            let n: usize = shape.iter().product::<usize>().max(1);
-            let end = offset + n * 4;
-            if end > payload.len() {
-                bail!("tensor '{name}' exceeds payload");
-            }
-            let mut data = vec![0f32; n];
-            for (i, chunk) in payload[offset..end].chunks_exact(4).enumerate() {
-                data[i] = f32::from_le_bytes(chunk.try_into().unwrap());
-            }
-            tensors.push(Tensor { name, shape, data });
-        }
-
-        // order tensors per param_order and build literals once
+        // order tensors per param_order and build f32 literals once
+        // (dequantized host data — the executor ABI stays f32)
         let mut ordered = Vec::with_capacity(param_order.len());
         for name in param_order {
             let idx = tensors
@@ -99,5 +156,84 @@ impl Weights {
             .iter()
             .map(|t| t.shape.iter().product::<usize>())
             .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a `.bin` container from a header string and payload.
+    fn container(header: &str, payload: &[u8]) -> Vec<u8> {
+        let mut out = (header.len() as u32).to_le_bytes().to_vec();
+        out.extend_from_slice(header.as_bytes());
+        out.extend_from_slice(payload);
+        out
+    }
+
+    #[test]
+    fn parses_f32_tensors() {
+        let header = r#"{"tensors": [
+            {"name": "w", "shape": [2, 2], "offset": 0}
+        ]}"#;
+        let payload: Vec<u8> = [1.0f32, -2.5, 0.0, 4.25]
+            .iter()
+            .flat_map(|x| x.to_le_bytes())
+            .collect();
+        let ts = parse_tensors(&container(header, &payload)).unwrap();
+        assert_eq!(ts.len(), 1);
+        assert_eq!(ts[0].shape, vec![2, 2]);
+        assert_eq!(ts[0].data, vec![1.0, -2.5, 0.0, 4.25]);
+    }
+
+    #[test]
+    fn dequantizes_q8_tensor_on_load() {
+        // scale 0.5, zp 2: codes [0, 2, 5, 255] → [-1.0, 0.0, 1.5, 126.5]
+        let header = r#"{"tensors": [
+            {"name": "w", "shape": [4], "offset": 0,
+             "dtype": "q8", "scale": 0.5, "zero_point": 2}
+        ]}"#;
+        let ts = parse_tensors(&container(header, &[0u8, 2, 5, 255])).unwrap();
+        assert_eq!(ts[0].data, vec![-1.0, 0.0, 1.5, 126.5]);
+    }
+
+    #[test]
+    fn dequantizes_q4_tensor_nibble_packed() {
+        // 5 elements (odd), scale 2.0, zp 0: codes 1,2,3,4,15 pack into
+        // bytes [0x21, 0x43, 0x0F] (low nibble first)
+        let header = r#"{"tensors": [
+            {"name": "w", "shape": [5], "offset": 0,
+             "dtype": "q4", "scale": 2.0}
+        ]}"#;
+        let ts = parse_tensors(&container(header, &[0x21, 0x43, 0x0F])).unwrap();
+        assert_eq!(ts[0].data, vec![2.0, 4.0, 6.0, 8.0, 30.0]);
+    }
+
+    #[test]
+    fn mixed_precision_checkpoint_shares_one_payload() {
+        let mut payload: Vec<u8> = 3.0f32.to_le_bytes().to_vec();
+        payload.extend_from_slice(&[10u8, 20]); // q8 tensor at offset 4
+        let header = r#"{"tensors": [
+            {"name": "a", "shape": [1], "offset": 0},
+            {"name": "b", "shape": [2], "offset": 4,
+             "dtype": "q8", "scale": 0.1, "zero_point": 10}
+        ]}"#;
+        let ts = parse_tensors(&container(header, &payload)).unwrap();
+        assert_eq!(ts[0].data, vec![3.0]);
+        assert!((ts[1].data[0] - 0.0).abs() < 1e-6);
+        assert!((ts[1].data[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn truncated_and_unknown_dtypes_error() {
+        let header = r#"{"tensors": [
+            {"name": "w", "shape": [8], "offset": 0, "dtype": "q8", "scale": 1.0}
+        ]}"#;
+        assert!(parse_tensors(&container(header, &[0u8; 4])).is_err());
+        let header = r#"{"tensors": [
+            {"name": "w", "shape": [1], "offset": 0, "dtype": "bf16"}
+        ]}"#;
+        assert!(parse_tensors(&container(header, &[0u8; 4])).is_err());
+        assert!(parse_tensors(&[0u8, 0]).is_err());
     }
 }

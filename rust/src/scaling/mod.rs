@@ -3,4 +3,4 @@
 
 pub mod pareto;
 
-pub use pareto::{frontier, margin, Frontier, ScalePoint};
+pub use pareto::{frontier, kv_bytes_per_token, margin, with_byte_budget, Frontier, ScalePoint};

@@ -5,6 +5,22 @@
 //!
 //! where A(x), B(x) are the piecewise-linear interpolations of the two
 //! frontiers and I is the largest budget interval both cover.
+//!
+//! ## Budget units and quantized payloads
+//!
+//! The paper's x axis counts KV reads / peak tokens in **token
+//! units**, which implicitly assumes every cached token costs the same
+//! bytes. With quantized page payloads (q8/q4 — see
+//! `docs/NUMERICS.md`) that assumption breaks: a q8 token costs ~⅓ the
+//! host bytes of an f32 token, so two configurations with equal
+//! token-unit budgets differ ~3× in memory-read cost.
+//! [`kv_bytes_per_token`] converts a dtype + cache geometry into a
+//! bytes-per-token factor and [`with_byte_budget`] rescales a point
+//! cloud onto the byte axis, so frontiers of different dtypes become
+//! comparable — eviction CR × precision shrink compose
+//! multiplicatively on that axis.
+
+use crate::kvcache::KvDtype;
 
 /// One measured scaling configuration.
 #[derive(Clone, Debug, PartialEq)]
@@ -21,6 +37,31 @@ pub struct ScalePoint {
 #[derive(Clone, Debug, Default)]
 pub struct Frontier {
     pub points: Vec<ScalePoint>,
+}
+
+/// K+V payload bytes one cached token costs across the whole model
+/// under `dtype`: `layers × kv_heads` (row pairs per token) ×
+/// per-row storage cost (codes + scale/zero-point for the quantized
+/// formats). This is the conversion factor from the §5.1 token-unit
+/// budget axis to a host-byte axis.
+pub fn kv_bytes_per_token(dtype: KvDtype, layers: usize, kv_heads: usize, head_dim: usize) -> f64 {
+    (layers * kv_heads) as f64 * 2.0 * dtype.row_payload_bytes(head_dim) as f64
+}
+
+/// Rescale a point cloud's budget axis from token units to bytes
+/// (`bytes_per_token` from [`kv_bytes_per_token`]). Accuracy and
+/// labels are untouched; with a positive factor the Pareto-dominance
+/// structure is preserved, only the axis changes meaning.
+pub fn with_byte_budget(points: &[ScalePoint], bytes_per_token: f64) -> Vec<ScalePoint> {
+    assert!(bytes_per_token > 0.0, "bytes/token must be positive");
+    points
+        .iter()
+        .map(|p| ScalePoint {
+            budget: p.budget * bytes_per_token,
+            accuracy: p.accuracy,
+            label: p.label.clone(),
+        })
+        .collect()
 }
 
 /// Extract the Pareto frontier (max accuracy for min budget) from a
@@ -179,5 +220,47 @@ mod tests {
         let a = frontier(&[pt(0.0, 0.2), pt(10.0, 0.4)]);
         let b = frontier(&[pt(0.0, 0.5), pt(10.0, 0.7)]);
         assert!(margin(&a, &b).unwrap() < 0.0);
+    }
+
+    #[test]
+    fn bytes_per_token_reflects_dtype() {
+        // 4 layers × 2 heads × head_dim 16
+        let f = kv_bytes_per_token(KvDtype::F32, 4, 2, 16);
+        let q8 = kv_bytes_per_token(KvDtype::Q8, 4, 2, 16);
+        let q4 = kv_bytes_per_token(KvDtype::Q4, 4, 2, 16);
+        assert_eq!(f, 8.0 * 2.0 * 64.0);
+        assert!(f / q8 >= 3.0, "q8 shrinks the byte axis ≥ 3×");
+        assert!(f / q4 >= 4.5, "q4 shrinks it further");
+    }
+
+    #[test]
+    fn byte_rescale_preserves_frontier_structure() {
+        let cloud = vec![pt(1.0, 0.3), pt(2.0, 0.2), pt(2.0, 0.5), pt(3.0, 0.4)];
+        let scaled = with_byte_budget(&cloud, 128.0);
+        let f_tok = frontier(&cloud);
+        let f_byte = frontier(&scaled);
+        assert_eq!(f_tok.points.len(), f_byte.points.len());
+        for (t, b) in f_tok.points.iter().zip(&f_byte.points) {
+            assert_eq!(t.accuracy, b.accuracy);
+            assert!((b.budget - t.budget * 128.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn quantization_compounds_with_eviction_on_byte_axis() {
+        // same token-unit measurements (e.g. a CR8 eviction run), once
+        // stored f32 and once q8: on the byte axis the q8 frontier
+        // reaches equal accuracy at ≥ 3× smaller budget.
+        let cloud = vec![pt(10.0, 0.5), pt(20.0, 0.8)];
+        let f = kv_bytes_per_token(KvDtype::F32, 4, 2, 16);
+        let q = kv_bytes_per_token(KvDtype::Q8, 4, 2, 16);
+        let f32_bytes = frontier(&with_byte_budget(&cloud, f));
+        let q8_bytes = frontier(&with_byte_budget(&cloud, q));
+        let (q_lo, q_hi) = q8_bytes.budget_range().unwrap();
+        let (f_lo, f_hi) = f32_bytes.budget_range().unwrap();
+        assert!(f_lo / q_lo >= 3.0 && f_hi / q_hi >= 3.0);
+        // peak accuracy is available at ≥3× fewer bytes read
+        assert_eq!(q8_bytes.at(q_hi), Some(0.8));
+        assert!(f32_bytes.at(q_hi).is_none(), "f32 can't reach that budget");
     }
 }

@@ -108,7 +108,7 @@ pub fn serve(cfg: EngineConfig, addr: &str) -> Result<()> {
             Ok(completed) => {
                 for done in completed {
                     if let Some(inf) = inflight.remove(&done.ticket) {
-                        let resp = response_from(&inf.req, &done);
+                        let resp = response_from(&inf.req, &done, engine.cfg.kv_dtype);
                         let _ = inf.reply.send(render_response(&resp));
                     }
                 }
@@ -169,6 +169,7 @@ fn handle_msg(
                     .set("metrics", engine.metrics.report())
                     .set("active_lanes", session.active_lanes())
                     .set("queue_depth", session.queue_depth())
+                    .set("kv_dtype", engine.cfg.kv_dtype.name())
                     .to_string(),
             );
             false
@@ -178,7 +179,11 @@ fn handle_msg(
 }
 
 /// Build the response for a completed request.
-fn response_from(req: &ServeRequest, done: &CompletedRequest) -> ServeResponse {
+fn response_from(
+    req: &ServeRequest,
+    done: &CompletedRequest,
+    kv_dtype: crate::kvcache::KvDtype,
+) -> ServeResponse {
     let res = &done.result;
     let texts: Vec<String> = res.chains.iter().map(|c| c.text.clone()).collect();
     let refs: Vec<&str> = texts.iter().map(|s| s.as_str()).collect();
@@ -199,6 +204,7 @@ fn response_from(req: &ServeRequest, done: &CompletedRequest) -> ServeResponse {
         ttft_ms: 0.0,
         tokens_per_s: 0.0,
         prefix_hit_tokens: prefix_hit_tokens as f64,
+        kv_dtype: kv_dtype.name().to_string(),
         error: None,
     }
     .with_timing(&done.timing)

@@ -53,6 +53,10 @@ pub struct ServeResponse {
     /// Prompt tokens restored from the radix prefix cache instead of
     /// being prefilled, summed across chains.
     pub prefix_hit_tokens: f64,
+    /// Storage format of pool-owned KV payloads that served this
+    /// request (`f32`, `q8`, or `q4` — see docs/NUMERICS.md), so
+    /// clients can attribute precision effects.
+    pub kv_dtype: String,
     /// Error message (all other payload fields are omitted when set).
     pub error: Option<String>,
 }
@@ -71,6 +75,7 @@ impl ServeResponse {
             ttft_ms: 0.0,
             tokens_per_s: 0.0,
             prefix_hit_tokens: 0.0,
+            kv_dtype: String::new(),
             error: Some(msg.to_string()),
         }
     }
@@ -125,6 +130,7 @@ pub fn render_response(r: &ServeResponse) -> String {
         .set("ttft_ms", r.ttft_ms)
         .set("tokens_per_s", r.tokens_per_s)
         .set("prefix_hit_tokens", r.prefix_hit_tokens)
+        .set("kv_dtype", r.kv_dtype.as_str())
         .to_string()
 }
 
@@ -173,6 +179,7 @@ mod tests {
             ttft_ms: 4.0,
             tokens_per_s: 80.0,
             prefix_hit_tokens: 16.0,
+            kv_dtype: "q8".into(),
             error: None,
         };
         let s = render_response(&r);
@@ -183,6 +190,7 @@ mod tests {
         assert_eq!(j.get("ttft_ms").unwrap().as_f64(), Some(4.0));
         assert_eq!(j.get("tokens_per_s").unwrap().as_f64(), Some(80.0));
         assert_eq!(j.get("prefix_hit_tokens").unwrap().as_f64(), Some(16.0));
+        assert_eq!(j.get("kv_dtype").unwrap().as_str(), Some("q8"));
     }
 
     #[test]

@@ -1,0 +1,87 @@
+#!/usr/bin/env python3
+"""Offline markdown link checker for README.md + docs/*.md.
+
+Validates every ``[text](target)`` link whose target is a relative
+path: the file must exist, and if the target carries a ``#anchor`` the
+destination file must contain a heading that slugifies to it
+(GitHub-style). External (http/https/mailto) links are skipped — CI
+runs offline-safe.
+
+Exit code 0 when every link resolves, 1 otherwise (one line per
+broken link).
+
+Usage: python3 tools/check_links.py [repo_root]
+"""
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$")
+
+
+def slugify(heading: str) -> str:
+    """GitHub-flavoured heading → anchor slug."""
+    text = re.sub(r"[`*_]", "", heading.strip().lower())
+    text = re.sub(r"[^\w\- ]", "", text, flags=re.UNICODE)
+    return text.replace(" ", "-")
+
+
+def anchors_of(path: Path) -> set:
+    slugs = set()
+    seen = {}
+    for line in path.read_text(encoding="utf-8").splitlines():
+        m = HEADING_RE.match(line)
+        if not m:
+            continue
+        slug = slugify(m.group(1))
+        n = seen.get(slug, 0)
+        seen[slug] = n + 1
+        slugs.add(slug if n == 0 else f"{slug}-{n}")
+    return slugs
+
+
+def check_file(md: Path, root: Path) -> list:
+    errors = []
+    for m in LINK_RE.finditer(md.read_text(encoding="utf-8")):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, anchor = target.partition("#")
+        if path_part:
+            dest = (md.parent / path_part).resolve()
+            if not dest.exists():
+                errors.append(f"{md.relative_to(root)}: broken link '{target}'")
+                continue
+        else:
+            dest = md
+        if anchor and dest.suffix == ".md":
+            if anchor not in anchors_of(dest):
+                errors.append(
+                    f"{md.relative_to(root)}: missing anchor '#{anchor}' "
+                    f"in {dest.relative_to(root)}"
+                )
+    return errors
+
+
+def main() -> int:
+    root = Path(sys.argv[1]).resolve() if len(sys.argv) > 1 else Path.cwd()
+    files = [root / "README.md"] + sorted((root / "docs").glob("*.md"))
+    files = [f for f in files if f.exists()]
+    if not files:
+        print("check_links: no markdown files found", file=sys.stderr)
+        return 1
+    errors = []
+    n_links = 0
+    for md in files:
+        n_links += len(LINK_RE.findall(md.read_text(encoding="utf-8")))
+        errors.extend(check_file(md, root))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"check_links: {len(files)} files, {n_links} links, {len(errors)} broken")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
