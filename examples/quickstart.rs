@@ -1,3 +1,17 @@
+// Shared lint config for non-lib targets (benches/tests/examples are
+// separate crates, so the crate-wide allows in rust/src/lib.rs do not
+// reach them): the same flat-layout indexing idiom applies here, and
+// vec! payloads deliberately mirror the engine's heap buffers.
+// Correctness lints stay on — CI denies all remaining warnings via
+// `cargo clippy --all-targets -- -D warnings`.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::manual_div_ceil,
+    clippy::uninlined_format_args,
+    clippy::useless_vec
+)]
+
 //! Quickstart: load the DMS-retrofitted model, generate a reasoning
 //! chain for one arithmetic problem, and print the efficiency stats.
 //!

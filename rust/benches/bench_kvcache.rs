@@ -1,9 +1,31 @@
+// Shared lint config for non-lib targets (benches/tests/examples are
+// separate crates, so the crate-wide allows in rust/src/lib.rs do not
+// reach them): the same flat-layout indexing idiom applies here, and
+// vec! payloads deliberately mirror the engine's heap buffers.
+// Correctness lints stay on — CI denies all remaining warnings via
+// `cargo clippy --all-targets -- -D warnings`.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::manual_div_ceil,
+    clippy::uninlined_format_args,
+    clippy::useless_vec
+)]
+
 //! KV-cache substrate micro-benchmarks: allocator ops, writes, forks,
 //! delayed-eviction sweeps, quantized-payload publish/restore costs —
 //! the L3 overhead that must stay far below the XLA step time.
+//!
+//! `--smoke` runs only the payload-format section with reduced
+//! iterations and emits the perf-regression JSON (`--out
+//! BENCH_kvcache.json`) CI diffs against `tools/bench_baselines/`.
+//! Gated metrics are the *deterministic* byte-accounting numbers
+//! (pooled bytes per cached token per dtype and the compression ratios
+//! vs f32); publish/restore latencies are machine-dependent info.
 
 use hyperscale::kvcache::{CacheStore, Geometry, KvDtype};
 use hyperscale::util::benchkit::bench;
+use hyperscale::util::{Args, Json};
 
 fn geom() -> Geometry {
     Geometry {
@@ -28,7 +50,26 @@ fn geom_hd64() -> Geometry {
 }
 
 fn main() {
+    let args = Args::from_env();
+    let smoke = args.flag("smoke");
     println!("# bench_kvcache");
+    if !smoke {
+        substrate_benches();
+    }
+    let (gated, info) = payload_format_benches(smoke);
+    if let Some(path) = args.get("out") {
+        let report = Json::obj()
+            .set("bench", "kvcache")
+            .set("schema", 1u64)
+            .set("smoke", smoke)
+            .set("gated", gated)
+            .set("info", info);
+        std::fs::write(path, report.to_string()).expect("write bench json");
+        println!("wrote {path}");
+    }
+}
+
+fn substrate_benches() {
     let g = geom();
 
     // alloc+write+evict cycle across all (l, h)
@@ -112,12 +153,18 @@ fn main() {
         c2.mask_slice().iter().sum::<f32>()
     });
     r.print();
+}
 
-    // ------------------------------------------------------------------
-    // Quantized pool payloads: host bytes per cached token, publish
-    // (quantize) + restore (dequant-on-upload) latency, and pool
-    // capacity at a fixed host-memory budget, per dtype.
-    // ------------------------------------------------------------------
+// ----------------------------------------------------------------------
+// Quantized pool payloads: host bytes per cached token, publish
+// (quantize) + restore (dequant-on-upload) latency, and pool capacity
+// at a fixed host-memory budget, per dtype. Returns (gated, info)
+// metric maps for the perf-regression JSON.
+// ----------------------------------------------------------------------
+fn payload_format_benches(smoke: bool) -> (Json, Json) {
+    let iters = if smoke { 20 } else { 100 };
+    let mut gated = Json::obj();
+    let mut info = Json::obj();
     for (label, g2) in [("hd16", geom()), ("hd64", geom_hd64())] {
         println!("\n# pool payload formats ({label})");
         let tokens = 4 * g2.page_size; // 4 full pages
@@ -138,11 +185,15 @@ fn main() {
             let n_pages = tokens / g2.page_size;
 
             // publish cost: snapshot + encode one page into the pool
-            let r = bench(&format!("publish_{dtype}_{label}"), 5, 100, || {
+            let r = bench(&format!("publish_{dtype}_{label}"), 5, iters, || {
                 let id = c.export_page(0, 0);
                 c.release_page(id);
             });
             r.print();
+            info = info.set(
+                &format!("kvcache.{label}.{dtype}.publish_ms"),
+                r.mean_s * 1e3,
+            );
 
             // bytes-per-cached-token accounting over retained pages
             let ids: Vec<_> = (0..n_pages).map(|p| c.export_page(0, p)).collect();
@@ -168,10 +219,23 @@ fn main() {
                     f32_per_token / per_token
                 );
             }
+            // byte accounting is a pure function of dtype/geometry —
+            // exactly reproducible, so it gates regressions in the
+            // payload codec layout
+            gated = gated.set(
+                &format!("kvcache.{label}.{dtype}.bytes_per_token"),
+                per_token,
+            );
+            if dtype != KvDtype::F32 {
+                gated = gated.set(
+                    &format!("kvcache.{label}.{dtype}.ratio_vs_f32"),
+                    f32_per_token / per_token,
+                );
+            }
 
             // restore cost: map retained pages into a clean lane and
             // materialize (the dequant-on-upload path)
-            let r = bench(&format!("restore_{dtype}_{label}"), 5, 100, || {
+            let r = bench(&format!("restore_{dtype}_{label}"), 5, iters, || {
                 for &id in &ids {
                     c.retain_page(id);
                 }
@@ -180,7 +244,12 @@ fn main() {
                 c.recycle_lane(1);
             });
             r.print();
+            info = info.set(
+                &format!("kvcache.{label}.{dtype}.restore_ms"),
+                r.mean_s * 1e3,
+            );
             println!("{dtype}: cumulative dequant-on-upload {:.1} us", c.dequant_us());
         }
     }
+    (gated, info)
 }

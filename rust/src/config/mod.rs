@@ -170,6 +170,88 @@ impl EngineConfig {
     }
 }
 
+/// How the cluster router picks a replica for an incoming request.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RoutingPolicy {
+    /// Score replicas by shadow-prefix-index hit length first (send a
+    /// repeated prompt to the replica whose cache already holds its
+    /// prefix), tie-broken by load. The default: on repeated-prefix
+    /// traffic it converts routing into prefix-cache hit rate.
+    #[default]
+    Prefix,
+    /// Pure load balancing: least (in-flight chains + queued chains),
+    /// ties to the lowest replica id.
+    LeastLoaded,
+    /// Cycle replica ids in arrival order, ignoring state entirely
+    /// (the affinity-blind baseline the bench compares against).
+    RoundRobin,
+}
+
+impl RoutingPolicy {
+    /// CLI/config spelling.
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutingPolicy::Prefix => "prefix",
+            RoutingPolicy::LeastLoaded => "least-loaded",
+            RoutingPolicy::RoundRobin => "round-robin",
+        }
+    }
+}
+
+impl std::str::FromStr for RoutingPolicy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "prefix" | "prefix-affinity" => RoutingPolicy::Prefix,
+            "least-loaded" | "least_loaded" => RoutingPolicy::LeastLoaded,
+            "round-robin" | "round_robin" | "rr" => RoutingPolicy::RoundRobin,
+            other => bail!(
+                "unknown routing policy '{other}' \
+                 (expected prefix, least-loaded, or round-robin)"
+            ),
+        })
+    }
+}
+
+/// Serving-cluster shape: how many engine replicas sit behind the
+/// router and how requests are assigned to them.
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterConfig {
+    /// Independent engine replicas, each with its own cache store,
+    /// page pool, and prefix index (`--replicas N`).
+    pub replicas: usize,
+    /// Admission scoring (`--routing prefix|least-loaded|round-robin`).
+    pub routing: RoutingPolicy,
+    /// Migrate queued (never installed) requests from hot replicas to
+    /// idle ones (`--no-steal` disables the fallback).
+    pub steal: bool,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            replicas: 1,
+            routing: RoutingPolicy::Prefix,
+            steal: true,
+        }
+    }
+}
+
+impl ClusterConfig {
+    /// Apply CLI overrides (`--replicas`, `--routing`, `--no-steal`).
+    pub fn with_args(mut self, args: &Args) -> Result<Self> {
+        self.replicas = args.get_usize("replicas", self.replicas)?.max(1);
+        if let Some(v) = args.get("routing") {
+            self.routing = v.parse()?;
+        }
+        if args.flag("no-steal") {
+            self.steal = false;
+        }
+        Ok(self)
+    }
+}
+
 /// One L-W-CR budget point (paper §5.1: sequence-length cap ×
 /// parallel width × compression ratio).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -264,6 +346,30 @@ mod tests {
         assert_eq!(cfg.artifacts, PathBuf::from("arts"));
         // everything else follows the serving defaults
         assert_eq!(cfg.batch, EngineConfig::default().batch);
+    }
+
+    #[test]
+    fn cluster_config_overrides_and_validation() {
+        let args = Args::parse(
+            "--replicas 4 --routing round-robin --no-steal"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let c = ClusterConfig::default().with_args(&args).unwrap();
+        assert_eq!(c.replicas, 4);
+        assert_eq!(c.routing, RoutingPolicy::RoundRobin);
+        assert!(!c.steal);
+        // defaults: single replica, prefix-affinity, stealing on
+        let c = ClusterConfig::default();
+        assert_eq!(c.replicas, 1);
+        assert_eq!(c.routing, RoutingPolicy::Prefix);
+        assert!(c.steal);
+        // replicas are clamped to at least one
+        let args = Args::parse("--replicas 0".split_whitespace().map(String::from));
+        assert_eq!(ClusterConfig::default().with_args(&args).unwrap().replicas, 1);
+        // unknown routing policy errors
+        let args = Args::parse("--routing zigzag".split_whitespace().map(String::from));
+        assert!(ClusterConfig::default().with_args(&args).is_err());
     }
 
     #[test]

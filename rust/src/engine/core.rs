@@ -84,6 +84,13 @@ impl Session {
     pub fn active_lanes(&self) -> usize {
         self.sched.active_lanes()
     }
+
+    /// Whole queued requests eligible for work-stealing handoff (no
+    /// chain installed, completed, or resumed) — the cluster router's
+    /// occupancy probe, alongside `queue_depth`/`active_lanes`.
+    pub fn stealable_requests(&self) -> usize {
+        self.sched.stealable_requests()
+    }
 }
 
 /// The inference engine: one executor batch + policy + metrics.
@@ -340,6 +347,29 @@ impl Engine {
     /// Whether the session has no running or queued chains.
     pub fn is_idle(&self, session: &Session) -> bool {
         !session.sched.has_work()
+    }
+
+    /// Work-stealing handoff: remove up to `max_requests` *queued*
+    /// requests from the session (only fresh ones — no chain
+    /// installed, completed, or carrying resume state; see
+    /// `Scheduler::drain_queued`) and return their tickets. Any
+    /// prefix-cache page references the drained chains held while
+    /// queued are released here — the stealing router re-submits the
+    /// request on another replica, whose own prefix index is consulted
+    /// from scratch. Installed chains are never migrated: their KV
+    /// state is resident in this engine's lane regions and pool.
+    pub fn drain_queued(&mut self, session: &mut Session, max_requests: usize) -> Vec<u64> {
+        let drained = session.sched.drain_queued(max_requests);
+        let mut tickets = Vec::with_capacity(drained.len());
+        for (ticket, chains) in drained {
+            for chain in chains {
+                for id in chain.prefix_pages {
+                    self.cache.release_page(id);
+                }
+            }
+            tickets.push(ticket);
+        }
+        tickets
     }
 
     /// Advance the session by one scheduler tick: admit (and possibly

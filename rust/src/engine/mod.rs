@@ -13,7 +13,10 @@
 //!   sampling);
 //! * `core` — the [`Engine`]: executors, weights, KV cache, and the
 //!   tick loop; plus the dynamic-admission [`Session`] API the server
-//!   uses to admit and retire concurrent requests mid-run.
+//!   uses to admit and retire concurrent requests mid-run;
+//! * [`sim`] — the same control plane over a deterministic fake model
+//!   (no PJRT artifacts needed): what cluster tests and the serve
+//!   smoke benches spin up as engine replicas.
 //!
 //! Prefill runs in C-token chunks; parallel-scaling requests (W > 1)
 //! prefill once and fork the prompt cache to sibling lanes
@@ -23,6 +26,7 @@
 
 pub mod batch;
 pub mod scheduler;
+pub mod sim;
 
 mod core;
 mod sampler;
@@ -30,6 +34,7 @@ mod sequence;
 mod voting;
 
 pub use self::core::{Engine, EngineStats, Session};
+pub use sim::{SimEngine, SimEngineConfig};
 pub use sampler::Sampler;
 pub use scheduler::{
     AdmissionPolicy, ChainState, CompletedRequest, PendingChain, Phase, ResumeState,

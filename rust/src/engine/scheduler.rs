@@ -468,6 +468,84 @@ impl Scheduler {
         Some(p)
     }
 
+    /// Tickets that can be handed to another scheduler wholesale,
+    /// youngest (most recently submitted) first: every chain of the
+    /// request still waits in the queue — none installed on a lane,
+    /// none completed, none carrying preemption resume state. Only
+    /// such *fresh* requests are migration-safe: they own no lane
+    /// cache state and no progress beyond the prefix-page references
+    /// the engine released on drain.
+    fn stealable_tickets(&self) -> Vec<u64> {
+        // steady-state fast path: the serving loop probes this after
+        // every tick, and with nothing queued there is nothing to
+        // steal — skip the allocating scans entirely.
+        if self.pending.is_empty() {
+            return Vec::new();
+        }
+        let on_lanes: BTreeSet<u64> =
+            self.lanes.iter().flatten().map(|c| c.ticket).collect();
+        let mut pend: BTreeMap<u64, (usize, bool)> = BTreeMap::new();
+        let mut order: Vec<u64> = Vec::new();
+        for p in &self.pending {
+            let e = pend.entry(p.ticket).or_insert((0, false));
+            if e.0 == 0 {
+                order.push(p.ticket);
+            }
+            e.0 += 1;
+            e.1 |= p.resume.is_some();
+        }
+        order.retain(|t| {
+            let (n, resumed) = pend[t];
+            !resumed
+                && !on_lanes.contains(t)
+                && self
+                    .requests
+                    .get(t)
+                    .map(|r| r.remaining == r.chains.len() && n == r.chains.len())
+                    .unwrap_or(false)
+        });
+        order.reverse(); // youngest first: longest expected wait
+        order
+    }
+
+    /// Number of whole requests currently eligible for
+    /// [`Scheduler::drain_queued`] — the router's steal-planning probe.
+    pub fn stealable_requests(&self) -> usize {
+        self.stealable_tickets().len()
+    }
+
+    /// Hand over up to `max_requests` *queued* requests (eligibility
+    /// as in `stealable_tickets`: installed, partially run, or
+    /// resumed chains are never migrated). The
+    /// youngest queued requests go first — they face the longest wait
+    /// here and the imminent admissions keep their FCFS turn. Each
+    /// entry is the ticket plus its chains in chain order; the request
+    /// book-keeping is dropped, so the caller re-submits wholesale on
+    /// the destination scheduler (timings restart there).
+    pub fn drain_queued(&mut self, max_requests: usize) -> Vec<(u64, Vec<PendingChain>)> {
+        let victims: Vec<u64> = self
+            .stealable_tickets()
+            .into_iter()
+            .take(max_requests)
+            .collect();
+        let mut out = Vec::with_capacity(victims.len());
+        for t in victims {
+            let mut chains: Vec<PendingChain> = Vec::new();
+            let mut i = 0;
+            while i < self.pending.len() {
+                if self.pending[i].ticket == t {
+                    chains.push(self.pending.remove(i).unwrap());
+                } else {
+                    i += 1;
+                }
+            }
+            chains.sort_by_key(|c| c.chain_idx);
+            self.requests.remove(&t);
+            out.push((t, chains));
+        }
+        out
+    }
+
     /// Record the request's first sampled token (TTFT), once.
     pub fn note_first_token(&mut self, ticket: u64) {
         if let Some(r) = self.requests.get_mut(&ticket) {

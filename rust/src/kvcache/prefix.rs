@@ -98,6 +98,43 @@ impl RadixPrefixIndex {
         PrefixHit { pages, tokens }
     }
 
+    /// Length in tokens of the longest indexed page-aligned prefix of
+    /// `ids`, under the same one-page-short cap as [`Self::lookup`] —
+    /// but **read-only**: no pool references are taken and LRU stamps
+    /// are left untouched, so callers (the cluster router scores
+    /// replica affinity with this) can probe as often as they like
+    /// without perturbing eviction order or reference counts.
+    pub fn best_hit_len(&self, ids: &[u32]) -> usize {
+        let ps = self.page_size;
+        if ids.is_empty() {
+            return 0;
+        }
+        let max_pages = (ids.len() - 1) / ps;
+        let mut pages = 0usize;
+        let mut edges = &self.roots[..];
+        let mut rest = ids;
+        'walk: while pages < max_pages && rest.len() >= ps {
+            let Some(edge) = edges.iter().find(|e| e.label[..ps] == rest[..ps]) else {
+                break;
+            };
+            let mut m = 0usize;
+            while m < edge.pages.len()
+                && pages < max_pages
+                && (m + 1) * ps <= rest.len()
+                && edge.label[m * ps..(m + 1) * ps] == rest[m * ps..(m + 1) * ps]
+            {
+                pages += 1;
+                m += 1;
+            }
+            if m < edge.pages.len() {
+                break 'walk; // diverged (or capped) mid-edge
+            }
+            rest = &rest[m * ps..];
+            edges = &edge.children[..];
+        }
+        pages * ps
+    }
+
     /// Index the page-aligned prefix `ids` (its length must be a
     /// multiple of `page_size`). For every page not already present,
     /// `provide(page_index)` is called with the slot-space page number
@@ -399,6 +436,41 @@ mod tests {
         assert_eq!(all.len(), n);
         assert_eq!(idx.pages_retained(), 0);
         assert_eq!(idx.lookup(&[1, 1, 2, 2, 3]).tokens, 0);
+    }
+
+    #[test]
+    fn best_hit_len_matches_lookup_without_side_effects() {
+        let mut idx = RadixPrefixIndex::new(2);
+        let p = Prov::new();
+        idx.insert(&[1, 1, 2, 2, 3, 3], p.f()); // 3 pages
+        idx.insert(&[1, 1, 2, 2, 9, 9], p.f()); // splits, 4th page
+        for ids in [
+            vec![1u32, 1, 2, 2, 3, 3, 7],
+            vec![1, 1, 2, 2, 9, 9, 7],
+            vec![1, 1, 2, 2],
+            vec![1, 1],
+            vec![9, 9, 9],
+            vec![],
+        ] {
+            let probe = idx.best_hit_len(&ids);
+            let hit = idx.lookup(&ids);
+            assert_eq!(probe, hit.tokens, "probe/lookup disagree on {ids:?}");
+        }
+        // probing never retains or drops pages
+        assert_eq!(idx.pages_retained(), 4);
+        assert_eq!(idx.recount(), 4);
+    }
+
+    #[test]
+    fn best_hit_len_does_not_refresh_lru() {
+        let mut idx = RadixPrefixIndex::new(2);
+        let p = Prov::new();
+        idx.insert(&[1, 1, 2, 2], p.f()); // 1000, 1001 (older)
+        idx.insert(&[7, 7, 8, 8], p.f()); // 1002, 1003
+        // a read-only probe of the older prefix must NOT protect it
+        assert_eq!(idx.best_hit_len(&[1, 1, 2, 2, 3]), 4);
+        let dropped = idx.trim(2);
+        assert_eq!(dropped, vec![1000, 1001], "probe refreshed the LRU stamp");
     }
 
     #[test]

@@ -124,6 +124,19 @@ impl KvDtype {
         }
     }
 
+    /// Default dtype taken from the `KV_DTYPE` environment variable
+    /// (`f32` when unset or unparsable). This is the **test harness**
+    /// knob: CI runs the tier-1 suite a second time with `KV_DTYPE=q8`
+    /// so every store-lifecycle test also exercises the quantized
+    /// publish/restore paths. Production configuration goes through
+    /// `--kv-dtype` / `EngineConfig::kv_dtype`, never this.
+    pub fn from_env() -> Self {
+        std::env::var("KV_DTYPE")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(KvDtype::F32)
+    }
+
     /// Host bytes one stored row of `row_len` elements occupies,
     /// including per-row scale/zero-point metadata for the quantized
     /// formats. This is the number the `kv.bytes_per_token` gauge and

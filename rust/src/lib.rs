@@ -22,7 +22,8 @@
 //!   (App. E margin integrals);
 //! * [`analysis`] — App. G analytical latency model (Fig. 7);
 //! * [`experiments`] — one driver per paper figure/table;
-//! * [`server`]   — TCP line-JSON serving front end;
+//! * [`server`]   — TCP line-JSON serving front end: single engine or
+//!   a multi-replica cluster behind a prefix-aware router;
 //! * [`tasks`], [`tokenizer`] — synthetic benchmark suite, mirrored
 //!   byte-for-byte with `python/compile/tasks.py`.
 

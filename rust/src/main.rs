@@ -12,7 +12,7 @@
 use std::path::PathBuf;
 
 use hyperscale::compress::PolicyKind;
-use hyperscale::config::EngineConfig;
+use hyperscale::config::{ClusterConfig, EngineConfig};
 use hyperscale::engine::{Engine, GenRequest};
 use hyperscale::experiments as exp;
 use hyperscale::util::{log, Args};
@@ -38,6 +38,8 @@ fn usage() -> &'static str {
        exp      fig1|fig3|fig4|fig5|fig6|fig7|table1|table2|table7|quant\n\
                 [--n N] [--full]\n\
        serve    [--addr 127.0.0.1:7333] [--no-prefix-cache] [--prefix-pages N]\n\
+                [--replicas N] [--routing prefix|least-loaded|round-robin]\n\
+                [--no-steal]\n\
        inspect  | selftest"
 }
 
@@ -53,7 +55,13 @@ fn dispatch(args: &Args) -> Result<()> {
         "exp" => cmd_exp(args),
         "serve" => {
             let cfg = engine_cfg(args)?;
-            hyperscale::server::serve(cfg, args.get_str("addr", "127.0.0.1:7333"))
+            let ccfg = ClusterConfig::default().with_args(args)?;
+            let addr = args.get_str("addr", "127.0.0.1:7333");
+            if ccfg.replicas > 1 {
+                hyperscale::server::serve_cluster(cfg, ccfg, addr)
+            } else {
+                hyperscale::server::serve(cfg, addr)
+            }
         }
         "inspect" => cmd_inspect(args),
         "selftest" => cmd_selftest(args),

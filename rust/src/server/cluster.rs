@@ -1,0 +1,746 @@
+//! Multi-replica engine cluster: N independent engines behind the
+//! prefix-aware [`Router`], with a work-stealing fallback.
+//!
+//! ## Topology
+//!
+//! ```text
+//!   clients (TCP, line-JSON)
+//!        │  spawn_acceptor / Cluster::call
+//!        ▼
+//!   router thread ──────────────── owns Router (shadow prefix
+//!        │      ▲                  indexes, load table) + cluster
+//!        │      │ Status /         metrics registry
+//!        │      │ Requeue
+//!        ▼      │
+//!   replica threads 0..N ───────── each owns ONE Backend: an engine
+//!                                  with its own CacheStore, PagePool,
+//!                                  and radix prefix index
+//! ```
+//!
+//! **Replicas own their state outright.** A replica is a full engine:
+//! its page pool, refcounts, and prefix index are single-threaded and
+//! never shared across replicas — page handles are meaningless outside
+//! the pool that minted them, and the PJRT state of a real engine is
+//! not even `Send`. Sharding whole engines (rather than sharing one
+//! cache) is what lets the cluster scale admission capacity linearly
+//! while keeping every PR-2/PR-3 invariant (COW, requantize-once,
+//! refcount balance) local to one thread. The price is that a prefix
+//! cached on replica 2 is invisible to replica 3 — which is exactly
+//! why routing is prefix-aware: the router's job is to make repeated
+//! prefixes *land where their pages already are*.
+//!
+//! **Steal only what never ran.** The work-stealing fallback migrates
+//! *queued* requests only — every chain still waiting, none installed
+//! on a lane, none completed, none carrying preemption resume state
+//! (`Scheduler::drain_queued` enforces this). An installed chain has
+//! KV state resident in its replica's lane regions and pool; migrating
+//! it would mean exporting pages across pools or recomputing silently.
+//! A queued fresh request owns nothing but prefix-page references,
+//! which the drain releases — so a steal is semantically a re-submit,
+//! and the destination replica serves it bit-identically (streams are
+//! a pure function of seed/prompt, never of the serving replica).
+//! Timing fields restart on the destination (`queue_ms` measures the
+//! queue it actually ran from).
+//!
+//! ## Message flow
+//!
+//! Replica threads report occupancy ([`ReplicaLoad`]) to the router
+//! after any tick that changed it (and right before blocking idle).
+//! The router scores admissions with those snapshots plus optimistic
+//! in-flight bumps (a routed request raises the target's load
+//! immediately, so bursts don't dogpile one replica between status
+//! updates). When a status update shows one replica idle while another
+//! has stealable queued requests, the router plans a steal
+//! ([`Router::steal_plan`]), the donor drains and hands the requests
+//! back (a `Requeue` message), and the router forwards them to the
+//! planned idle replica, migrating their shadow-prefix affinity with
+//! them.
+
+use std::collections::HashMap;
+use std::net::TcpListener;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{ClusterConfig, EngineConfig};
+use crate::engine::{CompletedRequest, Engine, GenRequest, Session, SimEngine};
+use crate::metrics::Registry;
+use crate::util::Json;
+
+use super::protocol::{render_response, ServeRequest, ServeResponse};
+use super::router::{ReplicaLoad, Router};
+use super::{response_from, Dispatch};
+
+/// What the cluster needs from an engine replica. Implemented by
+/// [`EngineBackend`] (the real PJRT engine) and by
+/// [`SimEngine`](crate::engine::SimEngine) (deterministic fake model —
+/// what tests and the smoke benches run, since real engines need AOT
+/// artifacts). Backends are constructed *inside* their replica thread
+/// (the real engine's PJRT state is not `Send`), so the cluster takes
+/// a factory, not instances.
+pub trait Backend {
+    /// Tokenize, validate, and enqueue a request; returns its ticket.
+    fn submit(&mut self, req: &GenRequest) -> Result<u64>;
+    /// Advance one scheduler tick; returns finished requests.
+    fn tick(&mut self) -> Result<Vec<CompletedRequest>>;
+    /// Nothing running or queued.
+    fn is_idle(&self) -> bool;
+    /// Chains waiting for a lane.
+    fn queue_depth(&self) -> usize;
+    /// Lanes currently running a chain.
+    fn active_lanes(&self) -> usize;
+    /// Whole queued requests eligible for steal handoff.
+    fn stealable_requests(&self) -> usize;
+    /// Remove up to `max` fresh queued requests (releasing any prefix
+    /// references they held); returns their tickets.
+    fn drain_queued(&mut self, max: usize) -> Vec<u64>;
+    /// Pool payload dtype name, echoed in responses.
+    fn kv_dtype_name(&self) -> &'static str;
+    /// Metrics snapshot for the stats endpoint.
+    fn metrics_report(&self) -> String;
+}
+
+/// The real engine behind the [`Backend`] trait: an [`Engine`] plus
+/// its dynamic-admission [`Session`].
+pub struct EngineBackend {
+    engine: Engine,
+    session: Session,
+}
+
+impl EngineBackend {
+    /// Open artifacts and start a serving session (one per replica).
+    pub fn new(cfg: EngineConfig) -> Result<Self> {
+        let engine = Engine::new(cfg)?;
+        let session = engine.begin_session();
+        Ok(Self { engine, session })
+    }
+}
+
+impl Backend for EngineBackend {
+    fn submit(&mut self, req: &GenRequest) -> Result<u64> {
+        self.engine.submit(&mut self.session, req)
+    }
+    fn tick(&mut self) -> Result<Vec<CompletedRequest>> {
+        self.engine.tick(&mut self.session)
+    }
+    fn is_idle(&self) -> bool {
+        self.engine.is_idle(&self.session)
+    }
+    fn queue_depth(&self) -> usize {
+        self.session.queue_depth()
+    }
+    fn active_lanes(&self) -> usize {
+        self.session.active_lanes()
+    }
+    fn stealable_requests(&self) -> usize {
+        self.session.stealable_requests()
+    }
+    fn drain_queued(&mut self, max: usize) -> Vec<u64> {
+        self.engine.drain_queued(&mut self.session, max)
+    }
+    fn kv_dtype_name(&self) -> &'static str {
+        self.engine.cfg.kv_dtype.name()
+    }
+    fn metrics_report(&self) -> String {
+        self.engine.metrics.report()
+    }
+}
+
+impl Backend for SimEngine {
+    fn submit(&mut self, req: &GenRequest) -> Result<u64> {
+        SimEngine::submit(self, req)
+    }
+    fn tick(&mut self) -> Result<Vec<CompletedRequest>> {
+        SimEngine::tick(self)
+    }
+    fn is_idle(&self) -> bool {
+        SimEngine::is_idle(self)
+    }
+    fn queue_depth(&self) -> usize {
+        SimEngine::queue_depth(self)
+    }
+    fn active_lanes(&self) -> usize {
+        SimEngine::active_lanes(self)
+    }
+    fn stealable_requests(&self) -> usize {
+        SimEngine::stealable_requests(self)
+    }
+    fn drain_queued(&mut self, max: usize) -> Vec<u64> {
+        SimEngine::drain_queued(self, max)
+    }
+    fn kv_dtype_name(&self) -> &'static str {
+        self.cfg.kv_dtype.name()
+    }
+    fn metrics_report(&self) -> String {
+        self.metrics.report()
+    }
+}
+
+/// Router-thread inbox.
+enum RouterMsg {
+    /// A client request to route and forward.
+    Client(ServeRequest, mpsc::Sender<String>),
+    /// A stolen (drained) request handed back for re-routing; `to` is
+    /// the idle replica the steal plan targeted (echoed by the donor).
+    Requeue {
+        to: usize,
+        req: ServeRequest,
+        reply: mpsc::Sender<String>,
+    },
+    /// A replica's occupancy snapshot.
+    Status { replica: usize, load: ReplicaLoad },
+    /// A replica died (engine construction or tick error).
+    Dead { replica: usize },
+    /// Aggregate stats request.
+    Stats(mpsc::Sender<String>),
+    Shutdown,
+}
+
+/// Replica-thread inbox.
+enum ReplicaMsg {
+    Request(ServeRequest, mpsc::Sender<String>),
+    /// Drain up to `max` queued requests and requeue them via the
+    /// router, targeted at idle replica `to`.
+    Steal { max: usize, to: usize },
+    /// Per-replica stats block.
+    Stats(mpsc::Sender<String>),
+    Shutdown,
+}
+
+fn gen_of(req: &ServeRequest) -> GenRequest {
+    GenRequest {
+        prompt: req.prompt.clone(),
+        width: req.width,
+        max_len: req.max_len,
+        temperature: req.temperature,
+        seed: req.seed,
+    }
+}
+
+/// A running engine cluster. Created by [`Cluster::start`]; clients
+/// enter through [`Cluster::call`] (tests/benches) or the TCP
+/// acceptor ([`serve_cluster`]).
+pub struct Cluster {
+    tx: mpsc::Sender<RouterMsg>,
+    router_thread: Option<JoinHandle<()>>,
+    replica_threads: Vec<JoinHandle<()>>,
+}
+
+impl Cluster {
+    /// Spawn `ccfg.replicas` replica threads (each building its own
+    /// backend via `factory`, which runs *inside* the thread) plus the
+    /// router thread.
+    pub fn start<B, F>(ccfg: ClusterConfig, factory: F) -> Self
+    where
+        B: Backend + 'static,
+        F: Fn(usize) -> Result<B> + Clone + Send + 'static,
+    {
+        let n = ccfg.replicas.max(1);
+        let (rtx, rrx) = mpsc::channel::<RouterMsg>();
+        let mut replica_txs = Vec::with_capacity(n);
+        let mut replica_threads = Vec::with_capacity(n);
+        for i in 0..n {
+            let (tx, rx) = mpsc::channel::<ReplicaMsg>();
+            replica_txs.push(tx);
+            let router = rtx.clone();
+            let factory = factory.clone();
+            replica_threads.push(std::thread::spawn(move || {
+                match factory(i) {
+                    Ok(backend) => replica_loop(i, backend, rx, router),
+                    Err(e) => {
+                        crate::warn_log!("replica {i} failed to start: {e:#}");
+                        let _ = router.send(RouterMsg::Dead { replica: i });
+                        // answer anything already routed here with errors
+                        for msg in rx.iter() {
+                            match msg {
+                                ReplicaMsg::Request(req, reply) => {
+                                    let resp = ServeResponse::error(
+                                        req.id,
+                                        &format!("replica {i} unavailable: {e:#}"),
+                                    );
+                                    let _ = reply.send(render_response(&resp));
+                                }
+                                ReplicaMsg::Stats(reply) => {
+                                    let _ = reply.send(
+                                        Json::obj()
+                                            .set("replica", i as u64)
+                                            .set("dead", true)
+                                            .to_string(),
+                                    );
+                                }
+                                ReplicaMsg::Steal { .. } => {}
+                                ReplicaMsg::Shutdown => break,
+                            }
+                        }
+                    }
+                }
+            }));
+        }
+        let router = Router::new(n, ccfg.routing);
+        let router_thread = std::thread::spawn(move || {
+            router_loop(router, ccfg, replica_txs, rrx);
+        });
+        Self {
+            tx: rtx,
+            router_thread: Some(router_thread),
+            replica_threads,
+        }
+    }
+
+    /// Submit one request; the reply channel yields the rendered
+    /// response line.
+    pub fn call(&self, req: ServeRequest) -> mpsc::Receiver<String> {
+        let (rtx, rrx) = mpsc::channel();
+        let _ = self.tx.send(RouterMsg::Client(req, rtx));
+        rrx
+    }
+
+    /// Submit one request and block for its parsed response.
+    pub fn call_blocking(&self, req: ServeRequest) -> Result<Json> {
+        let line = self
+            .call(req)
+            .recv()
+            .map_err(|_| anyhow!("cluster dropped the request"))?;
+        Json::parse(&line)
+    }
+
+    /// Aggregate cluster stats (cluster.* metrics + per-replica
+    /// blocks), parsed.
+    pub fn stats(&self) -> Result<Json> {
+        let (rtx, rrx) = mpsc::channel();
+        let _ = self.tx.send(RouterMsg::Stats(rtx));
+        let line = rrx
+            .recv()
+            .map_err(|_| anyhow!("cluster dropped the stats request"))?;
+        Json::parse(&line)
+    }
+
+    /// Dispatch handle for the TCP acceptor.
+    fn dispatch(&self) -> ClusterDispatch {
+        ClusterDispatch(self.tx.clone())
+    }
+
+    /// Ask every thread to stop and join them.
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(RouterMsg::Shutdown);
+        self.join();
+    }
+
+    /// Block until the cluster stops (a shutdown command arrived).
+    pub fn wait(mut self) {
+        self.join();
+    }
+
+    fn join(&mut self) {
+        if let Some(h) = self.router_thread.take() {
+            let _ = h.join();
+        }
+        for h in self.replica_threads.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Acceptor → router bridge.
+#[derive(Clone)]
+struct ClusterDispatch(mpsc::Sender<RouterMsg>);
+
+impl Dispatch for ClusterDispatch {
+    fn request(&self, req: ServeRequest, reply: mpsc::Sender<String>) {
+        let _ = self.0.send(RouterMsg::Client(req, reply));
+    }
+    fn stats(&self, reply: mpsc::Sender<String>) {
+        let _ = self.0.send(RouterMsg::Stats(reply));
+    }
+    fn shutdown(&self) {
+        let _ = self.0.send(RouterMsg::Shutdown);
+    }
+}
+
+/// Serve the line-JSON protocol from an engine cluster until a
+/// shutdown command arrives. Every replica loads the same
+/// `EngineConfig` (its own executors, cache, and prefix index).
+pub fn serve_cluster(cfg: EngineConfig, ccfg: ClusterConfig, addr: &str) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    crate::info!(
+        "serving on {addr} with {} replicas ({} routing)",
+        ccfg.replicas,
+        ccfg.routing.name()
+    );
+    let cluster = Cluster::start(ccfg, move |_i| EngineBackend::new(cfg.clone()));
+    let acceptor = super::spawn_acceptor(listener, cluster.dispatch());
+    cluster.wait();
+    drop(acceptor);
+    Ok(())
+}
+
+// ----------------------------------------------------------------------
+// Replica thread
+// ----------------------------------------------------------------------
+
+fn replica_loop<B: Backend>(
+    replica: usize,
+    mut backend: B,
+    rx: mpsc::Receiver<ReplicaMsg>,
+    router: mpsc::Sender<RouterMsg>,
+) {
+    let mut inflight: HashMap<u64, (ServeRequest, mpsc::Sender<String>)> = HashMap::new();
+    let mut last_load: Option<ReplicaLoad> = None;
+    let mut shutdown = false;
+
+    // occupancy snapshot; sent only when it changed (ticks are cheap
+    // and frequent — unconditional sends would flood the router)
+    macro_rules! send_status {
+        () => {{
+            let load = ReplicaLoad {
+                queue_depth: backend.queue_depth(),
+                active_lanes: backend.active_lanes(),
+                inflight: inflight.len(),
+                stealable: backend.stealable_requests(),
+            };
+            if last_load != Some(load) {
+                last_load = Some(load);
+                let _ = router.send(RouterMsg::Status { replica, load });
+            }
+        }};
+    }
+
+    while !shutdown {
+        if backend.is_idle() && inflight.is_empty() {
+            send_status!(); // idle: make the replica a steal target
+            match rx.recv() {
+                Ok(msg) => {
+                    if handle_replica_msg(
+                        replica, &mut backend, &mut inflight, &router, msg,
+                    ) {
+                        break;
+                    }
+                }
+                Err(_) => break,
+            }
+        }
+        loop {
+            match rx.try_recv() {
+                Ok(msg) => {
+                    if handle_replica_msg(
+                        replica, &mut backend, &mut inflight, &router, msg,
+                    ) {
+                        shutdown = true;
+                        break;
+                    }
+                }
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    shutdown = true;
+                    break;
+                }
+            }
+        }
+        if shutdown {
+            break;
+        }
+        match backend.tick() {
+            Ok(completed) => {
+                for done in completed {
+                    if let Some((req, reply)) = inflight.remove(&done.ticket) {
+                        let resp =
+                            response_from(&req, &done, backend.kv_dtype_name(), replica);
+                        let _ = reply.send(render_response(&resp));
+                    }
+                }
+            }
+            Err(e) => {
+                // a replica failure downs this replica, not the cluster
+                crate::warn_log!("replica {replica} engine error: {e:#}");
+                for (_, (req, reply)) in inflight.drain() {
+                    let resp = ServeResponse::error(req.id, &format!("{e:#}"));
+                    let _ = reply.send(render_response(&resp));
+                }
+                let _ = router.send(RouterMsg::Dead { replica });
+                return;
+            }
+        }
+        send_status!();
+    }
+    // shutdown: in-flight requests are answered, not dropped
+    for (_, (req, reply)) in inflight.drain() {
+        let resp = ServeResponse::error(req.id, "server shutting down");
+        let _ = reply.send(render_response(&resp));
+    }
+}
+
+/// Handle one replica-inbox message; returns true on shutdown.
+fn handle_replica_msg<B: Backend>(
+    replica: usize,
+    backend: &mut B,
+    inflight: &mut HashMap<u64, (ServeRequest, mpsc::Sender<String>)>,
+    router: &mpsc::Sender<RouterMsg>,
+    msg: ReplicaMsg,
+) -> bool {
+    match msg {
+        ReplicaMsg::Request(req, reply) => {
+            match backend.submit(&gen_of(&req)) {
+                Ok(ticket) => {
+                    inflight.insert(ticket, (req, reply));
+                }
+                Err(e) => {
+                    let resp = ServeResponse::error(req.id, &format!("{e:#}"));
+                    let _ = reply.send(render_response(&resp));
+                }
+            }
+            false
+        }
+        ReplicaMsg::Steal { max, to } => {
+            for ticket in backend.drain_queued(max) {
+                if let Some((req, reply)) = inflight.remove(&ticket) {
+                    let _ = router.send(RouterMsg::Requeue { to, req, reply });
+                }
+            }
+            false
+        }
+        ReplicaMsg::Stats(reply) => {
+            let _ = reply.send(
+                Json::obj()
+                    .set("replica", replica as u64)
+                    .set("active_lanes", backend.active_lanes())
+                    .set("queue_depth", backend.queue_depth())
+                    .set("inflight", inflight.len())
+                    .set("kv_dtype", backend.kv_dtype_name())
+                    .set("metrics", backend.metrics_report())
+                    .to_string(),
+            );
+            false
+        }
+        ReplicaMsg::Shutdown => true,
+    }
+}
+
+// ----------------------------------------------------------------------
+// Router thread
+// ----------------------------------------------------------------------
+
+fn router_loop(
+    mut router: Router,
+    ccfg: ClusterConfig,
+    replicas: Vec<mpsc::Sender<ReplicaMsg>>,
+    rx: mpsc::Receiver<RouterMsg>,
+) {
+    let n = replicas.len();
+    let mut loads = vec![ReplicaLoad::default(); n];
+    let mut dead = vec![false; n];
+    let mut metrics = Registry::default();
+    metrics.gauge("cluster.replicas").set(n as f64);
+
+    // deliver a request to `replica`, bumping its load optimistically
+    // so routing between status updates sees the pressure
+    let deliver = |replica: usize,
+                   req: ServeRequest,
+                   reply: mpsc::Sender<String>,
+                   loads: &mut [ReplicaLoad],
+                   metrics: &mut Registry| {
+        loads[replica].inflight += 1;
+        loads[replica].queue_depth += req.width.max(1);
+        loads[replica].stealable += 1;
+        metrics.counter(&format!("cluster.routed.{replica}")).inc();
+        let _ = replicas[replica].send(ReplicaMsg::Request(req, reply));
+    };
+
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            RouterMsg::Client(req, reply) => {
+                metrics.counter("cluster.requests").inc();
+                let d = router.route(&req.prompt, &loads);
+                // a dead replica cannot serve; degrade to any live one
+                let target = if dead[d.replica] {
+                    match (0..n).find(|&i| !dead[i]) {
+                        Some(t) => t,
+                        None => {
+                            let resp =
+                                ServeResponse::error(req.id, "all replicas down");
+                            let _ = reply.send(render_response(&resp));
+                            continue;
+                        }
+                    }
+                } else {
+                    d.replica
+                };
+                if d.shadow_hit > 0 && target == d.replica {
+                    metrics.counter("cluster.affinity_routed").inc();
+                    metrics
+                        .counter("cluster.shadow_hit_bytes")
+                        .add(d.shadow_hit as f64);
+                }
+                router.note_routed(target, &req.prompt);
+                deliver(target, req, reply, &mut loads, &mut metrics);
+            }
+            RouterMsg::Requeue { to, req, reply } => {
+                metrics.counter("cluster.stolen_requests").inc();
+                // land on the planned idle replica; affinity migrates
+                // with the request (note_routed on the target). If the
+                // planned target died meanwhile, fall back to routing —
+                // and never deliver to a dead replica: a dropped send
+                // would leave the client waiting forever.
+                let mut target = if dead[to] {
+                    router.route(&req.prompt, &loads).replica
+                } else {
+                    to
+                };
+                if dead[target] {
+                    match (0..n).find(|&i| !dead[i]) {
+                        Some(t) => target = t,
+                        None => {
+                            let resp =
+                                ServeResponse::error(req.id, "all replicas down");
+                            let _ = reply.send(render_response(&resp));
+                            continue;
+                        }
+                    }
+                }
+                router.note_routed(target, &req.prompt);
+                deliver(target, req, reply, &mut loads, &mut metrics);
+            }
+            RouterMsg::Status { replica, load } => {
+                loads[replica] = load;
+                metrics
+                    .gauge("cluster.queue_depth")
+                    .set(loads.iter().map(|l| l.queue_depth).sum::<usize>() as f64);
+                metrics
+                    .gauge("cluster.active_lanes")
+                    .set(loads.iter().map(|l| l.active_lanes).sum::<usize>() as f64);
+                metrics
+                    .gauge("cluster.inflight")
+                    .set(loads.iter().map(|l| l.inflight).sum::<usize>() as f64);
+                if ccfg.steal {
+                    // dead replicas must never look idle to the planner
+                    let mut view = loads.clone();
+                    for (i, v) in view.iter_mut().enumerate() {
+                        if dead[i] {
+                            v.stealable = 0;
+                            v.active_lanes = 1;
+                        }
+                    }
+                    if let Some(plan) = router.steal_plan(&view) {
+                        metrics.counter("cluster.steal_ops").inc();
+                        // optimistic: don't re-plan this donor until a
+                        // fresh (post-drain) status arrives; a spurious
+                        // duplicate steal is a harmless no-op drain
+                        loads[plan.from].stealable = 0;
+                        let _ = replicas[plan.from].send(ReplicaMsg::Steal {
+                            max: plan.max_requests,
+                            to: plan.to,
+                        });
+                    }
+                }
+            }
+            RouterMsg::Dead { replica } => {
+                dead[replica] = true;
+                metrics.counter("cluster.replicas_dead").inc();
+            }
+            RouterMsg::Stats(reply) => {
+                let mut blocks: Vec<Json> = Vec::new();
+                for (i, tx) in replicas.iter().enumerate() {
+                    if dead[i] {
+                        blocks.push(
+                            Json::obj().set("replica", i as u64).set("dead", true),
+                        );
+                        continue;
+                    }
+                    let (rtx, rrx) = mpsc::channel();
+                    if tx.send(ReplicaMsg::Stats(rtx)).is_err() {
+                        continue;
+                    }
+                    if let Ok(s) = rrx.recv_timeout(Duration::from_secs(5)) {
+                        if let Ok(j) = Json::parse(&s) {
+                            blocks.push(j);
+                        }
+                    }
+                }
+                let _ = reply.send(
+                    Json::obj()
+                        .set("replicas", n as u64)
+                        .set("routing", ccfg.routing.name())
+                        .set("cluster_metrics", metrics.report())
+                        .set("replica_stats", Json::Arr(blocks))
+                        .to_string(),
+                );
+            }
+            RouterMsg::Shutdown => break,
+        }
+    }
+    for tx in &replicas {
+        let _ = tx.send(ReplicaMsg::Shutdown);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RoutingPolicy;
+    use crate::engine::SimEngineConfig;
+
+    fn sreq(id: u64, prompt: &str, seed: u64) -> ServeRequest {
+        ServeRequest {
+            id,
+            prompt: prompt.into(),
+            width: 1,
+            max_len: 96,
+            temperature: 0.7,
+            seed,
+        }
+    }
+
+    #[test]
+    fn cluster_serves_and_shuts_down() {
+        let ccfg = ClusterConfig {
+            replicas: 2,
+            routing: RoutingPolicy::LeastLoaded,
+            steal: true,
+        };
+        let cluster =
+            Cluster::start(ccfg, |_| Ok(SimEngine::new(SimEngineConfig::default())));
+        for i in 0..6u64 {
+            let j = cluster
+                .call_blocking(sreq(i, "Q:1+2=?|T:", i))
+                .expect("response");
+            assert_eq!(j.get("id").unwrap().as_usize(), Some(i as usize));
+            assert!(j.get("error").is_none(), "unexpected error: {j:?}");
+            assert!(j.get("replica_id").unwrap().as_usize().unwrap() < 2);
+        }
+        let stats = cluster.stats().expect("stats");
+        assert_eq!(stats.get("replicas").unwrap().as_usize(), Some(2));
+        let m = stats.get("cluster_metrics").unwrap().as_str().unwrap();
+        assert!(m.contains("cluster.requests"));
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn oversized_request_gets_an_error_reply() {
+        let ccfg = ClusterConfig {
+            replicas: 1,
+            ..Default::default()
+        };
+        let cluster =
+            Cluster::start(ccfg, |_| Ok(SimEngine::new(SimEngineConfig::default())));
+        let mut req = sreq(9, "fine", 0);
+        req.max_len = 100_000; // exceeds slot capacity
+        let j = cluster.call_blocking(req).expect("reply");
+        assert!(j.get("error").is_some());
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn dead_replica_factory_degrades_to_errors_not_hangs() {
+        let ccfg = ClusterConfig {
+            replicas: 1,
+            ..Default::default()
+        };
+        let cluster = Cluster::start(ccfg, |_| -> Result<SimEngine> {
+            Err(anyhow!("no artifacts"))
+        });
+        let j = cluster.call_blocking(sreq(1, "hi", 0)).expect("reply");
+        assert!(j.get("error").is_some());
+        cluster.shutdown();
+    }
+}

@@ -21,8 +21,17 @@
 //! its last chain retires. Requests from concurrent connections
 //! therefore overlap arbitrarily; responses carry the echoed `id` plus
 //! queueing/TTFT timings so clients can attribute latency.
+//!
+//! With `--replicas N` (N > 1) the same protocol is served by an
+//! **engine cluster** instead: N independent engine replicas behind a
+//! prefix-aware router with a work-stealing fallback — see [`cluster`]
+//! and [`router`]. Responses then carry the serving `replica_id`, and
+//! `{"cmd": "stats"}` reports `cluster.*` metrics plus per-replica
+//! `serve.*` blocks.
 
+pub mod cluster;
 pub mod protocol;
+pub mod router;
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
@@ -35,12 +44,40 @@ use crate::config::EngineConfig;
 use crate::engine::{majority_vote, CompletedRequest, Engine, GenRequest, Session};
 use crate::util::Json;
 
+pub use cluster::{serve_cluster, Backend, Cluster, EngineBackend};
 pub use protocol::{parse_request, render_response, ServeRequest, ServeResponse};
+pub use router::{ReplicaLoad, RouteDecision, Router, StealPlan};
 
 enum Msg {
     Request(ServeRequest, mpsc::Sender<String>),
     Stats(mpsc::Sender<String>),
     Shutdown,
+}
+
+/// How the client-facing acceptor hands parsed protocol events to a
+/// serving back end. Implemented by the single-engine loop below and
+/// by the cluster router ([`cluster`]), so both share one
+/// line-JSON client handler.
+pub(crate) trait Dispatch: Clone + Send + 'static {
+    fn request(&self, req: ServeRequest, reply: mpsc::Sender<String>);
+    fn stats(&self, reply: mpsc::Sender<String>);
+    fn shutdown(&self);
+}
+
+/// Single-engine dispatch: everything funnels into the engine thread.
+#[derive(Clone)]
+struct EngineDispatch(mpsc::Sender<Msg>);
+
+impl Dispatch for EngineDispatch {
+    fn request(&self, req: ServeRequest, reply: mpsc::Sender<String>) {
+        let _ = self.0.send(Msg::Request(req, reply));
+    }
+    fn stats(&self, reply: mpsc::Sender<String>) {
+        let _ = self.0.send(Msg::Stats(reply));
+    }
+    fn shutdown(&self) {
+        let _ = self.0.send(Msg::Shutdown);
+    }
 }
 
 /// A request admitted to the engine, waiting for its completion.
@@ -57,16 +94,7 @@ pub fn serve(cfg: EngineConfig, addr: &str) -> Result<()> {
     let (tx, rx) = mpsc::channel::<Msg>();
 
     // acceptor thread: parses lines, forwards to the engine thread
-    let atx = tx.clone();
-    let acceptor = std::thread::spawn(move || {
-        for stream in listener.incoming() {
-            let Ok(stream) = stream else { continue };
-            let tx = atx.clone();
-            std::thread::spawn(move || {
-                let _ = handle_client(stream, tx);
-            });
-        }
-    });
+    let acceptor = spawn_acceptor(listener, EngineDispatch(tx.clone()));
 
     // engine loop (owns the PJRT client; must stay on this thread)
     let mut engine = Engine::new(cfg)?;
@@ -108,7 +136,8 @@ pub fn serve(cfg: EngineConfig, addr: &str) -> Result<()> {
             Ok(completed) => {
                 for done in completed {
                     if let Some(inf) = inflight.remove(&done.ticket) {
-                        let resp = response_from(&inf.req, &done, engine.cfg.kv_dtype);
+                        let resp =
+                            response_from(&inf.req, &done, engine.cfg.kv_dtype.name(), 0);
                         let _ = inf.reply.send(render_response(&resp));
                     }
                 }
@@ -178,11 +207,13 @@ fn handle_msg(
     }
 }
 
-/// Build the response for a completed request.
-fn response_from(
+/// Build the response for a completed request. Shared with the
+/// cluster's replica loops, which stamp their own `replica_id`.
+pub(crate) fn response_from(
     req: &ServeRequest,
     done: &CompletedRequest,
-    kv_dtype: crate::kvcache::KvDtype,
+    kv_dtype_name: &str,
+    replica_id: usize,
 ) -> ServeResponse {
     let res = &done.result;
     let texts: Vec<String> = res.chains.iter().map(|c| c.text.clone()).collect();
@@ -204,13 +235,31 @@ fn response_from(
         ttft_ms: 0.0,
         tokens_per_s: 0.0,
         prefix_hit_tokens: prefix_hit_tokens as f64,
-        kv_dtype: kv_dtype.name().to_string(),
+        kv_dtype: kv_dtype_name.to_string(),
+        replica_id,
         error: None,
     }
     .with_timing(&done.timing)
 }
 
-fn handle_client(stream: TcpStream, tx: mpsc::Sender<Msg>) -> Result<()> {
+/// Spawn the accept loop: one thread per client, each translating
+/// line-JSON into `Dispatch` calls.
+pub(crate) fn spawn_acceptor<D: Dispatch>(
+    listener: TcpListener,
+    dispatch: D,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(stream) = stream else { continue };
+            let d = dispatch.clone();
+            std::thread::spawn(move || {
+                let _ = handle_client(stream, d);
+            });
+        }
+    })
+}
+
+fn handle_client<D: Dispatch>(stream: TcpStream, dispatch: D) -> Result<()> {
     let peer = stream.peer_addr()?;
     crate::debug!("client {peer}");
     let reader = BufReader::new(stream.try_clone()?);
@@ -234,13 +283,13 @@ fn handle_client(stream: TcpStream, tx: mpsc::Sender<Msg>) -> Result<()> {
         if let Some(cmd) = json.get("cmd").and_then(Json::as_str) {
             match cmd {
                 "shutdown" => {
-                    let _ = tx.send(Msg::Shutdown);
+                    dispatch.shutdown();
                     writeln!(writer, "{}", Json::obj().set("ok", true).to_string())?;
                     return Ok(());
                 }
                 "stats" => {
                     let (rtx, rrx) = mpsc::channel();
-                    tx.send(Msg::Stats(rtx)).ok();
+                    dispatch.stats(rtx);
                     if let Ok(s) = rrx.recv() {
                         writeln!(writer, "{s}")?;
                     }
@@ -261,7 +310,7 @@ fn handle_client(stream: TcpStream, tx: mpsc::Sender<Msg>) -> Result<()> {
         match parse_request(&json) {
             Ok(req) => {
                 let (rtx, rrx) = mpsc::channel();
-                tx.send(Msg::Request(req, rtx)).ok();
+                dispatch.request(req, rtx);
                 if let Ok(s) = rrx.recv() {
                     writeln!(writer, "{s}")?;
                 }

@@ -50,6 +50,10 @@ pub struct ServeResponse {
     pub ttft_ms: f64,
     /// Generation throughput of this request (tokens per second).
     pub tokens_per_s: f64,
+    /// Tokens generated across all chains of the request (the
+    /// numerator of `tokens_per_s` — lets clients and the routing
+    /// benches aggregate throughput without re-tokenizing texts).
+    pub gen_tokens: f64,
     /// Prompt tokens restored from the radix prefix cache instead of
     /// being prefilled, summed across chains.
     pub prefix_hit_tokens: f64,
@@ -57,6 +61,10 @@ pub struct ServeResponse {
     /// request (`f32`, `q8`, or `q4` — see docs/NUMERICS.md), so
     /// clients can attribute precision effects.
     pub kv_dtype: String,
+    /// Engine replica that served the request (0 on the single-engine
+    /// path; the cluster router's assignment otherwise), so clients —
+    /// and the routing benches/tests — can attribute cache affinity.
+    pub replica_id: usize,
     /// Error message (all other payload fields are omitted when set).
     pub error: Option<String>,
 }
@@ -74,8 +82,10 @@ impl ServeResponse {
             queue_ms: 0.0,
             ttft_ms: 0.0,
             tokens_per_s: 0.0,
+            gen_tokens: 0.0,
             prefix_hit_tokens: 0.0,
             kv_dtype: String::new(),
+            replica_id: 0,
             error: Some(msg.to_string()),
         }
     }
@@ -86,6 +96,7 @@ impl ServeResponse {
         self.queue_ms = t.queue_ms;
         self.ttft_ms = t.ttft_ms;
         self.tokens_per_s = t.tokens_per_s();
+        self.gen_tokens = t.gen_tokens as f64;
         self
     }
 }
@@ -129,8 +140,10 @@ pub fn render_response(r: &ServeResponse) -> String {
         .set("queue_ms", r.queue_ms)
         .set("ttft_ms", r.ttft_ms)
         .set("tokens_per_s", r.tokens_per_s)
+        .set("gen_tokens", r.gen_tokens)
         .set("prefix_hit_tokens", r.prefix_hit_tokens)
         .set("kv_dtype", r.kv_dtype.as_str())
+        .set("replica_id", r.replica_id as u64)
         .to_string()
 }
 
@@ -178,8 +191,10 @@ mod tests {
             queue_ms: 1.5,
             ttft_ms: 4.0,
             tokens_per_s: 80.0,
+            gen_tokens: 40.0,
             prefix_hit_tokens: 16.0,
             kv_dtype: "q8".into(),
+            replica_id: 3,
             error: None,
         };
         let s = render_response(&r);
@@ -189,8 +204,10 @@ mod tests {
         assert_eq!(j.get("queue_ms").unwrap().as_f64(), Some(1.5));
         assert_eq!(j.get("ttft_ms").unwrap().as_f64(), Some(4.0));
         assert_eq!(j.get("tokens_per_s").unwrap().as_f64(), Some(80.0));
+        assert_eq!(j.get("gen_tokens").unwrap().as_f64(), Some(40.0));
         assert_eq!(j.get("prefix_hit_tokens").unwrap().as_f64(), Some(16.0));
         assert_eq!(j.get("kv_dtype").unwrap().as_str(), Some("q8"));
+        assert_eq!(j.get("replica_id").unwrap().as_usize(), Some(3));
     }
 
     #[test]
@@ -209,6 +226,7 @@ mod tests {
         assert_eq!(r.queue_ms, 2.0);
         assert_eq!(r.ttft_ms, 5.0);
         assert!((r.tokens_per_s - 200.0).abs() < 1e-9);
+        assert_eq!(r.gen_tokens, 100.0);
     }
 
     #[test]

@@ -1,0 +1,366 @@
+//! Cluster admission router: prefix-affinity scoring, load balancing,
+//! and work-steal planning over N engine replicas.
+//!
+//! The router is a **pure decision core**: it owns no threads, no
+//! channels, and no engines — [`super::cluster`] feeds it load
+//! snapshots and asks three questions:
+//!
+//! * [`Router::route`] — which replica should admit this prompt?
+//! * [`Router::note_routed`] — remember the decision (feeds affinity);
+//! * [`Router::steal_plan`] — should queued work migrate, and where?
+//!
+//! ## Shadow prefix indexes
+//!
+//! Prefix-affinity routing needs "how much of this prompt's KV prefix
+//! does replica *i* already hold?" without crossing into the engine
+//! threads. The router therefore keeps one **shadow**
+//! [`RadixPrefixIndex`] per replica, fed with the *byte* prefix of
+//! every prompt it routes there, and scores candidates with the
+//! read-only [`RadixPrefixIndex::best_hit_len`] probe (no references
+//! taken, no LRU perturbation). The shadow is an optimistic predictor,
+//! not a mirror: it is keyed on raw prompt bytes (the router has no
+//! tokenizer), uses its own page granularity, and counts a prompt as
+//! cached from the moment it is routed — before the replica finishes
+//! the request and actually retains pages. Mispredictions are
+//! harmless: the replica's own index decides the real
+//! `prefix_hit_tokens`, and a cold replica merely prefills from
+//! scratch, exactly as it would under load balancing. What matters is
+//! that *equal prefixes converge on the same replica*, which only
+//! requires the shadow to be self-consistent.
+//!
+//! Replica scoring follows the issue's (a)/(b)/(c) order: shadow hit
+//! length dominates, live-lane occupancy + queue depth break ties, and
+//! work stealing (planned here, executed by the cluster) is the escape
+//! valve when affinity piles queued requests onto a hot replica while
+//! others sit idle.
+
+use crate::config::RoutingPolicy;
+use crate::kvcache::RadixPrefixIndex;
+
+/// Byte granularity of the shadow indexes. Prefix reuse below one KV
+/// page is worthless to a replica, and typical system preambles span
+/// hundreds of bytes, so a coarse page keeps the shadow tree shallow.
+const SHADOW_PAGE_BYTES: usize = 16;
+
+/// Retained-page budget per shadow index (LRU-trimmed). At 16 bytes
+/// per page this tracks ~64 KiB of distinct routed prefixes per
+/// replica — far beyond what a replica's real index retains.
+const SHADOW_PAGES: usize = 4096;
+
+/// One replica's occupancy snapshot, as last reported by its thread.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ReplicaLoad {
+    /// Chains waiting in the replica's admission queue.
+    pub queue_depth: usize,
+    /// Lanes currently running a chain.
+    pub active_lanes: usize,
+    /// Requests admitted and not yet answered.
+    pub inflight: usize,
+    /// Whole queued requests eligible for `drain_queued` handoff.
+    pub stealable: usize,
+}
+
+impl ReplicaLoad {
+    /// Scalar congestion score used for tie-breaks and least-loaded
+    /// routing: everything occupying or waiting for a lane.
+    fn pressure(&self) -> usize {
+        self.active_lanes + self.queue_depth
+    }
+
+    /// A replica with nothing running and nothing queued.
+    pub fn is_idle(&self) -> bool {
+        self.active_lanes == 0 && self.queue_depth == 0 && self.inflight == 0
+    }
+}
+
+/// Outcome of a routing decision.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RouteDecision {
+    /// Chosen replica id.
+    pub replica: usize,
+    /// Shadow-index hit length (bytes) on the chosen replica — > 0
+    /// means the request was routed *by affinity*, not load.
+    pub shadow_hit: usize,
+}
+
+/// A planned migration of queued requests (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StealPlan {
+    /// Replica to drain (has stealable queued requests).
+    pub from: usize,
+    /// Idle replica the drained requests should be re-routed to.
+    pub to: usize,
+    /// Upper bound on requests to migrate in this round.
+    pub max_requests: usize,
+}
+
+/// The admission router (see module docs).
+pub struct Router {
+    policy: RoutingPolicy,
+    shadow: Vec<RadixPrefixIndex>,
+    shadow_seq: u64,
+    rr_next: usize,
+}
+
+impl Router {
+    /// A router over `replicas` engine replicas.
+    pub fn new(replicas: usize, policy: RoutingPolicy) -> Self {
+        assert!(replicas > 0, "a cluster needs at least one replica");
+        Self {
+            policy,
+            shadow: (0..replicas)
+                .map(|_| RadixPrefixIndex::new(SHADOW_PAGE_BYTES))
+                .collect(),
+            shadow_seq: 0,
+            rr_next: 0,
+        }
+    }
+
+    /// Number of replicas routed over.
+    pub fn replicas(&self) -> usize {
+        self.shadow.len()
+    }
+
+    /// Active routing policy.
+    pub fn policy(&self) -> RoutingPolicy {
+        self.policy
+    }
+
+    /// Replica with the lowest congestion score (ties to the lowest
+    /// id), optionally excluding one replica.
+    fn least_loaded(loads: &[ReplicaLoad], exclude: Option<usize>) -> usize {
+        (0..loads.len())
+            .filter(|&i| Some(i) != exclude)
+            .min_by_key(|&i| (loads[i].pressure(), loads[i].inflight, i))
+            .expect("at least one candidate replica")
+    }
+
+    /// Shadow ids for a prompt: its raw bytes, truncated to whole
+    /// shadow pages (sub-page tails can never be reused).
+    fn shadow_ids(prompt: &str) -> Vec<u32> {
+        let bytes = prompt.as_bytes();
+        let n = (bytes.len() / SHADOW_PAGE_BYTES) * SHADOW_PAGE_BYTES;
+        bytes[..n].iter().map(|&b| b as u32).collect()
+    }
+
+    /// Pick the replica that should admit `prompt` given the current
+    /// per-replica loads (`loads.len()` must equal the replica count).
+    pub fn route(&mut self, prompt: &str, loads: &[ReplicaLoad]) -> RouteDecision {
+        assert_eq!(loads.len(), self.shadow.len());
+        match self.policy {
+            RoutingPolicy::RoundRobin => {
+                let replica = self.rr_next % self.shadow.len();
+                self.rr_next = self.rr_next.wrapping_add(1);
+                RouteDecision {
+                    replica,
+                    shadow_hit: 0,
+                }
+            }
+            RoutingPolicy::LeastLoaded => RouteDecision {
+                replica: Self::least_loaded(loads, None),
+                shadow_hit: 0,
+            },
+            RoutingPolicy::Prefix => {
+                // ids is page-truncated, so best_hit_len's own
+                // one-page-short cap is applied to a page-aligned
+                // probe: a full shadow match still scores.
+                let ids = Self::shadow_ids(prompt);
+                let hits: Vec<usize> = self
+                    .shadow
+                    .iter()
+                    .map(|s| s.best_hit_len(&ids))
+                    .collect();
+                let best = hits.iter().copied().max().unwrap_or(0);
+                if best == 0 {
+                    return RouteDecision {
+                        replica: Self::least_loaded(loads, None),
+                        shadow_hit: 0,
+                    };
+                }
+                // among the replicas sharing the longest hit, prefer
+                // the least congested
+                let replica = (0..loads.len())
+                    .filter(|&i| hits[i] == best)
+                    .min_by_key(|&i| (loads[i].pressure(), i))
+                    .unwrap();
+                RouteDecision {
+                    replica,
+                    shadow_hit: best,
+                }
+            }
+        }
+    }
+
+    /// Record that `prompt` was routed to `replica`, feeding the
+    /// shadow affinity state. No-op under round-robin (affinity is
+    /// deliberately ignored there) — the shadow trees would only burn
+    /// memory.
+    pub fn note_routed(&mut self, replica: usize, prompt: &str) {
+        if self.policy == RoutingPolicy::RoundRobin {
+            return;
+        }
+        let ids = Self::shadow_ids(prompt);
+        if ids.is_empty() {
+            return;
+        }
+        let shadow = &mut self.shadow[replica];
+        self.shadow_seq += 1;
+        let seq = self.shadow_seq << 16;
+        let mut n = 0u64;
+        shadow.insert(&ids, |_| {
+            n += 1;
+            seq | n // unique dummy handles; the shadow holds no pages
+        });
+        let _ = shadow.trim(SHADOW_PAGES);
+    }
+
+    /// Plan one queued-work migration: the most congested replica with
+    /// stealable (never-installed) requests donates up to half of them
+    /// to an idle replica. Returns `None` when no replica is idle, no
+    /// replica has stealable work, or the donor would be the idle
+    /// replica itself.
+    pub fn steal_plan(&self, loads: &[ReplicaLoad]) -> Option<StealPlan> {
+        assert_eq!(loads.len(), self.shadow.len());
+        let to = (0..loads.len()).find(|&i| loads[i].is_idle())?;
+        let from = (0..loads.len())
+            .filter(|&i| i != to && loads[i].stealable > 0 && loads[i].queue_depth > 0)
+            .max_by_key(|&i| (loads[i].queue_depth, loads[i].stealable))?;
+        let max_requests = loads[from].stealable.div_ceil(2);
+        Some(StealPlan {
+            from,
+            to,
+            max_requests,
+        })
+    }
+
+    /// Drop replica `replica`'s shadow state (after a drain the real
+    /// index keeps its pages, so this is only for tests/diagnostics).
+    #[cfg(test)]
+    fn shadow_pages_retained(&self, replica: usize) -> usize {
+        self.shadow[replica].pages_retained()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn loads(n: usize) -> Vec<ReplicaLoad> {
+        vec![ReplicaLoad::default(); n]
+    }
+
+    /// A prompt long enough to span several shadow pages.
+    fn prompt(tag: &str) -> String {
+        format!("system: shared preamble padding out several shadow pages|{tag}")
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(3, RoutingPolicy::RoundRobin);
+        let l = loads(3);
+        let seq: Vec<usize> = (0..6).map(|_| r.route("p", &l).replica).collect();
+        assert_eq!(seq, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_picks_minimum_pressure() {
+        let mut r = Router::new(3, RoutingPolicy::LeastLoaded);
+        let mut l = loads(3);
+        l[0].active_lanes = 4;
+        l[1].active_lanes = 1;
+        l[1].queue_depth = 2;
+        l[2].active_lanes = 2;
+        assert_eq!(r.route("p", &l).replica, 2);
+        // ties go to the lowest id
+        l[2].active_lanes = 3;
+        assert_eq!(r.route("p", &l).replica, 1);
+    }
+
+    #[test]
+    fn prefix_affinity_sticks_to_the_noted_replica() {
+        let mut r = Router::new(4, RoutingPolicy::Prefix);
+        let l = loads(4);
+        let p = prompt("q1");
+        // cold: falls back to least-loaded (replica 0 on all-idle)
+        let d = r.route(&p, &l);
+        assert_eq!((d.replica, d.shadow_hit), (0, 0));
+        r.note_routed(2, &p);
+        // warm: the shared preamble pulls any same-prefix prompt to 2
+        for tag in ["q1", "q2", "a much longer different question"] {
+            let d = r.route(&prompt(tag), &l);
+            assert_eq!(d.replica, 2, "tag {tag}");
+            assert!(d.shadow_hit > 0);
+        }
+        // an unrelated prompt is load-balanced, not dragged to 2
+        let d = r.route("completely different text without the preamble", &l);
+        assert_eq!(d.shadow_hit, 0);
+    }
+
+    #[test]
+    fn prefix_ties_break_by_load() {
+        let mut r = Router::new(2, RoutingPolicy::Prefix);
+        let p = prompt("x");
+        r.note_routed(0, &p);
+        r.note_routed(1, &p);
+        let mut l = loads(2);
+        l[0].active_lanes = 3;
+        assert_eq!(r.route(&p, &l).replica, 1);
+        l[1].queue_depth = 9;
+        assert_eq!(r.route(&p, &l).replica, 0);
+    }
+
+    #[test]
+    fn short_prompts_never_score_affinity() {
+        let mut r = Router::new(2, RoutingPolicy::Prefix);
+        r.note_routed(1, "short");
+        assert_eq!(r.shadow_pages_retained(1), 0, "sub-page prefix not indexed");
+        let d = r.route("short", &loads(2));
+        assert_eq!(d.shadow_hit, 0);
+    }
+
+    #[test]
+    fn shadow_stays_under_budget() {
+        let mut r = Router::new(1, RoutingPolicy::Prefix);
+        for i in 0..200 {
+            let p = format!("{i:064}"); // 64 distinct bytes -> 4 pages
+            r.note_routed(0, &p);
+        }
+        assert!(r.shadow_pages_retained(0) <= SHADOW_PAGES);
+        assert!(r.shadow_pages_retained(0) > 0);
+    }
+
+    #[test]
+    fn steal_plan_moves_from_hottest_to_idle() {
+        let r = Router::new(3, RoutingPolicy::Prefix);
+        let mut l = loads(3);
+        // replica 0 saturated with queued work, 1 busy, 2 idle
+        l[0].active_lanes = 4;
+        l[0].queue_depth = 7;
+        l[0].stealable = 5;
+        l[0].inflight = 9;
+        l[1].active_lanes = 2;
+        l[1].inflight = 2;
+        let plan = r.steal_plan(&l).expect("steal expected");
+        assert_eq!(plan.from, 0);
+        assert_eq!(plan.to, 2);
+        assert_eq!(plan.max_requests, 3, "ceil(5/2)");
+        // no idle replica -> no plan
+        l[2].active_lanes = 1;
+        assert!(r.steal_plan(&l).is_none());
+        // idle replica but nothing stealable -> no plan
+        l[2].active_lanes = 0;
+        l[0].stealable = 0;
+        assert!(r.steal_plan(&l).is_none());
+    }
+
+    #[test]
+    fn steal_plan_never_self_steals() {
+        let r = Router::new(1, RoutingPolicy::Prefix);
+        let mut l = loads(1);
+        l[0].stealable = 3;
+        l[0].queue_depth = 3;
+        // cluster of one: its only replica is both "idle" candidate
+        // and donor; the donor filter excludes it
+        assert!(r.steal_plan(&l).is_none());
+    }
+}

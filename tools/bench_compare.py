@@ -1,0 +1,98 @@
+#!/usr/bin/env python3
+"""Perf-regression gate: diff a bench JSON against a checked-in baseline.
+
+Bench binaries (``bench_serve --smoke --out BENCH_serve.json``,
+``bench_kvcache --smoke --out BENCH_kvcache.json``) emit::
+
+    {"bench": "serve", "schema": 1, "gated": {...}, "info": {...}}
+
+This tool compares the ``gated`` section against a baseline file from
+``tools/bench_baselines/``:
+
+* a **numeric** baseline value gates with a relative tolerance
+  (default +/-25%): ``|cur - base| <= tol * max(|base|, 1.0)``;
+* a **null** baseline value is a *structural* gate: the metric must
+  exist and be numeric in the current run, but its value is not yet
+  pinned (used for counters that can only be seeded from a real CI
+  run — refresh the baseline from the uploaded ``BENCH_*.json``
+  artifact to activate value gating);
+* metrics present in the current run but absent from the baseline are
+  reported as NEW and pass (add them to the baseline to gate them).
+
+``info`` sections are never gated (wall-clock, machine-dependent).
+
+Exit code 0 when every gated metric passes, 1 otherwise.
+
+Usage: python3 tools/bench_compare.py CURRENT BASELINE [--tolerance 0.25]
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def load(path: str) -> dict:
+    with open(path, encoding="utf-8") as f:
+        doc = json.load(f)
+    if not isinstance(doc.get("gated"), dict):
+        sys.exit(f"bench_compare: {path} has no 'gated' object")
+    return doc
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="bench JSON produced by this run")
+    ap.add_argument("baseline", help="checked-in baseline JSON")
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=0.25,
+        help="relative tolerance for numeric baselines (default 0.25)",
+    )
+    args = ap.parse_args()
+
+    cur = load(args.current)
+    base = load(args.baseline)
+    name = base.get("bench", Path(args.baseline).stem)
+
+    failures = 0
+    rows = []
+    for key, expect in sorted(base["gated"].items()):
+        got = cur["gated"].get(key)
+        if got is None or not isinstance(got, (int, float)):
+            rows.append((key, expect, got, "MISSING"))
+            failures += 1
+            continue
+        if expect is None:
+            rows.append((key, expect, got, "present (baseline unseeded)"))
+            continue
+        delta = abs(got - expect)
+        allowed = args.tolerance * max(abs(expect), 1.0)
+        if delta <= allowed:
+            rows.append((key, expect, got, "ok"))
+        else:
+            rel = delta / max(abs(expect), 1e-12)
+            rows.append((key, expect, got, f"FAIL ({rel:+.1%} vs +/-{args.tolerance:.0%})"))
+            failures += 1
+    for key in sorted(set(cur["gated"]) - set(base["gated"])):
+        rows.append((key, None, cur["gated"][key], "NEW (not gated)"))
+
+    width = max((len(k) for k, *_ in rows), default=10)
+    print(f"bench_compare [{name}]: tolerance +/-{args.tolerance:.0%}")
+    for key, expect, got, verdict in rows:
+        e = "-" if expect is None else f"{expect:.6g}"
+        g = "-" if got is None else f"{got:.6g}"
+        print(f"  {key:<{width}}  base {e:>12}  cur {g:>12}  {verdict}")
+    unseeded = sum(1 for _, e, _, v in rows if e is None and "unseeded" in str(v))
+    if unseeded:
+        print(
+            f"bench_compare: {unseeded} metric(s) structurally gated only — "
+            f"refresh {args.baseline} from a CI BENCH artifact to pin values"
+        )
+    print(f"bench_compare: {len(rows)} metrics, {failures} failing")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -19,6 +19,7 @@ from pathlib import Path
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$")
+FENCE_RE = re.compile(r"^\s*(```|~~~)")
 
 
 def slugify(heading: str) -> str:
@@ -28,10 +29,28 @@ def slugify(heading: str) -> str:
     return text.replace(" ", "-")
 
 
+def prose_lines(path: Path):
+    """Lines of the file with fenced code blocks removed.
+
+    A ``#`` shell comment (or Rust attribute, YAML comment, …) inside a
+    ``` fence is not a heading: keeping those lines used to mint
+    phantom anchors, so links to headings that don't exist passed the
+    check. Links inside fences are example payloads, not navigation —
+    they are skipped for the same reason.
+    """
+    in_fence = False
+    for line in path.read_text(encoding="utf-8").splitlines():
+        if FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if not in_fence:
+            yield line
+
+
 def anchors_of(path: Path) -> set:
     slugs = set()
     seen = {}
-    for line in path.read_text(encoding="utf-8").splitlines():
+    for line in prose_lines(path):
         m = HEADING_RE.match(line)
         if not m:
             continue
@@ -44,7 +63,7 @@ def anchors_of(path: Path) -> set:
 
 def check_file(md: Path, root: Path) -> list:
     errors = []
-    for m in LINK_RE.finditer(md.read_text(encoding="utf-8")):
+    for m in LINK_RE.finditer("\n".join(prose_lines(md))):
         target = m.group(1)
         if target.startswith(("http://", "https://", "mailto:")):
             continue
@@ -75,7 +94,7 @@ def main() -> int:
     errors = []
     n_links = 0
     for md in files:
-        n_links += len(LINK_RE.findall(md.read_text(encoding="utf-8")))
+        n_links += len(LINK_RE.findall("\n".join(prose_lines(md))))
         errors.extend(check_file(md, root))
     for e in errors:
         print(e, file=sys.stderr)
