@@ -14,36 +14,197 @@
 
 //! Compression-policy overhead bench: per-step host cost of each
 //! eviction policy at a realistic cache occupancy (paper §2.2 claims
-//! "minimal computational overhead" for the heuristics — verify ours).
+//! "minimal computational overhead" for the heuristics — verify ours),
+//! now swept over every budget allocator.
+//!
+//! `--smoke` runs a deterministic policy × allocator grid (fixed step
+//! count, synthetic attention made of exact multiples of 2⁻⁵) and
+//! emits the perf-regression JSON (`--out BENCH_policies.json`) that
+//! CI diffs against `tools/bench_baselines/BENCH_policies.json` (see
+//! `tools/bench_compare.py`). Gated metrics are deterministic
+//! occupancy counters — final live tokens, per-head min/max, live
+//! fraction, and each plan's conserved total; wall-clock tokens/s is
+//! reported as info. The seeded baseline values come from
+//! `tools/seed_bench_policies.py`, which mirrors the synthetic loop
+//! exactly.
 
-use hyperscale::compress::{build_policy, PolicyKind, StepView, WriteAction};
+use std::time::Instant;
+
+use hyperscale::compress::{
+    build_allocator, build_policy, build_policy_planned, AllocatorKind, AttnStats,
+    BudgetPlan, PolicyKind, StepView, WriteAction,
+};
 use hyperscale::kvcache::{CacheStore, Geometry};
 use hyperscale::util::benchkit::bench;
+use hyperscale::util::{Args, Json};
 
-fn main() {
-    println!("# bench_policies — host-side per-step policy cost");
-    let g = Geometry {
+const ALL_POLICIES: [PolicyKind; 8] = [
+    PolicyKind::Vanilla,
+    PolicyKind::Dms,
+    PolicyKind::DmsImmediate,
+    PolicyKind::Tova,
+    PolicyKind::H2o,
+    PolicyKind::Quest,
+    PolicyKind::Dmc,
+    PolicyKind::Window,
+];
+
+fn smoke_geom() -> Geometry {
+    Geometry {
         layers: 4,
         kv_heads: 2,
         slots: 320,
         head_dim: 16,
         page_size: 16,
+    }
+}
+
+/// One engine-shaped policy step: due evictions, write-actions,
+/// append/merge (merge falls back to append when nothing merged yet,
+/// as the engine does), post_write.
+fn policy_step(
+    cache: &mut CacheStore,
+    policy: &mut Box<dyn hyperscale::compress::Policy>,
+    pos: usize,
+    alpha: &[f32],
+    attn: &[f32],
+    attn_self: &[f32],
+    written: &mut [Option<usize>],
+    actions: &mut Vec<WriteAction>,
+    k: &[f32],
+    v: &[f32],
+) {
+    let g = cache.geom;
+    cache.apply_due_evictions(0, pos);
+    policy.write_actions(alpha, g.layers, g.kv_heads, actions);
+    for l in 0..g.layers {
+        for h in 0..g.kv_heads {
+            let i = l * g.kv_heads + h;
+            written[i] = None;
+            let append = match actions[i] {
+                WriteAction::Merge => !cache.merge_into_last(0, l, h, k, v),
+                WriteAction::Append => true,
+            };
+            if append {
+                if let Some(s) = cache.alloc_slot(0, l, h) {
+                    cache.write(0, l, h, s, pos, k, v);
+                    written[i] = Some(s);
+                }
+            }
+        }
+    }
+    let view = StepView {
+        lane: 0,
+        pos,
+        alpha,
+        attn,
+        attn_self,
+        written,
     };
+    policy.post_write(cache, &view);
+}
+
+/// Deterministic smoke grid: every policy under every allocator's plan
+/// for a fixed number of steps. Returns (gated, info) metric maps.
+fn smoke() -> (Json, Json) {
+    const STEPS: usize = 120;
+    let g = smoke_geom();
+    let lh = g.lh();
+    let per_head = 40usize;
+    let global = per_head * lh;
+
+    // synthetic inputs: exact multiples of 2⁻⁵ so the Python seeder
+    // reproduces every f64 accumulation bit-for-bit
+    let alpha = vec![0.6f32; lh];
+    let attn: Vec<f32> = (0..lh * g.slots)
+        .map(|i| ((i % 97) as f32) * 0.03125)
+        .collect();
+    let attn_self = vec![0.25f32; lh];
+
+    // one observation seeds the adaptive allocator's statistics
+    let mut stats = AttnStats::new();
+    stats.observe_attn(g.layers, g.kv_heads, g.slots, &attn, &attn_self);
+
+    let mut gated = Json::obj();
+    let mut info = Json::obj();
+    println!("# bench_policies --smoke — policy × allocator occupancy grid");
+    for alloc in AllocatorKind::all() {
+        let plan = build_allocator(alloc).plan(g.layers, g.kv_heads, global, Some(&stats));
+        assert_eq!(
+            plan.total(g.layers, g.kv_heads),
+            global,
+            "{} plan must conserve the global budget",
+            alloc.name()
+        );
+        gated = gated.set(
+            &format!("plan.{}.tokens", alloc.name()),
+            plan.total(g.layers, g.kv_heads) as f64,
+        );
+        for kind in ALL_POLICIES {
+            let mut cache = CacheStore::new(g, 1);
+            let mut policy = build_policy_planned(kind, plan.clone(), 16, g.page_size);
+            let k = vec![0.5f32; g.head_dim];
+            let v = vec![0.5f32; g.head_dim];
+            let mut actions: Vec<WriteAction> = Vec::new();
+            let mut written = vec![None; lh];
+            let t0 = Instant::now();
+            for pos in 0..STEPS {
+                policy_step(
+                    &mut cache,
+                    &mut policy,
+                    pos,
+                    &alpha,
+                    &attn,
+                    &attn_self,
+                    &mut written,
+                    &mut actions,
+                    &k,
+                    &v,
+                );
+            }
+            let wall = t0.elapsed().as_secs_f64().max(1e-9);
+            let per_lh: Vec<usize> = (0..lh).map(|i| cache.live_count_lh(0, i)).collect();
+            let live: usize = per_lh.iter().sum();
+            let min_lh = per_lh.iter().copied().min().unwrap_or(0);
+            let max_lh = per_lh.iter().copied().max().unwrap_or(0);
+            let fraction = live as f64 / (lh * g.slots) as f64;
+            // budgeted policies must sit within the plan everywhere
+            if matches!(
+                kind,
+                PolicyKind::Tova | PolicyKind::H2o | PolicyKind::Window
+            ) {
+                assert_eq!(cache.plan_overflow(0, &plan), 0, "{:?} overflow", kind);
+            }
+            let key = |m: &str| format!("policy.{}.{}.{m}", kind.name(), alloc.name());
+            gated = gated
+                .set(&key("live_tokens"), live as f64)
+                .set(&key("live_min_lh"), min_lh as f64)
+                .set(&key("live_max_lh"), max_lh as f64)
+                .set(&key("live_fraction"), fraction);
+            info = info.set(&key("tokens_per_s"), STEPS as f64 / wall);
+            println!(
+                "{:<14} {:<8}  live {live:>4} (lh {min_lh}..{max_lh}, {:.4} frac)  {:>9.0} tok/s",
+                kind.name(),
+                alloc.name(),
+                fraction,
+                STEPS as f64 / wall
+            );
+        }
+    }
+    (gated, info)
+}
+
+/// Wall-clock overhead bench (original shape), now also exercising the
+/// planned path: the uniform plan is the legacy scalar budget.
+fn overhead_bench() {
+    println!("# bench_policies — host-side per-step policy cost");
+    let g = smoke_geom();
     let lh = g.lh();
     let alpha = vec![0.6f32; lh];
     let attn: Vec<f32> = (0..lh * g.slots).map(|i| (i % 97) as f32 / 97.0).collect();
     let attn_self = vec![0.1f32; lh];
 
-    for kind in [
-        PolicyKind::Vanilla,
-        PolicyKind::Dms,
-        PolicyKind::DmsImmediate,
-        PolicyKind::Tova,
-        PolicyKind::H2o,
-        PolicyKind::Quest,
-        PolicyKind::Dmc,
-        PolicyKind::Window,
-    ] {
+    for kind in ALL_POLICIES {
         let mut cache = CacheStore::new(g, 1);
         let mut policy = build_policy(kind, 4.0, 160, 16, g.page_size);
         let k = vec![0.5f32; g.head_dim];
@@ -52,34 +213,18 @@ fn main() {
         let mut actions: Vec<WriteAction> = Vec::new();
         let mut written = vec![None; lh];
         let r = bench(&format!("policy_{}", kind.name()), 20, 300, || {
-            cache.apply_due_evictions(0, pos);
-            policy.write_actions(&alpha, g.layers, g.kv_heads, &mut actions);
-            for l in 0..g.layers {
-                for h in 0..g.kv_heads {
-                    let i = l * g.kv_heads + h;
-                    written[i] = None;
-                    match actions[i] {
-                        WriteAction::Merge => {
-                            cache.merge_into_last(0, l, h, &k, &v);
-                        }
-                        WriteAction::Append => {
-                            if let Some(s) = cache.alloc_slot(0, l, h) {
-                                cache.write(0, l, h, s, pos, &k, &v);
-                                written[i] = Some(s);
-                            }
-                        }
-                    }
-                }
-            }
-            let view = StepView {
-                lane: 0,
+            policy_step(
+                &mut cache,
+                &mut policy,
                 pos,
-                alpha: &alpha,
-                attn: &attn,
-                attn_self: &attn_self,
-                written: &written,
-            };
-            policy.post_write(&mut cache, &view);
+                &alpha,
+                &attn,
+                &attn_self,
+                &mut written,
+                &mut actions,
+                &k,
+                &v,
+            );
             pos += 1;
             if pos % 280 == 0 {
                 cache.reset_lane(0);
@@ -88,4 +233,67 @@ fn main() {
         });
         r.print();
     }
+
+    // per-allocator enforcement cost on the budgeted policies: how
+    // much a non-uniform plan changes the hot-loop price
+    println!("\n# planned enforcement cost (tova, per allocator)");
+    let mut stats = AttnStats::new();
+    stats.observe_attn(g.layers, g.kv_heads, g.slots, &attn, &attn_self);
+    for alloc in AllocatorKind::all() {
+        let plan: BudgetPlan =
+            build_allocator(alloc).plan(g.layers, g.kv_heads, 40 * lh, Some(&stats));
+        let mut cache = CacheStore::new(g, 1);
+        let mut policy = build_policy_planned(PolicyKind::Tova, plan, 16, g.page_size);
+        let k = vec![0.5f32; g.head_dim];
+        let v = vec![0.5f32; g.head_dim];
+        let mut pos = 0usize;
+        let mut actions: Vec<WriteAction> = Vec::new();
+        let mut written = vec![None; lh];
+        let r = bench(&format!("tova_{}", alloc.name()), 20, 300, || {
+            policy_step(
+                &mut cache,
+                &mut policy,
+                pos,
+                &alpha,
+                &attn,
+                &attn_self,
+                &mut written,
+                &mut actions,
+                &k,
+                &v,
+            );
+            pos += 1;
+            if pos % 280 == 0 {
+                cache.reset_lane(0);
+                pos = 0;
+            }
+        });
+        r.print();
+    }
+}
+
+fn main() -> hyperscale::Result<()> {
+    let args = Args::from_env();
+    let smoke_mode = args.flag("smoke");
+
+    if !smoke_mode {
+        overhead_bench();
+    }
+    let (gated, info) = if smoke_mode {
+        smoke()
+    } else {
+        (Json::obj(), Json::obj())
+    };
+
+    if let Some(path) = args.get("out") {
+        let report = Json::obj()
+            .set("bench", "policies")
+            .set("schema", 1u64)
+            .set("smoke", smoke_mode)
+            .set("gated", gated)
+            .set("info", info);
+        std::fs::write(path, report.to_string())?;
+        println!("wrote {path}");
+    }
+    Ok(())
 }

@@ -156,7 +156,39 @@ impl LatencyModel {
     /// Fig. 7: fraction of step latency attributable to KV-cache reads
     /// when the cache is compressed by `cr`.
     pub fn kv_latency_fraction(&self, acc: &Accelerator, batch: f64, seq: f64, cr: f64) -> f64 {
-        let eff_seq = seq / cr;
+        self.fraction_at_eff_seq(acc, batch, seq, seq / cr)
+    }
+
+    /// Fig. 7 under a per-(layer, head)
+    /// [`BudgetPlan`](crate::compress::BudgetPlan): the KV read term is priced at
+    /// the plan's aggregate resident tokens (mean per head, capped at
+    /// the dense length) instead of the scalar `seq / cr`. A uniform
+    /// plan at budget `seq / cr` reproduces
+    /// [`LatencyModel::kv_latency_fraction`] exactly; non-uniform
+    /// plans land at the same point when they conserve the global
+    /// budget — what this model makes visible is how a plan's *total*,
+    /// not its shape, sets the memory-bound latency share.
+    pub fn kv_latency_fraction_planned(
+        &self,
+        acc: &Accelerator,
+        batch: f64,
+        seq: f64,
+        plan: &crate::compress::BudgetPlan,
+        layers: usize,
+        kv_heads: usize,
+    ) -> f64 {
+        let cells = (layers * kv_heads).max(1) as f64;
+        let eff_seq = (plan.total(layers, kv_heads) as f64 / cells).min(seq);
+        self.fraction_at_eff_seq(acc, batch, seq, eff_seq)
+    }
+
+    fn fraction_at_eff_seq(
+        &self,
+        acc: &Accelerator,
+        batch: f64,
+        seq: f64,
+        eff_seq: f64,
+    ) -> f64 {
         let t_kv = self.kv_reads(batch, eff_seq) / acc.bytes_per_s;
         let t_total = {
             let t_compute = self.flops(batch, seq) / acc.flops_per_s;
@@ -245,6 +277,27 @@ mod tests {
         // f32 host payloads cost MORE than the bf16 paper default
         let f32m = LatencyModel::llama31_8b().with_kv_dtype(KvDtype::F32, hd);
         assert!((f32m.kv_bytes - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn planned_fraction_matches_scalar_cr_for_uniform_plans() {
+        use crate::compress::BudgetPlan;
+        let m = LatencyModel::llama31_8b();
+        let (batch, seq) = (64.0, 16384.0);
+        // uniform plan at seq/4 per head == scalar CR 4
+        let uni = BudgetPlan::uniform(4096);
+        let f_plan = m.kv_latency_fraction_planned(&H100, batch, seq, &uni, 2, 2);
+        let f_cr = m.kv_latency_fraction(&H100, batch, seq, 4.0);
+        assert!((f_plan - f_cr).abs() < 1e-12);
+        // a skewed plan conserving the same total lands at the same
+        // share — the budget axis is plan-aggregate bytes
+        let skewed = BudgetPlan::per_head(2, 2, vec![8192, 4096, 2048, 2048]);
+        let f_skew = m.kv_latency_fraction_planned(&H100, batch, seq, &skewed, 2, 2);
+        assert!((f_skew - f_cr).abs() < 1e-12);
+        // a bigger total → bigger memory share
+        let rich = BudgetPlan::uniform(8192);
+        let f_rich = m.kv_latency_fraction_planned(&H100, batch, seq, &rich, 2, 2);
+        assert!(f_rich > f_plan);
     }
 
     #[test]

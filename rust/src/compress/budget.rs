@@ -1,0 +1,688 @@
+//! Per-(layer, KV-head) budget plans and pluggable allocators.
+//!
+//! The paper's core observation is that eviction pressure should not be
+//! uniform across heads — DMS wins because its decisions are *learned*
+//! per (layer, head). This module makes budget allocation a first-class
+//! axis for the training-free policies too: a [`BudgetPlan`] assigns
+//! every (layer, KV-head) pair its own token budget, always summing to
+//! the App. F.1 global budget
+//!
+//! ```text
+//! global = ceil((input_len + max_gen) / CR) × layers × kv_heads
+//! ```
+//!
+//! Plans are produced by pluggable [`BudgetAllocator`] strategies:
+//!
+//! * [`UniformAllocator`] — every head gets the same per-head budget.
+//!   Bit-exact with the legacy scalar `budget()` rule (the default and
+//!   the `paper_fidelity` pin).
+//! * [`PyramidAllocator`] — depth-decayed, front-loaded layers (weight
+//!   `layers − l`): early layers, whose keys feed every later block,
+//!   keep more tokens (the PyramidKV/Keyformer observation that
+//!   attention mass concentrates in shallow layers).
+//! * [`AdaptiveAllocator`] — re-planned from per-head attention
+//!   statistics accumulated during prefill and decode in a lane-local
+//!   [`AttnStats`]: each head's weight is the *perplexity* of its
+//!   attention distribution (the effective number of attended tokens),
+//!   so diffuse heads keep large budgets and sharply-peaked heads give
+//!   theirs up.
+//!
+//! Conservation invariant (property-tested): for any allocator, any
+//! weights, `plan.total(layers, kv_heads) == global` whenever
+//! `global ≥ layers × kv_heads`, and every cell gets at least the
+//! allocator floor (per-head rounding is resolved by largest-remainder
+//! apportionment with deterministic index tie-breaks).
+
+use std::str::FromStr;
+
+use anyhow::bail;
+
+/// Per-(layer, KV-head) token budget map.
+///
+/// `Uniform` is shape-free — it broadcasts one per-head budget to any
+/// geometry and is bit-exact with the pre-plan scalar budget rule.
+/// `PerHead` carries explicit budgets laid out `[layers × kv_heads]`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum BudgetPlan {
+    /// Every (layer, head) gets the same App. F.1 per-head budget.
+    Uniform {
+        /// Tokens each (layer, KV-head) pair may keep live.
+        per_head: usize,
+    },
+    /// Explicit per-(layer, kv-head) budgets.
+    PerHead {
+        /// Layer count the plan was shaped for.
+        layers: usize,
+        /// KV-head count per layer.
+        kv_heads: usize,
+        /// Budgets, `[layers × kv_heads]`, row-major by layer.
+        per_lh: Vec<usize>,
+    },
+}
+
+impl BudgetPlan {
+    /// Shape-free uniform plan (legacy scalar budget, exactly).
+    pub fn uniform(per_head: usize) -> Self {
+        BudgetPlan::Uniform { per_head }
+    }
+
+    /// Explicit plan over a `[layers × kv_heads]` budget vector.
+    ///
+    /// # Panics
+    /// Panics when `per_lh.len() != layers * kv_heads`.
+    pub fn per_head(layers: usize, kv_heads: usize, per_lh: Vec<usize>) -> Self {
+        assert_eq!(per_lh.len(), layers * kv_heads, "plan shape mismatch");
+        BudgetPlan::PerHead {
+            layers,
+            kv_heads,
+            per_lh,
+        }
+    }
+
+    /// Token budget of (layer `l`, KV-head `h`).
+    #[inline]
+    pub fn budget(&self, l: usize, h: usize) -> usize {
+        match self {
+            BudgetPlan::Uniform { per_head } => *per_head,
+            BudgetPlan::PerHead {
+                kv_heads, per_lh, ..
+            } => per_lh[l * kv_heads + h],
+        }
+    }
+
+    /// Whether every cell carries the same budget.
+    pub fn is_uniform(&self) -> bool {
+        self.uniform_budget().is_some()
+    }
+
+    /// The common per-head budget, if the plan is uniform.
+    pub fn uniform_budget(&self) -> Option<usize> {
+        match self {
+            BudgetPlan::Uniform { per_head } => Some(*per_head),
+            BudgetPlan::PerHead { per_lh, .. } => {
+                let first = *per_lh.first()?;
+                per_lh.iter().all(|&b| b == first).then_some(first)
+            }
+        }
+    }
+
+    /// Sum of budgets over a `(layers, kv_heads)` geometry — the global
+    /// App. F.1 budget the plan conserves.
+    pub fn total(&self, layers: usize, kv_heads: usize) -> usize {
+        match self {
+            BudgetPlan::Uniform { per_head } => per_head * layers * kv_heads,
+            BudgetPlan::PerHead {
+                layers: pl,
+                kv_heads: ph,
+                per_lh,
+            } => {
+                debug_assert_eq!((*pl, *ph), (layers, kv_heads), "plan shape mismatch");
+                per_lh.iter().sum()
+            }
+        }
+    }
+
+    /// Smallest per-head budget in the plan.
+    pub fn min_budget(&self) -> usize {
+        match self {
+            BudgetPlan::Uniform { per_head } => *per_head,
+            BudgetPlan::PerHead { per_lh, .. } => {
+                per_lh.iter().copied().min().unwrap_or(0)
+            }
+        }
+    }
+
+    /// Largest per-head budget in the plan.
+    pub fn max_budget(&self) -> usize {
+        match self {
+            BudgetPlan::Uniform { per_head } => *per_head,
+            BudgetPlan::PerHead { per_lh, .. } => {
+                per_lh.iter().copied().max().unwrap_or(0)
+            }
+        }
+    }
+
+    /// Mean per-head budget, rounded up (what Quest's scalar page
+    /// budget consumes — page selection runs inside the decode HLO,
+    /// which takes one `k` for the whole batch).
+    pub fn mean_budget_ceil(&self, layers: usize, kv_heads: usize) -> usize {
+        let cells = (layers * kv_heads).max(1);
+        self.total(layers, kv_heads).div_ceil(cells)
+    }
+
+    /// Effective compression ratio of the plan against a dense cache of
+    /// `max_total_len` tokens per head.
+    pub fn effective_cr(&self, max_total_len: usize, layers: usize, kv_heads: usize) -> f64 {
+        let total = self.total(layers, kv_heads);
+        if total == 0 {
+            return 1.0;
+        }
+        (max_total_len * layers * kv_heads) as f64 / total as f64
+    }
+}
+
+// ----------------------------------------------------------------------
+// Lane-local attention statistics
+// ----------------------------------------------------------------------
+
+/// Per-(layer, KV-head) attention statistics accumulated over a chain's
+/// lifetime — the adaptive allocator's input signal.
+///
+/// Two streams feed it:
+///
+/// * **decode** — [`AttnStats::observe_attn`] consumes the per-step
+///   attention view the executor already returns (mass per slot plus
+///   the self-attention term) and accumulates, per head, the total mass
+///   and the Shannon entropy of the step's normalized distribution;
+/// * **prefill** — [`AttnStats::observe_alpha`] consumes the retrofit's
+///   per-position α (DMS variants export it chunk-wise) and accumulates
+///   the keep-probability `1 − α` as retention mass.
+///
+/// The allocator weight of a head is its **attention perplexity**
+/// `exp(mean entropy)` — the effective number of attended tokens. A
+/// head that attends diffusely genuinely needs many resident tokens; a
+/// sharply-peaked head can live on a small budget (the Keyformer
+/// observation). Retention mass is the fallback weight when no decode
+/// entropy has accumulated yet (and a diagnostic otherwise); note the
+/// current zoo's budgeted policies run on the base model, which
+/// exports no prefill α, so in practice the decode entropy signal
+/// dominates adaptive plans.
+///
+/// Stats are lane-local and restart empty on admission; a preempted
+/// chain re-accumulates after resume (re-planning is cheap and the
+/// signal converges within a few decode steps).
+#[derive(Clone, Debug, Default)]
+pub struct AttnStats {
+    layers: usize,
+    kv_heads: usize,
+    /// Cumulative attention mass per (layer, head).
+    mass: Vec<f64>,
+    /// Cumulative per-step Shannon entropy (nats) per (layer, head).
+    entropy: Vec<f64>,
+    /// Decode observations folded in.
+    steps: u64,
+}
+
+impl AttnStats {
+    /// Empty stats; shape latches on the first observation.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn ensure(&mut self, layers: usize, kv_heads: usize) {
+        if self.layers != layers || self.kv_heads != kv_heads {
+            self.layers = layers;
+            self.kv_heads = kv_heads;
+            self.mass = vec![0.0; layers * kv_heads];
+            self.entropy = vec![0.0; layers * kv_heads];
+            self.steps = 0;
+        }
+    }
+
+    /// Fold in one decode step's attention view (`attn` laid out
+    /// `[layers × kv_heads × slots]`, `attn_self` `[layers × kv_heads]`).
+    pub fn observe_attn(
+        &mut self,
+        layers: usize,
+        kv_heads: usize,
+        slots: usize,
+        attn: &[f32],
+        attn_self: &[f32],
+    ) {
+        self.ensure(layers, kv_heads);
+        for lh in 0..layers * kv_heads {
+            let row = &attn[lh * slots..(lh + 1) * slots];
+            let self_mass = attn_self.get(lh).copied().unwrap_or(0.0) as f64;
+            let mut total = self_mass;
+            for &a in row {
+                total += a as f64;
+            }
+            self.mass[lh] += total;
+            if total > 0.0 {
+                let mut h = 0.0f64;
+                for &a in row {
+                    let p = a as f64 / total;
+                    if p > 0.0 {
+                        h -= p * p.ln();
+                    }
+                }
+                let p = self_mass / total;
+                if p > 0.0 {
+                    h -= p * p.ln();
+                }
+                self.entropy[lh] += h;
+            }
+        }
+        self.steps += 1;
+    }
+
+    /// Fold in one prefill position's α vector (`[layers × kv_heads]`):
+    /// the keep-probability `1 − α` accumulates as retention mass.
+    /// Does not count as an entropy step (no attention view exists).
+    pub fn observe_alpha(&mut self, layers: usize, kv_heads: usize, alpha: &[f32]) {
+        self.ensure(layers, kv_heads);
+        for lh in 0..layers * kv_heads {
+            let a = alpha.get(lh).copied().unwrap_or(0.0) as f64;
+            self.mass[lh] += (1.0 - a).max(0.0);
+        }
+    }
+
+    /// Decode observations folded in so far.
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Cumulative attention mass per (layer, head).
+    pub fn mass(&self) -> &[f64] {
+        &self.mass
+    }
+
+    /// Attention perplexity per (layer, head): `exp(mean entropy)` —
+    /// the effective attended-token count driving adaptive plans.
+    /// Empty (no decode steps) when stats carry no signal yet.
+    pub fn perplexities(&self) -> Vec<f64> {
+        if self.steps == 0 {
+            return Vec::new();
+        }
+        self.entropy
+            .iter()
+            .map(|&e| (e / self.steps as f64).exp())
+            .collect()
+    }
+}
+
+// ----------------------------------------------------------------------
+// Allocators
+// ----------------------------------------------------------------------
+
+/// Budget-allocator selector (`--allocator`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum AllocatorKind {
+    /// Equal per-head budgets — bit-exact with the legacy scalar rule.
+    #[default]
+    Uniform,
+    /// Depth-decayed budgets, front-loaded shallow layers.
+    Pyramid,
+    /// Re-planned from lane-local [`AttnStats`] perplexities.
+    Adaptive,
+}
+
+impl AllocatorKind {
+    /// CLI/config spelling.
+    pub fn name(&self) -> &'static str {
+        match self {
+            AllocatorKind::Uniform => "uniform",
+            AllocatorKind::Pyramid => "pyramid",
+            AllocatorKind::Adaptive => "adaptive",
+        }
+    }
+
+    /// All selectable allocators (sweep/bench iteration order).
+    pub fn all() -> [AllocatorKind; 3] {
+        [
+            AllocatorKind::Uniform,
+            AllocatorKind::Pyramid,
+            AllocatorKind::Adaptive,
+        ]
+    }
+}
+
+impl FromStr for AllocatorKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Ok(match s {
+            "uniform" => AllocatorKind::Uniform,
+            "pyramid" => AllocatorKind::Pyramid,
+            "adaptive" => AllocatorKind::Adaptive,
+            other => bail!(
+                "unknown allocator '{other}' (expected uniform, pyramid, or adaptive)"
+            ),
+        })
+    }
+}
+
+/// A pluggable budget-allocation strategy: distribute the global
+/// App. F.1 budget over `(layers, kv_heads)` cells.
+pub trait BudgetAllocator: Send {
+    /// Which strategy this is.
+    fn kind(&self) -> AllocatorKind;
+
+    /// Produce a plan whose budgets sum to exactly `global` (whenever
+    /// `global ≥ layers × kv_heads`; see [`apportion`]). `stats` feeds
+    /// signal-driven strategies; signal-free ones ignore it.
+    fn plan(
+        &self,
+        layers: usize,
+        kv_heads: usize,
+        global: usize,
+        stats: Option<&AttnStats>,
+    ) -> BudgetPlan;
+}
+
+/// Fraction of the equal share every cell is guaranteed under the
+/// non-uniform allocators (the floor keeps starved heads functional —
+/// an empty head would break attention entirely).
+pub const MIN_SHARE: f64 = 0.25;
+
+fn floor_per_cell(global: usize, cells: usize) -> usize {
+    let equal = global as f64 / cells as f64;
+    (((MIN_SHARE * equal) as usize).max(1)).min(global / cells.max(1))
+}
+
+/// Largest-remainder apportionment of `global` tokens over weighted
+/// cells with a guaranteed `min_per_cell` floor (clamped to the equal
+/// share). Deterministic: fractional-part ties break by ascending cell
+/// index. The result sums to exactly `global` whenever
+/// `global ≥ min_per_cell × cells`.
+pub fn apportion(global: usize, weights: &[f64], min_per_cell: usize) -> Vec<usize> {
+    let n = weights.len();
+    assert!(n > 0, "apportion over zero cells");
+    let floor = min_per_cell.min(global / n);
+    let rem = global - floor * n;
+    let mut w: Vec<f64> = weights
+        .iter()
+        .map(|&x| if x.is_finite() && x > 0.0 { x } else { 0.0 })
+        .collect();
+    let total_w: f64 = w.iter().sum();
+    if total_w <= 0.0 {
+        w.iter_mut().for_each(|x| *x = 1.0);
+    }
+    let total_w: f64 = w.iter().sum();
+    let quotas: Vec<f64> = w.iter().map(|&x| rem as f64 * x / total_w).collect();
+    let mut base: Vec<usize> = quotas.iter().map(|&q| q as usize).collect();
+    let mut assigned: usize = base.iter().sum();
+    // float-error guard: truncation can only undershoot in exact
+    // arithmetic, but quota sums may carry rounding; normalize both ways
+    while assigned > rem {
+        let i = (0..n).max_by_key(|&i| (base[i], std::cmp::Reverse(i))).unwrap();
+        base[i] -= 1;
+        assigned -= 1;
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        let fa = quotas[a] - base[a] as f64;
+        let fb = quotas[b] - base[b] as f64;
+        fb.partial_cmp(&fa).unwrap().then(a.cmp(&b))
+    });
+    for &i in order.iter().take(rem - assigned) {
+        base[i] += 1;
+    }
+    base.iter_mut().for_each(|b| *b += floor);
+    base
+}
+
+/// Equal per-head budgets; with `global` an exact multiple of the cell
+/// count (how the engine always builds it) every cell gets exactly the
+/// legacy scalar budget.
+pub struct UniformAllocator;
+
+impl BudgetAllocator for UniformAllocator {
+    fn kind(&self) -> AllocatorKind {
+        AllocatorKind::Uniform
+    }
+
+    fn plan(
+        &self,
+        layers: usize,
+        kv_heads: usize,
+        global: usize,
+        _stats: Option<&AttnStats>,
+    ) -> BudgetPlan {
+        let n = layers * kv_heads;
+        let per_lh = apportion(global, &vec![1.0; n], global / n.max(1));
+        BudgetPlan::per_head(layers, kv_heads, per_lh)
+    }
+}
+
+/// Depth-decayed budgets: layer `l` weighs `layers − l`, both heads of
+/// a layer equally. Shallow layers — whose keys condition every later
+/// block — keep the most tokens.
+pub struct PyramidAllocator;
+
+impl BudgetAllocator for PyramidAllocator {
+    fn kind(&self) -> AllocatorKind {
+        AllocatorKind::Pyramid
+    }
+
+    fn plan(
+        &self,
+        layers: usize,
+        kv_heads: usize,
+        global: usize,
+        _stats: Option<&AttnStats>,
+    ) -> BudgetPlan {
+        let n = layers * kv_heads;
+        let mut weights = Vec::with_capacity(n);
+        for l in 0..layers {
+            for _ in 0..kv_heads {
+                weights.push((layers - l) as f64);
+            }
+        }
+        let per_lh = apportion(global, &weights, floor_per_cell(global, n));
+        BudgetPlan::per_head(layers, kv_heads, per_lh)
+    }
+}
+
+/// Attention-statistics-driven budgets: each head weighs its attention
+/// perplexity (effective attended-token count) from the lane's
+/// [`AttnStats`]. Without signal (fresh chain, no decode steps yet) it
+/// falls back to the uniform split — adaptive chains start uniform and
+/// re-plan as statistics accrue.
+pub struct AdaptiveAllocator;
+
+impl BudgetAllocator for AdaptiveAllocator {
+    fn kind(&self) -> AllocatorKind {
+        AllocatorKind::Adaptive
+    }
+
+    fn plan(
+        &self,
+        layers: usize,
+        kv_heads: usize,
+        global: usize,
+        stats: Option<&AttnStats>,
+    ) -> BudgetPlan {
+        let n = layers * kv_heads;
+        // primary signal: attention perplexity from decode steps;
+        // fallback: accumulated retention mass (prefill α feeds this),
+        // for chains that carry α signal but no attention views yet;
+        // no signal at all → the uniform split.
+        let mut weights = stats
+            .map(|s| s.perplexities())
+            .filter(|w| w.len() == n)
+            .unwrap_or_default();
+        if weights.is_empty() {
+            if let Some(s) = stats {
+                if s.mass().len() == n && s.mass().iter().any(|&m| m > 0.0) {
+                    weights = s.mass().to_vec();
+                }
+            }
+        }
+        if weights.is_empty() {
+            return UniformAllocator.plan(layers, kv_heads, global, None);
+        }
+        let per_lh = apportion(global, &weights, floor_per_cell(global, n));
+        BudgetPlan::per_head(layers, kv_heads, per_lh)
+    }
+}
+
+/// Build an allocator instance.
+pub fn build_allocator(kind: AllocatorKind) -> Box<dyn BudgetAllocator> {
+    match kind {
+        AllocatorKind::Uniform => Box::new(UniformAllocator),
+        AllocatorKind::Pyramid => Box::new(PyramidAllocator),
+        AllocatorKind::Adaptive => Box::new(AdaptiveAllocator),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocator_kind_parse_roundtrip() {
+        for kind in AllocatorKind::all() {
+            let parsed: AllocatorKind = kind.name().parse().unwrap();
+            assert_eq!(parsed, kind);
+        }
+        assert!("zipf".parse::<AllocatorKind>().is_err());
+        assert_eq!(AllocatorKind::default(), AllocatorKind::Uniform);
+    }
+
+    #[test]
+    fn uniform_plan_matches_legacy_scalar() {
+        let plan = UniformAllocator.plan(4, 2, 40 * 8, None);
+        for l in 0..4 {
+            for h in 0..2 {
+                assert_eq!(plan.budget(l, h), 40);
+            }
+        }
+        assert!(plan.is_uniform());
+        assert_eq!(plan.uniform_budget(), Some(40));
+        assert_eq!(plan.total(4, 2), 320);
+    }
+
+    #[test]
+    fn shapeless_uniform_broadcasts() {
+        let plan = BudgetPlan::uniform(13);
+        assert_eq!(plan.budget(0, 0), 13);
+        assert_eq!(plan.budget(7, 3), 13);
+        assert_eq!(plan.total(3, 2), 78);
+        assert_eq!(plan.min_budget(), 13);
+        assert_eq!(plan.max_budget(), 13);
+        assert_eq!(plan.mean_budget_ceil(3, 2), 13);
+    }
+
+    #[test]
+    fn pyramid_front_loads_shallow_layers() {
+        let plan = PyramidAllocator.plan(4, 2, 320, None);
+        assert_eq!(plan.total(4, 2), 320, "conservation");
+        // floor = 0.25 × 40 = 10; remainder 240 over weights 4:3:2:1
+        assert_eq!(plan.budget(0, 0), 58);
+        assert_eq!(plan.budget(1, 0), 46);
+        assert_eq!(plan.budget(2, 0), 34);
+        assert_eq!(plan.budget(3, 0), 22);
+        assert_eq!(plan.budget(0, 0), plan.budget(0, 1), "heads equal per layer");
+        assert!(plan.budget(0, 0) > plan.budget(3, 0));
+        assert!(!plan.is_uniform());
+    }
+
+    #[test]
+    fn adaptive_without_stats_falls_back_to_uniform() {
+        let plan = AdaptiveAllocator.plan(2, 2, 100, None);
+        assert_eq!(plan.total(2, 2), 100);
+        assert_eq!(plan.budget(0, 0), 25);
+        let empty = AttnStats::new();
+        let plan = AdaptiveAllocator.plan(2, 2, 100, Some(&empty));
+        assert_eq!(plan.budget(1, 1), 25);
+    }
+
+    #[test]
+    fn adaptive_gives_diffuse_heads_more_budget() {
+        let (layers, heads, slots) = (1usize, 2usize, 8usize);
+        let mut stats = AttnStats::new();
+        // head 0: all mass on one slot (zero entropy); head 1: spread
+        let mut attn = vec![0.0f32; heads * slots];
+        attn[0] = 1.0;
+        for s in 0..slots {
+            attn[slots + s] = 0.125;
+        }
+        for _ in 0..4 {
+            stats.observe_attn(layers, heads, slots, &attn, &[0.0, 0.0]);
+        }
+        let plan = AdaptiveAllocator.plan(layers, heads, 64, Some(&stats));
+        assert_eq!(plan.total(1, 2), 64);
+        assert!(
+            plan.budget(0, 1) > plan.budget(0, 0),
+            "diffuse head must out-budget the peaked head: {:?} vs {:?}",
+            plan.budget(0, 1),
+            plan.budget(0, 0)
+        );
+        // floor: the peaked head still keeps ≥ 25% of the equal share
+        assert!(plan.budget(0, 0) >= 8);
+    }
+
+    #[test]
+    fn adaptive_falls_back_to_mass_without_entropy_signal() {
+        // prefill α only, no decode steps: perplexities are empty and
+        // the accumulated keep-mass (1 − α) drives the weights
+        let mut stats = AttnStats::new();
+        stats.observe_alpha(1, 2, &[0.9, 0.1]);
+        assert_eq!(stats.steps(), 0);
+        let plan = AdaptiveAllocator.plan(1, 2, 64, Some(&stats));
+        assert_eq!(plan.total(1, 2), 64);
+        assert!(
+            plan.budget(0, 1) > plan.budget(0, 0),
+            "the head retaining more mass gets the bigger budget"
+        );
+    }
+
+    #[test]
+    fn plans_conserve_global_budget_property() {
+        let allocs: Vec<Box<dyn BudgetAllocator>> = vec![
+            Box::new(UniformAllocator),
+            Box::new(PyramidAllocator),
+            Box::new(AdaptiveAllocator),
+        ];
+        let mut stats = AttnStats::new();
+        let attn: Vec<f32> = (0..3 * 2 * 16).map(|i| (i % 7) as f32 * 0.25).collect();
+        stats.observe_attn(3, 2, 16, &attn, &[0.5f32; 6]);
+        for alloc in &allocs {
+            for layers in 1..=4usize {
+                for kv_heads in 1..=3usize {
+                    for per_head in [1usize, 5, 17, 40] {
+                        let n = layers * kv_heads;
+                        let global = per_head * n;
+                        let st = if (layers, kv_heads) == (3, 2) {
+                            Some(&stats)
+                        } else {
+                            None
+                        };
+                        let plan = alloc.plan(layers, kv_heads, global, st);
+                        assert_eq!(
+                            plan.total(layers, kv_heads),
+                            global,
+                            "{:?} leaked budget at {layers}x{kv_heads}x{per_head}",
+                            alloc.kind()
+                        );
+                        assert!(plan.min_budget() >= 1, "starved head");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn apportion_is_deterministic_and_exact() {
+        let w = [1.0, 1.0, 1.0];
+        assert_eq!(apportion(10, &w, 0), vec![4, 3, 3]);
+        // zero/negative weights fall back to equal shares
+        assert_eq!(apportion(9, &[0.0, -1.0, 0.0], 0), vec![3, 3, 3]);
+        // floor is honored and clamped
+        let out = apportion(8, &[100.0, 1.0], 3);
+        assert_eq!(out.iter().sum::<usize>(), 8);
+        assert!(out[1] >= 3);
+    }
+
+    #[test]
+    fn effective_cr_reflects_plan_totals() {
+        let plan = BudgetPlan::uniform(40);
+        assert!((plan.effective_cr(160, 4, 2) - 4.0).abs() < 1e-12);
+        let plan = BudgetPlan::per_head(1, 2, vec![20, 60]);
+        assert!((plan.effective_cr(160, 1, 2) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn attn_stats_accumulate_mass_and_alpha() {
+        let mut s = AttnStats::new();
+        s.observe_attn(1, 1, 4, &[0.25, 0.25, 0.25, 0.25], &[0.0]);
+        assert_eq!(s.steps(), 1);
+        assert!((s.mass()[0] - 1.0).abs() < 1e-9);
+        // uniform over 4 slots → perplexity 4
+        assert!((s.perplexities()[0] - 4.0).abs() < 1e-6);
+        s.observe_alpha(1, 1, &[0.25]);
+        assert!((s.mass()[0] - 1.75).abs() < 1e-9);
+        assert_eq!(s.steps(), 1, "alpha observations are not entropy steps");
+    }
+}

@@ -2,40 +2,45 @@
 //!
 //! The budget is split evenly between a recent-token window and a
 //! heavy-hitter set (App. F.1). Cumulative attention scores accumulate
-//! per slot each step; on overflow the lowest-cumulative non-recent
-//! token is evicted (layer-wide, like TOVA).
+//! each step; on overflow the lowest-cumulative non-recent token is
+//! evicted.
 //!
-//! Knobs: token `budget` per head (App. F.1: (input + max_gen) / CR);
-//! the recent window is fixed to budget / 2. See `docs/POLICIES.md`.
+//! Scoring follows the reference layer-wide rule (mass summed over the
+//! layer's KV heads, as in TOVA), but both the score table and the
+//! **enforcement loop are head-granular**: `cum` is kept per (layer,
+//! head, slot) — each head accumulates the layer-summed mass and
+//! resets a slot's score only when *it* evicts that slot — so a
+//! non-uniform [`BudgetPlan`] holds for every head. The pre-plan
+//! implementation probed head 0's live count and evicted the same slot
+//! across all heads; under a uniform plan the heads stay in lockstep
+//! (identical live sets, scores, and reset history), making the
+//! uniform path bit-exact with that legacy coupled eviction.
+//!
+//! Knobs: a [`BudgetPlan`] (uniform = App. F.1 (input + max_gen) / CR
+//! per head); the recent window is each head's budget / 2. See
+//! `docs/POLICIES.md`.
 
+use super::budget::BudgetPlan;
 use super::{Policy, PolicyKind, StepView};
 use crate::kvcache::CacheStore;
 
 pub struct H2oPolicy {
-    budget: usize,
-    recent: usize,
-    /// cumulative attention per (layer, slot)
+    plan: BudgetPlan,
+    /// cumulative layer-summed attention per (layer, head, slot)
     cum: Vec<f32>,
-    layers: usize,
-    slots: usize,
 }
 
 impl H2oPolicy {
-    pub fn new(budget: usize) -> Self {
+    pub fn new(plan: BudgetPlan) -> Self {
         Self {
-            budget,
-            recent: budget / 2,
+            plan,
             cum: Vec::new(),
-            layers: 0,
-            slots: 0,
         }
     }
 
-    fn ensure(&mut self, layers: usize, slots: usize) {
-        if self.cum.len() != layers * slots {
-            self.layers = layers;
-            self.slots = slots;
-            self.cum = vec![0.0; layers * slots];
+    fn ensure(&mut self, layers: usize, kv_heads: usize, slots: usize) {
+        if self.cum.len() != layers * kv_heads * slots {
+            self.cum = vec![0.0; layers * kv_heads * slots];
         }
     }
 }
@@ -45,52 +50,61 @@ impl Policy for H2oPolicy {
         PolicyKind::H2o
     }
 
-    fn budget(&self) -> Option<usize> {
-        Some(self.budget)
+    fn plan(&self) -> Option<&BudgetPlan> {
+        Some(&self.plan)
+    }
+
+    fn install_plan(&mut self, plan: BudgetPlan) {
+        self.plan = plan;
     }
 
     fn post_write(&mut self, cache: &mut CacheStore, view: &StepView<'_>) {
         let g = cache.geom;
-        self.ensure(g.layers, g.slots);
-        // accumulate this step's attention mass (summed over KV heads)
+        self.ensure(g.layers, g.kv_heads, g.slots);
+        // accumulate this step's attention mass (summed over the
+        // layer's KV heads, credited to every head's own score table)
         for l in 0..g.layers {
             for slot in 0..g.slots {
                 let mut mass = 0.0f32;
                 for h in 0..g.kv_heads {
                     mass += view.attn[(l * g.kv_heads + h) * g.slots + slot];
                 }
-                self.cum[l * g.slots + slot] += mass;
+                for h in 0..g.kv_heads {
+                    self.cum[(l * g.kv_heads + h) * g.slots + slot] += mass;
+                }
             }
         }
         for l in 0..g.layers {
-            while cache.live_count(view.lane, l, 0) > self.budget {
-                // candidates: live tokens outside the recent window
-                let cutoff = view.pos.saturating_sub(self.recent);
-                let mut best = None;
-                let mut best_score = f32::INFINITY;
-                let mut oldest: Option<(usize, usize)> = None;
-                for (slot, pos) in cache.live_slots(view.lane, l, 0) {
-                    if oldest.map(|(_, p)| pos < p).unwrap_or(true) {
-                        oldest = Some((slot, pos));
+            for h in 0..g.kv_heads {
+                let budget = self.plan.budget(l, h);
+                let recent = budget / 2;
+                while cache.live_count(view.lane, l, h) > budget {
+                    // candidates: live tokens outside the recent window
+                    let cutoff = view.pos.saturating_sub(recent);
+                    let mut best = None;
+                    let mut best_score = f32::INFINITY;
+                    let mut oldest: Option<(usize, usize)> = None;
+                    for (slot, pos) in cache.live_slots(view.lane, l, h) {
+                        if oldest.map(|(_, p)| pos < p).unwrap_or(true) {
+                            oldest = Some((slot, pos));
+                        }
+                        if pos >= cutoff {
+                            continue;
+                        }
+                        let score = self.cum[(l * g.kv_heads + h) * g.slots + slot];
+                        if score < best_score {
+                            best_score = score;
+                            best = Some(slot);
+                        }
                     }
-                    if pos >= cutoff {
-                        continue;
-                    }
-                    let score = self.cum[l * g.slots + slot];
-                    if score < best_score {
-                        best_score = score;
-                        best = Some(slot);
-                    }
-                }
-                // all tokens recent → fall back to evicting the oldest
-                let slot = match best.or(oldest.map(|(s, _)| s)) {
-                    Some(s) => s,
-                    None => break,
-                };
-                for h in 0..g.kv_heads {
+                    // all tokens recent → fall back to evicting the oldest
+                    let slot = match best.or(oldest.map(|(s, _)| s)) {
+                        Some(s) => s,
+                        None => break,
+                    };
                     cache.evict(view.lane, l, h, slot);
+                    self.cum[(l * g.kv_heads + h) * g.slots + slot] = 0.0;
                 }
-                self.cum[l * g.slots + slot] = 0.0;
             }
         }
     }
@@ -98,7 +112,25 @@ impl Policy for H2oPolicy {
     fn post_prefill(&mut self, cache: &mut CacheStore, lane: usize, _pos: usize) {
         // dense prefill until budget, then switch (App. F.1); without
         // prefill scores the heavy set starts from the recency prior.
-        super::window::trim_to_window(cache, lane, self.budget);
+        super::window::trim_to_plan(cache, lane, &self.plan);
+        // this path also runs at adaptive re-plans mid-decode: any
+        // slot the trim freed must not carry its accumulated mass
+        // into the token that later recycles it (the post_write
+        // eviction path resets per-slot scores the same way). At
+        // prefill end the table is still empty, so this is a no-op
+        // there — the uniform legacy path is untouched.
+        if !self.cum.is_empty() {
+            let g = cache.geom;
+            for l in 0..g.layers {
+                for h in 0..g.kv_heads {
+                    for s in 0..g.slots {
+                        if cache.slot_pos(lane, l, h, s).is_none() {
+                            self.cum[(l * g.kv_heads + h) * g.slots + s] = 0.0;
+                        }
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -131,7 +163,7 @@ mod tests {
     fn evicts_lowest_cumulative_outside_recent() {
         let mut c = store();
         fill(&mut c, 5);
-        let mut p = H2oPolicy::new(4); // recent window = 2
+        let mut p = H2oPolicy::new(BudgetPlan::uniform(4)); // recent window = 2
         let mut attn = vec![0.0f32; 8];
         // slots 0..4 hold positions 0..4; pos cutoff = 5-2 = 3
         attn[0] = 0.9; // heavy hitter
@@ -157,7 +189,7 @@ mod tests {
     fn recent_window_is_protected() {
         let mut c = store();
         fill(&mut c, 5);
-        let mut p = H2oPolicy::new(4);
+        let mut p = H2oPolicy::new(BudgetPlan::uniform(4));
         let attn = vec![0.0f32; 8];
         p.post_write(
             &mut c,
@@ -179,7 +211,7 @@ mod tests {
     fn accumulates_across_steps() {
         let mut c = store();
         fill(&mut c, 3);
-        let mut p = H2oPolicy::new(2); // force eviction pressure
+        let mut p = H2oPolicy::new(BudgetPlan::uniform(2)); // force eviction pressure
         let mut attn = vec![0.0f32; 8];
         attn[0] = 0.3;
         attn[1] = 0.2;
@@ -197,5 +229,51 @@ mod tests {
             },
         );
         assert_eq!(c.live_count(0, 0, 0), 2);
+    }
+
+    #[test]
+    fn per_head_budgets_and_score_tables_are_independent() {
+        let mut c = CacheStore::new(
+            Geometry {
+                layers: 1,
+                kv_heads: 2,
+                slots: 8,
+                head_dim: 2,
+                page_size: 4,
+            },
+            1,
+        );
+        for pos in 0..6 {
+            for h in 0..2 {
+                let s = c.alloc_slot(0, 0, h).unwrap();
+                c.write(0, 0, h, s, pos, &[0.0; 2], &[0.0; 2]);
+            }
+        }
+        // head 0 may keep 6, head 1 only 2 — the old head-0 probe would
+        // never have evicted anything here
+        let mut p = H2oPolicy::new(BudgetPlan::per_head(1, 2, vec![6, 2]));
+        let attn: Vec<f32> = (0..2 * 8).map(|i| (i % 5) as f32 * 0.125).collect();
+        p.post_write(
+            &mut c,
+            &StepView {
+                lane: 0,
+                pos: 6,
+                alpha: &[0.0; 2],
+                attn: &attn,
+                attn_self: &[0.0; 2],
+                written: &[],
+            },
+        );
+        assert_eq!(c.live_count(0, 0, 0), 6, "head 0 untouched");
+        assert_eq!(c.live_count(0, 0, 1), 2, "head 1's own budget holds");
+        // head 1's evictions reset only its own score rows
+        let evicted: Vec<usize> = (0..8)
+            .filter(|&s| c.slot_pos(0, 0, 1, s).is_none())
+            .collect();
+        assert_eq!(evicted.len(), 4);
+        for s in evicted {
+            assert_eq!(p.cum[8 + s], 0.0, "head 1 row reset");
+            assert!(p.cum[s] > 0.0 || attn[s] + attn[8 + s] == 0.0, "head 0 rows kept");
+        }
     }
 }

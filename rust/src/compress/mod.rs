@@ -13,7 +13,13 @@
 //! * [`dmc`]     — Dynamic Memory Compression baseline: α-driven merge
 //!   into the most recent entry via weighted averaging;
 //! * vanilla / sliding-window — trivial baselines.
+//!
+//! Budgeted policies enforce a per-(layer, KV-head) [`BudgetPlan`]
+//! produced by a pluggable [`BudgetAllocator`] (see [`budget`]):
+//! uniform plans reproduce the legacy scalar App. F.1 budget
+//! bit-exactly; pyramid/adaptive plans open the non-uniform axis.
 
+pub mod budget;
 pub mod dmc;
 pub mod dms;
 pub mod h2o;
@@ -24,6 +30,11 @@ pub mod window;
 use std::str::FromStr;
 
 use anyhow::bail;
+
+pub use budget::{
+    apportion, build_allocator, AdaptiveAllocator, AllocatorKind, AttnStats,
+    BudgetAllocator, BudgetPlan, PyramidAllocator, UniformAllocator,
+};
 
 use crate::kvcache::CacheStore;
 
@@ -120,10 +131,21 @@ pub struct StepView<'a> {
 pub trait Policy: Send {
     fn kind(&self) -> PolicyKind;
 
-    /// Token budget per KV head (None = unbounded). Paper App. F.1:
-    /// budget = (input_len + max_gen) / CR.
-    fn budget(&self) -> Option<usize> {
+    /// The per-(layer, KV-head) budget plan this policy enforces
+    /// (None = unbudgeted). Replaces the old scalar `budget()`: a
+    /// [`BudgetPlan::Uniform`] plan reproduces the App. F.1 per-head
+    /// rule (budget = (input_len + max_gen) / CR) bit-exactly, while
+    /// non-uniform plans open the per-head budget axis.
+    fn plan(&self) -> Option<&BudgetPlan> {
         None
+    }
+
+    /// Install a freshly allocated plan (admission, fork inheritance
+    /// from the group leader, adaptive re-planning during decode).
+    /// Enforcement picks the new budgets up on the next `post_write`.
+    /// No-op for unbudgeted policies.
+    fn install_plan(&mut self, plan: BudgetPlan) {
+        let _ = plan;
     }
 
     /// Quest: number of pages to retrieve per head (None disables).
@@ -157,11 +179,21 @@ pub trait Policy: Send {
     }
 }
 
-/// Build a policy instance.
+/// App. F.1 per-head budget: (input + max_gen) / CR, clamped so a
+/// chain always keeps at least one DMS window of tokens.
+pub fn per_head_budget(cr: f64, max_total_len: usize, window: usize) -> usize {
+    ((max_total_len as f64 / cr).ceil() as usize).max(window.max(1))
+}
+
+/// Build a policy instance under the legacy uniform budget rule.
 ///
 /// * `max_total_len` = prompt + max generation (the L budget), which
 ///   parameterizes the App. F.1 budget rule (input + max_gen) / CR.
 /// * `window` is the DMS eviction delay (from the model variant).
+///
+/// Equivalent to [`build_policy_planned`] with a
+/// [`BudgetPlan::Uniform`] plan at the App. F.1 per-head budget —
+/// bit-exact with the pre-plan policy zoo.
 pub fn build_policy(
     kind: PolicyKind,
     cr: f64,
@@ -169,15 +201,27 @@ pub fn build_policy(
     window: usize,
     page_size: usize,
 ) -> Box<dyn Policy> {
-    let budget = ((max_total_len as f64 / cr).ceil() as usize).max(window.max(1));
+    let budget = per_head_budget(cr, max_total_len, window);
+    build_policy_planned(kind, BudgetPlan::uniform(budget), window, page_size)
+}
+
+/// Build a policy instance enforcing an explicit [`BudgetPlan`].
+/// Unbudgeted policies (vanilla, DMS, DMC) ignore the plan — their
+/// compression is learned, not allocated.
+pub fn build_policy_planned(
+    kind: PolicyKind,
+    plan: BudgetPlan,
+    window: usize,
+    page_size: usize,
+) -> Box<dyn Policy> {
     match kind {
         PolicyKind::Vanilla => Box::new(window::VanillaPolicy),
-        PolicyKind::Window => Box::new(window::WindowPolicy::new(budget)),
+        PolicyKind::Window => Box::new(window::WindowPolicy::new(plan)),
         PolicyKind::Dms => Box::new(dms::DmsPolicy::new(window, false)),
         PolicyKind::DmsImmediate => Box::new(dms::DmsPolicy::new(window, true)),
-        PolicyKind::Tova => Box::new(tova::TovaPolicy::new(budget)),
-        PolicyKind::H2o => Box::new(h2o::H2oPolicy::new(budget)),
-        PolicyKind::Quest => Box::new(quest::QuestPolicy::new(budget, page_size)),
+        PolicyKind::Tova => Box::new(tova::TovaPolicy::new(plan)),
+        PolicyKind::H2o => Box::new(h2o::H2oPolicy::new(plan)),
+        PolicyKind::Quest => Box::new(quest::QuestPolicy::new(plan, page_size)),
         PolicyKind::Dmc => Box::new(dmc::DmcPolicy::new()),
     }
 }
@@ -206,9 +250,24 @@ mod tests {
 
     #[test]
     fn budget_rule_matches_appendix_f1() {
-        // budget = (input + max_gen) / CR = 160/4
+        // budget = (input + max_gen) / CR = 160/4, as a uniform plan
         let p = build_policy(PolicyKind::Tova, 4.0, 160, 16, 16);
-        assert_eq!(p.budget(), Some(40));
+        let plan = p.plan().expect("tova is budgeted");
+        assert_eq!(plan.uniform_budget(), Some(40));
+        assert_eq!(per_head_budget(4.0, 160, 16), 40);
+        // unbudgeted policies expose no plan and ignore installs
+        let mut p = build_policy(PolicyKind::Dms, 4.0, 160, 16, 16);
+        assert!(p.plan().is_none());
+        p.install_plan(BudgetPlan::uniform(7));
+        assert!(p.plan().is_none());
+    }
+
+    #[test]
+    fn planned_policies_adopt_installed_plans() {
+        let mut p = build_policy(PolicyKind::H2o, 4.0, 160, 16, 16);
+        let plan = BudgetPlan::per_head(1, 2, vec![10, 70]);
+        p.install_plan(plan.clone());
+        assert_eq!(p.plan(), Some(&plan));
     }
 
     #[test]

@@ -7,29 +7,44 @@
 //! (model.py); this policy only carries the page budget and the
 //! metadata overhead accounting.
 //!
-//! Knobs: `budget_tokens` (App. F.1), rounded up to pages of
-//! `page_size`. Reduces reads, not residency. See `docs/POLICIES.md`.
+//! Knobs: a [`BudgetPlan`] (uniform = App. F.1 tokens per head),
+//! rounded up to pages of `page_size`. The decode executable takes a
+//! single `k` for the whole batch, so a non-uniform plan is consumed
+//! as its ceiling-mean per-head budget — head-granular page selection
+//! would need an HLO change (documented limitation; the plan still
+//! threads through for accounting and the `kv.plan_*` gauges).
+//! Reduces reads, not residency. See `docs/POLICIES.md`.
 
+use super::budget::BudgetPlan;
 use super::{Policy, PolicyKind, StepView};
 use crate::kvcache::CacheStore;
 
 pub struct QuestPolicy {
-    budget_tokens: usize,
+    plan: BudgetPlan,
     page_size: usize,
 }
 
 impl QuestPolicy {
-    pub fn new(budget_tokens: usize, page_size: usize) -> Self {
-        Self {
-            budget_tokens,
-            page_size,
-        }
+    pub fn new(plan: BudgetPlan, page_size: usize) -> Self {
+        Self { plan, page_size }
     }
 
     /// Memory/read overhead of the page representatives, in token
     /// equivalents per allocated page (a min and a max vector, each the
     /// size of one key).
     pub const META_TOKENS_PER_PAGE: f64 = 2.0;
+
+    /// Scalar per-head token read budget the page budget derives from:
+    /// the plan's common budget when uniform, its ceiling-mean
+    /// otherwise (the decode HLO takes one `k` per batch).
+    fn budget_tokens(&self) -> usize {
+        match &self.plan {
+            BudgetPlan::Uniform { per_head } => *per_head,
+            BudgetPlan::PerHead {
+                layers, kv_heads, ..
+            } => self.plan.mean_budget_ceil(*layers, *kv_heads),
+        }
+    }
 }
 
 impl Policy for QuestPolicy {
@@ -37,13 +52,18 @@ impl Policy for QuestPolicy {
         PolicyKind::Quest
     }
 
-    fn budget(&self) -> Option<usize> {
+    fn plan(&self) -> Option<&BudgetPlan> {
         // read budget, not a residency budget — nothing is evicted
-        Some(self.budget_tokens)
+        Some(&self.plan)
+    }
+
+    fn install_plan(&mut self, plan: BudgetPlan) {
+        self.plan = plan;
     }
 
     fn quest_pages(&self) -> Option<usize> {
-        Some((self.budget_tokens + self.page_size - 1) / self.page_size)
+        let budget = self.budget_tokens();
+        Some((budget + self.page_size - 1) / self.page_size)
     }
 
     fn post_write(&mut self, _cache: &mut CacheStore, _view: &StepView<'_>) {
@@ -57,12 +77,19 @@ mod tests {
 
     #[test]
     fn page_budget_rounds_up() {
-        let p = QuestPolicy::new(40, 16);
+        let p = QuestPolicy::new(BudgetPlan::uniform(40), 16);
         assert_eq!(p.quest_pages(), Some(3));
-        let p = QuestPolicy::new(48, 16);
+        let p = QuestPolicy::new(BudgetPlan::uniform(48), 16);
         assert_eq!(p.quest_pages(), Some(3));
-        let p = QuestPolicy::new(1, 16);
+        let p = QuestPolicy::new(BudgetPlan::uniform(1), 16);
         assert_eq!(p.quest_pages(), Some(1));
+    }
+
+    #[test]
+    fn nonuniform_plan_reads_at_ceiling_mean() {
+        // mean of (24, 56) = 40 → 3 pages of 16
+        let p = QuestPolicy::new(BudgetPlan::per_head(1, 2, vec![24, 56]), 16);
+        assert_eq!(p.quest_pages(), Some(3));
     }
 
     #[test]
@@ -82,7 +109,7 @@ mod tests {
             let s = c.alloc_slot(0, 0, 0).unwrap();
             c.write(0, 0, 0, s, pos, &[0.0; 2], &[0.0; 2]);
         }
-        let mut p = QuestPolicy::new(4, 4);
+        let mut p = QuestPolicy::new(BudgetPlan::uniform(4), 4);
         p.post_write(
             &mut c,
             &StepView {

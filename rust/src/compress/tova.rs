@@ -1,23 +1,32 @@
 //! TOVA — Token Omission Via Attention (Oren et al., 2024).
 //!
-//! At each step, if the per-head cache exceeds its budget, evict the
-//! token with the lowest attention weight in the *current* step,
-//! aggregated over the heads of each layer (§2.2: i* = argmin_i Σ_h
-//! a_h(t)_i). Eviction is layer-wide: all KV heads of a layer drop the
-//! same token, as in the reference implementation.
+//! At each step, any (layer, head) whose cache exceeds its planned
+//! budget evicts the token with the lowest attention weight in the
+//! *current* step, aggregated over the heads of the layer (§2.2:
+//! i* = argmin_i Σ_h a_h(t)_i — the scoring is the reference paper's
+//! layer-wide rule). **Enforcement** is head-granular: each (layer,
+//! head) runs its own eviction loop against its own budget, so a
+//! non-uniform [`BudgetPlan`] holds for every head — not just head 0,
+//! which the pre-plan implementation probed while coupling all heads
+//! to its eviction choice. Under a uniform plan the heads of a layer
+//! stay in lockstep (identical live sets × identical layer-summed
+//! scores ⇒ identical eviction sequences), which makes the uniform
+//! path bit-exact with the legacy coupled eviction.
 //!
-//! Knobs: token `budget` per head (App. F.1). See `docs/POLICIES.md`.
+//! Knobs: a [`BudgetPlan`] (uniform = App. F.1 (input + max_gen) / CR
+//! per head). See `docs/POLICIES.md`.
 
+use super::budget::BudgetPlan;
 use super::{Policy, PolicyKind, StepView};
 use crate::kvcache::CacheStore;
 
 pub struct TovaPolicy {
-    budget: usize,
+    plan: BudgetPlan,
 }
 
 impl TovaPolicy {
-    pub fn new(budget: usize) -> Self {
-        Self { budget }
+    pub fn new(plan: BudgetPlan) -> Self {
+        Self { plan }
     }
 }
 
@@ -26,33 +35,45 @@ impl Policy for TovaPolicy {
         PolicyKind::Tova
     }
 
-    fn budget(&self) -> Option<usize> {
-        Some(self.budget)
+    fn plan(&self) -> Option<&BudgetPlan> {
+        Some(&self.plan)
+    }
+
+    fn install_plan(&mut self, plan: BudgetPlan) {
+        self.plan = plan;
     }
 
     fn post_write(&mut self, cache: &mut CacheStore, view: &StepView<'_>) {
         let g = cache.geom;
         let s = g.slots;
+        let mut scores = vec![0.0f32; s];
         for l in 0..g.layers {
-            // aggregate attention over the layer's KV heads
-            while cache.live_count(view.lane, l, 0) > self.budget {
-                let mut best_slot = None;
-                let mut best_score = f32::INFINITY;
-                for (slot, pos) in cache.live_slots(view.lane, l, 0) {
-                    if pos == view.pos {
-                        continue; // the token written this step has no score yet
-                    }
-                    let mut score = 0.0f32;
-                    for h in 0..g.kv_heads {
-                        score += view.attn[(l * g.kv_heads + h) * s + slot];
-                    }
-                    if score < best_score {
-                        best_score = score;
-                        best_slot = Some(slot);
-                    }
+            // layer-summed score (§2.2), hoisted once per layer: it is
+            // a pure function of this step's attention view, invariant
+            // across heads and evictions (same f32 summation order as
+            // the per-candidate recompute, so choices are unchanged)
+            for (slot, score) in scores.iter_mut().enumerate() {
+                let mut sum = 0.0f32;
+                for hh in 0..g.kv_heads {
+                    sum += view.attn[(l * g.kv_heads + hh) * s + slot];
                 }
-                let Some(slot) = best_slot else { break };
-                for h in 0..g.kv_heads {
+                *score = sum;
+            }
+            for h in 0..g.kv_heads {
+                let budget = self.plan.budget(l, h);
+                while cache.live_count(view.lane, l, h) > budget {
+                    let mut best_slot = None;
+                    let mut best_score = f32::INFINITY;
+                    for (slot, pos) in cache.live_slots(view.lane, l, h) {
+                        if pos == view.pos {
+                            continue; // the token written this step has no score yet
+                        }
+                        if scores[slot] < best_score {
+                            best_score = scores[slot];
+                            best_slot = Some(slot);
+                        }
+                    }
+                    let Some(slot) = best_slot else { break };
                     cache.evict(view.lane, l, h, slot);
                 }
             }
@@ -65,7 +86,7 @@ impl Policy for TovaPolicy {
         // per-token prefill attention we trim recency-first, which is
         // the TOVA behaviour in the absence of scores (recent tokens
         // dominate attention).
-        super::window::trim_to_window(cache, lane, self.budget);
+        super::window::trim_to_plan(cache, lane, &self.plan);
     }
 }
 
@@ -103,7 +124,7 @@ mod tests {
             attn[slot] = score; // head 0
             attn[8 + slot] = score; // head 1
         }
-        let mut p = TovaPolicy::new(3);
+        let mut p = TovaPolicy::new(BudgetPlan::uniform(3));
         p.post_write(
             &mut c,
             &StepView {
@@ -118,6 +139,34 @@ mod tests {
         assert_eq!(c.live_count(0, 0, 0), 3);
         assert_eq!(c.live_count(0, 0, 1), 3);
         assert!(c.slot_pos(0, 0, 0, 2).is_none(), "slot 2 evicted");
+        assert!(c.slot_pos(0, 0, 1, 2).is_none(), "head 1 evicted it too");
+    }
+
+    #[test]
+    fn per_head_budgets_are_enforced_for_every_head() {
+        let mut c = store();
+        for pos in 0..6 {
+            for h in 0..2 {
+                let s = c.alloc_slot(0, 0, h).unwrap();
+                c.write(0, 0, h, s, pos, &[0.0; 2], &[0.0; 2]);
+            }
+        }
+        let attn: Vec<f32> = (0..2 * 8).map(|i| i as f32 * 0.0625).collect();
+        // head 0 may keep 5 tokens, head 1 only 2
+        let mut p = TovaPolicy::new(BudgetPlan::per_head(1, 2, vec![5, 2]));
+        p.post_write(
+            &mut c,
+            &StepView {
+                lane: 0,
+                pos: 5,
+                alpha: &[0.0; 2],
+                attn: &attn,
+                attn_self: &[0.0; 2],
+                written: &[],
+            },
+        );
+        assert_eq!(c.live_count(0, 0, 0), 5);
+        assert_eq!(c.live_count(0, 0, 1), 2, "head 1's own budget holds");
     }
 
     #[test]
@@ -132,7 +181,7 @@ mod tests {
         // zero attention everywhere: the just-written token (pos 2)
         // must survive; one of the others goes.
         let attn = vec![0.0f32; 2 * 8];
-        let mut p = TovaPolicy::new(2);
+        let mut p = TovaPolicy::new(BudgetPlan::uniform(2));
         p.post_write(
             &mut c,
             &StepView {
@@ -157,7 +206,7 @@ mod tests {
             c.write(0, 0, h, s, 0, &[0.0; 2], &[0.0; 2]);
         }
         let attn = vec![0.1f32; 2 * 8];
-        let mut p = TovaPolicy::new(4);
+        let mut p = TovaPolicy::new(BudgetPlan::uniform(4));
         p.post_write(
             &mut c,
             &StepView {

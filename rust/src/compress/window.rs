@@ -1,9 +1,11 @@
 //! Trivial policies: vanilla (no compression) and a fixed sliding
 //! window (evict everything older than the budget).
 //!
-//! Knobs: token `budget` per head for the window (App. F.1); vanilla
-//! has none. See `docs/POLICIES.md`.
+//! Knobs: a per-(layer, head) [`BudgetPlan`] for the window (uniform
+//! plans reproduce the App. F.1 scalar budget); vanilla has none. See
+//! `docs/POLICIES.md`.
 
+use super::budget::BudgetPlan;
 use super::{Policy, PolicyKind, StepView};
 use crate::kvcache::CacheStore;
 
@@ -18,14 +20,14 @@ impl Policy for VanillaPolicy {
     fn post_write(&mut self, _cache: &mut CacheStore, _view: &StepView<'_>) {}
 }
 
-/// Keep only the most recent `budget` tokens per head.
+/// Keep only the most recent `plan.budget(l, h)` tokens per head.
 pub struct WindowPolicy {
-    budget: usize,
+    plan: BudgetPlan,
 }
 
 impl WindowPolicy {
-    pub fn new(budget: usize) -> Self {
-        Self { budget }
+    pub fn new(plan: BudgetPlan) -> Self {
+        Self { plan }
     }
 }
 
@@ -34,24 +36,30 @@ impl Policy for WindowPolicy {
         PolicyKind::Window
     }
 
-    fn budget(&self) -> Option<usize> {
-        Some(self.budget)
+    fn plan(&self) -> Option<&BudgetPlan> {
+        Some(&self.plan)
+    }
+
+    fn install_plan(&mut self, plan: BudgetPlan) {
+        self.plan = plan;
     }
 
     fn post_write(&mut self, cache: &mut CacheStore, view: &StepView<'_>) {
-        trim_to_window(cache, view.lane, self.budget);
+        trim_to_plan(cache, view.lane, &self.plan);
     }
 
     fn post_prefill(&mut self, cache: &mut CacheStore, lane: usize, _pos: usize) {
-        trim_to_window(cache, lane, self.budget);
+        trim_to_plan(cache, lane, &self.plan);
     }
 }
 
-/// Evict oldest-first down to `budget` live slots per (layer, head).
-pub(crate) fn trim_to_window(cache: &mut CacheStore, lane: usize, budget: usize) {
+/// Evict oldest-first down to each (layer, head)'s planned budget
+/// (a uniform plan reproduces the legacy scalar-window trim exactly).
+pub(crate) fn trim_to_plan(cache: &mut CacheStore, lane: usize, plan: &BudgetPlan) {
     let g = cache.geom;
     for l in 0..g.layers {
         for h in 0..g.kv_heads {
+            let budget = plan.budget(l, h);
             let mut live = cache.live_slots(lane, l, h);
             if live.len() <= budget {
                 continue;
@@ -90,12 +98,41 @@ mod tests {
             let s = c.alloc_slot(0, 0, 0).unwrap();
             c.write(0, 0, 0, s, pos, &[pos as f32; 2], &[0.0; 2]);
         }
-        trim_to_window(&mut c, 0, 3);
+        trim_to_plan(&mut c, 0, &BudgetPlan::uniform(3));
         assert_eq!(c.live_count(0, 0, 0), 3);
         let mut kept: Vec<usize> =
             c.live_slots(0, 0, 0).iter().map(|&(_, p)| p).collect();
         kept.sort_unstable();
         assert_eq!(kept, vec![5, 6, 7]);
+    }
+
+    #[test]
+    fn per_head_plan_trims_each_head_to_its_own_budget() {
+        let mut c = CacheStore::new(
+            Geometry {
+                layers: 1,
+                kv_heads: 2,
+                slots: 16,
+                head_dim: 2,
+                page_size: 4,
+            },
+            1,
+        );
+        for pos in 0..8 {
+            for h in 0..2 {
+                let s = c.alloc_slot(0, 0, h).unwrap();
+                c.write(0, 0, h, s, pos, &[0.0; 2], &[0.0; 2]);
+            }
+        }
+        let plan = BudgetPlan::per_head(1, 2, vec![6, 2]);
+        trim_to_plan(&mut c, 0, &plan);
+        assert_eq!(c.live_count(0, 0, 0), 6);
+        assert_eq!(c.live_count(0, 0, 1), 2);
+        // head 1 kept its most recent two tokens
+        let mut kept: Vec<usize> =
+            c.live_slots(0, 0, 1).iter().map(|&(_, p)| p).collect();
+        kept.sort_unstable();
+        assert_eq!(kept, vec![6, 7]);
     }
 
     #[test]

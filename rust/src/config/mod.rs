@@ -7,7 +7,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Result};
 
-use crate::compress::PolicyKind;
+use crate::compress::{AllocatorKind, PolicyKind};
 use crate::kvcache::KvDtype;
 use crate::util::{Args, Json};
 
@@ -54,6 +54,15 @@ pub struct EngineConfig {
     /// documented precision cost (docs/NUMERICS.md); lane views and
     /// executor uploads stay f32 either way.
     pub kv_dtype: KvDtype,
+    /// Budget allocator shaping each chain's per-(layer, KV-head)
+    /// budget plan (`--allocator uniform|pyramid|adaptive`). `uniform`
+    /// reproduces the scalar App. F.1 budget bit-exactly; `pyramid`
+    /// front-loads shallow layers; `adaptive` re-plans from per-head
+    /// attention statistics during decode (see docs/POLICIES.md).
+    pub allocator: AllocatorKind,
+    /// Decode steps between adaptive re-plans of a chain's budget plan
+    /// (`--replan-interval`; ignored by the signal-free allocators).
+    pub replan_interval: usize,
 }
 
 impl Default for EngineConfig {
@@ -73,6 +82,8 @@ impl Default for EngineConfig {
             prefix_cache: true,
             prefix_cache_pages: 1024,
             kv_dtype: KvDtype::F32,
+            allocator: AllocatorKind::Uniform,
+            replan_interval: 32,
         }
     }
 }
@@ -111,13 +122,19 @@ impl EngineConfig {
         if let Some(v) = args.get("kv-dtype") {
             self.kv_dtype = v.parse()?;
         }
+        if let Some(v) = args.get("allocator") {
+            self.allocator = v.parse()?;
+        }
+        self.replan_interval =
+            args.get_usize("replan-interval", self.replan_interval)?.max(1);
         Ok(self)
     }
 
     /// Configuration every paper experiment driver starts from: the
-    /// paper's metrics exclude cross-request prefix caching, and its
-    /// figures assume exact (f32) cache payloads, so both are pinned
-    /// here **by construction** instead of per-driver — experiment
+    /// paper's metrics exclude cross-request prefix caching, its
+    /// figures assume exact (f32) cache payloads, and its budgets are
+    /// the uniform App. F.1 scalar rule — all three are pinned here
+    /// **by construction** instead of per-driver, so experiment
     /// outputs stay byte-identical no matter how the serving defaults
     /// evolve.
     pub fn paper_fidelity(artifacts: &Path) -> Self {
@@ -125,6 +142,7 @@ impl EngineConfig {
             artifacts: artifacts.to_path_buf(),
             prefix_cache: false,
             kv_dtype: KvDtype::F32,
+            allocator: AllocatorKind::Uniform,
             ..Self::default()
         }
     }
@@ -165,6 +183,12 @@ impl EngineConfig {
         }
         if let Some(v) = j.get("kv_dtype").and_then(Json::as_str) {
             cfg.kv_dtype = v.parse()?;
+        }
+        if let Some(v) = j.get("allocator").and_then(Json::as_str) {
+            cfg.allocator = v.parse()?;
+        }
+        if let Some(v) = j.get("replan_interval").and_then(|x| x.as_usize()) {
+            cfg.replan_interval = v.max(1);
         }
         Ok(cfg)
     }
@@ -343,9 +367,37 @@ mod tests {
         let cfg = EngineConfig::paper_fidelity(Path::new("arts"));
         assert!(!cfg.prefix_cache, "paper metrics exclude the prefix cache");
         assert_eq!(cfg.kv_dtype, KvDtype::F32, "paper figures assume exact K/V");
+        assert_eq!(
+            cfg.allocator,
+            AllocatorKind::Uniform,
+            "paper budgets are the uniform App. F.1 rule"
+        );
         assert_eq!(cfg.artifacts, PathBuf::from("arts"));
         // everything else follows the serving defaults
         assert_eq!(cfg.batch, EngineConfig::default().batch);
+    }
+
+    #[test]
+    fn allocator_override_and_validation() {
+        let args = Args::parse(
+            "--allocator pyramid --replan-interval 8"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let cfg = EngineConfig::default().with_args(&args).unwrap();
+        assert_eq!(cfg.allocator, AllocatorKind::Pyramid);
+        assert_eq!(cfg.replan_interval, 8);
+        let args = Args::parse("--allocator zigzag".split_whitespace().map(String::from));
+        assert!(EngineConfig::default().with_args(&args).is_err());
+        // defaults: uniform allocation, 32-step re-plan cadence
+        assert_eq!(EngineConfig::default().allocator, AllocatorKind::Uniform);
+        assert_eq!(EngineConfig::default().replan_interval, 32);
+        // replan interval is clamped to at least one step
+        let args = Args::parse("--replan-interval 0".split_whitespace().map(String::from));
+        assert_eq!(
+            EngineConfig::default().with_args(&args).unwrap().replan_interval,
+            1
+        );
     }
 
     #[test]

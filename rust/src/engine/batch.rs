@@ -150,6 +150,7 @@ pub fn decode_host_work(
     vocab: usize,
     quest: bool,
     parallel: bool,
+    track_stats: bool,
 ) -> Vec<LaneStep> {
     let work: Vec<(usize, &mut ChainState)> = lanes
         .iter_mut()
@@ -162,14 +163,18 @@ pub fn decode_host_work(
     if !parallel || work.len() <= 1 || per_lane < PARALLEL_MIN_ELEMS {
         return work
             .into_iter()
-            .map(|(lane, c)| lane_step(lane, c, out, geom, batch, vocab, quest))
+            .map(|(lane, c)| {
+                lane_step(lane, c, out, geom, batch, vocab, quest, track_stats)
+            })
             .collect();
     }
     std::thread::scope(|s| {
         let handles: Vec<_> = work
             .into_iter()
             .map(|(lane, c)| {
-                s.spawn(move || lane_step(lane, c, out, geom, batch, vocab, quest))
+                s.spawn(move || {
+                    lane_step(lane, c, out, geom, batch, vocab, quest, track_stats)
+                })
             })
             .collect();
         handles
@@ -187,6 +192,7 @@ fn lane_step(
     batch: usize,
     vocab: usize,
     quest: bool,
+    track_stats: bool,
 ) -> LaneStep {
     let (l, h, s) = (geom.layers, geom.kv_heads, geom.slots);
     let lh = l * h;
@@ -201,6 +207,14 @@ fn lane_step(
             attn[(li * h + hi) * s..(li * h + hi + 1) * s]
                 .copy_from_slice(&out.attn[src * s..(src + 1) * s]);
         }
+    }
+    // fold this step's attention view into the chain's lane-local
+    // budget-plan statistics (mass + entropy per (layer, head)) before
+    // the policy consumes it. Only the adaptive allocator reads these,
+    // so signal-free allocators skip the O(lh·slots) entropy pass —
+    // the hot path stays as cheap as before the plan refactor.
+    if track_stats {
+        chain.attn_stats.observe_attn(l, h, s, &attn, &attn_self);
     }
     let mut actions = Vec::with_capacity(lh);
     chain.policy.write_actions(&alpha, l, h, &mut actions);

@@ -31,7 +31,10 @@ use super::scheduler::{
     ChainState, CompletedRequest, Phase, Scheduler, SchedulerConfig,
 };
 use super::sequence::{ChainResult, FinishReason, GenRequest, GenResult};
-use crate::compress::{build_policy, Policy, PolicyKind, StepView, WriteAction};
+use crate::compress::{
+    build_allocator, build_policy_planned, per_head_budget, AllocatorKind,
+    BudgetAllocator, Policy, PolicyKind, StepView, WriteAction,
+};
 use crate::config::EngineConfig;
 use crate::kvcache::{CacheStore, Geometry, RadixPrefixIndex};
 use crate::metrics::Registry;
@@ -113,6 +116,9 @@ pub struct Engine {
     /// Radix index over clean prompt pages retained from completed
     /// requests (prefix-cache admission).
     prefix_index: RadixPrefixIndex,
+    /// Budget allocator shaping each chain's per-(layer, head) plan
+    /// (`--allocator`); adaptive re-plans from lane-local `AttnStats`.
+    allocator: Box<dyn BudgetAllocator>,
     /// Retrofit metadata of the loaded variant.
     window: usize,
     immediate: bool,
@@ -166,6 +172,7 @@ impl Engine {
         } else {
             None
         };
+        let allocator = build_allocator(cfg.allocator);
         Ok(Self {
             runtime,
             tokenizer,
@@ -177,6 +184,7 @@ impl Engine {
             prefill_exec,
             cache,
             prefix_index,
+            allocator,
             window: vmeta.window,
             immediate: vmeta.immediate,
             dms_variant,
@@ -188,6 +196,13 @@ impl Engine {
     /// Cache geometry of the loaded executables.
     pub fn geometry(&self) -> Geometry {
         self.geom
+    }
+
+    /// Eviction-delay window of the loaded variant (the clamp floor of
+    /// the App. F.1 per-head budget; what `build_chain_policy` passes
+    /// to [`per_head_budget`]).
+    pub fn variant_window(&self) -> usize {
+        self.window
     }
 
     /// Switch the compression policy (+ CR) without recompiling the
@@ -268,14 +283,24 @@ impl Engine {
         }
     }
 
+    /// App. F.1 global budget for a chain: per-head rule × cells.
+    fn global_budget(&self, max_len: usize) -> usize {
+        per_head_budget(self.cfg.cr, max_len, self.window) * self.geom.lh()
+    }
+
+    /// Build a chain's policy with its admission-time budget plan. The
+    /// uniform allocator reproduces the legacy scalar budget exactly
+    /// (equal per-head split of the same global); adaptive chains
+    /// start from the uniform fallback (no stats yet) and re-plan as
+    /// decode statistics accrue.
     fn build_chain_policy(&self, max_len: usize) -> Box<dyn Policy> {
-        build_policy(
-            self.cfg.policy,
-            self.cfg.cr,
-            max_len,
-            self.window,
-            self.geom.page_size,
-        )
+        let plan = self.allocator.plan(
+            self.geom.layers,
+            self.geom.kv_heads,
+            self.global_budget(max_len),
+            None,
+        );
+        build_policy_planned(self.cfg.policy, plan, self.window, self.geom.page_size)
     }
 
     // ------------------------------------------------------------------
@@ -435,6 +460,44 @@ impl Engine {
         self.metrics
             .gauge("kv.dequant_us")
             .set(self.cache.dequant_us());
+        // budget-plan summaries across active planned lanes: aggregate
+        // planned tokens, the per-head budget spread, and plan-aware
+        // overflow (tokens above any head's budget — 0 under correct
+        // head-granular enforcement)
+        let (l, h) = (self.geom.layers, self.geom.kv_heads);
+        let mut plan_lanes = 0usize;
+        let mut plan_tokens = 0usize;
+        let mut plan_min = usize::MAX;
+        let mut plan_max = 0usize;
+        let mut plan_overflow = 0usize;
+        for lane in 0..self.cfg.batch {
+            let Some(a) = sched.lane(lane) else { continue };
+            let Some(plan) = a.policy.plan() else { continue };
+            plan_lanes += 1;
+            plan_tokens += plan.total(l, h);
+            plan_min = plan_min.min(plan.min_budget());
+            plan_max = plan_max.max(plan.max_budget());
+            // prefill is dense by design (budgets are enforced from
+            // post_prefill onward), so overflow is only meaningful on
+            // decoding lanes — a mid-prefill lane legitimately holds
+            // more than its budget. Quest's plan is a *read* budget
+            // (nothing is ever evicted), so residency overflow does
+            // not apply to it either.
+            if matches!(a.phase, Phase::Decode) && a.policy.kind() != PolicyKind::Quest {
+                plan_overflow += self.cache.plan_overflow(lane, plan);
+            }
+        }
+        // always written, so the gauges drop to zero once the last
+        // planned lane drains instead of going stale
+        self.metrics.gauge("kv.plan_lanes").set(plan_lanes as f64);
+        self.metrics.gauge("kv.plan_tokens").set(plan_tokens as f64);
+        self.metrics
+            .gauge("kv.plan_min_lh")
+            .set(if plan_lanes > 0 { plan_min as f64 } else { 0.0 });
+        self.metrics.gauge("kv.plan_max_lh").set(plan_max as f64);
+        self.metrics
+            .gauge("kv.plan_overflow_tokens")
+            .set(plan_overflow as f64);
         for c in &completed {
             let t = &c.timing;
             self.metrics.histogram("serve.queue_ms").record(t.queue_ms);
@@ -565,9 +628,19 @@ impl Engine {
             };
             let cache_live_before = self.cache.live_tokens(lane);
 
+            // per-position α view for the lane's budget-plan stats
+            // (the retrofit exports α chunk-wise during prefill);
+            // only the adaptive allocator consumes it
+            let track_alpha =
+                honor_alpha && self.cfg.allocator == AllocatorKind::Adaptive;
             for j in 0..n {
                 let pos = offset + j;
                 let mut overflow = false;
+                let mut step_alpha = if track_alpha {
+                    vec![0f32; l * h]
+                } else {
+                    Vec::new()
+                };
                 for li in 0..l {
                     for hi in 0..h {
                         let base = ((((li * b) + lane) * h + hi) * c + j) * hd;
@@ -578,6 +651,9 @@ impl Engine {
                                 self.cache.write(lane, li, hi, s, pos, kk, vv);
                                 if honor_alpha {
                                     let ai = (((li * b) + lane) * h + hi) * c + j;
+                                    if track_alpha {
+                                        step_alpha[li * h + hi] = out.alpha[ai];
+                                    }
                                     if out.alpha[ai] > 0.5 {
                                         if self.immediate {
                                             if pos >= self.window {
@@ -606,6 +682,13 @@ impl Engine {
                             None => overflow = true,
                         }
                     }
+                }
+                if track_alpha {
+                    sched
+                        .lane_mut(lane)
+                        .unwrap()
+                        .attn_stats
+                        .observe_alpha(l, h, &step_alpha);
                 }
                 // reads: existing cache + intra-chunk causal visibility
                 sched.lane_mut(lane).unwrap().stats.prefill_reads +=
@@ -674,6 +757,12 @@ impl Engine {
         stats: &mut EngineStats,
     ) {
         // src_lane is occupied, so idle_lane() can never return it.
+        // Fork siblings inherit the leader's current budget plan: the
+        // shared prefill was shaped under it, and diverging plans at
+        // fork time would make sibling streams depend on lane timing.
+        let leader_plan = sched
+            .lane(src_lane)
+            .and_then(|c| c.policy.plan().cloned());
         loop {
             let Some(dst) = sched.idle_lane() else { break };
             let Some(mut p) = sched.take_fork_sibling(ticket) else { break };
@@ -689,7 +778,10 @@ impl Engine {
             self.metrics
                 .counter("kv.fork_shared_pages")
                 .add(shared as f64);
-            let policy = self.build_chain_policy(p.max_len);
+            let mut policy = self.build_chain_policy(p.max_len);
+            if let Some(plan) = leader_plan.clone() {
+                policy.install_plan(plan);
+            }
             sched.install(
                 dst,
                 ChainState::forked(p, policy, self.cfg.top_k, leader_token, leader_pos),
@@ -797,6 +889,7 @@ impl Engine {
             v,
             quest,
             self.cfg.lane_threads,
+            self.cfg.allocator == AllocatorKind::Adaptive,
         );
 
         let mut written: Vec<Option<usize>> = vec![None; lh];
@@ -878,6 +971,30 @@ impl Engine {
             }
             if peak > a.stats.peak_tokens {
                 a.stats.peak_tokens = peak;
+            }
+
+            // ---- adaptive re-planning ----
+            // every `replan_interval` generated tokens, reshape the
+            // chain's budget plan from its accumulated attention
+            // statistics. Heads whose budgets shrank are trimmed
+            // immediately (recency-first via post_prefill, the same
+            // mechanism as the App. F.1 post-prefill switch), so the
+            // plan-overflow invariant holds within the same tick.
+            // Signal-free allocators never re-plan.
+            if self.cfg.allocator == AllocatorKind::Adaptive
+                && a.policy.plan().is_some()
+                && !a.gen_ids.is_empty()
+                && a.gen_ids.len() % self.cfg.replan_interval == 0
+            {
+                let plan = self.allocator.plan(
+                    self.geom.layers,
+                    self.geom.kv_heads,
+                    self.global_budget(a.max_len),
+                    Some(&a.attn_stats),
+                );
+                a.policy.install_plan(plan);
+                a.policy.post_prefill(&mut self.cache, lane, a.pos);
+                self.metrics.counter("kv.plan_replans").inc();
             }
 
             // ---- advance & check termination ----

@@ -27,7 +27,7 @@ use std::time::Instant;
 
 use super::sampler::Sampler;
 use super::sequence::{ChainResult, ChainStats, GenRequest, GenResult, RequestTiming};
-use crate::compress::Policy;
+use crate::compress::{AttnStats, Policy};
 
 /// Which pending chain gets an idle lane first.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -163,6 +163,11 @@ pub struct ChainState {
     /// Monotone admission sequence number; the maximum identifies the
     /// youngest chain (the preemption victim).
     pub admitted_seq: u64,
+    /// Lane-local per-(layer, KV-head) attention statistics feeding
+    /// the adaptive budget allocator. Accumulated from prefill α
+    /// chunks and decode attention views; restarts empty on admission
+    /// (a preempted chain re-accumulates after resume).
+    pub attn_stats: AttnStats,
 }
 
 impl ChainState {
@@ -197,6 +202,7 @@ impl ChainState {
             seed: p.seed,
             resume_token,
             admitted_seq: 0,
+            attn_stats: AttnStats::new(),
         }
     }
 
@@ -234,6 +240,7 @@ impl ChainState {
             seed: p.seed,
             resume_token: None,
             admitted_seq: 0,
+            attn_stats: AttnStats::new(),
         }
     }
 

@@ -41,7 +41,10 @@ use anyhow::{bail, Result};
 use super::scheduler::{ChainState, CompletedRequest, Phase, Scheduler, SchedulerConfig};
 use super::sequence::{ChainResult, FinishReason, GenRequest};
 use super::EngineStats;
-use crate::compress::{build_policy, Policy, PolicyKind};
+use crate::compress::{
+    build_allocator, build_policy, AllocatorKind, BudgetAllocator, BudgetPlan, Policy,
+    PolicyKind,
+};
 use crate::kvcache::{CacheStore, Geometry, KvDtype, RadixPrefixIndex};
 use crate::metrics::Registry;
 use crate::util::SplitMix64;
@@ -77,6 +80,11 @@ pub struct SimEngineConfig {
     pub prefix_cache_pages: usize,
     /// Pool payload precision (mirrors `EngineConfig::kv_dtype`).
     pub kv_dtype: KvDtype,
+    /// Budget allocator shaping per-chain plans (mirrors
+    /// `EngineConfig::allocator`). The sim's vanilla policy is
+    /// unbudgeted, so plans only drive the `kv.plan_*` gauges — the
+    /// same summaries the real engine reports per replica.
+    pub allocator: AllocatorKind,
     /// Extra deterministic host work per written token (arithmetic
     /// iterations), emulating executor cost so serving benches see
     /// realistic prefill/decode ratios. 0 = cache writes only.
@@ -98,6 +106,7 @@ impl Default for SimEngineConfig {
             prefix_cache: true,
             prefix_cache_pages: 1024,
             kv_dtype: KvDtype::F32,
+            allocator: AllocatorKind::Uniform,
             work_per_token: 0,
         }
     }
@@ -115,6 +124,9 @@ pub struct SimEngine {
     sched: Scheduler,
     cache: CacheStore,
     prefix_index: RadixPrefixIndex,
+    /// Built once from `cfg.allocator` (plans are recomputed per tick
+    /// for the gauges, but the strategy object is not).
+    allocator: Box<dyn BudgetAllocator>,
     stats: EngineStats,
     spin: f32,
 }
@@ -126,6 +138,7 @@ impl SimEngine {
             sched: Scheduler::new(cfg.lanes, SchedulerConfig::default()),
             cache: CacheStore::with_dtype(cfg.geom, cfg.lanes, cfg.kv_dtype),
             prefix_index: RadixPrefixIndex::new(cfg.geom.page_size),
+            allocator: build_allocator(cfg.allocator),
             metrics: Registry::default(),
             stats: EngineStats::default(),
             cfg,
@@ -240,6 +253,15 @@ impl SimEngine {
         )
     }
 
+    /// Budget plan a chain of `max_len` would run under (CR 1 — the
+    /// sim decodes dense). Drives the per-replica `kv.plan_*` gauges
+    /// so cluster stats expose plan summaries without AOT artifacts.
+    fn plan_for(&self, max_len: usize) -> BudgetPlan {
+        let g = self.cfg.geom;
+        self.allocator
+            .plan(g.layers, g.kv_heads, max_len.max(1) * g.lh(), None)
+    }
+
     /// Per-token "executor" cost: write the token's K/V into every
     /// (layer, head) of the lane, plus the configured spin work.
     /// Returns false on cache overflow.
@@ -292,6 +314,30 @@ impl SimEngine {
         self.metrics
             .gauge("kv.pool_pages")
             .set(self.cache.pool_pages() as f64);
+        // per-replica plan summaries, aggregated across active lanes
+        // exactly like the real engine's tick (the sim's vanilla
+        // policy is unbudgeted — these report the plans the configured
+        // allocator shapes for the running chains) and dropping to
+        // zero once the lanes drain
+        let g = self.cfg.geom;
+        let mut plan_lanes = 0usize;
+        let mut plan_tokens = 0usize;
+        let mut plan_min = usize::MAX;
+        let mut plan_max = 0usize;
+        for lane in 0..self.sched.n_lanes() {
+            let Some(a) = self.sched.lane(lane) else { continue };
+            let plan = self.plan_for(a.max_len);
+            plan_lanes += 1;
+            plan_tokens += plan.total(g.layers, g.kv_heads);
+            plan_min = plan_min.min(plan.min_budget());
+            plan_max = plan_max.max(plan.max_budget());
+        }
+        self.metrics.gauge("kv.plan_lanes").set(plan_lanes as f64);
+        self.metrics.gauge("kv.plan_tokens").set(plan_tokens as f64);
+        self.metrics
+            .gauge("kv.plan_min_lh")
+            .set(if plan_lanes > 0 { plan_min as f64 } else { 0.0 });
+        self.metrics.gauge("kv.plan_max_lh").set(plan_max as f64);
         for c in &completed {
             let t = &c.timing;
             self.metrics.histogram("serve.queue_ms").record(t.queue_ms);
@@ -614,6 +660,27 @@ mod tests {
         // no pool leak: every reference the stolen chains held on
         // retained pages was released (index refs remain)
         assert_eq!(e.queue_depth(), 0);
+    }
+
+    #[test]
+    fn plan_gauges_reflect_allocator() {
+        let mut e = SimEngine::new(SimEngineConfig {
+            allocator: AllocatorKind::Pyramid,
+            ..Default::default()
+        });
+        e.submit(&req("Q:1+1=?|T:", 1, 96, 3)).unwrap();
+        e.tick().unwrap();
+        // one active lane; default geom: 2 layers × 2 heads, CR 1 →
+        // 96 tokens per cell
+        assert_eq!(e.metrics.gauge("kv.plan_lanes").get(), 1.0);
+        assert_eq!(e.metrics.gauge("kv.plan_tokens").get(), 96.0 * 4.0);
+        let min = e.metrics.gauge("kv.plan_min_lh").get();
+        let max = e.metrics.gauge("kv.plan_max_lh").get();
+        assert!(max > min, "pyramid plans are non-uniform: {min} vs {max}");
+        // gauges drop to zero once the lanes drain (no stale reads)
+        e.drain().unwrap();
+        assert_eq!(e.metrics.gauge("kv.plan_lanes").get(), 0.0);
+        assert_eq!(e.metrics.gauge("kv.plan_tokens").get(), 0.0);
     }
 
     #[test]

@@ -1,0 +1,169 @@
+//! Allocator sweep: accuracy-per-byte of uniform vs pyramid vs
+//! adaptive per-(layer, head) budget plans on the golden tasks.
+//!
+//! For each allocator, every budgeted training-free policy (TOVA, H2O,
+//! window) runs the same task points over a CR × L grid; by plan
+//! conservation all allocators spend the **same global budget** per
+//! point, so any accuracy difference is purely the *shape* of the
+//! plan. Two byte axes are reported:
+//!
+//! * `plan B` — the plan-aggregate footprint
+//!   ([`plan_kv_bytes`](crate::scaling::plan_kv_bytes)): identical
+//!   across allocators by construction (the conservation check);
+//! * `peak B` — measured peak resident tokens × bytes/token: what the
+//!   chains actually held, the budget axis of the Pareto extraction.
+//!
+//! The sweep ends with per-allocator Pareto frontiers over
+//! (peak bytes, accuracy) and the App. E average margin of each
+//! non-uniform allocator over uniform.
+//!
+//! This is intentionally *not* paper-fidelity in one respect: the
+//! paper's tables pin the uniform App. F.1 budget
+//! (`EngineConfig::paper_fidelity`); this driver measures the
+//! non-uniform extension. Everything else (no prefix cache, f32
+//! payloads) follows the fidelity pins.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::analysis::tables::{num, pct, Table};
+use crate::compress::{build_allocator, AllocatorKind, PolicyKind};
+use crate::config::EngineConfig;
+use crate::scaling::{frontier, kv_bytes_per_token, margin, plan_kv_bytes, Frontier, ScalePoint};
+use crate::util::Json;
+
+use super::{EvalSpec, Harness};
+
+const TASK: &str = "math";
+
+pub fn run_alloc_sweep(artifacts: &Path, n_problems: usize) -> Result<()> {
+    let policies = [PolicyKind::Tova, PolicyKind::H2o, PolicyKind::Window];
+    let crs = [4.0f64, 8.0];
+    let lens = [96usize, 160];
+
+    println!("\n## Allocator sweep — accuracy per byte, {TASK} ({n_problems} problems)\n");
+    let mut t = Table::new(&[
+        "allocator", "policy", "CR", "L", "acc", "plan B", "peak B", "reads B",
+    ]);
+    let mut outcomes: Vec<(AllocatorKind, Frontier)> = Vec::new();
+    let mut json_rows = Vec::new();
+
+    for alloc in AllocatorKind::all() {
+        let cfg = EngineConfig {
+            allocator: alloc,
+            ..EngineConfig::paper_fidelity(artifacts)
+        };
+        let mut harness = Harness::new(cfg)?;
+        let geom = harness.engine_mut().geometry();
+        let dtype = harness.engine_mut().cfg.kv_dtype;
+        let bytes_per_token =
+            kv_bytes_per_token(dtype, geom.layers, geom.kv_heads, geom.head_dim);
+        let mut points = Vec::new();
+        for policy in policies {
+            for cr in crs {
+                for max_len in lens {
+                    let mut spec = EvalSpec::new(TASK, policy, cr);
+                    spec.max_len = max_len;
+                    spec.n_problems = n_problems;
+                    let out = harness.eval(&spec)?;
+                    if out.n_problems == 0 {
+                        continue;
+                    }
+                    // the admission-time plan, rebuilt with the same
+                    // budget derivation the engine uses (variant
+                    // window is the clamp floor; eval just loaded the
+                    // point's variant). Adaptive re-plans from live
+                    // stats later; totals are conserved either way —
+                    // which is exactly the point.
+                    let window = harness.engine_mut().variant_window();
+                    let per_head =
+                        crate::compress::per_head_budget(cr, max_len, window);
+                    let plan = build_allocator(alloc).plan(
+                        geom.layers,
+                        geom.kv_heads,
+                        per_head * geom.lh(),
+                        None,
+                    );
+                    let plan_bytes = plan_kv_bytes(
+                        &plan,
+                        geom.layers,
+                        geom.kv_heads,
+                        dtype,
+                        geom.head_dim,
+                    );
+                    let peak_bytes = out.mean_peak * bytes_per_token;
+                    let reads_bytes = out.mean_reads * bytes_per_token;
+                    let label = format!("{}-{}-{}", max_len, policy.name(), cr);
+                    t.row(vec![
+                        alloc.name().to_string(),
+                        policy.name().to_string(),
+                        format!("{cr}"),
+                        format!("{max_len}"),
+                        pct(out.accuracy),
+                        num(plan_bytes),
+                        num(peak_bytes),
+                        num(reads_bytes),
+                    ]);
+                    json_rows.push(
+                        Json::obj()
+                            .set("allocator", alloc.name())
+                            .set("policy", policy.name())
+                            .set("cr", cr)
+                            .set("max_len", max_len as f64)
+                            .set("accuracy", out.accuracy)
+                            .set("plan_bytes", plan_bytes)
+                            .set(
+                                "plan_effective_cr",
+                                plan.effective_cr(max_len, geom.layers, geom.kv_heads),
+                            )
+                            .set("peak_bytes", peak_bytes)
+                            .set("reads_bytes", reads_bytes),
+                    );
+                    points.push(ScalePoint {
+                        budget: peak_bytes,
+                        accuracy: out.accuracy,
+                        label,
+                    });
+                }
+            }
+        }
+        outcomes.push((alloc, frontier(&points)));
+    }
+    println!("{}", t.markdown());
+
+    // Pareto extraction + App. E margins vs the uniform baseline
+    println!("### Pareto frontiers (peak bytes → accuracy)\n");
+    for (alloc, front) in &outcomes {
+        let pts: Vec<String> = front
+            .points
+            .iter()
+            .map(|p| format!("({:.0} B, {:.2})", p.budget, p.accuracy))
+            .collect();
+        println!("- {}: {}", alloc.name(), pts.join(" → "));
+    }
+    let uniform = outcomes[0].1.clone();
+    let mut margins = Json::obj();
+    for (alloc, front) in outcomes.iter().skip(1) {
+        match margin(front, &uniform) {
+            Some(m) => {
+                println!(
+                    "margin({} − uniform) = {:+.4} accuracy over the common byte range",
+                    alloc.name(),
+                    m
+                );
+                margins = margins.set(alloc.name(), m);
+            }
+            None => println!(
+                "margin({} − uniform): NA (disjoint byte ranges)",
+                alloc.name()
+            ),
+        }
+    }
+
+    let report = Json::obj()
+        .set("points", Json::Arr(json_rows))
+        .set("margins_vs_uniform", margins);
+    super::write_report(artifacts, "alloc_sweep", &report)?;
+    Ok(())
+}

@@ -3,6 +3,7 @@
 //! Every driver prints the regenerated rows/series in markdown and
 //! writes a JSON record under `reports/` for EXPERIMENTS.md.
 
+mod alloc_sweep;
 mod evalrun;
 mod fig1;
 mod fig5;
@@ -14,6 +15,7 @@ mod quant_bits;
 mod table1;
 mod table2;
 
+pub use alloc_sweep::run_alloc_sweep;
 pub use evalrun::{eval_point, EvalOutcome, EvalSpec, Harness};
 pub use fig1::run_fig1;
 pub use fig5::run_fig5;

@@ -234,6 +234,31 @@ mod tests {
     }
 
     #[test]
+    fn per_lh_occupancy_and_plan_overflow() {
+        use crate::compress::BudgetPlan;
+        let g = geom();
+        let mut c = CacheStore::new(g, 1);
+        // layer 0 head 0 gets 4 tokens, layer 1 head 1 gets 2
+        for pos in 0..4 {
+            let s = c.alloc_slot(0, 0, 0).unwrap();
+            c.write(0, 0, 0, s, pos, &[0.0; 4], &[0.0; 4]);
+        }
+        for pos in 0..2 {
+            let s = c.alloc_slot(0, 1, 1).unwrap();
+            c.write(0, 1, 1, s, pos, &[0.0; 4], &[0.0; 4]);
+        }
+        assert_eq!(c.live_count_lh(0, 0), 4);
+        assert_eq!(c.live_count_lh(0, 3), 2);
+        assert_eq!(c.lane_occupancy(0), vec![4, 0, 0, 2]);
+        // plan with budget 3 everywhere: only the 4-token head overflows
+        let plan = BudgetPlan::uniform(3);
+        assert_eq!(c.plan_overflow(0, &plan), 1);
+        // per-head plan that covers the occupancy exactly
+        let plan = BudgetPlan::per_head(2, 2, vec![4, 0, 0, 2]);
+        assert_eq!(c.plan_overflow(0, &plan), 0);
+    }
+
+    #[test]
     fn slots_exhaust_then_none() {
         let g = geom();
         let mut c = CacheStore::new(g, 1);

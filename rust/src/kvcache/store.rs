@@ -355,6 +355,37 @@ impl CacheStore {
         self.live[self.lbh(b, l, h)]
     }
 
+    /// Live token count of a flat (layer × kv_heads + head) cell.
+    pub fn live_count_lh(&self, b: usize, lh: usize) -> usize {
+        debug_assert!(lh < self.geom.lh());
+        self.live[b * self.geom.lh() + lh]
+    }
+
+    /// Per-(layer, head) live counts of `lane` — the occupancy view
+    /// for budget-plan tooling, tests, and debugging (the `kv.plan_*`
+    /// gauges consume the summed [`CacheStore::plan_overflow`] form
+    /// instead).
+    pub fn lane_occupancy(&self, b: usize) -> Vec<usize> {
+        let lh = self.geom.lh();
+        self.live[b * lh..(b + 1) * lh].to_vec()
+    }
+
+    /// Plan-aware overflow accounting: tokens of `lane` above each
+    /// (layer, head)'s planned budget, summed. Zero when every head is
+    /// within its budget — the invariant head-granular enforcement
+    /// maintains after every `post_write`.
+    pub fn plan_overflow(&self, b: usize, plan: &crate::compress::BudgetPlan) -> usize {
+        let g = self.geom;
+        let mut over = 0usize;
+        for l in 0..g.layers {
+            for h in 0..g.kv_heads {
+                let live = self.live[self.lbh(b, l, h)];
+                over += live.saturating_sub(plan.budget(l, h));
+            }
+        }
+        over
+    }
+
     /// Live tokens in token units: mean over (layer, head) pairs.
     pub fn live_tokens(&self, b: usize) -> f64 {
         let mut total = 0usize;

@@ -33,9 +33,11 @@ fn usage() -> &'static str {
     "usage: hyperscale <gen|eval|exp|serve|inspect|selftest> [options]\n\
      common options: --artifacts DIR --variant TAG --policy NAME --cr X\n\
                      --kv-dtype f32|q8|q4 (pool payload precision)\n\
+                     --allocator uniform|pyramid|adaptive (per-head KV budgets)\n\
+                     --replan-interval N (adaptive re-plan cadence)\n\
        gen      --prompt 'Q:1+2=?\\nT:' [--width W] [--max-len L] [--temp T]\n\
        eval     --task math [--width W] [--max-len L] [--n N]\n\
-       exp      fig1|fig3|fig4|fig5|fig6|fig7|table1|table2|table7|quant\n\
+       exp      fig1|fig3|fig4|fig5|fig6|fig7|table1|table2|table7|quant|alloc\n\
                 [--n N] [--full]\n\
        serve    [--addr 127.0.0.1:7333] [--no-prefix-cache] [--prefix-pages N]\n\
                 [--replicas N] [--routing prefix|least-loaded|round-robin]\n\
@@ -152,6 +154,7 @@ fn cmd_exp(args: &Args) -> Result<()> {
         "table2" => exp::run_table2(&artifacts, n),
         "table7" | "table8" | "table9" | "points" => exp::run_points(&artifacts, n),
         "quant" => exp::run_quant_bits(&artifacts, n),
+        "alloc" | "allocators" => exp::run_alloc_sweep(&artifacts, n),
         other => anyhow::bail!("unknown experiment '{other}'\n{}", usage()),
     }
 }

@@ -3,4 +3,7 @@
 
 pub mod pareto;
 
-pub use pareto::{frontier, kv_bytes_per_token, margin, with_byte_budget, Frontier, ScalePoint};
+pub use pareto::{
+    frontier, kv_bytes_per_token, margin, plan_kv_bytes, with_byte_budget, Frontier,
+    ScalePoint,
+};

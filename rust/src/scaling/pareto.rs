@@ -20,6 +20,7 @@
 //! comparable — eviction CR × precision shrink compose
 //! multiplicatively on that axis.
 
+use crate::compress::BudgetPlan;
 use crate::kvcache::KvDtype;
 
 /// One measured scaling configuration.
@@ -46,6 +47,22 @@ pub struct Frontier {
 /// budget axis to a host-byte axis.
 pub fn kv_bytes_per_token(dtype: KvDtype, layers: usize, kv_heads: usize, head_dim: usize) -> f64 {
     (layers * kv_heads) as f64 * 2.0 * dtype.row_payload_bytes(head_dim) as f64
+}
+
+/// Aggregate K+V payload bytes a full [`BudgetPlan`] footprint costs
+/// under `dtype`: Σ over (layer, head) cells of the cell's token
+/// budget × per-row storage (K and V rows). This is the byte-axis
+/// aggregate of a *non-uniform* plan; a uniform plan reduces exactly
+/// to [`kv_bytes_per_token`] × per-head budget, so frontiers built
+/// from planned and scalar budgets stay comparable.
+pub fn plan_kv_bytes(
+    plan: &BudgetPlan,
+    layers: usize,
+    kv_heads: usize,
+    dtype: KvDtype,
+    head_dim: usize,
+) -> f64 {
+    plan.total(layers, kv_heads) as f64 * 2.0 * dtype.row_payload_bytes(head_dim) as f64
 }
 
 /// Rescale a point cloud's budget axis from token units to bytes
@@ -231,6 +248,21 @@ mod tests {
         assert_eq!(f, 8.0 * 2.0 * 64.0);
         assert!(f / q8 >= 3.0, "q8 shrinks the byte axis ≥ 3×");
         assert!(f / q4 >= 4.5, "q4 shrinks it further");
+    }
+
+    #[test]
+    fn plan_bytes_reduce_to_per_token_bytes_when_uniform() {
+        // 4 layers × 2 heads, budget 40 per head
+        let plan = BudgetPlan::uniform(40);
+        let bytes = plan_kv_bytes(&plan, 4, 2, KvDtype::F32, 16);
+        assert_eq!(bytes, kv_bytes_per_token(KvDtype::F32, 4, 2, 16) * 40.0);
+        // a non-uniform plan with the same total costs the same bytes
+        // (conservation on the byte axis)
+        let skewed = BudgetPlan::per_head(4, 2, vec![70, 70, 50, 50, 30, 30, 10, 10]);
+        assert_eq!(plan_kv_bytes(&skewed, 4, 2, KvDtype::F32, 16), bytes);
+        // quantized payloads shrink plan bytes like they shrink tokens
+        let q8 = plan_kv_bytes(&plan, 4, 2, KvDtype::Q8, 16);
+        assert!(bytes / q8 >= 3.0);
     }
 
     #[test]

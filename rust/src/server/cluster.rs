@@ -98,6 +98,10 @@ pub trait Backend {
     fn drain_queued(&mut self, max: usize) -> Vec<u64>;
     /// Pool payload dtype name, echoed in responses.
     fn kv_dtype_name(&self) -> &'static str;
+    /// Budget-allocator name, echoed in responses and stats (the
+    /// per-replica plan summaries live in the `kv.plan_*` gauges of
+    /// `metrics_report`).
+    fn allocator_name(&self) -> &'static str;
     /// Metrics snapshot for the stats endpoint.
     fn metrics_report(&self) -> String;
 }
@@ -143,6 +147,9 @@ impl Backend for EngineBackend {
     fn kv_dtype_name(&self) -> &'static str {
         self.engine.cfg.kv_dtype.name()
     }
+    fn allocator_name(&self) -> &'static str {
+        self.engine.cfg.allocator.name()
+    }
     fn metrics_report(&self) -> String {
         self.engine.metrics.report()
     }
@@ -172,6 +179,9 @@ impl Backend for SimEngine {
     }
     fn kv_dtype_name(&self) -> &'static str {
         self.cfg.kv_dtype.name()
+    }
+    fn allocator_name(&self) -> &'static str {
+        self.cfg.allocator.name()
     }
     fn metrics_report(&self) -> String {
         self.metrics.report()
@@ -445,8 +455,13 @@ fn replica_loop<B: Backend>(
             Ok(completed) => {
                 for done in completed {
                     if let Some((req, reply)) = inflight.remove(&done.ticket) {
-                        let resp =
-                            response_from(&req, &done, backend.kv_dtype_name(), replica);
+                        let resp = response_from(
+                            &req,
+                            &done,
+                            backend.kv_dtype_name(),
+                            backend.allocator_name(),
+                            replica,
+                        );
                         let _ = reply.send(render_response(&resp));
                     }
                 }
@@ -508,6 +523,7 @@ fn handle_replica_msg<B: Backend>(
                     .set("queue_depth", backend.queue_depth())
                     .set("inflight", inflight.len())
                     .set("kv_dtype", backend.kv_dtype_name())
+                    .set("allocator", backend.allocator_name())
                     .set("metrics", backend.metrics_report())
                     .to_string(),
             );

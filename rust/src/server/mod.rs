@@ -136,8 +136,13 @@ pub fn serve(cfg: EngineConfig, addr: &str) -> Result<()> {
             Ok(completed) => {
                 for done in completed {
                     if let Some(inf) = inflight.remove(&done.ticket) {
-                        let resp =
-                            response_from(&inf.req, &done, engine.cfg.kv_dtype.name(), 0);
+                        let resp = response_from(
+                            &inf.req,
+                            &done,
+                            engine.cfg.kv_dtype.name(),
+                            engine.cfg.allocator.name(),
+                            0,
+                        );
                         let _ = inf.reply.send(render_response(&resp));
                     }
                 }
@@ -199,6 +204,7 @@ fn handle_msg(
                     .set("active_lanes", session.active_lanes())
                     .set("queue_depth", session.queue_depth())
                     .set("kv_dtype", engine.cfg.kv_dtype.name())
+                    .set("allocator", engine.cfg.allocator.name())
                     .to_string(),
             );
             false
@@ -213,6 +219,7 @@ pub(crate) fn response_from(
     req: &ServeRequest,
     done: &CompletedRequest,
     kv_dtype_name: &str,
+    allocator_name: &str,
     replica_id: usize,
 ) -> ServeResponse {
     let res = &done.result;
@@ -236,6 +243,7 @@ pub(crate) fn response_from(
         tokens_per_s: 0.0,
         prefix_hit_tokens: prefix_hit_tokens as f64,
         kv_dtype: kv_dtype_name.to_string(),
+        allocator: allocator_name.to_string(),
         replica_id,
         error: None,
     }

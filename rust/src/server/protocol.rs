@@ -61,6 +61,11 @@ pub struct ServeResponse {
     /// request (`f32`, `q8`, or `q4` — see docs/NUMERICS.md), so
     /// clients can attribute precision effects.
     pub kv_dtype: String,
+    /// Budget allocator that shaped the request's per-(layer, head)
+    /// KV budget plans (`uniform`, `pyramid`, or `adaptive`), so
+    /// clients can attribute accuracy/footprint effects of
+    /// non-uniform plans.
+    pub allocator: String,
     /// Engine replica that served the request (0 on the single-engine
     /// path; the cluster router's assignment otherwise), so clients —
     /// and the routing benches/tests — can attribute cache affinity.
@@ -85,6 +90,7 @@ impl ServeResponse {
             gen_tokens: 0.0,
             prefix_hit_tokens: 0.0,
             kv_dtype: String::new(),
+            allocator: String::new(),
             replica_id: 0,
             error: Some(msg.to_string()),
         }
@@ -143,6 +149,7 @@ pub fn render_response(r: &ServeResponse) -> String {
         .set("gen_tokens", r.gen_tokens)
         .set("prefix_hit_tokens", r.prefix_hit_tokens)
         .set("kv_dtype", r.kv_dtype.as_str())
+        .set("allocator", r.allocator.as_str())
         .set("replica_id", r.replica_id as u64)
         .to_string()
 }
@@ -194,6 +201,7 @@ mod tests {
             gen_tokens: 40.0,
             prefix_hit_tokens: 16.0,
             kv_dtype: "q8".into(),
+            allocator: "pyramid".into(),
             replica_id: 3,
             error: None,
         };
@@ -207,6 +215,7 @@ mod tests {
         assert_eq!(j.get("gen_tokens").unwrap().as_f64(), Some(40.0));
         assert_eq!(j.get("prefix_hit_tokens").unwrap().as_f64(), Some(16.0));
         assert_eq!(j.get("kv_dtype").unwrap().as_str(), Some("q8"));
+        assert_eq!(j.get("allocator").unwrap().as_str(), Some("pyramid"));
         assert_eq!(j.get("replica_id").unwrap().as_usize(), Some(3));
     }
 

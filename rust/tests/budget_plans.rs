@@ -1,0 +1,694 @@
+// Shared lint config for non-lib targets (benches/tests/examples are
+// separate crates, so the crate-wide allows in rust/src/lib.rs do not
+// reach them): the same flat-layout indexing idiom applies here, and
+// vec! payloads deliberately mirror the engine's heap buffers.
+// Correctness lints stay on — CI denies all remaining warnings via
+// `cargo clippy --all-targets -- -D warnings`.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::manual_div_ceil,
+    clippy::uninlined_format_args,
+    clippy::useless_vec
+)]
+
+//! Budget-plan regression suite.
+//!
+//! Three contracts of the per-(layer, head) plan refactor:
+//!
+//! 1. **Conservation** — every allocator's plan sums to the App. F.1
+//!    global budget (per-head rounding resolved exactly).
+//! 2. **Uniform bit-exactness** — under a uniform plan, the
+//!    head-granular enforcement loops reproduce the pre-plan policy
+//!    zoo *bit-exactly*: local copies of the legacy coupled TOVA/H2O
+//!    eviction (head-0 `live_count` probing, all-head slot eviction,
+//!    layer-wide cumulative scores) and the legacy scalar window trim
+//!    are driven side-by-side with the new policies over a
+//!    cache-state-derived pseudo-model; token streams and lane state
+//!    must match byte-for-byte, for all 8 policies.
+//! 3. **Per-head enforcement** — non-uniform plans hold for *every*
+//!    (layer, head) pair after decode (the old head-0 probe enforced
+//!    only head 0's count), and COW forks + prefix-cache restores stay
+//!    bit-exact when the enforcing plan is non-uniform.
+//!
+//! Everything here pins f32 pool payloads: the memcpy-fork reference
+//! never touches the pool, so fork-mode byte equality is an f32-only
+//! contract (quantized COW exactness is covered by
+//! `tests/quantized_cache.rs`).
+
+use hyperscale::compress::{
+    build_allocator, build_policy, build_policy_planned, AllocatorKind, AttnStats,
+    BudgetPlan, Policy, PolicyKind, StepView, WriteAction,
+};
+use hyperscale::kvcache::{CacheStore, Geometry, KvDtype};
+use hyperscale::util::SplitMix64;
+
+fn geom(slots: usize) -> Geometry {
+    Geometry {
+        layers: 2,
+        kv_heads: 2,
+        slots,
+        head_dim: 4,
+        page_size: 8,
+    }
+}
+
+fn store(g: Geometry, lanes: usize) -> CacheStore {
+    CacheStore::with_dtype(g, lanes, KvDtype::F32)
+}
+
+// ----------------------------------------------------------------------
+// Pseudo-model harness (mirrors tests/property_coordinator.rs): logits
+// are a pure function of the lane's observable cache state, so any
+// divergence in eviction decisions changes the token stream.
+// ----------------------------------------------------------------------
+
+fn cache_logits(c: &CacheStore, lane: usize, pos: usize) -> Vec<f32> {
+    let g = c.geom;
+    let mut acc = 0x9E37_79B9_7F4A_7C15u64 ^ (pos as u64);
+    for l in 0..g.layers {
+        for h in 0..g.kv_heads {
+            for s in 0..g.slots {
+                if let Some(p) = c.slot_pos(lane, l, h, s) {
+                    let kbits = c.k_at(lane, l, h, s)[0].to_bits() as u64;
+                    acc = acc
+                        .wrapping_mul(0x0100_0000_01B3)
+                        .wrapping_add(kbits ^ ((s as u64) << 32) ^ p as u64);
+                    acc ^= (c.mask_value(lane, l, h, s).to_bits() as u64).rotate_left(17);
+                }
+            }
+        }
+    }
+    let mut r = SplitMix64::new(acc);
+    (0..16).map(|_| r.f64() as f32).collect()
+}
+
+/// Deterministic per-(lane, pos) α/attention streams shared by both
+/// sides of every comparison.
+fn step_inputs(g: Geometry, lane: usize, pos: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let lh = g.lh();
+    let mut rng = SplitMix64::new(0xA11CE ^ ((lane as u64) << 40) ^ pos as u64);
+    let alpha: Vec<f32> = (0..lh).map(|_| rng.f64() as f32).collect();
+    let attn: Vec<f32> = (0..lh * g.slots).map(|_| rng.f64() as f32).collect();
+    let attn_self: Vec<f32> = (0..lh).map(|_| rng.f64() as f32).collect();
+    (alpha, attn, attn_self)
+}
+
+/// One simulated decode step through a `Policy` (engine write path:
+/// due evictions, write-actions, append/merge, post_write).
+fn drive_policy_step(
+    c: &mut CacheStore,
+    lane: usize,
+    policy: &mut Box<dyn Policy>,
+    pos: usize,
+) -> u32 {
+    let g = c.geom;
+    let lh = g.lh();
+    let logits = cache_logits(c, lane, pos);
+    let tok = logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0 as u32;
+    let (alpha, attn, attn_self) = step_inputs(g, lane, pos);
+    c.apply_due_evictions(lane, pos);
+    let mut actions: Vec<WriteAction> = Vec::new();
+    policy.write_actions(&alpha, g.layers, g.kv_heads, &mut actions);
+    let payload: Vec<f32> = (0..g.head_dim)
+        .map(|d| tok as f32 + d as f32 + pos as f32 * 0.25)
+        .collect();
+    let mut written = vec![None; lh];
+    for l in 0..g.layers {
+        for h in 0..g.kv_heads {
+            let i = l * g.kv_heads + h;
+            written[i] = None;
+            let append = match actions[i] {
+                WriteAction::Merge => !c.merge_into_last(lane, l, h, &payload, &payload),
+                WriteAction::Append => true,
+            };
+            if append {
+                if let Some(s) = c.alloc_slot(lane, l, h) {
+                    c.write(lane, l, h, s, pos, &payload, &payload);
+                    written[i] = Some(s);
+                }
+            }
+        }
+    }
+    policy.post_write(
+        c,
+        &StepView {
+            lane,
+            pos,
+            alpha: &alpha,
+            attn: &attn,
+            attn_self: &attn_self,
+            written: &written,
+        },
+    );
+    tok
+}
+
+/// One simulated decode step whose eviction enforcement is a legacy
+/// (pre-plan) implementation; writes are plain appends, exactly what
+/// the budgeted training-free policies do.
+fn drive_legacy_step<F>(c: &mut CacheStore, lane: usize, pos: usize, enforce: F) -> u32
+where
+    F: FnOnce(&mut CacheStore, &StepView<'_>),
+{
+    let g = c.geom;
+    let lh = g.lh();
+    let logits = cache_logits(c, lane, pos);
+    let tok = logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0 as u32;
+    let (alpha, attn, attn_self) = step_inputs(g, lane, pos);
+    c.apply_due_evictions(lane, pos);
+    let payload: Vec<f32> = (0..g.head_dim)
+        .map(|d| tok as f32 + d as f32 + pos as f32 * 0.25)
+        .collect();
+    let mut written = vec![None; lh];
+    for l in 0..g.layers {
+        for h in 0..g.kv_heads {
+            let i = l * g.kv_heads + h;
+            written[i] = None;
+            if let Some(s) = c.alloc_slot(lane, l, h) {
+                c.write(lane, l, h, s, pos, &payload, &payload);
+                written[i] = Some(s);
+            }
+        }
+    }
+    enforce(
+        c,
+        &StepView {
+            lane,
+            pos,
+            alpha: &alpha,
+            attn: &attn,
+            attn_self: &attn_self,
+            written: &written,
+        },
+    );
+    tok
+}
+
+fn prefill_identity(c: &mut CacheStore, lane: usize, n: usize) {
+    let g = c.geom;
+    for pos in 0..n {
+        let payload: Vec<f32> =
+            (0..g.head_dim).map(|d| pos as f32 + d as f32 * 0.5).collect();
+        for l in 0..g.layers {
+            for h in 0..g.kv_heads {
+                let s = c.alloc_slot(lane, l, h).unwrap();
+                c.write(lane, l, h, s, pos, &payload, &payload);
+            }
+        }
+    }
+}
+
+fn assert_lane_state_equal(
+    a: &CacheStore,
+    b: &CacheStore,
+    lane_a: usize,
+    lane_b: usize,
+    ctx: &str,
+) {
+    let g = a.geom;
+    for l in 0..g.layers {
+        for h in 0..g.kv_heads {
+            assert_eq!(
+                a.live_count(lane_a, l, h),
+                b.live_count(lane_b, l, h),
+                "{ctx}: live desync at ({l},{h})"
+            );
+            for s in 0..g.slots {
+                assert_eq!(
+                    a.slot_state(lane_a, l, h, s),
+                    b.slot_state(lane_b, l, h, s),
+                    "{ctx}: meta desync at ({l},{h},{s})"
+                );
+                assert_eq!(
+                    a.mask_value(lane_a, l, h, s),
+                    b.mask_value(lane_b, l, h, s),
+                    "{ctx}: mask desync at ({l},{h},{s})"
+                );
+                assert_eq!(
+                    a.k_at(lane_a, l, h, s),
+                    b.k_at(lane_b, l, h, s),
+                    "{ctx}: k desync at ({l},{h},{s})"
+                );
+                assert_eq!(
+                    a.v_at(lane_a, l, h, s),
+                    b.v_at(lane_b, l, h, s),
+                    "{ctx}: v desync at ({l},{h},{s})"
+                );
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// Legacy (pre-plan) enforcement, frozen verbatim: head-0 probing,
+// all-head coupled eviction, layer-wide cumulative scores.
+// ----------------------------------------------------------------------
+
+/// Pre-plan sliding-window trim: scalar budget, per-head oldest-first.
+fn legacy_trim_to_window(cache: &mut CacheStore, lane: usize, budget: usize) {
+    let g = cache.geom;
+    for l in 0..g.layers {
+        for h in 0..g.kv_heads {
+            let mut live = cache.live_slots(lane, l, h);
+            if live.len() <= budget {
+                continue;
+            }
+            live.sort_by_key(|&(_, pos)| pos);
+            let n_evict = live.len() - budget;
+            for &(slot, _) in live.iter().take(n_evict) {
+                cache.evict(lane, l, h, slot);
+            }
+        }
+    }
+}
+
+/// Pre-plan TOVA: `while live_count(lane, l, 0) > budget`, evict the
+/// argmin layer-summed-attention slot on ALL heads.
+struct LegacyTova {
+    budget: usize,
+}
+
+impl LegacyTova {
+    fn post_write(&mut self, cache: &mut CacheStore, view: &StepView<'_>) {
+        let g = cache.geom;
+        let s = g.slots;
+        for l in 0..g.layers {
+            while cache.live_count(view.lane, l, 0) > self.budget {
+                let mut best_slot = None;
+                let mut best_score = f32::INFINITY;
+                for (slot, pos) in cache.live_slots(view.lane, l, 0) {
+                    if pos == view.pos {
+                        continue;
+                    }
+                    let mut score = 0.0f32;
+                    for h in 0..g.kv_heads {
+                        score += view.attn[(l * g.kv_heads + h) * s + slot];
+                    }
+                    if score < best_score {
+                        best_score = score;
+                        best_slot = Some(slot);
+                    }
+                }
+                let Some(slot) = best_slot else { break };
+                for h in 0..g.kv_heads {
+                    cache.evict(view.lane, l, h, slot);
+                }
+            }
+        }
+    }
+}
+
+/// Pre-plan H2O: layer-wide cumulative scores (`cum[l, slot]`), head-0
+/// probing, all-head coupled eviction, score reset on eviction.
+struct LegacyH2o {
+    budget: usize,
+    recent: usize,
+    cum: Vec<f32>,
+}
+
+impl LegacyH2o {
+    fn new(budget: usize) -> Self {
+        Self {
+            budget,
+            recent: budget / 2,
+            cum: Vec::new(),
+        }
+    }
+
+    fn post_write(&mut self, cache: &mut CacheStore, view: &StepView<'_>) {
+        let g = cache.geom;
+        if self.cum.len() != g.layers * g.slots {
+            self.cum = vec![0.0; g.layers * g.slots];
+        }
+        for l in 0..g.layers {
+            for slot in 0..g.slots {
+                let mut mass = 0.0f32;
+                for h in 0..g.kv_heads {
+                    mass += view.attn[(l * g.kv_heads + h) * g.slots + slot];
+                }
+                self.cum[l * g.slots + slot] += mass;
+            }
+        }
+        for l in 0..g.layers {
+            while cache.live_count(view.lane, l, 0) > self.budget {
+                let cutoff = view.pos.saturating_sub(self.recent);
+                let mut best = None;
+                let mut best_score = f32::INFINITY;
+                let mut oldest: Option<(usize, usize)> = None;
+                for (slot, pos) in cache.live_slots(view.lane, l, 0) {
+                    if oldest.map(|(_, p)| pos < p).unwrap_or(true) {
+                        oldest = Some((slot, pos));
+                    }
+                    if pos >= cutoff {
+                        continue;
+                    }
+                    let score = self.cum[l * g.slots + slot];
+                    if score < best_score {
+                        best_score = score;
+                        best = Some(slot);
+                    }
+                }
+                let slot = match best.or(oldest.map(|(s, _)| s)) {
+                    Some(s) => s,
+                    None => break,
+                };
+                for h in 0..g.kv_heads {
+                    cache.evict(view.lane, l, h, slot);
+                }
+                self.cum[l * g.slots + slot] = 0.0;
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// 1. Conservation
+// ----------------------------------------------------------------------
+
+#[test]
+fn every_allocator_conserves_the_global_budget() {
+    let mut stats = AttnStats::new();
+    let g = geom(32);
+    for pos in 0..6 {
+        let (_, attn, attn_self) = step_inputs(g, 0, pos);
+        stats.observe_attn(g.layers, g.kv_heads, g.slots, &attn, &attn_self);
+    }
+    for kind in AllocatorKind::all() {
+        let alloc = build_allocator(kind);
+        for layers in [1usize, 2, 4] {
+            for kv_heads in [1usize, 2, 3] {
+                for per_head in [1usize, 7, 40, 113] {
+                    let n = layers * kv_heads;
+                    let global = per_head * n;
+                    let st = if (layers, kv_heads) == (g.layers, g.kv_heads) {
+                        Some(&stats)
+                    } else {
+                        None
+                    };
+                    let plan = alloc.plan(layers, kv_heads, global, st);
+                    assert_eq!(
+                        plan.total(layers, kv_heads),
+                        global,
+                        "{kind:?} leaked budget at {layers}x{kv_heads}x{per_head}"
+                    );
+                    assert!(plan.min_budget() >= 1, "{kind:?} starved a head");
+                }
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// 2. Uniform bit-exactness vs the legacy coupled implementations
+// ----------------------------------------------------------------------
+
+#[test]
+fn uniform_tova_bit_exact_vs_legacy_coupled_eviction() {
+    let g = geom(64);
+    let (prompt, steps, budget) = (19usize, 30usize, 10usize);
+    let mut legacy_store = store(g, 1);
+    let mut new_store = store(g, 1);
+    prefill_identity(&mut legacy_store, 0, prompt);
+    prefill_identity(&mut new_store, 0, prompt);
+
+    // CR chosen so the App. F.1 rule yields exactly `budget`
+    let mut policy = build_policy(PolicyKind::Tova, 160.0 / budget as f64, 160, 4, 8);
+    let mut legacy = LegacyTova { budget };
+    legacy_trim_to_window(&mut legacy_store, 0, budget);
+    policy.post_prefill(&mut new_store, 0, prompt);
+    assert_lane_state_equal(&legacy_store, &new_store, 0, 0, "tova post-prefill");
+
+    for step in 0..steps {
+        let pos = prompt + step;
+        let t_legacy =
+            drive_legacy_step(&mut legacy_store, 0, pos, |c, v| legacy.post_write(c, v));
+        let t_new = drive_policy_step(&mut new_store, 0, &mut policy, pos);
+        assert_eq!(t_legacy, t_new, "tova stream diverged at step {step}");
+    }
+    assert_lane_state_equal(&legacy_store, &new_store, 0, 0, "tova final state");
+}
+
+#[test]
+fn uniform_h2o_bit_exact_vs_legacy_coupled_eviction() {
+    let g = geom(64);
+    let (prompt, steps, budget) = (19usize, 30usize, 10usize);
+    let mut legacy_store = store(g, 1);
+    let mut new_store = store(g, 1);
+    prefill_identity(&mut legacy_store, 0, prompt);
+    prefill_identity(&mut new_store, 0, prompt);
+
+    let mut policy = build_policy(PolicyKind::H2o, 160.0 / budget as f64, 160, 4, 8);
+    let mut legacy = LegacyH2o::new(budget);
+    legacy_trim_to_window(&mut legacy_store, 0, budget);
+    policy.post_prefill(&mut new_store, 0, prompt);
+    assert_lane_state_equal(&legacy_store, &new_store, 0, 0, "h2o post-prefill");
+
+    for step in 0..steps {
+        let pos = prompt + step;
+        let t_legacy =
+            drive_legacy_step(&mut legacy_store, 0, pos, |c, v| legacy.post_write(c, v));
+        let t_new = drive_policy_step(&mut new_store, 0, &mut policy, pos);
+        assert_eq!(t_legacy, t_new, "h2o stream diverged at step {step}");
+    }
+    assert_lane_state_equal(&legacy_store, &new_store, 0, 0, "h2o final state");
+}
+
+#[test]
+fn uniform_window_bit_exact_vs_legacy_scalar_trim() {
+    let g = geom(64);
+    let (prompt, steps, budget) = (19usize, 30usize, 10usize);
+    let mut legacy_store = store(g, 1);
+    let mut new_store = store(g, 1);
+    prefill_identity(&mut legacy_store, 0, prompt);
+    prefill_identity(&mut new_store, 0, prompt);
+
+    let mut policy = build_policy(PolicyKind::Window, 160.0 / budget as f64, 160, 4, 8);
+    legacy_trim_to_window(&mut legacy_store, 0, budget);
+    policy.post_prefill(&mut new_store, 0, prompt);
+
+    for step in 0..steps {
+        let pos = prompt + step;
+        let t_legacy = drive_legacy_step(&mut legacy_store, 0, pos, |c, _| {
+            legacy_trim_to_window(c, 0, budget)
+        });
+        let t_new = drive_policy_step(&mut new_store, 0, &mut policy, pos);
+        assert_eq!(t_legacy, t_new, "window stream diverged at step {step}");
+    }
+    assert_lane_state_equal(&legacy_store, &new_store, 0, 0, "window final state");
+}
+
+/// The engine's uniform allocator produces a shaped per-head plan with
+/// equal entries; the legacy constructor produces the shape-free
+/// uniform plan. The two must drive identical streams for all 8
+/// policies — this is the `--allocator uniform` admission-path
+/// regression.
+#[test]
+fn shaped_uniform_plan_matches_legacy_constructor_across_all_policies() {
+    use PolicyKind as PK;
+    for kind in [
+        PK::Vanilla,
+        PK::Dms,
+        PK::DmsImmediate,
+        PK::Tova,
+        PK::H2o,
+        PK::Dmc,
+        PK::Window,
+        PK::Quest,
+    ] {
+        let g = geom(64);
+        let (prompt, steps, window) = (19usize, 25usize, 4usize);
+        let mut a = store(g, 1);
+        let mut b = store(g, 1);
+        prefill_identity(&mut a, 0, prompt);
+        prefill_identity(&mut b, 0, prompt);
+
+        // legacy constructor: uniform shape-free plan at budget 40
+        let mut pol_a = build_policy(kind, 4.0, 160, window, g.page_size);
+        // engine path: the uniform allocator's shaped plan
+        let plan = build_allocator(AllocatorKind::Uniform).plan(
+            g.layers,
+            g.kv_heads,
+            40 * g.lh(),
+            None,
+        );
+        assert_eq!(plan.uniform_budget(), Some(40));
+        let mut pol_b = build_policy_planned(kind, plan, window, g.page_size);
+        assert_eq!(pol_a.quest_pages(), pol_b.quest_pages());
+
+        pol_a.post_prefill(&mut a, 0, prompt);
+        pol_b.post_prefill(&mut b, 0, prompt);
+        for step in 0..steps {
+            let pos = prompt + step;
+            let ta = drive_policy_step(&mut a, 0, &mut pol_a, pos);
+            let tb = drive_policy_step(&mut b, 0, &mut pol_b, pos);
+            assert_eq!(ta, tb, "{kind:?} stream diverged at step {step}");
+        }
+        assert_lane_state_equal(&a, &b, 0, 0, &format!("{kind:?} final state"));
+    }
+}
+
+// ----------------------------------------------------------------------
+// 3. Per-head enforcement + sharing under non-uniform plans
+// ----------------------------------------------------------------------
+
+/// Regression for the head-0 probing bug: with per-head budgets, the
+/// budget must hold for EVERY (layer, head) after decode — the legacy
+/// loop checked head 0's live count only and would have left heads
+/// with smaller budgets over-full forever.
+#[test]
+fn nonuniform_budgets_hold_for_every_head_after_decode() {
+    let g = geom(64);
+    let plan = BudgetPlan::per_head(2, 2, vec![12, 5, 9, 3]);
+    for kind in [PolicyKind::Tova, PolicyKind::H2o, PolicyKind::Window] {
+        let mut c = store(g, 1);
+        let prompt = 19usize;
+        prefill_identity(&mut c, 0, prompt);
+        let mut policy = build_policy_planned(kind, plan.clone(), 4, g.page_size);
+        policy.post_prefill(&mut c, 0, prompt);
+        for step in 0..30usize {
+            let pos = prompt + step;
+            drive_policy_step(&mut c, 0, &mut policy, pos);
+            for l in 0..g.layers {
+                for h in 0..g.kv_heads {
+                    assert!(
+                        c.live_count(0, l, h) <= plan.budget(l, h),
+                        "{kind:?}: head ({l},{h}) exceeded its budget {} at step {step}: {}",
+                        plan.budget(l, h),
+                        c.live_count(0, l, h)
+                    );
+                }
+            }
+            assert_eq!(c.plan_overflow(0, &plan), 0, "{kind:?} plan overflow");
+        }
+        // the small heads actually run AT their budgets (enforcement
+        // bites beyond head 0, which the legacy probe never checked)
+        assert_eq!(c.live_count(0, 0, 1), 5, "{kind:?} head (0,1)");
+        assert_eq!(c.live_count(0, 1, 1), 3, "{kind:?} head (1,1)");
+        assert!(c.live_count(0, 0, 0) > c.live_count(0, 0, 1));
+    }
+}
+
+/// COW forks must stay bit-exact against the legacy memcpy fork when
+/// the enforcing plan is non-uniform (per-head evictions land on
+/// shared pages head-by-head).
+#[test]
+fn cow_fork_streams_bit_exact_under_nonuniform_plans() {
+    for kind in [PolicyKind::Tova, PolicyKind::H2o, PolicyKind::Window] {
+        let g = geom(64);
+        let (prompt, steps) = (19usize, 25usize);
+        let plan = build_allocator(AllocatorKind::Pyramid).plan(
+            g.layers,
+            g.kv_heads,
+            10 * g.lh(),
+            None,
+        );
+        assert!(!plan.is_uniform(), "pyramid plan must be non-uniform");
+        let mk = || build_policy_planned(kind, plan.clone(), 4, g.page_size);
+
+        let mut a = store(g, 2);
+        let mut b = store(g, 2);
+        prefill_identity(&mut a, 0, prompt);
+        prefill_identity(&mut b, 0, prompt);
+        a.fork_lane(0, 1); // legacy deep copy
+        b.fork_lane_cow(0, 1); // COW refcount bump
+
+        let mut pol_a = [mk(), mk()];
+        let mut pol_b = [mk(), mk()];
+        for lane in 0..2 {
+            pol_a[lane].post_prefill(&mut a, lane, prompt);
+        }
+        b.materialize_pending();
+        for lane in 0..2 {
+            pol_b[lane].post_prefill(&mut b, lane, prompt);
+        }
+        for step in 0..steps {
+            let pos = prompt + step;
+            b.materialize_pending();
+            for lane in 0..2 {
+                let ta = drive_policy_step(&mut a, lane, &mut pol_a[lane], pos);
+                let tb = drive_policy_step(&mut b, lane, &mut pol_b[lane], pos);
+                assert_eq!(ta, tb, "{kind:?} lane {lane} diverged at step {step}");
+            }
+        }
+        b.materialize_pending();
+        for lane in 0..2 {
+            assert_lane_state_equal(&a, &b, lane, lane, &format!("{kind:?} lane {lane}"));
+        }
+    }
+}
+
+/// A prompt restored from the prefix cache must continue bit-exactly
+/// under a non-uniform plan: restore the retained pages into a fresh
+/// lane, then drive the same planned policy on both the original and
+/// the restored lane — identical streams, identical state.
+#[test]
+fn prefix_restore_bit_exact_under_nonuniform_plans() {
+    let g = geom(64);
+    let prompt = 17usize; // 2 clean pages of 8, 1 token to re-prefill
+    let plan = build_allocator(AllocatorKind::Pyramid).plan(
+        g.layers,
+        g.kv_heads,
+        10 * g.lh(),
+        None,
+    );
+
+    // cold reference: straight prefill on lane 0
+    let mut cold = store(g, 1);
+    prefill_identity(&mut cold, 0, prompt);
+
+    // warm path: prefill, export the clean prefix, recycle, restore
+    // into the (now clean) lane, re-prefill the divergence tail. The
+    // same lane index is reused so the deterministic per-(lane, pos)
+    // α/attention streams match the cold reference exactly.
+    let mut warm = store(g, 1);
+    prefill_identity(&mut warm, 0, prompt);
+    let n_pages = warm.clean_prefix_pages(0, prompt);
+    assert_eq!(n_pages, 2);
+    let ids: Vec<u64> = (0..n_pages).map(|p| warm.export_page(0, p)).collect();
+    warm.recycle_lane(0);
+    for &id in &ids {
+        warm.retain_page(id);
+    }
+    warm.map_prefix_pages(0, &ids);
+    warm.materialize_pending();
+    // re-prefill tokens past the restored prefix (position 16)
+    let payload: Vec<f32> = (0..g.head_dim).map(|d| 16.0 + d as f32 * 0.5).collect();
+    for l in 0..g.layers {
+        for h in 0..g.kv_heads {
+            let s = warm.alloc_slot(0, l, h).unwrap();
+            assert_eq!(s, 16, "restore resumes at the divergence point");
+            warm.write(0, l, h, s, 16, &payload, &payload);
+        }
+    }
+    assert_lane_state_equal(&cold, &warm, 0, 0, "restored prefix");
+
+    let mut pol_cold = build_policy_planned(PolicyKind::Tova, plan.clone(), 4, g.page_size);
+    let mut pol_warm = build_policy_planned(PolicyKind::Tova, plan, 4, g.page_size);
+    pol_cold.post_prefill(&mut cold, 0, prompt);
+    pol_warm.post_prefill(&mut warm, 0, prompt);
+    for step in 0..25usize {
+        let pos = prompt + step;
+        warm.materialize_pending();
+        let t_cold = drive_policy_step(&mut cold, 0, &mut pol_cold, pos);
+        let t_warm = drive_policy_step(&mut warm, 0, &mut pol_warm, pos);
+        assert_eq!(t_cold, t_warm, "restored stream diverged at step {step}");
+    }
+    assert_lane_state_equal(&cold, &warm, 0, 0, "post-decode restored lane");
+    // release the index references so the pool drains
+    warm.recycle_lane(0);
+    for id in ids {
+        warm.release_page(id);
+    }
+    assert_eq!(warm.pool_pages(), 0);
+}

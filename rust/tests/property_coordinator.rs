@@ -197,9 +197,13 @@ fn budget_policies_never_exceed_budget() {
         let mut rng = SplitMix64::new(11);
         let g = geom(64);
         let mut c = store(g, 1);
-        // CR chosen so build_policy yields exactly `budget`
+        // CR chosen so build_policy yields exactly `budget` (as a
+        // uniform plan — the legacy scalar rule, bit-exact)
         let mut policy = build_policy(kind, 160.0 / budget as f64, 160, 4, 8);
-        assert_eq!(policy.budget(), Some(budget));
+        assert_eq!(
+            policy.plan().and_then(|p| p.uniform_budget()),
+            Some(budget)
+        );
         let k = vec![0.1f32; 4];
         let lh = g.lh();
         let alpha = vec![0.0f32; lh];

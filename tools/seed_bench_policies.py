@@ -1,0 +1,144 @@
+#!/usr/bin/env python3
+"""Seed tools/bench_baselines/BENCH_policies.json deterministically.
+
+Mirrors the `bench_policies --smoke` grid exactly (see
+rust/benches/bench_policies.rs): geometry L4xH2, 320 slots, 120 steps,
+synthetic attention `((i % 97) as f32) * 0.03125` (exact dyadic values,
+so every f64 accumulation here is bit-identical to the Rust run),
+`attn_self = 0.25`, `alpha = 0.6`, per-head budget 40 (global 320).
+
+The occupancy counters are budget-determined, not score-determined:
+
+* vanilla / quest never evict          -> 120 live per (l, h) cell;
+* dms / dms_immediate window 16        -> 16 per cell;
+* dmc merges every step (alpha > 0.5)  -> 1 per cell;
+* window / tova / h2o enforce the plan -> exactly plan.budget(l, h),
+  summing to the conserved global 320 under every allocator.
+
+Only the adaptive plan's per-cell budgets need real arithmetic (the
+attention-perplexity apportionment below, mirroring
+rust/src/compress/budget.rs). Run and redirect:
+
+    python3 tools/seed_bench_policies.py > tools/bench_baselines/BENCH_policies.json
+"""
+
+import json
+import math
+import struct
+
+LAYERS, HEADS, SLOTS = 4, 2, 320
+LH = LAYERS * HEADS
+STEPS = 120
+PER_HEAD = 40
+GLOBAL = PER_HEAD * LH
+MIN_SHARE = 0.25
+
+
+def f32(x: float) -> float:
+    return struct.unpack("<f", struct.pack("<f", x))[0]
+
+
+def attn_value(i: int) -> float:
+    # ((i % 97) as f32) * 0.03125 — exact in f32 and f64
+    return f32(f32(i % 97) * f32(0.03125))
+
+
+def perplexities() -> list:
+    """AttnStats::observe_attn + perplexities, one observation."""
+    perps = []
+    for lh in range(LH):
+        row = [attn_value(lh * SLOTS + s) for s in range(SLOTS)]
+        total = 0.25  # attn_self first, as in the Rust loop
+        for a in row:
+            total += a
+        h = 0.0
+        for a in row:
+            p = a / total
+            if p > 0.0:
+                h -= p * math.log(p)
+        p = 0.25 / total
+        if p > 0.0:
+            h -= p * math.log(p)
+        perps.append(math.exp(h))  # steps == 1
+    return perps
+
+
+def apportion(global_budget: int, weights: list, min_per_cell: int) -> list:
+    """Largest-remainder apportionment (mirror of budget.rs)."""
+    n = len(weights)
+    floor = min(min_per_cell, global_budget // n)
+    rem = global_budget - floor * n
+    w = [x if (math.isfinite(x) and x > 0.0) else 0.0 for x in weights]
+    if sum(w) <= 0.0:
+        w = [1.0] * n
+    total_w = 0.0
+    for x in w:
+        total_w += x
+    quotas = [rem * x / total_w for x in w]
+    base = [int(q) for q in quotas]
+    assigned = sum(base)
+    assert assigned <= rem, "trunc overshoot (mirror the Rust guard if this fires)"
+    order = sorted(range(n), key=lambda i: (-(quotas[i] - base[i]), i))
+    for i in order[: rem - assigned]:
+        base[i] += 1
+    return [b + floor for b in base]
+
+
+def floor_per_cell(global_budget: int, cells: int) -> int:
+    equal = global_budget / cells
+    return min(max(int(MIN_SHARE * equal), 1), global_budget // cells)
+
+
+def plans() -> dict:
+    uniform = [PER_HEAD] * LH
+    pyr_weights = [float(LAYERS - l) for l in range(LAYERS) for _ in range(HEADS)]
+    pyramid = apportion(GLOBAL, pyr_weights, floor_per_cell(GLOBAL, LH))
+    adaptive = apportion(GLOBAL, perplexities(), floor_per_cell(GLOBAL, LH))
+    return {"uniform": uniform, "pyramid": pyramid, "adaptive": adaptive}
+
+
+def main() -> None:
+    all_plans = plans()
+    gated = {}
+    for alloc, plan in all_plans.items():
+        assert sum(plan) == GLOBAL, (alloc, plan)
+        assert all(b < STEPS for b in plan), (
+            f"{alloc}: a budget >= {STEPS} steps would cap below plan "
+            f"(update the seeded expectations): {plan}"
+        )
+        gated[f"plan.{alloc}.tokens"] = float(GLOBAL)
+        per_policy = {
+            "vanilla": [STEPS] * LH,
+            "quest": [STEPS] * LH,
+            "dms": [16] * LH,
+            "dms_immediate": [16] * LH,
+            "dmc": [1] * LH,
+            "window": plan,
+            "tova": plan,
+            "h2o": plan,
+        }
+        for policy, cells in per_policy.items():
+            live = sum(cells)
+            key = f"policy.{policy}.{alloc}"
+            gated[f"{key}.live_tokens"] = float(live)
+            gated[f"{key}.live_min_lh"] = float(min(cells))
+            gated[f"{key}.live_max_lh"] = float(max(cells))
+            gated[f"{key}.live_fraction"] = live / (LH * SLOTS)
+    doc = {
+        "bench": "policies",
+        "schema": 1,
+        "note": (
+            "Seed baseline for the policy x allocator occupancy smoke "
+            "(bench_policies --smoke). All values are deterministic "
+            "occupancy counters computed by tools/seed_bench_policies.py, "
+            "which mirrors the synthetic smoke loop exactly; wall-clock "
+            "tokens/s stays in the bench's info section (never gated). "
+            f"Adaptive plan cells: {all_plans['adaptive']}."
+        ),
+        "gated": gated,
+    }
+    print(json.dumps(doc, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,136 @@
+#!/usr/bin/env python3
+"""Compute the deterministic gen_tokens totals of `bench_serve --smoke`.
+
+The smoke's cluster scenarios drive SimEngine replicas whose token
+streams are schedule-independent by construction (rust/src/engine/
+sim.rs: logits are a pure function of the position), so each request's
+generated-token count depends only on its (prompt, seed, max_len) —
+never on routing policy, replica assignment, or admission order. This
+script ports the relevant pieces bit-for-bit:
+
+* SplitMix64 (rust/src/util/rng.rs) incl. `f64()` and `weighted()`;
+* Sampler::sample at temperature 0.7, top_k 0 (engine/sampler.rs);
+* sim_logits + the sim tokenizer/decode loop (engine/sim.rs);
+* the skewed 24-request workload (benches/bench_serve.rs).
+
+The only non-integer arithmetic is IEEE-754 f64 (plus libm exp), so
+the totals printed here match a Rust run on any IEEE platform; the
+±25% CI gate absorbs any pathological last-ulp divergence. Use the
+output to seed `cluster.*.gen_tokens` in
+tools/bench_baselines/BENCH_serve.json, and confirm against the first
+uploaded BENCH_serve.json CI artifact.
+"""
+
+import math
+import struct
+
+M64 = (1 << 64) - 1
+SIM_EOS = 0
+SIM_BOS = 1
+SIM_BYTE_BASE = 16
+
+
+def f32(x: float) -> float:
+    return struct.unpack("<f", struct.pack("<f", x))[0]
+
+
+class SplitMix64:
+    def __init__(self, seed: int) -> None:
+        self.state = seed & M64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & M64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & M64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & M64
+        return (z ^ (z >> 31)) & M64
+
+    def f64(self) -> float:
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def weighted(self, weights: list) -> int:
+        total = 0.0
+        for w in weights:
+            total += w
+        x = self.f64() * total
+        for i, w in enumerate(weights):
+            x -= w
+            if x <= 0.0:
+                return i
+        return len(weights) - 1
+
+
+class Sampler:
+    def __init__(self, temperature: float, seed: int) -> None:
+        self.temperature = temperature
+        self.rng = SplitMix64(seed)
+
+    def sample(self, logits: list) -> int:
+        inv_t = 1.0 / self.temperature
+        m = -math.inf
+        for x in logits:
+            m = max(m, x)
+        weights = [math.exp((x - m) * inv_t) for x in logits]
+        return self.rng.weighted(weights)
+
+
+def sim_logits(pos: int) -> list:
+    r = SplitMix64(0x51E0C0DE ^ ((pos * 0x9E37) & M64))
+    return [f32(r.f64()) for _ in range(16)]
+
+
+def sim_encode(prompt: str) -> list:
+    return [SIM_BOS] + [SIM_BYTE_BASE + b for b in prompt.encode()]
+
+
+def chain_gen_tokens(prompt: str, max_len: int, seed: int) -> int:
+    """Mirror of SimEngine prefill-end sampling + decode_step."""
+    ids = sim_encode(prompt)
+    n = len(ids)
+    assert n + 2 <= max_len
+    sampler = Sampler(0.7, seed)
+    cur = sampler.sample(sim_logits(n - 1))
+    pos = n
+    gen = []
+    while True:
+        tok = sampler.sample(sim_logits(pos))
+        gen.append(cur)
+        pos += 1
+        cur = tok
+        if tok == SIM_EOS:
+            break
+        if pos + 1 >= max_len:
+            gen.append(tok)
+            break
+    return len(gen)
+
+
+def skewed_workload() -> list:
+    systems = [
+        "system A: you are a careful and methodical math solver, reason step by step, keep it brief, answer",
+        "system B: you are a terse coding assistant, answer with a single code line and then stop right there",
+        "system C: you translate numbers to words precisely and then immediately stop, no extra text, answer",
+    ]
+    rng = SplitMix64(0xC1A57E12)
+    out = []
+    for rid in range(24):
+        r = rng.f64()
+        sys_ = systems[0] if r < 0.6 else systems[1] if r < 0.9 else systems[2]
+        tail = chr(ord("a") + rid)
+        out.append((rid, f"{sys_}|{tail}"))
+    return out
+
+
+def main() -> None:
+    total = 0
+    for rid, prompt in skewed_workload():
+        g = chain_gen_tokens(prompt, 224, rid)
+        total += g
+        print(f"request {rid:>2}  seed {rid:>2}  gen_tokens {g}")
+    print(f"\ncluster.<routing>.gen_tokens total: {total}")
+    print("(identical for prefix / least-loaded / round-robin: streams are")
+    print(" schedule-independent; routing only moves them between replicas)")
+
+
+if __name__ == "__main__":
+    main()
