@@ -3,4 +3,4 @@
 pub mod latency_model;
 pub mod tables;
 
-pub use latency_model::{LatencyModel, LlamaClass, H100};
+pub use latency_model::{Accelerator, LatencyModel, LlamaClass, H100};

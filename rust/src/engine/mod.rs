@@ -16,7 +16,11 @@
 //!   uses to admit and retire concurrent requests mid-run;
 //! * [`sim`] — the same control plane over a deterministic fake model
 //!   (no PJRT artifacts needed): what cluster tests and the serve
-//!   smoke benches spin up as engine replicas.
+//!   smoke benches spin up as engine replicas;
+//! * [`timeflow`] — a discrete-event cluster *timing* simulator: the
+//!   real router/steal decision cores under a virtual nanosecond
+//!   clock, with per-stage costs priced from the App. G latency model
+//!   (`bench_sim` gates its p50/p99/p999 TTFT + tokens/s in CI).
 //!
 //! Prefill runs in C-token chunks; parallel-scaling requests (W > 1)
 //! prefill once and fork the prompt cache to sibling lanes
@@ -27,6 +31,7 @@
 pub mod batch;
 pub mod scheduler;
 pub mod sim;
+pub mod timeflow;
 
 mod core;
 mod sampler;
@@ -35,6 +40,10 @@ mod voting;
 
 pub use self::core::{Engine, EngineStats, Session};
 pub use sim::{SimEngine, SimEngineConfig};
+pub use timeflow::{
+    generate_workload, simulate, simulate_requests, Arrival, CostModel, ReplicaFailure,
+    SimReport, SimRequest, Stage, StageSpan, TimeflowConfig, WorkloadSpec,
+};
 pub use sampler::Sampler;
 pub use scheduler::{
     AdmissionPolicy, ChainState, CompletedRequest, PendingChain, Phase, ResumeState,

@@ -226,6 +226,14 @@ impl SimEngine {
             .submit_with_prefix(req, Arc::new(ids), &prefix_pages, prefix_tokens))
     }
 
+    /// Outstanding pool references across all retained/shared pages —
+    /// the leak probe steal and retirement tests balance against: a
+    /// drained request must return this to its pre-submit value (refs
+    /// released exactly once; a double release panics in the pool).
+    pub fn pool_refs(&self) -> usize {
+        self.cache.pool_refs()
+    }
+
     /// Work-stealing handoff (mirrors `Engine::drain_queued`): remove
     /// up to `max_requests` fresh queued requests, release the prefix
     /// references they held, return their tickets.

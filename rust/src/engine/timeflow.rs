@@ -1,0 +1,1176 @@
+//! Discrete-event cluster timing simulator ("timeflow").
+//!
+//! The live cluster ([`crate::server::cluster`]) has threads and
+//! channels but no notion of *time*: routing, stealing, and allocator
+//! policies can only be compared on counters. Timeflow gives the same
+//! decision cores a virtual clock — a discrete-event simulation over
+//! integer nanoseconds in which every per-request stage
+//!
+//! ```text
+//! arrival → [queue] → dequant-on-upload → prefill → first token → decode
+//!                 ↘ (steal transfer between replicas) ↗
+//! ```
+//!
+//! is an event with a cycle-stamped completion. Costs are *priced*,
+//! not measured: [`CostModel::price`] converts the App. G latency
+//! model ([`crate::analysis::LatencyModel`], Eqs. 2–6, H100 peaks)
+//! plus the quantized-payload byte geometry
+//! ([`KvDtype::row_payload_bytes`] — the same quantity the engine's
+//! `kv.bytes_per_token` / `kv.dequant_us` gauges measure) into fixed
+//! per-token nanosecond constants. The result is a **deterministic
+//! perf model**: the same seed yields bit-identical histograms on any
+//! machine, so p50/p99/p999 TTFT and aggregate tokens/s become
+//! CI-gateable quantities (`bench_sim` → `BENCH_sim.json` →
+//! `tools/bench_compare.py`).
+//!
+//! ## Wiring into the server stack
+//!
+//! Timeflow does not reimplement routing or steal planning — it drives
+//! the *real* [`Router`] (shadow prefix indexes, least-loaded scoring,
+//! steal plans) with synthetic [`ReplicaLoad`] snapshots, and shares
+//! the cluster's dead-replica degradation rules via
+//! [`crate::server::router::mask_dead`] /
+//! [`crate::server::router::first_alive`]. Semantics mirrored from the
+//! live cluster:
+//!
+//! * steals take **queued work only**, youngest-first — exactly the
+//!   `Scheduler::drain_queued` contract (never an installed or resumed
+//!   chain);
+//! * a routing decision landing on a dead replica degrades to the
+//!   first live replica; dead replicas are masked out of steal
+//!   planning so they never donate or look idle;
+//! * requests queued on a replica at the moment it dies are re-routed
+//!   (none lost, none duplicated); requests already *running* there
+//!   are answered-with-error, i.e. counted as `failed`.
+//!
+//! ## Modeling simplifications
+//!
+//! One lane serves one request end-to-end (admission-level concurrency
+//! is `lanes`; batching economics are folded into the decode price at
+//! a reference batch). Prompt token counts are a pure function of the
+//! prompt id, so a prefix hit always refers to an identical prompt.
+//! Prefix retention is an LRU over prompt ids per replica, populated
+//! at request completion — an intentional simplification of the radix
+//! index (docs/ARCHITECTURE.md) that preserves the property the router
+//! cares about: equal prompts converge, and a hit skips prefill for
+//! all but the [`PREFILL_TAIL_TOKENS`] tail (the real index caps hits
+//! one page short of the prompt). Re-using a cached prefix is not
+//! free: the pages must be re-uploaded — and dequantized, under q8/q4
+//! payloads — which is the dequant-on-upload stage.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+
+use crate::analysis::{Accelerator, LatencyModel, H100};
+use crate::compress::{build_allocator, AllocatorKind};
+use crate::config::RoutingPolicy;
+use crate::kvcache::KvDtype;
+use crate::metrics::Registry;
+use crate::server::router::{first_alive, mask_dead};
+use crate::server::{ReplicaLoad, Router};
+use crate::util::rng::SplitMix64;
+
+/// A prefix hit never covers the full prompt: the engine's radix index
+/// caps hits one page short so prefill always has work to extend from.
+/// Timeflow models that as a fixed uncached tail.
+pub const PREFILL_TAIL_TOKENS: usize = 16;
+
+/// Head dim used to convert `d_kv` into per-token KV rows when pricing
+/// dequant-on-upload (matches the default engine geometry).
+const HEAD_DIM: usize = 64;
+
+/// Reference decode batch for pricing: the steady-state serving regime
+/// (paper §5.1 prices KV-read share at batches 64–256).
+const REF_BATCH: f64 = 64.0;
+
+/// Reference context length for pricing per-token costs.
+const REF_SEQ: f64 = 4096.0;
+
+/// Reference compression ratio handed to the budget allocator: the
+/// paper's accuracy-per-cost sweet spot (CR ≈ 4).
+const REF_CR: f64 = 4.0;
+
+/// Host→device upload bandwidth (PCIe-class) for cached-prefix pages.
+const UPLOAD_BYTES_PER_S: f64 = 64e9;
+
+/// Host dequantization throughput for q8/q4 payloads — the regime the
+/// engine's `kv.dequant_us` gauge measures.
+const DEQUANT_BYTES_PER_S: f64 = 8e9;
+
+/// Fixed interconnect cost to migrate one queued request descriptor
+/// between replicas in a steal.
+const TRANSFER_NS: u64 = 50_000;
+
+/// Fixed per-token nanosecond prices for every simulated stage.
+///
+/// All downstream arithmetic is integer (u64 ns), so a priced model is
+/// exactly reproducible; the f64 → ns conversion happens once, here.
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// Prefill cost per uncached prompt token (compute-bound side).
+    pub prefill_ns: u64,
+    /// Decode cost per generated token (memory-bound at the reference
+    /// batch, divided back to per-token).
+    pub decode_ns: u64,
+    /// Dequant-on-upload cost per cached prompt token (PCIe upload +
+    /// host dequant for quantized payloads).
+    pub dequant_ns: u64,
+    /// Interconnect cost per stolen-request migration.
+    pub transfer_ns: u64,
+    /// KV bytes per cached token at this payload dtype — the same
+    /// quantity the engine reports as `kv.bytes_per_token`.
+    pub kv_bytes_per_token: u64,
+}
+
+fn to_ns(seconds: f64) -> u64 {
+    (seconds * 1e9).round() as u64
+}
+
+impl CostModel {
+    /// Price the per-stage constants from the App. G latency model.
+    ///
+    /// * prefill: Eq. 2 FLOPs at batch 1 over the accelerator's peak —
+    ///   prefill is compute-bound;
+    /// * decode: Eq. 6 step latency at [`REF_BATCH`], with the KV-read
+    ///   term priced at the allocator's planned resident tokens
+    ///   (global budget [`REF_SEQ`]`/`[`REF_CR`]; budget-conserving
+    ///   plans therefore land at identical decode cost — the plan's
+    ///   *total*, not shape, sets the memory-bound share, exactly as
+    ///   [`LatencyModel::kv_latency_fraction_planned`] documents);
+    /// * dequant: per-token payload bytes over upload bandwidth, plus
+    ///   host dequant throughput when the dtype is quantized.
+    pub fn price(
+        model: &LatencyModel,
+        acc: &Accelerator,
+        dtype: KvDtype,
+        allocator: AllocatorKind,
+    ) -> Self {
+        let m = model.with_kv_dtype(dtype, HEAD_DIM);
+        let prefill_s = m.flops(1.0, REF_SEQ) / acc.flops_per_s;
+
+        let layers = m.n_layers as usize;
+        let kv_heads = ((m.d_kv as usize) / HEAD_DIM).max(1);
+        let cells = (layers * kv_heads) as f64;
+        let global = ((REF_SEQ / REF_CR) * cells) as usize;
+        let plan = build_allocator(allocator).plan(layers, kv_heads, global, None);
+        let eff_seq = (plan.total(layers, kv_heads) as f64 / cells).min(REF_SEQ);
+        let t_compute = m.flops(REF_BATCH, REF_SEQ) / acc.flops_per_s;
+        let t_memory =
+            (m.reads(REF_BATCH, 0.0) + m.kv_reads(REF_BATCH, eff_seq)) / acc.bytes_per_s;
+        let decode_s = t_compute.max(t_memory) / REF_BATCH;
+
+        let rows_per_token = m.n_layers * (m.d_kv / HEAD_DIM as f64) * 2.0;
+        let bytes_per_token = rows_per_token * dtype.row_payload_bytes(HEAD_DIM) as f64;
+        let mut dequant_s = bytes_per_token / UPLOAD_BYTES_PER_S;
+        if dtype.is_quantized() {
+            dequant_s += bytes_per_token / DEQUANT_BYTES_PER_S;
+        }
+
+        CostModel {
+            prefill_ns: to_ns(prefill_s).max(1),
+            decode_ns: to_ns(decode_s).max(1),
+            dequant_ns: to_ns(dequant_s).max(1),
+            transfer_ns: TRANSFER_NS,
+            kv_bytes_per_token: bytes_per_token as u64,
+        }
+    }
+
+    /// Default pricing: Llama 3.1 8B on an H100.
+    pub fn default_for(dtype: KvDtype, allocator: AllocatorKind) -> Self {
+        Self::price(&LatencyModel::llama31_8b(), &H100, dtype, allocator)
+    }
+}
+
+/// Request arrival process.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Arrival {
+    /// Fixed inter-arrival gap (`mean_gap_ns` exactly).
+    Uniform,
+    /// Exponential inter-arrival gaps (Poisson process).
+    Poisson,
+    /// Bursts of `burst` simultaneous arrivals, exponential gaps
+    /// between bursts.
+    Bursty,
+}
+
+impl std::str::FromStr for Arrival {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "uniform" => Ok(Arrival::Uniform),
+            "poisson" => Ok(Arrival::Poisson),
+            "bursty" => Ok(Arrival::Bursty),
+            other => Err(anyhow::anyhow!(
+                "unknown arrival process '{other}' (uniform|poisson|bursty)"
+            )),
+        }
+    }
+}
+
+impl Arrival {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Arrival::Uniform => "uniform",
+            Arrival::Poisson => "poisson",
+            Arrival::Bursty => "bursty",
+        }
+    }
+}
+
+/// Synthetic workload description: zipf-reused prompts with a chosen
+/// arrival process. Fully determined by `seed`.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkloadSpec {
+    pub requests: usize,
+    pub seed: u64,
+    pub arrival: Arrival,
+    /// Mean inter-arrival gap (per request, all replicas combined).
+    pub mean_gap_ns: u64,
+    /// Burst width for [`Arrival::Bursty`].
+    pub burst: usize,
+    /// Number of distinct prompts; ids drawn zipf(`zipf_s`).
+    pub n_prompts: usize,
+    pub zipf_s: f64,
+    /// Inclusive prompt-token range; a prompt id always maps to the
+    /// same length (so prefix hits are self-consistent).
+    pub prompt_tokens: (usize, usize),
+    /// Inclusive generated-token range (drawn per request).
+    pub gen_tokens: (usize, usize),
+}
+
+impl WorkloadSpec {
+    /// A small default: 1024 requests, 64 prompts, Poisson arrivals.
+    pub fn new(requests: usize, seed: u64) -> Self {
+        WorkloadSpec {
+            requests,
+            seed,
+            arrival: Arrival::Poisson,
+            mean_gap_ns: 1_250_000,
+            burst: 32,
+            n_prompts: 64,
+            zipf_s: 1.0,
+            prompt_tokens: (32, 96),
+            gen_tokens: (16, 64),
+        }
+    }
+}
+
+/// One synthetic request, cycle-stamped at generation time.
+#[derive(Clone, Copy, Debug)]
+pub struct SimRequest {
+    pub arrival_ns: u64,
+    pub prompt_id: usize,
+    pub prompt_tokens: usize,
+    pub gen_tokens: usize,
+}
+
+/// Zipf weights for prompt reuse. `s == 1.0` is special-cased to plain
+/// division so the weights are bit-reproducible in any IEEE language
+/// (no `powf`) — the seeder `tools/seed_bench_sim.py` relies on this.
+fn zipf_weights(n: usize, s: f64) -> Vec<f64> {
+    (1..=n)
+        .map(|k| {
+            if s == 1.0 {
+                1.0 / k as f64
+            } else {
+                (k as f64).powf(-s)
+            }
+        })
+        .collect()
+}
+
+/// Generate the workload for `spec`. Draw order per request is fixed
+/// (gap, prompt id, gen tokens) so totals are mirror-computable.
+pub fn generate_workload(spec: &WorkloadSpec) -> Vec<SimRequest> {
+    assert!(spec.n_prompts > 0 && spec.requests > 0);
+    assert!(spec.prompt_tokens.0 > PREFILL_TAIL_TOKENS);
+    assert!(spec.prompt_tokens.1 >= spec.prompt_tokens.0);
+    assert!(spec.gen_tokens.1 >= spec.gen_tokens.0 && spec.gen_tokens.0 > 0);
+    let mut rng = SplitMix64::new(spec.seed);
+    let weights = zipf_weights(spec.n_prompts, spec.zipf_s);
+    let p_span = spec.prompt_tokens.1 - spec.prompt_tokens.0 + 1;
+    let g_span = spec.gen_tokens.1 - spec.gen_tokens.0 + 1;
+    let exp_gap = |rng: &mut SplitMix64, mean: u64| -> u64 {
+        let u = rng.f64();
+        (-(1.0 - u).ln() * mean as f64).round() as u64
+    };
+    let mut t = 0u64;
+    let mut out = Vec::with_capacity(spec.requests);
+    for i in 0..spec.requests {
+        t += match spec.arrival {
+            Arrival::Uniform => spec.mean_gap_ns,
+            Arrival::Poisson => exp_gap(&mut rng, spec.mean_gap_ns),
+            Arrival::Bursty => {
+                if i % spec.burst.max(1) == 0 {
+                    exp_gap(&mut rng, spec.mean_gap_ns * spec.burst.max(1) as u64)
+                } else {
+                    0
+                }
+            }
+        };
+        let prompt_id = rng.weighted(&weights);
+        let prompt_tokens = spec.prompt_tokens.0 + (prompt_id * 37) % p_span;
+        let gen_tokens = spec.gen_tokens.0 + rng.below(g_span);
+        out.push(SimRequest {
+            arrival_ns: t,
+            prompt_id,
+            prompt_tokens,
+            gen_tokens,
+        });
+    }
+    out
+}
+
+/// The byte prompt fed to the router's shadow prefix index for a
+/// prompt id. Token counts are synthetic ([`SimRequest`] carries
+/// them); this string only has to be long enough to span shadow pages
+/// and distinct per id.
+pub fn synth_prompt(prompt_id: usize) -> String {
+    format!("sim://workload/prompt/{prompt_id:08}|synthetic preamble padding out several shadow pages for affinity scoring")
+}
+
+/// A scheduled replica failure: at `at_ns`, `replica` dies — queued
+/// requests re-route, running requests fail.
+#[derive(Clone, Copy, Debug)]
+pub struct ReplicaFailure {
+    pub replica: usize,
+    pub at_ns: u64,
+}
+
+/// Full simulator configuration.
+#[derive(Clone, Debug)]
+pub struct TimeflowConfig {
+    pub replicas: usize,
+    /// Concurrent requests per replica.
+    pub lanes: usize,
+    pub routing: RoutingPolicy,
+    pub steal: bool,
+    /// Steal-scan period (the cluster scans on status updates; the
+    /// simulator scans on a fixed virtual-time cadence).
+    pub steal_interval_ns: u64,
+    pub kv_dtype: KvDtype,
+    pub allocator: AllocatorKind,
+    /// Model prefix retention + dequant-on-upload.
+    pub prefix_cache: bool,
+    /// Per-replica LRU capacity, in distinct prompt ids.
+    pub retain_prompts: usize,
+    pub cost: CostModel,
+    pub failure: Option<ReplicaFailure>,
+    /// Record per-stage spans + the completion sequence (memory-heavy;
+    /// for tests and diagnostics, not million-request sweeps).
+    pub record_trace: bool,
+}
+
+impl TimeflowConfig {
+    pub fn new(replicas: usize, lanes: usize, routing: RoutingPolicy) -> Self {
+        let kv_dtype = KvDtype::F32;
+        let allocator = AllocatorKind::Uniform;
+        TimeflowConfig {
+            replicas,
+            lanes,
+            routing,
+            steal: true,
+            steal_interval_ns: 1_000_000,
+            kv_dtype,
+            allocator,
+            prefix_cache: true,
+            retain_prompts: 256,
+            cost: CostModel::default_for(kv_dtype, allocator),
+            failure: None,
+            record_trace: false,
+        }
+    }
+
+    /// Set the payload dtype + allocator and re-price the cost model.
+    pub fn with_kv(mut self, dtype: KvDtype, allocator: AllocatorKind) -> Self {
+        self.kv_dtype = dtype;
+        self.allocator = allocator;
+        self.cost = CostModel::default_for(dtype, allocator);
+        self
+    }
+
+    /// `"<routing>/<steal|nosteal>/<dtype>/<allocator>"` — the label
+    /// reports and benches key sweep cells by.
+    pub fn label(&self) -> String {
+        format!(
+            "{}/{}/{}/{}",
+            self.routing.name(),
+            if self.steal { "steal" } else { "nosteal" },
+            self.kv_dtype.name(),
+            self.allocator.name()
+        )
+    }
+}
+
+/// Per-request pipeline stage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Stage {
+    /// Re-upload (+ dequantize) cached prefix pages.
+    Dequant,
+    /// Chunked prefill over uncached prompt tokens.
+    Prefill,
+    /// First decode step — its completion stamps TTFT.
+    FirstToken,
+    /// Remaining decode steps.
+    Decode,
+}
+
+impl Stage {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::Dequant => "dequant",
+            Stage::Prefill => "prefill",
+            Stage::FirstToken => "first_token",
+            Stage::Decode => "decode",
+        }
+    }
+}
+
+/// One executed stage span (recorded when `record_trace` is set).
+#[derive(Clone, Copy, Debug)]
+pub struct StageSpan {
+    pub req: usize,
+    pub replica: usize,
+    pub stage: Stage,
+    pub start_ns: u64,
+    pub end_ns: u64,
+}
+
+/// Simulation outcome: headline latency/throughput numbers plus the
+/// full metrics registry (per-stage histograms, counters, gauges).
+#[derive(Debug)]
+pub struct SimReport {
+    pub label: String,
+    pub requests: usize,
+    pub completed: usize,
+    pub failed: usize,
+    pub stolen: u64,
+    pub gen_tokens: u64,
+    /// Virtual time of the last completion.
+    pub span_ns: u64,
+    pub ttft_p50_ns: f64,
+    pub ttft_p99_ns: f64,
+    pub ttft_p999_ns: f64,
+    /// Generated tokens per *virtual* second across the cluster.
+    pub tokens_per_s: f64,
+    /// Busy-lane fraction of `replicas × lanes × span`.
+    pub utilization: f64,
+    pub registry: Registry,
+    /// `(completion_ns, req)` in completion order (trace only).
+    pub completions: Vec<(u64, usize)>,
+    /// Per-stage spans (trace only).
+    pub trace: Vec<StageSpan>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum EvKind {
+    Arrive { req: usize },
+    StageDone { req: usize, stage: Stage },
+    TransferDone { req: usize, to: usize },
+    StealScan,
+    Fail { replica: usize },
+}
+
+/// Events order by (time, insertion seq): ties resolve in insertion
+/// order, making the whole simulation a pure function of the seed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct Ev {
+    ns: u64,
+    seq: u64,
+    kind: EvKind,
+}
+
+impl Ord for Ev {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.ns, self.seq).cmp(&(other.ns, other.seq))
+    }
+}
+
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum ReqPhase {
+    /// Not yet arrived.
+    Pending,
+    /// In a replica's admission queue (stealable).
+    Queued,
+    /// Migrating between replicas.
+    InTransfer,
+    /// Holding a lane.
+    Running,
+    Done,
+    Failed,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct ReqState {
+    phase: ReqPhase,
+    replica: usize,
+    hit_tokens: usize,
+    /// When the current stage started (Running) or the request was
+    /// last enqueued (Queued).
+    mark_ns: u64,
+}
+
+/// Deterministic LRU over prompt ids (ticks are unique, so the evicted
+/// entry is independent of hash iteration order).
+struct LruSet {
+    map: HashMap<usize, u64>,
+    tick: u64,
+    cap: usize,
+}
+
+impl LruSet {
+    fn new(cap: usize) -> Self {
+        LruSet {
+            map: HashMap::new(),
+            tick: 0,
+            cap,
+        }
+    }
+
+    /// True when `k` is resident; refreshes recency on hit.
+    fn touch(&mut self, k: usize) -> bool {
+        self.tick += 1;
+        let tick = self.tick;
+        match self.map.get_mut(&k) {
+            Some(t) => {
+                *t = tick;
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn insert(&mut self, k: usize) {
+        self.tick += 1;
+        self.map.insert(k, self.tick);
+        if self.map.len() > self.cap {
+            let evict = self
+                .map
+                .iter()
+                .min_by_key(|&(_, &t)| t)
+                .map(|(&k, _)| k)
+                .expect("non-empty over cap");
+            self.map.remove(&evict);
+        }
+    }
+}
+
+/// Per-replica state. Lanes are interchangeable (one request end to
+/// end), so a free-lane *count* suffices — no lane ids to track.
+struct Rep {
+    queue: VecDeque<usize>,
+    free_lanes: usize,
+    running: usize,
+    inflight: usize,
+    dead: bool,
+    cached: LruSet,
+    busy_ns: u64,
+}
+
+impl Rep {
+    fn new(lanes: usize, retain_prompts: usize) -> Self {
+        Rep {
+            queue: VecDeque::new(),
+            free_lanes: lanes,
+            running: 0,
+            inflight: 0,
+            dead: false,
+            cached: LruSet::new(retain_prompts.max(1)),
+            busy_ns: 0,
+        }
+    }
+}
+
+struct Sim<'a> {
+    cfg: &'a TimeflowConfig,
+    reqs: &'a [SimRequest],
+    prompts: Vec<String>,
+    router: Router,
+    reps: Vec<Rep>,
+    st: Vec<ReqState>,
+    heap: BinaryHeap<Reverse<Ev>>,
+    seq: u64,
+    settled: usize,
+    queued_now: usize,
+    reg: Registry,
+    completions: Vec<(u64, usize)>,
+    trace: Vec<StageSpan>,
+    last_completion_ns: u64,
+    stolen: u64,
+    gen_total: u64,
+}
+
+impl<'a> Sim<'a> {
+    fn push(&mut self, ns: u64, kind: EvKind) {
+        self.seq += 1;
+        self.heap.push(Reverse(Ev {
+            ns,
+            seq: self.seq,
+            kind,
+        }));
+    }
+
+    fn loads(&self) -> Vec<ReplicaLoad> {
+        self.reps
+            .iter()
+            .map(|r| ReplicaLoad {
+                queue_depth: r.queue.len(),
+                active_lanes: r.running,
+                inflight: r.inflight,
+                stealable: r.queue.len(),
+            })
+            .collect()
+    }
+
+    fn dead_mask(&self) -> Vec<bool> {
+        self.reps.iter().map(|r| r.dead).collect()
+    }
+
+    /// Route a request through the real router, degrading a dead
+    /// target to the first live replica exactly as the cluster does.
+    fn pick_target(&mut self, req: usize) -> usize {
+        let loads = self.loads();
+        let prompt = &self.prompts[self.reqs[req].prompt_id];
+        let d = self.router.route(prompt, &loads);
+        let mut target = d.replica;
+        if self.reps[target].dead {
+            let dead = self.dead_mask();
+            target = first_alive(&dead).expect("at least one live replica");
+            self.reg.counter("sim.route.degraded").inc();
+        }
+        if d.shadow_hit > 0 {
+            self.reg.counter("sim.route.affinity").inc();
+        }
+        self.router.note_routed(target, prompt);
+        target
+    }
+
+    fn enqueue(&mut self, req: usize, replica: usize, now: u64) {
+        self.st[req].phase = ReqPhase::Queued;
+        self.st[req].replica = replica;
+        self.st[req].mark_ns = now;
+        self.reps[replica].queue.push_back(req);
+        self.reps[replica].inflight += 1;
+        self.queued_now += 1;
+        self.reg.gauge("sim.queue.depth").set(self.queued_now as f64);
+        self.admit(replica, now);
+    }
+
+    fn admit(&mut self, replica: usize, now: u64) {
+        if self.reps[replica].dead {
+            return;
+        }
+        while !self.reps[replica].queue.is_empty() && self.reps[replica].free_lanes > 0 {
+            let req = self.reps[replica].queue.pop_front().unwrap();
+            self.queued_now -= 1;
+            self.reps[replica].free_lanes -= 1;
+            self.reps[replica].running += 1;
+            let wait = now - self.st[req].mark_ns;
+            self.reg.histogram("sim.queue_wait_ns").record(wait as f64);
+
+            let r = self.reqs[req];
+            let hit = if self.cfg.prefix_cache && self.reps[replica].cached.touch(r.prompt_id) {
+                r.prompt_tokens.saturating_sub(PREFILL_TAIL_TOKENS)
+            } else {
+                0
+            };
+            let s = &mut self.st[req];
+            s.phase = ReqPhase::Running;
+            s.replica = replica;
+            s.hit_tokens = hit;
+            if hit > 0 {
+                self.reg.counter("sim.prefix.hit_requests").inc();
+                self.reg.counter("sim.prefix.hit_tokens").add(hit as f64);
+                self.reg
+                    .counter("sim.dequant.bytes")
+                    .add((hit as u64 * self.cfg.cost.kv_bytes_per_token) as f64);
+                self.start_stage(req, Stage::Dequant, now);
+            } else {
+                self.start_stage(req, Stage::Prefill, now);
+            }
+        }
+    }
+
+    fn stage_duration(&self, req: usize, stage: Stage) -> u64 {
+        let r = &self.reqs[req];
+        let c = &self.cfg.cost;
+        let hit = self.st[req].hit_tokens;
+        match stage {
+            Stage::Dequant => hit as u64 * c.dequant_ns,
+            Stage::Prefill => (r.prompt_tokens - hit) as u64 * c.prefill_ns,
+            Stage::FirstToken => c.decode_ns,
+            Stage::Decode => (r.gen_tokens - 1) as u64 * c.decode_ns,
+        }
+    }
+
+    fn start_stage(&mut self, req: usize, stage: Stage, now: u64) {
+        self.st[req].mark_ns = now;
+        let dur = self.stage_duration(req, stage);
+        self.push(now + dur, EvKind::StageDone { req, stage });
+    }
+
+    fn on_stage_done(&mut self, req: usize, stage: Stage, now: u64) {
+        if self.st[req].phase != ReqPhase::Running {
+            return; // stale event: the replica died mid-service
+        }
+        let replica = self.st[req].replica;
+        let start = self.st[req].mark_ns;
+        self.reps[replica].busy_ns += now - start;
+        if self.cfg.record_trace {
+            self.trace.push(StageSpan {
+                req,
+                replica,
+                stage,
+                start_ns: start,
+                end_ns: now,
+            });
+        }
+        match stage {
+            Stage::Dequant => {
+                self.reg
+                    .histogram("sim.stage.dequant_ns")
+                    .record((now - start) as f64);
+                self.start_stage(req, Stage::Prefill, now);
+            }
+            Stage::Prefill => {
+                self.reg
+                    .histogram("sim.stage.prefill_ns")
+                    .record((now - start) as f64);
+                self.start_stage(req, Stage::FirstToken, now);
+            }
+            Stage::FirstToken => {
+                let ttft = now - self.reqs[req].arrival_ns;
+                self.reg.histogram("sim.ttft_ns").record(ttft as f64);
+                if self.reqs[req].gen_tokens > 1 {
+                    self.start_stage(req, Stage::Decode, now);
+                } else {
+                    self.complete(req, now);
+                }
+            }
+            Stage::Decode => self.complete(req, now),
+        }
+    }
+
+    fn complete(&mut self, req: usize, now: u64) {
+        let replica = self.st[req].replica;
+        self.st[req].phase = ReqPhase::Done;
+        self.free_lane(replica);
+        self.reg
+            .histogram("sim.stage.decode_ns")
+            .record((self.reqs[req].gen_tokens as u64 * self.cfg.cost.decode_ns) as f64);
+        self.reg
+            .histogram("sim.latency_ns")
+            .record((now - self.reqs[req].arrival_ns) as f64);
+        self.reg.counter("sim.completed").inc();
+        self.gen_total += self.reqs[req].gen_tokens as u64;
+        self.settled += 1;
+        self.last_completion_ns = self.last_completion_ns.max(now);
+        if self.cfg.record_trace {
+            self.completions.push((now, req));
+        }
+        if self.cfg.prefix_cache {
+            self.reps[replica]
+                .cached
+                .insert(self.reqs[req].prompt_id);
+        }
+        self.admit(replica, now);
+    }
+
+    fn free_lane(&mut self, replica: usize) {
+        let rep = &mut self.reps[replica];
+        rep.running -= 1;
+        rep.inflight -= 1;
+        rep.free_lanes += 1;
+    }
+
+    fn on_arrive(&mut self, req: usize, now: u64) {
+        self.reg.counter("sim.requests").inc();
+        self.reg
+            .counter("sim.tokens.prompt")
+            .add(self.reqs[req].prompt_tokens as f64);
+        let target = self.pick_target(req);
+        self.enqueue(req, target, now);
+    }
+
+    fn on_transfer_done(&mut self, req: usize, to: usize, now: u64) {
+        let target = if self.reps[to].dead {
+            self.pick_target(req)
+        } else {
+            // migrate affinity with the request, as the cluster's
+            // requeue path does
+            self.router
+                .note_routed(to, &self.prompts[self.reqs[req].prompt_id]);
+            to
+        };
+        self.enqueue(req, target, now);
+    }
+
+    fn on_steal_scan(&mut self, now: u64) {
+        self.reg.counter("sim.steal.scans").inc();
+        if self.settled >= self.reqs.len() {
+            return; // drained: let the event heap empty out
+        }
+        let mut loads = self.loads();
+        let dead = self.dead_mask();
+        mask_dead(&mut loads, &dead);
+        if let Some(plan) = self.router.steal_plan(&loads) {
+            self.reg.counter("sim.steal.plans").inc();
+            let n = plan.max_requests.min(self.reps[plan.from].queue.len());
+            for _ in 0..n {
+                // youngest-first, queued-only: the drain_queued contract
+                let req = self.reps[plan.from].queue.pop_back().unwrap();
+                self.reps[plan.from].inflight -= 1;
+                self.st[req].phase = ReqPhase::InTransfer;
+                self.stolen += 1;
+                self.reg.counter("sim.steal.stolen").inc();
+                self.push(
+                    now + self.cfg.cost.transfer_ns,
+                    EvKind::TransferDone { req, to: plan.to },
+                );
+            }
+        }
+        self.push(now + self.cfg.steal_interval_ns, EvKind::StealScan);
+    }
+
+    fn on_fail(&mut self, replica: usize, now: u64) {
+        if self.reps[replica].dead {
+            return;
+        }
+        self.reps[replica].dead = true;
+        self.reg.counter("sim.replica.deaths").inc();
+        // queued work re-routes (sequentially, like the cluster's
+        // requeue path — loads refresh between decisions)
+        let queued: Vec<usize> = self.reps[replica].queue.drain(..).collect();
+        self.reps[replica].inflight -= queued.len();
+        for req in queued {
+            self.reg.counter("sim.route.rerouted_dead").inc();
+            let target = self.pick_target(req);
+            self.enqueue(req, target, now);
+        }
+        // running work is answered-with-error
+        for req in 0..self.st.len() {
+            if self.st[req].phase == ReqPhase::Running && self.st[req].replica == replica {
+                self.st[req].phase = ReqPhase::Failed;
+                self.reg.counter("sim.failed").inc();
+                self.settled += 1;
+            }
+        }
+    }
+
+    fn run(mut self) -> SimReport {
+        for (i, r) in self.reqs.iter().enumerate() {
+            self.push(r.arrival_ns, EvKind::Arrive { req: i });
+        }
+        if self.cfg.steal {
+            let first = self.reqs.first().map(|r| r.arrival_ns).unwrap_or(0);
+            self.push(first + self.cfg.steal_interval_ns, EvKind::StealScan);
+        }
+        if let Some(f) = self.cfg.failure {
+            assert!(f.replica < self.cfg.replicas);
+            self.push(f.at_ns, EvKind::Fail { replica: f.replica });
+        }
+        while let Some(Reverse(ev)) = self.heap.pop() {
+            match ev.kind {
+                EvKind::Arrive { req } => self.on_arrive(req, ev.ns),
+                EvKind::StageDone { req, stage } => self.on_stage_done(req, stage, ev.ns),
+                EvKind::TransferDone { req, to } => self.on_transfer_done(req, to, ev.ns),
+                EvKind::StealScan => self.on_steal_scan(ev.ns),
+                EvKind::Fail { replica } => self.on_fail(replica, ev.ns),
+            }
+        }
+        assert_eq!(self.settled, self.reqs.len(), "every request settles");
+
+        let span_ns = self.last_completion_ns;
+        let busy: u64 = self.reps.iter().map(|r| r.busy_ns).sum();
+        let capacity = span_ns as f64 * (self.cfg.replicas * self.cfg.lanes) as f64;
+        let utilization = if capacity > 0.0 {
+            busy as f64 / capacity
+        } else {
+            0.0
+        };
+        let tokens_per_s = if span_ns > 0 {
+            self.gen_total as f64 / (span_ns as f64 / 1e9)
+        } else {
+            0.0
+        };
+        let failed = self.reg.counter("sim.failed").get() as usize;
+        let completed = self.reg.counter("sim.completed").get() as usize;
+        self.reg.counter("sim.tokens.gen").add(self.gen_total as f64);
+        self.reg
+            .gauge("sim.lane_utilization_pct")
+            .set(utilization * 100.0);
+        let h = self.reg.histogram("sim.ttft_ns");
+        let (p50, p99, p999) = (
+            h.percentile(50.0),
+            h.percentile(99.0),
+            h.percentile(99.9),
+        );
+        SimReport {
+            label: self.cfg.label(),
+            requests: self.reqs.len(),
+            completed,
+            failed,
+            stolen: self.stolen,
+            gen_tokens: self.gen_total,
+            span_ns,
+            ttft_p50_ns: p50,
+            ttft_p99_ns: p99,
+            ttft_p999_ns: p999,
+            tokens_per_s,
+            utilization,
+            registry: self.reg,
+            completions: self.completions,
+            trace: self.trace,
+        }
+    }
+}
+
+/// Simulate a pre-generated request list under `cfg`.
+pub fn simulate_requests(cfg: &TimeflowConfig, reqs: &[SimRequest]) -> SimReport {
+    assert!(cfg.replicas > 0 && cfg.lanes > 0);
+    assert!(!reqs.is_empty(), "empty workload");
+    let max_pid = reqs.iter().map(|r| r.prompt_id).max().unwrap_or(0);
+    let sim = Sim {
+        cfg,
+        reqs,
+        prompts: (0..=max_pid).map(synth_prompt).collect(),
+        router: Router::new(cfg.replicas, cfg.routing),
+        reps: (0..cfg.replicas)
+            .map(|_| Rep::new(cfg.lanes, cfg.retain_prompts))
+            .collect(),
+        st: vec![
+            ReqState {
+                phase: ReqPhase::Pending,
+                replica: 0,
+                hit_tokens: 0,
+                mark_ns: 0,
+            };
+            reqs.len()
+        ],
+        heap: BinaryHeap::new(),
+        seq: 0,
+        settled: 0,
+        queued_now: 0,
+        reg: Registry::default(),
+        completions: Vec::new(),
+        trace: Vec::new(),
+        last_completion_ns: 0,
+        stolen: 0,
+        gen_total: 0,
+    };
+    sim.run()
+}
+
+/// Generate `spec`'s workload and simulate it under `cfg`.
+pub fn simulate(cfg: &TimeflowConfig, spec: &WorkloadSpec) -> SimReport {
+    let reqs = generate_workload(spec);
+    simulate_requests(cfg, &reqs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base_cfg(replicas: usize, lanes: usize) -> TimeflowConfig {
+        let mut cfg = TimeflowConfig::new(replicas, lanes, RoutingPolicy::Prefix);
+        cfg.record_trace = true;
+        cfg
+    }
+
+    #[test]
+    fn cost_model_orders_dtypes() {
+        let f32c = CostModel::default_for(KvDtype::F32, AllocatorKind::Uniform);
+        let q8 = CostModel::default_for(KvDtype::Q8, AllocatorKind::Uniform);
+        let q4 = CostModel::default_for(KvDtype::Q4, AllocatorKind::Uniform);
+        // cheaper KV payloads mean cheaper memory-bound decode ...
+        assert!(f32c.decode_ns > q8.decode_ns);
+        assert!(q8.decode_ns > q4.decode_ns);
+        // ... and fewer dequant bytes (despite the dequant-throughput
+        // surcharge, the byte count dominates)
+        assert!(f32c.kv_bytes_per_token > q8.kv_bytes_per_token);
+        assert!(q8.kv_bytes_per_token > q4.kv_bytes_per_token);
+        assert!(f32c.prefill_ns > 0 && f32c.decode_ns > 0);
+    }
+
+    #[test]
+    fn budget_conserving_allocators_price_identically() {
+        // kv_latency_fraction_planned's documented property carries
+        // over: the plan total, not its shape, sets decode cost.
+        let u = CostModel::default_for(KvDtype::Q8, AllocatorKind::Uniform);
+        let p = CostModel::default_for(KvDtype::Q8, AllocatorKind::Pyramid);
+        assert_eq!(u.decode_ns, p.decode_ns);
+    }
+
+    #[test]
+    fn single_request_ttft_is_exact() {
+        let mut cfg = base_cfg(1, 1);
+        cfg.steal = false;
+        cfg.prefix_cache = false;
+        let reqs = [SimRequest {
+            arrival_ns: 1000,
+            prompt_id: 0,
+            prompt_tokens: 40,
+            gen_tokens: 4,
+        }];
+        let rep = simulate_requests(&cfg, &reqs);
+        let expect_ttft = 40 * cfg.cost.prefill_ns + cfg.cost.decode_ns;
+        assert_eq!(rep.ttft_p50_ns, expect_ttft as f64);
+        assert_eq!(rep.completed, 1);
+        assert_eq!(
+            rep.span_ns,
+            1000 + expect_ttft + 3 * cfg.cost.decode_ns
+        );
+        assert_eq!(rep.gen_tokens, 4);
+        // one lane, fully busy from admission to completion
+        assert!((rep.utilization - (rep.span_ns - 1000) as f64 / rep.span_ns as f64).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prefix_hit_trades_prefill_for_dequant() {
+        let mut cfg = base_cfg(1, 1).with_kv(KvDtype::Q8, AllocatorKind::Uniform);
+        cfg.record_trace = true;
+        cfg.steal = false;
+        let r = SimRequest {
+            arrival_ns: 0,
+            prompt_id: 3,
+            prompt_tokens: 80,
+            gen_tokens: 2,
+        };
+        let mut second = r;
+        second.arrival_ns = 10_000_000_000; // long after the first completes
+        let rep = simulate_requests(&cfg, &[r, second]);
+        assert_eq!(rep.completed, 2);
+        let hits = rep.registry.counters["sim.prefix.hit_requests"].get();
+        assert_eq!(hits, 1.0, "second request hits the retained prefix");
+        let dequants: Vec<_> = rep
+            .trace
+            .iter()
+            .filter(|s| s.stage == Stage::Dequant)
+            .collect();
+        assert_eq!(dequants.len(), 1);
+        let hit_tokens = (80 - PREFILL_TAIL_TOKENS) as u64;
+        assert_eq!(
+            dequants[0].end_ns - dequants[0].start_ns,
+            hit_tokens * cfg.cost.dequant_ns
+        );
+        // the hit's prefill span only covers the uncached tail
+        let prefills: Vec<u64> = rep
+            .trace
+            .iter()
+            .filter(|s| s.stage == Stage::Prefill)
+            .map(|s| s.end_ns - s.start_ns)
+            .collect();
+        assert_eq!(prefills[0], 80 * cfg.cost.prefill_ns);
+        assert_eq!(
+            prefills[1],
+            PREFILL_TAIL_TOKENS as u64 * cfg.cost.prefill_ns
+        );
+    }
+
+    #[test]
+    fn same_seed_is_bit_identical() {
+        let cfg = base_cfg(4, 2);
+        let spec = WorkloadSpec::new(512, 0xFEED);
+        let a = simulate(&cfg, &spec);
+        let b = simulate(&cfg, &spec);
+        assert_eq!(a.completions, b.completions);
+        assert_eq!(
+            a.registry.histogram_samples("sim.ttft_ns"),
+            b.registry.histogram_samples("sim.ttft_ns")
+        );
+        assert_eq!(a.ttft_p999_ns.to_bits(), b.ttft_p999_ns.to_bits());
+        assert_eq!(a.tokens_per_s.to_bits(), b.tokens_per_s.to_bits());
+    }
+
+    #[test]
+    fn steal_drains_hot_replica_to_idle_one() {
+        // Prefix routing + one shared prompt piles everything on one
+        // replica; stealing must move queued work to the idle one and
+        // finish strictly earlier.
+        let mk = |steal: bool| {
+            let mut cfg = base_cfg(2, 1);
+            cfg.steal = steal;
+            cfg.prefix_cache = false;
+            let mut spec = WorkloadSpec::new(64, 7);
+            spec.arrival = Arrival::Uniform;
+            spec.mean_gap_ns = 1000; // near-simultaneous
+            spec.n_prompts = 1;
+            simulate(&cfg, &spec)
+        };
+        let with = mk(true);
+        let without = mk(false);
+        assert!(with.stolen > 0, "steals expected");
+        assert_eq!(without.stolen, 0);
+        assert!(with.span_ns < without.span_ns);
+        assert_eq!(with.completed, 64);
+    }
+
+    #[test]
+    fn replica_death_conserves_requests() {
+        let mut cfg = base_cfg(3, 1);
+        cfg.failure = Some(ReplicaFailure {
+            replica: 0,
+            at_ns: 3_000_000,
+        });
+        let mut spec = WorkloadSpec::new(96, 11);
+        spec.arrival = Arrival::Bursty;
+        let rep = simulate(&cfg, &spec);
+        assert_eq!(rep.completed + rep.failed, 96, "no loss, no duplication");
+        assert!(rep.failed <= cfg.lanes, "only running work can fail");
+        // every completion is unique
+        let mut ids: Vec<usize> = rep.completions.iter().map(|&(_, r)| r).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), rep.completed);
+    }
+
+    #[test]
+    fn stage_order_is_respected_per_request() {
+        let cfg = base_cfg(2, 2);
+        let spec = WorkloadSpec::new(128, 3);
+        let rep = simulate(&cfg, &spec);
+        let mut per_req: HashMap<usize, Vec<&StageSpan>> = HashMap::new();
+        for s in &rep.trace {
+            per_req.entry(s.req).or_default().push(s);
+        }
+        for (req, spans) in per_req {
+            for w in spans.windows(2) {
+                assert!(
+                    w[0].end_ns <= w[1].start_ns && w[0].stage < w[1].stage,
+                    "req {req}: stage {:?} overlaps {:?}",
+                    w[0],
+                    w[1]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn workload_generation_is_deterministic_and_in_range() {
+        let spec = WorkloadSpec::new(1000, 42);
+        let a = generate_workload(&spec);
+        let b = generate_workload(&spec);
+        assert_eq!(a.len(), 1000);
+        assert!(a
+            .iter()
+            .zip(&b)
+            .all(|(x, y)| (x.arrival_ns, x.prompt_id, x.prompt_tokens, x.gen_tokens)
+                == (y.arrival_ns, y.prompt_id, y.prompt_tokens, y.gen_tokens)));
+        for r in &a {
+            assert!(r.prompt_id < spec.n_prompts);
+            assert!((spec.prompt_tokens.0..=spec.prompt_tokens.1).contains(&r.prompt_tokens));
+            assert!((spec.gen_tokens.0..=spec.gen_tokens.1).contains(&r.gen_tokens));
+        }
+        // arrivals are non-decreasing
+        assert!(a.windows(2).all(|w| w[0].arrival_ns <= w[1].arrival_ns));
+        // zipf skew: the head prompt is the most common
+        let count = |pid: usize| a.iter().filter(|r| r.prompt_id == pid).count();
+        assert!(count(0) > count(spec.n_prompts - 1));
+    }
+}

@@ -34,11 +34,20 @@
 //!
 //! ## Numerics contract (see `docs/NUMERICS.md`)
 //!
-//! * Quantization is **lossy** with per-element error ≤ `scale/2` =
-//!   `(hi − lo) / (2·qmax)` over the zero-anchored row range
-//!   (constant and all-zero rows round-trip exactly, up to one float
-//!   rounding of `scale·q` for constant rows — exactly zero error in
-//!   the `q ≡ 1` encoding).
+//! * Quantization is **lossy** with per-element error ≤ `|scale|/2`
+//!   for finite elements over the zero-anchored row range (constant
+//!   and all-zero rows round-trip exactly, up to one float rounding of
+//!   `scale·q` for constant rows — exactly zero error in the `q ≡ 1`
+//!   encoding). The step is floored at `f32::MIN_POSITIVE`, so a
+//!   subnormal row spread never produces a denormal (or zero) scale;
+//!   such rows still satisfy the half-step bound.
+//! * **Non-finite elements never panic and take defined codes**: NaN
+//!   decodes to exactly `0.0`; `±inf` saturate to the row's
+//!   representable extremes (`lo`/`hi` anchor of an affine row, the
+//!   nearer of `{0, value}` in a constant row). The range scan sees
+//!   finite values only, so one stray NaN/inf cannot widen or poison a
+//!   row's code lattice; rows with *no* finite values decode entirely
+//!   to `0.0`.
 //! * Dequantization is **deterministic and exact** over the code
 //!   lattice: the same block dequantizes to bit-identical f32 forever.
 //! * Blocks are produced exactly once, at page publish/export
@@ -216,11 +225,15 @@ impl QuantBlock {
         let mut zp = vec![0u8; rows];
         for r in 0..rows {
             let xs = &src[r * row_len..(r + 1) * row_len];
+            // the range scan sees finite values only: a NaN or ±inf
+            // element must not poison the whole row's code lattice
             let mut lo = f32::INFINITY;
             let mut hi = f32::NEG_INFINITY;
             for &x in xs {
-                lo = lo.min(x);
-                hi = hi.max(x);
+                if x.is_finite() {
+                    lo = lo.min(x);
+                    hi = hi.max(x);
+                }
             }
             // constant rows take a degenerate exact encoding; varying
             // rows anchor the representable interval at zero so the
@@ -228,12 +241,21 @@ impl QuantBlock {
             #[derive(Clone, Copy)]
             enum Enc {
                 Zero,
-                Const,
+                Const { s: f32 },
                 Affine { s: f32, z: f32 },
             }
-            let enc = if hi > lo {
+            let enc = if lo > hi {
+                // no finite value in the row (all NaN/±inf): nothing
+                // to anchor a lattice to — everything decodes to 0.0
+                Enc::Zero
+            } else if hi > lo {
                 let (lo0, hi0) = (lo.min(0.0), hi.max(0.0));
-                let s = (hi0 - lo0) / qmax;
+                // the MIN_POSITIVE floor keeps a subnormal (or
+                // underflowed-to-zero) spread from producing a
+                // denormal step: x/s and −lo0/s stay finite, and the
+                // half-step error bound still holds (the true spread
+                // is below the floored step)
+                let s = ((hi0 - lo0) / qmax).max(f32::MIN_POSITIVE);
                 let z = (-lo0 / s).round().clamp(0.0, qmax);
                 scale[r] = s;
                 zp[r] = z as u8;
@@ -244,14 +266,33 @@ impl QuantBlock {
             } else {
                 // constant non-zero row: scale·(1 − 0) == value, exact
                 scale[r] = lo;
-                Enc::Const
+                Enc::Const { s: lo }
             };
             let row = &mut data[r * stride..(r + 1) * stride];
             for (d, &x) in xs.iter().enumerate() {
+                // non-finite elements take defined codes: NaN decodes
+                // to exactly 0.0, ±inf saturate to the row's
+                // representable extremes
                 let q = match enc {
                     Enc::Zero => 0u8,
-                    Enc::Const => 1u8,
-                    Enc::Affine { s, z } => (x / s + z).round().clamp(0.0, qmax) as u8,
+                    Enc::Const { s } => {
+                        if x.is_finite() {
+                            1u8
+                        } else if x.is_nan() {
+                            0u8 // decodes to exactly 0.0
+                        } else if (x > 0.0) == (s > 0.0) {
+                            1u8 // ±inf saturates toward the value…
+                        } else {
+                            0u8 // …or toward 0.0, whichever is nearer
+                        }
+                    }
+                    Enc::Affine { s, z } => {
+                        if x.is_nan() {
+                            z as u8 // the exact-zero code
+                        } else {
+                            (x / s + z).round().clamp(0.0, qmax) as u8
+                        }
+                    }
                 };
                 match dtype {
                     KvDtype::Q8 => row[d] = q,

@@ -6,6 +6,7 @@
 //!   exp <id>   regenerate a paper figure/table (fig1 fig3 fig4 fig5
 //!              fig6 fig7 table1 table2 table7 — see DESIGN.md §4)
 //!   serve      run the TCP line-JSON server
+//!   sim        discrete-event cluster timing simulation (no artifacts)
 //!   inspect    print manifest/artifact info
 //!   selftest   load artifacts and run a tiny end-to-end generation
 
@@ -30,7 +31,7 @@ fn main() {
 }
 
 fn usage() -> &'static str {
-    "usage: hyperscale <gen|eval|exp|serve|inspect|selftest> [options]\n\
+    "usage: hyperscale <gen|eval|exp|serve|sim|inspect|selftest> [options]\n\
      common options: --artifacts DIR --variant TAG --policy NAME --cr X\n\
                      --kv-dtype f32|q8|q4 (pool payload precision)\n\
                      --allocator uniform|pyramid|adaptive (per-head KV budgets)\n\
@@ -42,6 +43,9 @@ fn usage() -> &'static str {
        serve    [--addr 127.0.0.1:7333] [--no-prefix-cache] [--prefix-pages N]\n\
                 [--replicas N] [--routing prefix|least-loaded|round-robin]\n\
                 [--no-steal]\n\
+       sim      [--replicas N] [--lanes N] [--requests N] [--seed S]\n\
+                [--routing ...] [--no-steal] [--arrival uniform|poisson|bursty]\n\
+                [--mean-gap-us X] [--prompts N] [--fail-replica I --fail-at-ms T]\n\
        inspect  | selftest"
 }
 
@@ -65,6 +69,7 @@ fn dispatch(args: &Args) -> Result<()> {
                 hyperscale::server::serve(cfg, addr)
             }
         }
+        "sim" => cmd_sim(args),
         "inspect" => cmd_inspect(args),
         "selftest" => cmd_selftest(args),
         _ => {
@@ -157,6 +162,60 @@ fn cmd_exp(args: &Args) -> Result<()> {
         "alloc" | "allocators" => exp::run_alloc_sweep(&artifacts, n),
         other => anyhow::bail!("unknown experiment '{other}'\n{}", usage()),
     }
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    use hyperscale::engine::timeflow::{simulate, Arrival, ReplicaFailure, TimeflowConfig, WorkloadSpec};
+
+    let ccfg = ClusterConfig::default().with_args(args)?;
+    let ecfg = engine_cfg(args)?;
+    let mut cfg = TimeflowConfig::new(ccfg.replicas.max(1), args.get_usize("lanes", 4)?, ccfg.routing)
+        .with_kv(ecfg.kv_dtype, ecfg.allocator);
+    cfg.steal = ccfg.steal;
+    if args.get("fail-at-ms").is_some() {
+        cfg.failure = Some(ReplicaFailure {
+            replica: args.get_usize("fail-replica", 0)?,
+            at_ns: (args.get_f64("fail-at-ms", 0.0)? * 1e6) as u64,
+        });
+    }
+
+    let mut spec = WorkloadSpec::new(
+        args.get_usize("requests", 100_000)?,
+        args.get_usize("seed", 0)? as u64,
+    );
+    spec.arrival = args.get_str("arrival", "poisson").parse::<Arrival>()?;
+    spec.mean_gap_ns = (args.get_f64("mean-gap-us", 1250.0)? * 1e3) as u64;
+    spec.n_prompts = args.get_usize("prompts", 64)?;
+
+    let wall = std::time::Instant::now();
+    let rep = simulate(&cfg, &spec);
+    let wall_s = wall.elapsed().as_secs_f64();
+    println!(
+        "sim [{}] replicas={} lanes={} arrival={} requests={}",
+        rep.label,
+        cfg.replicas,
+        cfg.lanes,
+        spec.arrival.name(),
+        rep.requests
+    );
+    println!(
+        "  completed {} failed {} stolen {} gen_tokens {}",
+        rep.completed, rep.failed, rep.stolen, rep.gen_tokens
+    );
+    println!(
+        "  ttft p50 {:.1}us p99 {:.1}us p999 {:.1}us | {:.0} tok/s | util {:.1}% | span {:.1}ms",
+        rep.ttft_p50_ns / 1e3,
+        rep.ttft_p99_ns / 1e3,
+        rep.ttft_p999_ns / 1e3,
+        rep.tokens_per_s,
+        rep.utilization * 100.0,
+        rep.span_ns as f64 / 1e6
+    );
+    println!("  simulated in {wall_s:.2}s wall");
+    if args.flag("metrics") {
+        print!("{}", rep.registry.report());
+    }
+    Ok(())
 }
 
 fn cmd_inspect(args: &Args) -> Result<()> {

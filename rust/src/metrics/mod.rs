@@ -103,6 +103,13 @@ impl Histogram {
         self.count
     }
 
+    /// The retained samples, in recording order (the full stream below
+    /// `cap`, the deterministic reservoir past it). Bit-exactness
+    /// tests compare two runs through this accessor.
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
     pub fn mean(&self) -> f64 {
         if self.count == 0 {
             0.0
@@ -146,6 +153,12 @@ impl Registry {
     }
     pub fn histogram(&mut self, name: &str) -> &mut Histogram {
         self.histograms.entry(name.to_string()).or_default()
+    }
+
+    /// Read-only view of a histogram's retained samples (empty when
+    /// the histogram was never recorded to).
+    pub fn histogram_samples(&self, name: &str) -> &[f64] {
+        self.histograms.get(name).map_or(&[], |h| h.samples())
     }
 
     pub fn report(&self) -> String {
@@ -217,6 +230,28 @@ mod tests {
         assert_eq!(h.count(), 10_000);
         let p50 = h.percentile(50.0);
         assert!(p50 > 20.0 && p50 < 80.0, "p50={p50}");
+    }
+
+    #[test]
+    fn histogram_samples_are_deterministic_under_pressure() {
+        let run = || {
+            let mut h = Histogram::with_capacity(64);
+            for i in 0..5000 {
+                h.record((i * 7 % 997) as f64);
+            }
+            h.samples().to_vec()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.len(), 64);
+        assert_eq!(a, b, "reservoir replacement is seeded, not random");
+    }
+
+    #[test]
+    fn registry_exposes_samples_readonly() {
+        let mut r = Registry::default();
+        r.histogram("x").record(2.0);
+        assert_eq!(r.histogram_samples("x"), &[2.0]);
+        assert!(r.histogram_samples("missing").is_empty());
     }
 
     #[test]

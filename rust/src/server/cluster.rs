@@ -70,7 +70,7 @@ use crate::metrics::Registry;
 use crate::util::Json;
 
 use super::protocol::{render_response, ServeRequest, ServeResponse};
-use super::router::{ReplicaLoad, Router};
+use super::router::{first_alive, mask_dead, ReplicaLoad, Router};
 use super::{response_from, Dispatch};
 
 /// What the cluster needs from an engine replica. Implemented by
@@ -570,7 +570,7 @@ fn router_loop(
                 let d = router.route(&req.prompt, &loads);
                 // a dead replica cannot serve; degrade to any live one
                 let target = if dead[d.replica] {
-                    match (0..n).find(|&i| !dead[i]) {
+                    match first_alive(&dead) {
                         Some(t) => t,
                         None => {
                             let resp =
@@ -604,7 +604,7 @@ fn router_loop(
                     to
                 };
                 if dead[target] {
-                    match (0..n).find(|&i| !dead[i]) {
+                    match first_alive(&dead) {
                         Some(t) => target = t,
                         None => {
                             let resp =
@@ -631,12 +631,7 @@ fn router_loop(
                 if ccfg.steal {
                     // dead replicas must never look idle to the planner
                     let mut view = loads.clone();
-                    for (i, v) in view.iter_mut().enumerate() {
-                        if dead[i] {
-                            v.stealable = 0;
-                            v.active_lanes = 1;
-                        }
-                    }
+                    mask_dead(&mut view, &dead);
                     if let Some(plan) = router.steal_plan(&view) {
                         metrics.counter("cluster.steal_ops").inc();
                         // optimistic: don't re-plan this donor until a

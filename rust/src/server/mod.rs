@@ -46,7 +46,7 @@ use crate::util::Json;
 
 pub use cluster::{serve_cluster, Backend, Cluster, EngineBackend};
 pub use protocol::{parse_request, render_response, ServeRequest, ServeResponse};
-pub use router::{ReplicaLoad, RouteDecision, Router, StealPlan};
+pub use router::{first_alive, mask_dead, ReplicaLoad, RouteDecision, Router, StealPlan};
 
 enum Msg {
     Request(ServeRequest, mpsc::Sender<String>),

@@ -241,6 +241,28 @@ impl Router {
     }
 }
 
+/// Mask dead replicas out of a load snapshot before steal planning so
+/// they never look idle (steal target) and never donate. This is the
+/// degradation rule shared by the live cluster's router loop
+/// ([`super::cluster`]) and the timeflow simulator
+/// ([`crate::engine::timeflow`]).
+pub fn mask_dead(loads: &mut [ReplicaLoad], dead: &[bool]) {
+    debug_assert_eq!(loads.len(), dead.len());
+    for (load, &d) in loads.iter_mut().zip(dead) {
+        if d {
+            load.stealable = 0;
+            load.active_lanes = 1;
+        }
+    }
+}
+
+/// First live replica — the shared fallback target when a routing or
+/// requeue decision lands on a dead replica. `None` means the whole
+/// cluster is down.
+pub fn first_alive(dead: &[bool]) -> Option<usize> {
+    dead.iter().position(|&d| !d)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -351,6 +373,33 @@ mod tests {
         l[2].active_lanes = 0;
         l[0].stealable = 0;
         assert!(r.steal_plan(&l).is_none());
+    }
+
+    #[test]
+    fn dead_masking_blocks_donation_and_idleness() {
+        let r = Router::new(3, RoutingPolicy::LeastLoaded);
+        let mut l = loads(3);
+        // replica 0 hot, replica 2 idle but dead
+        l[0].queue_depth = 6;
+        l[0].stealable = 6;
+        l[0].active_lanes = 2;
+        l[1].active_lanes = 1;
+        let mut dead = vec![false, false, true];
+        let mut view = l.clone();
+        mask_dead(&mut view, &dead);
+        assert!(
+            r.steal_plan(&view).is_none(),
+            "a dead replica must not be a steal target"
+        );
+        // a dead donor is likewise masked out
+        dead = vec![true, false, false];
+        l[2].active_lanes = 0;
+        let mut view = l.clone();
+        mask_dead(&mut view, &dead);
+        assert!(r.steal_plan(&view).is_none());
+        assert_eq!(first_alive(&dead), Some(1));
+        assert_eq!(first_alive(&[true, true]), None);
+        assert_eq!(first_alive(&[false, true]), Some(0));
     }
 
     #[test]

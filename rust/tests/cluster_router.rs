@@ -39,8 +39,26 @@ use hyperscale::engine::{
 };
 use hyperscale::kvcache::KvDtype;
 use hyperscale::server::{Cluster, ServeRequest};
-use hyperscale::util::Json;
+use hyperscale::util::{Json, SplitMix64};
+use std::collections::BTreeSet;
 use std::sync::Arc;
+
+/// Base seed for the randomized property tests below; `PROP_SEED`
+/// (decimal or 0x-hex) lets the CI seed-matrix leg re-run them under
+/// several fixed seeds.
+fn prop_seed() -> u64 {
+    match std::env::var("PROP_SEED") {
+        Ok(s) => {
+            let s = s.trim();
+            let parsed = match s.strip_prefix("0x") {
+                Some(hex) => u64::from_str_radix(hex, 16),
+                None => s.parse(),
+            };
+            parsed.unwrap_or_else(|_| panic!("PROP_SEED must be an integer, got {s:?}"))
+        }
+        Err(_) => 0xC1_0575,
+    }
+}
 
 /// Replica factory: sim engines with `lanes` lanes each, pool payloads
 /// under the env-selected dtype (f32 normally, q8 on the CI leg).
@@ -312,6 +330,17 @@ fn sched_req(width: usize, max_len: usize, seed: u64) -> GenRequest {
     }
 }
 
+/// A [`GenRequest`] for driving a [`SimEngine`] directly.
+fn req_for(prompt: &str, width: usize, seed: u64) -> GenRequest {
+    GenRequest {
+        prompt: prompt.into(),
+        width,
+        max_len: 160,
+        temperature: 0.7,
+        seed,
+    }
+}
+
 fn policy(max_len: usize) -> Box<dyn hyperscale::compress::Policy> {
     build_policy(PolicyKind::Vanilla, 1.0, max_len, 4, 8)
 }
@@ -351,6 +380,199 @@ fn drain_queued_never_takes_partially_installed_width_requests() {
     );
     assert!(s.drain_queued(10).is_empty());
     let _ = t;
+}
+
+/// Randomized schedules of submit / install / preempt / drain: every
+/// drained request is *fresh* (whole, never installed, never resumed),
+/// no ticket migrates twice, and chains are conserved at every step —
+/// the migration-safety contract [`Scheduler::drain_queued`] documents,
+/// checked far beyond the hand-built scenarios above.
+#[test]
+fn drain_queued_is_safe_under_randomized_schedules() {
+    let mut rng = SplitMix64::new(prop_seed() ^ 0x57EA_1);
+    for scenario in 0..4 {
+        let lanes = 1 + rng.below(3);
+        let mut s = Scheduler::new(lanes, SchedulerConfig::default());
+        let ids = Arc::new(vec![1u32; 8]);
+        let mut submitted_chains = 0usize;
+        let mut drained_chains = 0usize;
+        // tickets that ever owned lane state (installed, and therefore
+        // possibly preempted): these must never migrate afterwards
+        let mut touched: BTreeSet<u64> = BTreeSet::new();
+        let mut drained_tickets: BTreeSet<u64> = BTreeSet::new();
+        for step in 0..250 {
+            match rng.below(5) {
+                // submit dominates so queues build real depth
+                0 | 1 => {
+                    let width = 1 + rng.below(3);
+                    submitted_chains += width;
+                    s.submit(&sched_req(width, 24, step as u64), ids.clone());
+                }
+                2 => {
+                    if let Some(lane) = s.idle_lane() {
+                        if let Some(p) = s.next_admission() {
+                            touched.insert(p.ticket);
+                            s.install(lane, ChainState::new(p, policy(24), 0));
+                        }
+                    }
+                }
+                3 => {
+                    let lane = rng.below(lanes);
+                    if s.lane(lane).is_some() {
+                        s.preempt(lane);
+                    }
+                }
+                _ => {
+                    let eligible = s.stealable_requests();
+                    let max = 1 + rng.below(3);
+                    let drained = s.drain_queued(max);
+                    assert_eq!(
+                        drained.len(),
+                        max.min(eligible),
+                        "scenario {scenario} step {step}: drain must take \
+                         exactly min(max, stealable)"
+                    );
+                    for (t, chains) in &drained {
+                        assert!(
+                            drained_tickets.insert(*t),
+                            "ticket {t} migrated twice"
+                        );
+                        assert!(
+                            !touched.contains(t),
+                            "ticket {t} owned lane state yet migrated"
+                        );
+                        assert!(
+                            chains.iter().all(|c| c.resume.is_none()),
+                            "ticket {t}: a resumed chain migrated"
+                        );
+                        for (k, c) in chains.iter().enumerate() {
+                            assert_eq!(c.ticket, *t);
+                            assert_eq!(
+                                c.chain_idx, k,
+                                "ticket {t} migrated with chains missing/reordered"
+                            );
+                            assert_eq!(c.wait_fork, k > 0, "fork roles must survive");
+                        }
+                        drained_chains += chains.len();
+                    }
+                }
+            }
+            assert_eq!(
+                submitted_chains,
+                s.queue_depth() + s.active_lanes() + drained_chains,
+                "scenario {scenario} step {step}: chains leaked or duplicated"
+            );
+        }
+    }
+}
+
+/// Prefix-cache pool references held by queued requests are released
+/// exactly once when the requests are drained for migration: the pool
+/// ref count returns to its pre-submit baseline (zero releases would
+/// leak; a second release panics inside the pool).
+#[test]
+fn drained_prefix_refs_balance_to_baseline() {
+    let mut rng = SplitMix64::new(prop_seed() ^ 0xBA1A);
+    for _ in 0..4 {
+        let mut e = SimEngine::new(SimEngineConfig {
+            lanes: 1,
+            ..Default::default()
+        });
+        // seed the prefix index with the shared preamble, then park a
+        // request on the only lane so later submissions stay queued
+        e.submit(&req_for(&system_prompt(0, 0), 1, 1)).unwrap();
+        e.drain().unwrap();
+        e.submit(&req_for(&system_prompt(0, 1), 1, 2)).unwrap();
+        e.tick().unwrap();
+        let baseline = e.pool_refs();
+
+        let n = 2 + rng.below(3);
+        for k in 0..n {
+            let width = 1 + rng.below(2);
+            e.submit(&req_for(&system_prompt(0, 100 + k), width, 3 + k as u64))
+                .unwrap();
+        }
+        assert!(
+            e.pool_refs() > baseline,
+            "queued prefix hits must hold pool references (vacuous test)"
+        );
+        assert_eq!(e.stealable_requests(), n);
+
+        let stolen = e.drain_queued(n);
+        assert_eq!(stolen.len(), n);
+        assert_eq!(
+            e.pool_refs(),
+            baseline,
+            "drained requests must release their prefix refs exactly once"
+        );
+        // the parked request is untouched and still completes cleanly
+        assert_eq!(e.drain().unwrap().len(), 1);
+    }
+}
+
+/// A replica that dies at construction never loses or duplicates a
+/// request: every submission is answered exactly once (served by a
+/// live replica, or an explicit error if it raced the death notice),
+/// and no success is attributed to the dead replica.
+#[test]
+fn dead_replica_answers_every_request_exactly_once() {
+    let mut rng = SplitMix64::new(prop_seed() ^ 0xD1E);
+    let ccfg = ClusterConfig {
+        replicas: 3,
+        routing: *rng.choice(&[
+            RoutingPolicy::Prefix,
+            RoutingPolicy::LeastLoaded,
+            RoutingPolicy::RoundRobin,
+        ]),
+        steal: true,
+    };
+    let cluster = Cluster::start(ccfg, move |i: usize| {
+        if i == 1 {
+            anyhow::bail!("injected construction failure");
+        }
+        Ok(SimEngine::new(SimEngineConfig {
+            lanes: 2,
+            kv_dtype: KvDtype::from_env(),
+            ..Default::default()
+        }))
+    });
+
+    let n = 24u64;
+    let pending: Vec<_> = (0..n)
+        .map(|i| {
+            // mix hot (shared-prefix) and one-off prompts
+            let prompt = if i % 3 == 0 {
+                system_prompt(0, i as usize)
+            } else {
+                format!("unique prompt {i} with enough text to span pages")
+            };
+            (i, cluster.call(sreq(i, &prompt, i)))
+        })
+        .collect();
+
+    let mut successes = 0usize;
+    for (id, rx) in pending {
+        let line = rx
+            .recv_timeout(std::time::Duration::from_secs(60))
+            .unwrap_or_else(|_| panic!("request {id} was lost (no response)"));
+        let j = Json::parse(&line).expect("response parses");
+        if j.get("error").is_none() {
+            let replica = field_usize(&j, "replica_id");
+            assert_ne!(replica, 1, "request {id} claims the dead replica served it");
+            successes += 1;
+        }
+        assert!(
+            rx.try_recv().is_err(),
+            "request {id} was answered more than once"
+        );
+    }
+    cluster.shutdown();
+    // round-robin cycles three ways, so at worst a third of the
+    // requests raced the death notice into explicit errors
+    assert!(
+        successes >= (2 * n as usize) / 3,
+        "only {successes}/{n} requests served by live replicas"
+    );
 }
 
 #[test]

@@ -274,6 +274,120 @@ fn prefix_restore_equivalence_and_requantize_once() {
 }
 
 // ----------------------------------------------------------------------
+// Edge rows: non-finite, subnormal, and single-element payloads
+// ----------------------------------------------------------------------
+
+/// Non-finite and subnormal rows quantize without panics and decode to
+/// the documented values: NaN → exactly 0.0, ±inf → saturated to the
+/// row's representable extremes, rows with no finite values → all
+/// zeros, and finite elements stay inside the half-step bound. No
+/// NaN/inf ever leaks into a dequantized view.
+#[test]
+fn edge_rows_round_trip_without_panics_within_bounds() {
+    use hyperscale::kvcache::QuantBlock;
+    let rl = 6;
+    let rows: Vec<[f32; 6]> = vec![
+        [1.0, f32::NAN, -2.0, 0.5, 0.0, 1.5],           // NaN amid spread
+        [0.25, f32::INFINITY, 1.0, 0.75, 0.5, 0.125],   // +inf amid spread
+        [f32::NEG_INFINITY, -0.5, -1.0, -0.25, 0.0, -2.0], // −inf amid spread
+        [f32::NAN; 6],                                  // no finite values
+        [f32::INFINITY; 6],                             // no finite values
+        [2.5, f32::INFINITY, 2.5, f32::NAN, 2.5, 2.5],  // constant + junk
+        [-1.75, f32::INFINITY, -1.75, -1.75, f32::NEG_INFINITY, -1.75],
+        [0.0, 1.0e-41, -1.0e-41, 7.0e-40, 0.0, -3.0e-40], // subnormal spread
+    ];
+    let src: Vec<f32> = rows.iter().flatten().copied().collect();
+    for dtype in [KvDtype::Q8, KvDtype::Q4] {
+        let b = QuantBlock::quantize(dtype, rows.len(), rl, &src);
+        let mut out = vec![0f32; rows.len() * rl];
+        b.dequantize_rows_into(0, rows.len(), &mut out);
+        assert!(
+            out.iter().all(|y| y.is_finite()),
+            "{dtype}: non-finite value leaked into a dequantized view"
+        );
+        for (r, row) in rows.iter().enumerate() {
+            let dec = &out[r * rl..(r + 1) * rl];
+            let finite: Vec<f32> = row.iter().copied().filter(|x| x.is_finite()).collect();
+            if finite.is_empty() {
+                assert!(
+                    dec.iter().all(|&y| y == 0.0),
+                    "{dtype}: row {r} has no finite values and must decode to zeros"
+                );
+                continue;
+            }
+            let step = b.row_scale(r).abs();
+            let lo = finite.iter().copied().fold(f32::INFINITY, f32::min).min(0.0);
+            let hi = finite.iter().copied().fold(f32::NEG_INFINITY, f32::max).max(0.0);
+            for (d, (&x, &y)) in row.iter().zip(dec).enumerate() {
+                if x.is_nan() {
+                    assert_eq!(y, 0.0, "{dtype}: row {r} elem {d}: NaN must decode to 0.0");
+                } else if x == f32::INFINITY {
+                    assert!(
+                        y >= hi - step * 0.5001 - 1e-6,
+                        "{dtype}: row {r} elem {d}: +inf must saturate high (got {y})"
+                    );
+                } else if x == f32::NEG_INFINITY {
+                    assert!(
+                        y <= lo + step * 0.5001 + 1e-6,
+                        "{dtype}: row {r} elem {d}: −inf must saturate low (got {y})"
+                    );
+                } else {
+                    assert!(
+                        (x - y).abs() <= step * 0.5001 + 1e-6,
+                        "{dtype}: row {r} elem {d}: |{x} − {y}| exceeds half-step {step}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Single-element rows are constant rows by construction and must
+/// round-trip exactly — including zero, negative, and subnormal
+/// values (the degenerate `q ≡ 1` encoding stores the value itself).
+#[test]
+fn single_element_rows_round_trip_exactly() {
+    use hyperscale::kvcache::QuantBlock;
+    let vals = [0.0f32, 3.25, -1.5, 1.0e-41, -7.0e-40, f32::MIN_POSITIVE];
+    for dtype in [KvDtype::Q8, KvDtype::Q4] {
+        let b = QuantBlock::quantize(dtype, vals.len(), 1, &vals);
+        let mut out = vec![0f32; vals.len()];
+        b.dequantize_rows_into(0, vals.len(), &mut out);
+        assert_eq!(
+            &out[..],
+            &vals[..],
+            "{dtype}: single-element rows must be exact"
+        );
+    }
+}
+
+/// A subnormal row spread hits the `f32::MIN_POSITIVE` step floor:
+/// the scale is a normal float, the decode is finite, and the error
+/// stays within the floored half-step.
+#[test]
+fn subnormal_spreads_use_floored_normal_scale() {
+    use hyperscale::kvcache::QuantBlock;
+    let src = [0.0f32, 1.0e-41, 2.0e-41, -1.0e-41];
+    for dtype in [KvDtype::Q8, KvDtype::Q4] {
+        let b = QuantBlock::quantize(dtype, 1, 4, &src);
+        let s = b.row_scale(0);
+        assert!(
+            s >= f32::MIN_POSITIVE && s.is_normal(),
+            "{dtype}: subnormal spread must floor the step to a normal scale"
+        );
+        let mut out = [0f32; 4];
+        b.dequantize_rows_into(0, 1, &mut out);
+        for (x, y) in src.iter().zip(&out) {
+            assert!(y.is_finite());
+            assert!(
+                (x - y).abs() <= s * 0.5001 + f32::MIN_POSITIVE,
+                "{dtype}: |{x} − {y}| exceeds floored half-step {s}"
+            );
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
 // Simulated-executor decode-stream divergence
 // ----------------------------------------------------------------------
 

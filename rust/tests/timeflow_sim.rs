@@ -1,0 +1,213 @@
+// Shared lint config for non-lib targets (benches/tests/examples are
+// separate crates, so the crate-wide allows in rust/src/lib.rs do not
+// reach them): the same flat-layout indexing idiom applies here, and
+// vec! payloads deliberately mirror the engine's heap buffers.
+// Correctness lints stay on — CI denies all remaining warnings via
+// `cargo clippy --all-targets -- -D warnings`.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::manual_div_ceil,
+    clippy::uninlined_format_args,
+    clippy::useless_vec
+)]
+
+//! Property tests for the discrete-event timing simulator
+//! (`engine::timeflow`): event-queue invariants that must hold for
+//! *every* seed and configuration, checked over randomized
+//! configurations derived from a base seed.
+//!
+//! The base seed comes from `PROP_SEED` (decimal or 0x-hex) so the CI
+//! seed-matrix leg can re-run the whole suite under several fixed
+//! seeds; unset, it defaults to a fixed value for day-to-day runs.
+
+use std::collections::HashMap;
+
+use hyperscale::config::RoutingPolicy;
+use hyperscale::engine::timeflow::{
+    simulate, Arrival, ReplicaFailure, SimReport, Stage, TimeflowConfig, WorkloadSpec,
+};
+use hyperscale::util::SplitMix64;
+
+/// Base seed for randomized property tests (see module docs).
+fn prop_seed() -> u64 {
+    match std::env::var("PROP_SEED") {
+        Ok(s) => {
+            let s = s.trim();
+            let parsed = match s.strip_prefix("0x") {
+                Some(hex) => u64::from_str_radix(hex, 16),
+                None => s.parse(),
+            };
+            parsed.unwrap_or_else(|_| panic!("PROP_SEED must be an integer, got {s:?}"))
+        }
+        Err(_) => 0xDEFA_0175,
+    }
+}
+
+/// A randomized-but-seeded simulator configuration + workload.
+fn random_scenario(rng: &mut SplitMix64) -> (TimeflowConfig, WorkloadSpec) {
+    let routing = *rng.choice(&[
+        RoutingPolicy::Prefix,
+        RoutingPolicy::LeastLoaded,
+        RoutingPolicy::RoundRobin,
+    ]);
+    let replicas = 2 + rng.below(4); // 2..=5
+    let lanes = 1 + rng.below(3); // 1..=3
+    let mut cfg = TimeflowConfig::new(replicas, lanes, routing);
+    cfg.steal = rng.below(2) == 0;
+    cfg.prefix_cache = rng.below(2) == 0;
+    cfg.record_trace = true;
+
+    let mut spec = WorkloadSpec::new(128 + rng.below(256), rng.next_u64());
+    spec.arrival = *rng.choice(&[Arrival::Uniform, Arrival::Poisson, Arrival::Bursty]);
+    // from well under to well over modeled capacity
+    spec.mean_gap_ns = 50_000 + rng.below(4_000_000) as u64;
+    spec.n_prompts = 1 + rng.below(48);
+    (cfg, spec)
+}
+
+/// Invariant: completion cycle stamps are monotone non-decreasing in
+/// the order the simulator retires requests.
+fn assert_monotone_completions(rep: &SimReport) {
+    assert!(
+        rep.completions.windows(2).all(|w| w[0].0 <= w[1].0),
+        "completions must be monotone in cycle time"
+    );
+    assert_eq!(rep.completions.len(), rep.completed);
+    if let Some(&(last, _)) = rep.completions.last() {
+        assert_eq!(last, rep.span_ns, "span is the last completion stamp");
+    }
+}
+
+/// Invariant: per request, stages run strictly in pipeline order and
+/// no stage starts before its predecessor completes (or before the
+/// request arrives).
+fn assert_stage_order(rep: &SimReport, reqs_arrival: impl Fn(usize) -> u64) {
+    let mut per_req: HashMap<usize, Vec<_>> = HashMap::new();
+    for s in &rep.trace {
+        assert!(s.start_ns <= s.end_ns);
+        per_req.entry(s.req).or_default().push(*s);
+    }
+    for (req, spans) in per_req {
+        assert!(
+            spans[0].start_ns >= reqs_arrival(req),
+            "req {req}: first stage before arrival"
+        );
+        for w in spans.windows(2) {
+            assert!(
+                w[1].start_ns >= w[0].end_ns,
+                "req {req}: stage {:?} started at {} before {:?} ended at {}",
+                w[1].stage,
+                w[1].start_ns,
+                w[0].stage,
+                w[0].end_ns
+            );
+            assert!(
+                w[1].stage > w[0].stage,
+                "req {req}: pipeline order violated ({:?} after {:?})",
+                w[1].stage,
+                w[0].stage
+            );
+        }
+        // dequant (when present) leads, prefill precedes any decode
+        let stages: Vec<Stage> = spans.iter().map(|s| s.stage).collect();
+        assert!(stages.contains(&Stage::Prefill), "req {req}: never prefilled");
+    }
+}
+
+#[test]
+fn completions_monotone_across_random_scenarios() {
+    let mut rng = SplitMix64::new(prop_seed());
+    for round in 0..6 {
+        let (cfg, spec) = random_scenario(&mut rng);
+        let rep = simulate(&cfg, &spec);
+        assert_eq!(
+            rep.completed, spec.requests,
+            "round {round} [{}]: all requests complete without failures",
+            rep.label
+        );
+        assert_monotone_completions(&rep);
+    }
+}
+
+#[test]
+fn no_stage_runs_before_its_predecessor_completes() {
+    let mut rng = SplitMix64::new(prop_seed() ^ 0x5AFE);
+    for _ in 0..6 {
+        let (cfg, spec) = random_scenario(&mut rng);
+        let reqs = hyperscale::engine::timeflow::generate_workload(&spec);
+        let rep = hyperscale::engine::timeflow::simulate_requests(&cfg, &reqs);
+        assert_stage_order(&rep, |i| reqs[i].arrival_ns);
+    }
+}
+
+#[test]
+fn same_seed_yields_bit_identical_histograms() {
+    let mut rng = SplitMix64::new(prop_seed() ^ 0xB17);
+    for _ in 0..4 {
+        let (cfg, spec) = random_scenario(&mut rng);
+        let a = simulate(&cfg, &spec);
+        let b = simulate(&cfg, &spec);
+        for hist in [
+            "sim.ttft_ns",
+            "sim.queue_wait_ns",
+            "sim.latency_ns",
+            "sim.stage.prefill_ns",
+            "sim.stage.decode_ns",
+            "sim.stage.dequant_ns",
+        ] {
+            assert_eq!(
+                a.registry.histogram_samples(hist),
+                b.registry.histogram_samples(hist),
+                "[{}] histogram {hist} diverged between identical runs",
+                a.label
+            );
+        }
+        assert_eq!(a.completions, b.completions);
+        assert_eq!(a.ttft_p99_ns.to_bits(), b.ttft_p99_ns.to_bits());
+        assert_eq!(a.tokens_per_s.to_bits(), b.tokens_per_s.to_bits());
+        assert_eq!(a.stolen, b.stolen);
+    }
+}
+
+#[test]
+fn replica_death_never_loses_or_duplicates_requests() {
+    let mut rng = SplitMix64::new(prop_seed() ^ 0xDEAD);
+    for _ in 0..6 {
+        let (mut cfg, spec) = random_scenario(&mut rng);
+        cfg.failure = Some(ReplicaFailure {
+            replica: rng.below(cfg.replicas),
+            at_ns: spec.mean_gap_ns * rng.below(spec.requests) as u64,
+        });
+        let rep = simulate(&cfg, &spec);
+        assert_eq!(
+            rep.completed + rep.failed,
+            spec.requests,
+            "[{}] death must conserve requests",
+            rep.label
+        );
+        // only work holding a lane at death can fail
+        assert!(rep.failed <= cfg.lanes);
+        let mut ids: Vec<usize> = rep.completions.iter().map(|&(_, r)| r).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), rep.completed, "a request completed twice");
+    }
+}
+
+#[test]
+fn queue_wait_only_under_contention() {
+    // a closed-form sanity anchor: generous arrival gaps mean zero
+    // queue wait, so end-to-end latency is exactly service time
+    let mut cfg = TimeflowConfig::new(2, 1, RoutingPolicy::RoundRobin);
+    cfg.steal = false;
+    cfg.prefix_cache = false;
+    cfg.record_trace = true;
+    let mut spec = WorkloadSpec::new(64, prop_seed());
+    spec.arrival = Arrival::Uniform;
+    spec.mean_gap_ns = 40_000_000; // ≫ worst-case service
+    let rep = simulate(&cfg, &spec);
+    let waits = rep.registry.histogram_samples("sim.queue_wait_ns");
+    assert!(waits.iter().all(|&w| w == 0.0), "uncontended ⇒ no waiting");
+    assert!(rep.utilization < 0.5, "mostly idle cluster");
+}

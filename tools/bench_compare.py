@@ -2,15 +2,20 @@
 """Perf-regression gate: diff a bench JSON against a checked-in baseline.
 
 Bench binaries (``bench_serve --smoke --out BENCH_serve.json``,
-``bench_kvcache --smoke --out BENCH_kvcache.json``) emit::
+``bench_sim --smoke --out BENCH_sim.json``, ...) emit::
 
     {"bench": "serve", "schema": 1, "gated": {...}, "info": {...}}
 
 This tool compares the ``gated`` section against a baseline file from
 ``tools/bench_baselines/``:
 
-* a **numeric** baseline value gates with a relative tolerance
+* a **nonzero numeric** baseline value gates with a relative tolerance
   (default +/-25%): ``|cur - base| <= tol * max(|base|, 1.0)``;
+* a **zero** baseline value gates with an *absolute* tolerance
+  (``--zero-tolerance``, default 0 — exact). A relative band around
+  zero is vacuous, and the ``max(|base|, 1.0)`` floor would silently
+  admit anything within +/-tol of a metric pinned at exactly 0 (e.g.
+  "no requests failed", "nothing was stolen");
 * a **null** baseline value is a *structural* gate: the metric must
   exist and be numeric in the current run, but its value is not yet
   pinned (used for counters that can only be seeded from a real CI
@@ -23,7 +28,10 @@ This tool compares the ``gated`` section against a baseline file from
 
 Exit code 0 when every gated metric passes, 1 otherwise.
 
-Usage: python3 tools/bench_compare.py CURRENT BASELINE [--tolerance 0.25]
+Usage: python3 tools/bench_compare.py CURRENT BASELINE
+           [--tolerance 0.25] [--zero-tolerance 0]
+
+Self-test: python3 tools/test_bench_compare.py
 """
 
 import argparse
@@ -40,6 +48,50 @@ def load(path: str) -> dict:
     return doc
 
 
+def compare(cur_gated: dict, base_gated: dict, tolerance: float,
+            zero_tolerance: float = 0.0):
+    """Compare gated metrics; return (rows, failures).
+
+    Each row is ``(key, expect, got, verdict)``; a verdict starting
+    with ``FAIL`` or equal to ``MISSING`` counts as a failure.
+    """
+    failures = 0
+    rows = []
+    for key, expect in sorted(base_gated.items()):
+        got = cur_gated.get(key)
+        if got is None or not isinstance(got, (int, float)) or isinstance(got, bool):
+            rows.append((key, expect, got, "MISSING"))
+            failures += 1
+            continue
+        if expect is None:
+            rows.append((key, expect, got, "present (baseline unseeded)"))
+            continue
+        delta = abs(got - expect)
+        if expect == 0:
+            # zero baselines gate absolutely: a relative band is
+            # meaningless and the 1.0 floor would mask regressions
+            if delta <= zero_tolerance:
+                rows.append((key, expect, got, "ok"))
+            else:
+                rows.append((
+                    key, expect, got,
+                    f"FAIL (|delta| {delta:.6g} vs +/-{zero_tolerance:.6g} abs)",
+                ))
+                failures += 1
+            continue
+        allowed = tolerance * max(abs(expect), 1.0)
+        if delta <= allowed:
+            rows.append((key, expect, got, "ok"))
+        else:
+            rel = delta / abs(expect)
+            rows.append((key, expect, got,
+                         f"FAIL ({rel:+.1%} vs +/-{tolerance:.0%})"))
+            failures += 1
+    for key in sorted(set(cur_gated) - set(base_gated)):
+        rows.append((key, None, cur_gated[key], "NEW (not gated)"))
+    return rows, failures
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("current", help="bench JSON produced by this run")
@@ -48,7 +100,14 @@ def main() -> int:
         "--tolerance",
         type=float,
         default=0.25,
-        help="relative tolerance for numeric baselines (default 0.25)",
+        help="relative tolerance for nonzero numeric baselines (default 0.25)",
+    )
+    ap.add_argument(
+        "--zero-tolerance",
+        type=float,
+        default=0.0,
+        help="absolute tolerance for baselines pinned at exactly 0 "
+             "(default 0: the current value must also be 0)",
     )
     args = ap.parse_args()
 
@@ -56,30 +115,15 @@ def main() -> int:
     base = load(args.baseline)
     name = base.get("bench", Path(args.baseline).stem)
 
-    failures = 0
-    rows = []
-    for key, expect in sorted(base["gated"].items()):
-        got = cur["gated"].get(key)
-        if got is None or not isinstance(got, (int, float)):
-            rows.append((key, expect, got, "MISSING"))
-            failures += 1
-            continue
-        if expect is None:
-            rows.append((key, expect, got, "present (baseline unseeded)"))
-            continue
-        delta = abs(got - expect)
-        allowed = args.tolerance * max(abs(expect), 1.0)
-        if delta <= allowed:
-            rows.append((key, expect, got, "ok"))
-        else:
-            rel = delta / max(abs(expect), 1e-12)
-            rows.append((key, expect, got, f"FAIL ({rel:+.1%} vs +/-{args.tolerance:.0%})"))
-            failures += 1
-    for key in sorted(set(cur["gated"]) - set(base["gated"])):
-        rows.append((key, None, cur["gated"][key], "NEW (not gated)"))
+    rows, failures = compare(
+        cur["gated"], base["gated"], args.tolerance, args.zero_tolerance
+    )
 
     width = max((len(k) for k, *_ in rows), default=10)
-    print(f"bench_compare [{name}]: tolerance +/-{args.tolerance:.0%}")
+    print(
+        f"bench_compare [{name}]: tolerance +/-{args.tolerance:.0%} "
+        f"(zero baselines: +/-{args.zero_tolerance:.6g} abs)"
+    )
     for key, expect, got, verdict in rows:
         e = "-" if expect is None else f"{expect:.6g}"
         g = "-" if got is None else f"{got:.6g}"

@@ -1,0 +1,139 @@
+#!/usr/bin/env python3
+"""Self-test for the bench_compare perf-regression gate (stdlib only).
+
+Run directly (``python3 tools/test_bench_compare.py``) or via
+``python3 -m unittest`` from ``tools/``. CI runs it in the lint/tools
+leg so a gate bug fails the build before it can wave a regression
+through.
+"""
+
+import json
+import subprocess
+import sys
+import tempfile
+import unittest
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+from bench_compare import compare  # noqa: E402
+
+
+def verdicts(rows):
+    return {k: v for k, _, _, v in rows}
+
+
+class CompareNonZero(unittest.TestCase):
+    def test_within_relative_tolerance_passes(self):
+        rows, failures = compare({"a": 110.0}, {"a": 100.0}, 0.25)
+        self.assertEqual(failures, 0)
+        self.assertEqual(verdicts(rows)["a"], "ok")
+
+    def test_outside_relative_tolerance_fails(self):
+        rows, failures = compare({"a": 140.0}, {"a": 100.0}, 0.25)
+        self.assertEqual(failures, 1)
+        self.assertIn("FAIL", verdicts(rows)["a"])
+
+    def test_small_nonzero_baseline_keeps_absolute_floor(self):
+        # |base| < 1 gates against tol * 1.0, not tol * |base|
+        rows, failures = compare({"a": 0.3}, {"a": 0.1}, 0.25)
+        self.assertEqual(failures, 0, "0.2 absolute delta within 0.25 floor")
+        _, failures = compare({"a": 0.4}, {"a": 0.1}, 0.25)
+        self.assertEqual(failures, 1, "0.3 absolute delta beyond 0.25 floor")
+
+    def test_negative_baseline_uses_magnitude(self):
+        _, failures = compare({"a": -110.0}, {"a": -100.0}, 0.25)
+        self.assertEqual(failures, 0)
+        _, failures = compare({"a": -140.0}, {"a": -100.0}, 0.25)
+        self.assertEqual(failures, 1)
+
+
+class CompareZeroBaseline(unittest.TestCase):
+    """The regression this suite exists for: a baseline pinned at 0
+    must not silently admit anything within +/-tolerance."""
+
+    def test_zero_baseline_requires_zero_by_default(self):
+        rows, failures = compare({"failed": 0}, {"failed": 0}, 0.25)
+        self.assertEqual(failures, 0)
+        self.assertEqual(verdicts(rows)["failed"], "ok")
+
+    def test_zero_baseline_rejects_small_drift(self):
+        # pre-fix behaviour: 0.2 <= 0.25 * max(0, 1.0) would pass
+        rows, failures = compare({"failed": 0.2}, {"failed": 0}, 0.25)
+        self.assertEqual(failures, 1)
+        self.assertIn("FAIL", verdicts(rows)["failed"])
+        self.assertIn("abs", verdicts(rows)["failed"])
+
+    def test_zero_baseline_rejects_integer_regression(self):
+        _, failures = compare({"failed": 1}, {"failed": 0}, 0.25)
+        self.assertEqual(failures, 1)
+
+    def test_zero_tolerance_opt_in_band(self):
+        _, failures = compare({"jitter": 0.05}, {"jitter": 0}, 0.25,
+                              zero_tolerance=0.1)
+        self.assertEqual(failures, 0)
+        _, failures = compare({"jitter": 0.2}, {"jitter": 0}, 0.25,
+                              zero_tolerance=0.1)
+        self.assertEqual(failures, 1)
+
+
+class CompareStructural(unittest.TestCase):
+    def test_null_baseline_is_structural_only(self):
+        rows, failures = compare({"a": 123.0}, {"a": None}, 0.25)
+        self.assertEqual(failures, 0)
+        self.assertIn("unseeded", verdicts(rows)["a"])
+
+    def test_null_baseline_still_requires_presence(self):
+        rows, failures = compare({}, {"a": None}, 0.25)
+        self.assertEqual(failures, 1)
+        self.assertEqual(verdicts(rows)["a"], "MISSING")
+
+    def test_missing_metric_fails(self):
+        rows, failures = compare({"b": 1.0}, {"a": 1.0}, 0.25)
+        self.assertEqual(failures, 1)
+        self.assertEqual(verdicts(rows)["a"], "MISSING")
+        self.assertIn("NEW", verdicts(rows)["b"])
+
+    def test_non_numeric_current_fails(self):
+        for bad in ("12", True, [1], {"x": 1}):
+            _, failures = compare({"a": bad}, {"a": 1.0}, 0.25)
+            self.assertEqual(failures, 1, f"non-numeric {bad!r} must fail")
+
+    def test_new_metrics_pass(self):
+        rows, failures = compare({"a": 1.0, "b": 2.0}, {"a": 1.0}, 0.25)
+        self.assertEqual(failures, 0)
+        self.assertIn("NEW", verdicts(rows)["b"])
+
+
+class CompareCli(unittest.TestCase):
+    """End-to-end over the CLI: exit codes are what CI consumes."""
+
+    def run_cli(self, cur_gated, base_gated, *extra):
+        tool = Path(__file__).resolve().parent / "bench_compare.py"
+        with tempfile.TemporaryDirectory() as td:
+            cur = Path(td) / "cur.json"
+            base = Path(td) / "base.json"
+            cur.write_text(json.dumps({"bench": "t", "gated": cur_gated}))
+            base.write_text(json.dumps({"bench": "t", "gated": base_gated}))
+            return subprocess.run(
+                [sys.executable, str(tool), str(cur), str(base), *extra],
+                capture_output=True,
+                text=True,
+                check=False,
+            )
+
+    def test_exit_zero_on_pass(self):
+        r = self.run_cli({"a": 100.0, "z": 0}, {"a": 101.0, "z": 0})
+        self.assertEqual(r.returncode, 0, r.stdout + r.stderr)
+
+    def test_exit_one_on_zero_baseline_drift(self):
+        r = self.run_cli({"z": 0.2}, {"z": 0})
+        self.assertEqual(r.returncode, 1, r.stdout + r.stderr)
+        self.assertIn("FAIL", r.stdout)
+
+    def test_zero_tolerance_flag(self):
+        r = self.run_cli({"z": 0.2}, {"z": 0}, "--zero-tolerance", "0.5")
+        self.assertEqual(r.returncode, 0, r.stdout + r.stderr)
+
+
+if __name__ == "__main__":
+    unittest.main(verbosity=2)
