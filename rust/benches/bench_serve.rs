@@ -289,6 +289,67 @@ fn cluster_scenarios() -> (Json, Json) {
     (gated, info)
 }
 
+// ----------------------------------------------------------------------
+// Tracing overhead (flight recorder on vs off — runs without artifacts)
+// ----------------------------------------------------------------------
+
+/// Push the 24-request skewed workload through one sim engine with the
+/// flight recorder at `trace_events` capacity; return (wall seconds,
+/// events recorded, events dropped).
+fn run_traced(trace_events: usize) -> (f64, u64, u64) {
+    let mut engine = SimEngine::new(SimEngineConfig {
+        lanes: 2,
+        prefix_cache: false,
+        trace_events,
+        ..Default::default()
+    });
+    let t0 = Instant::now();
+    for (id, prompt) in skewed_workload() {
+        engine
+            .submit(&GenRequest {
+                prompt,
+                width: 1,
+                max_len: 224,
+                temperature: 0.7,
+                seed: id,
+            })
+            .expect("submit");
+    }
+    engine.drain().expect("drain");
+    (
+        t0.elapsed().as_secs_f64(),
+        engine.tracer().recorded(),
+        engine.tracer().dropped(),
+    )
+}
+
+/// Traced-vs-untraced leg, asserting the observability contract: zero
+/// events when disabled, and — with width 1 and the prefix cache off,
+/// where no COW/dequant/evict batches occur — exactly the four
+/// lifecycle events (submit/admit/first_token/finish) per request when
+/// enabled. Event totals are seed-independent constants, so they are
+/// gated; the wall-clock ratio is timing noise at this scale and is
+/// reported as info.
+fn tracing_overhead(mut gated: Json, mut info: Json) -> (Json, Json) {
+    println!("\n# tracing overhead: 24 requests through one sim engine");
+    let (off_s, off_events, _) = run_traced(0);
+    let (on_s, on_events, on_dropped) = run_traced(4096);
+    println!(
+        "untraced {off_s:>8.4}s   traced {on_s:>8.4}s   ratio {:.3}x   \
+         events {on_events} (dropped {on_dropped})",
+        on_s / off_s.max(1e-9)
+    );
+    gated = gated
+        .set("trace.disabled.events", off_events)
+        .set("trace.enabled.events", on_events)
+        .set("trace.enabled.dropped", on_dropped);
+    info = info
+        .set("trace.disabled.wall_s", off_s)
+        .set("trace.enabled.wall_s", on_s)
+        .set("trace.overhead_ratio", on_s / off_s.max(1e-9));
+    (gated, info)
+}
+
 fn main() -> hyperscale::Result<()> {
     let args = Args::from_env();
     let artifacts = args.get_str("artifacts", "artifacts");
@@ -299,6 +360,7 @@ fn main() -> hyperscale::Result<()> {
         engine_benches(artifacts, iters)?;
     }
     let (gated, info) = cluster_scenarios();
+    let (gated, info) = tracing_overhead(gated, info);
 
     if let Some(path) = args.get("out") {
         let report = Json::obj()

@@ -63,6 +63,10 @@ pub struct EngineConfig {
     /// Decode steps between adaptive re-plans of a chain's budget plan
     /// (`--replan-interval`; ignored by the signal-free allocators).
     pub replan_interval: usize,
+    /// Flight-recorder capacity in events (`--trace-events N`). 0 (the
+    /// default) installs the no-op sink: tracing is disabled and the
+    /// emit path is a single branch (see docs/OBSERVABILITY.md).
+    pub trace_events: usize,
 }
 
 impl Default for EngineConfig {
@@ -84,6 +88,7 @@ impl Default for EngineConfig {
             kv_dtype: KvDtype::F32,
             allocator: AllocatorKind::Uniform,
             replan_interval: 32,
+            trace_events: 0,
         }
     }
 }
@@ -127,6 +132,10 @@ impl EngineConfig {
         }
         self.replan_interval =
             args.get_usize("replan-interval", self.replan_interval)?.max(1);
+        self.trace_events = args.get_usize("trace-events", self.trace_events)?;
+        if args.flag("trace") && self.trace_events == 0 {
+            self.trace_events = crate::trace::DEFAULT_CAPACITY;
+        }
         Ok(self)
     }
 
@@ -189,6 +198,9 @@ impl EngineConfig {
         }
         if let Some(v) = j.get("replan_interval").and_then(|x| x.as_usize()) {
             cfg.replan_interval = v.max(1);
+        }
+        if let Some(v) = j.get("trace_events").and_then(|x| x.as_usize()) {
+            cfg.trace_events = v;
         }
         Ok(cfg)
     }
@@ -398,6 +410,17 @@ mod tests {
             EngineConfig::default().with_args(&args).unwrap().replan_interval,
             1
         );
+    }
+
+    #[test]
+    fn trace_flag_and_capacity_override() {
+        assert_eq!(EngineConfig::default().trace_events, 0, "tracing off by default");
+        let args = Args::parse(["--trace".to_string()].into_iter());
+        let cfg = EngineConfig::default().with_args(&args).unwrap();
+        assert_eq!(cfg.trace_events, crate::trace::DEFAULT_CAPACITY);
+        let args = Args::parse("--trace-events 128".split_whitespace().map(String::from));
+        let cfg = EngineConfig::default().with_args(&args).unwrap();
+        assert_eq!(cfg.trace_events, 128);
     }
 
     #[test]

@@ -40,6 +40,12 @@ impl PrefillBatch {
     pub fn is_empty(&self) -> bool {
         self.chunk_lens.iter().all(|&n| n == 0)
     }
+
+    /// Prompt tokens packed across all lanes this chunk — the engine's
+    /// per-tick prefill-volume accounting (`engine.prefill_tokens`).
+    pub fn total_tokens(&self) -> usize {
+        self.chunk_lens.iter().sum()
+    }
 }
 
 /// Pack up to `chunk` prompt tokens per prefilling lane.

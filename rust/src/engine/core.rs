@@ -40,6 +40,7 @@ use crate::kvcache::{CacheStore, Geometry, RadixPrefixIndex};
 use crate::metrics::Registry;
 use crate::runtime::{Executor, ParamBuffers, Runtime, Weights};
 use crate::tokenizer::{Tokenizer, BOS_ID, EOS_ID, PAD_ID};
+use crate::trace::{Stamped, TraceEvent, Tracer};
 
 /// Aggregate engine statistics for a `run` call / serving session.
 #[derive(Clone, Debug, Default)]
@@ -119,6 +120,18 @@ pub struct Engine {
     /// Budget allocator shaping each chain's per-(layer, head) plan
     /// (`--allocator`); adaptive re-plans from lane-local `AttnStats`.
     allocator: Box<dyn BudgetAllocator>,
+    /// Flight recorder (`--trace-events`); the no-op sink when tracing
+    /// is disabled (see docs/OBSERVABILITY.md).
+    tracer: Tracer,
+    /// Wall-clock anchor: trace stamps are integer nanoseconds since
+    /// engine construction.
+    trace_epoch: Instant,
+    /// ticket → external request id (the cluster router's
+    /// client-visible id) for trace-event keying.
+    trace_ids: BTreeMap<u64, u64>,
+    /// Read tokens accumulated by the tick in flight, flushed into the
+    /// `kv.read_tokens` / `kv.read_bytes` counters each tick.
+    tick_read_tokens: f64,
     /// Retrofit metadata of the loaded variant.
     window: usize,
     immediate: bool,
@@ -164,7 +177,11 @@ impl Engine {
         // pool-owned payloads (COW snapshots, prefix-retained pages)
         // are stored under the configured dtype; lane regions and
         // executor uploads stay f32 (see docs/NUMERICS.md)
-        let cache = CacheStore::with_dtype(geom, cfg.batch, cfg.kv_dtype);
+        let mut cache = CacheStore::with_dtype(geom, cfg.batch, cfg.kv_dtype);
+        let tracer = Tracer::ring(cfg.trace_events);
+        // the store's per-tick event counters exist only for the
+        // flight recorder — keep them off (zero-cost) when untraced
+        cache.set_event_tracking(tracer.enabled());
         let prefix_index = RadixPrefixIndex::new(geom.page_size);
         let newline_id = tokenizer.newline_id();
         let param_bufs = if cfg.buffered_exec {
@@ -185,6 +202,10 @@ impl Engine {
             cache,
             prefix_index,
             allocator,
+            tracer,
+            trace_epoch: Instant::now(),
+            trace_ids: BTreeMap::new(),
+            tick_read_tokens: 0.0,
             window: vmeta.window,
             immediate: vmeta.immediate,
             dms_variant,
@@ -271,6 +292,41 @@ impl Engine {
         self.metrics.report()
     }
 
+    // ------------------------------------------------------------------
+    // Observability (see docs/OBSERVABILITY.md)
+    // ------------------------------------------------------------------
+
+    /// Integer-ns timestamp on the engine's trace clock (wall time
+    /// since construction).
+    fn now_ns(&self) -> u64 {
+        self.trace_epoch.elapsed().as_nanos() as u64
+    }
+
+    /// External request id a ticket's trace events are keyed by — the
+    /// cluster's client-visible id when one was attached at submit,
+    /// otherwise the ticket itself.
+    fn trace_req(&self, ticket: u64) -> u64 {
+        self.trace_ids.get(&ticket).copied().unwrap_or(ticket)
+    }
+
+    /// The engine's flight recorder (trace queries and dumps).
+    pub fn tracer(&self) -> &Tracer {
+        &self.tracer
+    }
+
+    /// Retained trace events of one request id, in emission order.
+    pub fn trace_events_for(&self, req: u64) -> Vec<Stamped> {
+        self.tracer.events_for(req)
+    }
+
+    /// Full-model K+V payload bytes one cached token costs under the
+    /// store's dtype: per-(layer, head) payload bytes × pair count.
+    /// This prices `ChainStats` read tokens (means over pairs) into
+    /// the `kv_read_bytes` the paper's x-axis measures.
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        self.cache.payload_bytes_per_token() * self.geom.lh() as f64
+    }
+
     /// Quest page budget for a step (scalar for the whole batch — the
     /// decode executable takes one `k`; the largest active `max_len`
     /// sets it).
@@ -325,6 +381,18 @@ impl Engine {
     /// that identifies it in [`Engine::tick`] completions. Invalid
     /// requests fail here without affecting in-flight work.
     pub fn submit(&mut self, session: &mut Session, req: &GenRequest) -> Result<u64> {
+        self.submit_traced(session, req, None)
+    }
+
+    /// [`Engine::submit`] with an external request id attached: trace
+    /// events for the request are keyed by `trace_id` (the cluster
+    /// router's client-visible id) instead of the engine-local ticket.
+    pub fn submit_traced(
+        &mut self,
+        session: &mut Session,
+        req: &GenRequest,
+        trace_id: Option<u64>,
+    ) -> Result<u64> {
         let mut ids = vec![BOS_ID];
         ids.extend(self.tokenizer.encode(&req.prompt)?);
         if ids.len() + 2 > req.max_len {
@@ -364,9 +432,26 @@ impl Engine {
                 prefix_tokens = hit.tokens;
             }
         }
-        Ok(session
-            .sched
-            .submit_with_prefix(req, Arc::new(ids), &prefix_pages, prefix_tokens))
+        let prompt_tokens = ids.len();
+        let ticket =
+            session
+                .sched
+                .submit_with_prefix(req, Arc::new(ids), &prefix_pages, prefix_tokens);
+        if self.tracer.enabled() {
+            let rid = trace_id.unwrap_or(ticket);
+            self.trace_ids.insert(ticket, rid);
+            let ts = self.now_ns();
+            self.tracer.emit(
+                ts,
+                TraceEvent::Submit {
+                    req: rid,
+                    prompt_tokens,
+                    width: req.width.max(1),
+                    prefix_hit_tokens: prefix_tokens,
+                },
+            );
+        }
+        Ok(ticket)
     }
 
     /// Whether the session has no running or queued chains.
@@ -392,6 +477,9 @@ impl Engine {
                     self.cache.release_page(id);
                 }
             }
+            // the stealing router re-submits elsewhere; this engine's
+            // trace of the request ends here
+            self.trace_ids.remove(&ticket);
             tickets.push(ticket);
         }
         tickets
@@ -408,9 +496,14 @@ impl Engine {
 
         self.admit(sched, stats);
         let live_fraction = self.cache.live_fraction();
-        if let Some(lane) = sched.maybe_preempt(live_fraction) {
+        if let Some((lane, ticket)) = sched.maybe_preempt_traced(live_fraction) {
             self.cache.recycle_lane(lane);
             stats.preemptions += 1;
+            if self.tracer.enabled() {
+                let req = self.trace_req(ticket);
+                let ts = self.now_ns();
+                self.tracer.emit(ts, TraceEvent::Preempt { req, lane });
+            }
             self.admit(sched, stats);
         }
         if sched.active_lanes() == 0 {
@@ -418,6 +511,7 @@ impl Engine {
         }
 
         stats.ticks += 1;
+        self.tick_read_tokens = 0.0;
         let t0 = Instant::now();
         if self.prefill_step(sched, stats, &mut completed)? {
             stats.prefill_chunks += 1;
@@ -426,6 +520,51 @@ impl Engine {
             stats.decode_steps += 1;
         }
         stats.host_s += t0.elapsed().as_secs_f64();
+
+        // flight recorder: this tick's cache event batches (eviction /
+        // merge / COW / dequant), one event per touched lane
+        if self.tracer.enabled() {
+            let ts = self.now_ns();
+            for (lane, ev) in self.cache.drain_tick_events() {
+                if ev.cow_published > 0 {
+                    self.tracer.emit(
+                        ts,
+                        TraceEvent::CowPublish {
+                            lane,
+                            pages: ev.cow_published,
+                        },
+                    );
+                }
+                if ev.dequant_pages > 0 {
+                    self.tracer.emit(
+                        ts,
+                        TraceEvent::Dequant {
+                            lane,
+                            pages: ev.dequant_pages,
+                        },
+                    );
+                }
+                if ev.evictions + ev.merges > 0 {
+                    self.tracer.emit(
+                        ts,
+                        TraceEvent::EvictBatch {
+                            lane,
+                            evictions: ev.evictions,
+                            merges: ev.merges,
+                            lh_touched: ev.lh_touched,
+                        },
+                    );
+                }
+            }
+        }
+        // per-tick memory-read accounting: token units priced into
+        // full-model bytes under the store's dtype (paper x-axis)
+        if self.tick_read_tokens > 0.0 {
+            self.metrics.counter("kv.read_tokens").add(self.tick_read_tokens);
+            self.metrics
+                .counter("kv.read_bytes")
+                .add(self.tick_read_tokens * self.kv_bytes_per_token());
+        }
 
         let live_fraction = self.cache.live_fraction();
         let max_lane_fraction = (0..self.cfg.batch)
@@ -498,6 +637,7 @@ impl Engine {
         self.metrics
             .gauge("kv.plan_overflow_tokens")
             .set(plan_overflow as f64);
+        let bpt = self.kv_bytes_per_token();
         for c in &completed {
             let t = &c.timing;
             self.metrics.histogram("serve.queue_ms").record(t.queue_ms);
@@ -510,6 +650,22 @@ impl Engine {
             self.metrics
                 .counter("serve.gen_tokens")
                 .add(t.gen_tokens as f64);
+            let reads = c.result.total_reads();
+            self.metrics.histogram("serve.kv_read_tokens").record(reads);
+            if self.tracer.enabled() {
+                let req = self.trace_req(c.ticket);
+                let ts = self.now_ns();
+                self.tracer.emit(
+                    ts,
+                    TraceEvent::Finish {
+                        req,
+                        gen_tokens: t.gen_tokens,
+                        read_tokens: reads,
+                        read_bytes: reads * bpt,
+                    },
+                );
+            }
+            self.trace_ids.remove(&c.ticket);
         }
         Ok(completed)
     }
@@ -524,8 +680,10 @@ impl Engine {
             self.cache.reset_lane(lane);
             let prefix_pages = std::mem::take(&mut p.prefix_pages);
             let prefix_tokens = p.prefix_tokens;
+            let ticket = p.ticket;
             let policy = self.build_chain_policy(p.max_len);
             let mut chain = ChainState::new(p, policy, self.cfg.top_k);
+            let restored_pages = prefix_pages.len();
             if !prefix_pages.is_empty() {
                 self.cache.map_prefix_pages(lane, &prefix_pages);
                 chain.phase = Phase::Prefill {
@@ -535,6 +693,22 @@ impl Engine {
                 stats.prefix_hit_tokens += prefix_tokens as u64;
             }
             sched.install(lane, chain);
+            if self.tracer.enabled() {
+                let req = self.trace_req(ticket);
+                let ts = self.now_ns();
+                self.tracer.emit(ts, TraceEvent::Admit { req, lane });
+                if restored_pages > 0 {
+                    self.tracer.emit(
+                        ts,
+                        TraceEvent::PrefixRestore {
+                            req,
+                            lane,
+                            pages: restored_pages,
+                            tokens: prefix_tokens,
+                        },
+                    );
+                }
+            }
         }
     }
 
@@ -594,6 +768,9 @@ impl Engine {
         if pb.is_empty() {
             return Ok(false);
         }
+        self.metrics
+            .counter("engine.prefill_tokens")
+            .add(pb.total_tokens() as f64);
         // shared pages mapped at admission (prefix hits) must be
         // resident in their lanes' regions before the executor reads
         self.cache.materialize_pending();
@@ -691,8 +868,9 @@ impl Engine {
                         .observe_alpha(l, h, &step_alpha);
                 }
                 // reads: existing cache + intra-chunk causal visibility
-                sched.lane_mut(lane).unwrap().stats.prefill_reads +=
-                    cache_live_before + (j + 1) as f64;
+                let step_reads = cache_live_before + (j + 1) as f64;
+                sched.lane_mut(lane).unwrap().stats.prefill_reads += step_reads;
+                self.tick_read_tokens += step_reads;
                 if overflow {
                     // prompt doesn't fit (vanilla long-context): finish now
                     let chain = sched.take(lane).unwrap();
@@ -732,7 +910,11 @@ impl Engine {
                 a.pos = new_offset;
                 a.phase = Phase::Decode;
                 let ticket = a.ticket;
-                sched.note_first_token(ticket);
+                if sched.note_first_token(ticket) && self.tracer.enabled() {
+                    let req = self.trace_req(ticket);
+                    let ts = self.now_ns();
+                    self.tracer.emit(ts, TraceEvent::FirstToken { req });
+                }
                 // fork siblings into idle lanes (prefix sharing) — but
                 // never off a resumed chain: its re-prefilled cache
                 // holds generated tokens, not just the prompt, so
@@ -898,16 +1080,18 @@ impl Engine {
             let a = sched.lane_mut(lane).unwrap();
 
             // ---- reads accounting (§5.1) ----
-            if quest {
+            let step_reads = if quest {
                 let page_reads =
                     step.quest_sel_pages as f64 * self.geom.page_size as f64 / lh as f64;
                 let meta_reads = pages_before[lane] as f64
                     * crate::compress::quest::QuestPolicy::META_TOKENS_PER_PAGE
                     / lh as f64;
-                a.stats.decode_reads += page_reads.min(live_before[lane]) + meta_reads + 1.0;
+                page_reads.min(live_before[lane]) + meta_reads + 1.0
             } else {
-                a.stats.decode_reads += live_before[lane] + 1.0;
-            }
+                live_before[lane] + 1.0
+            };
+            a.stats.decode_reads += step_reads;
+            self.tick_read_tokens += step_reads;
 
             // ---- write the new token ----
             let pos = a.pos;

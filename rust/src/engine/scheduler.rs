@@ -553,13 +553,18 @@ impl Scheduler {
         out
     }
 
-    /// Record the request's first sampled token (TTFT), once.
-    pub fn note_first_token(&mut self, ticket: u64) {
+    /// Record the request's first sampled token (TTFT), once. Returns
+    /// whether this call was the one that recorded it — the engine's
+    /// trace layer emits its `first_token` event exactly then (a
+    /// resumed chain re-completing prefill is not a first token).
+    pub fn note_first_token(&mut self, ticket: u64) -> bool {
         if let Some(r) = self.requests.get_mut(&ticket) {
             if r.first_token.is_none() {
                 r.first_token = Some(Instant::now());
+                return true;
             }
         }
+        false
     }
 
     /// Remove and return the chain running on `lane`.
@@ -611,6 +616,13 @@ impl Scheduler {
     /// caller can recycle its cache slots. At most one preemption per
     /// call keeps the scheduler's behaviour gradual.
     pub fn maybe_preempt(&mut self, live_fraction: f64) -> Option<usize> {
+        self.maybe_preempt_traced(live_fraction).map(|(lane, _)| lane)
+    }
+
+    /// Like [`Scheduler::maybe_preempt`], additionally returning the
+    /// preempted chain's ticket so the engine can stamp a `preempt`
+    /// trace event against the right request.
+    pub fn maybe_preempt_traced(&mut self, live_fraction: f64) -> Option<(usize, u64)> {
         let watermark = self.cfg.preempt_watermark?;
         if live_fraction < watermark
             || self.pending.is_empty()
@@ -619,12 +631,13 @@ impl Scheduler {
             return None;
         }
         let lane = self.preempt_candidate()?;
-        let victim_max_len = self.lanes[lane].as_ref()?.max_len;
+        let victim = self.lanes[lane].as_ref()?;
+        let (victim_max_len, ticket) = (victim.max_len, victim.ticket);
         if !self.admission_would_benefit(victim_max_len) {
             return None;
         }
         self.preempt(lane);
-        Some(lane)
+        Some((lane, ticket))
     }
 
     /// Whether some currently waiting chain would actually be admitted

@@ -33,6 +33,7 @@
 //! via prefix hits translates into measurably higher tokens/s — the
 //! quantity the serve smoke bench gates on.
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -47,6 +48,7 @@ use crate::compress::{
 };
 use crate::kvcache::{CacheStore, Geometry, KvDtype, RadixPrefixIndex};
 use crate::metrics::Registry;
+use crate::trace::{Stamped, TraceEvent, Tracer};
 use crate::util::SplitMix64;
 
 /// Token id that terminates a simulated chain (stands in for `<eos>`).
@@ -89,6 +91,13 @@ pub struct SimEngineConfig {
     /// iterations), emulating executor cost so serving benches see
     /// realistic prefill/decode ratios. 0 = cache writes only.
     pub work_per_token: usize,
+    /// Flight-recorder ring capacity in events (mirrors
+    /// `EngineConfig::trace_events`). 0 installs the no-op sink. Unlike
+    /// the real engine the sim stamps events with its *logical tick
+    /// counter* (1 tick ≡ 1 ms), so same-seed traces are bit-identical
+    /// across runs and machines — the property `tests/observability.rs`
+    /// asserts.
+    pub trace_events: usize,
 }
 
 impl Default for SimEngineConfig {
@@ -108,6 +117,7 @@ impl Default for SimEngineConfig {
             kv_dtype: KvDtype::F32,
             allocator: AllocatorKind::Uniform,
             work_per_token: 0,
+            trace_events: 0,
         }
     }
 }
@@ -129,21 +139,61 @@ pub struct SimEngine {
     allocator: Box<dyn BudgetAllocator>,
     stats: EngineStats,
     spin: f32,
+    tracer: Tracer,
+    /// ticket → client-visible request id (see `Engine::trace_ids`).
+    trace_ids: BTreeMap<u64, u64>,
+    tick_read_tokens: f64,
 }
 
 impl SimEngine {
     /// Build a sim engine with default FCFS scheduling.
     pub fn new(cfg: SimEngineConfig) -> Self {
+        let mut cache = CacheStore::with_dtype(cfg.geom, cfg.lanes, cfg.kv_dtype);
+        let tracer = Tracer::ring(cfg.trace_events);
+        cache.set_event_tracking(tracer.enabled());
         Self {
             sched: Scheduler::new(cfg.lanes, SchedulerConfig::default()),
-            cache: CacheStore::with_dtype(cfg.geom, cfg.lanes, cfg.kv_dtype),
+            cache,
             prefix_index: RadixPrefixIndex::new(cfg.geom.page_size),
             allocator: build_allocator(cfg.allocator),
             metrics: Registry::default(),
             stats: EngineStats::default(),
             cfg,
             spin: 0.0,
+            tracer,
+            trace_ids: BTreeMap::new(),
+            tick_read_tokens: 0.0,
         }
+    }
+
+    // ---- observability (see docs/OBSERVABILITY.md) ------------------
+
+    /// Sim-time stamp: the logical tick counter, scaled so one tick
+    /// reads as 1 ms in Perfetto. Pure function of the seed — never
+    /// wall clock.
+    fn now_ns(&self) -> u64 {
+        self.stats.ticks * 1_000_000
+    }
+
+    /// Client-visible id for a ticket (falls back to the ticket).
+    fn trace_req(&self, ticket: u64) -> u64 {
+        self.trace_ids.get(&ticket).copied().unwrap_or(ticket)
+    }
+
+    /// The flight recorder (no-op sink unless `cfg.trace_events > 0`).
+    pub fn tracer(&self) -> &Tracer {
+        &self.tracer
+    }
+
+    /// Recorded events for one client-visible request id, in order.
+    pub fn trace_events_for(&self, req: u64) -> Vec<Stamped> {
+        self.tracer.events_for(req)
+    }
+
+    /// Full-model KV bytes read per attended token (see
+    /// `Engine::kv_bytes_per_token`).
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        self.cache.payload_bytes_per_token() * self.cfg.geom.lh() as f64
     }
 
     /// Accumulated engine statistics.
@@ -187,6 +237,13 @@ impl SimEngine {
     /// Tokenize, validate, and enqueue one request (mirrors
     /// `Engine::submit`, including prefix-cache admission).
     pub fn submit(&mut self, req: &GenRequest) -> Result<u64> {
+        self.submit_traced(req, None)
+    }
+
+    /// [`submit`](Self::submit) with an optional client-visible request
+    /// id recorded against the ticket so trace events carry the id the
+    /// caller knows (mirrors `Engine::submit_traced`).
+    pub fn submit_traced(&mut self, req: &GenRequest, trace_id: Option<u64>) -> Result<u64> {
         let ids = Self::encode(&req.prompt);
         if ids.len() + 2 > req.max_len {
             bail!(
@@ -221,9 +278,25 @@ impl SimEngine {
                 prefix_tokens = hit.tokens;
             }
         }
-        Ok(self
-            .sched
-            .submit_with_prefix(req, Arc::new(ids), &prefix_pages, prefix_tokens))
+        let prompt_tokens = ids.len();
+        let ticket =
+            self.sched
+                .submit_with_prefix(req, Arc::new(ids), &prefix_pages, prefix_tokens);
+        if self.tracer.enabled() {
+            let rid = trace_id.unwrap_or(ticket);
+            self.trace_ids.insert(ticket, rid);
+            let ts = self.now_ns();
+            self.tracer.emit(
+                ts,
+                TraceEvent::Submit {
+                    req: rid,
+                    prompt_tokens,
+                    width: req.width.max(1),
+                    prefix_hit_tokens: prefix_tokens,
+                },
+            );
+        }
+        Ok(ticket)
     }
 
     /// Outstanding pool references across all retained/shared pages —
@@ -246,6 +319,9 @@ impl SimEngine {
                     self.cache.release_page(id);
                 }
             }
+            // the stealing router re-submits elsewhere; this engine's
+            // trace of the request ends here
+            self.trace_ids.remove(&ticket);
             tickets.push(ticket);
         }
         tickets
@@ -305,10 +381,54 @@ impl SimEngine {
             return Ok(completed);
         }
         self.stats.ticks += 1;
+        self.tick_read_tokens = 0.0;
         let t0 = Instant::now();
         self.prefill_step(&mut completed);
         self.decode_step(&mut completed);
         self.stats.host_s += t0.elapsed().as_secs_f64();
+
+        if self.tracer.enabled() {
+            let ts = self.now_ns();
+            for (lane, ev) in self.cache.drain_tick_events() {
+                if ev.cow_published > 0 {
+                    self.tracer.emit(
+                        ts,
+                        TraceEvent::CowPublish {
+                            lane,
+                            pages: ev.cow_published,
+                        },
+                    );
+                }
+                if ev.dequant_pages > 0 {
+                    self.tracer.emit(
+                        ts,
+                        TraceEvent::Dequant {
+                            lane,
+                            pages: ev.dequant_pages,
+                        },
+                    );
+                }
+                if ev.evictions + ev.merges > 0 {
+                    self.tracer.emit(
+                        ts,
+                        TraceEvent::EvictBatch {
+                            lane,
+                            evictions: ev.evictions,
+                            merges: ev.merges,
+                            lh_touched: ev.lh_touched,
+                        },
+                    );
+                }
+            }
+        }
+        if self.tick_read_tokens > 0.0 {
+            self.metrics
+                .counter("kv.read_tokens")
+                .add(self.tick_read_tokens);
+            self.metrics
+                .counter("kv.read_bytes")
+                .add(self.tick_read_tokens * self.kv_bytes_per_token());
+        }
 
         self.metrics
             .gauge("engine.active_lanes")
@@ -346,6 +466,7 @@ impl SimEngine {
             .gauge("kv.plan_min_lh")
             .set(if plan_lanes > 0 { plan_min as f64 } else { 0.0 });
         self.metrics.gauge("kv.plan_max_lh").set(plan_max as f64);
+        let bpt = self.kv_bytes_per_token();
         for c in &completed {
             let t = &c.timing;
             self.metrics.histogram("serve.queue_ms").record(t.queue_ms);
@@ -358,6 +479,22 @@ impl SimEngine {
             self.metrics
                 .counter("serve.gen_tokens")
                 .add(t.gen_tokens as f64);
+            let reads = c.result.total_reads();
+            self.metrics.histogram("serve.kv_read_tokens").record(reads);
+            if self.tracer.enabled() {
+                let req = self.trace_req(c.ticket);
+                let ts = self.now_ns();
+                self.tracer.emit(
+                    ts,
+                    TraceEvent::Finish {
+                        req,
+                        gen_tokens: t.gen_tokens,
+                        read_tokens: reads,
+                        read_bytes: reads * bpt,
+                    },
+                );
+            }
+            self.trace_ids.remove(&c.ticket);
         }
         Ok(completed)
     }
@@ -379,8 +516,10 @@ impl SimEngine {
         while let Some(lane) = self.sched.idle_lane() {
             let Some(mut p) = self.sched.next_admission() else { break };
             self.cache.reset_lane(lane);
+            let ticket = p.ticket;
             let prefix_pages = std::mem::take(&mut p.prefix_pages);
             let prefix_tokens = p.prefix_tokens;
+            let restored_pages = prefix_pages.len();
             let policy = self.sim_policy(p.max_len);
             let mut chain = ChainState::new(p, policy, 0);
             if !prefix_pages.is_empty() {
@@ -392,6 +531,22 @@ impl SimEngine {
                 self.stats.prefix_hit_tokens += prefix_tokens as u64;
             }
             self.sched.install(lane, chain);
+            if self.tracer.enabled() {
+                let req = self.trace_req(ticket);
+                let ts = self.now_ns();
+                self.tracer.emit(ts, TraceEvent::Admit { req, lane });
+                if restored_pages > 0 {
+                    self.tracer.emit(
+                        ts,
+                        TraceEvent::PrefixRestore {
+                            req,
+                            lane,
+                            pages: restored_pages,
+                            tokens: prefix_tokens,
+                        },
+                    );
+                }
+            }
         }
     }
 
@@ -415,8 +570,9 @@ impl SimEngine {
                     overflow = true;
                     break;
                 }
-                self.sched.lane_mut(lane).unwrap().stats.prefill_reads +=
-                    live_before + (j + 1) as f64;
+                let step_reads = live_before + (j + 1) as f64;
+                self.sched.lane_mut(lane).unwrap().stats.prefill_reads += step_reads;
+                self.tick_read_tokens += step_reads;
             }
             did_work = true;
             if overflow {
@@ -442,7 +598,11 @@ impl SimEngine {
                 a.pos = new_offset;
                 a.phase = Phase::Decode;
                 let ticket = a.ticket;
-                self.sched.note_first_token(ticket);
+                if self.sched.note_first_token(ticket) && self.tracer.enabled() {
+                    let req = self.trace_req(ticket);
+                    let ts = self.now_ns();
+                    self.tracer.emit(ts, TraceEvent::FirstToken { req });
+                }
                 if !resumed {
                     self.fork_siblings(lane, ticket, tok, new_offset);
                 }
@@ -488,6 +648,7 @@ impl SimEngine {
             did_work = true;
             let wrote = self.write_token(lane, cur, pos);
             let peak = self.cache.live_tokens(lane);
+            self.tick_read_tokens += reads;
             let finish = {
                 let a = self.sched.lane_mut(lane).unwrap();
                 a.stats.decode_reads += reads;
@@ -689,6 +850,38 @@ mod tests {
         e.drain().unwrap();
         assert_eq!(e.metrics.gauge("kv.plan_lanes").get(), 0.0);
         assert_eq!(e.metrics.gauge("kv.plan_tokens").get(), 0.0);
+    }
+
+    #[test]
+    fn tracing_records_lifecycle_and_read_counters() {
+        let mut e = SimEngine::new(SimEngineConfig {
+            trace_events: 256,
+            ..Default::default()
+        });
+        e.submit_traced(&req("Q:1+2=?|T:", 1, 96, 5), Some(42)).unwrap();
+        e.drain().unwrap();
+        let names: Vec<&str> = e
+            .trace_events_for(42)
+            .iter()
+            .map(|s| s.event.name())
+            .collect();
+        assert_eq!(names, ["submit", "admit", "first_token", "finish"]);
+        // memory-read accounting flows through the same tick path
+        let toks = e.metrics.counter("kv.read_tokens").get();
+        let bytes = e.metrics.counter("kv.read_bytes").get();
+        assert!(toks > 0.0);
+        assert_eq!(bytes, toks * e.kv_bytes_per_token());
+        assert_eq!(e.tracer().dropped(), 0);
+    }
+
+    #[test]
+    fn tracing_disabled_records_nothing() {
+        let mut e = SimEngine::new(SimEngineConfig::default());
+        e.submit(&req("Q:1+2=?|T:", 1, 96, 5)).unwrap();
+        e.drain().unwrap();
+        assert!(!e.tracer().enabled());
+        assert_eq!(e.tracer().recorded(), 0);
+        assert!(e.tracer().events().is_empty());
     }
 
     #[test]

@@ -68,6 +68,7 @@ use crate::kvcache::KvDtype;
 use crate::metrics::Registry;
 use crate::server::router::{first_alive, mask_dead};
 use crate::server::{ReplicaLoad, Router};
+use crate::trace::{chrome_trace_json, Stamped, TraceEvent};
 use crate::util::rng::SplitMix64;
 
 /// A prefix hit never covers the full prompt: the engine's radix index
@@ -460,6 +461,39 @@ pub struct SimReport {
     pub completions: Vec<(u64, usize)>,
     /// Per-stage spans (trace only).
     pub trace: Vec<StageSpan>,
+}
+
+impl SimReport {
+    /// The recorded stage spans as stamped [`TraceEvent::Stage`]
+    /// events, grouped per replica (the Chrome `pid`). Stamps are
+    /// **sim time** — the stream, and its Chrome rendering, is a pure
+    /// function of the seed, which is what lets CI assert two
+    /// same-seed dumps byte-identical. Empty unless
+    /// [`TimeflowConfig::record_trace`] was set.
+    pub fn trace_events(&self) -> Vec<(usize, Vec<Stamped>)> {
+        let replicas = self.trace.iter().map(|s| s.replica + 1).max().unwrap_or(0);
+        let mut groups: Vec<(usize, Vec<Stamped>)> =
+            (0..replicas).map(|pid| (pid, Vec::new())).collect();
+        for (seq, s) in self.trace.iter().enumerate() {
+            groups[s.replica].1.push(Stamped {
+                ts_ns: s.end_ns,
+                seq: seq as u64,
+                event: TraceEvent::Stage {
+                    req: s.req as u64,
+                    replica: s.replica,
+                    stage: s.stage.name(),
+                    start_ns: s.start_ns,
+                },
+            });
+        }
+        groups
+    }
+
+    /// Chrome trace-event JSON (Perfetto-loadable) of the recorded
+    /// stage spans — the payload `sim --trace-out` writes.
+    pub fn chrome_trace_json(&self) -> String {
+        chrome_trace_json(&self.trace_events())
+    }
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -1086,6 +1120,29 @@ mod tests {
         );
         assert_eq!(a.ttft_p999_ns.to_bits(), b.ttft_p999_ns.to_bits());
         assert_eq!(a.tokens_per_s.to_bits(), b.tokens_per_s.to_bits());
+        assert_eq!(
+            a.chrome_trace_json(),
+            b.chrome_trace_json(),
+            "trace dump is byte-identical under the same seed"
+        );
+    }
+
+    #[test]
+    fn trace_export_renders_stage_spans() {
+        let cfg = base_cfg(2, 1);
+        let spec = WorkloadSpec::new(64, 9);
+        let rep = simulate(&cfg, &spec);
+        assert!(!rep.trace.is_empty());
+        let groups = rep.trace_events();
+        let total: usize = groups.iter().map(|(_, v)| v.len()).sum();
+        assert_eq!(total, rep.trace.len());
+        let j = crate::util::Json::parse(&rep.chrome_trace_json()).unwrap();
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+        // every stage span renders as one "X" complete event
+        assert_eq!(evs.len(), rep.trace.len());
+        assert!(evs
+            .iter()
+            .all(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X")));
     }
 
     #[test]

@@ -64,6 +64,10 @@ pub struct EvalOutcome {
     pub accuracy: f64,
     /// mean per-problem total KV reads (sum over the W chains).
     pub mean_reads: f64,
+    /// `mean_reads` priced in bytes — token reads × the engine's
+    /// full-model KV bytes per token under the serving dtype. The
+    /// denominator of the paper's accuracy-per-memory-read frontier.
+    pub mean_read_bytes: f64,
     /// mean per-problem peak tokens (sum over concurrent chains).
     pub mean_peak: f64,
     /// mean achieved compression ratio across chains.
@@ -128,6 +132,7 @@ impl Harness {
             return Ok(EvalOutcome {
                 accuracy: 0.0,
                 mean_reads: 0.0,
+                mean_read_bytes: 0.0,
                 mean_peak: 0.0,
                 mean_achieved_cr: 1.0,
                 n_problems: 0,
@@ -160,6 +165,7 @@ impl Harness {
         Ok(EvalOutcome {
             accuracy: correct as f64 / n,
             mean_reads: reads / n,
+            mean_read_bytes: (reads / n) * self.engine.kv_bytes_per_token(),
             mean_peak: peak / n,
             mean_achieved_cr: crs / chains.max(1) as f64,
             n_problems: results.len(),

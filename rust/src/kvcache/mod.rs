@@ -68,7 +68,7 @@ pub use cow::{PageData, PageId, PagePool, Payload};
 pub use paged::PageAllocator;
 pub use prefix::{PrefixHit, RadixPrefixIndex};
 pub use quant::{KvBlock, KvDtype, QuantBlock};
-pub use store::{CacheStore, Geometry, SlotState, NEG_INF};
+pub use store::{CacheStore, Geometry, LaneTickEvents, SlotState, NEG_INF};
 
 #[cfg(test)]
 mod tests {

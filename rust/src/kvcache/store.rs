@@ -91,6 +91,34 @@ pub enum SlotState {
 
 pub(super) const NO_EVICT: u32 = u32::MAX;
 
+/// Per-lane cache events accumulated since the last
+/// [`CacheStore::drain_tick_events`] call — the flight recorder's
+/// eviction/merge/COW/dequant batches (one `TraceEvent` per nonzero
+/// lane per tick). Only populated while event tracking is on
+/// ([`CacheStore::set_event_tracking`]), so the untraced hot path pays
+/// a single branch per op.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LaneTickEvents {
+    /// Slots evicted (immediate or due delayed evictions).
+    pub evictions: u64,
+    /// DMC merges into the last-written slot.
+    pub merges: u64,
+    /// Distinct (layer, head) cells touched by evictions/merges.
+    pub lh_touched: u64,
+    /// Pages snapshotted into the pool by COW breaks.
+    pub cow_published: u64,
+    /// Pool payloads decoded into the lane's region
+    /// (dequant-on-upload; exact memcpy for f32).
+    pub dequant_pages: u64,
+}
+
+impl LaneTickEvents {
+    /// Whether anything happened on the lane this tick.
+    pub fn any(&self) -> bool {
+        self.evictions + self.merges + self.cow_published + self.dequant_pages > 0
+    }
+}
+
 /// Host-authoritative cache for all lanes of one executor.
 pub struct CacheStore {
     pub geom: Geometry,
@@ -126,6 +154,14 @@ pub struct CacheStore {
     /// Cumulative nanoseconds spent decoding pool payloads into lane
     /// regions (the dequant-on-upload cost; `kv.dequant_us`).
     dequant_ns: u64,
+    /// Flight-recorder hooks: per-lane event counters drained by the
+    /// engine once per tick. Off by default (zero-cost contract).
+    track_events: bool,
+    tick_events: Vec<LaneTickEvents>,
+    /// Epoch marks over (lane, layer, head) cells backing the
+    /// `lh_touched` distinct count without per-tick allocation.
+    lh_mark: Vec<u32>,
+    tick_epoch: u32,
 }
 
 impl CacheStore {
@@ -161,6 +197,50 @@ impl CacheStore {
             cow_published: 0,
             kv_dtype,
             dequant_ns: 0,
+            track_events: false,
+            tick_events: vec![LaneTickEvents::default(); batch],
+            lh_mark: vec![0; n_lbh],
+            tick_epoch: 1,
+        }
+    }
+
+    /// Enable (or disable) per-tick event accounting for the flight
+    /// recorder. The engine turns this on iff its tracer is enabled.
+    pub fn set_event_tracking(&mut self, on: bool) {
+        self.track_events = on;
+    }
+
+    /// Take this tick's per-lane event batches (nonzero lanes only,
+    /// ascending) and reset the accumulators. Returns nothing when
+    /// tracking is off.
+    pub fn drain_tick_events(&mut self) -> Vec<(usize, LaneTickEvents)> {
+        if !self.track_events {
+            return Vec::new();
+        }
+        self.tick_epoch = self.tick_epoch.wrapping_add(1);
+        if self.tick_epoch == 0 {
+            // epoch wrapped: stale marks could alias the new epoch
+            self.lh_mark.iter_mut().for_each(|m| *m = 0);
+            self.tick_epoch = 1;
+        }
+        let mut out = Vec::new();
+        for (lane, ev) in self.tick_events.iter_mut().enumerate() {
+            if ev.any() {
+                out.push((lane, *ev));
+            }
+            *ev = LaneTickEvents::default();
+        }
+        out
+    }
+
+    /// Count an eviction/merge against its (layer, head) cell, once per
+    /// cell per tick.
+    #[inline]
+    fn mark_cell_touched(&mut self, b: usize, l: usize, h: usize) {
+        let i = self.lbh(b, l, h);
+        if self.lh_mark[i] != self.tick_epoch {
+            self.lh_mark[i] = self.tick_epoch;
+            self.tick_events[b].lh_touched += 1;
         }
     }
 
@@ -298,6 +378,10 @@ impl CacheStore {
         };
         let kk: Vec<f32> = self.k[base..base + hd].to_vec();
         self.update_page_bounds(b, l, h, slot, &kk);
+        if self.track_events {
+            self.tick_events[b].merges += 1;
+            self.mark_cell_touched(b, l, h);
+        }
         true
     }
 
@@ -316,6 +400,10 @@ impl CacheStore {
         self.mask[mi] = NEG_INF;
         if self.last_written[i] == Some(slot) {
             self.last_written[i] = None;
+        }
+        if self.track_events {
+            self.tick_events[b].evictions += 1;
+            self.mark_cell_touched(b, l, h);
         }
     }
 
@@ -756,6 +844,9 @@ impl CacheStore {
             self.pmax[pb..pb + hd].copy_from_slice(&data.pmax[lh_i * hd..(lh_i + 1) * hd]);
         }
         self.dequant_ns += t0.elapsed().as_nanos() as u64;
+        if self.track_events {
+            self.tick_events[b].dequant_pages += 1;
+        }
     }
 
     /// Snapshot one token page of `lane`'s region into pool-owned
@@ -825,6 +916,9 @@ impl CacheStore {
             let snap = self.snapshot_page(b, page);
             self.pool.publish(id, snap);
             self.cow_published += 1;
+            if self.track_events {
+                self.tick_events[b].cow_published += 1;
+            }
         }
         self.pool.release(id);
     }
@@ -843,6 +937,9 @@ impl CacheStore {
                 let snap = self.snapshot_page(b, p);
                 self.pool.publish(id, snap);
                 self.cow_published += 1;
+                if self.track_events {
+                    self.tick_events[b].cow_published += 1;
+                }
             }
             self.pool.release(id);
         }
@@ -1011,5 +1108,49 @@ impl CacheStore {
     /// `kv.bytes_per_token` gauge.
     pub fn payload_bytes_per_token(&self) -> f64 {
         2.0 * self.kv_dtype.row_payload_bytes(self.geom.head_dim) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> CacheStore {
+        CacheStore::new(
+            Geometry {
+                layers: 2,
+                kv_heads: 2,
+                slots: 16,
+                head_dim: 4,
+                page_size: 4,
+            },
+            2,
+        )
+    }
+
+    #[test]
+    fn tick_events_only_accumulate_when_tracking_is_on() {
+        let mut c = small();
+        let s = c.alloc_slot(0, 0, 0).unwrap();
+        c.write(0, 0, 0, s, 0, &[1.0; 4], &[1.0; 4]);
+        c.evict(0, 0, 0, s);
+        assert!(c.drain_tick_events().is_empty(), "tracking off by default");
+
+        c.set_event_tracking(true);
+        let s = c.alloc_slot(0, 0, 0).unwrap();
+        c.write(0, 0, 0, s, 0, &[1.0; 4], &[1.0; 4]);
+        assert!(c.merge_into_last(0, 0, 0, &[2.0; 4], &[2.0; 4]));
+        c.evict(0, 0, 0, s);
+        let s1 = c.alloc_slot(0, 1, 1).unwrap();
+        c.write(0, 1, 1, s1, 0, &[1.0; 4], &[1.0; 4]);
+        c.evict(0, 1, 1, s1);
+        let ev = c.drain_tick_events();
+        assert_eq!(ev.len(), 1, "only the touched lane reports");
+        let (lane, e) = ev[0];
+        assert_eq!(lane, 0);
+        assert_eq!(e.evictions, 2);
+        assert_eq!(e.merges, 1);
+        assert_eq!(e.lh_touched, 2, "distinct (layer, head) cells, not ops");
+        assert!(c.drain_tick_events().is_empty(), "drain resets the tick");
     }
 }

@@ -24,6 +24,10 @@
 //! * [`experiments`] — one driver per paper figure/table;
 //! * [`server`]   — TCP line-JSON serving front end: single engine or
 //!   a multi-replica cluster behind a prefix-aware router;
+//! * [`trace`], [`metrics`] — observability: flight-recorder tracing
+//!   (per-request spans, cache/router events, Perfetto export) and the
+//!   metric registry with Prometheus/JSON exposition
+//!   (`docs/OBSERVABILITY.md`);
 //! * [`tasks`], [`tokenizer`] — synthetic benchmark suite, mirrored
 //!   byte-for-byte with `python/compile/tasks.py`.
 
@@ -50,6 +54,7 @@ pub mod scaling;
 pub mod server;
 pub mod tasks;
 pub mod tokenizer;
+pub mod trace;
 pub mod util;
 
 /// Crate-wide result type.

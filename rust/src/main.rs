@@ -42,10 +42,12 @@ fn usage() -> &'static str {
                 [--n N] [--full]\n\
        serve    [--addr 127.0.0.1:7333] [--no-prefix-cache] [--prefix-pages N]\n\
                 [--replicas N] [--routing prefix|least-loaded|round-robin]\n\
-                [--no-steal]\n\
+                [--no-steal] [--trace] [--trace-events N]\n\
+                [--trace-out FILE] [--prom-out FILE]\n\
        sim      [--replicas N] [--lanes N] [--requests N] [--seed S]\n\
                 [--routing ...] [--no-steal] [--arrival uniform|poisson|bursty]\n\
                 [--mean-gap-us X] [--prompts N] [--fail-replica I --fail-at-ms T]\n\
+                [--trace-out FILE] [--metrics]\n\
        inspect  | selftest"
 }
 
@@ -60,13 +62,21 @@ fn dispatch(args: &Args) -> Result<()> {
         "eval" => cmd_eval(args),
         "exp" => cmd_exp(args),
         "serve" => {
-            let cfg = engine_cfg(args)?;
+            let mut cfg = engine_cfg(args)?;
             let ccfg = ClusterConfig::default().with_args(args)?;
+            // asking for a trace dump implies tracing
+            if args.get("trace-out").is_some() && cfg.trace_events == 0 {
+                cfg.trace_events = hyperscale::trace::DEFAULT_CAPACITY;
+            }
             let addr = args.get_str("addr", "127.0.0.1:7333");
+            let opts = hyperscale::server::ServeOpts {
+                trace_out: args.get("trace-out").map(PathBuf::from),
+                prom_out: args.get("prom-out").map(PathBuf::from),
+            };
             if ccfg.replicas > 1 {
-                hyperscale::server::serve_cluster(cfg, ccfg, addr)
+                hyperscale::server::serve_cluster_with(cfg, ccfg, addr, opts)
             } else {
-                hyperscale::server::serve(cfg, addr)
+                hyperscale::server::serve_with(cfg, addr, opts)
             }
         }
         "sim" => cmd_sim(args),
@@ -125,10 +135,12 @@ fn cmd_eval(args: &Args) -> Result<()> {
     }
     let out = exp::eval_point(cfg, &spec)?;
     println!(
-        "{}: acc {:.3} reads {:.0} peak {:.1} CR {:.2} gen {:.0} tok ({} problems, {:.1}s)",
+        "{}: acc {:.3} reads {:.0} ({:.2} MB) peak {:.1} CR {:.2} gen {:.0} tok \
+         ({} problems, {:.1}s)",
         spec.label(),
         out.accuracy,
         out.mean_reads,
+        out.mean_read_bytes / 1e6,
         out.mean_peak,
         out.mean_achieved_cr,
         out.mean_gen_tokens,
@@ -172,6 +184,8 @@ fn cmd_sim(args: &Args) -> Result<()> {
     let mut cfg = TimeflowConfig::new(ccfg.replicas.max(1), args.get_usize("lanes", 4)?, ccfg.routing)
         .with_kv(ecfg.kv_dtype, ecfg.allocator);
     cfg.steal = ccfg.steal;
+    let trace_out = args.get("trace-out").map(PathBuf::from);
+    cfg.record_trace = trace_out.is_some();
     if args.get("fail-at-ms").is_some() {
         cfg.failure = Some(ReplicaFailure {
             replica: args.get_usize("fail-replica", 0)?,
@@ -212,6 +226,14 @@ fn cmd_sim(args: &Args) -> Result<()> {
         rep.span_ns as f64 / 1e6
     );
     println!("  simulated in {wall_s:.2}s wall");
+    if let Some(path) = trace_out {
+        std::fs::write(&path, rep.chrome_trace_json())?;
+        println!(
+            "  trace: {} stage spans -> {} (sim time; same seed => byte-identical)",
+            rep.trace.len(),
+            path.display()
+        );
+    }
     if args.flag("metrics") {
         print!("{}", rep.registry.report());
     }

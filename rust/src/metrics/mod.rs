@@ -1,7 +1,16 @@
 //! Metrics substrate: counters, gauges with peak tracking, histograms
 //! with percentile queries, and a registry for report generation.
+//!
+//! The registry renders three ways (see `docs/OBSERVABILITY.md`):
+//! the human-oriented flat [`Registry::report`], the machine-readable
+//! [`Registry::to_json`] snapshot behind `{"cmd": "stats"}`, and the
+//! Prometheus text exposition [`Registry::prometheus`] (counters and
+//! gauges as-is, histograms as summaries with p50/p95/p99 quantiles).
 
 use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::util::Json;
 
 /// Monotone counter (f64 so fractional token-unit reads accumulate).
 #[derive(Clone, Debug, Default)]
@@ -118,15 +127,34 @@ impl Histogram {
         }
     }
 
-    /// Percentile in [0, 100].
+    /// Percentile in [0, 100]. One-off convenience; callers querying
+    /// several percentiles should use [`Histogram::percentiles`],
+    /// which sorts the retained samples once.
     pub fn percentile(&self, p: f64) -> f64 {
+        self.percentiles(&[p])[0]
+    }
+
+    /// Batch percentile query: one clone + sort of the retained
+    /// samples regardless of how many percentiles are asked for.
+    /// `total_cmp` ordering makes NaN samples sortable (they collate
+    /// after +inf) instead of panicking the whole stats dump.
+    pub fn percentiles(&self, ps: &[f64]) -> Vec<f64> {
         if self.samples.is_empty() {
-            return 0.0;
+            return vec![0.0; ps.len()];
         }
         let mut s = self.samples.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
-        s[idx.min(s.len() - 1)]
+        s.sort_by(|a, b| a.total_cmp(b));
+        ps.iter()
+            .map(|p| {
+                let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+                s[idx.min(s.len() - 1)]
+            })
+            .collect()
+    }
+
+    /// Sum of every recorded sample (not just the retained reservoir).
+    pub fn sum(&self) -> f64 {
+        self.sum
     }
 
     pub fn reset(&mut self) {
@@ -174,16 +202,213 @@ impl Registry {
             ));
         }
         for (name, h) in &self.histograms {
+            // one sort per histogram per report (not one per quantile)
+            let p = h.percentiles(&[50.0, 95.0, 99.0]);
             out.push_str(&format!(
                 "hist    {name}: n={} mean={:.4} p50={:.4} p95={:.4} p99={:.4}\n",
                 h.count(),
                 h.mean(),
-                h.percentile(50.0),
-                h.percentile(95.0),
-                h.percentile(99.0)
+                p[0],
+                p[1],
+                p[2]
             ));
         }
         out
+    }
+
+    /// Prometheus text exposition (version 0.0.4). Metric names are
+    /// sanitized (`.` → `_`); an optional `(key, value)` label pair is
+    /// attached to every sample — the cluster stats path labels each
+    /// replica's block `replica="i"`. Histograms render as summaries:
+    /// `quantile="0.5|0.95|0.99"` samples plus `_sum`/`_count`, with
+    /// quantiles computed in one sort via [`Histogram::percentiles`].
+    pub fn prometheus(&self, label: Option<(&str, &str)>) -> String {
+        let base_label = |out: &mut String| {
+            if let Some((k, v)) = label {
+                let _ = write!(out, "{{{k}=\"{v}\"}}");
+            }
+        };
+        let mut out = String::new();
+        for (name, c) in &self.counters {
+            let n = prom_name(name);
+            let _ = writeln!(out, "# TYPE {n} counter");
+            out.push_str(&n);
+            base_label(&mut out);
+            let _ = writeln!(out, " {}", prom_value(c.get()));
+        }
+        for (name, g) in &self.gauges {
+            let n = prom_name(name);
+            let _ = writeln!(out, "# TYPE {n} gauge");
+            out.push_str(&n);
+            base_label(&mut out);
+            let _ = writeln!(out, " {}", prom_value(g.get()));
+            let _ = writeln!(out, "# TYPE {n}_peak gauge");
+            let _ = write!(out, "{n}_peak");
+            base_label(&mut out);
+            let _ = writeln!(out, " {}", prom_value(g.peak()));
+        }
+        for (name, h) in &self.histograms {
+            let n = prom_name(name);
+            let p = h.percentiles(&[50.0, 95.0, 99.0]);
+            let _ = writeln!(out, "# TYPE {n} summary");
+            for (q, v) in [("0.5", p[0]), ("0.95", p[1]), ("0.99", p[2])] {
+                match label {
+                    Some((k, lv)) => {
+                        let _ = writeln!(
+                            out,
+                            "{n}{{{k}=\"{lv}\",quantile=\"{q}\"}} {}",
+                            prom_value(v)
+                        );
+                    }
+                    None => {
+                        let _ =
+                            writeln!(out, "{n}{{quantile=\"{q}\"}} {}", prom_value(v));
+                    }
+                }
+            }
+            let _ = write!(out, "{n}_sum");
+            base_label(&mut out);
+            let _ = writeln!(out, " {}", prom_value(h.sum()));
+            let _ = write!(out, "{n}_count");
+            base_label(&mut out);
+            let _ = writeln!(out, " {}", h.count());
+        }
+        out
+    }
+
+    /// Machine-readable snapshot of every metric — the structured half
+    /// of the `{"cmd": "stats"}` response. Histograms carry count,
+    /// mean, and p50/p95/p99 (one sort each).
+    pub fn to_json(&self) -> Json {
+        let mut counters = Json::obj();
+        for (name, c) in &self.counters {
+            counters = counters.set(name, c.get());
+        }
+        let mut gauges = Json::obj();
+        for (name, g) in &self.gauges {
+            gauges = gauges.set(name, Json::obj().set("value", g.get()).set("peak", g.peak()));
+        }
+        let mut histograms = Json::obj();
+        for (name, h) in &self.histograms {
+            let p = h.percentiles(&[50.0, 95.0, 99.0]);
+            histograms = histograms.set(
+                name,
+                Json::obj()
+                    .set("count", h.count())
+                    .set("mean", h.mean())
+                    .set("sum", h.sum())
+                    .set("p50", p[0])
+                    .set("p95", p[1])
+                    .set("p99", p[2]),
+            );
+        }
+        Json::obj()
+            .set("counters", counters)
+            .set("gauges", gauges)
+            .set("histograms", histograms)
+    }
+}
+
+/// Merge per-replica registry snapshots ([`Registry::to_json`]) into
+/// one **valid** Prometheus exposition: the text format forbids
+/// repeating a family's `# TYPE` line, so concatenating per-replica
+/// expositions would be malformed — instead each family gets a single
+/// TYPE line followed by one `label_key="block"`-labelled sample per
+/// block. Used by the cluster router for `--prom-out` and the stats
+/// endpoint's `prometheus` field.
+pub fn prometheus_merge(label_key: &str, blocks: &[(String, Json)]) -> String {
+    use std::collections::BTreeSet;
+    let family_names = |kind: &str| -> BTreeSet<String> {
+        let mut out = BTreeSet::new();
+        for (_, j) in blocks {
+            if let Some(pairs) = j.get(kind).and_then(Json::as_obj) {
+                out.extend(pairs.iter().map(|(k, _)| k.clone()));
+            }
+        }
+        out
+    };
+    let num = |j: &Json, kind: &str, name: &str, field: Option<&str>| -> Option<f64> {
+        let m = j.get(kind)?.get(name)?;
+        match field {
+            Some(f) => m.get(f)?.as_f64(),
+            None => m.as_f64(),
+        }
+    };
+    let mut out = String::new();
+    for name in family_names("counters") {
+        let n = prom_name(&name);
+        let _ = writeln!(out, "# TYPE {n} counter");
+        for (label, j) in blocks {
+            if let Some(v) = num(j, "counters", &name, None) {
+                let _ = writeln!(out, "{n}{{{label_key}=\"{label}\"}} {}", prom_value(v));
+            }
+        }
+    }
+    for name in family_names("gauges") {
+        let n = prom_name(&name);
+        for (suffix, field) in [("", "value"), ("_peak", "peak")] {
+            let _ = writeln!(out, "# TYPE {n}{suffix} gauge");
+            for (label, j) in blocks {
+                if let Some(v) = num(j, "gauges", &name, Some(field)) {
+                    let _ = writeln!(
+                        out,
+                        "{n}{suffix}{{{label_key}=\"{label}\"}} {}",
+                        prom_value(v)
+                    );
+                }
+            }
+        }
+    }
+    for name in family_names("histograms") {
+        let n = prom_name(&name);
+        let _ = writeln!(out, "# TYPE {n} summary");
+        for (label, j) in blocks {
+            for (q, field) in [("0.5", "p50"), ("0.95", "p95"), ("0.99", "p99")] {
+                if let Some(v) = num(j, "histograms", &name, Some(field)) {
+                    let _ = writeln!(
+                        out,
+                        "{n}{{{label_key}=\"{label}\",quantile=\"{q}\"}} {}",
+                        prom_value(v)
+                    );
+                }
+            }
+            if let Some(s) = num(j, "histograms", &name, Some("sum")) {
+                let _ =
+                    writeln!(out, "{n}_sum{{{label_key}=\"{label}\"}} {}", prom_value(s));
+            }
+            if let Some(c) = num(j, "histograms", &name, Some("count")) {
+                let _ = writeln!(
+                    out,
+                    "{n}_count{{{label_key}=\"{label}\"}} {}",
+                    prom_value(c)
+                );
+            }
+        }
+    }
+    out
+}
+
+/// Sanitize a dotted metric name into the Prometheus charset
+/// (`[a-zA-Z_:][a-zA-Z0-9_:]*`).
+fn prom_name(name: &str) -> String {
+    let mut s: String = name
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' || c == ':' { c } else { '_' })
+        .collect();
+    if s.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+        s.insert(0, '_');
+    }
+    s
+}
+
+/// Deterministic sample formatting: integral values render without a
+/// decimal point (matching the JSON writer), everything else uses
+/// Rust's shortest-roundtrip `Display`.
+fn prom_value(x: f64) -> String {
+    if x.fract() == 0.0 && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x}")
     }
 }
 
@@ -252,6 +477,89 @@ mod tests {
         r.histogram("x").record(2.0);
         assert_eq!(r.histogram_samples("x"), &[2.0]);
         assert!(r.histogram_samples("missing").is_empty());
+    }
+
+    #[test]
+    fn percentile_survives_nan_samples() {
+        // regression: partial_cmp(..).unwrap() used to panic here — a
+        // single NaN latency sample must never kill a stats dump
+        let mut h = Histogram::default();
+        h.record(1.0);
+        h.record(f64::NAN);
+        h.record(3.0);
+        let p50 = h.percentile(50.0);
+        assert!(p50.is_finite(), "NaN collates last, p50 stays finite");
+        let r = {
+            let mut reg = Registry::default();
+            *reg.histogram("lat") = h;
+            reg.report()
+        };
+        assert!(r.contains("lat"));
+    }
+
+    #[test]
+    fn batch_percentiles_match_single_queries() {
+        let mut h = Histogram::default();
+        for i in (1..=100).rev() {
+            h.record(i as f64);
+        }
+        let batch = h.percentiles(&[50.0, 95.0, 99.0]);
+        assert_eq!(batch[0], h.percentile(50.0));
+        assert_eq!(batch[1], h.percentile(95.0));
+        assert_eq!(batch[2], h.percentile(99.0));
+        assert_eq!(h.percentiles(&[]).len(), 0);
+        assert_eq!(Histogram::default().percentiles(&[50.0]), vec![0.0]);
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let mut r = Registry::default();
+        r.counter("serve.requests").add(3.0);
+        r.gauge("kv.live_fraction").set(0.5);
+        r.histogram("serve.ttft_ms").record(2.0);
+        let text = r.prometheus(None);
+        assert!(text.contains("# TYPE serve_requests counter\nserve_requests 3\n"));
+        assert!(text.contains("# TYPE kv_live_fraction gauge"));
+        assert!(text.contains("serve_ttft_ms{quantile=\"0.5\"} 2"));
+        assert!(text.contains("serve_ttft_ms_count 1"));
+        let labelled = r.prometheus(Some(("replica", "1")));
+        assert!(labelled.contains("serve_requests{replica=\"1\"} 3"));
+        assert!(labelled.contains("serve_ttft_ms{replica=\"1\",quantile=\"0.5\"} 2"));
+    }
+
+    #[test]
+    fn json_snapshot_carries_all_metric_kinds() {
+        let mut r = Registry::default();
+        r.counter("c").add(1.0);
+        r.gauge("g").set(7.0);
+        r.histogram("h").record(4.0);
+        let j = r.to_json();
+        assert_eq!(j.get("counters").unwrap().get("c").unwrap().as_f64(), Some(1.0));
+        let g = j.get("gauges").unwrap().get("g").unwrap();
+        assert_eq!(g.get("peak").unwrap().as_f64(), Some(7.0));
+        let h = j.get("histograms").unwrap().get("h").unwrap();
+        assert_eq!(h.get("count").unwrap().as_f64(), Some(1.0));
+        assert_eq!(h.get("p99").unwrap().as_f64(), Some(4.0));
+    }
+
+    #[test]
+    fn merged_exposition_has_one_type_line_per_family() {
+        let mk = |req: f64| {
+            let mut r = Registry::default();
+            r.counter("serve.requests").add(req);
+            r.gauge("kv.live_fraction").set(0.25);
+            r.histogram("serve.ttft_ms").record(req);
+            r.to_json()
+        };
+        let blocks = vec![("0".to_string(), mk(3.0)), ("1".to_string(), mk(5.0))];
+        let text = prometheus_merge("replica", &blocks);
+        assert_eq!(text.matches("# TYPE serve_requests counter").count(), 1);
+        assert!(text.contains("serve_requests{replica=\"0\"} 3"));
+        assert!(text.contains("serve_requests{replica=\"1\"} 5"));
+        assert_eq!(text.matches("# TYPE serve_ttft_ms summary").count(), 1);
+        assert!(text.contains("serve_ttft_ms{replica=\"1\",quantile=\"0.5\"} 5"));
+        assert!(text.contains("serve_ttft_ms_count{replica=\"0\"} 1"));
+        assert!(text.contains("kv_live_fraction_peak{replica=\"0\"} 0.25"));
     }
 
     #[test]

@@ -60,18 +60,19 @@ use std::collections::HashMap;
 use std::net::TcpListener;
 use std::sync::mpsc;
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use crate::config::{ClusterConfig, EngineConfig};
 use crate::engine::{CompletedRequest, Engine, GenRequest, Session, SimEngine};
-use crate::metrics::Registry;
+use crate::metrics::{prometheus_merge, Registry};
+use crate::trace::{Stamped, TraceEvent, Tracer};
 use crate::util::Json;
 
 use super::protocol::{render_response, ServeRequest, ServeResponse};
 use super::router::{first_alive, mask_dead, ReplicaLoad, Router};
-use super::{response_from, Dispatch};
+use super::{response_from, write_trace_dump, Dispatch, ServeOpts};
 
 /// What the cluster needs from an engine replica. Implemented by
 /// [`EngineBackend`] (the real PJRT engine) and by
@@ -83,6 +84,9 @@ use super::{response_from, Dispatch};
 pub trait Backend {
     /// Tokenize, validate, and enqueue a request; returns its ticket.
     fn submit(&mut self, req: &GenRequest) -> Result<u64>;
+    /// [`submit`](Self::submit) recording `trace_id` as the
+    /// client-visible request id on the backend's flight recorder.
+    fn submit_traced(&mut self, req: &GenRequest, trace_id: Option<u64>) -> Result<u64>;
     /// Advance one scheduler tick; returns finished requests.
     fn tick(&mut self) -> Result<Vec<CompletedRequest>>;
     /// Nothing running or queued.
@@ -104,6 +108,19 @@ pub trait Backend {
     fn allocator_name(&self) -> &'static str;
     /// Metrics snapshot for the stats endpoint.
     fn metrics_report(&self) -> String;
+    /// Structured metrics snapshot
+    /// ([`Registry::to_json`](crate::metrics::Registry::to_json)) —
+    /// the router merges these into one Prometheus exposition.
+    fn metrics_json(&self) -> Json;
+    /// Full-model KV bytes read per attended token (prices `reads`
+    /// into `kv_read_bytes` on responses).
+    fn kv_bytes_per_token(&self) -> f64;
+    /// Whether the backend's flight recorder is enabled.
+    fn tracing_enabled(&self) -> bool;
+    /// Retained flight-recorder events, oldest first.
+    fn trace_events(&self) -> Vec<Stamped>;
+    /// Retained events of one client-visible request id.
+    fn trace_events_for(&self, req: u64) -> Vec<Stamped>;
 }
 
 /// The real engine behind the [`Backend`] trait: an [`Engine`] plus
@@ -125,6 +142,9 @@ impl EngineBackend {
 impl Backend for EngineBackend {
     fn submit(&mut self, req: &GenRequest) -> Result<u64> {
         self.engine.submit(&mut self.session, req)
+    }
+    fn submit_traced(&mut self, req: &GenRequest, trace_id: Option<u64>) -> Result<u64> {
+        self.engine.submit_traced(&mut self.session, req, trace_id)
     }
     fn tick(&mut self) -> Result<Vec<CompletedRequest>> {
         self.engine.tick(&mut self.session)
@@ -153,11 +173,29 @@ impl Backend for EngineBackend {
     fn metrics_report(&self) -> String {
         self.engine.metrics.report()
     }
+    fn metrics_json(&self) -> Json {
+        self.engine.metrics.to_json()
+    }
+    fn kv_bytes_per_token(&self) -> f64 {
+        self.engine.kv_bytes_per_token()
+    }
+    fn tracing_enabled(&self) -> bool {
+        self.engine.tracer().enabled()
+    }
+    fn trace_events(&self) -> Vec<Stamped> {
+        self.engine.tracer().events()
+    }
+    fn trace_events_for(&self, req: u64) -> Vec<Stamped> {
+        self.engine.trace_events_for(req)
+    }
 }
 
 impl Backend for SimEngine {
     fn submit(&mut self, req: &GenRequest) -> Result<u64> {
         SimEngine::submit(self, req)
+    }
+    fn submit_traced(&mut self, req: &GenRequest, trace_id: Option<u64>) -> Result<u64> {
+        SimEngine::submit_traced(self, req, trace_id)
     }
     fn tick(&mut self) -> Result<Vec<CompletedRequest>> {
         SimEngine::tick(self)
@@ -186,6 +224,21 @@ impl Backend for SimEngine {
     fn metrics_report(&self) -> String {
         self.metrics.report()
     }
+    fn metrics_json(&self) -> Json {
+        self.metrics.to_json()
+    }
+    fn kv_bytes_per_token(&self) -> f64 {
+        SimEngine::kv_bytes_per_token(self)
+    }
+    fn tracing_enabled(&self) -> bool {
+        self.tracer().enabled()
+    }
+    fn trace_events(&self) -> Vec<Stamped> {
+        self.tracer().events()
+    }
+    fn trace_events_for(&self, req: u64) -> Vec<Stamped> {
+        SimEngine::trace_events_for(self, req)
+    }
 }
 
 /// Router-thread inbox.
@@ -205,6 +258,9 @@ enum RouterMsg {
     Dead { replica: usize },
     /// Aggregate stats request.
     Stats(mpsc::Sender<String>),
+    /// Per-request flight-recorder query (`{"cmd": "trace"}`): merged
+    /// across replicas plus the router's own routing decisions.
+    Trace(u64, mpsc::Sender<String>),
     Shutdown,
 }
 
@@ -216,6 +272,11 @@ enum ReplicaMsg {
     Steal { max: usize, to: usize },
     /// Per-replica stats block.
     Stats(mpsc::Sender<String>),
+    /// Per-request flight-recorder slice.
+    Trace(u64, mpsc::Sender<String>),
+    /// Full observability dump (all trace events + structured metrics)
+    /// for the shutdown `--trace-out` / `--prom-out` exports.
+    Dump(mpsc::Sender<String>),
     Shutdown,
 }
 
@@ -243,6 +304,22 @@ impl Cluster {
     /// backend via `factory`, which runs *inside* the thread) plus the
     /// router thread.
     pub fn start<B, F>(ccfg: ClusterConfig, factory: F) -> Self
+    where
+        B: Backend + 'static,
+        F: Fn(usize) -> Result<B> + Clone + Send + 'static,
+    {
+        Self::start_with(ccfg, 0, ServeOpts::default(), factory)
+    }
+
+    /// [`start`](Self::start) with a router-side flight recorder of
+    /// `trace_events` capacity (0 = disabled) and observability dumps
+    /// written when the cluster shuts down.
+    pub fn start_with<B, F>(
+        ccfg: ClusterConfig,
+        trace_events: usize,
+        opts: ServeOpts,
+        factory: F,
+    ) -> Self
     where
         B: Backend + 'static,
         F: Fn(usize) -> Result<B> + Clone + Send + 'static,
@@ -280,6 +357,24 @@ impl Cluster {
                                             .to_string(),
                                     );
                                 }
+                                ReplicaMsg::Trace(_, reply) => {
+                                    let _ = reply.send(
+                                        Json::obj()
+                                            .set("replica", i as u64)
+                                            .set("dead", true)
+                                            .set("tracing", false)
+                                            .set("events", Json::Arr(Vec::new()))
+                                            .to_string(),
+                                    );
+                                }
+                                ReplicaMsg::Dump(reply) => {
+                                    let _ = reply.send(
+                                        Json::obj()
+                                            .set("replica", i as u64)
+                                            .set("dead", true)
+                                            .to_string(),
+                                    );
+                                }
                                 ReplicaMsg::Steal { .. } => {}
                                 ReplicaMsg::Shutdown => break,
                             }
@@ -289,8 +384,9 @@ impl Cluster {
             }));
         }
         let router = Router::new(n, ccfg.routing);
+        let tracer = Tracer::ring(trace_events);
         let router_thread = std::thread::spawn(move || {
-            router_loop(router, ccfg, replica_txs, rrx);
+            router_loop(router, ccfg, replica_txs, rrx, tracer, opts);
         });
         Self {
             tx: rtx,
@@ -324,6 +420,17 @@ impl Cluster {
         let line = rrx
             .recv()
             .map_err(|_| anyhow!("cluster dropped the stats request"))?;
+        Json::parse(&line)
+    }
+
+    /// Per-request flight-recorder events, merged across replicas and
+    /// the router, parsed (the `{"cmd": "trace"}` payload).
+    pub fn trace(&self, request_id: u64) -> Result<Json> {
+        let (rtx, rrx) = mpsc::channel();
+        let _ = self.tx.send(RouterMsg::Trace(request_id, rtx));
+        let line = rrx
+            .recv()
+            .map_err(|_| anyhow!("cluster dropped the trace request"))?;
         Json::parse(&line)
     }
 
@@ -364,6 +471,9 @@ impl Dispatch for ClusterDispatch {
     fn stats(&self, reply: mpsc::Sender<String>) {
         let _ = self.0.send(RouterMsg::Stats(reply));
     }
+    fn trace(&self, request_id: u64, reply: mpsc::Sender<String>) {
+        let _ = self.0.send(RouterMsg::Trace(request_id, reply));
+    }
     fn shutdown(&self) {
         let _ = self.0.send(RouterMsg::Shutdown);
     }
@@ -373,13 +483,29 @@ impl Dispatch for ClusterDispatch {
 /// shutdown command arrives. Every replica loads the same
 /// `EngineConfig` (its own executors, cache, and prefix index).
 pub fn serve_cluster(cfg: EngineConfig, ccfg: ClusterConfig, addr: &str) -> Result<()> {
+    serve_cluster_with(cfg, ccfg, addr, ServeOpts::default())
+}
+
+/// [`serve_cluster`] with observability dumps written at shutdown: the
+/// trace file groups events per replica (pid = replica id, the router
+/// as the extra last pid) and the Prometheus file is a merged
+/// exposition labelled `replica="i"` / `replica="router"`.
+pub fn serve_cluster_with(
+    cfg: EngineConfig,
+    ccfg: ClusterConfig,
+    addr: &str,
+    opts: ServeOpts,
+) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
     crate::info!(
         "serving on {addr} with {} replicas ({} routing)",
         ccfg.replicas,
         ccfg.routing.name()
     );
-    let cluster = Cluster::start(ccfg, move |_i| EngineBackend::new(cfg.clone()));
+    let trace_events = cfg.trace_events;
+    let cluster = Cluster::start_with(ccfg, trace_events, opts, move |_i| {
+        EngineBackend::new(cfg.clone())
+    });
     let acceptor = super::spawn_acceptor(listener, cluster.dispatch());
     cluster.wait();
     drop(acceptor);
@@ -461,6 +587,7 @@ fn replica_loop<B: Backend>(
                             backend.kv_dtype_name(),
                             backend.allocator_name(),
                             replica,
+                            backend.kv_bytes_per_token(),
                         );
                         let _ = reply.send(render_response(&resp));
                     }
@@ -496,7 +623,7 @@ fn handle_replica_msg<B: Backend>(
 ) -> bool {
     match msg {
         ReplicaMsg::Request(req, reply) => {
-            match backend.submit(&gen_of(&req)) {
+            match backend.submit_traced(&gen_of(&req), Some(req.id)) {
                 Ok(ticket) => {
                     inflight.insert(ticket, (req, reply));
                 }
@@ -525,6 +652,34 @@ fn handle_replica_msg<B: Backend>(
                     .set("kv_dtype", backend.kv_dtype_name())
                     .set("allocator", backend.allocator_name())
                     .set("metrics", backend.metrics_report())
+                    .set("metrics_json", backend.metrics_json())
+                    .to_string(),
+            );
+            false
+        }
+        ReplicaMsg::Trace(rid, reply) => {
+            let events: Vec<Json> = backend
+                .trace_events_for(rid)
+                .iter()
+                .map(Stamped::to_json)
+                .collect();
+            let _ = reply.send(
+                Json::obj()
+                    .set("replica", replica as u64)
+                    .set("tracing", backend.tracing_enabled())
+                    .set("events", Json::Arr(events))
+                    .to_string(),
+            );
+            false
+        }
+        ReplicaMsg::Dump(reply) => {
+            let events: Vec<Json> =
+                backend.trace_events().iter().map(Stamped::to_json).collect();
+            let _ = reply.send(
+                Json::obj()
+                    .set("replica", replica as u64)
+                    .set("events", Json::Arr(events))
+                    .set("metrics_json", backend.metrics_json())
                     .to_string(),
             );
             false
@@ -542,12 +697,16 @@ fn router_loop(
     ccfg: ClusterConfig,
     replicas: Vec<mpsc::Sender<ReplicaMsg>>,
     rx: mpsc::Receiver<RouterMsg>,
+    mut tracer: Tracer,
+    opts: ServeOpts,
 ) {
     let n = replicas.len();
     let mut loads = vec![ReplicaLoad::default(); n];
     let mut dead = vec![false; n];
     let mut metrics = Registry::default();
     metrics.gauge("cluster.replicas").set(n as f64);
+    // the router's trace clock: wall ns from its own start anchor
+    let epoch = Instant::now();
 
     // deliver a request to `replica`, bumping its load optimistically
     // so routing between status updates sees the pressure
@@ -588,6 +747,20 @@ fn router_loop(
                         .counter("cluster.shadow_hit_bytes")
                         .add(d.shadow_hit as f64);
                 }
+                if tracer.enabled() {
+                    let ts = epoch.elapsed().as_nanos() as u64;
+                    let ev = if target == d.replica {
+                        d.trace_event(req.id)
+                    } else {
+                        // dead-replica fallback: the shadow hit did not land
+                        TraceEvent::Route {
+                            req: req.id,
+                            replica: target,
+                            shadow_hit: 0,
+                        }
+                    };
+                    tracer.emit(ts, ev);
+                }
                 router.note_routed(target, &req.prompt);
                 deliver(target, req, reply, &mut loads, &mut metrics);
             }
@@ -614,6 +787,17 @@ fn router_loop(
                         }
                     }
                 }
+                if tracer.enabled() {
+                    let ts = epoch.elapsed().as_nanos() as u64;
+                    tracer.emit(
+                        ts,
+                        TraceEvent::Route {
+                            req: req.id,
+                            replica: target,
+                            shadow_hit: 0,
+                        },
+                    );
+                }
                 router.note_routed(target, &req.prompt);
                 deliver(target, req, reply, &mut loads, &mut metrics);
             }
@@ -634,6 +818,10 @@ fn router_loop(
                     mask_dead(&mut view, &dead);
                     if let Some(plan) = router.steal_plan(&view) {
                         metrics.counter("cluster.steal_ops").inc();
+                        if tracer.enabled() {
+                            let ts = epoch.elapsed().as_nanos() as u64;
+                            tracer.emit(ts, plan.trace_event());
+                        }
                         // optimistic: don't re-plan this donor until a
                         // fresh (post-drain) status arrives; a spurious
                         // duplicate steal is a harmless no-op drain
@@ -648,6 +836,10 @@ fn router_loop(
             RouterMsg::Dead { replica } => {
                 dead[replica] = true;
                 metrics.counter("cluster.replicas_dead").inc();
+                if tracer.enabled() {
+                    let ts = epoch.elapsed().as_nanos() as u64;
+                    tracer.emit(ts, TraceEvent::ReplicaDead { replica });
+                }
             }
             RouterMsg::Stats(reply) => {
                 let mut blocks: Vec<Json> = Vec::new();
@@ -668,20 +860,114 @@ fn router_loop(
                         }
                     }
                 }
+                // one valid merged exposition: replica-labelled samples
+                // from every live block plus the router's cluster.*
+                let mut prom_blocks: Vec<(String, Json)> = Vec::new();
+                for b in &blocks {
+                    let (Some(r), Some(mj)) = (
+                        b.get("replica").and_then(Json::as_usize),
+                        b.get("metrics_json"),
+                    ) else {
+                        continue;
+                    };
+                    prom_blocks.push((r.to_string(), mj.clone()));
+                }
+                prom_blocks.push(("router".to_string(), metrics.to_json()));
                 let _ = reply.send(
                     Json::obj()
                         .set("replicas", n as u64)
                         .set("routing", ccfg.routing.name())
                         .set("cluster_metrics", metrics.report())
+                        .set("cluster_metrics_json", metrics.to_json())
+                        .set("prometheus", prometheus_merge("replica", &prom_blocks))
                         .set("replica_stats", Json::Arr(blocks))
                         .to_string(),
                 );
             }
-            RouterMsg::Shutdown => break,
+            RouterMsg::Trace(rid, reply) => {
+                let mut tracing = tracer.enabled();
+                let mut events: Vec<Json> = Vec::new();
+                for (i, tx) in replicas.iter().enumerate() {
+                    if dead[i] {
+                        continue;
+                    }
+                    let (rtx, rrx) = mpsc::channel();
+                    if tx.send(ReplicaMsg::Trace(rid, rtx)).is_err() {
+                        continue;
+                    }
+                    let Ok(s) = rrx.recv_timeout(Duration::from_secs(5)) else {
+                        continue;
+                    };
+                    let Ok(j) = Json::parse(&s) else { continue };
+                    if j.get("tracing").and_then(Json::as_bool) == Some(true) {
+                        tracing = true;
+                    }
+                    if let Some(arr) = j.get("events").and_then(Json::as_arr) {
+                        events.extend(arr.iter().cloned());
+                    }
+                }
+                events.extend(tracer.events_for(rid).iter().map(Stamped::to_json));
+                let _ = reply.send(
+                    Json::obj()
+                        .set("request_id", rid)
+                        .set("tracing", tracing)
+                        .set("events", Json::Arr(events))
+                        .to_string(),
+                );
+            }
+            RouterMsg::Shutdown => {
+                write_cluster_dumps(&opts, &tracer, &metrics, &replicas, &dead);
+                break;
+            }
         }
     }
     for tx in &replicas {
         let _ = tx.send(ReplicaMsg::Shutdown);
+    }
+}
+
+/// Collect every live replica's flight recorder + metrics snapshot and
+/// write the `--trace-out` (pid = replica id; the router as the extra
+/// last pid) and `--prom-out` (merged exposition) files.
+fn write_cluster_dumps(
+    opts: &ServeOpts,
+    tracer: &Tracer,
+    metrics: &Registry,
+    replicas: &[mpsc::Sender<ReplicaMsg>],
+    dead: &[bool],
+) {
+    if opts.trace_out.is_none() && opts.prom_out.is_none() {
+        return;
+    }
+    let mut groups: Vec<(usize, Vec<Stamped>)> = Vec::new();
+    let mut prom_blocks: Vec<(String, Json)> = Vec::new();
+    for (i, tx) in replicas.iter().enumerate() {
+        if dead[i] {
+            continue;
+        }
+        let (rtx, rrx) = mpsc::channel();
+        if tx.send(ReplicaMsg::Dump(rtx)).is_err() {
+            continue;
+        }
+        let Ok(s) = rrx.recv_timeout(Duration::from_secs(5)) else {
+            continue;
+        };
+        let Ok(j) = Json::parse(&s) else { continue };
+        if let Some(arr) = j.get("events").and_then(Json::as_arr) {
+            groups.push((i, arr.iter().filter_map(Stamped::from_json).collect()));
+        }
+        if let Some(mj) = j.get("metrics_json") {
+            prom_blocks.push((i.to_string(), mj.clone()));
+        }
+    }
+    groups.push((replicas.len(), tracer.events()));
+    write_trace_dump(&opts.trace_out, &groups);
+    if let Some(path) = &opts.prom_out {
+        prom_blocks.push(("router".to_string(), metrics.to_json()));
+        match std::fs::write(path, prometheus_merge("replica", &prom_blocks)) {
+            Ok(()) => crate::info!("wrote Prometheus exposition to {}", path.display()),
+            Err(e) => crate::warn_log!("failed to write {}: {e}", path.display()),
+        }
     }
 }
 
@@ -723,6 +1009,50 @@ mod tests {
         assert_eq!(stats.get("replicas").unwrap().as_usize(), Some(2));
         let m = stats.get("cluster_metrics").unwrap().as_str().unwrap();
         assert!(m.contains("cluster.requests"));
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn traced_cluster_prices_reads_and_merges_trace_events() {
+        let ccfg = ClusterConfig {
+            replicas: 2,
+            routing: RoutingPolicy::LeastLoaded,
+            steal: true,
+        };
+        let cluster = Cluster::start_with(ccfg, 4096, ServeOpts::default(), |_| {
+            Ok(SimEngine::new(SimEngineConfig {
+                trace_events: 4096,
+                ..Default::default()
+            }))
+        });
+        let j = cluster
+            .call_blocking(sreq(71, "Q:1+2=?|T:", 3))
+            .expect("response");
+        let reads = j.get("reads").unwrap().as_f64().unwrap();
+        let bytes = j.get("kv_read_bytes").unwrap().as_f64().unwrap();
+        assert!(reads > 0.0 && bytes > reads, "bytes price tokens: {bytes}");
+        // the trace view merges the serving replica's lifecycle events
+        // with the router's route decision
+        let t = cluster.trace(71).expect("trace");
+        assert_eq!(t.get("tracing").unwrap().as_bool(), Some(true));
+        let names: Vec<&str> = t
+            .get("events")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|e| e.get("event").unwrap().as_str().unwrap())
+            .collect();
+        for expect in ["submit", "admit", "first_token", "finish", "route"] {
+            assert!(names.contains(&expect), "missing {expect} in {names:?}");
+        }
+        // stats carries one merged exposition (single TYPE line per
+        // family even with two replicas reporting the same metrics)
+        let stats = cluster.stats().expect("stats");
+        let prom = stats.get("prometheus").unwrap().as_str().unwrap();
+        assert_eq!(prom.matches("# TYPE serve_requests counter").count(), 1);
+        assert!(prom.contains("serve_requests{replica=\""));
+        assert!(prom.contains("cluster_requests{replica=\"router\"}"));
         cluster.shutdown();
     }
 

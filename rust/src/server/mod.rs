@@ -7,7 +7,10 @@
 //! Response: {"id": 1, "texts": [...], "answer": "3",
 //!            "reads": 1234.5, "peak_tokens": 88.0, "latency_ms": 42.1,
 //!            "queue_ms": 1.3, "ttft_ms": 9.8, "tokens_per_s": 210.0}
-//! Control:  {"cmd": "stats"} → metrics dump; {"cmd": "shutdown"}.
+//! Control:  {"cmd": "stats"} → metrics dump (human `metrics` text,
+//!           structured `metrics_json`, Prometheus `prometheus` text);
+//!           {"cmd": "trace", "request_id": N} → flight-recorder
+//!           events for one request; {"cmd": "shutdown"}.
 //!
 //! Networking runs on std threads: an acceptor thread per listener and
 //! one engine thread owning the (non-Send) PJRT state; requests flow
@@ -36,12 +39,14 @@ pub mod router;
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
 use std::sync::mpsc;
 
 use anyhow::Result;
 
 use crate::config::EngineConfig;
 use crate::engine::{majority_vote, CompletedRequest, Engine, GenRequest, Session};
+use crate::trace::{chrome_trace_json, Stamped};
 use crate::util::Json;
 
 pub use cluster::{serve_cluster, Backend, Cluster, EngineBackend};
@@ -51,7 +56,18 @@ pub use router::{first_alive, mask_dead, ReplicaLoad, RouteDecision, Router, Ste
 enum Msg {
     Request(ServeRequest, mpsc::Sender<String>),
     Stats(mpsc::Sender<String>),
+    Trace(u64, mpsc::Sender<String>),
     Shutdown,
+}
+
+/// Observability outputs written when the server shuts down (the
+/// `--trace-out` / `--prom-out` CLI flags; see docs/OBSERVABILITY.md).
+#[derive(Clone, Debug, Default)]
+pub struct ServeOpts {
+    /// Write a Chrome trace-event JSON dump (Perfetto-loadable) here.
+    pub trace_out: Option<PathBuf>,
+    /// Write a Prometheus text exposition dump here.
+    pub prom_out: Option<PathBuf>,
 }
 
 /// How the client-facing acceptor hands parsed protocol events to a
@@ -61,6 +77,7 @@ enum Msg {
 pub(crate) trait Dispatch: Clone + Send + 'static {
     fn request(&self, req: ServeRequest, reply: mpsc::Sender<String>);
     fn stats(&self, reply: mpsc::Sender<String>);
+    fn trace(&self, request_id: u64, reply: mpsc::Sender<String>);
     fn shutdown(&self);
 }
 
@@ -74,6 +91,9 @@ impl Dispatch for EngineDispatch {
     }
     fn stats(&self, reply: mpsc::Sender<String>) {
         let _ = self.0.send(Msg::Stats(reply));
+    }
+    fn trace(&self, request_id: u64, reply: mpsc::Sender<String>) {
+        let _ = self.0.send(Msg::Trace(request_id, reply));
     }
     fn shutdown(&self) {
         let _ = self.0.send(Msg::Shutdown);
@@ -89,6 +109,11 @@ struct Inflight {
 /// Run the server until a shutdown command arrives. Binds `addr`
 /// (e.g. "127.0.0.1:7333").
 pub fn serve(cfg: EngineConfig, addr: &str) -> Result<()> {
+    serve_with(cfg, addr, ServeOpts::default())
+}
+
+/// [`serve`] with observability outputs dumped at shutdown.
+pub fn serve_with(cfg: EngineConfig, addr: &str, opts: ServeOpts) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
     crate::info!("serving on {addr}");
     let (tx, rx) = mpsc::channel::<Msg>();
@@ -142,6 +167,7 @@ pub fn serve(cfg: EngineConfig, addr: &str) -> Result<()> {
                             engine.cfg.kv_dtype.name(),
                             engine.cfg.allocator.name(),
                             0,
+                            engine.kv_bytes_per_token(),
                         );
                         let _ = inf.reply.send(render_response(&resp));
                     }
@@ -157,8 +183,36 @@ pub fn serve(cfg: EngineConfig, addr: &str) -> Result<()> {
     }
     // shutdown: requests still in flight are answered, not dropped
     reply_all_errors(&mut inflight, "server shutting down");
+    write_observability_dumps(&opts, engine.tracer().events(), &engine.metrics);
     drop(acceptor);
     Ok(())
+}
+
+/// Dump the flight recorder (Perfetto JSON) and a Prometheus text
+/// exposition to the paths in `opts`, if any. Failures are logged, not
+/// fatal — the serving work already succeeded. Shared with the cluster
+/// shutdown path, which passes a merged multi-replica event list.
+pub(crate) fn write_observability_dumps(
+    opts: &ServeOpts,
+    trace_groups: Vec<Stamped>,
+    metrics: &crate::metrics::Registry,
+) {
+    write_trace_dump(&opts.trace_out, &[(0, trace_groups)]);
+    if let Some(path) = &opts.prom_out {
+        match std::fs::write(path, metrics.prometheus(None)) {
+            Ok(()) => crate::info!("wrote Prometheus exposition to {}", path.display()),
+            Err(e) => crate::warn_log!("failed to write {}: {e}", path.display()),
+        }
+    }
+}
+
+/// Dump Chrome trace-event JSON for per-replica event groups.
+pub(crate) fn write_trace_dump(out: &Option<PathBuf>, groups: &[(usize, Vec<Stamped>)]) {
+    let Some(path) = out else { return };
+    match std::fs::write(path, chrome_trace_json(groups)) {
+        Ok(()) => crate::info!("wrote trace-event dump to {}", path.display()),
+        Err(e) => crate::warn_log!("failed to write {}: {e}", path.display()),
+    }
 }
 
 /// Answer every in-flight request with an error payload (used on
@@ -186,7 +240,7 @@ fn handle_msg(
                 temperature: req.temperature,
                 seed: req.seed,
             };
-            match engine.submit(session, &gen) {
+            match engine.submit_traced(session, &gen, Some(req.id)) {
                 Ok(ticket) => {
                     inflight.insert(ticket, Inflight { req, reply });
                 }
@@ -201,16 +255,38 @@ fn handle_msg(
             let _ = reply.send(
                 Json::obj()
                     .set("metrics", engine.metrics.report())
+                    .set("metrics_json", engine.metrics.to_json())
+                    .set("prometheus", engine.metrics.prometheus(None))
                     .set("active_lanes", session.active_lanes())
                     .set("queue_depth", session.queue_depth())
                     .set("kv_dtype", engine.cfg.kv_dtype.name())
                     .set("allocator", engine.cfg.allocator.name())
+                    .set("trace_recorded", engine.tracer().recorded())
+                    .set("trace_dropped", engine.tracer().dropped())
                     .to_string(),
             );
             false
         }
+        Msg::Trace(rid, reply) => {
+            let _ = reply.send(trace_response(
+                rid,
+                engine.tracer().enabled(),
+                engine.trace_events_for(rid),
+            ));
+            false
+        }
         Msg::Shutdown => true,
     }
+}
+
+/// Render the `{"cmd": "trace"}` reply for one request's events.
+/// Shared with the cluster router, which merges per-replica slices.
+pub(crate) fn trace_response(rid: u64, tracing: bool, events: Vec<Stamped>) -> String {
+    Json::obj()
+        .set("request_id", rid)
+        .set("tracing", tracing)
+        .set("events", Json::Arr(events.iter().map(Stamped::to_json).collect()))
+        .to_string()
 }
 
 /// Build the response for a completed request. Shared with the
@@ -221,6 +297,7 @@ pub(crate) fn response_from(
     kv_dtype_name: &str,
     allocator_name: &str,
     replica_id: usize,
+    kv_bytes_per_token: f64,
 ) -> ServeResponse {
     let res = &done.result;
     let texts: Vec<String> = res.chains.iter().map(|c| c.text.clone()).collect();
@@ -236,6 +313,7 @@ pub(crate) fn response_from(
         texts,
         answer: vote.answer,
         reads: res.total_reads(),
+        kv_read_bytes: res.total_reads() * kv_bytes_per_token,
         peak_tokens: res.total_peak_tokens(),
         latency_ms: 0.0,
         queue_ms: 0.0,
@@ -298,6 +376,18 @@ fn handle_client<D: Dispatch>(stream: TcpStream, dispatch: D) -> Result<()> {
                 "stats" => {
                     let (rtx, rrx) = mpsc::channel();
                     dispatch.stats(rtx);
+                    if let Ok(s) = rrx.recv() {
+                        writeln!(writer, "{s}")?;
+                    }
+                    continue;
+                }
+                "trace" => {
+                    let rid = json
+                        .get("request_id")
+                        .and_then(Json::as_i64)
+                        .unwrap_or(0) as u64;
+                    let (rtx, rrx) = mpsc::channel();
+                    dispatch.trace(rid, rtx);
                     if let Ok(s) = rrx.recv() {
                         writeln!(writer, "{s}")?;
                     }

@@ -40,6 +40,11 @@ pub struct ServeResponse {
     pub answer: Option<String>,
     /// Total KV reads across chains (token units).
     pub reads: f64,
+    /// `reads` priced in bytes: token reads × full-model KV bytes per
+    /// token under the serving dtype — the denominator of the paper's
+    /// accuracy-per-memory-read frontier, computed server-side so
+    /// clients never re-derive geometry (see docs/OBSERVABILITY.md).
+    pub kv_read_bytes: f64,
     /// Summed peak live tokens across concurrent chains.
     pub peak_tokens: f64,
     /// End-to-end latency: submission to last chain finished.
@@ -82,6 +87,7 @@ impl ServeResponse {
             texts: Vec::new(),
             answer: None,
             reads: 0.0,
+            kv_read_bytes: 0.0,
             peak_tokens: 0.0,
             latency_ms: 0.0,
             queue_ms: 0.0,
@@ -141,6 +147,7 @@ pub fn render_response(r: &ServeResponse) -> String {
         None => j.set("answer", Json::Null),
     };
     j.set("reads", r.reads)
+        .set("kv_read_bytes", r.kv_read_bytes)
         .set("peak_tokens", r.peak_tokens)
         .set("latency_ms", r.latency_ms)
         .set("queue_ms", r.queue_ms)
@@ -193,6 +200,7 @@ mod tests {
             texts: vec!["A:4\n".into()],
             answer: Some("4".into()),
             reads: 120.5,
+            kv_read_bytes: 120.5 * 256.0,
             peak_tokens: 33.0,
             latency_ms: 12.0,
             queue_ms: 1.5,
@@ -209,6 +217,7 @@ mod tests {
         let j = Json::parse(&s).unwrap();
         assert_eq!(j.get("answer").unwrap().as_str(), Some("4"));
         assert_eq!(j.get("reads").unwrap().as_f64(), Some(120.5));
+        assert_eq!(j.get("kv_read_bytes").unwrap().as_f64(), Some(30848.0));
         assert_eq!(j.get("queue_ms").unwrap().as_f64(), Some(1.5));
         assert_eq!(j.get("ttft_ms").unwrap().as_f64(), Some(4.0));
         assert_eq!(j.get("tokens_per_s").unwrap().as_f64(), Some(80.0));

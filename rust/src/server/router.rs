@@ -83,6 +83,18 @@ pub struct RouteDecision {
     pub shadow_hit: usize,
 }
 
+impl RouteDecision {
+    /// The decision as a flight-recorder event for request `req`
+    /// (emitted by the cluster router when tracing is enabled).
+    pub fn trace_event(&self, req: u64) -> crate::trace::TraceEvent {
+        crate::trace::TraceEvent::Route {
+            req,
+            replica: self.replica,
+            shadow_hit: self.shadow_hit,
+        }
+    }
+}
+
 /// A planned migration of queued requests (see module docs).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct StealPlan {
@@ -92,6 +104,19 @@ pub struct StealPlan {
     pub to: usize,
     /// Upper bound on requests to migrate in this round.
     pub max_requests: usize,
+}
+
+impl StealPlan {
+    /// The plan as a flight-recorder event. `moved` records the drain
+    /// cap, not the realized count — the donor reports actual drains
+    /// through the requeue path's route events.
+    pub fn trace_event(&self) -> crate::trace::TraceEvent {
+        crate::trace::TraceEvent::Steal {
+            from: self.from,
+            to: self.to,
+            moved: self.max_requests,
+        }
+    }
 }
 
 /// The admission router (see module docs).

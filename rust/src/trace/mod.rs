@@ -1,0 +1,727 @@
+//! Structured tracing + flight recorder for the serving path.
+//!
+//! A [`Tracer`] is a fixed-capacity ring buffer of [`TraceEvent`]s,
+//! each stamped with an integer-nanosecond timestamp and a monotone
+//! sequence number. The timestamp is **caller-supplied** — the live
+//! engine stamps wall time from a process-local anchor, [`SimEngine`]
+//! stamps its logical tick counter, and the timeflow simulator stamps
+//! sim time — so a deterministic producer yields a bit-identical
+//! event stream on every same-seed run (the property CI asserts).
+//!
+//! Design contract (see `docs/OBSERVABILITY.md`):
+//!
+//! * **Zero-cost when disabled.** [`Tracer::disabled`] has capacity 0;
+//!   [`Tracer::emit`] early-returns before touching the event, and the
+//!   bench_serve traced-vs-untraced leg gates the overhead.
+//! * **Bounded when enabled.** The ring never reallocates past its
+//!   capacity; overwritten events are counted in
+//!   [`Tracer::dropped`], never silently lost.
+//! * **Per-request spans are derived, not stored.** The lifecycle
+//!   events (`Submit → Admit → FirstToken → Finish`) carry a request
+//!   id; [`RequestTrace::spans`] reconstructs the queue / prefill /
+//!   decode spans from their stamps, and the Chrome trace-event export
+//!   ([`chrome_trace_json`]) renders them as `"X"` duration events
+//!   (Perfetto-loadable), everything else as `"i"` instants.
+//!
+//! [`SimEngine`]: crate::engine::SimEngine
+
+use crate::util::Json;
+
+/// Default flight-recorder capacity when tracing is enabled without an
+/// explicit `--trace-events` override.
+pub const DEFAULT_CAPACITY: usize = 65_536;
+
+/// One structured event on the serving path. Request-scoped variants
+/// carry the request id ([`TraceEvent::request_id`]); cache and
+/// cluster variants are batch/decision records.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceEvent {
+    /// Request entered the admission queue.
+    Submit {
+        req: u64,
+        prompt_tokens: usize,
+        width: usize,
+        prefix_hit_tokens: usize,
+    },
+    /// A chain of the request was installed on `lane`.
+    Admit { req: u64, lane: usize },
+    /// First generated token left the engine.
+    FirstToken { req: u64 },
+    /// The request's chains were evicted back to the queue.
+    Preempt { req: u64, lane: usize },
+    /// Request finished; totals are final [`ChainStats`] aggregates.
+    ///
+    /// [`ChainStats`]: crate::engine::ChainStats
+    Finish {
+        req: u64,
+        gen_tokens: usize,
+        read_tokens: f64,
+        read_bytes: f64,
+    },
+    /// COW breaks that published page snapshots this tick.
+    CowPublish { lane: usize, pages: u64 },
+    /// Retained prefix pages restored into a lane at admission.
+    PrefixRestore { req: u64, lane: usize, pages: usize, tokens: usize },
+    /// Eviction/merge batch applied to a lane this tick, with the
+    /// number of distinct (layer, head) cells touched.
+    EvictBatch {
+        lane: usize,
+        evictions: u64,
+        merges: u64,
+        lh_touched: u64,
+    },
+    /// Pool payloads decoded into lane regions this tick
+    /// (dequant-on-upload; an exact memcpy for f32 payloads).
+    Dequant { lane: usize, pages: u64 },
+    /// Router decision: request delivered to `replica`;
+    /// `shadow_hit > 0` means affinity routing, not load.
+    Route { req: u64, replica: usize, shadow_hit: usize },
+    /// Work-steal round: queued requests migrated `from → to`.
+    Steal { from: usize, to: usize, moved: usize },
+    /// A replica died; the cluster keeps serving without it.
+    ReplicaDead { replica: usize },
+    /// A pipeline stage span (timeflow sim time): the event's stamp is
+    /// the stage *end*; `start_ns` closes the interval.
+    Stage {
+        req: u64,
+        replica: usize,
+        stage: &'static str,
+        start_ns: u64,
+    },
+}
+
+impl TraceEvent {
+    /// Stable event name (the Chrome `name` field and the taxonomy key
+    /// in `docs/OBSERVABILITY.md`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceEvent::Submit { .. } => "submit",
+            TraceEvent::Admit { .. } => "admit",
+            TraceEvent::FirstToken { .. } => "first_token",
+            TraceEvent::Preempt { .. } => "preempt",
+            TraceEvent::Finish { .. } => "finish",
+            TraceEvent::CowPublish { .. } => "cow_publish",
+            TraceEvent::PrefixRestore { .. } => "prefix_restore",
+            TraceEvent::EvictBatch { .. } => "evict_batch",
+            TraceEvent::Dequant { .. } => "dequant",
+            TraceEvent::Route { .. } => "route",
+            TraceEvent::Steal { .. } => "steal",
+            TraceEvent::ReplicaDead { .. } => "replica_dead",
+            TraceEvent::Stage { stage, .. } => stage,
+        }
+    }
+
+    /// Request id for request-scoped events.
+    pub fn request_id(&self) -> Option<u64> {
+        match *self {
+            TraceEvent::Submit { req, .. }
+            | TraceEvent::Admit { req, .. }
+            | TraceEvent::FirstToken { req }
+            | TraceEvent::Preempt { req, .. }
+            | TraceEvent::Finish { req, .. }
+            | TraceEvent::PrefixRestore { req, .. }
+            | TraceEvent::Route { req, .. }
+            | TraceEvent::Stage { req, .. } => Some(req),
+            _ => None,
+        }
+    }
+
+    /// Lane index for lane-scoped events (the Chrome `tid`).
+    pub fn lane(&self) -> Option<usize> {
+        match *self {
+            TraceEvent::Admit { lane, .. }
+            | TraceEvent::Preempt { lane, .. }
+            | TraceEvent::CowPublish { lane, .. }
+            | TraceEvent::PrefixRestore { lane, .. }
+            | TraceEvent::EvictBatch { lane, .. }
+            | TraceEvent::Dequant { lane, .. } => Some(lane),
+            _ => None,
+        }
+    }
+
+    /// Event payload as a JSON object (the Chrome `args` field and the
+    /// `{"cmd": "trace"}` response schema).
+    pub fn args_json(&self) -> Json {
+        match *self {
+            TraceEvent::Submit {
+                req,
+                prompt_tokens,
+                width,
+                prefix_hit_tokens,
+            } => Json::obj()
+                .set("req", req)
+                .set("prompt_tokens", prompt_tokens)
+                .set("width", width)
+                .set("prefix_hit_tokens", prefix_hit_tokens),
+            TraceEvent::Admit { req, lane } => {
+                Json::obj().set("req", req).set("lane", lane)
+            }
+            TraceEvent::FirstToken { req } => Json::obj().set("req", req),
+            TraceEvent::Preempt { req, lane } => {
+                Json::obj().set("req", req).set("lane", lane)
+            }
+            TraceEvent::Finish {
+                req,
+                gen_tokens,
+                read_tokens,
+                read_bytes,
+            } => Json::obj()
+                .set("req", req)
+                .set("gen_tokens", gen_tokens)
+                .set("kv_read_tokens", read_tokens)
+                .set("kv_read_bytes", read_bytes),
+            TraceEvent::CowPublish { lane, pages } => {
+                Json::obj().set("lane", lane).set("pages", pages)
+            }
+            TraceEvent::PrefixRestore {
+                req,
+                lane,
+                pages,
+                tokens,
+            } => Json::obj()
+                .set("req", req)
+                .set("lane", lane)
+                .set("pages", pages)
+                .set("tokens", tokens),
+            TraceEvent::EvictBatch {
+                lane,
+                evictions,
+                merges,
+                lh_touched,
+            } => Json::obj()
+                .set("lane", lane)
+                .set("evictions", evictions)
+                .set("merges", merges)
+                .set("lh_touched", lh_touched),
+            TraceEvent::Dequant { lane, pages } => {
+                Json::obj().set("lane", lane).set("pages", pages)
+            }
+            TraceEvent::Route {
+                req,
+                replica,
+                shadow_hit,
+            } => Json::obj()
+                .set("req", req)
+                .set("replica", replica)
+                .set("shadow_hit", shadow_hit),
+            TraceEvent::Steal { from, to, moved } => Json::obj()
+                .set("from", from)
+                .set("to", to)
+                .set("moved", moved),
+            TraceEvent::ReplicaDead { replica } => Json::obj().set("replica", replica),
+            TraceEvent::Stage {
+                req,
+                replica,
+                start_ns,
+                ..
+            } => Json::obj()
+                .set("req", req)
+                .set("replica", replica)
+                .set("start_ns", start_ns),
+        }
+    }
+
+    /// Parse the flat JSON form back into an event — the inverse of
+    /// [`Stamped::to_json`], used by the cluster router to merge
+    /// per-replica dump lines and by the schema round-trip tests.
+    /// Returns `None` for unknown names or missing fields.
+    pub fn from_json(name: &str, args: &Json) -> Option<TraceEvent> {
+        let u = |k: &str| args.get(k).and_then(Json::as_usize);
+        let id = |k: &str| args.get(k).and_then(Json::as_i64).map(|v| v as u64);
+        let f = |k: &str| args.get(k).and_then(|x| x.as_f64());
+        // stage spans reuse stage names ("decode", "dequant", …) that
+        // collide with instant-event names; `start_ns` is unique to them
+        if args.get("start_ns").is_some() {
+            return Some(TraceEvent::Stage {
+                req: id("req")?,
+                replica: u("replica")?,
+                stage: intern_stage(name)?,
+                start_ns: id("start_ns")?,
+            });
+        }
+        Some(match name {
+            "submit" => TraceEvent::Submit {
+                req: id("req")?,
+                prompt_tokens: u("prompt_tokens")?,
+                width: u("width")?,
+                prefix_hit_tokens: u("prefix_hit_tokens")?,
+            },
+            "admit" => TraceEvent::Admit {
+                req: id("req")?,
+                lane: u("lane")?,
+            },
+            "first_token" => TraceEvent::FirstToken { req: id("req")? },
+            "preempt" => TraceEvent::Preempt {
+                req: id("req")?,
+                lane: u("lane")?,
+            },
+            "finish" => TraceEvent::Finish {
+                req: id("req")?,
+                gen_tokens: u("gen_tokens")?,
+                read_tokens: f("kv_read_tokens")?,
+                read_bytes: f("kv_read_bytes")?,
+            },
+            "cow_publish" => TraceEvent::CowPublish {
+                lane: u("lane")?,
+                pages: id("pages")?,
+            },
+            "prefix_restore" => TraceEvent::PrefixRestore {
+                req: id("req")?,
+                lane: u("lane")?,
+                pages: u("pages")?,
+                tokens: u("tokens")?,
+            },
+            "evict_batch" => TraceEvent::EvictBatch {
+                lane: u("lane")?,
+                evictions: id("evictions")?,
+                merges: id("merges")?,
+                lh_touched: id("lh_touched")?,
+            },
+            "dequant" => TraceEvent::Dequant {
+                lane: u("lane")?,
+                pages: id("pages")?,
+            },
+            "route" => TraceEvent::Route {
+                req: id("req")?,
+                replica: u("replica")?,
+                shadow_hit: u("shadow_hit")?,
+            },
+            "steal" => TraceEvent::Steal {
+                from: u("from")?,
+                to: u("to")?,
+                moved: u("moved")?,
+            },
+            "replica_dead" => TraceEvent::ReplicaDead {
+                replica: u("replica")?,
+            },
+            _ => return None,
+        })
+    }
+}
+
+/// Map a parsed stage name back to the `&'static str` the timeflow
+/// simulator emits (a closed set — see `Stage::name`).
+fn intern_stage(name: &str) -> Option<&'static str> {
+    ["dequant", "prefill", "first_token", "decode", "queue"]
+        .into_iter()
+        .find(|s| *s == name)
+}
+
+/// A [`TraceEvent`] with its stamp: integer nanoseconds (wall, logical
+/// tick, or sim time — the producer's clock) plus a monotone sequence
+/// number that makes ordering total even within one stamp.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Stamped {
+    pub ts_ns: u64,
+    pub seq: u64,
+    pub event: TraceEvent,
+}
+
+impl Stamped {
+    /// Flat JSON form (`{"cmd": "trace"}` responses and tests).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("ts_ns", self.ts_ns)
+            .set("seq", self.seq)
+            .set("event", self.event.name())
+            .set("args", self.event.args_json())
+    }
+
+    /// Inverse of [`Stamped::to_json`].
+    pub fn from_json(j: &Json) -> Option<Stamped> {
+        Some(Stamped {
+            ts_ns: j.get("ts_ns").and_then(Json::as_i64)? as u64,
+            seq: j.get("seq").and_then(Json::as_i64)? as u64,
+            event: TraceEvent::from_json(
+                j.get("event").and_then(Json::as_str)?,
+                j.get("args")?,
+            )?,
+        })
+    }
+}
+
+/// Fixed-capacity flight recorder (see module docs).
+#[derive(Debug)]
+pub struct Tracer {
+    buf: Vec<Stamped>,
+    /// Next ring slot to overwrite once the buffer is full.
+    head: usize,
+    capacity: usize,
+    seq: u64,
+    dropped: u64,
+}
+
+impl Tracer {
+    /// The no-op sink: capacity 0, every emit returns immediately.
+    pub fn disabled() -> Self {
+        Self::ring(0)
+    }
+
+    /// A flight recorder holding the most recent `capacity` events.
+    pub fn ring(capacity: usize) -> Self {
+        Self {
+            buf: Vec::new(),
+            head: 0,
+            capacity,
+            seq: 0,
+            dropped: 0,
+        }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.capacity > 0
+    }
+
+    /// Record `event` at `ts_ns`. No-op (and allocation-free) when the
+    /// tracer is disabled; overwrites the oldest event when full.
+    #[inline]
+    pub fn emit(&mut self, ts_ns: u64, event: TraceEvent) {
+        if self.capacity == 0 {
+            return;
+        }
+        let stamped = Stamped {
+            ts_ns,
+            seq: self.seq,
+            event,
+        };
+        self.seq += 1;
+        if self.buf.len() < self.capacity {
+            self.buf.push(stamped);
+        } else {
+            self.buf[self.head] = stamped;
+            self.head = (self.head + 1) % self.capacity;
+            self.dropped += 1;
+        }
+    }
+
+    /// Events emitted over the tracer's lifetime (including dropped).
+    pub fn recorded(&self) -> u64 {
+        self.seq
+    }
+
+    /// Events overwritten by ring wrap-around.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Retained events in emission order (oldest first).
+    pub fn events(&self) -> Vec<Stamped> {
+        let mut out = Vec::with_capacity(self.buf.len());
+        out.extend_from_slice(&self.buf[self.head..]);
+        out.extend_from_slice(&self.buf[..self.head]);
+        out
+    }
+
+    /// Retained events of one request, in emission order.
+    pub fn events_for(&self, req: u64) -> Vec<Stamped> {
+        self.events()
+            .into_iter()
+            .filter(|s| s.event.request_id() == Some(req))
+            .collect()
+    }
+}
+
+/// Per-request view over a tracer's retained events.
+pub struct RequestTrace {
+    pub req: u64,
+    pub events: Vec<Stamped>,
+}
+
+impl RequestTrace {
+    /// Extract request `req` from a tracer.
+    pub fn from_tracer(tracer: &Tracer, req: u64) -> Self {
+        Self {
+            req,
+            events: tracer.events_for(req),
+        }
+    }
+
+    /// Derived lifecycle spans `(name, start_ns, end_ns)`:
+    /// `queue` = submit → first admit, `prefill` = first admit → first
+    /// token, `decode` = first token → finish. Spans whose edges were
+    /// dropped from the ring are omitted rather than guessed.
+    pub fn spans(&self) -> Vec<(&'static str, u64, u64)> {
+        let stamp_of = |pick: &dyn Fn(&TraceEvent) -> bool| {
+            self.events.iter().find(|s| pick(&s.event)).map(|s| s.ts_ns)
+        };
+        let submit = stamp_of(&|e| matches!(e, TraceEvent::Submit { .. }));
+        let admit = stamp_of(&|e| matches!(e, TraceEvent::Admit { .. }));
+        let first = stamp_of(&|e| matches!(e, TraceEvent::FirstToken { .. }));
+        let finish = stamp_of(&|e| matches!(e, TraceEvent::Finish { .. }));
+        let mut out = Vec::new();
+        if let (Some(a), Some(b)) = (submit, admit) {
+            out.push(("queue", a, b));
+        }
+        if let (Some(a), Some(b)) = (admit, first) {
+            out.push(("prefill", a, b));
+        }
+        if let (Some(a), Some(b)) = (first, finish) {
+            out.push(("decode", a, b));
+        }
+        out
+    }
+
+    /// The request's events as a JSON array.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.events.iter().map(Stamped::to_json).collect())
+    }
+}
+
+/// Render event groups as Chrome trace-event JSON (Perfetto-loadable).
+/// Each `(pid, events)` group becomes one process — the cluster dump
+/// passes one group per replica (+ one for the router). Derived
+/// request spans and timeflow [`TraceEvent::Stage`] spans render as
+/// `"X"` complete events; everything else as `"i"` instants.
+/// Timestamps convert ns → µs (the Chrome unit); the mapping is pure,
+/// so deterministic inputs serialize byte-identically.
+pub fn chrome_trace_json(groups: &[(usize, Vec<Stamped>)]) -> String {
+    let us = |ns: u64| Json::Num(ns as f64 / 1000.0);
+    let mut out: Vec<Json> = Vec::new();
+    for (pid, events) in groups {
+        let pid = *pid as u64;
+        // derived lifecycle spans, one track per lane-less request
+        let mut req_ids: Vec<u64> =
+            events.iter().filter_map(|s| s.event.request_id()).collect();
+        req_ids.sort_unstable();
+        req_ids.dedup();
+        for req in req_ids {
+            let rt = RequestTrace {
+                req,
+                events: events
+                    .iter()
+                    .filter(|s| s.event.request_id() == Some(req))
+                    .cloned()
+                    .collect(),
+            };
+            for (name, start, end) in rt.spans() {
+                out.push(
+                    Json::obj()
+                        .set("name", name)
+                        .set("cat", "request")
+                        .set("ph", "X")
+                        .set("ts", us(start))
+                        .set("dur", us(end.saturating_sub(start)))
+                        .set("pid", pid)
+                        .set("tid", req)
+                        .set("args", Json::obj().set("req", req)),
+                );
+            }
+        }
+        for s in events {
+            if let TraceEvent::Stage { req, start_ns, .. } = s.event {
+                out.push(
+                    Json::obj()
+                        .set("name", s.event.name())
+                        .set("cat", "stage")
+                        .set("ph", "X")
+                        .set("ts", us(start_ns))
+                        .set("dur", us(s.ts_ns.saturating_sub(start_ns)))
+                        .set("pid", pid)
+                        .set("tid", req)
+                        .set("args", s.event.args_json()),
+                );
+            } else {
+                out.push(
+                    Json::obj()
+                        .set("name", s.event.name())
+                        .set("cat", "event")
+                        .set("ph", "i")
+                        .set("s", "t")
+                        .set("ts", us(s.ts_ns))
+                        .set("pid", pid)
+                        .set("tid", s.event.lane().map(|l| l as u64).unwrap_or(0))
+                        .set("args", s.event.args_json()),
+                );
+            }
+        }
+    }
+    Json::obj()
+        .set("traceEvents", Json::Arr(out))
+        .set("displayTimeUnit", "ms")
+        .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lifecycle(t: &mut Tracer, req: u64, base: u64) {
+        t.emit(
+            base,
+            TraceEvent::Submit {
+                req,
+                prompt_tokens: 8,
+                width: 1,
+                prefix_hit_tokens: 0,
+            },
+        );
+        t.emit(base + 10, TraceEvent::Admit { req, lane: 0 });
+        t.emit(base + 30, TraceEvent::FirstToken { req });
+        t.emit(
+            base + 90,
+            TraceEvent::Finish {
+                req,
+                gen_tokens: 6,
+                read_tokens: 42.0,
+                read_bytes: 5376.0,
+            },
+        );
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let mut t = Tracer::disabled();
+        lifecycle(&mut t, 1, 0);
+        assert!(!t.enabled());
+        assert_eq!(t.recorded(), 0);
+        assert_eq!(t.dropped(), 0);
+        assert!(t.events().is_empty());
+    }
+
+    #[test]
+    fn ring_bounds_and_counts_drops() {
+        let mut t = Tracer::ring(3);
+        for i in 0..5u64 {
+            t.emit(i, TraceEvent::FirstToken { req: i });
+        }
+        assert_eq!(t.recorded(), 5);
+        assert_eq!(t.dropped(), 2);
+        let evs = t.events();
+        assert_eq!(evs.len(), 3);
+        // oldest-first, the two oldest overwritten
+        assert_eq!(evs[0].ts_ns, 2);
+        assert_eq!(evs[2].ts_ns, 4);
+        assert!(evs.windows(2).all(|w| w[0].seq < w[1].seq));
+    }
+
+    #[test]
+    fn request_spans_derive_from_lifecycle() {
+        let mut t = Tracer::ring(64);
+        lifecycle(&mut t, 7, 100);
+        lifecycle(&mut t, 8, 200);
+        let rt = RequestTrace::from_tracer(&t, 7);
+        assert_eq!(rt.events.len(), 4);
+        assert_eq!(
+            rt.spans(),
+            vec![("queue", 100, 110), ("prefill", 110, 130), ("decode", 130, 190)]
+        );
+        // a request with a dropped submit edge yields partial spans
+        let rt8 = RequestTrace::from_tracer(&t, 8);
+        assert_eq!(rt8.spans().len(), 3);
+    }
+
+    #[test]
+    fn chrome_export_parses_and_is_deterministic() {
+        let mut t = Tracer::ring(64);
+        lifecycle(&mut t, 1, 1000);
+        t.emit(1500, TraceEvent::CowPublish { lane: 2, pages: 3 });
+        t.emit(
+            2000,
+            TraceEvent::Stage {
+                req: 1,
+                replica: 0,
+                stage: "decode",
+                start_ns: 1500,
+            },
+        );
+        let groups = vec![(0usize, t.events())];
+        let a = chrome_trace_json(&groups);
+        let b = chrome_trace_json(&groups);
+        assert_eq!(a, b, "pure function of the event stream");
+        let j = Json::parse(&a).expect("valid JSON");
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+        // 3 derived spans + 4 lifecycle instants + cow instant + stage X
+        assert_eq!(evs.len(), 9);
+        let phases: Vec<&str> = evs
+            .iter()
+            .map(|e| e.get("ph").unwrap().as_str().unwrap())
+            .collect();
+        assert_eq!(phases.iter().filter(|p| **p == "X").count(), 4);
+        for e in evs {
+            assert!(e.get("ts").is_some() && e.get("pid").is_some());
+        }
+    }
+
+    #[test]
+    fn trace_event_json_round_trip() {
+        let s = Stamped {
+            ts_ns: 123,
+            seq: 0,
+            event: TraceEvent::Route {
+                req: 9,
+                replica: 2,
+                shadow_hit: 96,
+            },
+        };
+        let parsed = Json::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(parsed.get("event").unwrap().as_str(), Some("route"));
+        assert_eq!(
+            parsed.get("args").unwrap().get("shadow_hit").unwrap().as_usize(),
+            Some(96)
+        );
+    }
+
+    #[test]
+    fn every_variant_round_trips_through_json() {
+        let variants = vec![
+            TraceEvent::Submit {
+                req: 1,
+                prompt_tokens: 8,
+                width: 2,
+                prefix_hit_tokens: 4,
+            },
+            TraceEvent::Admit { req: 1, lane: 3 },
+            TraceEvent::FirstToken { req: 1 },
+            TraceEvent::Preempt { req: 1, lane: 3 },
+            TraceEvent::Finish {
+                req: 1,
+                gen_tokens: 6,
+                read_tokens: 42.5,
+                read_bytes: 5440.0,
+            },
+            TraceEvent::CowPublish { lane: 2, pages: 5 },
+            TraceEvent::PrefixRestore {
+                req: 1,
+                lane: 2,
+                pages: 3,
+                tokens: 48,
+            },
+            TraceEvent::EvictBatch {
+                lane: 0,
+                evictions: 7,
+                merges: 2,
+                lh_touched: 4,
+            },
+            TraceEvent::Dequant { lane: 1, pages: 2 },
+            TraceEvent::Route {
+                req: 1,
+                replica: 2,
+                shadow_hit: 96,
+            },
+            TraceEvent::Steal {
+                from: 0,
+                to: 1,
+                moved: 4,
+            },
+            TraceEvent::ReplicaDead { replica: 1 },
+            TraceEvent::Stage {
+                req: 1,
+                replica: 0,
+                stage: "decode",
+                start_ns: 500,
+            },
+        ];
+        for (i, event) in variants.into_iter().enumerate() {
+            let s = Stamped {
+                ts_ns: 1000 + i as u64,
+                seq: i as u64,
+                event,
+            };
+            let line = s.to_json().to_string();
+            let back = Stamped::from_json(&Json::parse(&line).unwrap())
+                .unwrap_or_else(|| panic!("variant {i} failed to parse: {line}"));
+            assert_eq!(back, s, "variant {i}");
+        }
+    }
+}

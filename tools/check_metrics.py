@@ -1,0 +1,190 @@
+#!/usr/bin/env python3
+"""Metrics docs-drift gate: docs/OBSERVABILITY.md vs rust/src/.
+
+The metrics glossary in ``docs/OBSERVABILITY.md`` is the single source
+of truth for every metric the stack records (README/ARCHITECTURE link
+there instead of duplicating tables). This tool keeps it honest, in
+both directions:
+
+* every metric **registered in code** — a string literal passed to
+  ``.counter("…")`` / ``.gauge("…")`` / ``.histogram("…")`` outside
+  ``#[cfg(test)]`` blocks — must appear in the glossary, with the same
+  kind;
+* every metric **named in the glossary** must still exist in code
+  (rows whose name contains ``{`` document dynamic families such as
+  ``cluster.routed.{i}`` and are skipped — their names are built with
+  ``format!`` and cannot be cross-checked statically).
+
+With ``--exposition FILE`` it additionally validates a dumped
+Prometheus text exposition (0.0.4) against the format grammar: one
+``# TYPE`` line per family with a known kind, every sample naming a
+declared family (directly or via ``_sum``/``_count``), every value a
+parseable float.
+
+Exit code 0 when everything matches, 1 otherwise (one line per
+problem). Self-test: ``python3 tools/test_check_metrics.py``.
+
+Usage: python3 tools/check_metrics.py [repo_root] [--exposition FILE]
+"""
+
+import re
+import sys
+from pathlib import Path
+
+GLOSSARY_DOC = "docs/OBSERVABILITY.md"
+GLOSSARY_HEADING = "## Metrics glossary"
+
+# A registration site: `metrics.counter("serve.requests")` etc. The
+# leading dot keeps definitions like `fn counter(` out of the match.
+REGISTER_RE = re.compile(r"\.(counter|gauge|histogram)\(\s*\"([^\"]+)\"")
+# Backticked names in a glossary row's first cell.
+NAME_RE = re.compile(r"`([^`]+)`")
+PROM_KINDS = {"counter", "gauge", "summary", "histogram"}
+
+
+def strip_tests(source: str) -> str:
+    """Source text truncated at the first ``#[cfg(test)]``.
+
+    Test modules sit at the bottom of every file in this repo, so the
+    truncation drops exactly the registrations that exist only to
+    exercise the registry — those have no business in the glossary.
+    """
+    idx = source.find("#[cfg(test)]")
+    return source if idx < 0 else source[:idx]
+
+
+def scan_source(source: str) -> list:
+    """``[(kind, name)]`` registered by one file's production code."""
+    return [(m.group(1), m.group(2)) for m in REGISTER_RE.finditer(strip_tests(source))]
+
+
+def code_metrics(rust_src: Path) -> dict:
+    """name → kind over every ``.rs`` file under ``rust_src``.
+
+    A name registered under two different kinds is a bug in itself and
+    reported as such.
+    """
+    kinds = {}
+    errors = []
+    for path in sorted(rust_src.rglob("*.rs")):
+        for kind, name in scan_source(path.read_text(encoding="utf-8")):
+            prev = kinds.setdefault(name, kind)
+            if prev != kind:
+                errors.append(f"{name}: registered as both {prev} and {kind}")
+    if errors:
+        raise ValueError("; ".join(errors))
+    return kinds
+
+
+def glossary_metrics(doc_text: str) -> dict:
+    """name → kind from the glossary tables (dynamic ``{…}`` rows skipped)."""
+    kinds = {}
+    in_section = False
+    for line in doc_text.splitlines():
+        if line.startswith("## "):
+            in_section = line.strip() == GLOSSARY_HEADING
+            continue
+        if not in_section or not line.startswith("|"):
+            continue
+        cells = [c.strip() for c in line.strip("|").split("|")]
+        if len(cells) < 2 or cells[0] in ("metric", "") or set(cells[0]) <= {"-"}:
+            continue
+        kind = cells[1]
+        for name in NAME_RE.findall(cells[0]):
+            if "{" in name:
+                continue
+            kinds[name] = kind
+    return kinds
+
+
+def compare(doc: dict, code: dict) -> list:
+    """Drift between the glossary and the registration sites."""
+    errors = []
+    for name in sorted(set(code) - set(doc)):
+        errors.append(f"undocumented: {name} ({code[name]}) is registered but not in the glossary")
+    for name in sorted(set(doc) - set(code)):
+        errors.append(f"stale doc: {name} is in the glossary but never registered")
+    for name in sorted(set(doc) & set(code)):
+        if doc[name] != code[name]:
+            errors.append(f"kind mismatch: {name} is a {code[name]} in code, {doc[name]} in docs")
+    return errors
+
+
+def check_exposition(text: str) -> list:
+    """Grammar errors in a Prometheus text exposition (empty = valid)."""
+    errors = []
+    families = {}
+    for line in text.splitlines():
+        if line.startswith("# TYPE "):
+            parts = line[len("# TYPE ") :].split()
+            if len(parts) != 2:
+                errors.append(f"malformed TYPE line: {line!r}")
+                continue
+            name, kind = parts
+            if kind not in PROM_KINDS:
+                errors.append(f"unknown family kind in {line!r}")
+            if name in families:
+                errors.append(f"duplicate TYPE line for {name}")
+            families[name] = kind
+        elif line and not line.startswith("#"):
+            cut = [i for i in (line.find("{"), line.find(" ")) if i >= 0]
+            name = line[: min(cut)] if cut else line
+            base = name
+            for suffix in ("_sum", "_count"):
+                if name.endswith(suffix):
+                    base = name[: -len(suffix)]
+                    break
+            if base not in families and name not in families:
+                errors.append(f"sample {name} has no TYPE line")
+            value = line.rsplit(" ", 1)[-1]
+            try:
+                float(value)
+            except ValueError:
+                errors.append(f"sample value does not parse: {line!r}")
+    if not families:
+        errors.append("empty exposition (no TYPE lines)")
+    return errors
+
+
+def main() -> int:
+    argv = sys.argv[1:]
+    exposition = None
+    if "--exposition" in argv:
+        i = argv.index("--exposition")
+        try:
+            exposition = Path(argv[i + 1])
+        except IndexError:
+            print("--exposition needs a file argument", file=sys.stderr)
+            return 1
+        del argv[i : i + 2]
+    root = Path(argv[0]).resolve() if argv else Path.cwd()
+
+    doc_path = root / GLOSSARY_DOC
+    doc = glossary_metrics(doc_path.read_text(encoding="utf-8"))
+    if not doc:
+        print(f"check_metrics: no glossary rows found in {GLOSSARY_DOC}", file=sys.stderr)
+        return 1
+    try:
+        code = code_metrics(root / "rust" / "src")
+    except ValueError as e:
+        print(f"check_metrics: {e}", file=sys.stderr)
+        return 1
+
+    errors = compare(doc, code)
+    n_expo = 0
+    if exposition is not None:
+        expo_errors = check_exposition(exposition.read_text(encoding="utf-8"))
+        errors.extend(f"{exposition}: {e}" for e in expo_errors)
+        n_expo = 1
+
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(
+        f"check_metrics: {len(code)} registered, {len(doc)} documented, "
+        f"{n_expo} exposition(s), {len(errors)} problems"
+    )
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,160 @@
+#!/usr/bin/env python3
+"""Self-test for tools/check_metrics.py (run by CI before the gate).
+
+Covers the three moving parts on synthetic inputs: the source scanner
+(registration regex + ``#[cfg(test)]`` truncation), the glossary table
+parser (multi-name cells, dynamic-family skip), the drift comparison
+(both directions + kind mismatch), and the Prometheus exposition
+grammar checker — plus an end-to-end run against the real repo, so a
+drifted glossary fails this test on the spot.
+"""
+
+import subprocess
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+import check_metrics as cm
+
+FAILURES = []
+
+
+def check(name: str, cond: bool, detail: str = "") -> None:
+    status = "ok" if cond else "FAIL"
+    print(f"  {status}  {name}{'  ' + detail if detail and not cond else ''}")
+    if not cond:
+        FAILURES.append(name)
+
+
+RUST_SNIPPET = '''
+impl Engine {
+    fn tick(&mut self) {
+        self.metrics.counter("serve.requests").add(1);
+        self.metrics
+            .gauge("engine.active_lanes")
+            .set(lanes as f64);
+        self.metrics.histogram("serve.ttft_ms").record(ms);
+        let fam = format!("cluster.routed.{i}"); // dynamic: not matched
+        self.metrics.counter(&fam).add(1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    fn t(m: &Registry) {
+        m.counter("test.only.metric").add(1); // must not leak out
+    }
+}
+'''
+
+DOC_SNIPPET = """
+# Observability
+
+## Exporters
+
+Not a glossary row: | `serve.fake` | counter | decoy outside section |
+
+## Metrics glossary
+
+| metric | kind | meaning |
+|--------|------|---------|
+| `serve.requests` | counter | completed requests |
+| `serve.ttft_ms` / `serve.e2e_ms` | histogram | latency pair |
+| `engine.active_lanes` | gauge | lanes running a chain |
+| `cluster.routed.{i}` | counter | dynamic family, skipped |
+
+## After
+
+| `serve.after` | counter | decoy after the section |
+"""
+
+GOOD_EXPO = """# TYPE serve_requests counter
+serve_requests 42
+# TYPE serve_ttft_ms summary
+serve_ttft_ms{quantile="0.5"} 1.5
+serve_ttft_ms_sum 120.5
+serve_ttft_ms_count 80
+# TYPE engine_active_lanes gauge
+engine_active_lanes{replica="0"} 2
+"""
+
+
+def main() -> int:
+    print("check_metrics self-test")
+
+    print("source scanner:")
+    found = cm.scan_source(RUST_SNIPPET)
+    check("finds same-line registrations", ("counter", "serve.requests") in found)
+    check("finds histograms", ("histogram", "serve.ttft_ms") in found)
+    check(
+        "multiline chains: builder on the next line still matches",
+        ("gauge", "engine.active_lanes") in found,
+        str(found),
+    )
+    check("skips #[cfg(test)] registrations", all(n != "test.only.metric" for _, n in found))
+    check("skips format!-built dynamic names", all("{" not in n for _, n in found))
+
+    print("glossary parser:")
+    doc = cm.glossary_metrics(DOC_SNIPPET)
+    check("parses single-name rows", doc.get("serve.requests") == "counter")
+    check(
+        "splits multi-name cells",
+        doc.get("serve.ttft_ms") == "histogram" and doc.get("serve.e2e_ms") == "histogram",
+    )
+    check("skips dynamic {…} rows", "cluster.routed.{i}" not in doc)
+    check("ignores rows outside the section", "serve.fake" not in doc and "serve.after" not in doc)
+
+    print("drift comparison:")
+    check("clean when aligned", not cm.compare({"a": "counter"}, {"a": "counter"}))
+    errs = cm.compare({"a": "counter"}, {"a": "counter", "b": "gauge"})
+    check("flags undocumented metrics", any("undocumented: b" in e for e in errs), str(errs))
+    errs = cm.compare({"a": "counter", "gone": "gauge"}, {"a": "counter"})
+    check("flags stale doc rows", any("stale doc: gone" in e for e in errs), str(errs))
+    errs = cm.compare({"a": "counter"}, {"a": "gauge"})
+    check("flags kind mismatches", any("kind mismatch: a" in e for e in errs), str(errs))
+
+    print("exposition grammar:")
+    check("accepts a valid exposition", not cm.check_exposition(GOOD_EXPO))
+    check(
+        "rejects duplicate TYPE lines",
+        any(
+            "duplicate" in e
+            for e in cm.check_exposition("# TYPE a counter\n# TYPE a counter\na 1\n")
+        ),
+    )
+    check(
+        "rejects undeclared samples",
+        any("no TYPE line" in e for e in cm.check_exposition("# TYPE a counter\nb 1\n")),
+    )
+    check(
+        "rejects unknown kinds",
+        any("unknown" in e for e in cm.check_exposition("# TYPE a sketch\na 1\n")),
+    )
+    check(
+        "rejects unparsable values",
+        any("does not parse" in e for e in cm.check_exposition("# TYPE a counter\na x\n")),
+    )
+    check("rejects empty input", any("empty" in e for e in cm.check_exposition("")))
+
+    print("end-to-end (real repo):")
+    root = Path(__file__).resolve().parent.parent
+    proc = subprocess.run(
+        [sys.executable, str(Path(__file__).with_name("check_metrics.py")), str(root)],
+        capture_output=True,
+        text=True,
+    )
+    check(
+        "repo glossary matches the code",
+        proc.returncode == 0,
+        (proc.stdout + proc.stderr).strip(),
+    )
+
+    if FAILURES:
+        print(f"FAILED: {len(FAILURES)} check(s): {', '.join(FAILURES)}")
+        return 1
+    print("all checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
