@@ -31,6 +31,7 @@ use super::scheduler::{
     ChainState, CompletedRequest, Phase, Scheduler, SchedulerConfig,
 };
 use super::sequence::{ChainResult, FinishReason, GenRequest, GenResult};
+use super::slo::SloTier;
 use crate::compress::{
     build_allocator, build_policy_planned, per_head_budget, AllocatorKind,
     BudgetAllocator, Policy, PolicyKind, StepView, WriteAction,
@@ -454,6 +455,29 @@ impl Engine {
         Ok(ticket)
     }
 
+    /// Stamp a submitted ticket with its SLO tier: the scheduler
+    /// records the tier on the request and its chains (EDF ordering,
+    /// tier-aware preemption) with the absolute e2e deadline derived
+    /// from the engine's trace clock, and the acceptance is counted.
+    pub fn assign_slo(&mut self, session: &mut Session, ticket: u64, tier: SloTier) {
+        let deadline_ns = self.now_ns() + tier.e2e_deadline_ns();
+        session.sched.assign_slo(ticket, tier, deadline_ns);
+        self.metrics.counter("serve.slo_accepted").inc();
+        if self.tracer.enabled() {
+            let req = self.trace_req(ticket);
+            let ts = self.now_ns();
+            self.tracer.emit(
+                ts,
+                TraceEvent::SloAssigned {
+                    req,
+                    tier: tier.name(),
+                    ttft_deadline_ns: ts + tier.ttft_deadline_ns(),
+                    e2e_deadline_ns: deadline_ns,
+                },
+            );
+        }
+    }
+
     /// Whether the session has no running or queued chains.
     pub fn is_idle(&self, session: &Session) -> bool {
         !session.sched.has_work()
@@ -650,6 +674,20 @@ impl Engine {
             self.metrics
                 .counter("serve.gen_tokens")
                 .add(t.gen_tokens as f64);
+            if let Some(tier) = c.slo {
+                let ttft_budget_ms = tier.ttft_deadline_ns() as f64 / 1e6;
+                let e2e_budget_ms = tier.e2e_deadline_ns() as f64 / 1e6;
+                if t.ttft_ms > ttft_budget_ms {
+                    self.metrics.counter("serve.slo_ttft_miss").inc();
+                }
+                if t.e2e_ms > e2e_budget_ms {
+                    self.metrics.counter("serve.slo_deadline_miss").inc();
+                } else {
+                    self.metrics
+                        .counter("serve.slo_goodput_tokens")
+                        .add(t.gen_tokens as f64);
+                }
+            }
             let reads = c.result.total_reads();
             self.metrics.histogram("serve.kv_read_tokens").record(reads);
             if self.tracer.enabled() {

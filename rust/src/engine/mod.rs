@@ -20,7 +20,14 @@
 //! * [`timeflow`] — a discrete-event cluster *timing* simulator: the
 //!   real router/steal decision cores under a virtual nanosecond
 //!   clock, with per-stage costs priced from the App. G latency model
-//!   (`bench_sim` gates its p50/p99/p999 TTFT + tokens/s in CI).
+//!   (`bench_sim` gates its p50/p99/p999 TTFT + tokens/s in CI);
+//! * [`slo`] — SLO tiers (TTFT + e2e deadline classes), EDF dispatch
+//!   support, and KV-byte-budget admission control priced from the
+//!   same cost model (compression widens the admissible set — the
+//!   hyper-scaling dividend);
+//! * [`workload`] — the seed-deterministic hyperscale load generator:
+//!   arrival processes (uniform/Poisson/bursty/diurnal), request
+//!   mixes (chat / long-context / width-W voting), zipf prompt reuse.
 //!
 //! Prefill runs in C-token chunks; parallel-scaling requests (W > 1)
 //! prefill once and fork the prompt cache to sibling lanes
@@ -31,7 +38,9 @@
 pub mod batch;
 pub mod scheduler;
 pub mod sim;
+pub mod slo;
 pub mod timeflow;
+pub mod workload;
 
 mod core;
 mod sampler;
@@ -40,9 +49,16 @@ mod voting;
 
 pub use self::core::{Engine, EngineStats, Session};
 pub use sim::{SimEngine, SimEngineConfig};
+pub use slo::{
+    byte_capacity, AdmissionController, AdmissionDecision, SloPolicy, SloRequest, SloTier,
+};
 pub use timeflow::{
-    generate_workload, simulate, simulate_requests, Arrival, CostModel, ReplicaFailure,
-    SimReport, SimRequest, Stage, StageSpan, TimeflowConfig, WorkloadSpec,
+    generate_workload, simulate, simulate_requests, simulate_slo, Arrival, CostModel,
+    ReplicaFailure, SimReport, SimRequest, Stage, StageSpan, TimeflowConfig, WorkloadSpec,
+};
+pub use workload::{
+    generate_mixed_workload, slo_requests, ArrivalKind, RequestClass, WorkloadConfig,
+    WorkloadRequest,
 };
 pub use sampler::Sampler;
 pub use scheduler::{

@@ -1,6 +1,6 @@
 //! Continuous-batching scheduler: admission queue, lane assignment,
-//! admission ordering (FCFS / shortest-first), and preemption on cache
-//! pressure.
+//! admission ordering (FCFS / shortest-first / EDF), and preemption on
+//! cache pressure.
 //!
 //! The scheduler owns the *control plane* of the engine: which chain
 //! occupies which executor lane, which pending chain is admitted next,
@@ -27,6 +27,7 @@ use std::time::Instant;
 
 use super::sampler::Sampler;
 use super::sequence::{ChainResult, ChainStats, GenRequest, GenResult, RequestTiming};
+use super::slo::SloTier;
 use crate::compress::{AttnStats, Policy};
 
 /// Which pending chain gets an idle lane first.
@@ -37,11 +38,17 @@ pub enum AdmissionPolicy {
     /// is exactly arrival order.
     #[default]
     Fcfs,
-    /// Shortest-job-first by `max_len` (ties broken FCFS). Improves
-    /// mean latency under mixed workloads at the cost of delaying long
-    /// requests; long requests cannot starve forever because new
-    /// arrivals behind them are only preferred while strictly shorter.
+    /// Shortest-job-first by `max_len` (ties broken by ticket, i.e.
+    /// submission order — queue *position* is not stable under work
+    /// stealing or preemption re-queues). Improves mean latency under
+    /// mixed workloads at the cost of delaying long requests; long
+    /// requests cannot starve forever because new arrivals behind them
+    /// are only preferred while strictly shorter.
     ShortestFirst,
+    /// Earliest-deadline-first over the absolute e2e deadline stamped
+    /// by [`Scheduler::assign_slo`] (ties broken by ticket, then chain
+    /// index). Chains never stamped carry `u64::MAX` and sort last.
+    Edf,
 }
 
 /// Scheduler tuning knobs.
@@ -126,6 +133,11 @@ pub struct PendingChain {
     pub prefix_pages: Vec<u64>,
     /// Tokens covered by `prefix_pages` (prefill starts there).
     pub prefix_tokens: usize,
+    /// SLO tier ([`Scheduler::assign_slo`]; `Standard` until stamped).
+    pub tier: SloTier,
+    /// Absolute e2e deadline — the EDF ordering key (`u64::MAX` until
+    /// stamped; preserved across preemption re-queues).
+    pub deadline_ns: u64,
 }
 
 /// A chain occupying an executor lane.
@@ -168,6 +180,11 @@ pub struct ChainState {
     /// chunks and decode attention views; restarts empty on admission
     /// (a preempted chain re-accumulates after resume).
     pub attn_stats: AttnStats,
+    /// SLO tier (carried from the pending chain; preemption never
+    /// victimizes a stricter tier for a looser one).
+    pub tier: SloTier,
+    /// Absolute e2e deadline (carried from the pending chain).
+    pub deadline_ns: u64,
 }
 
 impl ChainState {
@@ -203,6 +220,8 @@ impl ChainState {
             resume_token,
             admitted_seq: 0,
             attn_stats: AttnStats::new(),
+            tier: p.tier,
+            deadline_ns: p.deadline_ns,
         }
     }
 
@@ -241,6 +260,8 @@ impl ChainState {
             resume_token: None,
             admitted_seq: 0,
             attn_stats: AttnStats::new(),
+            tier: p.tier,
+            deadline_ns: p.deadline_ns,
         }
     }
 
@@ -258,6 +279,9 @@ pub struct CompletedRequest {
     pub result: GenResult,
     /// Queueing / first-token / end-to-end timing.
     pub timing: RequestTiming,
+    /// SLO tier the request was served under, if one was assigned —
+    /// the engine prices deadline misses and goodput against it.
+    pub slo: Option<SloTier>,
 }
 
 /// Book-keeping for one in-flight request.
@@ -267,6 +291,7 @@ struct RequestState {
     submitted: Instant,
     first_admit: Option<Instant>,
     first_token: Option<Instant>,
+    slo: Option<SloTier>,
 }
 
 /// The continuous-batching scheduler (see module docs).
@@ -331,6 +356,7 @@ impl Scheduler {
                 submitted: now,
                 first_admit: None,
                 first_token: None,
+                slo: None,
             },
         );
         for w in 0..width {
@@ -347,9 +373,32 @@ impl Scheduler {
                 enqueued: now,
                 prefix_pages: prefix_pages.to_vec(),
                 prefix_tokens,
+                tier: SloTier::Standard,
+                deadline_ns: u64::MAX,
             });
         }
         ticket
+    }
+
+    /// Stamp a submitted request with its SLO tier and absolute e2e
+    /// deadline (the [`AdmissionPolicy::Edf`] ordering key). Applies to
+    /// every queued chain of the ticket and to chains already installed
+    /// on lanes; both survive preemption re-queues. Call right after
+    /// [`Scheduler::submit`] — requests never stamped serve as
+    /// `Standard` with an unbounded deadline (they sort last under
+    /// EDF).
+    pub fn assign_slo(&mut self, ticket: u64, tier: SloTier, deadline_ns: u64) {
+        if let Some(r) = self.requests.get_mut(&ticket) {
+            r.slo = Some(tier);
+        }
+        for p in self.pending.iter_mut().filter(|p| p.ticket == ticket) {
+            p.tier = tier;
+            p.deadline_ns = deadline_ns;
+        }
+        for c in self.lanes.iter_mut().flatten().filter(|c| c.ticket == ticket) {
+            c.tier = tier;
+            c.deadline_ns = deadline_ns;
+        }
     }
 
     /// Whether any chain is running or waiting.
@@ -404,12 +453,22 @@ impl Scheduler {
     pub fn next_admission(&mut self) -> Option<PendingChain> {
         let idx = match self.cfg.admission {
             AdmissionPolicy::Fcfs => self.pending.iter().position(|p| !p.wait_fork),
+            // ties break on (ticket, chain_idx), never on queue
+            // position: position is permuted by steals and preemption
+            // re-queues, so two same-seed runs would diverge on it.
             AdmissionPolicy::ShortestFirst => self
                 .pending
                 .iter()
                 .enumerate()
                 .filter(|(_, p)| !p.wait_fork)
-                .min_by_key(|(i, p)| (p.max_len, *i))
+                .min_by_key(|(_, p)| (p.max_len, p.ticket, p.chain_idx))
+                .map(|(i, _)| i),
+            AdmissionPolicy::Edf => self
+                .pending
+                .iter()
+                .enumerate()
+                .filter(|(_, p)| !p.wait_fork)
+                .min_by_key(|(_, p)| (p.deadline_ns, p.ticket, p.chain_idx))
                 .map(|(i, _)| i),
         };
         let idx = idx.or_else(|| {
@@ -605,6 +664,7 @@ impl Scheduler {
                 e2e_ms,
                 gen_tokens,
             },
+            slo: r.slo,
         })
     }
 
@@ -630,14 +690,30 @@ impl Scheduler {
         {
             return None;
         }
-        let lane = self.preempt_candidate()?;
+        // SLO invariant: never preempt a stricter tier for a looser
+        // one — the victim pool is restricted to lanes serving a tier
+        // no stricter than the best (lowest) tier waiting in the queue.
+        let beneficiary_tier = self.best_pending_tier()?;
+        let lane = self.preempt_candidate_for(beneficiary_tier)?;
         let victim = self.lanes[lane].as_ref()?;
-        let (victim_max_len, ticket) = (victim.max_len, victim.ticket);
-        if !self.admission_would_benefit(victim_max_len) {
+        let (victim_max_len, victim_deadline, ticket) =
+            (victim.max_len, victim.deadline_ns, victim.ticket);
+        if !self.admission_would_benefit(victim_max_len, victim_deadline, ticket) {
             return None;
         }
         self.preempt(lane);
         Some((lane, ticket))
+    }
+
+    /// Strictest (lowest) tier among chains that could actually be
+    /// admitted right now — the tier preemption would benefit.
+    fn best_pending_tier(&self) -> Option<SloTier> {
+        let blocked = self.blocked_fork_tickets();
+        self.pending
+            .iter()
+            .filter(|p| !p.wait_fork || !blocked.contains(&p.ticket))
+            .map(|p| p.tier)
+            .min()
     }
 
     /// Whether some currently waiting chain would actually be admitted
@@ -645,7 +721,12 @@ impl Scheduler {
     /// Without this check, preempting could free a lane only for the
     /// follow-up admission to reinstall the victim itself — a pure
     /// recompute of its KV cache with zero capacity gained.
-    fn admission_would_benefit(&self, victim_max_len: usize) -> bool {
+    fn admission_would_benefit(
+        &self,
+        victim_max_len: usize,
+        victim_deadline_ns: u64,
+        victim_ticket: u64,
+    ) -> bool {
         let blocked = self.blocked_fork_tickets();
         self.pending.iter().any(|p| {
             let admissible = !p.wait_fork || !blocked.contains(&p.ticket);
@@ -658,6 +739,12 @@ impl Scheduler {
                     // is no longer than the victim (ties break FCFS,
                     // and the victim re-enters at the back).
                     AdmissionPolicy::ShortestFirst => p.max_len <= victim_max_len,
+                    // EDF: the victim keeps its deadline and ticket in
+                    // the queue, so the waiting chain wins only if it
+                    // sorts strictly ahead on the same key.
+                    AdmissionPolicy::Edf => {
+                        (p.deadline_ns, p.ticket) < (victim_deadline_ns, victim_ticket)
+                    }
                 }
         })
     }
@@ -665,11 +752,20 @@ impl Scheduler {
     /// The preferred preemption victim: the youngest chain in decode
     /// phase, falling back to the youngest prefilling chain.
     pub fn preempt_candidate(&self) -> Option<usize> {
+        // unfiltered: every tier is `>= Interactive`
+        self.preempt_candidate_for(SloTier::Interactive)
+    }
+
+    /// [`Scheduler::preempt_candidate`] restricted to lanes whose tier
+    /// is no stricter than `beneficiary_tier` — the cross-tier
+    /// preemption-inversion guard (tests/slo_admission.rs).
+    fn preempt_candidate_for(&self, beneficiary_tier: SloTier) -> Option<usize> {
         let youngest = |decode: bool| {
             self.lanes
                 .iter()
                 .enumerate()
                 .filter_map(|(i, l)| l.as_ref().map(|c| (i, c)))
+                .filter(|(_, c)| c.tier >= beneficiary_tier)
                 .filter(|(_, c)| matches!(c.phase, Phase::Decode) == decode)
                 .max_by_key(|(_, c)| c.admitted_seq)
                 .map(|(i, _)| i)
@@ -724,6 +820,8 @@ impl Scheduler {
                     enqueued: Instant::now(),
                     prefix_pages: Vec::new(),
                     prefix_tokens: 0,
+                    tier: chain.tier,
+                    deadline_ns: chain.deadline_ns,
                 }
             }
             None => PendingChain {
@@ -739,6 +837,8 @@ impl Scheduler {
                 enqueued: Instant::now(),
                 prefix_pages: Vec::new(),
                 prefix_tokens: 0,
+                tier: chain.tier,
+                deadline_ns: chain.deadline_ns,
             },
         };
         self.pending.push_back(pending);

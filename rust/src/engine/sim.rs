@@ -41,6 +41,7 @@ use anyhow::{bail, Result};
 
 use super::scheduler::{ChainState, CompletedRequest, Phase, Scheduler, SchedulerConfig};
 use super::sequence::{ChainResult, FinishReason, GenRequest};
+use super::slo::SloTier;
 use super::EngineStats;
 use crate::compress::{
     build_allocator, build_policy, AllocatorKind, BudgetAllocator, BudgetPlan, Policy,
@@ -299,6 +300,28 @@ impl SimEngine {
         Ok(ticket)
     }
 
+    /// Stamp a submitted ticket with its SLO tier (mirrors
+    /// `Engine::assign_slo`): scheduler tier + absolute e2e deadline
+    /// on the sim's tick clock, acceptance counted.
+    pub fn assign_slo(&mut self, ticket: u64, tier: SloTier) {
+        let deadline_ns = self.now_ns() + tier.e2e_deadline_ns();
+        self.sched.assign_slo(ticket, tier, deadline_ns);
+        self.metrics.counter("serve.slo_accepted").inc();
+        if self.tracer.enabled() {
+            let req = self.trace_req(ticket);
+            let ts = self.now_ns();
+            self.tracer.emit(
+                ts,
+                TraceEvent::SloAssigned {
+                    req,
+                    tier: tier.name(),
+                    ttft_deadline_ns: ts + tier.ttft_deadline_ns(),
+                    e2e_deadline_ns: deadline_ns,
+                },
+            );
+        }
+    }
+
     /// Outstanding pool references across all retained/shared pages —
     /// the leak probe steal and retirement tests balance against: a
     /// drained request must return this to its pre-submit value (refs
@@ -479,6 +502,20 @@ impl SimEngine {
             self.metrics
                 .counter("serve.gen_tokens")
                 .add(t.gen_tokens as f64);
+            if let Some(tier) = c.slo {
+                let ttft_budget_ms = tier.ttft_deadline_ns() as f64 / 1e6;
+                let e2e_budget_ms = tier.e2e_deadline_ns() as f64 / 1e6;
+                if t.ttft_ms > ttft_budget_ms {
+                    self.metrics.counter("serve.slo_ttft_miss").inc();
+                }
+                if t.e2e_ms > e2e_budget_ms {
+                    self.metrics.counter("serve.slo_deadline_miss").inc();
+                } else {
+                    self.metrics
+                        .counter("serve.slo_goodput_tokens")
+                        .add(t.gen_tokens as f64);
+                }
+            }
             let reads = c.result.total_reads();
             self.metrics.histogram("serve.kv_read_tokens").record(reads);
             if self.tracer.enabled() {

@@ -1,0 +1,399 @@
+//! SLO classes and utilization-based admission control.
+//!
+//! The paper's hyper-scaling claim — *more tokens within the same
+//! compute budget* — only becomes measurable once requests carry
+//! deadlines: compression frees KV bytes, and this module converts
+//! those bytes into **admissible load**. Every request is assigned an
+//! [`SloTier`] (TTFT + end-to-end deadline pair); an
+//! [`AdmissionController`] prices each request in KV bytes via the
+//! timeflow [`CostModel`] (itself derived from the App. G latency
+//! model) and accepts, queues, or rejects against a byte capacity that
+//! is **dtype-independent**. Demand *is* dtype-dependent, so switching
+//! pool payloads from f32 to q8/q4 shrinks per-request demand ~4–7×
+//! and the same capacity admits strictly more load — the hyper-scaling
+//! dividend as an admission-counter delta (`BENCH_slo.json` pins it).
+//!
+//! Dispatch ordering among admitted requests is EDF (earliest e2e
+//! deadline first) with deterministic tie-breaks on request id — see
+//! `AdmissionPolicy::Edf` in the scheduler and the EDF queue scan in
+//! `timeflow::simulate_slo`. Preemption never victimizes a stricter
+//! tier for a looser one (scheduler invariant, property-tested in
+//! `tests/slo_admission.rs`).
+//!
+//! Everything here is integer arithmetic over u64 nanoseconds/bytes,
+//! so admission decisions on an integer-stamped arrival stream are a
+//! closed form that `tools/seed_bench_slo.py` mirrors bit-for-bit.
+
+use std::str::FromStr;
+
+use anyhow::{anyhow, Error};
+
+use super::timeflow::{CostModel, SimRequest};
+use crate::compress::AllocatorKind;
+use crate::kvcache::KvDtype;
+
+/// Resident-token budget per lane used to size the admission byte
+/// capacity: how many tokens a lane is provisioned to keep live at
+/// once (prompt + generation for a typical long request).
+pub const LANE_RESIDENT_TOKENS: u64 = 1024;
+
+/// Multiplier from a request's uncontended service time to its
+/// capacity-commitment window: admitted bytes stay committed for
+/// `SERVICE_WINDOW_SLACK ×` the analytic service time, covering
+/// queueing and lane contention without modeling them.
+pub const SERVICE_WINDOW_SLACK: u64 = 4;
+
+/// Per-request SLO class: a (TTFT, e2e) deadline pair. Lower variants
+/// are *stricter* — the derived `Ord` gives priority order, so
+/// `Interactive < Standard < Batch` and "never preempt a higher tier
+/// for a lower one" is a plain `<` on tiers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum SloTier {
+    /// Chat-style turn: first token must feel instant.
+    Interactive,
+    /// Parallel-width voting and tooling calls: bounded but relaxed.
+    Standard,
+    /// Long-context ingestion and offline scoring: throughput tier.
+    Batch,
+}
+
+impl SloTier {
+    /// All tiers, strictest first.
+    pub const ALL: [SloTier; 3] = [SloTier::Interactive, SloTier::Standard, SloTier::Batch];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SloTier::Interactive => "interactive",
+            SloTier::Standard => "standard",
+            SloTier::Batch => "batch",
+        }
+    }
+
+    /// Time-to-first-token deadline, as an offset from arrival.
+    pub fn ttft_deadline_ns(&self) -> u64 {
+        match self {
+            SloTier::Interactive => 20_000_000, // 20 ms
+            SloTier::Standard => 100_000_000,   // 100 ms
+            SloTier::Batch => 1_000_000_000,    // 1 s
+        }
+    }
+
+    /// End-to-end completion deadline, as an offset from arrival.
+    pub fn e2e_deadline_ns(&self) -> u64 {
+        match self {
+            SloTier::Interactive => 50_000_000, // 50 ms
+            SloTier::Standard => 250_000_000,   // 250 ms
+            SloTier::Batch => 2_500_000_000,    // 2.5 s
+        }
+    }
+}
+
+impl FromStr for SloTier {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "interactive" => Ok(SloTier::Interactive),
+            "standard" => Ok(SloTier::Standard),
+            "batch" => Ok(SloTier::Batch),
+            other => Err(anyhow!(
+                "unknown SLO tier '{other}' (interactive|standard|batch)"
+            )),
+        }
+    }
+}
+
+/// One deadline-stamped simulation request: a timeflow [`SimRequest`]
+/// plus its tier and *absolute* deadlines (arrival + tier offsets).
+#[derive(Clone, Copy, Debug)]
+pub struct SloRequest {
+    pub sim: SimRequest,
+    pub tier: SloTier,
+    /// Absolute TTFT deadline (`arrival_ns + tier.ttft_deadline_ns()`).
+    pub ttft_deadline_ns: u64,
+    /// Absolute e2e deadline (`arrival_ns + tier.e2e_deadline_ns()`).
+    pub e2e_deadline_ns: u64,
+}
+
+impl SloRequest {
+    /// Stamp a sim request with a tier's absolute deadlines.
+    pub fn stamp(sim: SimRequest, tier: SloTier) -> Self {
+        SloRequest {
+            sim,
+            tier,
+            ttft_deadline_ns: sim.arrival_ns + tier.ttft_deadline_ns(),
+            e2e_deadline_ns: sim.arrival_ns + tier.e2e_deadline_ns(),
+        }
+    }
+}
+
+/// Scheduling/admission policy for an SLO simulation run.
+#[derive(Clone, Copy, Debug)]
+pub struct SloPolicy {
+    /// Dispatch queued requests earliest-e2e-deadline-first (tie-break
+    /// on request index) instead of FCFS.
+    pub edf: bool,
+    /// Gate arrivals through an [`AdmissionController`]; when false
+    /// every request is accepted (pure-EDF ablation).
+    pub admission: bool,
+    /// Byte capacity for the controller (see [`byte_capacity`]).
+    pub capacity_bytes: u64,
+}
+
+impl SloPolicy {
+    /// EDF + admission at the capacity for `replicas × lanes`.
+    pub fn edf_admitted(replicas: usize, lanes: usize) -> Self {
+        SloPolicy {
+            edf: true,
+            admission: true,
+            capacity_bytes: byte_capacity(replicas, lanes),
+        }
+    }
+
+    /// FCFS without admission — the pre-SLO baseline.
+    pub fn fcfs_open(replicas: usize, lanes: usize) -> Self {
+        SloPolicy {
+            edf: false,
+            admission: false,
+            capacity_bytes: byte_capacity(replicas, lanes),
+        }
+    }
+}
+
+/// Admission byte capacity for a cluster: every lane is provisioned
+/// for [`LANE_RESIDENT_TOKENS`] resident tokens **at f32 payload
+/// bytes**. Deliberately dtype-independent: the hardware pool does not
+/// grow when payloads quantize — per-request *demand* shrinks instead,
+/// which is exactly how compression converts into admissible load.
+pub fn byte_capacity(replicas: usize, lanes: usize) -> u64 {
+    let f32_bytes =
+        CostModel::default_for(KvDtype::F32, AllocatorKind::Uniform).kv_bytes_per_token;
+    replicas as u64 * lanes as u64 * LANE_RESIDENT_TOKENS * f32_bytes
+}
+
+/// Outcome of offering one request to the admission controller.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmissionDecision {
+    /// Fits in capacity now: dispatch immediately.
+    Accept,
+    /// Over capacity but within the 2× queueing headroom: enqueue.
+    Queue,
+    /// Over even the queueing headroom: reject at arrival.
+    Reject,
+}
+
+/// Utilization-based admission over a byte-capacity ledger.
+///
+/// Each offered request demands `(prompt + gen) × kv_bytes_per_token`
+/// bytes for a commitment window of `SERVICE_WINDOW_SLACK ×` its
+/// analytic service time (`prompt × prefill_ns + gen × decode_ns`).
+/// Accepted commitments never exceed `capacity_bytes` — the analytic
+/// utilization of the accepted set is ≤ 1 **by construction** (the
+/// property suite re-checks it at every step). Queued commitments may
+/// use a further `capacity_bytes` of headroom at a doubled window;
+/// beyond that the request is rejected outright.
+///
+/// All arithmetic is u64, so the accept/queue/reject stream for an
+/// integer arrival stream is a closed form (`tools/seed_bench_slo.py`).
+#[derive(Clone, Debug)]
+pub struct AdmissionController {
+    capacity_bytes: u64,
+    cost: CostModel,
+    /// Live commitments: `(expiry_ns, bytes, accepted)`.
+    ledger: Vec<(u64, u64, bool)>,
+    accepted_bytes: u64,
+    queued_bytes: u64,
+    accepted: u64,
+    queued: u64,
+    rejected: u64,
+}
+
+impl AdmissionController {
+    pub fn new(capacity_bytes: u64, cost: CostModel) -> Self {
+        assert!(capacity_bytes > 0, "admission capacity must be nonzero");
+        AdmissionController {
+            capacity_bytes,
+            cost,
+            ledger: Vec::new(),
+            accepted_bytes: 0,
+            queued_bytes: 0,
+            accepted: 0,
+            queued: 0,
+            rejected: 0,
+        }
+    }
+
+    /// KV-byte demand of one request under this controller's dtype.
+    pub fn demand_bytes(&self, prompt_tokens: usize, gen_tokens: usize) -> u64 {
+        (prompt_tokens + gen_tokens) as u64 * self.cost.kv_bytes_per_token
+    }
+
+    /// Commitment window: slack × analytic uncontended service time.
+    pub fn window_ns(&self, prompt_tokens: usize, gen_tokens: usize) -> u64 {
+        let service = prompt_tokens as u64 * self.cost.prefill_ns
+            + gen_tokens as u64 * self.cost.decode_ns;
+        service * SERVICE_WINDOW_SLACK
+    }
+
+    fn expire(&mut self, now_ns: u64) {
+        let (mut freed_acc, mut freed_q) = (0u64, 0u64);
+        self.ledger.retain(|&(expiry, bytes, accepted)| {
+            if expiry <= now_ns {
+                if accepted {
+                    freed_acc += bytes;
+                } else {
+                    freed_q += bytes;
+                }
+                false
+            } else {
+                true
+            }
+        });
+        self.accepted_bytes -= freed_acc;
+        self.queued_bytes -= freed_q;
+    }
+
+    /// Offer one request arriving at `now_ns`; returns the decision
+    /// and updates the ledger/counters. Offers must be made in
+    /// nondecreasing `now_ns` order (arrival order).
+    pub fn offer(
+        &mut self,
+        now_ns: u64,
+        prompt_tokens: usize,
+        gen_tokens: usize,
+    ) -> AdmissionDecision {
+        self.expire(now_ns);
+        let d = self.demand_bytes(prompt_tokens, gen_tokens);
+        let w = self.window_ns(prompt_tokens, gen_tokens);
+        if self.accepted_bytes + d <= self.capacity_bytes {
+            self.ledger.push((now_ns + w, d, true));
+            self.accepted_bytes += d;
+            self.accepted += 1;
+            AdmissionDecision::Accept
+        } else if self.accepted_bytes + self.queued_bytes + d <= 2 * self.capacity_bytes {
+            self.ledger.push((now_ns + 2 * w, d, false));
+            self.queued_bytes += d;
+            self.queued += 1;
+            AdmissionDecision::Queue
+        } else {
+            self.rejected += 1;
+            AdmissionDecision::Reject
+        }
+    }
+
+    /// Analytic utilization of the *accepted* set (≤ 1 by construction).
+    pub fn utilization(&self) -> f64 {
+        self.accepted_bytes as f64 / self.capacity_bytes as f64
+    }
+
+    pub fn capacity_bytes(&self) -> u64 {
+        self.capacity_bytes
+    }
+
+    pub fn accepted(&self) -> u64 {
+        self.accepted
+    }
+
+    pub fn queued(&self) -> u64 {
+        self.queued
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.rejected
+    }
+
+    /// accepted + queued + rejected — equals offers made (conservation).
+    pub fn offered(&self) -> u64 {
+        self.accepted + self.queued + self.rejected
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cost(dtype: KvDtype) -> CostModel {
+        CostModel::default_for(dtype, AllocatorKind::Uniform)
+    }
+
+    #[test]
+    fn tiers_order_strictest_first() {
+        assert!(SloTier::Interactive < SloTier::Standard);
+        assert!(SloTier::Standard < SloTier::Batch);
+        for w in SloTier::ALL.windows(2) {
+            assert!(w[0].ttft_deadline_ns() < w[1].ttft_deadline_ns());
+            assert!(w[0].e2e_deadline_ns() < w[1].e2e_deadline_ns());
+            assert!(w[0].ttft_deadline_ns() < w[0].e2e_deadline_ns());
+        }
+    }
+
+    #[test]
+    fn tier_names_round_trip() {
+        for tier in SloTier::ALL {
+            assert_eq!(tier.name().parse::<SloTier>().unwrap(), tier);
+        }
+        assert!("gold".parse::<SloTier>().is_err());
+    }
+
+    #[test]
+    fn stamp_offsets_deadlines_from_arrival() {
+        let sim = SimRequest {
+            arrival_ns: 1_000,
+            prompt_id: 0,
+            prompt_tokens: 32,
+            gen_tokens: 16,
+        };
+        let r = SloRequest::stamp(sim, SloTier::Interactive);
+        assert_eq!(r.ttft_deadline_ns, 1_000 + 20_000_000);
+        assert_eq!(r.e2e_deadline_ns, 1_000 + 50_000_000);
+    }
+
+    #[test]
+    fn admission_accepts_then_queues_then_rejects() {
+        // capacity for exactly two requests' demand
+        let c = cost(KvDtype::F32);
+        let demand = 48 * c.kv_bytes_per_token;
+        let mut ctl = AdmissionController::new(2 * demand, c);
+        // all at t=0: 2 accepts, 2 queues (2× headroom), then rejects
+        assert_eq!(ctl.offer(0, 32, 16), AdmissionDecision::Accept);
+        assert_eq!(ctl.offer(0, 32, 16), AdmissionDecision::Accept);
+        assert_eq!(ctl.offer(0, 32, 16), AdmissionDecision::Queue);
+        assert_eq!(ctl.offer(0, 32, 16), AdmissionDecision::Queue);
+        assert_eq!(ctl.offer(0, 32, 16), AdmissionDecision::Reject);
+        assert_eq!(ctl.offered(), 5);
+        assert_eq!((ctl.accepted(), ctl.queued(), ctl.rejected()), (2, 2, 1));
+        assert!(ctl.utilization() <= 1.0);
+    }
+
+    #[test]
+    fn expired_commitments_free_capacity() {
+        let c = cost(KvDtype::F32);
+        let demand = 48 * c.kv_bytes_per_token;
+        let window = (32 * c.prefill_ns + 16 * c.decode_ns) * SERVICE_WINDOW_SLACK;
+        let mut ctl = AdmissionController::new(demand, c);
+        assert_eq!(ctl.window_ns(32, 16), window);
+        assert_eq!(ctl.offer(0, 32, 16), AdmissionDecision::Accept);
+        // within the window capacity is held...
+        assert_ne!(ctl.offer(window - 1, 32, 16), AdmissionDecision::Accept);
+        // ...and past it the commitment expires and frees the bytes
+        assert_eq!(ctl.offer(window + 1, 32, 16), AdmissionDecision::Accept);
+        assert_eq!(ctl.accepted(), 2);
+    }
+
+    #[test]
+    fn q4_admits_strictly_more_than_f32_at_same_capacity() {
+        let capacity = byte_capacity(1, 1);
+        let mut f32_ctl = AdmissionController::new(capacity, cost(KvDtype::F32));
+        let mut q4_ctl = AdmissionController::new(capacity, cost(KvDtype::Q4));
+        // an instantaneous burst: only byte demand differentiates
+        for _ in 0..64 {
+            f32_ctl.offer(0, 32, 16);
+            q4_ctl.offer(0, 32, 16);
+        }
+        assert!(
+            q4_ctl.accepted() > f32_ctl.accepted(),
+            "q4 {} vs f32 {}",
+            q4_ctl.accepted(),
+            f32_ctl.accepted()
+        );
+    }
+}

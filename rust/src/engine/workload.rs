@@ -1,0 +1,410 @@
+//! Trace-driven hyperscale load generator.
+//!
+//! Seed-deterministic request streams for the SLO serving stack: an
+//! arrival process ([`ArrivalKind`]) times requests, a weighted mix
+//! draws a [`RequestClass`] per request (chat, long-context, parallel
+//! width-W voting), and zipf prompt reuse makes prefix caching matter
+//! at scale. The per-request draw order is **fixed** — gap, class,
+//! prompt id, gen tokens — so draw totals are a pure function of the
+//! stream position and `tools/seed_bench_slo.py` can mirror them
+//! bit-for-bit without re-implementing `ln` (the one float that feeds
+//! exponential gaps affects only arrival *times*, never which value
+//! the next draw produces).
+//!
+//! Each class carries an [`SloTier`], so a generated stream is ready
+//! for `timeflow::simulate_slo` via [`slo_requests`] (width-W voting
+//! flattens into W chains sharing arrival, prompt, and deadlines).
+//! Prompt ids are namespaced per class (`class_idx × n_prompts + id`)
+//! so a prompt id always maps to one token length — the invariant the
+//! prefix-reuse model relies on.
+
+use anyhow::{anyhow, Error};
+
+use super::slo::{SloRequest, SloTier};
+use super::timeflow::SimRequest;
+use crate::util::rng::SplitMix64;
+
+/// Diurnal load curve: relative arrival-rate divisors over eight
+/// equal phases of the stream (1 = mean gap, 8 = one-eighth the
+/// traffic — gaps are *multiplied*, so larger means quieter).
+pub const DIURNAL_GAP_MULT: [u64; 8] = [1, 1, 2, 4, 8, 4, 2, 1];
+
+/// Arrival process for the generated stream. Extends the timeflow
+/// processes with a diurnal (time-of-day) curve.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArrivalKind {
+    /// Fixed inter-arrival gap (`mean_gap_ns` exactly); consumes no
+    /// RNG draw, so arrival times are integer-exact and mirrorable.
+    Uniform,
+    /// Exponential inter-arrival gaps (Poisson process).
+    Poisson,
+    /// Bursts of `burst` simultaneous arrivals, exponential gaps
+    /// between bursts.
+    Bursty,
+    /// Poisson with the mean gap scaled by [`DIURNAL_GAP_MULT`] across
+    /// eight equal phases of the request stream.
+    Diurnal,
+}
+
+impl std::str::FromStr for ArrivalKind {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "uniform" => Ok(ArrivalKind::Uniform),
+            "poisson" => Ok(ArrivalKind::Poisson),
+            "bursty" => Ok(ArrivalKind::Bursty),
+            "diurnal" => Ok(ArrivalKind::Diurnal),
+            other => Err(anyhow!(
+                "unknown arrival process '{other}' (uniform|poisson|bursty|diurnal)"
+            )),
+        }
+    }
+}
+
+impl ArrivalKind {
+    /// All processes, in the order the bench/seeder iterate them.
+    pub const ALL: [ArrivalKind; 4] = [
+        ArrivalKind::Uniform,
+        ArrivalKind::Poisson,
+        ArrivalKind::Bursty,
+        ArrivalKind::Diurnal,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalKind::Uniform => "uniform",
+            ArrivalKind::Poisson => "poisson",
+            ArrivalKind::Bursty => "bursty",
+            ArrivalKind::Diurnal => "diurnal",
+        }
+    }
+}
+
+/// Request class in the serving mix. Class decides token ranges,
+/// parallel width, and the SLO tier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequestClass {
+    /// Short prompt, short generation, width 1, interactive deadlines.
+    Chat,
+    /// Long prompt, moderate generation, width 1, batch deadlines.
+    LongContext,
+    /// Chat-sized tokens fanned out to `vote_width` parallel chains
+    /// (the paper's parallel-scaling width W), standard deadlines.
+    Voting,
+}
+
+impl RequestClass {
+    /// All classes, in mix-weight order.
+    pub const ALL: [RequestClass; 3] =
+        [RequestClass::Chat, RequestClass::LongContext, RequestClass::Voting];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RequestClass::Chat => "chat",
+            RequestClass::LongContext => "long_context",
+            RequestClass::Voting => "voting",
+        }
+    }
+
+    /// SLO tier this class serves under.
+    pub fn tier(&self) -> SloTier {
+        match self {
+            RequestClass::Chat => SloTier::Interactive,
+            RequestClass::LongContext => SloTier::Batch,
+            RequestClass::Voting => SloTier::Standard,
+        }
+    }
+
+    /// Inclusive prompt-token range.
+    pub fn prompt_tokens(&self) -> (usize, usize) {
+        match self {
+            RequestClass::Chat | RequestClass::Voting => (32, 96),
+            RequestClass::LongContext => (256, 768),
+        }
+    }
+
+    /// Inclusive generated-token range.
+    pub fn gen_tokens(&self) -> (usize, usize) {
+        match self {
+            RequestClass::Chat | RequestClass::Voting => (16, 64),
+            RequestClass::LongContext => (32, 96),
+        }
+    }
+}
+
+/// Mixed-workload description: fully determined by `seed`.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkloadConfig {
+    pub requests: usize,
+    pub seed: u64,
+    pub arrival: ArrivalKind,
+    /// Mean inter-arrival gap (per request, all replicas combined).
+    pub mean_gap_ns: u64,
+    /// Burst width for [`ArrivalKind::Bursty`].
+    pub burst: usize,
+    /// Distinct prompts *per class*; ids drawn zipf(`zipf_s`) and
+    /// namespaced per class.
+    pub n_prompts: usize,
+    pub zipf_s: f64,
+    /// Mix weights over [`RequestClass::ALL`] (chat, long-context,
+    /// voting); normalized by the weighted draw.
+    pub mix: [f64; 3],
+    /// Parallel chains per [`RequestClass::Voting`] request.
+    pub vote_width: usize,
+}
+
+impl WorkloadConfig {
+    /// Default mix: 70% chat / 20% long-context / 10% width-4 voting,
+    /// Poisson arrivals.
+    pub fn new(requests: usize, seed: u64) -> Self {
+        WorkloadConfig {
+            requests,
+            seed,
+            arrival: ArrivalKind::Poisson,
+            mean_gap_ns: 1_250_000,
+            burst: 32,
+            n_prompts: 64,
+            zipf_s: 1.0,
+            mix: [0.70, 0.20, 0.10],
+            vote_width: 4,
+        }
+    }
+}
+
+/// One generated request, cycle-stamped and class/tier-tagged.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WorkloadRequest {
+    pub arrival_ns: u64,
+    pub class: RequestClass,
+    pub tier: SloTier,
+    /// Parallel chains (1 except for voting requests).
+    pub width: usize,
+    /// Class-namespaced prompt id (`class_idx × n_prompts + draw`).
+    pub prompt_id: usize,
+    pub prompt_tokens: usize,
+    pub gen_tokens: usize,
+}
+
+/// Zipf weights (same closed form as the timeflow generator: `s == 1`
+/// avoids `powf` so the seeder mirrors it exactly).
+fn zipf_weights(n: usize, s: f64) -> Vec<f64> {
+    (1..=n)
+        .map(|k| {
+            if s == 1.0 {
+                1.0 / k as f64
+            } else {
+                (k as f64).powf(-s)
+            }
+        })
+        .collect()
+}
+
+/// Generate the mixed workload for `cfg`. Per-request draw order is
+/// fixed — gap, class, prompt id, gen tokens — so totals are
+/// mirror-computable at every stream position.
+pub fn generate_mixed_workload(cfg: &WorkloadConfig) -> Vec<WorkloadRequest> {
+    assert!(cfg.requests > 0 && cfg.n_prompts > 0);
+    assert!(cfg.vote_width >= 1);
+    assert!(cfg.mix.iter().all(|&w| w >= 0.0) && cfg.mix.iter().sum::<f64>() > 0.0);
+    let mut rng = SplitMix64::new(cfg.seed);
+    let zipf = zipf_weights(cfg.n_prompts, cfg.zipf_s);
+    let exp_gap = |rng: &mut SplitMix64, mean: u64| -> u64 {
+        let u = rng.f64();
+        (-(1.0 - u).ln() * mean as f64).round() as u64
+    };
+    let diurnal_phase_len = (cfg.requests / DIURNAL_GAP_MULT.len()).max(1);
+    let mut t = 0u64;
+    let mut out = Vec::with_capacity(cfg.requests);
+    for i in 0..cfg.requests {
+        t += match cfg.arrival {
+            ArrivalKind::Uniform => cfg.mean_gap_ns,
+            ArrivalKind::Poisson => exp_gap(&mut rng, cfg.mean_gap_ns),
+            ArrivalKind::Bursty => {
+                if i % cfg.burst.max(1) == 0 {
+                    exp_gap(&mut rng, cfg.mean_gap_ns * cfg.burst.max(1) as u64)
+                } else {
+                    0
+                }
+            }
+            ArrivalKind::Diurnal => {
+                let phase = (i / diurnal_phase_len) % DIURNAL_GAP_MULT.len();
+                exp_gap(&mut rng, cfg.mean_gap_ns * DIURNAL_GAP_MULT[phase])
+            }
+        };
+        let class_idx = rng.weighted(&cfg.mix);
+        let class = RequestClass::ALL[class_idx];
+        let raw_id = rng.weighted(&zipf);
+        let prompt_id = class_idx * cfg.n_prompts + raw_id;
+        let (p_lo, p_hi) = class.prompt_tokens();
+        let prompt_tokens = p_lo + (raw_id * 37) % (p_hi - p_lo + 1);
+        let (g_lo, g_hi) = class.gen_tokens();
+        let gen_tokens = g_lo + rng.below(g_hi - g_lo + 1);
+        let width = match class {
+            RequestClass::Voting => cfg.vote_width,
+            _ => 1,
+        };
+        out.push(WorkloadRequest {
+            arrival_ns: t,
+            class,
+            tier: class.tier(),
+            width,
+            prompt_id,
+            prompt_tokens,
+            gen_tokens,
+        });
+    }
+    out
+}
+
+/// Flatten a mixed workload into deadline-stamped sim requests: a
+/// width-W voting request becomes W chains sharing arrival, prompt,
+/// and deadlines (each chain demands its own KV bytes — parallel
+/// scaling multiplies load, which is the point).
+pub fn slo_requests(reqs: &[WorkloadRequest]) -> Vec<SloRequest> {
+    let mut out = Vec::with_capacity(reqs.len());
+    for r in reqs {
+        for _ in 0..r.width.max(1) {
+            out.push(SloRequest::stamp(
+                SimRequest {
+                    arrival_ns: r.arrival_ns,
+                    prompt_id: r.prompt_id,
+                    prompt_tokens: r.prompt_tokens,
+                    gen_tokens: r.gen_tokens,
+                },
+                r.tier,
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SEED: u64 = 0x510_AD;
+
+    fn cfg(arrival: ArrivalKind) -> WorkloadConfig {
+        WorkloadConfig {
+            arrival,
+            ..WorkloadConfig::new(4096, SEED)
+        }
+    }
+
+    /// (Σ prompt_tokens, Σ gen_tokens, chat, long_context, voting) —
+    /// golden values mirrored by tools/seed_bench_slo.py; the arrival
+    /// process changes how many gap draws precede each request's
+    /// class/prompt/gen draws, so each process pins its own totals.
+    fn draw_totals(reqs: &[WorkloadRequest]) -> (usize, usize, usize, usize, usize) {
+        let p: usize = reqs.iter().map(|r| r.prompt_tokens).sum();
+        let g: usize = reqs.iter().map(|r| r.gen_tokens).sum();
+        let count = |c: RequestClass| -> usize { reqs.iter().filter(|r| r.class == c).count() };
+        (
+            p,
+            g,
+            count(RequestClass::Chat),
+            count(RequestClass::LongContext),
+            count(RequestClass::Voting),
+        )
+    }
+
+    #[test]
+    fn per_process_draw_totals_are_pinned() {
+        // mirrored bit-for-bit by tools/seed_bench_slo.py (PR-6 seeder
+        // pattern): a drift in draw order or RNG use fails here first.
+        let golden = [
+            (ArrivalKind::Uniform, GOLDEN_UNIFORM),
+            (ArrivalKind::Poisson, GOLDEN_POISSON),
+            (ArrivalKind::Bursty, GOLDEN_BURSTY),
+            (ArrivalKind::Diurnal, GOLDEN_DIURNAL),
+        ];
+        for (arrival, want) in golden {
+            let reqs = generate_mixed_workload(&cfg(arrival));
+            assert_eq!(draw_totals(&reqs), want, "arrival {}", arrival.name());
+        }
+    }
+
+    const GOLDEN_UNIFORM: (usize, usize, usize, usize, usize) = (523956, 185181, 2846, 820, 430);
+    const GOLDEN_POISSON: (usize, usize, usize, usize, usize) = (522938, 183742, 2866, 818, 412);
+    const GOLDEN_BURSTY: (usize, usize, usize, usize, usize) = (538826, 184713, 2833, 862, 401);
+    const GOLDEN_DIURNAL: (usize, usize, usize, usize, usize) = (522938, 183742, 2866, 818, 412);
+
+    #[test]
+    fn same_seed_is_bit_identical() {
+        for arrival in ArrivalKind::ALL {
+            let a = generate_mixed_workload(&cfg(arrival));
+            let b = generate_mixed_workload(&cfg(arrival));
+            assert_eq!(a, b, "arrival {}", arrival.name());
+        }
+    }
+
+    #[test]
+    fn classes_stay_in_range_with_correct_width_and_tier() {
+        let reqs = generate_mixed_workload(&cfg(ArrivalKind::Poisson));
+        let mut seen = [false; 3];
+        for r in &reqs {
+            let (p_lo, p_hi) = r.class.prompt_tokens();
+            let (g_lo, g_hi) = r.class.gen_tokens();
+            assert!(r.prompt_tokens >= p_lo && r.prompt_tokens <= p_hi);
+            assert!(r.gen_tokens >= g_lo && r.gen_tokens <= g_hi);
+            assert_eq!(r.tier, r.class.tier());
+            match r.class {
+                RequestClass::Chat => {
+                    seen[0] = true;
+                    assert_eq!(r.width, 1);
+                    assert!(r.prompt_id < 64);
+                }
+                RequestClass::LongContext => {
+                    seen[1] = true;
+                    assert_eq!(r.width, 1);
+                    assert!((64..128).contains(&r.prompt_id));
+                }
+                RequestClass::Voting => {
+                    seen[2] = true;
+                    assert_eq!(r.width, 4);
+                    assert!((128..192).contains(&r.prompt_id));
+                }
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "every class appears at 4096 draws");
+    }
+
+    #[test]
+    fn uniform_arrivals_are_integer_exact() {
+        let reqs = generate_mixed_workload(&cfg(ArrivalKind::Uniform));
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(r.arrival_ns, (i as u64 + 1) * 1_250_000);
+        }
+    }
+
+    #[test]
+    fn gap_draw_alignment_keeps_poisson_and_diurnal_streams_equal() {
+        // both consume exactly one gap draw per request, so the
+        // class/prompt/gen streams coincide — only arrival times move.
+        let p = generate_mixed_workload(&cfg(ArrivalKind::Poisson));
+        let d = generate_mixed_workload(&cfg(ArrivalKind::Diurnal));
+        for (a, b) in p.iter().zip(&d) {
+            assert_eq!((a.class, a.prompt_id, a.gen_tokens), (b.class, b.prompt_id, b.gen_tokens));
+        }
+    }
+
+    #[test]
+    fn slo_requests_flatten_voting_width() {
+        let reqs = generate_mixed_workload(&cfg(ArrivalKind::Uniform));
+        let flat = slo_requests(&reqs);
+        let want: usize = reqs.iter().map(|r| r.width).sum();
+        assert_eq!(flat.len(), want);
+        let mut i = 0;
+        for r in &reqs {
+            for _ in 0..r.width {
+                let s = &flat[i];
+                assert_eq!(s.sim.arrival_ns, r.arrival_ns);
+                assert_eq!(s.sim.prompt_id, r.prompt_id);
+                assert_eq!(s.tier, r.tier);
+                assert_eq!(s.ttft_deadline_ns, r.arrival_ns + r.tier.ttft_deadline_ns());
+                assert_eq!(s.e2e_deadline_ns, r.arrival_ns + r.tier.e2e_deadline_ns());
+                i += 1;
+            }
+        }
+    }
+}

@@ -45,9 +45,11 @@ fn usage() -> &'static str {
                 [--no-steal] [--trace] [--trace-events N]\n\
                 [--trace-out FILE] [--prom-out FILE]\n\
        sim      [--replicas N] [--lanes N] [--requests N] [--seed S]\n\
-                [--routing ...] [--no-steal] [--arrival uniform|poisson|bursty]\n\
+                [--routing ...] [--no-steal] [--arrival uniform|poisson|bursty|diurnal]\n\
                 [--mean-gap-us X] [--prompts N] [--fail-replica I --fail-at-ms T]\n\
                 [--trace-out FILE] [--metrics]\n\
+                [--slo] (mixed chat/long-context/voting workload under EDF +\n\
+                admission control; --slo-fcfs for the FCFS/open baseline)\n\
        inspect  | selftest"
 }
 
@@ -177,11 +179,16 @@ fn cmd_exp(args: &Args) -> Result<()> {
 }
 
 fn cmd_sim(args: &Args) -> Result<()> {
-    use hyperscale::engine::timeflow::{simulate, Arrival, ReplicaFailure, TimeflowConfig, WorkloadSpec};
+    use hyperscale::engine::slo::SloPolicy;
+    use hyperscale::engine::timeflow::{
+        simulate, simulate_slo, Arrival, ReplicaFailure, TimeflowConfig, WorkloadSpec,
+    };
+    use hyperscale::engine::workload::{generate_mixed_workload, slo_requests, WorkloadConfig};
 
     let ccfg = ClusterConfig::default().with_args(args)?;
     let ecfg = engine_cfg(args)?;
-    let mut cfg = TimeflowConfig::new(ccfg.replicas.max(1), args.get_usize("lanes", 4)?, ccfg.routing)
+    let lanes = args.get_usize("lanes", 4)?;
+    let mut cfg = TimeflowConfig::new(ccfg.replicas.max(1), lanes, ccfg.routing)
         .with_kv(ecfg.kv_dtype, ecfg.allocator);
     cfg.steal = ccfg.steal;
     let trace_out = args.get("trace-out").map(PathBuf::from);
@@ -193,24 +200,37 @@ fn cmd_sim(args: &Args) -> Result<()> {
         });
     }
 
-    let mut spec = WorkloadSpec::new(
-        args.get_usize("requests", 100_000)?,
-        args.get_usize("seed", 0)? as u64,
-    );
-    spec.arrival = args.get_str("arrival", "poisson").parse::<Arrival>()?;
-    spec.mean_gap_ns = (args.get_f64("mean-gap-us", 1250.0)? * 1e3) as u64;
-    spec.n_prompts = args.get_usize("prompts", 64)?;
+    let requests = args.get_usize("requests", 100_000)?;
+    let seed = args.get_usize("seed", 0)? as u64;
+    let mean_gap_ns = (args.get_f64("mean-gap-us", 1250.0)? * 1e3) as u64;
+    let n_prompts = args.get_usize("prompts", 64)?;
+    let arrival_name = args.get_str("arrival", "poisson");
+    let slo = args.flag("slo") || args.flag("slo-fcfs");
 
     let wall = std::time::Instant::now();
-    let rep = simulate(&cfg, &spec);
+    let mut rep = if slo {
+        let mut wcfg = WorkloadConfig::new(requests, seed);
+        wcfg.arrival = arrival_name.parse()?;
+        wcfg.mean_gap_ns = mean_gap_ns;
+        wcfg.n_prompts = n_prompts;
+        let reqs = slo_requests(&generate_mixed_workload(&wcfg));
+        let policy = if args.flag("slo-fcfs") {
+            SloPolicy::fcfs_open(cfg.replicas, cfg.lanes)
+        } else {
+            SloPolicy::edf_admitted(cfg.replicas, cfg.lanes)
+        };
+        simulate_slo(&cfg, &reqs, &policy)
+    } else {
+        let mut spec = WorkloadSpec::new(requests, seed);
+        spec.arrival = arrival_name.parse::<Arrival>()?;
+        spec.mean_gap_ns = mean_gap_ns;
+        spec.n_prompts = n_prompts;
+        simulate(&cfg, &spec)
+    };
     let wall_s = wall.elapsed().as_secs_f64();
     println!(
         "sim [{}] replicas={} lanes={} arrival={} requests={}",
-        rep.label,
-        cfg.replicas,
-        cfg.lanes,
-        spec.arrival.name(),
-        rep.requests
+        rep.label, cfg.replicas, cfg.lanes, arrival_name, rep.requests
     );
     println!(
         "  completed {} failed {} stolen {} gen_tokens {}",
@@ -225,6 +245,18 @@ fn cmd_sim(args: &Args) -> Result<()> {
         rep.utilization * 100.0,
         rep.span_ns as f64 / 1e6
     );
+    if slo {
+        let accepted = rep.registry.counter("serve.slo_accepted").get();
+        let queued = rep.registry.counter("serve.slo_queued").get();
+        let rejected = rep.registry.counter("serve.slo_rejected").get();
+        let ttft_miss = rep.registry.counter("serve.slo_ttft_miss").get();
+        let e2e_miss = rep.registry.counter("serve.slo_deadline_miss").get();
+        println!(
+            "  slo: accepted {accepted:.0} queued {queued:.0} rejected {rejected:.0} | \
+             ttft_miss {ttft_miss:.0} e2e_miss {e2e_miss:.0} | goodput {:.0} tok/s",
+            rep.slo_goodput_tokens_per_s
+        );
+    }
     println!("  simulated in {wall_s:.2}s wall");
     if let Some(path) = trace_out {
         std::fs::write(&path, rep.chrome_trace_json())?;

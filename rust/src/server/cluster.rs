@@ -65,7 +65,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::config::{ClusterConfig, EngineConfig};
-use crate::engine::{CompletedRequest, Engine, GenRequest, Session, SimEngine};
+use crate::engine::{CompletedRequest, Engine, GenRequest, Session, SimEngine, SloTier};
 use crate::metrics::{prometheus_merge, Registry};
 use crate::trace::{Stamped, TraceEvent, Tracer};
 use crate::util::Json;
@@ -87,6 +87,11 @@ pub trait Backend {
     /// [`submit`](Self::submit) recording `trace_id` as the
     /// client-visible request id on the backend's flight recorder.
     fn submit_traced(&mut self, req: &GenRequest, trace_id: Option<u64>) -> Result<u64>;
+    /// Stamp an already-submitted ticket with its SLO tier: the
+    /// scheduler gains the tier + absolute e2e deadline (EDF ordering,
+    /// tier-aware preemption) and completion ticks account deadline
+    /// misses into the `serve.slo_*` metrics.
+    fn assign_slo(&mut self, ticket: u64, tier: SloTier);
     /// Advance one scheduler tick; returns finished requests.
     fn tick(&mut self) -> Result<Vec<CompletedRequest>>;
     /// Nothing running or queued.
@@ -146,6 +151,9 @@ impl Backend for EngineBackend {
     fn submit_traced(&mut self, req: &GenRequest, trace_id: Option<u64>) -> Result<u64> {
         self.engine.submit_traced(&mut self.session, req, trace_id)
     }
+    fn assign_slo(&mut self, ticket: u64, tier: SloTier) {
+        self.engine.assign_slo(&mut self.session, ticket, tier)
+    }
     fn tick(&mut self) -> Result<Vec<CompletedRequest>> {
         self.engine.tick(&mut self.session)
     }
@@ -196,6 +204,9 @@ impl Backend for SimEngine {
     }
     fn submit_traced(&mut self, req: &GenRequest, trace_id: Option<u64>) -> Result<u64> {
         SimEngine::submit_traced(self, req, trace_id)
+    }
+    fn assign_slo(&mut self, ticket: u64, tier: SloTier) {
+        SimEngine::assign_slo(self, ticket, tier)
     }
     fn tick(&mut self) -> Result<Vec<CompletedRequest>> {
         SimEngine::tick(self)
@@ -625,6 +636,9 @@ fn handle_replica_msg<B: Backend>(
         ReplicaMsg::Request(req, reply) => {
             match backend.submit_traced(&gen_of(&req), Some(req.id)) {
                 Ok(ticket) => {
+                    if let Some(tier) = req.slo {
+                        backend.assign_slo(ticket, tier);
+                    }
                     inflight.insert(ticket, (req, reply));
                 }
                 Err(e) => {
@@ -985,6 +999,7 @@ mod tests {
             max_len: 96,
             temperature: 0.7,
             seed,
+            slo: None,
         }
     }
 

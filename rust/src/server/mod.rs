@@ -242,6 +242,9 @@ fn handle_msg(
             };
             match engine.submit_traced(session, &gen, Some(req.id)) {
                 Ok(ticket) => {
+                    if let Some(tier) = req.slo {
+                        engine.assign_slo(session, ticket, tier);
+                    }
                     inflight.insert(ticket, Inflight { req, reply });
                 }
                 Err(e) => {

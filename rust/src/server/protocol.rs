@@ -9,7 +9,7 @@
 
 use anyhow::{anyhow, Result};
 
-use crate::engine::RequestTiming;
+use crate::engine::{RequestTiming, SloTier};
 use crate::util::Json;
 
 /// Parsed generation request.
@@ -27,6 +27,9 @@ pub struct ServeRequest {
     pub temperature: f64,
     /// Base RNG seed; chain i uses seed + i.
     pub seed: u64,
+    /// SLO tier (`"interactive"`, `"standard"`, `"batch"`). `None`
+    /// means no deadline accounting for this request.
+    pub slo: Option<SloTier>,
 }
 
 /// Response payload.
@@ -129,6 +132,10 @@ pub fn parse_request(j: &Json) -> Result<ServeRequest> {
             .and_then(|x| x.as_f64())
             .unwrap_or(0.7),
         seed: j.get("seed").and_then(Json::as_i64).unwrap_or(0) as u64,
+        slo: match j.get("slo").and_then(Json::as_str) {
+            Some(s) => Some(s.parse()?),
+            None => None,
+        },
     })
 }
 
@@ -185,6 +192,16 @@ mod tests {
         let r = parse_request(&j).unwrap();
         assert_eq!(r.width, 1);
         assert_eq!(r.max_len, 160);
+        assert_eq!(r.slo, None);
+    }
+
+    #[test]
+    fn slo_tier_parses_and_rejects_unknown() {
+        let j = Json::parse(r#"{"prompt": "x", "slo": "interactive"}"#).unwrap();
+        let r = parse_request(&j).unwrap();
+        assert_eq!(r.slo, Some(SloTier::Interactive));
+        let bad = Json::parse(r#"{"prompt": "x", "slo": "platinum"}"#).unwrap();
+        assert!(parse_request(&bad).is_err());
     }
 
     #[test]

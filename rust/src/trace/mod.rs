@@ -88,6 +88,19 @@ pub enum TraceEvent {
         stage: &'static str,
         start_ns: u64,
     },
+    /// Request stamped with its SLO tier and absolute deadlines at
+    /// arrival (before the admission decision).
+    SloAssigned {
+        req: u64,
+        tier: &'static str,
+        ttft_deadline_ns: u64,
+        e2e_deadline_ns: u64,
+    },
+    /// Admission control turned the request away; it never ran.
+    Rejected { req: u64 },
+    /// A stamped deadline passed before the matching milestone
+    /// (`kind` is `"ttft"` or `"e2e"`).
+    DeadlineMiss { req: u64, kind: &'static str },
 }
 
 impl TraceEvent {
@@ -108,6 +121,9 @@ impl TraceEvent {
             TraceEvent::Steal { .. } => "steal",
             TraceEvent::ReplicaDead { .. } => "replica_dead",
             TraceEvent::Stage { stage, .. } => stage,
+            TraceEvent::SloAssigned { .. } => "slo_assigned",
+            TraceEvent::Rejected { .. } => "rejected",
+            TraceEvent::DeadlineMiss { .. } => "deadline_miss",
         }
     }
 
@@ -121,7 +137,10 @@ impl TraceEvent {
             | TraceEvent::Finish { req, .. }
             | TraceEvent::PrefixRestore { req, .. }
             | TraceEvent::Route { req, .. }
-            | TraceEvent::Stage { req, .. } => Some(req),
+            | TraceEvent::Stage { req, .. }
+            | TraceEvent::SloAssigned { req, .. }
+            | TraceEvent::Rejected { req }
+            | TraceEvent::DeadlineMiss { req, .. } => Some(req),
             _ => None,
         }
     }
@@ -218,6 +237,20 @@ impl TraceEvent {
                 .set("req", req)
                 .set("replica", replica)
                 .set("start_ns", start_ns),
+            TraceEvent::SloAssigned {
+                req,
+                tier,
+                ttft_deadline_ns,
+                e2e_deadline_ns,
+            } => Json::obj()
+                .set("req", req)
+                .set("tier", tier)
+                .set("ttft_deadline_ns", ttft_deadline_ns)
+                .set("e2e_deadline_ns", e2e_deadline_ns),
+            TraceEvent::Rejected { req } => Json::obj().set("req", req),
+            TraceEvent::DeadlineMiss { req, kind } => {
+                Json::obj().set("req", req).set("kind", kind)
+            }
         }
     }
 
@@ -294,6 +327,17 @@ impl TraceEvent {
             "replica_dead" => TraceEvent::ReplicaDead {
                 replica: u("replica")?,
             },
+            "slo_assigned" => TraceEvent::SloAssigned {
+                req: id("req")?,
+                tier: intern_tier(args.get("tier").and_then(Json::as_str)?)?,
+                ttft_deadline_ns: id("ttft_deadline_ns")?,
+                e2e_deadline_ns: id("e2e_deadline_ns")?,
+            },
+            "rejected" => TraceEvent::Rejected { req: id("req")? },
+            "deadline_miss" => TraceEvent::DeadlineMiss {
+                req: id("req")?,
+                kind: intern_miss_kind(args.get("kind").and_then(Json::as_str)?)?,
+            },
             _ => return None,
         })
     }
@@ -305,6 +349,19 @@ fn intern_stage(name: &str) -> Option<&'static str> {
     ["dequant", "prefill", "first_token", "decode", "queue"]
         .into_iter()
         .find(|s| *s == name)
+}
+
+/// Map a parsed SLO tier name back to the `&'static str` emitted by
+/// `SloTier::name` (a closed set).
+fn intern_tier(name: &str) -> Option<&'static str> {
+    ["interactive", "standard", "batch"]
+        .into_iter()
+        .find(|s| *s == name)
+}
+
+/// Map a parsed deadline-miss kind back to its `&'static str` form.
+fn intern_miss_kind(name: &str) -> Option<&'static str> {
+    ["ttft", "e2e"].into_iter().find(|s| *s == name)
 }
 
 /// A [`TraceEvent`] with its stamp: integer nanoseconds (wall, logical
@@ -711,6 +768,14 @@ mod tests {
                 stage: "decode",
                 start_ns: 500,
             },
+            TraceEvent::SloAssigned {
+                req: 1,
+                tier: "interactive",
+                ttft_deadline_ns: 20_000_000,
+                e2e_deadline_ns: 50_000_000,
+            },
+            TraceEvent::Rejected { req: 1 },
+            TraceEvent::DeadlineMiss { req: 1, kind: "e2e" },
         ];
         for (i, event) in variants.into_iter().enumerate() {
             let s = Stamped {

@@ -35,7 +35,8 @@
 use hyperscale::compress::{build_policy, PolicyKind};
 use hyperscale::config::{ClusterConfig, RoutingPolicy};
 use hyperscale::engine::{
-    ChainState, GenRequest, Phase, Scheduler, SchedulerConfig, SimEngine, SimEngineConfig,
+    AdmissionPolicy, ChainState, GenRequest, Phase, Scheduler, SchedulerConfig, SimEngine,
+    SimEngineConfig,
 };
 use hyperscale::kvcache::KvDtype;
 use hyperscale::server::{Cluster, ServeRequest};
@@ -84,6 +85,7 @@ fn sreq(id: u64, prompt: &str, seed: u64) -> ServeRequest {
         max_len: 160,
         temperature: 0.7,
         seed,
+        slo: None,
     }
 }
 
@@ -593,4 +595,53 @@ fn drain_queued_never_takes_resumed_chains() {
     assert_eq!(s.queue_depth(), 1);
     assert_eq!(s.stealable_requests(), 0);
     assert!(s.drain_queued(10).is_empty());
+}
+
+/// Regression: shortest-first used to break equal-`max_len` ties on
+/// queue *position*, which steals and preemption re-queues permute —
+/// two same-seed replicas could admit identical workloads in different
+/// orders. Ties now break on ticket (then chain index). This scenario
+/// permutes the queue both ways (a steal takes the youngest two, a
+/// preemption re-queues the oldest at the *back*) and asserts the
+/// admitted order is still exactly ticket order, twice.
+#[test]
+fn shortest_first_ties_break_on_ticket_despite_queue_permutation() {
+    let run = || -> Vec<u64> {
+        let cfg = SchedulerConfig {
+            admission: AdmissionPolicy::ShortestFirst,
+            ..SchedulerConfig::default()
+        };
+        let mut s = Scheduler::new(1, cfg);
+        let ids = Arc::new(vec![1u32; 4]);
+        let tickets: Vec<u64> = (0..8)
+            .map(|i| s.submit(&sched_req(1, 24, i), ids.clone()))
+            .collect();
+        // permutation 1: steal the two youngest requests
+        let stolen: Vec<u64> = s.drain_queued(2).into_iter().map(|(t, _)| t).collect();
+        assert_eq!(stolen, vec![tickets[7], tickets[6]]);
+        // permutation 2: admit the winner, then preempt it so it
+        // re-enters the queue at the back — position now disagrees
+        // with ticket order for the remaining six
+        let p = s.next_admission().unwrap();
+        assert_eq!(p.ticket, tickets[0], "lowest ticket wins the tie");
+        s.install(0, ChainState::new(p, policy(24), 0));
+        s.preempt(0);
+        let mut admitted = Vec::new();
+        while let Some(p) = s.next_admission() {
+            admitted.push(p.ticket);
+        }
+        admitted
+    };
+    let first = run();
+    let second = run();
+    assert_eq!(first, tickets_in_order(&first), "ticket order, not queue order");
+    assert_eq!(first, second, "same-seed runs admit identically");
+}
+
+/// The submitted tickets of `first`, sorted ascending — shortest-first
+/// with equal lengths must admit in exactly this order.
+fn tickets_in_order(tickets: &[u64]) -> Vec<u64> {
+    let mut sorted = tickets.to_vec();
+    sorted.sort_unstable();
+    sorted
 }

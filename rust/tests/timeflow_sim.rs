@@ -25,7 +25,12 @@ use std::collections::HashMap;
 
 use hyperscale::config::RoutingPolicy;
 use hyperscale::engine::timeflow::{
-    simulate, Arrival, ReplicaFailure, SimReport, Stage, TimeflowConfig, WorkloadSpec,
+    simulate, Arrival, ReplicaFailure, SimReport, SimRequest, Stage, TimeflowConfig,
+    WorkloadSpec,
+};
+use hyperscale::engine::{
+    generate_mixed_workload, simulate_slo, slo_requests, ArrivalKind, SloPolicy, SloRequest,
+    SloTier, WorkloadConfig,
 };
 use hyperscale::util::SplitMix64;
 
@@ -210,4 +215,107 @@ fn queue_wait_only_under_contention() {
     let waits = rep.registry.histogram_samples("sim.queue_wait_ns");
     assert!(waits.iter().all(|&w| w == 0.0), "uncontended ⇒ no waiting");
     assert!(rep.utilization < 0.5, "mostly idle cluster");
+}
+
+// ----------------------------------------------------------------------
+// SLO schedulability anchors (closed-form; see docs/TESTING.md)
+// ----------------------------------------------------------------------
+
+/// Closed-form schedulability bound: with 40 ms uniform gaps over
+/// 2x2 lanes, the worst-case f32 service time (a 768-prompt/96-token
+/// long-context request: 768 x 17 339 + 96 x 150 136 ≈ 27.7 ms) fits
+/// inside one inter-arrival gap, and even a width-4 voting fan-out
+/// (4 chat-sized chains, round-robined two per replica) finds an idle
+/// lane — so no chain ever queues. Worst TTFT (prefill + first decode
+/// ≈ 13.5 ms for long-context/Batch, ≈ 1.8 ms for chat/Interactive)
+/// sits under every tier's TTFT deadline, and worst e2e (≈ 27.7 ms)
+/// under every e2e deadline. Peak admission commitment (≤ 3 live
+/// arrivals x ≤ 864 tokens) stays under the 4096-token capacity. The
+/// admitted set is therefore *everything*, and everything meets every
+/// deadline — for any seed.
+#[test]
+fn uncontended_admitted_set_meets_every_deadline() {
+    let mut wcfg = WorkloadConfig::new(256, prop_seed());
+    wcfg.arrival = ArrivalKind::Uniform;
+    wcfg.mean_gap_ns = 40_000_000;
+    let reqs = slo_requests(&generate_mixed_workload(&wcfg));
+    let mut cfg = TimeflowConfig::new(2, 2, RoutingPolicy::RoundRobin);
+    cfg.steal = false;
+    cfg.prefix_cache = false;
+    let mut rep = simulate_slo(&cfg, &reqs, &SloPolicy::edf_admitted(2, 2));
+    assert_eq!(rep.completed, reqs.len());
+    assert_eq!(
+        rep.registry.counter("serve.slo_accepted").get(),
+        reqs.len() as f64,
+        "uncontended load must be admitted outright"
+    );
+    for c in [
+        "serve.slo_queued",
+        "serve.slo_rejected",
+        "serve.slo_ttft_miss",
+        "serve.slo_deadline_miss",
+    ] {
+        assert_eq!(rep.registry.counter(c).get(), 0.0, "{c} must stay zero uncontended");
+    }
+    assert_eq!(
+        rep.registry.counter("serve.slo_goodput_tokens").get(),
+        rep.gen_tokens as f64,
+        "every generated token counts as goodput when no deadline misses"
+    );
+}
+
+/// Hand-verifiable overload: 20 requests of 32 prompt + 16 gen tokens
+/// (service 32 x 17 339 + 16 x 150 136 = 2 957 024 ns each) hit one
+/// f32 lane at t = 0 — ten Batch (e2e 2.5 s) submitted first, ten
+/// Interactive (e2e 50 ms) behind them.
+///
+/// * FCFS serves in arrival order: the k-th completion lands at
+///   k x 2.957 ms, so Interactive requests finish 11th–20th at
+///   32.5–59.1 ms. 16 x 2.957 = 47.3 ≤ 50 < 17 x 2.957, so exactly
+///   the last four Interactive requests miss: 16 met, 4 missed.
+/// * EDF: the first Batch arrival grabs the idle lane before any
+///   competition exists, then every Interactive deadline (50 ms)
+///   sorts ahead of Batch (2.5 s): Interactive finishes 2nd–11th by
+///   11 x 2.957 = 32.5 ms < 50 ms, and every Batch request still
+///   lands by 59.1 ms ≪ 2.5 s — 20 met, 0 missed. Admission changes
+///   nothing here (20 x 48 = 960 tokens ≤ the 1024-token capacity),
+///   isolating the EDF win.
+#[test]
+fn edf_beats_fcfs_on_deadline_met_count_under_overload() {
+    let mut reqs: Vec<SloRequest> = Vec::new();
+    for i in 0..20 {
+        let tier = if i < 10 { SloTier::Batch } else { SloTier::Interactive };
+        reqs.push(SloRequest::stamp(
+            SimRequest {
+                arrival_ns: 0,
+                prompt_id: i,
+                prompt_tokens: 32,
+                gen_tokens: 16,
+            },
+            tier,
+        ));
+    }
+    let mut cfg = TimeflowConfig::new(1, 1, RoutingPolicy::RoundRobin);
+    cfg.steal = false;
+    cfg.prefix_cache = false;
+
+    let mut edf = simulate_slo(&cfg, &reqs, &SloPolicy::edf_admitted(1, 1));
+    let mut fcfs = simulate_slo(&cfg, &reqs, &SloPolicy::fcfs_open(1, 1));
+    assert_eq!(edf.completed, 20, "admission must not reject the 960-token burst");
+    assert_eq!(fcfs.completed, 20);
+
+    let edf_miss = edf.registry.counter("serve.slo_deadline_miss").get();
+    let fcfs_miss = fcfs.registry.counter("serve.slo_deadline_miss").get();
+    assert_eq!(edf_miss, 0.0, "EDF meets every deadline in the worked example");
+    assert_eq!(fcfs_miss, 4.0, "FCFS misses exactly the last four Interactive e2es");
+    let edf_met = edf.completed as f64 - edf_miss;
+    let fcfs_met = fcfs.completed as f64 - fcfs_miss;
+    assert!(
+        edf_met > fcfs_met,
+        "EDF must strictly beat FCFS on deadline-met count ({edf_met} vs {fcfs_met})"
+    );
+    assert!(
+        edf.slo_goodput_tokens_per_s > fcfs.slo_goodput_tokens_per_s,
+        "the deadline-met margin must show up as goodput"
+    );
 }

@@ -1,0 +1,373 @@
+#!/usr/bin/env python3
+"""Analytically seed tools/bench_baselines/BENCH_slo.json for bench_serve's SLO leg.
+
+``bench_serve --smoke --slo-out BENCH_slo.json`` emits a perf *model*
+document: every gated number is a pure function of the workload seed
+(0x510AD), the mixed-workload generator (rust/src/engine/workload.rs),
+and the admission controller (rust/src/engine/slo.rs). This script
+re-derives the pinnable subset bit-for-bit in Python:
+
+* ``workload.<arrival>.*`` — integer draw totals (Σ prompt tokens,
+  Σ gen tokens, per-class counts) of the 4096-request mixed stream for
+  every arrival process. Exponential gap *values* go through libm
+  ``ln`` (not bit-pinned across platforms) but each gap consumes
+  exactly one ``f64()`` draw at a fixed stream position, so the
+  class/prompt/gen draws — and therefore the totals — are exact for
+  uniform, poisson, bursty, *and* diurnal arrivals;
+* ``admission.uniform.<dtype>.*`` — the accept/queue/reject split of
+  the uniform-arrival stream (integer arrival times, width-flattened)
+  offered to ``AdmissionController`` at ``byte_capacity(1, 1)``. All
+  controller arithmetic is u64, so the decision stream is a closed
+  form. f32 vs q4 pins the hyper-scaling dividend: same byte capacity,
+  ~7x smaller per-request demand, strictly more admitted load;
+* ``slo.q4_admits_more_than_f32`` / ``slo.edf_beats_fcfs`` — the
+  issue's acceptance invariants. The bench asserts both at runtime and
+  emits 1; the baselines pin them at 1 so a silent flip (emitting 0)
+  fails the gate even if the assert were removed;
+* ``sweep.r{64,128,256,512}.*`` — virtual-time TTFT tails + goodput of
+  the hyperscale sweep. Deterministic, but they run the full
+  discrete-event simulator, which this script does not mirror: emitted
+  as null (structural gate). Refresh from the BENCH_slo.json artifact
+  uploaded by CI to activate value gating.
+
+The script also prints the golden draw-total tuples pinned by
+``per_process_draw_totals_are_pinned`` in rust/src/engine/workload.rs —
+the third mirror of the same stream.
+
+Usage: python3 tools/seed_bench_slo.py [--out tools/bench_baselines/BENCH_slo.json]
+
+Without --out the baseline JSON is printed to stdout.
+"""
+
+import argparse
+import json
+import math
+import sys
+
+M64 = (1 << 64) - 1
+
+# -- rust/src/util/rng.rs ---------------------------------------------------
+
+
+class SplitMix64:
+    def __init__(self, seed: int) -> None:
+        self.state = seed & M64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & M64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & M64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & M64
+        return (z ^ (z >> 31)) & M64
+
+    def f64(self) -> float:
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def below(self, n: int) -> int:
+        return self.next_u64() % n
+
+    def weighted(self, weights: list) -> int:
+        total = 0.0
+        for w in weights:
+            total += w
+        x = self.f64() * total
+        for i, w in enumerate(weights):
+            x -= w
+            if x <= 0.0:
+                return i
+        return len(weights) - 1
+
+
+def round_half_up(x: float) -> int:
+    """Rust ``f64::round`` (half away from zero) for non-negative x."""
+    assert x >= 0.0
+    return math.floor(x + 0.5)
+
+
+# -- rust/src/engine/timeflow.rs CostModel (Llama 3.1 8B on H100) -----------
+#
+# Same derivation as tools/seed_bench_sim.py, plus kv_bytes_per_token
+# (the admission controller's demand unit).
+
+N_LAYERS = 32.0
+D_MODEL = 4096.0
+D_FF = 14336.0
+D_KV = 1024.0
+VOCAB = 128256.0
+W_BYTES = 2.0  # weight/activation bytes per element (bf16)
+
+FLOPS_PER_S = 989.5e12  # H100 SXM bf16 dense
+BYTES_PER_S = 3.35e12  # H100 HBM
+
+HEAD_DIM = 64
+REF_BATCH = 64.0
+REF_SEQ = 4096.0
+REF_CR = 4.0
+UPLOAD_BYTES_PER_S = 64e9
+DEQUANT_BYTES_PER_S = 8e9
+
+
+def row_payload_bytes(dtype: str, row_len: int) -> int:
+    """KvDtype::row_payload_bytes (kvcache/quant.rs)."""
+    if dtype == "f32":
+        return row_len * 4
+    codes = row_len if dtype == "q8" else (row_len + 1) // 2
+    return codes + 5  # codes + f32 scale + u8 zero-point
+
+
+def flops(batch: float, seq: float) -> float:
+    per_layer = (
+        6.0 * D_MODEL * D_FF
+        + 4.0 * D_MODEL * D_MODEL
+        + 4.0 * D_MODEL * D_KV
+        + 4.0 * D_MODEL * seq
+    )
+    return N_LAYERS * batch * per_layer + 2.0 * batch * D_MODEL * VOCAB
+
+
+def kv_reads(kv_bytes: float, batch: float, seq: float) -> float:
+    return N_LAYERS * 2.0 * batch * seq * D_KV * kv_bytes
+
+
+def reads(kv_bytes: float, batch: float, seq: float) -> float:
+    params_per_layer = (
+        3.0 * D_MODEL * D_FF + 2.0 * D_MODEL * D_MODEL + 2.0 * D_MODEL * D_KV
+    )
+    return (N_LAYERS * params_per_layer + D_MODEL * VOCAB) * W_BYTES + kv_reads(
+        kv_bytes, batch, seq
+    )
+
+
+def cost_model(dtype: str) -> dict:
+    """CostModel::default_for(dtype, Uniform): prefill/decode ns + KV bytes."""
+    kv_bytes = row_payload_bytes(dtype, HEAD_DIM) / float(HEAD_DIM)
+    prefill_s = flops(1.0, REF_SEQ) / FLOPS_PER_S
+
+    layers = int(N_LAYERS)
+    kv_heads = max(int(D_KV) // HEAD_DIM, 1)
+    cells = float(layers * kv_heads)
+    glob = int((REF_SEQ / REF_CR) * cells)
+    eff_seq = min(glob / cells, REF_SEQ)
+    t_compute = flops(REF_BATCH, REF_SEQ) / FLOPS_PER_S
+    t_memory = (
+        reads(kv_bytes, REF_BATCH, 0.0) + kv_reads(kv_bytes, REF_BATCH, eff_seq)
+    ) / BYTES_PER_S
+    decode_s = max(t_compute, t_memory) / REF_BATCH
+
+    rows_per_token = N_LAYERS * (D_KV / float(HEAD_DIM)) * 2.0
+    bytes_per_token = rows_per_token * float(row_payload_bytes(dtype, HEAD_DIM))
+
+    return {
+        "prefill_ns": max(round_half_up(prefill_s * 1e9), 1),
+        "decode_ns": max(round_half_up(decode_s * 1e9), 1),
+        # exact: rows_per_token and the payload bytes are integers
+        "kv_bytes_per_token": int(bytes_per_token),
+    }
+
+
+# -- rust/src/engine/workload.rs --------------------------------------------
+
+SEED = 0x510AD  # workload.rs test SEED == bench_serve SLO_SEED
+REQUESTS = 4096
+N_PROMPTS = 64
+MEAN_GAP_NS = 1_250_000
+BURST = 32
+MIX = [0.70, 0.20, 0.10]
+VOTE_WIDTH = 4
+DIURNAL_GAP_MULT = [1, 1, 2, 4, 8, 4, 2, 1]
+
+ARRIVALS = ("uniform", "poisson", "bursty", "diurnal")
+CLASSES = ("chat", "long_context", "voting")
+PROMPT_RANGE = {"chat": (32, 96), "long_context": (256, 768), "voting": (32, 96)}
+GEN_RANGE = {"chat": (16, 64), "long_context": (32, 96), "voting": (16, 64)}
+
+
+def zipf_weights(n: int, s: float) -> list:
+    return [1.0 / k if s == 1.0 else float(k) ** (-s) for k in range(1, n + 1)]
+
+
+def exp_gap(rng: SplitMix64, mean_ns: int) -> int:
+    u = rng.f64()
+    # libm ln is not bit-pinned across platforms, but the gap consumes
+    # exactly one draw either way; the gated totals depend only on
+    # stream position, never on gap values
+    return round_half_up(-math.log(1.0 - u) * float(mean_ns))
+
+
+def generate_mixed_workload(requests: int, arrival: str) -> list:
+    """Mirror of generate_mixed_workload: (arrival_ns, class, width, prompt, gen).
+
+    Draw order per request is fixed — gap, class, prompt id, gen
+    tokens. Uniform arrivals consume no gap draw; bursty consumes one
+    per burst head only.
+    """
+    rng = SplitMix64(SEED)
+    zipf = zipf_weights(N_PROMPTS, 1.0)
+    phase_len = max(requests // len(DIURNAL_GAP_MULT), 1)
+    t = 0
+    out = []
+    for i in range(requests):
+        if arrival == "uniform":
+            t += MEAN_GAP_NS
+        elif arrival == "poisson":
+            t += exp_gap(rng, MEAN_GAP_NS)
+        elif arrival == "bursty":
+            if i % BURST == 0:
+                t += exp_gap(rng, MEAN_GAP_NS * BURST)
+        elif arrival == "diurnal":
+            mult = DIURNAL_GAP_MULT[(i // phase_len) % len(DIURNAL_GAP_MULT)]
+            t += exp_gap(rng, MEAN_GAP_NS * mult)
+        else:
+            raise ValueError(arrival)
+        cname = CLASSES[rng.weighted(MIX)]
+        raw_id = rng.weighted(zipf)
+        p_lo, p_hi = PROMPT_RANGE[cname]
+        prompt = p_lo + (raw_id * 37) % (p_hi - p_lo + 1)
+        g_lo, g_hi = GEN_RANGE[cname]
+        gen = g_lo + rng.below(g_hi - g_lo + 1)
+        width = VOTE_WIDTH if cname == "voting" else 1
+        out.append((t, cname, width, prompt, gen))
+    return out
+
+
+def draw_totals(work: list) -> tuple:
+    """(Σ prompt, Σ gen, chat, long_context, voting) — the golden tuple
+    pinned by per_process_draw_totals_are_pinned in workload.rs."""
+    counts = {c: 0 for c in CLASSES}
+    for _, cname, _, _, _ in work:
+        counts[cname] += 1
+    return (
+        sum(r[3] for r in work),
+        sum(r[4] for r in work),
+        counts["chat"],
+        counts["long_context"],
+        counts["voting"],
+    )
+
+
+# -- rust/src/engine/slo.rs AdmissionController -----------------------------
+
+LANE_RESIDENT_TOKENS = 1024
+SERVICE_WINDOW_SLACK = 4
+
+
+def byte_capacity(replicas: int, lanes: int) -> int:
+    f32_bytes = cost_model("f32")["kv_bytes_per_token"]
+    return replicas * lanes * LANE_RESIDENT_TOKENS * f32_bytes
+
+
+def admission_counts(work: list, cost: dict, capacity: int) -> tuple:
+    """(accepted, queued, rejected) of the width-flattened stream.
+
+    Bit-for-bit port of AdmissionController::offer: u64 ledger with
+    per-request commitment windows, accepted set capped at capacity,
+    queued headroom capped at 2x capacity with doubled windows.
+    """
+    kv = cost["kv_bytes_per_token"]
+    prefill = cost["prefill_ns"]
+    decode = cost["decode_ns"]
+    ledger = []  # (expiry_ns, bytes, accepted)
+    accepted_bytes = queued_bytes = 0
+    accepted = queued = rejected = 0
+    for t, _cname, width, prompt, gen in work:
+        for _ in range(width):
+            keep = []
+            for expiry, b, acc in ledger:
+                if expiry <= t:
+                    if acc:
+                        accepted_bytes -= b
+                    else:
+                        queued_bytes -= b
+                else:
+                    keep.append((expiry, b, acc))
+            ledger = keep
+            d = (prompt + gen) * kv
+            w = (prompt * prefill + gen * decode) * SERVICE_WINDOW_SLACK
+            if accepted_bytes + d <= capacity:
+                ledger.append((t + w, d, True))
+                accepted_bytes += d
+                accepted += 1
+            elif accepted_bytes + queued_bytes + d <= 2 * capacity:
+                ledger.append((t + 2 * w, d, False))
+                queued_bytes += d
+                queued += 1
+            else:
+                rejected += 1
+    return accepted, queued, rejected
+
+
+# -- baseline document ------------------------------------------------------
+
+NOTE = (
+    "Analytically seeded baseline for the bench_serve SLO leg (see "
+    "tools/seed_bench_slo.py for the derivations). workload.* draw "
+    "totals and admission.uniform.* splits are bit-for-bit mirrors of "
+    "the seeded stream + u64 admission ledger, so the +/-25% gate "
+    "exists only to absorb pathological last-ulp divergence between "
+    "platforms. slo.* indicators pin the issue's acceptance invariants "
+    "at 1 (the bench asserts them at runtime). Null entries are "
+    "structural gates for the 64-512-replica sweep, which runs the "
+    "full discrete-event simulator: refresh them from the "
+    "BENCH_slo.json artifact uploaded by CI to activate value gating."
+)
+
+SWEEP_REPLICAS = (64, 128, 256, 512)
+SWEEP_METRICS = ("ttft_p50_ns", "ttft_p99_ns", "ttft_p999_ns", "goodput_tokens_per_s")
+
+
+def build_gated() -> dict:
+    gated = {}
+    for arrival in ARRIVALS:
+        work = generate_mixed_workload(REQUESTS, arrival)
+        prompt, gen, chat, long_ctx, voting = draw_totals(work)
+        gated[f"workload.{arrival}.prompt_tokens"] = prompt
+        gated[f"workload.{arrival}.gen_tokens"] = gen
+        gated[f"workload.{arrival}.chat"] = chat
+        gated[f"workload.{arrival}.long_context"] = long_ctx
+        gated[f"workload.{arrival}.voting"] = voting
+
+    uniform = generate_mixed_workload(REQUESTS, "uniform")
+    capacity = byte_capacity(1, 1)
+    admitted = {}
+    for dtype in ("f32", "q4"):
+        acc, q, rej = admission_counts(uniform, cost_model(dtype), capacity)
+        gated[f"admission.uniform.{dtype}.accepted"] = acc
+        gated[f"admission.uniform.{dtype}.queued"] = q
+        gated[f"admission.uniform.{dtype}.rejected"] = rej
+        admitted[dtype] = acc
+    assert admitted["q4"] > admitted["f32"], (
+        "q4 must admit strictly more than f32 at the same byte capacity"
+    )
+    gated["slo.q4_admits_more_than_f32"] = 1
+    gated["slo.edf_beats_fcfs"] = 1
+
+    for replicas in SWEEP_REPLICAS:
+        for metric in SWEEP_METRICS:
+            gated[f"sweep.r{replicas}.{metric}"] = None
+    return gated
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", help="write the baseline JSON here")
+    args = ap.parse_args()
+
+    gated = build_gated()
+    doc = {"bench": "slo", "schema": 1, "note": NOTE, "gated": gated}
+    text = json.dumps(doc, indent=2) + "\n"
+    if args.out:
+        with open(args.out, "w", encoding="utf-8") as f:
+            f.write(text)
+        pinned = sum(1 for v in gated.values() if v is not None)
+        print(f"wrote {args.out}: {pinned} pinned, "
+              f"{len(gated) - pinned} structural")
+        for arrival in ARRIVALS:
+            totals = draw_totals(generate_mixed_workload(REQUESTS, arrival))
+            print(f"GOLDEN_{arrival.upper()}: {totals}")
+    else:
+        sys.stdout.write(text)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,117 @@
+#!/usr/bin/env python3
+"""Self-test for the BENCH_slo seeder (stdlib only).
+
+Run directly (``python3 tools/test_seed_bench_slo.py``) or via
+``python3 -m unittest`` from ``tools/``. The golden tuples here are the
+same values pinned by ``per_process_draw_totals_are_pinned`` in
+rust/src/engine/workload.rs — three mirrors (Rust generator, Python
+seeder, this test) of one seeded stream, so a drift in any one of them
+fails a gate before it can reseed a wrong baseline.
+"""
+
+import sys
+import unittest
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+from seed_bench_slo import (  # noqa: E402
+    REQUESTS,
+    admission_counts,
+    build_gated,
+    byte_capacity,
+    cost_model,
+    draw_totals,
+    generate_mixed_workload,
+)
+
+# (Σ prompt_tokens, Σ gen_tokens, chat, long_context, voting) at
+# 4096 requests, seed 0x510AD — keep in sync with workload.rs.
+GOLDEN = {
+    "uniform": (523956, 185181, 2846, 820, 430),
+    "poisson": (522938, 183742, 2866, 818, 412),
+    "bursty": (538826, 184713, 2833, 862, 401),
+    "diurnal": (522938, 183742, 2866, 818, 412),
+}
+
+
+class DrawTotals(unittest.TestCase):
+    def test_per_process_draw_totals_match_rust_goldens(self):
+        for arrival, want in GOLDEN.items():
+            got = draw_totals(generate_mixed_workload(REQUESTS, arrival))
+            self.assertEqual(got, want, f"arrival {arrival}")
+
+    def test_class_counts_cover_every_request(self):
+        for arrival, (_, _, chat, long_ctx, voting) in GOLDEN.items():
+            self.assertEqual(chat + long_ctx + voting, REQUESTS, arrival)
+
+    def test_poisson_and_diurnal_draw_streams_coincide(self):
+        # both consume exactly one gap draw per request, so only the
+        # arrival times differ (the Rust suite pins the same alignment)
+        self.assertEqual(GOLDEN["poisson"], GOLDEN["diurnal"])
+        p = generate_mixed_workload(256, "poisson")
+        d = generate_mixed_workload(256, "diurnal")
+        self.assertEqual(
+            [(c, w, pt, g) for _, c, w, pt, g in p],
+            [(c, w, pt, g) for _, c, w, pt, g in d],
+        )
+
+    def test_same_seed_is_bit_identical(self):
+        for arrival in GOLDEN:
+            self.assertEqual(
+                generate_mixed_workload(512, arrival),
+                generate_mixed_workload(512, arrival),
+            )
+
+
+class CostModel(unittest.TestCase):
+    def test_matches_rust_pinned_pricing(self):
+        # CostModel::default_for(dtype, Uniform) — values pinned by the
+        # BENCH_sim baseline and the timeflow unit tests
+        self.assertEqual(
+            cost_model("f32"),
+            {"prefill_ns": 17339, "decode_ns": 150136, "kv_bytes_per_token": 262144},
+        )
+        self.assertEqual(
+            cost_model("q4"),
+            {"prefill_ns": 17339, "decode_ns": 81587, "kv_bytes_per_token": 37888},
+        )
+
+
+class Admission(unittest.TestCase):
+    def test_conservation_and_q4_dividend(self):
+        work = generate_mixed_workload(REQUESTS, "uniform")
+        offers = sum(w for _, _, w, _, _ in work)
+        capacity = byte_capacity(1, 1)
+        split = {}
+        for dtype in ("f32", "q4"):
+            acc, q, rej = admission_counts(work, cost_model(dtype), capacity)
+            self.assertEqual(acc + q + rej, offers, dtype)
+            split[dtype] = acc
+        self.assertGreater(split["q4"], split["f32"])
+
+    def test_tiny_capacity_still_conserves(self):
+        work = generate_mixed_workload(64, "uniform")
+        offers = sum(w for _, _, w, _, _ in work)
+        c = cost_model("f32")
+        acc, q, rej = admission_counts(work, c, c["kv_bytes_per_token"] * 48)
+        self.assertEqual(acc + q + rej, offers)
+        self.assertGreater(rej, 0, "48-token capacity must reject most load")
+
+
+class Baseline(unittest.TestCase):
+    def test_gated_keys_are_complete(self):
+        gated = build_gated()
+        for arrival in GOLDEN:
+            for m in ("prompt_tokens", "gen_tokens", "chat", "long_context", "voting"):
+                self.assertIn(f"workload.{arrival}.{m}", gated)
+        for dtype in ("f32", "q4"):
+            for m in ("accepted", "queued", "rejected"):
+                self.assertIn(f"admission.uniform.{dtype}.{m}", gated)
+        self.assertEqual(gated["slo.q4_admits_more_than_f32"], 1)
+        self.assertEqual(gated["slo.edf_beats_fcfs"], 1)
+        sweep = [k for k, v in gated.items() if k.startswith("sweep.") and v is None]
+        self.assertEqual(len(sweep), 16, "4 replica counts x 4 metrics, structural")
+
+
+if __name__ == "__main__":
+    unittest.main()
