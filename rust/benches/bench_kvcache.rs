@@ -19,11 +19,19 @@
 //! `--smoke` runs only the payload-format section with reduced
 //! iterations and emits the perf-regression JSON (`--out
 //! BENCH_kvcache.json`) CI diffs against `tools/bench_baselines/`.
-//! Gated metrics are the *deterministic* byte-accounting numbers
-//! (pooled bytes per cached token per dtype and the compression ratios
-//! vs f32); publish/restore latencies are machine-dependent info.
+//! Gated metrics: the *deterministic* byte-accounting numbers (pooled
+//! bytes per cached token per dtype and the compression ratios vs
+//! f32) gate by value; publish/restore latencies and the
+//! scalar-vs-vectorized codec speedups are machine-dependent, so they
+//! gate *structurally* (null baselines: present + numeric). The
+//! codec-speedup legs additionally assert in-bench that the
+//! production [`VectorizedCodec`] beats the retained [`ScalarCodec`]
+//! reference by >= 2x on the publish/restore (encode+decode) work at
+//! q8 and q4. Publish-side buffer-acquisition time (`kv.alloc_us`) is
+//! reported separately from codec time (`kv.dequant_us`) so allocator
+//! churn is never conflated with encode/decode cost.
 
-use hyperscale::kvcache::{CacheStore, Geometry, KvDtype};
+use hyperscale::kvcache::{CacheStore, Codec, Geometry, KvDtype, ScalarCodec, VectorizedCodec};
 use hyperscale::util::benchkit::bench;
 use hyperscale::util::{Args, Json};
 
@@ -184,13 +192,15 @@ fn payload_format_benches(smoke: bool) -> (Json, Json) {
             }
             let n_pages = tokens / g2.page_size;
 
-            // publish cost: snapshot + encode one page into the pool
+            // publish cost: snapshot + encode one page into the pool.
+            // Machine-dependent, so the baseline entry is null
+            // (structural gate: must exist and be numeric).
             let r = bench(&format!("publish_{dtype}_{label}"), 5, iters, || {
                 let id = c.export_page(0, 0);
                 c.release_page(id);
             });
             r.print();
-            info = info.set(
+            gated = gated.set(
                 &format!("kvcache.{label}.{dtype}.publish_ms"),
                 r.mean_s * 1e3,
             );
@@ -244,12 +254,99 @@ fn payload_format_benches(smoke: bool) -> (Json, Json) {
                 c.recycle_lane(1);
             });
             r.print();
-            info = info.set(
+            gated = gated.set(
                 &format!("kvcache.{label}.{dtype}.restore_ms"),
                 r.mean_s * 1e3,
             );
-            println!("{dtype}: cumulative dequant-on-upload {:.1} us", c.dequant_us());
+            // the alloc/codec split: buffer acquisition at the publish
+            // boundary (spare-arena reuse or fresh Box) vs actual
+            // decode work — the same split the engine exports as the
+            // kv.alloc_us / kv.dequant_us gauges
+            println!(
+                "{dtype}: cumulative alloc {:.1} us vs dequant-on-upload {:.1} us \
+                 ({} spare page(s) parked)",
+                c.alloc_us(),
+                c.dequant_us(),
+                c.pool_spare_pages()
+            );
+            info = info
+                .set(&format!("kvcache.{label}.{dtype}.alloc_us"), c.alloc_us())
+                .set(&format!("kvcache.{label}.{dtype}.dequant_us"), c.dequant_us());
         }
+    }
+
+    codec_speedup_benches(smoke, gated, info)
+}
+
+// ----------------------------------------------------------------------
+// Codec-level publish/restore legs: the retained scalar reference vs
+// the production vectorized codec on identical page-shaped buffers.
+// The speedup ratios are machine-dependent (structurally gated), but
+// the >= 2x floor is asserted right here so a codec regression fails
+// the bench run itself, on any machine.
+// ----------------------------------------------------------------------
+fn codec_speedup_benches(smoke: bool, mut gated: Json, mut info: Json) -> (Json, Json) {
+    const ROWS: usize = 256;
+    const ROW_LEN: usize = 64;
+    let iters = if smoke { 40 } else { 200 };
+    println!("\n# codec: scalar reference vs vectorized ({ROWS} rows x {ROW_LEN})");
+    // deterministic NaN-free payload (the production case: lane f32 is
+    // always finite), same shape the hd64 publish path encodes
+    let src: Vec<f32> = (0..ROWS * ROW_LEN)
+        .map(|i| ((i / ROW_LEN) as f32) * 0.31 + ((i % ROW_LEN) as f32) * 0.07 - 1.5)
+        .collect();
+    for dtype in [KvDtype::Q8, KvDtype::Q4] {
+        let stride = dtype.row_code_bytes(ROW_LEN);
+        let mut codes = vec![0u8; ROWS * stride];
+        let mut scale = vec![0f32; ROWS];
+        let mut zp = vec![0u8; ROWS];
+        let mut out = vec![0f32; ROWS * ROW_LEN];
+        // dyn dispatch keeps both codecs behind the same call overhead
+        // and stops the optimizer from folding the benched work away
+        let mut leg = |codec: &dyn Codec| {
+            let enc = bench(
+                &format!("codec_encode_{dtype}_{}", codec.name()),
+                5,
+                iters,
+                || {
+                    codec.encode_rows_into(
+                        dtype, ROWS, ROW_LEN, &src, &mut codes, &mut scale, &mut zp,
+                    );
+                },
+            );
+            enc.print();
+            let dec = bench(
+                &format!("codec_decode_{dtype}_{}", codec.name()),
+                5,
+                iters,
+                || {
+                    codec.decode_rows_into(dtype, ROWS, ROW_LEN, &codes, &scale, &zp, &mut out);
+                },
+            );
+            dec.print();
+            (enc.mean_s, dec.mean_s)
+        };
+        let (se, sd) = leg(&ScalarCodec);
+        let (ve, vd) = leg(&VectorizedCodec);
+        let enc_speedup = se / ve;
+        let dec_speedup = sd / vd;
+        let roundtrip_speedup = (se + sd) / (ve + vd);
+        println!(
+            "{dtype}: vectorized speedup — encode {enc_speedup:.2}x, \
+             decode {dec_speedup:.2}x, publish+restore {roundtrip_speedup:.2}x"
+        );
+        assert!(
+            roundtrip_speedup >= 2.0,
+            "vectorized codec must run the publish/restore (encode+decode) leg \
+             >= 2x faster than the scalar reference (got {roundtrip_speedup:.2}x at {dtype})"
+        );
+        gated = gated
+            .set(&format!("codec.{dtype}.encode_speedup"), enc_speedup)
+            .set(&format!("codec.{dtype}.decode_speedup"), dec_speedup)
+            .set(&format!("codec.{dtype}.roundtrip_speedup"), roundtrip_speedup);
+        info = info
+            .set(&format!("codec.{dtype}.scalar_encode_ms"), se * 1e3)
+            .set(&format!("codec.{dtype}.vectorized_encode_ms"), ve * 1e3);
     }
     (gated, info)
 }

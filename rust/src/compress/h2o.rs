@@ -15,6 +15,10 @@
 //! across all heads; under a uniform plan the heads stay in lockstep
 //! (identical live sets, scores, and reset history), making the
 //! uniform path bit-exact with that legacy coupled eviction.
+//! Enforcement is a two-phase partial-select per (layer, head) —
+//! heavy-hitter candidates by (cum, slot), then oldest-first fallback
+//! — evicting the exact set the legacy per-eviction rescan chose in
+//! O(live) per overflow instead of O(evictions × live).
 //!
 //! Knobs: a [`BudgetPlan`] (uniform = App. F.1 (input + max_gen) / CR
 //! per head); the recent window is each head's budget / 2. See
@@ -28,6 +32,10 @@ pub struct H2oPolicy {
     plan: BudgetPlan,
     /// cumulative layer-summed attention per (layer, head, slot)
     cum: Vec<f32>,
+    /// Live-slot scratch for the batched eviction select.
+    live: Vec<(usize, usize)>,
+    /// `(cum, slot)` heavy-hitter candidates, partial-selected per head.
+    cand: Vec<(f32, usize)>,
 }
 
 impl H2oPolicy {
@@ -35,6 +43,8 @@ impl H2oPolicy {
         Self {
             plan,
             cum: Vec::new(),
+            live: Vec::new(),
+            cand: Vec::new(),
         }
     }
 
@@ -78,32 +88,58 @@ impl Policy for H2oPolicy {
             for h in 0..g.kv_heads {
                 let budget = self.plan.budget(l, h);
                 let recent = budget / 2;
-                while cache.live_count(view.lane, l, h) > budget {
-                    // candidates: live tokens outside the recent window
-                    let cutoff = view.pos.saturating_sub(recent);
-                    let mut best = None;
-                    let mut best_score = f32::INFINITY;
-                    let mut oldest: Option<(usize, usize)> = None;
-                    for (slot, pos) in cache.live_slots(view.lane, l, h) {
-                        if oldest.map(|(_, p)| pos < p).unwrap_or(true) {
-                            oldest = Some((slot, pos));
-                        }
-                        if pos >= cutoff {
-                            continue;
-                        }
-                        let score = self.cum[(l * g.kv_heads + h) * g.slots + slot];
-                        if score < best_score {
-                            best_score = score;
-                            best = Some(slot);
-                        }
+                let cutoff = view.pos.saturating_sub(recent);
+                let live_n = cache.live_count(view.lane, l, h);
+                if live_n <= budget {
+                    continue;
+                }
+                let mut n_evict = live_n - budget;
+                let base = (l * g.kv_heads + h) * g.slots;
+                // Batched equivalent of the legacy per-eviction rescan.
+                // The loop preferred the lowest-(cum, slot) candidate
+                // outside the recent window for as long as one existed
+                // (its strict `<` never selected NaN/+inf scores),
+                // then fell back to oldest-first over whatever was
+                // left. Candidate scores are static across the
+                // overflow (only *evicted* slots get reset), so the
+                // evicted set is: phase 1, the k1 smallest (cum, slot)
+                // candidates; phase 2, the remaining r smallest
+                // (pos, slot) of the surviving live set.
+                cache.live_slots_into(view.lane, l, h, &mut self.live);
+                self.cand.clear();
+                for &(slot, pos) in &self.live {
+                    if pos >= cutoff {
+                        continue;
                     }
-                    // all tokens recent → fall back to evicting the oldest
-                    let slot = match best.or(oldest.map(|(s, _)| s)) {
-                        Some(s) => s,
-                        None => break,
-                    };
-                    cache.evict(view.lane, l, h, slot);
-                    self.cum[(l * g.kv_heads + h) * g.slots + slot] = 0.0;
+                    let score = self.cum[base + slot];
+                    if score < f32::INFINITY {
+                        self.cand.push((score, slot));
+                    }
+                }
+                let k1 = n_evict.min(self.cand.len());
+                if k1 > 0 {
+                    if k1 < self.cand.len() {
+                        self.cand
+                            .select_nth_unstable_by(k1, super::score_slot_order);
+                    }
+                    for &(_, slot) in self.cand.iter().take(k1) {
+                        cache.evict(view.lane, l, h, slot);
+                        self.cum[base + slot] = 0.0;
+                    }
+                    n_evict -= k1;
+                }
+                if n_evict > 0 {
+                    // all candidates spent → oldest-first fallback
+                    cache.live_slots_into(view.lane, l, h, &mut self.live);
+                    let k2 = n_evict.min(self.live.len());
+                    if k2 < self.live.len() {
+                        self.live
+                            .select_nth_unstable_by_key(k2, |&(slot, pos)| (pos, slot));
+                    }
+                    for &(slot, _) in self.live.iter().take(k2) {
+                        cache.evict(view.lane, l, h, slot);
+                        self.cum[base + slot] = 0.0;
+                    }
                 }
             }
         }
@@ -112,7 +148,7 @@ impl Policy for H2oPolicy {
     fn post_prefill(&mut self, cache: &mut CacheStore, lane: usize, _pos: usize) {
         // dense prefill until budget, then switch (App. F.1); without
         // prefill scores the heavy set starts from the recency prior.
-        super::window::trim_to_plan(cache, lane, &self.plan);
+        super::window::trim_to_plan_with(cache, lane, &self.plan, &mut self.live);
         // this path also runs at adaptive re-plans mid-decode: any
         // slot the trim freed must not carry its accumulated mass
         // into the token that later recycles it (the post_write

@@ -179,6 +179,18 @@ pub trait Policy: Send {
     }
 }
 
+/// Total order over `(score, slot)` eviction candidates: ascending
+/// score, ties broken by slot index — exactly the sequence the legacy
+/// per-(layer, head) min-scan loops produced (their strict `<` kept
+/// the first, i.e. lowest-slot, minimum). Callers pre-filter
+/// candidates to `score < f32::INFINITY` (the only scores the legacy
+/// scans could ever select), so `partial_cmp` is total here.
+pub(crate) fn score_slot_order(a: &(f32, usize), b: &(f32, usize)) -> std::cmp::Ordering {
+    a.0.partial_cmp(&b.0)
+        .expect("eviction candidates are NaN-filtered")
+        .then(a.1.cmp(&b.1))
+}
+
 /// App. F.1 per-head budget: (input + max_gen) / CR, clamped so a
 /// chain always keeps at least one DMS window of tokens.
 pub fn per_head_budget(cr: f64, max_total_len: usize, window: usize) -> usize {

@@ -11,7 +11,10 @@
 //! to its eviction choice. Under a uniform plan the heads of a layer
 //! stay in lockstep (identical live sets × identical layer-summed
 //! scores ⇒ identical eviction sequences), which makes the uniform
-//! path bit-exact with the legacy coupled eviction.
+//! path bit-exact with the legacy coupled eviction. Enforcement is a
+//! single partial-select per (layer, head) over the layer's score
+//! plane — O(live) per overflow instead of the legacy
+//! O(evictions × live) rescan — choosing the exact same evicted set.
 //!
 //! Knobs: a [`BudgetPlan`] (uniform = App. F.1 (input + max_gen) / CR
 //! per head). See `docs/POLICIES.md`.
@@ -22,11 +25,22 @@ use crate::kvcache::CacheStore;
 
 pub struct TovaPolicy {
     plan: BudgetPlan,
+    /// Layer-summed score plane (one slot per entry), reused per layer.
+    scores: Vec<f32>,
+    /// Live-slot scratch for the batched eviction select.
+    live: Vec<(usize, usize)>,
+    /// `(score, slot)` eviction candidates, partial-selected per head.
+    cand: Vec<(f32, usize)>,
 }
 
 impl TovaPolicy {
     pub fn new(plan: BudgetPlan) -> Self {
-        Self { plan }
+        Self {
+            plan,
+            scores: Vec::new(),
+            live: Vec::new(),
+            cand: Vec::new(),
+        }
     }
 }
 
@@ -46,13 +60,13 @@ impl Policy for TovaPolicy {
     fn post_write(&mut self, cache: &mut CacheStore, view: &StepView<'_>) {
         let g = cache.geom;
         let s = g.slots;
-        let mut scores = vec![0.0f32; s];
+        self.scores.resize(s, 0.0);
         for l in 0..g.layers {
             // layer-summed score (§2.2), hoisted once per layer: it is
             // a pure function of this step's attention view, invariant
             // across heads and evictions (same f32 summation order as
             // the per-candidate recompute, so choices are unchanged)
-            for (slot, score) in scores.iter_mut().enumerate() {
+            for (slot, score) in self.scores.iter_mut().enumerate() {
                 let mut sum = 0.0f32;
                 for hh in 0..g.kv_heads {
                     sum += view.attn[(l * g.kv_heads + hh) * s + slot];
@@ -61,19 +75,39 @@ impl Policy for TovaPolicy {
             }
             for h in 0..g.kv_heads {
                 let budget = self.plan.budget(l, h);
-                while cache.live_count(view.lane, l, h) > budget {
-                    let mut best_slot = None;
-                    let mut best_score = f32::INFINITY;
-                    for (slot, pos) in cache.live_slots(view.lane, l, h) {
-                        if pos == view.pos {
-                            continue; // the token written this step has no score yet
-                        }
-                        if scores[slot] < best_score {
-                            best_score = scores[slot];
-                            best_slot = Some(slot);
-                        }
+                let live = cache.live_count(view.lane, l, h);
+                if live <= budget {
+                    continue;
+                }
+                // Batched equivalent of the legacy per-eviction rescan:
+                // the candidate set and its scores are fixed for the
+                // whole overflow (scores are per-step, the current
+                // token's exclusion is static, and evicted slots only
+                // leave the set), so the evicted set is exactly the n
+                // smallest candidates by (score, slot). The legacy
+                // min-scan's strict `<` never selected NaN/+inf scores
+                // (it stopped instead), hence the `< INFINITY` filter
+                // and the min() against the candidate count.
+                cache.live_slots_into(view.lane, l, h, &mut self.live);
+                self.cand.clear();
+                for &(slot, pos) in &self.live {
+                    if pos == view.pos {
+                        continue; // the token written this step has no score yet
                     }
-                    let Some(slot) = best_slot else { break };
+                    let score = self.scores[slot];
+                    if score < f32::INFINITY {
+                        self.cand.push((score, slot));
+                    }
+                }
+                let n_evict = (live - budget).min(self.cand.len());
+                if n_evict == 0 {
+                    continue;
+                }
+                if n_evict < self.cand.len() {
+                    self.cand
+                        .select_nth_unstable_by(n_evict, super::score_slot_order);
+                }
+                for &(_, slot) in self.cand.iter().take(n_evict) {
                     cache.evict(view.lane, l, h, slot);
                 }
             }
@@ -86,7 +120,7 @@ impl Policy for TovaPolicy {
         // per-token prefill attention we trim recency-first, which is
         // the TOVA behaviour in the absence of scores (recent tokens
         // dominate attention).
-        super::window::trim_to_plan(cache, lane, &self.plan);
+        super::window::trim_to_plan_with(cache, lane, &self.plan, &mut self.live);
     }
 }
 

@@ -23,11 +23,18 @@ impl Policy for VanillaPolicy {
 /// Keep only the most recent `plan.budget(l, h)` tokens per head.
 pub struct WindowPolicy {
     plan: BudgetPlan,
+    /// Reusable live-slot scratch for the trim — one buffer for the
+    /// policy's lifetime instead of one allocation per (layer, head)
+    /// per step.
+    scratch: Vec<(usize, usize)>,
 }
 
 impl WindowPolicy {
     pub fn new(plan: BudgetPlan) -> Self {
-        Self { plan }
+        Self {
+            plan,
+            scratch: Vec::new(),
+        }
     }
 }
 
@@ -45,28 +52,47 @@ impl Policy for WindowPolicy {
     }
 
     fn post_write(&mut self, cache: &mut CacheStore, view: &StepView<'_>) {
-        trim_to_plan(cache, view.lane, &self.plan);
+        trim_to_plan_with(cache, view.lane, &self.plan, &mut self.scratch);
     }
 
     fn post_prefill(&mut self, cache: &mut CacheStore, lane: usize, _pos: usize) {
-        trim_to_plan(cache, lane, &self.plan);
+        trim_to_plan_with(cache, lane, &self.plan, &mut self.scratch);
     }
 }
 
 /// Evict oldest-first down to each (layer, head)'s planned budget
 /// (a uniform plan reproduces the legacy scalar-window trim exactly).
 pub(crate) fn trim_to_plan(cache: &mut CacheStore, lane: usize, plan: &BudgetPlan) {
+    let mut scratch = Vec::new();
+    trim_to_plan_with(cache, lane, plan, &mut scratch);
+}
+
+/// [`trim_to_plan`] with a caller-held scratch buffer, so per-step
+/// trims reuse one allocation across every (layer, head).
+///
+/// Oldest-first means smallest `(pos, slot)`: the legacy trim's stable
+/// `sort_by_key(pos)` broke position ties by scan order, which is
+/// ascending slot — and since evictions commute, a partial select of
+/// the same n-smallest set leaves the identical final cache state.
+pub(crate) fn trim_to_plan_with(
+    cache: &mut CacheStore,
+    lane: usize,
+    plan: &BudgetPlan,
+    scratch: &mut Vec<(usize, usize)>,
+) {
     let g = cache.geom;
     for l in 0..g.layers {
         for h in 0..g.kv_heads {
             let budget = plan.budget(l, h);
-            let mut live = cache.live_slots(lane, l, h);
-            if live.len() <= budget {
+            cache.live_slots_into(lane, l, h, scratch);
+            if scratch.len() <= budget {
                 continue;
             }
-            live.sort_by_key(|&(_, pos)| pos);
-            let n_evict = live.len() - budget;
-            for &(slot, _) in live.iter().take(n_evict) {
+            let n_evict = scratch.len() - budget;
+            if n_evict < scratch.len() {
+                scratch.select_nth_unstable_by_key(n_evict, |&(slot, pos)| (pos, slot));
+            }
+            for &(slot, _) in scratch.iter().take(n_evict) {
                 cache.evict(lane, l, h, slot);
             }
         }

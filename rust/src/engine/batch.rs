@@ -202,16 +202,18 @@ fn lane_step(
 ) -> LaneStep {
     let (l, h, s) = (geom.layers, geom.kv_heads, geom.slots);
     let lh = l * h;
-    let mut alpha = vec![0f32; lh];
-    let mut attn = vec![0f32; lh * s];
-    let mut attn_self = vec![0f32; lh];
+    // gathered in (layer, head) order, so the views build by append —
+    // no zero-init pass over lh·s elements that the copy immediately
+    // overwrites
+    let mut alpha = Vec::with_capacity(lh);
+    let mut attn = Vec::with_capacity(lh * s);
+    let mut attn_self = Vec::with_capacity(lh);
     for li in 0..l {
         for hi in 0..h {
             let src = (li * batch + lane) * h + hi;
-            alpha[li * h + hi] = out.alpha[src];
-            attn_self[li * h + hi] = out.attn_self[src];
-            attn[(li * h + hi) * s..(li * h + hi + 1) * s]
-                .copy_from_slice(&out.attn[src * s..(src + 1) * s]);
+            alpha.push(out.alpha[src]);
+            attn_self.push(out.attn_self[src]);
+            attn.extend_from_slice(&out.attn[src * s..(src + 1) * s]);
         }
     }
     // fold this step's attention view into the chain's lane-local

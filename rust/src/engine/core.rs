@@ -30,7 +30,7 @@ use super::batch;
 use super::scheduler::{
     ChainState, CompletedRequest, Phase, Scheduler, SchedulerConfig,
 };
-use super::sequence::{ChainResult, FinishReason, GenRequest, GenResult};
+use super::sequence::{ChainResult, FinishReason, GenRequest, GenResult, SubmitSpec};
 use super::slo::SloTier;
 use crate::compress::{
     build_allocator, build_policy_planned, per_head_budget, AllocatorKind,
@@ -455,6 +455,20 @@ impl Engine {
         Ok(ticket)
     }
 
+    /// Single typed submit entrypoint: one [`SubmitSpec`] carries the
+    /// request, its client-visible trace id, and its optional SLO
+    /// tier, replacing the `submit`/`submit_traced`/`assign_slo` call
+    /// sequence (the older methods remain as thin wrappers for call
+    /// sites that pin them). The serving `Backend` trait routes its
+    /// sole `submit` through this.
+    pub fn submit_spec(&mut self, session: &mut Session, spec: &SubmitSpec) -> Result<u64> {
+        let ticket = self.submit_traced(session, &spec.request, spec.trace_id)?;
+        if let Some(tier) = spec.slo {
+            self.assign_slo(session, ticket, tier);
+        }
+        Ok(ticket)
+    }
+
     /// Stamp a submitted ticket with its SLO tier: the scheduler
     /// records the tier on the request and its chains (EDF ordering,
     /// tier-aware preemption) with the absolute e2e deadline derived
@@ -612,8 +626,10 @@ impl Engine {
             .gauge("kv.cow_published_pages")
             .set(self.cache.cow_published() as f64);
         // quantized-payload accounting: nominal K+V bytes per cached
-        // token per (layer, head) pair, actual pool payload bytes, and
-        // the cumulative dequant-on-upload cost
+        // token per (layer, head) pair, actual pool payload bytes, the
+        // cumulative dequant-on-upload cost, and the snapshot-buffer
+        // acquisition cost (arena reuse or fresh alloc) kept separate
+        // so codec time is never conflated with allocator churn
         self.metrics
             .gauge("kv.bytes_per_token")
             .set(self.cache.payload_bytes_per_token());
@@ -623,6 +639,9 @@ impl Engine {
         self.metrics
             .gauge("kv.dequant_us")
             .set(self.cache.dequant_us());
+        self.metrics
+            .gauge("kv.alloc_us")
+            .set(self.cache.alloc_us());
         // budget-plan summaries across active planned lanes: aggregate
         // planned tokens, the per-head budget spread, and plan-aware
         // overflow (tokens above any head's budget — 0 under correct

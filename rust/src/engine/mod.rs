@@ -66,6 +66,6 @@ pub use scheduler::{
     Scheduler, SchedulerConfig,
 };
 pub use sequence::{
-    ChainResult, ChainStats, FinishReason, GenRequest, GenResult, RequestTiming,
+    ChainResult, ChainStats, FinishReason, GenRequest, GenResult, RequestTiming, SubmitSpec,
 };
 pub use voting::{aggregate, majority_vote, pass_at_all, VoteOutcome};

@@ -1,5 +1,7 @@
 //! Request/result types and per-chain statistics.
 
+use super::slo::SloTier;
+
 /// Why a chain stopped.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FinishReason {
@@ -34,6 +36,47 @@ impl GenRequest {
             temperature: 0.7,
             seed: 0,
         }
+    }
+}
+
+/// One typed submission: the generation request plus the serving
+/// metadata that used to ride in separate `submit_traced` /
+/// `assign_slo` calls. This is the single argument of the serving
+/// `Backend::submit` entrypoint (and of `Engine::submit_spec` /
+/// `SimEngine::submit_spec`), so a request's identity, tracing key,
+/// and deadline class travel together and can never be half-applied.
+#[derive(Clone, Debug)]
+pub struct SubmitSpec {
+    /// The generation work itself.
+    pub request: GenRequest,
+    /// Client-visible request id for the flight recorder; `None` keys
+    /// trace events by the engine-local ticket instead.
+    pub trace_id: Option<u64>,
+    /// SLO tier to stamp on the ticket at submission (EDF ordering,
+    /// deadline accounting); `None` skips deadline accounting.
+    pub slo: Option<SloTier>,
+}
+
+impl SubmitSpec {
+    /// A plain untraced, untiered submission of `request`.
+    pub fn new(request: GenRequest) -> Self {
+        Self {
+            request,
+            trace_id: None,
+            slo: None,
+        }
+    }
+
+    /// Key this request's trace events by a client-visible id.
+    pub fn traced(mut self, trace_id: u64) -> Self {
+        self.trace_id = Some(trace_id);
+        self
+    }
+
+    /// Stamp the request with an SLO tier at submission.
+    pub fn with_slo(mut self, tier: SloTier) -> Self {
+        self.slo = Some(tier);
+        self
     }
 }
 

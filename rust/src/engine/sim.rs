@@ -40,7 +40,7 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use super::scheduler::{ChainState, CompletedRequest, Phase, Scheduler, SchedulerConfig};
-use super::sequence::{ChainResult, FinishReason, GenRequest};
+use super::sequence::{ChainResult, FinishReason, GenRequest, SubmitSpec};
 use super::slo::SloTier;
 use super::EngineStats;
 use crate::compress::{
@@ -296,6 +296,18 @@ impl SimEngine {
                     prefix_hit_tokens: prefix_tokens,
                 },
             );
+        }
+        Ok(ticket)
+    }
+
+    /// Single typed submit entrypoint (mirrors `Engine::submit_spec`):
+    /// one [`SubmitSpec`] carries the request, trace id, and optional
+    /// SLO tier — what the serving `Backend` trait's sole `submit`
+    /// calls.
+    pub fn submit_spec(&mut self, spec: &SubmitSpec) -> Result<u64> {
+        let ticket = self.submit_traced(&spec.request, spec.trace_id)?;
+        if let Some(tier) = spec.slo {
+            self.assign_slo(ticket, tier);
         }
         Ok(ticket)
     }

@@ -28,6 +28,19 @@
 //! Releasing a reference that is not held panics: a double-free of a
 //! KV page is a cache-corruption bug, never recoverable bookkeeping.
 //!
+//! ## Snapshot arena
+//!
+//! Owned payloads are boxed ([`Payload::Owned`] holds a
+//! `Box<PageData>`), and the pool keeps a small freelist of retired
+//! snapshot boxes: when the last reference to an owned entry is
+//! released, its payload drops into the spare list (capped at
+//! [`MAX_SPARE_PAGES`]) instead of the allocator, and the next publish
+//! reclaims it via [`PagePool::take_spare`] +
+//! [`KvBlock::reshape`](super::KvBlock::reshape). Publish/recycle
+//! churn — every COW detach, prefix export, and lane retirement —
+//! therefore reuses a handful of steady-state buffers instead of
+//! allocating six vectors per page.
+//!
 //! ## Payload storage format
 //!
 //! Owned payloads carry their K/V as [`KvBlock`]s: exact f32, or
@@ -54,14 +67,14 @@
 //! // before the leader mutates (or retires), the pristine bytes are
 //! // published into the pool — quantized here at q8, the single lossy
 //! // step of the payload's lifetime
-//! let snap = PageData {
+//! let snap = Box::new(PageData {
 //!     k: KvBlock::from_f32(KvDtype::Q8, 2, 4, vec![1.0; 8]),
 //!     v: KvBlock::from_f32(KvDtype::Q8, 2, 4, vec![2.0; 8]),
 //!     mask: vec![0.0; 2],
 //!     meta: vec![SlotState::Free; 2],
 //!     pmin: vec![0.0; 4],
 //!     pmax: vec![0.0; 4],
-//! };
+//! });
 //! pool.publish(id, snap);
 //! assert!(matches!(pool.payload(id), Payload::Owned(_)));
 //! assert!(pool.owned_payload_bytes() > 0);
@@ -70,6 +83,8 @@
 //! assert!(!pool.release(id));
 //! assert!(pool.release(id));
 //! assert!(pool.is_empty());
+//! // ...and the retired snapshot's buffers await the next publish
+//! assert!(pool.take_spare().is_some());
 //! ```
 
 use std::collections::BTreeMap;
@@ -129,11 +144,17 @@ struct Entry {
     page: usize,
 }
 
+/// Cap on the snapshot freelist: enough to absorb a burst of COW
+/// publishes between restores without pinning unbounded memory.
+pub const MAX_SPARE_PAGES: usize = 32;
+
 /// Refcounted registry of shared pages (see module docs).
 #[derive(Debug, Default)]
 pub struct PagePool {
     entries: BTreeMap<PageId, Entry>,
     next_id: PageId,
+    /// Retired owned snapshots awaiting reuse (the snapshot arena).
+    spares: Vec<Box<PageData>>,
 }
 
 impl PagePool {
@@ -183,8 +204,20 @@ impl PagePool {
     }
 
     /// Register an owned snapshot with one reference (the caller's).
-    pub fn insert_owned(&mut self, data: PageData, page: usize) -> PageId {
-        self.insert(Payload::Owned(Box::new(data)), page)
+    pub fn insert_owned(&mut self, data: Box<PageData>, page: usize) -> PageId {
+        self.insert(Payload::Owned(data), page)
+    }
+
+    /// Take a retired snapshot box for reuse (arena path): the caller
+    /// reshapes its blocks in place and overwrites every field before
+    /// publishing it back. `None` when the freelist is empty.
+    pub fn take_spare(&mut self) -> Option<Box<PageData>> {
+        self.spares.pop()
+    }
+
+    /// Snapshot boxes currently waiting on the freelist.
+    pub fn spare_pages(&self) -> usize {
+        self.spares.len()
     }
 
     fn insert(&mut self, payload: Payload, page: usize) -> PageId {
@@ -225,7 +258,17 @@ impl PagePool {
             .unwrap_or_else(|| panic!("double-free of page {id}"));
         e.refs -= 1;
         if e.refs == 0 {
-            self.entries.remove(&id);
+            // reclaim the snapshot's buffers into the arena instead of
+            // freeing them — the next publish reshapes them in place
+            if let Some(Entry {
+                payload: Payload::Owned(data),
+                ..
+            }) = self.entries.remove(&id)
+            {
+                if self.spares.len() < MAX_SPARE_PAGES {
+                    self.spares.push(data);
+                }
+            }
             true
         } else {
             false
@@ -256,13 +299,13 @@ impl PagePool {
     }
 
     /// Promote a borrowed payload to an owned snapshot (COW publish).
-    pub fn publish(&mut self, id: PageId, data: PageData) {
+    pub fn publish(&mut self, id: PageId, data: Box<PageData>) {
         let e = self.entries.get_mut(&id).expect("publish of dead page");
         debug_assert!(
             matches!(e.payload, Payload::Borrowed { .. }),
             "publish of already-owned page"
         );
-        e.payload = Payload::Owned(Box::new(data));
+        e.payload = Payload::Owned(data);
     }
 }
 
@@ -271,15 +314,15 @@ mod tests {
     use super::*;
     use crate::kvcache::KvDtype;
 
-    fn data() -> PageData {
-        PageData {
+    fn data() -> Box<PageData> {
+        Box::new(PageData {
             k: KvBlock::from_f32(KvDtype::F32, 2, 4, vec![1.0; 8]),
             v: KvBlock::from_f32(KvDtype::F32, 2, 4, vec![2.0; 8]),
             mask: vec![0.0; 2],
             meta: vec![SlotState::Free; 2],
             pmin: vec![0.0; 4],
             pmax: vec![0.0; 4],
-        }
+        })
     }
 
     #[test]
@@ -339,5 +382,34 @@ mod tests {
         p.release(o);
         assert_eq!(p.owned_payload_bytes(), 0);
         p.release(b);
+    }
+
+    #[test]
+    fn released_snapshots_feed_the_spare_arena() {
+        let mut p = PagePool::new();
+        assert!(p.take_spare().is_none());
+        let o = p.insert_owned(data(), 0);
+        assert_eq!(p.spare_pages(), 0, "live entries are not spares");
+        assert!(p.release(o));
+        assert_eq!(p.spare_pages(), 1);
+        let spare = p.take_spare().expect("retired snapshot reclaimed");
+        assert_eq!(spare.mask.len(), 2, "buffers survive intact");
+        assert!(p.take_spare().is_none());
+        // borrowed entries have no snapshot to reclaim
+        let b = p.adopt_borrowed(0, 1);
+        p.release(b);
+        assert_eq!(p.spare_pages(), 0);
+    }
+
+    #[test]
+    fn spare_arena_is_capped() {
+        let mut p = PagePool::new();
+        let ids: Vec<PageId> = (0..MAX_SPARE_PAGES + 5)
+            .map(|i| p.insert_owned(data(), i))
+            .collect();
+        for id in ids {
+            p.release(id);
+        }
+        assert_eq!(p.spare_pages(), MAX_SPARE_PAGES);
     }
 }

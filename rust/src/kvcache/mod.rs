@@ -67,7 +67,7 @@ mod store;
 pub use cow::{PageData, PageId, PagePool, Payload};
 pub use paged::PageAllocator;
 pub use prefix::{PrefixHit, RadixPrefixIndex};
-pub use quant::{KvBlock, KvDtype, QuantBlock};
+pub use quant::{Codec, KvBlock, KvDtype, QuantBlock, ScalarCodec, VectorizedCodec};
 pub use store::{CacheStore, Geometry, LaneTickEvents, SlotState, NEG_INF};
 
 #[cfg(test)]

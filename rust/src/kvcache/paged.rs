@@ -11,6 +11,11 @@
 //! (lowest partial page first, then lowest empty page), which keeps the
 //! allocation sequence — and therefore every downstream test and token
 //! stream — identical to the linear-scan allocator.
+//!
+//! This allocator tracks slot *occupancy* only; page payload buffers
+//! live in the COW pool, which arena-recycles retired snapshot boxes
+//! through its spare list (see [`super::cow::PagePool::take_spare`])
+//! so publish/recycle churn never hits the global allocator.
 
 use std::collections::BTreeSet;
 

@@ -32,6 +32,32 @@
 //! payload shrinks from `4·hd` to `hd + 5` bytes per row at q8
 //! (≥ 3× for hd ≥ 16) and `⌈hd/2⌉ + 5` at q4 (≈ 5–7×).
 //!
+//! ## The [`Codec`] trait
+//!
+//! The byte-level encode/decode lives behind the [`Codec`] trait:
+//! `encode_rows_into` / `decode_rows_into` operate on caller-supplied
+//! code/scale/zero-point buffers so the hot paths (page publish in
+//! [`CacheStore::export_page`](super::CacheStore::export_page), fused
+//! dequant-on-upload in page restore) can recycle buffers instead of
+//! allocating per page. Two implementations share the interface:
+//!
+//! * [`ScalarCodec`] — the **frozen reference**: a verbatim port of the
+//!   original per-element encoder/decoder. It is deliberately naive
+//!   (per-element dispatch, bit-shift nibble unpacking) and must never
+//!   be "optimized": it is the conformance oracle.
+//! * [`VectorizedCodec`] — the production codec: chunked min/max range
+//!   scans, a branch-free encode loop for NaN-free rows, nibble
+//!   pack/unpack via pair writes and a 256-entry lookup table. The
+//!   `codec_conformance` test suite pins it **bit-identical** to
+//!   [`ScalarCodec`] on every dtype × geometry, including NaN / ±inf /
+//!   subnormal rows.
+//!
+//! [`QuantBlock::quantize`] / [`QuantBlock::dequantize_rows_into`]
+//! remain as thin wrappers over the vectorized codec (they own the
+//! buffers); in-place variants ([`QuantBlock::encode_rows_from`],
+//! [`KvBlock::write_rows_from`], [`KvBlock::reshape`]) power the
+//! arena-recycled publish path.
+//!
 //! ## Numerics contract (see `docs/NUMERICS.md`)
 //!
 //! * Quantization is **lossy** with per-element error ≤ `|scale|/2`
@@ -124,8 +150,9 @@ impl KvDtype {
     }
 
     /// Code bytes one row of `row_len` elements occupies (excluding
-    /// scale/zero-point metadata).
-    fn row_code_bytes(&self, row_len: usize) -> usize {
+    /// scale/zero-point metadata). This is the per-row stride of the
+    /// code buffers the [`Codec`] trait operates on.
+    pub fn row_code_bytes(&self, row_len: usize) -> usize {
         match self {
             KvDtype::F32 => row_len * 4,
             KvDtype::Q8 => row_len,
@@ -178,9 +205,10 @@ impl FromStr for KvDtype {
     }
 }
 
-/// Decode one affine code: `scale · (q − zero_point)`. Shared by the
-/// page codec below and the checkpoint loader
-/// (`runtime::parse_tensors`) so the convention lives in one place.
+/// Decode one affine code: `scale · (q − zero_point)`. This is the
+/// single-element convention anchor shared by the [`ScalarCodec`]
+/// reference and the checkpoint loader (`runtime::parse_tensors`);
+/// the page hot paths go through [`Codec`] row decodes instead.
 #[inline]
 pub fn dequant_code(q: u8, scale: f32, zp: f32) -> f32 {
     scale * (q as f32 - zp)
@@ -188,41 +216,122 @@ pub fn dequant_code(q: u8, scale: f32, zp: f32) -> f32 {
 
 /// Extract element `i` from a low-nibble-first packed q4 code stream
 /// (the packing convention of [`QuantBlock`] and q4 checkpoint
-/// tensors).
+/// tensors). Like [`dequant_code`] this survives as the convention
+/// anchor for the checkpoint loader and the scalar reference codec.
 #[inline]
 pub fn unpack_q4(codes: &[u8], i: usize) -> u8 {
     (codes[i / 2] >> ((i % 2) * 4)) & 0x0F
 }
 
-/// A quantized block of `rows × row_len` values (see module docs for
-/// the per-row affine scheme and the error bound).
-#[derive(Clone, Debug)]
-pub struct QuantBlock {
+/// `(low, high)` nibble of every packed q4 byte — the vectorized
+/// decoder trades the per-element shift/mask of [`unpack_q4`] for one
+/// table load per byte.
+const Q4_NIBBLES: [[u8; 2]; 256] = {
+    let mut t = [[0u8; 2]; 256];
+    let mut i = 0;
+    while i < 256 {
+        t[i] = [(i & 0x0F) as u8, (i >> 4) as u8];
+        i += 1;
+    }
+    t
+};
+
+/// Row-oriented quantization codec over caller-supplied buffers.
+///
+/// `codes` is `rows × dtype.row_code_bytes(row_len)` bytes; `scale`
+/// and `zp` hold one entry per row. Implementations must fully
+/// overwrite the row ranges they are given (including the scale and
+/// zero-point of degenerate rows), so recycled buffers never leak
+/// stale bytes — the arena publish path depends on this.
+///
+/// Every implementation must produce **bit-identical** output to
+/// [`ScalarCodec`] (the frozen reference): identical code bytes,
+/// scales, and zero-points on encode; identical f32 bit patterns on
+/// decode. The `codec_conformance` integration suite enforces this.
+pub trait Codec {
+    /// Implementation name for bench labels and diagnostics.
+    fn name(&self) -> &'static str;
+
+    /// Encode `rows × row_len` f32 values from `src` into
+    /// `codes`/`scale`/`zp`.
+    ///
+    /// # Panics
+    /// Panics if `dtype` is [`KvDtype::F32`] or any buffer length
+    /// disagrees with `rows`/`row_len`.
+    fn encode_rows_into(
+        &self,
+        dtype: KvDtype,
+        rows: usize,
+        row_len: usize,
+        src: &[f32],
+        codes: &mut [u8],
+        scale: &mut [f32],
+        zp: &mut [u8],
+    );
+
+    /// Decode `rows × row_len` values from `codes`/`scale`/`zp` into
+    /// `out`. Deterministic: identical output on every call.
+    ///
+    /// # Panics
+    /// Panics if `dtype` is [`KvDtype::F32`] or any buffer length
+    /// disagrees with `rows`/`row_len`.
+    fn decode_rows_into(
+        &self,
+        dtype: KvDtype,
+        rows: usize,
+        row_len: usize,
+        codes: &[u8],
+        scale: &[f32],
+        zp: &[u8],
+        out: &mut [f32],
+    );
+}
+
+/// Shared buffer-shape validation for [`Codec`] implementations.
+fn check_codec_args(
     dtype: KvDtype,
     rows: usize,
     row_len: usize,
-    /// Packed codes, `rows × row_stride` bytes.
-    data: Vec<u8>,
-    /// Per-row scale (may be negative for constant negative rows).
-    scale: Vec<f32>,
-    /// Per-row zero-point in the quantized domain.
-    zp: Vec<u8>,
+    codes_len: usize,
+    scale_len: usize,
+    zp_len: usize,
+    f32_len: usize,
+) {
+    assert!(dtype.is_quantized(), "Codec requires q8/q4");
+    assert_eq!(f32_len, rows * row_len, "f32-side length mismatch");
+    assert_eq!(
+        codes_len,
+        rows * dtype.row_code_bytes(row_len),
+        "code buffer length mismatch"
+    );
+    assert_eq!(scale_len, rows, "scale buffer length mismatch");
+    assert_eq!(zp_len, rows, "zero-point buffer length mismatch");
 }
 
-impl QuantBlock {
-    /// Quantize `src` (length `rows × row_len`) into a block.
-    ///
-    /// # Panics
-    /// Panics if `dtype` is [`KvDtype::F32`] (nothing to quantize) or
-    /// if `src` has the wrong length.
-    pub fn quantize(dtype: KvDtype, rows: usize, row_len: usize, src: &[f32]) -> Self {
-        assert!(dtype.is_quantized(), "QuantBlock requires q8/q4");
-        assert_eq!(src.len(), rows * row_len, "source length mismatch");
+/// The frozen scalar reference codec: a verbatim port of the original
+/// per-element quantizer/dequantizer. **Do not optimize this type** —
+/// it exists so [`VectorizedCodec`] has a bit-exact oracle to be
+/// tested (and benched) against.
+pub struct ScalarCodec;
+
+impl Codec for ScalarCodec {
+    fn name(&self) -> &'static str {
+        "scalar-ref"
+    }
+
+    fn encode_rows_into(
+        &self,
+        dtype: KvDtype,
+        rows: usize,
+        row_len: usize,
+        src: &[f32],
+        codes: &mut [u8],
+        scale: &mut [f32],
+        zp: &mut [u8],
+    ) {
+        check_codec_args(dtype, rows, row_len, codes.len(), scale.len(), zp.len(), src.len());
         let qmax = dtype.qmax() as f32;
         let stride = dtype.row_code_bytes(row_len);
-        let mut data = vec![0u8; rows * stride];
-        let mut scale = vec![0f32; rows];
-        let mut zp = vec![0u8; rows];
         for r in 0..rows {
             let xs = &src[r * row_len..(r + 1) * row_len];
             // the range scan sees finite values only: a NaN or ±inf
@@ -235,6 +344,13 @@ impl QuantBlock {
                     hi = hi.max(x);
                 }
             }
+            // the original quantizer wrote into freshly zeroed
+            // buffers; reproduce that on recycled ones (q4 packing
+            // below uses |=)
+            scale[r] = 0.0;
+            zp[r] = 0;
+            let row = &mut codes[r * stride..(r + 1) * stride];
+            row.fill(0);
             // constant rows take a degenerate exact encoding; varying
             // rows anchor the representable interval at zero so the
             // u8 zero-point is always in range (and zeros are exact)
@@ -268,7 +384,6 @@ impl QuantBlock {
                 scale[r] = lo;
                 Enc::Const { s: lo }
             };
-            let row = &mut data[r * stride..(r + 1) * stride];
             for (d, &x) in xs.iter().enumerate() {
                 // non-finite elements take defined codes: NaN decodes
                 // to exactly 0.0, ±inf saturate to the row's
@@ -301,14 +416,375 @@ impl QuantBlock {
                 }
             }
         }
+    }
+
+    fn decode_rows_into(
+        &self,
+        dtype: KvDtype,
+        rows: usize,
+        row_len: usize,
+        codes: &[u8],
+        scale: &[f32],
+        zp: &[u8],
+        out: &mut [f32],
+    ) {
+        check_codec_args(dtype, rows, row_len, codes.len(), scale.len(), zp.len(), out.len());
+        let stride = dtype.row_code_bytes(row_len);
+        for r in 0..rows {
+            let s = scale[r];
+            let z = zp[r] as f32;
+            let row = &codes[r * stride..(r + 1) * stride];
+            let dst = &mut out[r * row_len..(r + 1) * row_len];
+            for (d, y) in dst.iter_mut().enumerate() {
+                let q = match dtype {
+                    KvDtype::Q8 => row[d],
+                    KvDtype::Q4 => unpack_q4(row, d),
+                    KvDtype::F32 => unreachable!(),
+                };
+                *y = dequant_code(q, s, z);
+            }
+        }
+    }
+}
+
+/// Accumulator width of the chunked range scan. Eight f32 lanes match
+/// one AVX register; the min/max reductions are exact lattice ops, so
+/// the chunked reduction order is bit-identical to a sequential scan.
+const LANES: usize = 8;
+
+/// Finite-only range scan of one row: `(lo, hi, has_nan)`.
+///
+/// Non-finite elements are masked to the identity of the reduction
+/// (`+inf` for min, `−inf` for max) instead of branched over, so the
+/// loop stays straight-line for the autovectorizer. `has_nan` gates
+/// the branch-free encode fast path: ±inf saturates correctly through
+/// the encode clamp, but NaN needs the per-element checked path.
+#[inline]
+fn range_scan(xs: &[f32]) -> (f32, f32, bool) {
+    let mut lo = [f32::INFINITY; LANES];
+    let mut hi = [f32::NEG_INFINITY; LANES];
+    let mut nan = [false; LANES];
+    let mut it = xs.chunks_exact(LANES);
+    for c in it.by_ref() {
+        for (j, &x) in c.iter().enumerate() {
+            let fin = x.is_finite();
+            lo[j] = lo[j].min(if fin { x } else { f32::INFINITY });
+            hi[j] = hi[j].max(if fin { x } else { f32::NEG_INFINITY });
+            nan[j] |= x.is_nan();
+        }
+    }
+    let mut l = f32::INFINITY;
+    let mut h = f32::NEG_INFINITY;
+    let mut n = false;
+    for j in 0..LANES {
+        l = l.min(lo[j]);
+        h = h.max(hi[j]);
+        n |= nan[j];
+    }
+    for &x in it.remainder() {
+        if x.is_finite() {
+            l = l.min(x);
+            h = h.max(x);
+        }
+        n |= x.is_nan();
+    }
+    (l, h, n)
+}
+
+/// One affine code with the NaN check the slow path needs. The
+/// arithmetic is the *exact* expression of the scalar reference —
+/// IEEE division, `round`, `clamp`, saturating cast — so fast and
+/// checked paths produce identical bytes.
+#[inline]
+fn q_affine_checked(x: f32, s: f32, z: f32, qmax: f32) -> u8 {
+    if x.is_nan() {
+        z as u8 // the exact-zero code
+    } else {
+        (x / s + z).round().clamp(0.0, qmax) as u8
+    }
+}
+
+/// One constant-row code (`q ≡ 1` for finite values; non-finite
+/// elements saturate toward the value or 0, NaN → 0).
+#[inline]
+fn q_const(x: f32, s: f32) -> u8 {
+    if x.is_finite() {
+        1
+    } else if x.is_nan() {
+        0
+    } else if (x > 0.0) == (s > 0.0) {
+        1
+    } else {
+        0
+    }
+}
+
+/// The production codec: chunked range scans, branch-free affine
+/// encode for NaN-free rows, pair-packed q4 writes and LUT-based q4
+/// decode. Pinned bit-identical to [`ScalarCodec`] by the
+/// `codec_conformance` suite; used by every [`QuantBlock`] wrapper and
+/// by [`CacheStore`](super::CacheStore)'s fused publish/upload paths.
+pub struct VectorizedCodec;
+
+impl VectorizedCodec {
+    /// Branch-free affine encode of a NaN-free row. ±inf saturates to
+    /// `{0, qmax}` through the clamp exactly as in the reference, so
+    /// only NaN forces the checked path.
+    #[inline]
+    fn encode_affine_fast(dtype: KvDtype, xs: &[f32], s: f32, z: f32, qmax: f32, row: &mut [u8]) {
+        match dtype {
+            KvDtype::Q8 => {
+                for (q, &x) in row.iter_mut().zip(xs) {
+                    *q = (x / s + z).round().clamp(0.0, qmax) as u8;
+                }
+            }
+            KvDtype::Q4 => {
+                let pairs = xs.len() / 2;
+                for (b, px) in row[..pairs].iter_mut().zip(xs.chunks_exact(2)) {
+                    let q0 = (px[0] / s + z).round().clamp(0.0, qmax) as u8;
+                    let q1 = (px[1] / s + z).round().clamp(0.0, qmax) as u8;
+                    // full-byte write (low nibble first): no |= into
+                    // stale bytes, so recycled buffers need no zeroing
+                    *b = q0 | (q1 << 4);
+                }
+                if xs.len() % 2 == 1 {
+                    row[pairs] = (xs[xs.len() - 1] / s + z).round().clamp(0.0, qmax) as u8;
+                }
+            }
+            KvDtype::F32 => unreachable!(),
+        }
+    }
+
+    /// Affine encode of a row containing at least one NaN.
+    #[inline]
+    fn encode_affine_checked(
+        dtype: KvDtype,
+        xs: &[f32],
+        s: f32,
+        z: f32,
+        qmax: f32,
+        row: &mut [u8],
+    ) {
+        match dtype {
+            KvDtype::Q8 => {
+                for (q, &x) in row.iter_mut().zip(xs) {
+                    *q = q_affine_checked(x, s, z, qmax);
+                }
+            }
+            KvDtype::Q4 => {
+                let pairs = xs.len() / 2;
+                for (b, px) in row[..pairs].iter_mut().zip(xs.chunks_exact(2)) {
+                    *b = q_affine_checked(px[0], s, z, qmax)
+                        | (q_affine_checked(px[1], s, z, qmax) << 4);
+                }
+                if xs.len() % 2 == 1 {
+                    row[pairs] = q_affine_checked(xs[xs.len() - 1], s, z, qmax);
+                }
+            }
+            KvDtype::F32 => unreachable!(),
+        }
+    }
+
+    /// Constant-row encode (`q ∈ {0, 1}`).
+    #[inline]
+    fn encode_const(dtype: KvDtype, xs: &[f32], s: f32, row: &mut [u8]) {
+        match dtype {
+            KvDtype::Q8 => {
+                for (q, &x) in row.iter_mut().zip(xs) {
+                    *q = q_const(x, s);
+                }
+            }
+            KvDtype::Q4 => {
+                let pairs = xs.len() / 2;
+                for (b, px) in row[..pairs].iter_mut().zip(xs.chunks_exact(2)) {
+                    *b = q_const(px[0], s) | (q_const(px[1], s) << 4);
+                }
+                if xs.len() % 2 == 1 {
+                    row[pairs] = q_const(xs[xs.len() - 1], s);
+                }
+            }
+            KvDtype::F32 => unreachable!(),
+        }
+    }
+}
+
+impl Codec for VectorizedCodec {
+    fn name(&self) -> &'static str {
+        "vectorized"
+    }
+
+    fn encode_rows_into(
+        &self,
+        dtype: KvDtype,
+        rows: usize,
+        row_len: usize,
+        src: &[f32],
+        codes: &mut [u8],
+        scale: &mut [f32],
+        zp: &mut [u8],
+    ) {
+        check_codec_args(dtype, rows, row_len, codes.len(), scale.len(), zp.len(), src.len());
+        let qmax = dtype.qmax() as f32;
+        let stride = dtype.row_code_bytes(row_len);
+        for r in 0..rows {
+            let xs = &src[r * row_len..(r + 1) * row_len];
+            let row = &mut codes[r * stride..(r + 1) * stride];
+            let (lo, hi, has_nan) = range_scan(xs);
+            // every row fully overwrites its metadata so recycled
+            // buffers never leak stale scales into degenerate rows
+            scale[r] = 0.0;
+            zp[r] = 0;
+            if lo > hi {
+                // no finite value: everything decodes to 0.0
+                row.fill(0);
+            } else if hi > lo {
+                let (lo0, hi0) = (lo.min(0.0), hi.max(0.0));
+                let s = ((hi0 - lo0) / qmax).max(f32::MIN_POSITIVE);
+                let z = (-lo0 / s).round().clamp(0.0, qmax);
+                scale[r] = s;
+                zp[r] = z as u8;
+                if has_nan {
+                    Self::encode_affine_checked(dtype, xs, s, z, qmax, row);
+                } else {
+                    Self::encode_affine_fast(dtype, xs, s, z, qmax, row);
+                }
+            } else if lo == 0.0 {
+                // all-zero row (unwritten slots): exact zero codes
+                row.fill(0);
+            } else {
+                scale[r] = lo;
+                Self::encode_const(dtype, xs, lo, row);
+            }
+        }
+    }
+
+    fn decode_rows_into(
+        &self,
+        dtype: KvDtype,
+        rows: usize,
+        row_len: usize,
+        codes: &[u8],
+        scale: &[f32],
+        zp: &[u8],
+        out: &mut [f32],
+    ) {
+        check_codec_args(dtype, rows, row_len, codes.len(), scale.len(), zp.len(), out.len());
+        let stride = dtype.row_code_bytes(row_len);
+        for r in 0..rows {
+            let s = scale[r];
+            let z = zp[r] as f32;
+            let row = &codes[r * stride..(r + 1) * stride];
+            let dst = &mut out[r * row_len..(r + 1) * row_len];
+            match dtype {
+                KvDtype::Q8 => {
+                    for (y, &q) in dst.iter_mut().zip(row) {
+                        *y = s * (q as f32 - z);
+                    }
+                }
+                KvDtype::Q4 => {
+                    let pairs = row_len / 2;
+                    for (ys, &b) in dst.chunks_exact_mut(2).zip(&row[..pairs]) {
+                        let [q0, q1] = Q4_NIBBLES[b as usize];
+                        ys[0] = s * (q0 as f32 - z);
+                        ys[1] = s * (q1 as f32 - z);
+                    }
+                    if row_len % 2 == 1 {
+                        dst[row_len - 1] = s * ((row[pairs] & 0x0F) as f32 - z);
+                    }
+                }
+                KvDtype::F32 => unreachable!(),
+            }
+        }
+    }
+}
+
+/// A quantized block of `rows × row_len` values (see module docs for
+/// the per-row affine scheme and the error bound).
+#[derive(Clone, Debug)]
+pub struct QuantBlock {
+    dtype: KvDtype,
+    rows: usize,
+    row_len: usize,
+    /// Packed codes, `rows × row_stride` bytes.
+    data: Vec<u8>,
+    /// Per-row scale (may be negative for constant negative rows).
+    scale: Vec<f32>,
+    /// Per-row zero-point in the quantized domain.
+    zp: Vec<u8>,
+}
+
+impl QuantBlock {
+    /// Quantize `src` (length `rows × row_len`) into a block using the
+    /// production [`VectorizedCodec`].
+    ///
+    /// # Panics
+    /// Panics if `dtype` is [`KvDtype::F32`] (nothing to quantize) or
+    /// if `src` has the wrong length.
+    pub fn quantize(dtype: KvDtype, rows: usize, row_len: usize, src: &[f32]) -> Self {
+        Self::quantize_with(&VectorizedCodec, dtype, rows, row_len, src)
+    }
+
+    /// Quantize `src` with an explicit [`Codec`] implementation (the
+    /// conformance tests and benches pass [`ScalarCodec`] here).
+    pub fn quantize_with<C: Codec + ?Sized>(
+        codec: &C,
+        dtype: KvDtype,
+        rows: usize,
+        row_len: usize,
+        src: &[f32],
+    ) -> Self {
+        assert!(dtype.is_quantized(), "QuantBlock requires q8/q4");
+        assert_eq!(src.len(), rows * row_len, "source length mismatch");
+        let mut b = Self::zeroed(dtype, rows, row_len);
+        codec.encode_rows_into(dtype, rows, row_len, src, &mut b.data, &mut b.scale, &mut b.zp);
+        b
+    }
+
+    /// An all-zero block (decodes to `0.0` everywhere — the unwritten
+    /// slot encoding), ready for in-place [`Self::encode_rows_from`].
+    pub fn zeroed(dtype: KvDtype, rows: usize, row_len: usize) -> Self {
+        assert!(dtype.is_quantized(), "QuantBlock requires q8/q4");
         Self {
             dtype,
             rows,
             row_len,
-            data,
-            scale,
-            zp,
+            data: vec![0u8; rows * dtype.row_code_bytes(row_len)],
+            scale: vec![0f32; rows],
+            zp: vec![0u8; rows],
         }
+    }
+
+    /// Re-shape this block in place, keeping buffer capacity (the
+    /// arena-recycled publish path). Contents of rows not subsequently
+    /// rewritten via [`Self::encode_rows_from`] are unspecified.
+    pub fn reshape(&mut self, dtype: KvDtype, rows: usize, row_len: usize) {
+        assert!(dtype.is_quantized(), "QuantBlock requires q8/q4");
+        self.dtype = dtype;
+        self.rows = rows;
+        self.row_len = row_len;
+        self.data.resize(rows * dtype.row_code_bytes(row_len), 0);
+        self.scale.resize(rows, 0.0);
+        self.zp.resize(rows, 0);
+    }
+
+    /// Encode rows `[row0, row0 + n_rows)` in place from `src` (length
+    /// `n_rows × row_len`) via the [`VectorizedCodec`]. This is the
+    /// fused publish path: fresh lane f32 goes straight into the
+    /// block's recycled buffers, with no staging copy. Each row is
+    /// encoded independently, so chunked per-(layer, head) encodes are
+    /// bit-identical to one whole-block [`Self::quantize`].
+    pub fn encode_rows_from(&mut self, row0: usize, n_rows: usize, src: &[f32]) {
+        assert!(row0 + n_rows <= self.rows, "row range out of bounds");
+        let stride = self.dtype.row_code_bytes(self.row_len);
+        VectorizedCodec.encode_rows_into(
+            self.dtype,
+            n_rows,
+            self.row_len,
+            src,
+            &mut self.data[row0 * stride..(row0 + n_rows) * stride],
+            &mut self.scale[row0..row0 + n_rows],
+            &mut self.zp[row0..row0 + n_rows],
+        );
     }
 
     /// Dequantize rows `[row0, row0 + n_rows)` into `out` (length
@@ -318,21 +794,15 @@ impl QuantBlock {
         assert!(row0 + n_rows <= self.rows, "row range out of bounds");
         assert_eq!(out.len(), n_rows * self.row_len, "output length mismatch");
         let stride = self.dtype.row_code_bytes(self.row_len);
-        for i in 0..n_rows {
-            let r = row0 + i;
-            let s = self.scale[r];
-            let z = self.zp[r] as f32;
-            let row = &self.data[r * stride..(r + 1) * stride];
-            let dst = &mut out[i * self.row_len..(i + 1) * self.row_len];
-            for (d, y) in dst.iter_mut().enumerate() {
-                let q = match self.dtype {
-                    KvDtype::Q8 => row[d],
-                    KvDtype::Q4 => unpack_q4(row, d),
-                    KvDtype::F32 => unreachable!(),
-                };
-                *y = dequant_code(q, s, z);
-            }
-        }
+        VectorizedCodec.decode_rows_into(
+            self.dtype,
+            n_rows,
+            self.row_len,
+            &self.data[row0 * stride..(row0 + n_rows) * stride],
+            &self.scale[row0..row0 + n_rows],
+            &self.zp[row0..row0 + n_rows],
+            out,
+        );
     }
 
     /// Storage format of this block.
@@ -355,6 +825,17 @@ impl QuantBlock {
     /// `scale` holds the (exactly reproduced) value itself.
     pub fn row_scale(&self, row: usize) -> f32 {
         self.scale[row]
+    }
+
+    /// Zero-point of one row (0 for degenerate rows).
+    pub fn row_zp(&self, row: usize) -> u8 {
+        self.zp[row]
+    }
+
+    /// Packed code bytes (`rows × row_code_bytes`) — exposed so the
+    /// bit-identity suites can compare blocks byte-for-byte.
+    pub fn codes(&self) -> &[u8] {
+        &self.data
     }
 
     /// Host bytes this block occupies (codes + scale/zero-point).
@@ -385,6 +866,46 @@ impl KvBlock {
         match dtype {
             KvDtype::F32 => KvBlock::F32(data),
             _ => KvBlock::Quant(QuantBlock::quantize(dtype, rows, row_len, &data)),
+        }
+    }
+
+    /// An all-zero block of the given shape (decodes/reads as `0.0`
+    /// everywhere), ready for in-place [`Self::write_rows_from`].
+    pub fn zeroed(dtype: KvDtype, rows: usize, row_len: usize) -> Self {
+        match dtype {
+            KvDtype::F32 => KvBlock::F32(vec![0f32; rows * row_len]),
+            _ => KvBlock::Quant(QuantBlock::zeroed(dtype, rows, row_len)),
+        }
+    }
+
+    /// Re-shape this block in place, recycling buffer capacity when
+    /// the dtype matches the current variant (the arena publish path).
+    /// Contents of rows not subsequently rewritten via
+    /// [`Self::write_rows_from`] are unspecified.
+    pub fn reshape(&mut self, dtype: KvDtype, rows: usize, row_len: usize) {
+        match (self, dtype) {
+            (KvBlock::F32(data), KvDtype::F32) => data.resize(rows * row_len, 0.0),
+            (KvBlock::Quant(q), d) if d.is_quantized() => q.reshape(d, rows, row_len),
+            (slot, d) => *slot = KvBlock::zeroed(d, rows, row_len),
+        }
+    }
+
+    /// Write rows `[row0, row0 + n_rows)` in place from `src` (length
+    /// `n_rows × row_len`): a straight copy for f32 payloads, a fused
+    /// [`VectorizedCodec`] encode otherwise. This is the single lossy
+    /// step of the publish path (requantize-once rule) — row
+    /// independence makes chunked per-(layer, head) writes
+    /// bit-identical to encoding the whole block at once.
+    pub fn write_rows_from(&mut self, row0: usize, n_rows: usize, row_len: usize, src: &[f32]) {
+        debug_assert_eq!(src.len(), n_rows * row_len);
+        match self {
+            KvBlock::F32(data) => {
+                data[row0 * row_len..(row0 + n_rows) * row_len].copy_from_slice(src);
+            }
+            KvBlock::Quant(q) => {
+                debug_assert_eq!(q.row_len(), row_len);
+                q.encode_rows_from(row0, n_rows, src);
+            }
         }
     }
 
@@ -512,6 +1033,38 @@ mod tests {
     }
 
     #[test]
+    fn scalar_and_vectorized_blocks_are_bit_identical() {
+        // the full cross-geometry × edge-row matrix lives in the
+        // codec_conformance integration suite; this is the in-module
+        // smoke version
+        for dtype in [KvDtype::Q8, KvDtype::Q4] {
+            let src = row_values(9, 13, 77);
+            let a = QuantBlock::quantize_with(&ScalarCodec, dtype, 9, 13, &src);
+            let b = QuantBlock::quantize_with(&VectorizedCodec, dtype, 9, 13, &src);
+            assert_eq!(a.codes(), b.codes(), "{dtype}: codes diverge");
+            for r in 0..9 {
+                assert_eq!(a.row_scale(r).to_bits(), b.row_scale(r).to_bits());
+                assert_eq!(a.row_zp(r), b.row_zp(r));
+            }
+        }
+    }
+
+    #[test]
+    fn in_place_encode_matches_whole_block_quantize() {
+        let src = row_values(6, 16, 5);
+        for dtype in [KvDtype::Q8, KvDtype::Q4] {
+            let whole = QuantBlock::quantize(dtype, 6, 16, &src);
+            // recycled block: reshape from a different geometry, then
+            // encode in two chunks
+            let mut b = QuantBlock::zeroed(dtype, 2, 9);
+            b.reshape(dtype, 6, 16);
+            b.encode_rows_from(0, 4, &src[..4 * 16]);
+            b.encode_rows_from(4, 2, &src[4 * 16..]);
+            assert_eq!(whole.codes(), b.codes(), "{dtype}: chunked encode diverges");
+        }
+    }
+
+    #[test]
     fn payload_bytes_hit_compression_targets() {
         // hd = 16: f32 64 B/row, q8 21 B/row (3.05×), q4 13 B/row (4.9×)
         let hd = 16;
@@ -541,6 +1094,23 @@ mod tests {
         let mut out = vec![0f32; 5];
         b.read_rows_into(1, 1, 5, &mut out);
         assert_eq!(&out[..], &src[5..10]);
+    }
+
+    #[test]
+    fn kvblock_write_rows_matches_from_f32() {
+        let src = row_values(8, 16, 21);
+        for dtype in [KvDtype::F32, KvDtype::Q8, KvDtype::Q4] {
+            let whole = KvBlock::from_f32(dtype, 8, 16, src.clone());
+            let mut b = KvBlock::zeroed(dtype, 8, 16);
+            // chunked in-place writes, as the fused publish path does
+            b.write_rows_from(0, 3, 16, &src[..3 * 16]);
+            b.write_rows_from(3, 5, 16, &src[3 * 16..]);
+            assert_eq!(
+                whole.to_f32(),
+                b.to_f32(),
+                "{dtype}: fused write path diverges from from_f32"
+            );
+        }
     }
 
     #[test]

@@ -30,7 +30,14 @@
 //! * **Quantize exactly once**, when a page's pristine f32 bytes enter
 //!   the pool: a COW publish (`ensure_private` / `release_lane_pages`
 //!   on a borrowed payload with other references) or a prefix export
-//!   (`export_page`). Both encode from the owning lane's f32 region.
+//!   (`export_page`). Both encode from the owning lane's f32 region —
+//!   *fused*: `snapshot_page` encodes each (layer, head) run of rows
+//!   straight from the lane's region into the snapshot's buffers
+//!   (no staging f32 copy), recycling retired snapshot boxes from the
+//!   pool's spare arena. Buffer acquisition is timed separately from
+//!   the codec ([`CacheStore::alloc_us`] vs
+//!   [`CacheStore::dequant_us`]), so the bench baselines measure the
+//!   codec, not the allocator.
 //! * **Dequantize on upload**: `materialize_pending` /
 //!   `materialize_page` decode owned payloads into the consuming
 //!   lane's f32 region — the bytes the executor uploads next tick.
@@ -154,6 +161,15 @@ pub struct CacheStore {
     /// Cumulative nanoseconds spent decoding pool payloads into lane
     /// regions (the dequant-on-upload cost; `kv.dequant_us`).
     dequant_ns: u64,
+    /// Cumulative nanoseconds spent acquiring snapshot buffers at the
+    /// publish boundary — arena reuse or fresh allocation, but never
+    /// codec work (`kv.alloc_us`).
+    alloc_ns: u64,
+    /// Per-lane conservative flag: `true` when the lane *may* hold a
+    /// scheduled (DMS delayed) eviction, `false` only when it
+    /// definitely holds none — lets `apply_due_evictions` skip its
+    /// full metadata scan on the (common) lanes that never schedule.
+    sched_evictions: Vec<bool>,
     /// Flight-recorder hooks: per-lane event counters drained by the
     /// engine once per tick. Off by default (zero-cost contract).
     track_events: bool,
@@ -197,6 +213,8 @@ impl CacheStore {
             cow_published: 0,
             kv_dtype,
             dequant_ns: 0,
+            alloc_ns: 0,
+            sched_evictions: vec![false; batch],
             track_events: false,
             tick_events: vec![LaneTickEvents::default(); batch],
             lh_mark: vec![0; n_lbh],
@@ -418,23 +436,40 @@ impl CacheStore {
                 evict_at: evict_at as u32,
                 merges,
             };
+            self.sched_evictions[b] = true;
         }
     }
 
     /// Execute pending evictions whose time has come (pos >= evict_at).
+    ///
+    /// Runs every step for every lane, so it carries a fast path: the
+    /// `sched_evictions` flag conservatively tracks whether the lane
+    /// may hold a scheduled eviction at all, and the full O(L·H·S)
+    /// metadata scan only runs (and re-arms or clears the flag) when
+    /// it does. Non-DMS policies therefore pay one branch per step.
     pub fn apply_due_evictions(&mut self, b: usize, pos: usize) {
+        if !self.sched_evictions[b] {
+            return;
+        }
+        let mut remaining = false;
         for l in 0..self.geom.layers {
             for h in 0..self.geom.kv_heads {
                 let i = self.lbh(b, l, h);
                 for s in 0..self.geom.slots {
                     if let SlotState::Live { evict_at, .. } = self.meta[i][s] {
-                        if evict_at != NO_EVICT && pos as u32 >= evict_at {
+                        if evict_at == NO_EVICT {
+                            continue;
+                        }
+                        if pos as u32 >= evict_at {
                             self.evict(b, l, h, s);
+                        } else {
+                            remaining = true;
                         }
                     }
                 }
             }
         }
+        self.sched_evictions[b] = remaining;
     }
 
     // ---------------- queries ----------------
@@ -540,13 +575,23 @@ impl CacheStore {
 
     /// Live slots of (b, l, h) with their positions (for policy evictors).
     pub fn live_slots(&self, b: usize, l: usize, h: usize) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        self.live_slots_into(b, l, h, &mut out);
+        out
+    }
+
+    /// [`CacheStore::live_slots`] into a caller-supplied buffer
+    /// (cleared first, ascending slot order). The policy hot loops
+    /// reuse one scratch vector across every (layer, head) cell
+    /// instead of allocating per cell per step.
+    pub fn live_slots_into(&self, b: usize, l: usize, h: usize, out: &mut Vec<(usize, usize)>) {
+        out.clear();
         let i = self.lbh(b, l, h);
-        (0..self.geom.slots)
-            .filter_map(|s| match self.meta[i][s] {
-                SlotState::Live { pos, .. } => Some((s, pos as usize)),
-                SlotState::Free => None,
-            })
-            .collect()
+        for (s, m) in self.meta[i].iter().enumerate() {
+            if let SlotState::Live { pos, .. } = *m {
+                out.push((s, pos as usize));
+            }
+        }
     }
 
     // ---------------- lane lifecycle ----------------
@@ -564,6 +609,7 @@ impl CacheStore {
 
     pub fn reset_lane(&mut self, b: usize) {
         self.release_lane_pages(b);
+        self.sched_evictions[b] = false;
         for l in 0..self.geom.layers {
             for h in 0..self.geom.kv_heads {
                 let i = self.lbh(b, l, h);
@@ -625,6 +671,9 @@ impl CacheStore {
                 self.last_written[di] = self.last_written[si];
             }
         }
+        // dst's metadata is now a verbatim copy of src's, scheduled
+        // evictions included
+        self.sched_evictions[dst] = self.sched_evictions[src];
         // src pages may be lazily shared with other lanes; dst's copy is
         // private, but any pages src itself still needs to fill must be
         // resolved into dst too.
@@ -704,6 +753,11 @@ impl CacheStore {
                 self.last_written[di] = self.last_written[si];
             }
         }
+        // dst inherited src's slot metadata, so it may now carry src's
+        // scheduled evictions (conservative: true means "may hold")
+        if self.sched_evictions[src] {
+            self.sched_evictions[dst] = true;
+        }
         shared
     }
 
@@ -714,6 +768,9 @@ impl CacheStore {
     pub fn map_prefix_pages(&mut self, lane: usize, ids: &[PageId]) {
         let g = self.geom;
         let ps = g.page_size;
+        // restored snapshots can carry scheduled evictions (a DMS
+        // lane's published page); re-arm the lane's flag if any do
+        let mut sched = false;
         for &id in ids {
             let p = self.pool.page_index(id);
             debug_assert!(
@@ -735,14 +792,20 @@ impl CacheStore {
                     for j in 0..ps {
                         let m = data.meta[lh_i * ps + j];
                         let s = p * ps + j;
-                        if matches!(m, SlotState::Live { .. }) {
+                        if let SlotState::Live { evict_at, .. } = m {
                             self.live[i] += 1;
                             self.alloc[i].claim(s);
+                            if evict_at != NO_EVICT {
+                                sched = true;
+                            }
                         }
                         self.meta[i][s] = m;
                     }
                 }
             }
+        }
+        if sched {
+            self.sched_evictions[lane] = true;
         }
     }
 
@@ -818,30 +881,33 @@ impl CacheStore {
     fn copy_page_from_pool(&mut self, id: PageId, b: usize, page: usize) {
         let g = self.geom;
         let (ps, hd) = (g.page_size, g.head_dim);
-        // precompute region bases (cannot call &self helpers while the
-        // pool payload is borrowed below)
-        let mut bases = Vec::with_capacity(g.lh());
-        for l in 0..g.layers {
-            for h in 0..g.kv_heads {
-                bases.push((
-                    self.kv_base(b, l, h, page * ps),
-                    self.mask_idx(b, l, h, page * ps),
-                    self.page_base(b, l, h, page),
-                ));
-            }
-        }
+        // region-index math as pure local closures: no allocation, and
+        // no `&self` method borrow while the pool payload is borrowed
+        // below (the codec decodes straight into the lane region —
+        // fused dequant-on-upload, no intermediate buffer)
+        let batch = self.batch;
+        let (heads, slots, pages) = (g.kv_heads, g.slots, g.pages());
+        let kv_base = |l: usize, h: usize| (((l * batch + b) * heads + h) * slots + page * ps) * hd;
+        let mask_base = |l: usize, h: usize| ((l * batch + b) * heads + h) * slots + page * ps;
+        let bounds_base = |l: usize, h: usize| (((l * batch + b) * heads + h) * pages + page) * hd;
         let t0 = Instant::now();
         let Payload::Owned(data) = self.pool.payload(id) else {
             unreachable!("copy_page_from_pool on borrowed payload");
         };
-        for (lh_i, &(kb, mb, pb)) in bases.iter().enumerate() {
-            data.k
-                .read_rows_into(lh_i * ps, ps, hd, &mut self.k[kb..kb + ps * hd]);
-            data.v
-                .read_rows_into(lh_i * ps, ps, hd, &mut self.v[kb..kb + ps * hd]);
-            self.mask[mb..mb + ps].copy_from_slice(&data.mask[lh_i * ps..(lh_i + 1) * ps]);
-            self.pmin[pb..pb + hd].copy_from_slice(&data.pmin[lh_i * hd..(lh_i + 1) * hd]);
-            self.pmax[pb..pb + hd].copy_from_slice(&data.pmax[lh_i * hd..(lh_i + 1) * hd]);
+        for l in 0..g.layers {
+            for h in 0..g.kv_heads {
+                let lh_i = l * g.kv_heads + h;
+                let kb = kv_base(l, h);
+                data.k
+                    .read_rows_into(lh_i * ps, ps, hd, &mut self.k[kb..kb + ps * hd]);
+                data.v
+                    .read_rows_into(lh_i * ps, ps, hd, &mut self.v[kb..kb + ps * hd]);
+                let mb = mask_base(l, h);
+                self.mask[mb..mb + ps].copy_from_slice(&data.mask[lh_i * ps..(lh_i + 1) * ps]);
+                let pb = bounds_base(l, h);
+                self.pmin[pb..pb + hd].copy_from_slice(&data.pmin[lh_i * hd..(lh_i + 1) * hd]);
+                self.pmax[pb..pb + hd].copy_from_slice(&data.pmax[lh_i * hd..(lh_i + 1) * hd]);
+            }
         }
         self.dequant_ns += t0.elapsed().as_nanos() as u64;
         if self.track_events {
@@ -853,28 +919,51 @@ impl CacheStore {
     /// form, encoding the K/V payload under the store's [`KvDtype`].
     /// This is the publish boundary — the single point where a
     /// payload's (only) quantization happens.
-    fn snapshot_page(&self, lane: usize, page: usize) -> PageData {
+    ///
+    /// The encode is *fused*: each (layer, head) run of `page_size`
+    /// rows is encoded straight from the lane's region of the flat
+    /// arrays into the snapshot's blocks via
+    /// [`KvBlock::write_rows_from`] — no staging f32 copy. Rows encode
+    /// independently, so the chunked order is bit-identical to the old
+    /// gather-then-quantize path. Snapshot buffers come from the
+    /// pool's spare arena when one is available; acquisition time is
+    /// accounted in [`CacheStore::alloc_us`], never in the codec's
+    /// [`CacheStore::dequant_us`].
+    fn snapshot_page(&mut self, lane: usize, page: usize) -> Box<PageData> {
         let g = self.geom;
         let (ps, hd) = (g.page_size, g.head_dim);
         let lh = g.lh();
-        let mut kvec = vec![0f32; lh * ps * hd];
-        let mut vvec = vec![0f32; lh * ps * hd];
-        let mut data = PageData {
-            k: KvBlock::F32(Vec::new()),
-            v: KvBlock::F32(Vec::new()),
-            mask: vec![NEG_INF; lh * ps],
-            meta: vec![SlotState::Free; lh * ps],
-            pmin: vec![0.0; lh * hd],
-            pmax: vec![0.0; lh * hd],
+        let rows = lh * ps;
+        let t0 = Instant::now();
+        let mut data = match self.pool.take_spare() {
+            Some(mut d) => {
+                // same store, same geometry: only the blocks need a
+                // reshape (they keep their buffer capacity)
+                d.k.reshape(self.kv_dtype, rows, hd);
+                d.v.reshape(self.kv_dtype, rows, hd);
+                debug_assert_eq!(d.mask.len(), rows, "spare from another geometry");
+                debug_assert_eq!(d.meta.len(), rows);
+                debug_assert_eq!(d.pmin.len(), lh * hd);
+                d
+            }
+            None => Box::new(PageData {
+                k: KvBlock::zeroed(self.kv_dtype, rows, hd),
+                v: KvBlock::zeroed(self.kv_dtype, rows, hd),
+                mask: vec![NEG_INF; rows],
+                meta: vec![SlotState::Free; rows],
+                pmin: vec![0.0; lh * hd],
+                pmax: vec![0.0; lh * hd],
+            }),
         };
+        self.alloc_ns += t0.elapsed().as_nanos() as u64;
         for l in 0..g.layers {
             for h in 0..g.kv_heads {
                 let lh_i = l * g.kv_heads + h;
                 let kb = self.kv_base(lane, l, h, page * ps);
-                kvec[lh_i * ps * hd..(lh_i + 1) * ps * hd]
-                    .copy_from_slice(&self.k[kb..kb + ps * hd]);
-                vvec[lh_i * ps * hd..(lh_i + 1) * ps * hd]
-                    .copy_from_slice(&self.v[kb..kb + ps * hd]);
+                data.k
+                    .write_rows_from(lh_i * ps, ps, hd, &self.k[kb..kb + ps * hd]);
+                data.v
+                    .write_rows_from(lh_i * ps, ps, hd, &self.v[kb..kb + ps * hd]);
                 let mb = self.mask_idx(lane, l, h, page * ps);
                 data.mask[lh_i * ps..(lh_i + 1) * ps].copy_from_slice(&self.mask[mb..mb + ps]);
                 let i = self.lbh(lane, l, h);
@@ -885,8 +974,6 @@ impl CacheStore {
                 data.pmax[lh_i * hd..(lh_i + 1) * hd].copy_from_slice(&self.pmax[pb..pb + hd]);
             }
         }
-        data.k = KvBlock::from_f32(self.kv_dtype, lh * ps, hd, kvec);
-        data.v = KvBlock::from_f32(self.kv_dtype, lh * ps, hd, vvec);
         data
     }
 
@@ -1088,6 +1175,20 @@ impl CacheStore {
     /// f32 restores, which share the same path).
     pub fn dequant_us(&self) -> f64 {
         self.dequant_ns as f64 / 1_000.0
+    }
+
+    /// Cumulative microseconds spent acquiring snapshot buffers at the
+    /// publish boundary (spare-arena reuse or fresh allocation — the
+    /// `kv.alloc_us` gauge). Never includes codec work, which
+    /// [`CacheStore::dequant_us`] and the bench encode legs measure.
+    pub fn alloc_us(&self) -> f64 {
+        self.alloc_ns as f64 / 1_000.0
+    }
+
+    /// Retired snapshot boxes currently parked in the pool's spare
+    /// arena, awaiting reuse by the next publish.
+    pub fn pool_spare_pages(&self) -> usize {
+        self.pool.spare_pages()
     }
 
     /// Host bytes of K+V payload currently held by pool-owned

@@ -16,9 +16,12 @@
 //! before each executor call), and the upload itself is always plain
 //! f32 — the compiled executables are precision-agnostic and never
 //! recompile when the storage format changes. The decode cost is
-//! accounted in `CacheStore::dequant_us` (`kv.dequant_us` gauge);
-//! the upload *volume* is [`cache_upload_bytes`]. See
-//! `docs/NUMERICS.md` for the full contract.
+//! accounted in `CacheStore::dequant_us` (`kv.dequant_us` gauge),
+//! kept separate from snapshot-buffer acquisition on the publish side
+//! (`CacheStore::alloc_us`, the `kv.alloc_us` gauge) so codec cost
+//! and allocator churn never conflate; the upload *volume* is
+//! [`cache_upload_bytes`]. See `docs/NUMERICS.md` for the full
+//! contract.
 
 use std::rc::Rc;
 

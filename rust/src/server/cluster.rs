@@ -65,7 +65,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::config::{ClusterConfig, EngineConfig};
-use crate::engine::{CompletedRequest, Engine, GenRequest, Session, SimEngine, SloTier};
+use crate::engine::{CompletedRequest, Engine, Session, SimEngine, SubmitSpec};
 use crate::metrics::{prometheus_merge, Registry};
 use crate::trace::{Stamped, TraceEvent, Tracer};
 use crate::util::Json;
@@ -83,15 +83,13 @@ use super::{response_from, write_trace_dump, Dispatch, ServeOpts};
 /// a factory, not instances.
 pub trait Backend {
     /// Tokenize, validate, and enqueue a request; returns its ticket.
-    fn submit(&mut self, req: &GenRequest) -> Result<u64>;
-    /// [`submit`](Self::submit) recording `trace_id` as the
-    /// client-visible request id on the backend's flight recorder.
-    fn submit_traced(&mut self, req: &GenRequest, trace_id: Option<u64>) -> Result<u64>;
-    /// Stamp an already-submitted ticket with its SLO tier: the
-    /// scheduler gains the tier + absolute e2e deadline (EDF ordering,
-    /// tier-aware preemption) and completion ticks account deadline
-    /// misses into the `serve.slo_*` metrics.
-    fn assign_slo(&mut self, ticket: u64, tier: SloTier);
+    /// The [`SubmitSpec`] carries the client-visible trace id (keyed
+    /// onto the backend's flight recorder) and the optional SLO tier
+    /// (EDF ordering, tier-aware preemption, deadline misses accounted
+    /// into the `serve.slo_*` metrics) alongside the request itself —
+    /// one typed entrypoint instead of the old
+    /// `submit`/`submit_traced`/`assign_slo` call sequence.
+    fn submit(&mut self, spec: &SubmitSpec) -> Result<u64>;
     /// Advance one scheduler tick; returns finished requests.
     fn tick(&mut self) -> Result<Vec<CompletedRequest>>;
     /// Nothing running or queued.
@@ -145,14 +143,8 @@ impl EngineBackend {
 }
 
 impl Backend for EngineBackend {
-    fn submit(&mut self, req: &GenRequest) -> Result<u64> {
-        self.engine.submit(&mut self.session, req)
-    }
-    fn submit_traced(&mut self, req: &GenRequest, trace_id: Option<u64>) -> Result<u64> {
-        self.engine.submit_traced(&mut self.session, req, trace_id)
-    }
-    fn assign_slo(&mut self, ticket: u64, tier: SloTier) {
-        self.engine.assign_slo(&mut self.session, ticket, tier)
+    fn submit(&mut self, spec: &SubmitSpec) -> Result<u64> {
+        self.engine.submit_spec(&mut self.session, spec)
     }
     fn tick(&mut self) -> Result<Vec<CompletedRequest>> {
         self.engine.tick(&mut self.session)
@@ -199,14 +191,8 @@ impl Backend for EngineBackend {
 }
 
 impl Backend for SimEngine {
-    fn submit(&mut self, req: &GenRequest) -> Result<u64> {
-        SimEngine::submit(self, req)
-    }
-    fn submit_traced(&mut self, req: &GenRequest, trace_id: Option<u64>) -> Result<u64> {
-        SimEngine::submit_traced(self, req, trace_id)
-    }
-    fn assign_slo(&mut self, ticket: u64, tier: SloTier) {
-        SimEngine::assign_slo(self, ticket, tier)
+    fn submit(&mut self, spec: &SubmitSpec) -> Result<u64> {
+        SimEngine::submit_spec(self, spec)
     }
     fn tick(&mut self) -> Result<Vec<CompletedRequest>> {
         SimEngine::tick(self)
@@ -289,16 +275,6 @@ enum ReplicaMsg {
     /// for the shutdown `--trace-out` / `--prom-out` exports.
     Dump(mpsc::Sender<String>),
     Shutdown,
-}
-
-fn gen_of(req: &ServeRequest) -> GenRequest {
-    GenRequest {
-        prompt: req.prompt.clone(),
-        width: req.width,
-        max_len: req.max_len,
-        temperature: req.temperature,
-        seed: req.seed,
-    }
 }
 
 /// A running engine cluster. Created by [`Cluster::start`]; clients
@@ -634,11 +610,8 @@ fn handle_replica_msg<B: Backend>(
 ) -> bool {
     match msg {
         ReplicaMsg::Request(req, reply) => {
-            match backend.submit_traced(&gen_of(&req), Some(req.id)) {
+            match backend.submit(&req.submit_spec()) {
                 Ok(ticket) => {
-                    if let Some(tier) = req.slo {
-                        backend.assign_slo(ticket, tier);
-                    }
                     inflight.insert(ticket, (req, reply));
                 }
                 Err(e) => {

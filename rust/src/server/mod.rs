@@ -45,12 +45,15 @@ use std::sync::mpsc;
 use anyhow::Result;
 
 use crate::config::EngineConfig;
-use crate::engine::{majority_vote, CompletedRequest, Engine, GenRequest, Session};
+use crate::engine::{majority_vote, CompletedRequest, Engine, Session};
 use crate::trace::{chrome_trace_json, Stamped};
 use crate::util::Json;
 
 pub use cluster::{serve_cluster, Backend, Cluster, EngineBackend};
-pub use protocol::{parse_request, render_response, ServeRequest, ServeResponse};
+pub use protocol::{
+    parse_command, parse_request, render_line, render_response, Command, Response,
+    ServeRequest, ServeResponse,
+};
 pub use router::{first_alive, mask_dead, ReplicaLoad, RouteDecision, Router, StealPlan};
 
 enum Msg {
@@ -233,18 +236,8 @@ fn handle_msg(
 ) -> bool {
     match msg {
         Msg::Request(req, reply) => {
-            let gen = GenRequest {
-                prompt: req.prompt.clone(),
-                width: req.width,
-                max_len: req.max_len,
-                temperature: req.temperature,
-                seed: req.seed,
-            };
-            match engine.submit_traced(session, &gen, Some(req.id)) {
+            match engine.submit_spec(session, &req.submit_spec()) {
                 Ok(ticket) => {
-                    if let Some(tier) = req.slo {
-                        engine.assign_slo(session, ticket, tier);
-                    }
                     inflight.insert(ticket, Inflight { req, reply });
                 }
                 Err(e) => {
@@ -361,55 +354,36 @@ fn handle_client<D: Dispatch>(stream: TcpStream, dispatch: D) -> Result<()> {
         let json = match Json::parse(&line) {
             Ok(j) => j,
             Err(e) => {
-                writeln!(
-                    writer,
-                    "{}",
-                    Json::obj().set("error", format!("bad json: {e}")).to_string()
-                )?;
+                let resp = Response::Error(format!("bad json: {e}"));
+                writeln!(writer, "{}", render_line(&resp))?;
                 continue;
             }
         };
-        if let Some(cmd) = json.get("cmd").and_then(Json::as_str) {
-            match cmd {
-                "shutdown" => {
-                    dispatch.shutdown();
-                    writeln!(writer, "{}", Json::obj().set("ok", true).to_string())?;
-                    return Ok(());
-                }
-                "stats" => {
-                    let (rtx, rrx) = mpsc::channel();
-                    dispatch.stats(rtx);
-                    if let Ok(s) = rrx.recv() {
-                        writeln!(writer, "{s}")?;
-                    }
-                    continue;
-                }
-                "trace" => {
-                    let rid = json
-                        .get("request_id")
-                        .and_then(Json::as_i64)
-                        .unwrap_or(0) as u64;
-                    let (rtx, rrx) = mpsc::channel();
-                    dispatch.trace(rid, rtx);
-                    if let Ok(s) = rrx.recv() {
-                        writeln!(writer, "{s}")?;
-                    }
-                    continue;
-                }
-                other => {
-                    writeln!(
-                        writer,
-                        "{}",
-                        Json::obj()
-                            .set("error", format!("unknown cmd '{other}'"))
-                            .to_string()
-                    )?;
-                    continue;
+        // one typed decode point: control verbs and generation
+        // requests — including the SubmitSpec fields (slo, trace id)
+        // — parse in protocol.rs, and every malformed line answers
+        // with the same error shape.
+        match parse_command(&json) {
+            Ok(Command::Shutdown) => {
+                dispatch.shutdown();
+                writeln!(writer, "{}", render_line(&Response::Ok))?;
+                return Ok(());
+            }
+            Ok(Command::Stats) => {
+                let (rtx, rrx) = mpsc::channel();
+                dispatch.stats(rtx);
+                if let Ok(s) = rrx.recv() {
+                    writeln!(writer, "{s}")?;
                 }
             }
-        }
-        match parse_request(&json) {
-            Ok(req) => {
+            Ok(Command::Trace { request_id }) => {
+                let (rtx, rrx) = mpsc::channel();
+                dispatch.trace(request_id, rtx);
+                if let Ok(s) = rrx.recv() {
+                    writeln!(writer, "{s}")?;
+                }
+            }
+            Ok(Command::Submit(req)) => {
                 let (rtx, rrx) = mpsc::channel();
                 dispatch.request(req, rtx);
                 if let Ok(s) = rrx.recv() {
@@ -417,11 +391,8 @@ fn handle_client<D: Dispatch>(stream: TcpStream, dispatch: D) -> Result<()> {
                 }
             }
             Err(e) => {
-                writeln!(
-                    writer,
-                    "{}",
-                    Json::obj().set("error", format!("{e:#}")).to_string()
-                )?;
+                let resp = Response::Error(format!("{e:#}"));
+                writeln!(writer, "{}", render_line(&resp))?;
             }
         }
     }

@@ -6,10 +6,18 @@
 //! numbers (KV reads, peak tokens), and — since the continuous-batching
 //! server — per-request serving timings (queueing delay, TTFT,
 //! end-to-end latency, generation throughput).
+//!
+//! Every inbound line decodes to one typed [`Command`] via
+//! [`parse_command`] — control verbs (`{"cmd": ...}`) and generation
+//! requests parse in a single place, so unknown commands and malformed
+//! fields produce uniform error lines no matter which front end
+//! (single engine or cluster) is serving. A parsed [`ServeRequest`]
+//! maps to the engine's typed submission with
+//! [`ServeRequest::submit_spec`].
 
 use anyhow::{anyhow, Result};
 
-use crate::engine::{RequestTiming, SloTier};
+use crate::engine::{GenRequest, RequestTiming, SloTier, SubmitSpec};
 use crate::util::Json;
 
 /// Parsed generation request.
@@ -30,6 +38,76 @@ pub struct ServeRequest {
     /// SLO tier (`"interactive"`, `"standard"`, `"batch"`). `None`
     /// means no deadline accounting for this request.
     pub slo: Option<SloTier>,
+}
+
+impl ServeRequest {
+    /// The typed engine submission this wire request describes: the
+    /// generation payload plus the flight-recorder key (the
+    /// client-chosen `id`) and SLO tier, assembled in one place for
+    /// every serving front end (`Backend::submit` takes exactly this).
+    pub fn submit_spec(&self) -> SubmitSpec {
+        SubmitSpec {
+            request: GenRequest {
+                prompt: self.prompt.clone(),
+                width: self.width,
+                max_len: self.max_len,
+                temperature: self.temperature,
+                seed: self.seed,
+            },
+            trace_id: Some(self.id),
+            slo: self.slo,
+        }
+    }
+}
+
+/// One decoded inbound protocol line.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Command {
+    /// A generation request (any line without a `"cmd"` field).
+    Submit(ServeRequest),
+    /// `{"cmd": "stats"}` — metrics dump.
+    Stats,
+    /// `{"cmd": "trace", "request_id": N}` — flight-recorder slice.
+    Trace { request_id: u64 },
+    /// `{"cmd": "shutdown"}`.
+    Shutdown,
+}
+
+/// Decode one parsed JSON line into its typed [`Command`]. Unknown
+/// `cmd` verbs and malformed request fields both surface here, so the
+/// client handler renders every protocol error the same way.
+pub fn parse_command(j: &Json) -> Result<Command> {
+    if let Some(cmd) = j.get("cmd").and_then(Json::as_str) {
+        return match cmd {
+            "shutdown" => Ok(Command::Shutdown),
+            "stats" => Ok(Command::Stats),
+            "trace" => Ok(Command::Trace {
+                request_id: j.get("request_id").and_then(Json::as_i64).unwrap_or(0) as u64,
+            }),
+            other => Err(anyhow!("unknown cmd '{other}'")),
+        };
+    }
+    Ok(Command::Submit(parse_request(j)?))
+}
+
+/// One outbound protocol line that is not a rendered [`ServeResponse`]
+/// (those go through [`render_response`]): acknowledgements and
+/// protocol-level errors, typed so front ends never hand-build the
+/// JSON shape inline.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    /// `{"ok": true}` — e.g. the shutdown acknowledgement.
+    Ok,
+    /// `{"error": ...}` — bad JSON, unknown command, malformed request.
+    Error(String),
+}
+
+/// Render a control/error [`Response`] as one JSON line.
+pub fn render_line(r: &Response) -> String {
+    match r {
+        Response::Ok => Json::obj().set("ok", true).to_string(),
+        Response::Error(msg) => Json::obj().set("error", msg.as_str()).to_string(),
+    }
 }
 
 /// Response payload.
@@ -269,5 +347,70 @@ mod tests {
         let r = ServeResponse::error(1, "boom");
         let j = Json::parse(&render_response(&r)).unwrap();
         assert_eq!(j.get("error").unwrap().as_str(), Some("boom"));
+    }
+
+    #[test]
+    fn commands_parse_to_typed_variants() {
+        let cases = [
+            (r#"{"cmd": "stats"}"#, Command::Stats),
+            (r#"{"cmd": "shutdown"}"#, Command::Shutdown),
+            (
+                r#"{"cmd": "trace", "request_id": 9}"#,
+                Command::Trace { request_id: 9 },
+            ),
+            (r#"{"cmd": "trace"}"#, Command::Trace { request_id: 0 }),
+        ];
+        for (line, want) in cases {
+            let j = Json::parse(line).unwrap();
+            assert_eq!(parse_command(&j).unwrap(), want);
+        }
+    }
+
+    #[test]
+    fn request_lines_parse_to_submit() {
+        let j = Json::parse(r#"{"id": 4, "prompt": "x", "slo": "batch"}"#).unwrap();
+        match parse_command(&j).unwrap() {
+            Command::Submit(req) => {
+                assert_eq!(req.id, 4);
+                assert_eq!(req.slo, Some(SloTier::Batch));
+            }
+            other => panic!("expected Submit, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_cmd_and_bad_request_error_uniformly() {
+        let j = Json::parse(r#"{"cmd": "reboot"}"#).unwrap();
+        let err = parse_command(&j).unwrap_err();
+        assert_eq!(err.to_string(), "unknown cmd 'reboot'");
+        let j = Json::parse(r#"{"id": 1}"#).unwrap();
+        assert!(parse_command(&j).is_err(), "missing prompt still errors");
+    }
+
+    #[test]
+    fn submit_spec_carries_trace_id_and_slo() {
+        let j = Json::parse(
+            r#"{"id": 11, "prompt": "p", "width": 2, "seed": 5, "slo": "interactive"}"#,
+        )
+        .unwrap();
+        let spec = parse_request(&j).unwrap().submit_spec();
+        assert_eq!(spec.trace_id, Some(11));
+        assert_eq!(spec.slo, Some(SloTier::Interactive));
+        assert_eq!(spec.request.prompt, "p");
+        assert_eq!(spec.request.width, 2);
+        assert_eq!(spec.request.seed, 5);
+    }
+
+    #[test]
+    fn control_lines_render() {
+        assert_eq!(
+            Json::parse(&render_line(&Response::Ok))
+                .unwrap()
+                .get("ok")
+                .and_then(|j| j.as_bool()),
+            Some(true)
+        );
+        let j = Json::parse(&render_line(&Response::Error("bad json: x".into()))).unwrap();
+        assert_eq!(j.get("error").unwrap().as_str(), Some("bad json: x"));
     }
 }

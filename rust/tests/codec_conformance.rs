@@ -1,0 +1,307 @@
+// Shared lint config for non-lib targets (benches/tests/examples are
+// separate crates, so the crate-wide allows in rust/src/lib.rs do not
+// reach them): the same flat-layout indexing idiom applies here, and
+// vec! payloads deliberately mirror the engine's heap buffers.
+// Correctness lints stay on — CI denies all remaining warnings via
+// `cargo clippy --all-targets -- -D warnings`.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::manual_div_ceil,
+    clippy::uninlined_format_args,
+    clippy::useless_vec
+)]
+
+//! Codec conformance: the production [`VectorizedCodec`] is pinned
+//! **bit-identical** to the frozen [`ScalarCodec`] reference (see the
+//! codec contract in `docs/NUMERICS.md`):
+//!
+//! * identical code bytes, scale bit patterns, and zero-points on
+//!   encode, across dtypes × geometries (hd16, hd64, odd row lengths
+//!   for the q4 nibble tail, single-element rows) on randomized
+//!   payloads — seeded by `PROP_SEED` like the other property suites;
+//! * identical f32 bit patterns on decode of the same blocks;
+//! * the same identity on the NaN / ±inf / subnormal edge-row matrix
+//!   (the PR-6 non-finite contract), where the vectorized encoder's
+//!   checked slow path takes over;
+//! * at store level: the fused encode-on-publish / dequant-on-upload
+//!   paths (chunked per-(layer, head) [`KvBlock::write_rows_from`] /
+//!   `read_rows_into`, no staging copies) restore views bit-identical
+//!   to the legacy copy-through pipeline (gather whole page → one
+//!   [`QuantBlock::quantize`] → decode → copy).
+
+use hyperscale::kvcache::{
+    CacheStore, Codec, Geometry, KvDtype, QuantBlock, ScalarCodec, VectorizedCodec,
+};
+use hyperscale::util::SplitMix64;
+
+/// Base seed for randomized property tests (see module docs).
+fn prop_seed() -> u64 {
+    match std::env::var("PROP_SEED") {
+        Ok(s) => {
+            let s = s.trim();
+            let parsed = match s.strip_prefix("0x") {
+                Some(hex) => u64::from_str_radix(hex, 16),
+                None => s.parse(),
+            };
+            parsed.unwrap_or_else(|_| panic!("PROP_SEED must be an integer, got {s:?}"))
+        }
+        Err(_) => 0xDEFA_0175,
+    }
+}
+
+/// Random payload with realistic spread; occasionally exact zeros and
+/// exact-constant rows so the degenerate encodings are hit too.
+fn random_rows(rng: &mut SplitMix64, rows: usize, row_len: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(rows * row_len);
+    for _ in 0..rows {
+        match rng.below(8) {
+            0 => out.extend((0..row_len).map(|_| 0.0f32)),
+            1 => {
+                let c = (rng.f64() * 4.0 - 2.0) as f32;
+                out.extend((0..row_len).map(|_| c));
+            }
+            _ => {
+                for _ in 0..row_len {
+                    out.push((rng.f64() * 8.0 - 4.0) as f32);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Assert both codecs encode `src` to byte-identical blocks and decode
+/// those blocks to bit-identical f32.
+fn assert_bit_identical(dtype: KvDtype, rows: usize, row_len: usize, src: &[f32], ctx: &str) {
+    let a = QuantBlock::quantize_with(&ScalarCodec, dtype, rows, row_len, src);
+    let b = QuantBlock::quantize_with(&VectorizedCodec, dtype, rows, row_len, src);
+    assert_eq!(a.codes(), b.codes(), "{ctx} {dtype}: code bytes diverge");
+    for r in 0..rows {
+        assert_eq!(
+            a.row_scale(r).to_bits(),
+            b.row_scale(r).to_bits(),
+            "{ctx} {dtype}: row {r} scale bits diverge"
+        );
+        assert_eq!(a.row_zp(r), b.row_zp(r), "{ctx} {dtype}: row {r} zero-point diverges");
+    }
+    // decode the scalar-encoded block with both decoders: the byte
+    // streams are equal, so this pins the decode side independently
+    let stride = dtype.row_code_bytes(row_len);
+    let scales: Vec<f32> = (0..rows).map(|r| a.row_scale(r)).collect();
+    let zps: Vec<u8> = (0..rows).map(|r| a.row_zp(r)).collect();
+    let mut dec_s = vec![0f32; rows * row_len];
+    let mut dec_v = vec![0f32; rows * row_len];
+    assert_eq!(a.codes().len(), rows * stride);
+    ScalarCodec.decode_rows_into(dtype, rows, row_len, a.codes(), &scales, &zps, &mut dec_s);
+    VectorizedCodec.decode_rows_into(dtype, rows, row_len, a.codes(), &scales, &zps, &mut dec_v);
+    let bits = |xs: &[f32]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&dec_s), bits(&dec_v), "{ctx} {dtype}: decoded f32 bits diverge");
+}
+
+#[test]
+fn random_payloads_are_bit_identical_across_geometries() {
+    let base = prop_seed();
+    // (rows, row_len): page-shaped hd16/hd64, the odd-row-length q4
+    // nibble tail, single-element rows, and a LANES-straddling width
+    let geometries = [(64, 16), (32, 64), (5, 7), (9, 1), (11, 13), (3, 9)];
+    for (case, &(rows, row_len)) in geometries.iter().enumerate() {
+        let mut rng = SplitMix64::new(base ^ (case as u64).wrapping_mul(0x9E37_79B9));
+        for dtype in [KvDtype::Q8, KvDtype::Q4] {
+            let src = random_rows(&mut rng, rows, row_len);
+            assert_bit_identical(dtype, rows, row_len, &src, &format!("{rows}x{row_len}"));
+        }
+    }
+}
+
+#[test]
+fn edge_rows_are_bit_identical() {
+    // the PR-6 non-finite matrix: NaN / ±inf amid spread, rows with no
+    // finite values, constant rows with junk, subnormal spreads — the
+    // exact rows docs/NUMERICS.md defines decode semantics for
+    let rl = 6;
+    let rows: Vec<[f32; 6]> = vec![
+        [1.0, f32::NAN, -2.0, 0.5, 0.0, 1.5],
+        [0.25, f32::INFINITY, 1.0, 0.75, 0.5, 0.125],
+        [f32::NEG_INFINITY, -0.5, -1.0, -0.25, 0.0, -2.0],
+        [f32::NAN; 6],
+        [f32::INFINITY; 6],
+        [f32::NEG_INFINITY; 6],
+        [2.5, f32::INFINITY, 2.5, f32::NAN, 2.5, 2.5],
+        [-1.75, f32::INFINITY, -1.75, -1.75, f32::NEG_INFINITY, -1.75],
+        [0.0, 1.0e-41, -1.0e-41, 7.0e-40, 0.0, -3.0e-40],
+        [f32::MIN_POSITIVE; 6],
+        [0.0, -0.0, 0.0, -0.0, 0.0, -0.0],
+    ];
+    let src: Vec<f32> = rows.iter().flatten().copied().collect();
+    for dtype in [KvDtype::Q8, KvDtype::Q4] {
+        assert_bit_identical(dtype, rows.len(), rl, &src, "edge");
+    }
+    // the q4 nibble tail with an edge value as the odd trailing element
+    let odd = [1.0f32, f32::NAN, -2.0, 0.5, f32::INFINITY];
+    for dtype in [KvDtype::Q8, KvDtype::Q4] {
+        assert_bit_identical(dtype, 1, 5, &odd, "odd-tail");
+    }
+}
+
+/// Blocks that interleave NaN-free rows (the vectorized encoder's
+/// branch-free fast path) with NaN-carrying rows (its checked slow
+/// path) must still match the reference row for row — the path switch
+/// is per-row and must never bleed across rows.
+#[test]
+fn interleaved_nan_rows_switch_paths_without_divergence() {
+    let mut rng = SplitMix64::new(prop_seed() ^ 0xA55A_F00D);
+    let (rows, row_len) = (24usize, 16usize);
+    for dtype in [KvDtype::Q8, KvDtype::Q4] {
+        let mut src = random_rows(&mut rng, rows, row_len);
+        for r in 0..rows {
+            if r % 3 == 1 {
+                // poison one element of every third row
+                src[r * row_len + rng.below(row_len)] = f32::NAN;
+            }
+        }
+        assert_bit_identical(dtype, rows, row_len, &src, "interleaved-nan");
+    }
+}
+
+// ----------------------------------------------------------------------
+// Store level: fused publish/upload vs the legacy copy-through path
+// ----------------------------------------------------------------------
+
+fn geom() -> Geometry {
+    Geometry {
+        layers: 2,
+        kv_heads: 2,
+        slots: 64,
+        head_dim: 16,
+        page_size: 8,
+    }
+}
+
+/// Identity-layout prefill of `n` tokens on `lane`, position-derived
+/// payloads.
+fn prefill(c: &mut CacheStore, lane: usize, n: usize) {
+    let g = c.geom;
+    for pos in 0..n {
+        let k: Vec<f32> = (0..g.head_dim)
+            .map(|d| (pos as f32) * 0.31 + (d as f32) * 0.07 - 1.5)
+            .collect();
+        let v: Vec<f32> = k.iter().map(|x| x * 0.5 + 0.125).collect();
+        for l in 0..g.layers {
+            for h in 0..g.kv_heads {
+                let s = c.alloc_slot(lane, l, h).unwrap();
+                c.write(lane, l, h, s, pos, &k, &v);
+            }
+        }
+    }
+}
+
+/// Gather the raw f32 rows of one lane page in pool-snapshot order
+/// ((layer, head)-major, then slot within the page) — exactly what the
+/// legacy publish path staged into a scratch vec before quantizing.
+fn gather_page(c: &CacheStore, lane: usize, page: usize, value_side: bool) -> Vec<f32> {
+    let g = c.geom;
+    let ps = g.page_size;
+    let mut out = Vec::with_capacity(g.lh() * ps * g.head_dim);
+    for l in 0..g.layers {
+        for h in 0..g.kv_heads {
+            for s in page * ps..(page + 1) * ps {
+                let row = if value_side {
+                    c.v_at(lane, l, h, s)
+                } else {
+                    c.k_at(lane, l, h, s)
+                };
+                out.extend_from_slice(row);
+            }
+        }
+    }
+    out
+}
+
+/// The fused publish (chunked per-(l, h) encode straight from lane
+/// f32, no staging vec) and the fused upload (decode straight into the
+/// lane region, no staging vec) must restore views bit-identical to
+/// the legacy pipeline: gather page → whole-block quantize → decode →
+/// copy. Row independence of the codec is what makes the chunked
+/// encode equivalent; this pins it through the real store entry
+/// points.
+#[test]
+fn fused_publish_and_upload_match_copy_through_pipeline() {
+    let g = geom();
+    for dtype in [KvDtype::Q8, KvDtype::Q4] {
+        let mut c = CacheStore::with_dtype(g, 2, dtype);
+        prefill(&mut c, 0, 2 * g.page_size); // two full pages
+        // an eviction hole mid-page: publish gathers raw rows
+        // regardless of slot state, on both the old and new paths
+        c.evict(0, 0, 1, 3);
+
+        // legacy reference, built BEFORE export mutates anything:
+        // gather → one whole-block quantize → decode
+        let ps = g.page_size;
+        let rows = g.lh() * ps;
+        let mut reference = Vec::new(); // per (page, side): decoded f32
+        for page in 0..2 {
+            for side in [false, true] {
+                let staged = gather_page(&c, 0, page, side);
+                let block = QuantBlock::quantize(dtype, rows, g.head_dim, &staged);
+                let mut dec = vec![0f32; rows * g.head_dim];
+                block.dequantize_rows_into(0, rows, &mut dec);
+                reference.push(dec);
+            }
+        }
+
+        // the real store path: fused encode on export, fused decode on
+        // materialize
+        let ids: Vec<u64> = (0..2).map(|p| c.export_page(0, p)).collect();
+        c.recycle_lane(0);
+        c.map_prefix_pages(1, &ids);
+        c.materialize_pending();
+
+        for page in 0..2 {
+            for (si, side) in [false, true].iter().enumerate() {
+                let dec = &reference[page * 2 + si];
+                for l in 0..g.layers {
+                    for h in 0..g.kv_heads {
+                        for s in page * ps..(page + 1) * ps {
+                            let lh_i = l * g.kv_heads + h;
+                            let r = lh_i * ps + (s - page * ps);
+                            let want = &dec[r * g.head_dim..(r + 1) * g.head_dim];
+                            let got = if *side {
+                                c.v_at(1, l, h, s)
+                            } else {
+                                c.k_at(1, l, h, s)
+                            };
+                            let side_name = if *side { "v" } else { "k" };
+                            assert_eq!(
+                                got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                                want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                                "{dtype}: fused {side_name} restore diverges from the \
+                                 copy-through pipeline at (l {l}, h {h}, slot {s})"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        c.recycle_lane(1);
+        assert_eq!(c.pool_pages(), 0);
+    }
+}
+
+/// The f32 store's fused copy path is exact end to end (no codec in
+/// the loop): restored bytes equal the original lane bytes.
+#[test]
+fn fused_f32_restore_is_exact() {
+    let g = geom();
+    let mut c = CacheStore::new(g, 2);
+    prefill(&mut c, 0, g.page_size);
+    let before = gather_page(&c, 0, 0, false);
+    let before_v = gather_page(&c, 0, 0, true);
+    let id = c.export_page(0, 0);
+    c.recycle_lane(0);
+    c.map_prefix_pages(1, &[id]);
+    c.materialize_pending();
+    assert_eq!(gather_page(&c, 1, 0, false), before);
+    assert_eq!(gather_page(&c, 1, 0, true), before_v);
+    c.recycle_lane(1);
+}

@@ -124,6 +124,10 @@ def main() -> None:
             gated[f"{key}.live_min_lh"] = float(min(cells))
             gated[f"{key}.live_max_lh"] = float(max(cells))
             gated[f"{key}.live_fraction"] = live / (LH * SLOTS)
+            # eviction throughput is machine-dependent: null = the
+            # structural gate in bench_compare.py (must exist and be
+            # numeric, value never compared)
+            gated[f"{key}.tokens_per_s"] = None
     doc = {
         "bench": "policies",
         "schema": 1,
@@ -132,7 +136,9 @@ def main() -> None:
             "(bench_policies --smoke). All values are deterministic "
             "occupancy counters computed by tools/seed_bench_policies.py, "
             "which mirrors the synthetic smoke loop exactly; wall-clock "
-            "tokens/s stays in the bench's info section (never gated). "
+            "tokens/s (eviction throughput) is machine-dependent, so its "
+            "entries are null = structural gate only (must exist and be "
+            "numeric; never value-compared). "
             f"Adaptive plan cells: {all_plans['adaptive']}."
         ),
         "gated": gated,
