@@ -29,7 +29,10 @@
 //! seeded sim runs); wall-clock throughputs are reported as info. The
 //! smoke run also *asserts* the issue's acceptance invariant: at 4
 //! replicas on the skewed workload, `prefix` routing must beat
-//! `round-robin` on both aggregate tokens/s and `prefix_hit_tokens`.
+//! `round-robin` on both aggregate tokens/s and `prefix_hit_tokens`,
+//! and — since the tiered prefix cache — hot+cold at the same hot
+//! budget must recover strictly more prefix hit tokens than hot-only
+//! on the same zipf workload, with the spill dir left empty.
 //!
 //! The SLO leg (`--slo-out BENCH_slo.json`) is a separate document:
 //! seeded mixed-workload draw totals per arrival process (mirrored
@@ -45,10 +48,11 @@ use hyperscale::engine::{
     ArrivalKind, CostModel, Engine, GenRequest, RequestClass, SimEngine, SimEngineConfig,
     SloPolicy, TimeflowConfig, WorkloadConfig,
 };
-use hyperscale::kvcache::KvDtype;
+use hyperscale::kvcache::{Geometry, KvDtype};
 use hyperscale::server::{Cluster, ServeRequest};
 use hyperscale::util::benchkit::bench;
 use hyperscale::util::{Args, Json, SplitMix64};
+use std::path::PathBuf;
 use std::time::Instant;
 
 fn requests(n: usize, width: usize, max_len: usize) -> Vec<GenRequest> {
@@ -366,6 +370,124 @@ fn tracing_overhead(mut gated: Json, mut info: Json) -> (Json, Json) {
 }
 
 // ----------------------------------------------------------------------
+// Tiered prefix cache (cold tier — runs without artifacts)
+// ----------------------------------------------------------------------
+
+/// One cold-tier cell: the zipf-skewed workload through a single sim
+/// engine whose hot prefix budget (4 pages) sits far below the ~18-page
+/// working set of the three system preambles. `cold_tier_bytes == 0` is
+/// the hot-only baseline; otherwise every page `trim` would evict is
+/// demoted to a q4 cold block instead and promoted back (one
+/// dequant-on-upload, not a prefill) when the next same-system request
+/// arrives, with overflow past the cold RAM budget spilled under
+/// `spill_dir` rather than dropped. Sequential submission makes every
+/// hit total exact. Returns (prefix hit tokens incl. promoted, cold hit
+/// tokens, steady-state mean TTFT ms, spilled-bytes high-water mark).
+fn run_cold_cell(cold_tier_bytes: usize, spill_dir: Option<PathBuf>) -> (f64, f64, f64, f64) {
+    let mut engine = SimEngine::new(SimEngineConfig {
+        lanes: 2,
+        geom: Geometry {
+            slots: 640,
+            ..SimEngineConfig::default().geom
+        },
+        prefix_cache_pages: 4,
+        cold_tier_bytes,
+        work_per_token: 6000,
+        ..Default::default()
+    });
+    if let Some(dir) = spill_dir {
+        std::fs::create_dir_all(&dir).expect("create spill dir");
+        engine.set_spill_dir(dir);
+    }
+    let mut hit_tokens = 0.0;
+    let mut ttfts: Vec<f64> = Vec::new();
+    let mut spilled_hw = 0.0f64;
+    for (id, prompt) in skewed_workload() {
+        engine
+            .submit(&GenRequest {
+                prompt,
+                width: 1,
+                max_len: 224,
+                temperature: 0.7,
+                seed: id,
+            })
+            .expect("submit");
+        for done in engine.drain().expect("drain") {
+            hit_tokens += done
+                .result
+                .chains
+                .iter()
+                .map(|c| c.stats.prefix_hit_tokens as f64)
+                .sum::<f64>();
+            ttfts.push(done.timing.ttft_ms);
+        }
+        spilled_hw = spilled_hw.max(engine.metrics.gauge("kv.spilled_bytes").get());
+    }
+    let cold_hit_tokens = engine.metrics.counter("kv.cold_hit_tokens").get();
+    // the first request can never hit; steady state is the rest
+    let steady_ttft = if ttfts.len() > 1 {
+        ttfts[1..].iter().sum::<f64>() / (ttfts.len() - 1) as f64
+    } else {
+        0.0
+    };
+    (hit_tokens, cold_hit_tokens, steady_ttft, spilled_hw)
+}
+
+/// Hot-only vs hot+cold at the same hot budget: the cold tier must
+/// recover strictly more prefix hit tokens from pages the hot pool
+/// alone would have dropped (the issue's acceptance invariant, asserted
+/// on every smoke run), and the spill dir must come back empty once the
+/// engine drops. Hit/cold-token totals are deterministic but depend on
+/// radix trim order, so — like the SLO sweep — the baseline pins
+/// presence (null) until refreshed from a CI artifact; the boolean
+/// invariant is gated exactly.
+fn cold_tier_scenario(mut gated: Json, mut info: Json) -> (Json, Json) {
+    println!("\n# tiered prefix cache: hot-only vs hot+cold at the same 4-page hot budget");
+    let (hot_hits, hot_cold, hot_ttft, _) = run_cold_cell(0, None);
+    let spill = std::env::temp_dir().join(format!("hyperscale-bench-spill-{}", std::process::id()));
+    let (tier_hits, tier_cold, tier_ttft, spilled_hw) = run_cold_cell(4096, Some(spill.clone()));
+    println!(
+        "hot-only  prefix_hit_tokens {hot_hits:>6.0}  cold_hit_tokens {hot_cold:>6.0}  \
+         steady TTFT {hot_ttft:>7.2} ms"
+    );
+    println!(
+        "hot+cold  prefix_hit_tokens {tier_hits:>6.0}  cold_hit_tokens {tier_cold:>6.0}  \
+         steady TTFT {tier_ttft:>7.2} ms  spilled high-water {spilled_hw:.0} B"
+    );
+    // the engine dropped inside run_cold_cell: ColdTier's Drop must
+    // have deleted every .kvspill file it wrote
+    let leftovers = std::fs::read_dir(&spill)
+        .map(|d| d.count())
+        .unwrap_or(0);
+    assert_eq!(leftovers, 0, "spill dir must be empty after the engine drops");
+    let _ = std::fs::remove_dir(&spill);
+    assert_eq!(hot_cold, 0.0, "hot-only cell must never touch the cold tier");
+    assert!(
+        tier_cold > 0.0,
+        "the 4-page hot budget must force hits through promotion"
+    );
+    assert!(
+        spilled_hw > 0.0,
+        "the 4 KiB cold budget must overflow to disk on this workload"
+    );
+    assert!(
+        tier_hits > hot_hits,
+        "hot+cold at the same hot budget must recover strictly more \
+         prefix hit tokens than hot-only ({tier_hits} vs {hot_hits})"
+    );
+    gated = gated
+        .set("prefix.cold.hot_only_hit_tokens", hot_hits)
+        .set("prefix.cold.tiered_hit_tokens", tier_hits)
+        .set("prefix.cold_hit_tokens", tier_cold)
+        .set("prefix.cold.tiered_beats_hot_only", 1u64);
+    info = info
+        .set("prefix.cold.hot_only_steady_ttft_ms", hot_ttft)
+        .set("prefix.cold.tiered_steady_ttft_ms", tier_ttft)
+        .set("prefix.cold.spilled_bytes_high_water", spilled_hw);
+    (gated, info)
+}
+
+// ----------------------------------------------------------------------
 // SLO leg (virtual time — runs without artifacts; separate document)
 // ----------------------------------------------------------------------
 
@@ -531,6 +653,7 @@ fn main() -> hyperscale::Result<()> {
     }
     let (gated, info) = cluster_scenarios();
     let (gated, info) = tracing_overhead(gated, info);
+    let (gated, info) = cold_tier_scenario(gated, info);
 
     if let Some(path) = args.get("out") {
         let report = Json::obj()

@@ -92,17 +92,19 @@ fn smoke_scenarios() -> (Json, Json) {
     for dtype in [KvDtype::F32, KvDtype::Q8, KvDtype::Q4] {
         let c = CostModel::default_for(dtype, AllocatorKind::Uniform);
         println!(
-            "  {:<4} prefill {:>7} decode {:>7} dequant {:>6} kvB/tok {:>7}",
+            "  {:<4} prefill {:>7} decode {:>7} dequant {:>6} cold_hit {:>6} kvB/tok {:>7}",
             dtype.name(),
             c.prefill_ns,
             c.decode_ns,
             c.dequant_ns,
+            c.cold_hit_ns,
             c.kv_bytes_per_token
         );
         gated = gated
             .set(&format!("cost.{}.prefill_ns", dtype.name()), c.prefill_ns)
             .set(&format!("cost.{}.decode_ns", dtype.name()), c.decode_ns)
-            .set(&format!("cost.{}.dequant_ns", dtype.name()), c.dequant_ns);
+            .set(&format!("cost.{}.dequant_ns", dtype.name()), c.dequant_ns)
+            .set(&format!("cost.{}.cold_hit_ns", dtype.name()), c.cold_hit_ns);
     }
 
     // ------------------------------------------------------------------

@@ -182,6 +182,57 @@ impl LatencyModel {
         self.fraction_at_eff_seq(acc, batch, seq, eff_seq)
     }
 
+    /// Host-side seconds per token to promote a cold-tier block:
+    /// per-token payload bytes over the upload bandwidth, plus the
+    /// host dequant throughput when the cold dtype is quantized — the
+    /// same regime the engine's `kv.dequant_us` gauge measures on the
+    /// real promote path.
+    pub fn cold_promote_s_per_token(
+        &self,
+        dtype: crate::kvcache::KvDtype,
+        head_dim: usize,
+        upload_bytes_per_s: f64,
+        dequant_bytes_per_s: f64,
+    ) -> f64 {
+        let rows = self.n_layers * (self.d_kv / head_dim as f64) * 2.0;
+        let bytes = rows * dtype.row_payload_bytes(head_dim) as f64;
+        let mut s = bytes / upload_bytes_per_s;
+        if dtype.is_quantized() {
+            s += bytes / dequant_bytes_per_s;
+        }
+        s
+    }
+
+    /// TTFT of a prompt whose first `hit_tokens` are covered by the
+    /// cold tier: promote (upload + dequant) the covered tokens,
+    /// prefill only the uncached tail, then one decode step. With
+    /// `hit_tokens = 0` this degenerates to the full-prefill TTFT a
+    /// cold miss pays, so the difference between the two calls is the
+    /// cold tier's TTFT dividend.
+    #[allow(clippy::too_many_arguments)]
+    pub fn cold_hit_ttft_s(
+        &self,
+        acc: &Accelerator,
+        dtype: crate::kvcache::KvDtype,
+        head_dim: usize,
+        hit_tokens: usize,
+        prompt_tokens: usize,
+        upload_bytes_per_s: f64,
+        dequant_bytes_per_s: f64,
+    ) -> f64 {
+        assert!(hit_tokens <= prompt_tokens);
+        let prefill_per_tok = self.flops(1.0, prompt_tokens as f64) / acc.flops_per_s;
+        let promote = hit_tokens as f64
+            * self.cold_promote_s_per_token(
+                dtype,
+                head_dim,
+                upload_bytes_per_s,
+                dequant_bytes_per_s,
+            );
+        let tail = (prompt_tokens - hit_tokens) as f64 * prefill_per_tok;
+        promote + tail + self.step_latency(acc, 1.0, prompt_tokens as f64)
+    }
+
     fn fraction_at_eff_seq(
         &self,
         acc: &Accelerator,
@@ -298,6 +349,27 @@ mod tests {
         let rich = BudgetPlan::uniform(8192);
         let f_rich = m.kv_latency_fraction_planned(&H100, batch, seq, &rich, 2, 2);
         assert!(f_rich > f_plan);
+    }
+
+    #[test]
+    fn cold_hit_ttft_beats_reprefill_and_degenerates_at_zero_hit() {
+        use crate::kvcache::KvDtype;
+        let m = LatencyModel::llama31_8b();
+        let (up, dq) = (64e9, 8e9); // PCIe-class upload, host dequant
+        let hd = 64;
+        // a covered prompt: promote + tail prefill < full re-prefill
+        let hit = m.cold_hit_ttft_s(&H100, KvDtype::Q4, hd, 1008, 1024, up, dq);
+        let miss = m.cold_hit_ttft_s(&H100, KvDtype::Q4, hd, 0, 1024, up, dq);
+        assert!(hit < miss, "cold hit {hit:.6}s vs re-prefill {miss:.6}s");
+        // zero hit tokens is exactly prefill + one decode step
+        let per_tok = m.flops(1.0, 1024.0) / H100.flops_per_s;
+        let expect = 1024.0 * per_tok + m.step_latency(&H100, 1.0, 1024.0);
+        assert!((miss - expect).abs() < 1e-15);
+        // promote cost orders by payload size within the quantized
+        // path, and stays well under the prefill it replaces
+        let p = |d: KvDtype| m.cold_promote_s_per_token(d, hd, up, dq);
+        assert!(p(KvDtype::Q4) < p(KvDtype::Q8));
+        assert!(p(KvDtype::Q4) < per_tok, "promote must beat prefill");
     }
 
     #[test]

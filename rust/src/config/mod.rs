@@ -60,6 +60,22 @@ pub struct EngineConfig {
     /// front-loads shallow layers; `adaptive` re-plans from per-head
     /// attention statistics during decode (see docs/POLICIES.md).
     pub allocator: AllocatorKind,
+    /// RAM budget in bytes for the cold tier of the prefix cache
+    /// (`--cold-tier-bytes`). Pages LRU-trimmed from the hot prefix
+    /// index are demoted into this budget as compressed blocks instead
+    /// of freed; a later hit promotes them back at the cost of one
+    /// dequant-on-upload rather than a full re-prefill. 0 (the
+    /// default) disables the tier (see docs/ARCHITECTURE.md).
+    pub cold_tier_bytes: usize,
+    /// Storage dtype demoted cold blocks are re-encoded into
+    /// (`--cold-dtype f32|q8|q4`). This is the *second lossy boundary*
+    /// of docs/NUMERICS.md: demotion may requantize once; promotion
+    /// never re-encodes.
+    pub cold_dtype: KvDtype,
+    /// Directory for spilling cold blocks past the RAM budget
+    /// (`--spill-dir`). When unset, over-budget cold blocks are
+    /// evicted instead of spilled.
+    pub spill_dir: Option<PathBuf>,
     /// Decode steps between adaptive re-plans of a chain's budget plan
     /// (`--replan-interval`; ignored by the signal-free allocators).
     pub replan_interval: usize,
@@ -87,6 +103,9 @@ impl Default for EngineConfig {
             prefix_cache_pages: 1024,
             kv_dtype: KvDtype::F32,
             allocator: AllocatorKind::Uniform,
+            cold_tier_bytes: 0,
+            cold_dtype: KvDtype::Q4,
+            spill_dir: None,
             replan_interval: 32,
             trace_events: 0,
         }
@@ -129,6 +148,13 @@ impl EngineConfig {
         }
         if let Some(v) = args.get("allocator") {
             self.allocator = v.parse()?;
+        }
+        self.cold_tier_bytes = args.get_usize("cold-tier-bytes", self.cold_tier_bytes)?;
+        if let Some(v) = args.get("cold-dtype") {
+            self.cold_dtype = v.parse()?;
+        }
+        if let Some(v) = args.get("spill-dir") {
+            self.spill_dir = Some(PathBuf::from(v));
         }
         self.replan_interval =
             args.get_usize("replan-interval", self.replan_interval)?.max(1);
@@ -195,6 +221,15 @@ impl EngineConfig {
         }
         if let Some(v) = j.get("allocator").and_then(Json::as_str) {
             cfg.allocator = v.parse()?;
+        }
+        if let Some(v) = j.get("cold_tier_bytes").and_then(|x| x.as_usize()) {
+            cfg.cold_tier_bytes = v;
+        }
+        if let Some(v) = j.get("cold_dtype").and_then(Json::as_str) {
+            cfg.cold_dtype = v.parse()?;
+        }
+        if let Some(v) = j.get("spill_dir").and_then(Json::as_str) {
+            cfg.spill_dir = Some(PathBuf::from(v));
         }
         if let Some(v) = j.get("replan_interval").and_then(|x| x.as_usize()) {
             cfg.replan_interval = v.max(1);
@@ -410,6 +445,27 @@ mod tests {
             EngineConfig::default().with_args(&args).unwrap().replan_interval,
             1
         );
+    }
+
+    #[test]
+    fn cold_tier_overrides_and_validation() {
+        // defaults: tier disabled, q4 cold payloads, no spill
+        let cfg = EngineConfig::default();
+        assert_eq!(cfg.cold_tier_bytes, 0, "cold tier off by default");
+        assert_eq!(cfg.cold_dtype, KvDtype::Q4);
+        assert_eq!(cfg.spill_dir, None);
+        let args = Args::parse(
+            "--cold-tier-bytes 1048576 --cold-dtype q8 --spill-dir /tmp/spill"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let cfg = EngineConfig::default().with_args(&args).unwrap();
+        assert_eq!(cfg.cold_tier_bytes, 1 << 20);
+        assert_eq!(cfg.cold_dtype, KvDtype::Q8);
+        assert_eq!(cfg.spill_dir, Some(PathBuf::from("/tmp/spill")));
+        // cold dtype goes through the same validated KvDtype parser
+        let args = Args::parse("--cold-dtype bf16".split_whitespace().map(String::from));
+        assert!(EngineConfig::default().with_args(&args).is_err());
     }
 
     #[test]

@@ -37,7 +37,7 @@ use crate::compress::{
     BudgetAllocator, Policy, PolicyKind, StepView, WriteAction,
 };
 use crate::config::EngineConfig;
-use crate::kvcache::{CacheStore, Geometry, RadixPrefixIndex};
+use crate::kvcache::{CacheStore, ColdTier, Geometry, PageId, RadixPrefixIndex};
 use crate::metrics::Registry;
 use crate::runtime::{Executor, ParamBuffers, Runtime, Weights};
 use crate::tokenizer::{Tokenizer, BOS_ID, EOS_ID, PAD_ID};
@@ -118,6 +118,11 @@ pub struct Engine {
     /// Radix index over clean prompt pages retained from completed
     /// requests (prefix-cache admission).
     prefix_index: RadixPrefixIndex,
+    /// Cold tier of the prefix cache: pages the hot index LRU-trims
+    /// are demoted here as compressed blocks (q4 by default) instead
+    /// of freed, and promoted back on a covering lookup
+    /// (`--cold-tier-bytes` / `--cold-dtype` / `--spill-dir`).
+    cold: ColdTier,
     /// Budget allocator shaping each chain's per-(layer, head) plan
     /// (`--allocator`); adaptive re-plans from lane-local `AttnStats`.
     allocator: Box<dyn BudgetAllocator>,
@@ -184,6 +189,12 @@ impl Engine {
         // flight recorder — keep them off (zero-cost) when untraced
         cache.set_event_tracking(tracer.enabled());
         let prefix_index = RadixPrefixIndex::new(geom.page_size);
+        let cold = ColdTier::new(
+            cfg.cold_tier_bytes,
+            cfg.cold_dtype,
+            cfg.spill_dir.clone(),
+            geom.head_dim,
+        );
         let newline_id = tokenizer.newline_id();
         let param_bufs = if cfg.buffered_exec {
             Some(ParamBuffers::from_weights(&runtime.client, &weights)?)
@@ -202,6 +213,7 @@ impl Engine {
             prefill_exec,
             cache,
             prefix_index,
+            cold,
             allocator,
             tracer,
             trace_epoch: Instant::now(),
@@ -262,12 +274,18 @@ impl Engine {
         self.reload_prefill()
     }
 
-    /// Release every retained prefix page (policy/variant switch).
+    /// Release every retained prefix page (policy/variant switch) and
+    /// drop the cold tier with it — demoted blocks encode the old
+    /// policy's prefill behaviour just like hot pages do.
     fn flush_prefix_cache(&mut self) {
         for id in self.prefix_index.release_all() {
             self.cache.release_page(id);
         }
+        self.cold.clear();
         self.metrics.gauge("kv.prefix_pages_retained").set(0.0);
+        self.metrics.gauge("kv.prefix_retained_bytes").set(0.0);
+        self.metrics.gauge("kv.cold_tier_bytes").set(0.0);
+        self.metrics.gauge("kv.spilled_bytes").set(0.0);
     }
 
     fn reload_prefill(&mut self) -> Result<()> {
@@ -418,7 +436,22 @@ impl Engine {
         let mut prefix_tokens = 0usize;
         if self.cfg.prefix_cache {
             self.metrics.counter("kv.prefix_lookups").inc();
-            let hit = self.prefix_index.lookup(&ids);
+            let mut hit = self.prefix_index.lookup(&ids);
+            // cold tier: probe for demoted pages extending the hot hit
+            // and promote them back into the pool. A promoted page is
+            // re-indexed and flows into the ordinary hit below — its
+            // extra cost is one dequant-on-upload at restore time, not
+            // a re-prefill.
+            if self.cold.enabled() {
+                let promoted = self.promote_cold_hits(&ids, hit.tokens);
+                if promoted > 0 {
+                    self.metrics.counter("kv.cold_hits").inc();
+                    self.metrics
+                        .counter("kv.cold_hit_tokens")
+                        .add((promoted * self.geom.page_size) as f64);
+                    hit = self.prefix_index.lookup(&ids);
+                }
+            }
             if hit.tokens > 0 {
                 self.metrics.counter("kv.prefix_hits").inc();
                 self.metrics
@@ -453,6 +486,44 @@ impl Engine {
             );
         }
         Ok(ticket)
+    }
+
+    /// Probe the cold tier for pages extending a `hot_tokens`-long hot
+    /// hit on `ids` and promote every consecutive hit back into the
+    /// pool (verbatim — the cold block becomes the pool payload, so
+    /// promotion never re-encodes; the restore path prices its decode
+    /// into `kv.dequant_us`). Promoted pages are re-indexed under the
+    /// hot tree so the caller's re-lookup picks them up. Returns the
+    /// number of pages promoted.
+    fn promote_cold_hits(&mut self, ids: &[u32], hot_tokens: usize) -> usize {
+        let ps = self.geom.page_size;
+        if ids.is_empty() {
+            return 0;
+        }
+        // same one-page-short cap as RadixPrefixIndex::lookup
+        let max_pages = (ids.len() - 1) / ps;
+        let mut k = hot_tokens / ps;
+        let mut adopted: BTreeMap<usize, PageId> = BTreeMap::new();
+        while k < max_pages {
+            let key = &ids[..(k + 1) * ps];
+            let Some((page, data)) = self.cold.promote(key) else {
+                break;
+            };
+            let id = self.cache.adopt_cold_page(page, data);
+            adopted.insert(k, id);
+            k += 1;
+        }
+        if adopted.is_empty() {
+            return 0;
+        }
+        let n = adopted.len();
+        // hand the promoted handles (one pool reference each) to the
+        // index; pages below the hot-hit length are already present, so
+        // the provider is called exactly for the promoted indices
+        self.prefix_index.insert(&ids[..k * ps], |p| {
+            adopted.remove(&p).expect("promoted page index")
+        });
+        n
     }
 
     /// Single typed submit entrypoint: one [`SubmitSpec`] carries the
@@ -642,6 +713,26 @@ impl Engine {
         self.metrics
             .gauge("kv.alloc_us")
             .set(self.cache.alloc_us());
+        // tiered prefix-cache accounting: actual pool payload bytes
+        // pinned by the hot index (promoted cold pages cost their
+        // compressed size), plus the cold tier's RAM/disk footprint
+        // and cumulative promote-side time
+        let cache = &self.cache;
+        let mut retained_bytes = 0usize;
+        self.prefix_index
+            .for_each_page(|id| retained_bytes += cache.page_payload_bytes(id));
+        self.metrics
+            .gauge("kv.prefix_retained_bytes")
+            .set(retained_bytes as f64);
+        self.metrics
+            .gauge("kv.cold_tier_bytes")
+            .set(self.cold.resident_bytes() as f64);
+        self.metrics
+            .gauge("kv.spilled_bytes")
+            .set(self.cold.spilled_bytes() as f64);
+        self.metrics
+            .gauge("kv.cold_promote_us")
+            .set(self.cold.promote_us() as f64);
         // budget-plan summaries across active planned lanes: aggregate
         // planned tokens, the per-head budget spread, and plan-aware
         // overflow (tokens above any head's budget — 0 under correct
@@ -1297,6 +1388,7 @@ impl Engine {
         // pending evictions, no merges), publish them into the pool and
         // index them under the prompt's token ids, then trim the index
         // back under its LRU budget.
+        let mut indexed = false;
         if self.cfg.prefix_cache {
             let n = self.cache.clean_prefix_pages(lane, a.stats.prompt_tokens);
             if n > 0 {
@@ -1305,16 +1397,39 @@ impl Engine {
                 let cache = &mut self.cache;
                 self.prefix_index
                     .insert(ids, |p| cache.export_page(lane, p));
-                for id in self.prefix_index.trim(self.cfg.prefix_cache_pages) {
-                    self.cache.release_page(id);
-                }
-                self.metrics
-                    .gauge("kv.prefix_pages_retained")
-                    .set(self.prefix_index.pages_retained() as f64);
+                indexed = true;
             }
         }
         let freed = self.cache.recycle_lane(lane);
         self.metrics.counter("kv.slots_recycled").add(freed as f64);
+        // trim AFTER the lane released its shares: a trimmed page's
+        // final reference is then the index's own, so demotion can
+        // capture the payload instead of finding it still lane-mapped
+        if indexed {
+            if self.cold.enabled() {
+                // demote-instead-of-free: pages the LRU trim would
+                // drop are re-encoded once into the cold dtype and
+                // kept under the cold-tier budget, keyed by their
+                // covering token prefix. Pages still shared with
+                // another lane stay alive there and just lose cold
+                // coverage.
+                let cache = &mut self.cache;
+                let cold = &mut self.cold;
+                self.prefix_index
+                    .trim_with(self.cfg.prefix_cache_pages, |key, id| {
+                        if let Some((page, data)) = cache.demote_page(id) {
+                            cold.admit(key, page, data);
+                        }
+                    });
+            } else {
+                for id in self.prefix_index.trim(self.cfg.prefix_cache_pages) {
+                    self.cache.release_page(id);
+                }
+            }
+            self.metrics
+                .gauge("kv.prefix_pages_retained")
+                .set(self.prefix_index.pages_retained() as f64);
+        }
         sched.complete(
             a.ticket,
             a.chain_idx,

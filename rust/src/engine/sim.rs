@@ -34,6 +34,7 @@
 //! quantity the serve smoke bench gates on.
 
 use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -47,7 +48,7 @@ use crate::compress::{
     build_allocator, build_policy, AllocatorKind, BudgetAllocator, BudgetPlan, Policy,
     PolicyKind,
 };
-use crate::kvcache::{CacheStore, Geometry, KvDtype, RadixPrefixIndex};
+use crate::kvcache::{CacheStore, ColdTier, Geometry, KvDtype, PageId, RadixPrefixIndex};
 use crate::metrics::Registry;
 use crate::trace::{Stamped, TraceEvent, Tracer};
 use crate::util::SplitMix64;
@@ -81,6 +82,14 @@ pub struct SimEngineConfig {
     pub prefix_cache: bool,
     /// Retained-page budget of the prefix index.
     pub prefix_cache_pages: usize,
+    /// Cold-tier RAM budget in bytes for demoted prefix pages; 0
+    /// disables demotion (mirrors `EngineConfig::cold_tier_bytes`).
+    /// Spill-to-disk is off by default — see
+    /// [`SimEngine::set_spill_dir`].
+    pub cold_tier_bytes: usize,
+    /// Storage dtype demoted blocks are re-encoded into (mirrors
+    /// `EngineConfig::cold_dtype`).
+    pub cold_dtype: KvDtype,
     /// Pool payload precision (mirrors `EngineConfig::kv_dtype`).
     pub kv_dtype: KvDtype,
     /// Budget allocator shaping per-chain plans (mirrors
@@ -115,6 +124,8 @@ impl Default for SimEngineConfig {
             chunk: 32,
             prefix_cache: true,
             prefix_cache_pages: 1024,
+            cold_tier_bytes: 0,
+            cold_dtype: KvDtype::Q4,
             kv_dtype: KvDtype::F32,
             allocator: AllocatorKind::Uniform,
             work_per_token: 0,
@@ -135,6 +146,8 @@ pub struct SimEngine {
     sched: Scheduler,
     cache: CacheStore,
     prefix_index: RadixPrefixIndex,
+    /// Cold tier for demoted prefix pages (mirrors `Engine::cold`).
+    cold: ColdTier,
     /// Built once from `cfg.allocator` (plans are recomputed per tick
     /// for the gauges, but the strategy object is not).
     allocator: Box<dyn BudgetAllocator>,
@@ -156,6 +169,12 @@ impl SimEngine {
             sched: Scheduler::new(cfg.lanes, SchedulerConfig::default()),
             cache,
             prefix_index: RadixPrefixIndex::new(cfg.geom.page_size),
+            cold: ColdTier::new(
+                cfg.cold_tier_bytes,
+                cfg.cold_dtype,
+                None,
+                cfg.geom.head_dim,
+            ),
             allocator: build_allocator(cfg.allocator),
             metrics: Registry::default(),
             stats: EngineStats::default(),
@@ -165,6 +184,19 @@ impl SimEngine {
             trace_ids: BTreeMap::new(),
             tick_read_tokens: 0.0,
         }
+    }
+
+    /// Route cold-tier overflow to spill files under `dir` instead of
+    /// evicting it. Call right after construction (rebuilds the tier;
+    /// any blocks already demoted are dropped, their spill files
+    /// deleted).
+    pub fn set_spill_dir(&mut self, dir: PathBuf) {
+        self.cold = ColdTier::new(
+            self.cfg.cold_tier_bytes,
+            self.cfg.cold_dtype,
+            Some(dir),
+            self.cfg.geom.head_dim,
+        );
     }
 
     // ---- observability (see docs/OBSERVABILITY.md) ------------------
@@ -264,7 +296,19 @@ impl SimEngine {
         let mut prefix_tokens = 0usize;
         if self.cfg.prefix_cache {
             self.metrics.counter("kv.prefix_lookups").inc();
-            let hit = self.prefix_index.lookup(&ids);
+            let mut hit = self.prefix_index.lookup(&ids);
+            // cold tier: promote demoted pages extending the hot hit
+            // back into the pool (mirrors `Engine::submit_traced`)
+            if self.cold.enabled() {
+                let promoted = self.promote_cold_hits(&ids, hit.tokens);
+                if promoted > 0 {
+                    self.metrics.counter("kv.cold_hits").inc();
+                    self.metrics
+                        .counter("kv.cold_hit_tokens")
+                        .add((promoted * self.cfg.geom.page_size) as f64);
+                    hit = self.prefix_index.lookup(&ids);
+                }
+            }
             if hit.tokens > 0 {
                 self.metrics.counter("kv.prefix_hits").inc();
                 self.metrics
@@ -298,6 +342,37 @@ impl SimEngine {
             );
         }
         Ok(ticket)
+    }
+
+    /// Promote consecutive cold-tier pages extending a hot hit back
+    /// into the pool and re-index them (mirrors
+    /// `Engine::promote_cold_hits`; see that method for the
+    /// never-re-encode contract). Returns the promoted page count.
+    fn promote_cold_hits(&mut self, ids: &[u32], hot_tokens: usize) -> usize {
+        let ps = self.cfg.geom.page_size;
+        if ids.is_empty() {
+            return 0;
+        }
+        let max_pages = (ids.len() - 1) / ps;
+        let mut k = hot_tokens / ps;
+        let mut adopted: BTreeMap<usize, PageId> = BTreeMap::new();
+        while k < max_pages {
+            let key = &ids[..(k + 1) * ps];
+            let Some((page, data)) = self.cold.promote(key) else {
+                break;
+            };
+            let id = self.cache.adopt_cold_page(page, data);
+            adopted.insert(k, id);
+            k += 1;
+        }
+        if adopted.is_empty() {
+            return 0;
+        }
+        let n = adopted.len();
+        self.prefix_index.insert(&ids[..k * ps], |p| {
+            adopted.remove(&p).expect("promoted page index")
+        });
+        n
     }
 
     /// Single typed submit entrypoint (mirrors `Engine::submit_spec`):
@@ -477,6 +552,23 @@ impl SimEngine {
         self.metrics
             .gauge("kv.pool_pages")
             .set(self.cache.pool_pages() as f64);
+        // tiered prefix-cache accounting (mirrors `Engine::tick`)
+        let cache = &self.cache;
+        let mut retained_bytes = 0usize;
+        self.prefix_index
+            .for_each_page(|id| retained_bytes += cache.page_payload_bytes(id));
+        self.metrics
+            .gauge("kv.prefix_retained_bytes")
+            .set(retained_bytes as f64);
+        self.metrics
+            .gauge("kv.cold_tier_bytes")
+            .set(self.cold.resident_bytes() as f64);
+        self.metrics
+            .gauge("kv.spilled_bytes")
+            .set(self.cold.spilled_bytes() as f64);
+        self.metrics
+            .gauge("kv.cold_promote_us")
+            .set(self.cold.promote_us() as f64);
         // per-replica plan summaries, aggregated across active lanes
         // exactly like the real engine's tick (the sim's vanilla
         // policy is unbudgeted — these report the plans the configured
@@ -745,6 +837,7 @@ impl SimEngine {
         // the sim's "text" is the raw generated id stream — stable,
         // comparable across schedules, and never decoded for display
         let text = format!("{:?}", a.gen_ids);
+        let mut indexed = false;
         if self.cfg.prefix_cache {
             let n = self.cache.clean_prefix_pages(lane, a.stats.prompt_tokens);
             if n > 0 {
@@ -753,16 +846,32 @@ impl SimEngine {
                 let cache = &mut self.cache;
                 self.prefix_index
                     .insert(ids, |p| cache.export_page(lane, p));
-                for id in self.prefix_index.trim(self.cfg.prefix_cache_pages) {
-                    self.cache.release_page(id);
-                }
-                self.metrics
-                    .gauge("kv.prefix_pages_retained")
-                    .set(self.prefix_index.pages_retained() as f64);
+                indexed = true;
             }
         }
         let freed = self.cache.recycle_lane(lane);
         self.metrics.counter("kv.slots_recycled").add(freed as f64);
+        // trim after the lane released its shares (mirrors
+        // `Engine::finish_chain`, see the ordering note there)
+        if indexed {
+            if self.cold.enabled() {
+                let cache = &mut self.cache;
+                let cold = &mut self.cold;
+                self.prefix_index
+                    .trim_with(self.cfg.prefix_cache_pages, |key, id| {
+                        if let Some((page, data)) = cache.demote_page(id) {
+                            cold.admit(key, page, data);
+                        }
+                    });
+            } else {
+                for id in self.prefix_index.trim(self.cfg.prefix_cache_pages) {
+                    self.cache.release_page(id);
+                }
+            }
+            self.metrics
+                .gauge("kv.prefix_pages_retained")
+                .set(self.prefix_index.pages_retained() as f64);
+        }
         self.sched.complete(
             a.ticket,
             a.chain_idx,
@@ -837,6 +946,43 @@ mod tests {
         // identical seeds -> identical streams, with or without the hit
         assert_eq!(texts[0], texts[1]);
         assert_eq!(texts[1], texts[2]);
+    }
+
+    #[test]
+    fn trimmed_prefixes_come_back_through_the_cold_tier() {
+        // hot budget far below the prompt's page count: every
+        // retention immediately demotes the whole prefix to the cold
+        // tier, so repeats can only hit through promotion
+        let mut e = SimEngine::new(SimEngineConfig {
+            prefix_cache_pages: 2,
+            cold_tier_bytes: 1 << 20,
+            ..Default::default()
+        });
+        let prompt = "system: a long shared preamble spanning multiple pages|Q:2*3=?";
+        let mut texts = Vec::new();
+        let mut hits = Vec::new();
+        for _ in 0..3 {
+            e.submit(&req(prompt, 1, 160, 7)).unwrap();
+            let done = e.drain().unwrap();
+            hits.push(done[0].result.chains[0].stats.prefix_hit_tokens);
+            texts.push(done[0].result.chains[0].text.clone());
+        }
+        assert_eq!(hits[0], 0, "first request can never hit");
+        assert!(hits[1] > 0, "cold promotion restored the prefix");
+        assert!(e.metrics.counter("kv.cold_hits").get() >= 1.0);
+        assert_eq!(
+            e.metrics.counter("kv.cold_hit_tokens").get(),
+            (hits[1] + hits[2]) as f64,
+            "every hit token flowed through promotion (hot budget < prefix)"
+        );
+        // promoted restores decode the q4 lattice: the stream itself
+        // must stay identical (sim logits ignore cache payloads)
+        assert_eq!(texts[0], texts[1]);
+        assert_eq!(texts[1], texts[2]);
+        // nothing leaks: index refs + cold entries balance out after
+        // the final retention demoted the prefix again
+        assert!(e.is_idle());
+        assert!(e.metrics.gauge("kv.cold_tier_bytes").get() > 0.0);
     }
 
     #[test]

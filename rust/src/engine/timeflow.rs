@@ -117,6 +117,12 @@ pub struct CostModel {
     /// Dequant-on-upload cost per cached prompt token (PCIe upload +
     /// host dequant for quantized payloads).
     pub dequant_ns: u64,
+    /// Cold-tier promote cost per cold-hit prompt token: the demoted
+    /// block's q4 payload re-uploaded + host-dequantized. Priced at
+    /// the cold tier's q4 storage dtype regardless of the hot payload
+    /// dtype, so it is the same constant across sweep cells — a cold
+    /// hit always pays the compressed-block decode, never a prefill.
+    pub cold_hit_ns: u64,
     /// Interconnect cost per stolen-request migration.
     pub transfer_ns: u64,
     /// KV bytes per cached token at this payload dtype — the same
@@ -168,10 +174,18 @@ impl CostModel {
             dequant_s += bytes_per_token / DEQUANT_BYTES_PER_S;
         }
 
+        // a cold hit re-uploads the *cold-tier* payload (q4 by
+        // default), which is always quantized — upload + host dequant
+        let cold_bytes_per_token =
+            rows_per_token * KvDtype::Q4.row_payload_bytes(HEAD_DIM) as f64;
+        let cold_hit_s = cold_bytes_per_token / UPLOAD_BYTES_PER_S
+            + cold_bytes_per_token / DEQUANT_BYTES_PER_S;
+
         CostModel {
             prefill_ns: to_ns(prefill_s).max(1),
             decode_ns: to_ns(decode_s).max(1),
             dequant_ns: to_ns(dequant_s).max(1),
+            cold_hit_ns: to_ns(cold_hit_s).max(1),
             transfer_ns: TRANSFER_NS,
             kv_bytes_per_token: bytes_per_token as u64,
         }
@@ -356,6 +370,12 @@ pub struct TimeflowConfig {
     pub prefix_cache: bool,
     /// Per-replica LRU capacity, in distinct prompt ids.
     pub retain_prompts: usize,
+    /// Per-replica *cold-tier* LRU capacity, in distinct prompt ids:
+    /// prompts evicted from the hot LRU demote here instead of being
+    /// forgotten, and a cold hit pays [`CostModel::cold_hit_ns`] per
+    /// token instead of a re-prefill. 0 (the default) disables the
+    /// tier and keeps the hot-only baselines bit-identical.
+    pub cold_retain_prompts: usize,
     pub cost: CostModel,
     pub failure: Option<ReplicaFailure>,
     /// Record per-stage spans + the completion sequence (memory-heavy;
@@ -377,6 +397,7 @@ impl TimeflowConfig {
             allocator,
             prefix_cache: true,
             retain_prompts: 256,
+            cold_retain_prompts: 0,
             cost: CostModel::default_for(kv_dtype, allocator),
             failure: None,
             record_trace: false,
@@ -409,6 +430,10 @@ impl TimeflowConfig {
 pub enum Stage {
     /// Re-upload (+ dequantize) cached prefix pages.
     Dequant,
+    /// Promote a cold-tier prefix: upload + dequantize the demoted q4
+    /// block (strictly cheaper than the prefill it replaces, costlier
+    /// than a hot dequant of the same tokens under f32 payloads).
+    ColdHit,
     /// Chunked prefill over uncached prompt tokens.
     Prefill,
     /// First decode step — its completion stamps TTFT.
@@ -421,6 +446,7 @@ impl Stage {
     pub fn name(&self) -> &'static str {
         match self {
             Stage::Dequant => "dequant",
+            Stage::ColdHit => "cold_hit",
             Stage::Prefill => "prefill",
             Stage::FirstToken => "first_token",
             Stage::Decode => "decode",
@@ -595,7 +621,9 @@ impl LruSet {
         }
     }
 
-    fn insert(&mut self, k: usize) {
+    /// Insert (or refresh) `k`; returns the key evicted to stay under
+    /// capacity, if any — the timeflow demotion hook.
+    fn insert(&mut self, k: usize) -> Option<usize> {
         self.tick += 1;
         self.map.insert(k, self.tick);
         if self.map.len() > self.cap {
@@ -606,7 +634,15 @@ impl LruSet {
                 .map(|(&k, _)| k)
                 .expect("non-empty over cap");
             self.map.remove(&evict);
+            return Some(evict);
         }
+        None
+    }
+
+    /// Drop `k` if resident (the promote-on-hit side: a cold entry
+    /// leaves the cold set when it is promoted back to hot).
+    fn remove(&mut self, k: usize) -> bool {
+        self.map.remove(&k).is_some()
     }
 }
 
@@ -619,11 +655,15 @@ struct Rep {
     inflight: usize,
     dead: bool,
     cached: LruSet,
+    /// Cold tier: prompts demoted out of `cached`, promoted back on a
+    /// cold hit. Probed/populated only when
+    /// [`TimeflowConfig::cold_retain_prompts`] is non-zero.
+    cold: LruSet,
     busy_ns: u64,
 }
 
 impl Rep {
-    fn new(lanes: usize, retain_prompts: usize) -> Self {
+    fn new(lanes: usize, retain_prompts: usize, cold_retain_prompts: usize) -> Self {
         Rep {
             queue: VecDeque::new(),
             free_lanes: lanes,
@@ -631,6 +671,7 @@ impl Rep {
             inflight: 0,
             dead: false,
             cached: LruSet::new(retain_prompts.max(1)),
+            cold: LruSet::new(cold_retain_prompts.max(1)),
             busy_ns: 0,
         }
     }
@@ -759,16 +800,32 @@ impl<'a> Sim<'a> {
             self.reg.histogram("sim.queue_wait_ns").record(wait as f64);
 
             let r = self.reqs[req];
-            let hit = if self.cfg.prefix_cache && self.reps[replica].cached.touch(r.prompt_id) {
-                r.prompt_tokens.saturating_sub(PREFILL_TAIL_TOKENS)
+            let covered = r.prompt_tokens.saturating_sub(PREFILL_TAIL_TOKENS);
+            let (hit, cold) = if self.cfg.prefix_cache
+                && self.reps[replica].cached.touch(r.prompt_id)
+            {
+                (covered, false)
+            } else if self.cfg.prefix_cache
+                && self.cfg.cold_retain_prompts > 0
+                && self.reps[replica].cold.remove(r.prompt_id)
+            {
+                // promote-on-hit: the prompt leaves the cold set now
+                // and re-enters the hot LRU at completion
+                (covered, true)
             } else {
-                0
+                (0, false)
             };
             let s = &mut self.st[req];
             s.phase = ReqPhase::Running;
             s.replica = replica;
             s.hit_tokens = hit;
-            if hit > 0 {
+            if hit > 0 && cold {
+                self.reg.counter("sim.prefix.cold_hit_requests").inc();
+                self.reg
+                    .counter("sim.prefix.cold_hit_tokens")
+                    .add(hit as f64);
+                self.start_stage(req, Stage::ColdHit, now);
+            } else if hit > 0 {
                 self.reg.counter("sim.prefix.hit_requests").inc();
                 self.reg.counter("sim.prefix.hit_tokens").add(hit as f64);
                 self.reg
@@ -787,6 +844,7 @@ impl<'a> Sim<'a> {
         let hit = self.st[req].hit_tokens;
         match stage {
             Stage::Dequant => hit as u64 * c.dequant_ns,
+            Stage::ColdHit => hit as u64 * c.cold_hit_ns,
             Stage::Prefill => (r.prompt_tokens - hit) as u64 * c.prefill_ns,
             Stage::FirstToken => c.decode_ns,
             Stage::Decode => (r.gen_tokens - 1) as u64 * c.decode_ns,
@@ -819,6 +877,12 @@ impl<'a> Sim<'a> {
             Stage::Dequant => {
                 self.reg
                     .histogram("sim.stage.dequant_ns")
+                    .record((now - start) as f64);
+                self.start_stage(req, Stage::Prefill, now);
+            }
+            Stage::ColdHit => {
+                self.reg
+                    .histogram("sim.stage.cold_hit_ns")
                     .record((now - start) as f64);
                 self.start_stage(req, Stage::Prefill, now);
             }
@@ -893,9 +957,17 @@ impl<'a> Sim<'a> {
             self.completions.push((now, req));
         }
         if self.cfg.prefix_cache {
-            self.reps[replica]
+            let evicted = self.reps[replica]
                 .cached
                 .insert(self.reqs[req].prompt_id);
+            // demote-on-evict: the hot LRU's victim falls into the
+            // cold tier instead of being forgotten (the cold set's own
+            // LRU victim, if any, is gone for good)
+            if self.cfg.cold_retain_prompts > 0 {
+                if let Some(ev) = evicted {
+                    let _ = self.reps[replica].cold.insert(ev);
+                }
+            }
         }
         self.admit(replica, now);
     }
@@ -1114,7 +1186,7 @@ fn build_sim<'a>(cfg: &'a TimeflowConfig, reqs: &'a [SimRequest], slo: Option<Sl
         prompts: (0..=max_pid).map(synth_prompt).collect(),
         router: Router::new(cfg.replicas, cfg.routing),
         reps: (0..cfg.replicas)
-            .map(|_| Rep::new(cfg.lanes, cfg.retain_prompts))
+            .map(|_| Rep::new(cfg.lanes, cfg.retain_prompts, cfg.cold_retain_prompts))
             .collect(),
         st: vec![
             ReqState {
@@ -1270,6 +1342,59 @@ mod tests {
             prefills[1],
             PREFILL_TAIL_TOKENS as u64 * cfg.cost.prefill_ns
         );
+    }
+
+    #[test]
+    fn cold_hit_prices_promote_not_prefill() {
+        // hot LRU of 1 prompt + cold tier: A runs, B evicts A into the
+        // cold set, A returns as a cold hit priced at cold_hit_ns.
+        let mut cfg = base_cfg(1, 1);
+        cfg.steal = false;
+        cfg.retain_prompts = 1;
+        cfg.cold_retain_prompts = 4;
+        let gap = 10_000_000_000u64; // each request runs alone
+        let mk = |i: u64, pid: usize| SimRequest {
+            arrival_ns: i * gap,
+            prompt_id: pid,
+            prompt_tokens: 80,
+            gen_tokens: 2,
+        };
+        let mut rep = simulate_requests(&cfg, &[mk(0, 0), mk(1, 1), mk(2, 0)]);
+        assert_eq!(rep.completed, 3);
+        assert_eq!(
+            rep.registry.counter("sim.prefix.cold_hit_requests").get(),
+            1.0,
+            "A's return is a cold hit"
+        );
+        let hit_tokens = (80 - PREFILL_TAIL_TOKENS) as u64;
+        assert_eq!(
+            rep.registry.counter("sim.prefix.cold_hit_tokens").get(),
+            hit_tokens as f64
+        );
+        // hot-hit counters untouched: the only hits were cold
+        assert_eq!(rep.registry.counter("sim.prefix.hit_requests").get(), 0.0);
+        let colds: Vec<_> = rep
+            .trace
+            .iter()
+            .filter(|s| s.stage == Stage::ColdHit)
+            .collect();
+        assert_eq!(colds.len(), 1);
+        assert_eq!(
+            colds[0].end_ns - colds[0].start_ns,
+            hit_tokens * cfg.cost.cold_hit_ns
+        );
+        // the promote is strictly cheaper than the prefill it replaced
+        assert!(cfg.cost.cold_hit_ns < cfg.cost.prefill_ns);
+        // cold-enabled runs stay bit-identical under the same seed
+        // (the property the CI trace-determinism leg gates)
+        let spec = WorkloadSpec::new(256, 0xC01D);
+        let mut c2 = base_cfg(2, 2);
+        c2.retain_prompts = 4;
+        c2.cold_retain_prompts = 16;
+        let mut a = simulate(&c2, &spec);
+        let b = simulate(&c2, &spec);
+        assert_eq!(a.chrome_trace_json(), b.chrome_trace_json());
+        assert!(a.registry.counter("sim.prefix.cold_hit_requests").get() > 0.0);
     }
 
     #[test]

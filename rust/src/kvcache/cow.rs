@@ -275,6 +275,33 @@ impl PagePool {
         }
     }
 
+    /// Drop one reference and, when this release frees the entry,
+    /// hand its owned snapshot to the caller instead of the spare
+    /// arena — the cold-tier demote path, which moves the payload into
+    /// a separate budget rather than dropping it. Returns
+    /// `Some((page_index, data))` only when this release freed an
+    /// entry whose payload was [`Payload::Owned`]; a freed
+    /// still-borrowed entry (nothing snapshotted to demote) and a
+    /// still-referenced entry both return `None`.
+    ///
+    /// # Panics
+    /// Panics if `id` is not a live entry (double-free), exactly like
+    /// [`Self::release`].
+    pub fn release_take(&mut self, id: PageId) -> Option<(usize, Box<PageData>)> {
+        let e = self
+            .entries
+            .get_mut(&id)
+            .unwrap_or_else(|| panic!("double-free of page {id}"));
+        e.refs -= 1;
+        if e.refs == 0 {
+            let e = self.entries.remove(&id).unwrap();
+            if let Payload::Owned(data) = e.payload {
+                return Some((e.page, data));
+            }
+        }
+        None
+    }
+
     /// Current reference count (0 for unknown ids).
     pub fn refs(&self, id: PageId) -> usize {
         self.entries.get(&id).map(|e| e.refs).unwrap_or(0)
@@ -399,6 +426,35 @@ mod tests {
         let b = p.adopt_borrowed(0, 1);
         p.release(b);
         assert_eq!(p.spare_pages(), 0);
+    }
+
+    #[test]
+    fn release_take_hands_over_the_final_snapshot() {
+        let mut p = PagePool::new();
+        let id = p.insert_owned(data(), 4);
+        p.retain(id);
+        // not the last reference: nothing taken, entry still live
+        assert!(p.release_take(id).is_none());
+        assert_eq!(p.refs(id), 1);
+        // last reference: the snapshot moves out instead of sparing
+        let (page, snap) = p.release_take(id).expect("owned payload taken");
+        assert_eq!(page, 4);
+        assert_eq!(snap.k.to_f32()[0], 1.0);
+        assert!(p.is_empty());
+        assert_eq!(p.spare_pages(), 0, "taken payloads never hit the arena");
+        // borrowed entries free with nothing to take
+        let b = p.adopt_borrowed(0, 1);
+        assert!(p.release_take(b).is_none());
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "double-free")]
+    fn release_take_double_free_panics() {
+        let mut p = PagePool::new();
+        let id = p.insert_owned(data(), 0);
+        p.release(id);
+        p.release_take(id);
     }
 
     #[test]

@@ -57,6 +57,7 @@
 //! store.recycle_lane(1);
 //! ```
 
+pub mod cold;
 pub mod cow;
 pub mod prefix;
 pub mod quant;
@@ -64,6 +65,7 @@ pub mod quant;
 mod paged;
 mod store;
 
+pub use cold::ColdTier;
 pub use cow::{PageData, PageId, PagePool, Payload};
 pub use paged::PageAllocator;
 pub use prefix::{PrefixHit, RadixPrefixIndex};

@@ -161,14 +161,46 @@ impl RadixPrefixIndex {
     /// the caller must release their pool references.
     pub fn trim(&mut self, max_pages: usize) -> Vec<PageId> {
         let mut dropped = Vec::new();
+        self.trim_with(max_pages, |_, id| dropped.push(id));
+        dropped
+    }
+
+    /// [`Self::trim`] with a demotion hook: `demote(key, id)` is called
+    /// for every dropped page, in strict LRU leaf order (oldest leaf
+    /// first, pages of a leaf in label order). `key` is the page's full
+    /// covering token prefix from the root — the handle a cold tier
+    /// needs to index the demoted block so a later prompt can find it
+    /// again. The callback owns releasing (or re-homing) the pool
+    /// reference each dropped handle carries.
+    pub fn trim_with(&mut self, max_pages: usize, mut demote: impl FnMut(&[u32], PageId)) {
+        let ps = self.page_size;
+        let mut key = Vec::new();
         while self.retained > max_pages {
-            let Some(edge) = pop_lru_leaf(&mut self.roots) else {
+            let Some((ancestors, edge)) = pop_lru_leaf(&mut self.roots) else {
                 break;
             };
             self.retained -= edge.pages.len();
-            dropped.extend(edge.pages);
+            for (i, &id) in edge.pages.iter().enumerate() {
+                key.clear();
+                key.extend_from_slice(&ancestors);
+                key.extend_from_slice(&edge.label[..(i + 1) * ps]);
+                demote(&key, id);
+            }
         }
-        dropped
+    }
+
+    /// Visit every retained page handle (pre-order). The engine sums
+    /// pool payload bytes over this walk for `kv.prefix_retained_bytes`.
+    pub fn for_each_page(&self, mut f: impl FnMut(PageId)) {
+        fn rec(edges: &[Edge], f: &mut impl FnMut(PageId)) {
+            for e in edges {
+                for &p in &e.pages {
+                    f(p);
+                }
+                rec(&e.children, f);
+            }
+        }
+        rec(&self.roots, &mut f);
     }
 
     /// Drop the whole index (policy/variant switch invalidates every
@@ -274,8 +306,10 @@ fn insert_rec<F: FnMut(usize) -> PageId>(
     )
 }
 
-/// Remove the leaf edge with the smallest stamp anywhere under `edges`.
-fn pop_lru_leaf(edges: &mut Vec<Edge>) -> Option<Edge> {
+/// Remove the leaf edge with the smallest stamp anywhere under `edges`,
+/// returning the concatenated ancestor labels alongside it (so the
+/// leaf's pages can be keyed by their full covering token prefix).
+fn pop_lru_leaf(edges: &mut Vec<Edge>) -> Option<(Vec<u32>, Edge)> {
     fn min_leaf_stamp(edges: &[Edge]) -> Option<u64> {
         edges
             .iter()
@@ -288,7 +322,7 @@ fn pop_lru_leaf(edges: &mut Vec<Edge>) -> Option<Edge> {
             })
             .min()
     }
-    fn remove_leaf(edges: &mut Vec<Edge>, stamp: u64) -> Option<Edge> {
+    fn remove_leaf(edges: &mut Vec<Edge>, stamp: u64, prefix: &mut Vec<u32>) -> Option<Edge> {
         if let Some(i) = edges
             .iter()
             .position(|e| e.children.is_empty() && e.stamp == stamp)
@@ -296,14 +330,18 @@ fn pop_lru_leaf(edges: &mut Vec<Edge>) -> Option<Edge> {
             return Some(edges.remove(i));
         }
         for e in edges.iter_mut() {
-            if let Some(found) = remove_leaf(&mut e.children, stamp) {
+            prefix.extend_from_slice(&e.label);
+            if let Some(found) = remove_leaf(&mut e.children, stamp, prefix) {
                 return Some(found);
             }
+            prefix.truncate(prefix.len() - e.label.len());
         }
         None
     }
     let stamp = min_leaf_stamp(edges)?;
-    remove_leaf(edges, stamp)
+    let mut prefix = Vec::new();
+    let leaf = remove_leaf(edges, stamp, &mut prefix)?;
+    Some((prefix, leaf))
 }
 
 #[cfg(test)]
@@ -471,6 +509,116 @@ mod tests {
         assert_eq!(idx.best_hit_len(&[1, 1, 2, 2, 3]), 4);
         let dropped = idx.trim(2);
         assert_eq!(dropped, vec![1000, 1001], "probe refreshed the LRU stamp");
+    }
+
+    #[test]
+    fn trim_with_hands_each_page_its_covering_prefix() {
+        let mut idx = RadixPrefixIndex::new(2);
+        let p = Prov::new();
+        idx.insert(&[1, 1, 2, 2, 3, 3], p.f()); // 1000..=1002
+        idx.insert(&[1, 1, 2, 2, 9, 9], p.f()); // splits, adds 1003
+        let mut demoted = Vec::new();
+        idx.trim_with(0, |key, id| demoted.push((key.to_vec(), id)));
+        assert_eq!(idx.pages_retained(), 0);
+        assert_eq!(demoted.len(), 4);
+        // every key is the page's full root-anchored token prefix
+        let keys: std::collections::HashMap<PageId, Vec<u32>> =
+            demoted.iter().map(|(k, id)| (*id, k.clone())).collect();
+        assert_eq!(keys[&1000], vec![1, 1]);
+        assert_eq!(keys[&1001], vec![1, 1, 2, 2]);
+        assert_eq!(keys[&1002], vec![1, 1, 2, 2, 3, 3]);
+        assert_eq!(keys[&1003], vec![1, 1, 2, 2, 9, 9]);
+    }
+
+    /// The satellite property: under arbitrary insert/lookup
+    /// interleavings, `trim_with` demotes in LRU leaf order. Because a
+    /// walk stamps parents with (at least) their children's clock and a
+    /// split hands the tail its original stamp, `parent.stamp >=
+    /// child.stamp` always holds — so the popped leaf-stamp sequence
+    /// must be non-decreasing, every page must be demoted exactly once,
+    /// and each key must equal the page's covering prefix.
+    #[test]
+    fn trim_with_demotion_order_is_lru_under_random_interleavings() {
+        use crate::util::SplitMix64;
+
+        for seed in 0..12u64 {
+            let ps = 2usize;
+            let mut rng = SplitMix64::new(0xC01D_CAFE ^ seed);
+            let mut idx = RadixPrefixIndex::new(ps);
+            let p = Prov::new();
+            for _ in 0..160 {
+                // small alphabet so prefixes collide and edges split
+                let n_pages = 1 + rng.below(4);
+                let ids: Vec<u32> = (0..n_pages * ps).map(|_| rng.below(3) as u32).collect();
+                if rng.below(2) == 0 {
+                    idx.insert(&ids, p.f());
+                } else {
+                    let mut probe = ids;
+                    probe.push(7); // lookups refresh LRU stamps
+                    let _ = idx.lookup(&probe);
+                }
+            }
+            // pre-trim walk (white-box): page id -> (covering key, edge stamp)
+            fn walk(
+                edges: &[Edge],
+                prefix: &[u32],
+                ps: usize,
+                out: &mut std::collections::HashMap<PageId, (Vec<u32>, u64)>,
+            ) {
+                for e in edges {
+                    for (i, &id) in e.pages.iter().enumerate() {
+                        let mut key = prefix.to_vec();
+                        key.extend_from_slice(&e.label[..(i + 1) * ps]);
+                        assert!(out.insert(id, (key, e.stamp)).is_none());
+                    }
+                    let mut deeper = prefix.to_vec();
+                    deeper.extend_from_slice(&e.label);
+                    walk(&e.children, &deeper, ps, out);
+                }
+            }
+            let mut expect = std::collections::HashMap::new();
+            walk(&idx.roots, &[], ps, &mut expect);
+            let total = idx.pages_retained();
+            assert_eq!(expect.len(), total);
+
+            // trim halfway first, then to zero: both legs must demote in
+            // LRU order and cover every page exactly once overall
+            let mut demoted: Vec<(Vec<u32>, PageId)> = Vec::new();
+            idx.trim_with(total / 2, |k, id| demoted.push((k.to_vec(), id)));
+            assert!(idx.pages_retained() <= total / 2);
+            assert_eq!(idx.recount(), idx.pages_retained());
+            let after_half = demoted.len();
+            assert_eq!(after_half, total - idx.pages_retained());
+            idx.trim_with(0, |k, id| demoted.push((k.to_vec(), id)));
+            assert_eq!(idx.pages_retained(), 0);
+            assert_eq!(demoted.len(), total, "every page demoted exactly once");
+
+            let mut last_stamp = 0u64;
+            let mut seen = std::collections::HashSet::new();
+            for (key, id) in &demoted {
+                assert!(seen.insert(*id), "page {id} demoted twice (seed {seed})");
+                let (want_key, stamp) = &expect[id];
+                assert_eq!(key, want_key, "wrong covering prefix for {id} (seed {seed})");
+                assert!(
+                    *stamp >= last_stamp,
+                    "demotion left LRU order: stamp {stamp} after {last_stamp} (seed {seed})"
+                );
+                last_stamp = *stamp;
+            }
+        }
+    }
+
+    #[test]
+    fn for_each_page_visits_exactly_the_retained_pages() {
+        let mut idx = RadixPrefixIndex::new(2);
+        let p = Prov::new();
+        idx.insert(&[1, 1, 2, 2, 3, 3], p.f());
+        idx.insert(&[1, 1, 9, 9], p.f());
+        let mut visited = Vec::new();
+        idx.for_each_page(|id| visited.push(id));
+        visited.sort_unstable();
+        assert_eq!(visited, vec![1000, 1001, 1002, 1003]);
+        assert_eq!(visited.len(), idx.pages_retained());
     }
 
     #[test]

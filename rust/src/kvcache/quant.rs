@@ -838,6 +838,42 @@ impl QuantBlock {
         &self.data
     }
 
+    /// Per-row scales (`rows` entries) — with [`Self::codes`] and
+    /// [`Self::zps`] the complete serialized form of a block.
+    pub fn scales(&self) -> &[f32] {
+        &self.scale
+    }
+
+    /// Per-row zero-points (`rows` entries).
+    pub fn zps(&self) -> &[u8] {
+        &self.zp
+    }
+
+    /// Reassemble a block from previously serialized parts
+    /// ([`Self::codes`] / [`Self::scales`] / [`Self::zps`]) **without
+    /// re-encoding**. This is how the cold-tier spill path round-trips
+    /// blocks through disk bit-exactly: the code lattice is moved
+    /// verbatim, so deserialization is never a lossy step and the
+    /// requantize-once rule survives a spill/reload cycle.
+    ///
+    /// # Panics
+    /// Panics if `dtype` is [`KvDtype::F32`] or any buffer length
+    /// disagrees with `rows`/`row_len`.
+    pub fn from_raw(
+        dtype: KvDtype,
+        rows: usize,
+        row_len: usize,
+        data: Vec<u8>,
+        scale: Vec<f32>,
+        zp: Vec<u8>,
+    ) -> Self {
+        assert!(dtype.is_quantized(), "QuantBlock requires q8/q4");
+        assert_eq!(data.len(), rows * dtype.row_code_bytes(row_len), "code length mismatch");
+        assert_eq!(scale.len(), rows, "scale length mismatch");
+        assert_eq!(zp.len(), rows, "zero-point length mismatch");
+        Self { dtype, rows, row_len, data, scale, zp }
+    }
+
     /// Host bytes this block occupies (codes + scale/zero-point).
     pub fn payload_bytes(&self) -> usize {
         self.data.len() + self.scale.len() * 4 + self.zp.len()
@@ -1109,6 +1145,31 @@ mod tests {
                 whole.to_f32(),
                 b.to_f32(),
                 "{dtype}: fused write path diverges from from_f32"
+            );
+        }
+    }
+
+    #[test]
+    fn from_raw_round_trips_serialized_parts_bit_exactly() {
+        for dtype in [KvDtype::Q8, KvDtype::Q4] {
+            let src = row_values(7, 11, 31);
+            let b = QuantBlock::quantize(dtype, 7, 11, &src);
+            let rebuilt = QuantBlock::from_raw(
+                dtype,
+                7,
+                11,
+                b.codes().to_vec(),
+                b.scales().to_vec(),
+                b.zps().to_vec(),
+            );
+            assert_eq!(b.codes(), rebuilt.codes());
+            let (mut a, mut c) = (vec![0f32; 77], vec![0f32; 77]);
+            b.dequantize_rows_into(0, 7, &mut a);
+            rebuilt.dequantize_rows_into(0, 7, &mut c);
+            assert_eq!(
+                a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                c.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "{dtype}: from_raw must decode bit-identically"
             );
         }
     }

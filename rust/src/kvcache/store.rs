@@ -1136,6 +1136,38 @@ impl CacheStore {
         self.pool.release(id);
     }
 
+    /// Drop the prefix index's reference to `id` and, when that was the
+    /// final reference to an Owned snapshot, hand the payload out as
+    /// `(slot_page, data)` for cold-tier demotion instead of freeing
+    /// it. `None` means the page stays alive elsewhere (a lane still
+    /// shares it, or the payload was borrowed) — the trim proceeds,
+    /// only the cold copy is forgone, and no reference leaks either
+    /// way (see [`PagePool::release_take`]).
+    pub fn demote_page(&mut self, id: PageId) -> Option<(usize, Box<PageData>)> {
+        self.pool.release_take(id)
+    }
+
+    /// Re-home a promoted cold block as a pool-owned snapshot at
+    /// slot-space page `page`, returning a handle carrying one
+    /// reference for the caller (the prefix index). The block is
+    /// stored **verbatim** — restores decode its code lattice through
+    /// the ordinary dequant-on-upload path
+    /// ([`CacheStore::copy_page_from_pool`] dispatches on the block's
+    /// own dtype), so promotion never re-encodes.
+    pub fn adopt_cold_page(&mut self, page: usize, data: Box<PageData>) -> PageId {
+        self.pool.insert_owned(data, page)
+    }
+
+    /// K+V payload bytes of one pool entry's snapshot (0 for borrowed
+    /// payloads, which cost the pool nothing). Summed over the prefix
+    /// index's pages for the `kv.prefix_retained_bytes` gauge.
+    pub fn page_payload_bytes(&self, id: PageId) -> usize {
+        match self.pool.payload(id) {
+            Payload::Owned(data) => data.payload_bytes(),
+            Payload::Borrowed { .. } => 0,
+        }
+    }
+
     // ---------------- pool introspection ----------------
 
     /// Live pool entries (shared and retained pages).

@@ -36,6 +36,8 @@ fn usage() -> &'static str {
                      --kv-dtype f32|q8|q4 (pool payload precision)\n\
                      --allocator uniform|pyramid|adaptive (per-head KV budgets)\n\
                      --replan-interval N (adaptive re-plan cadence)\n\
+                     --cold-tier-bytes N (cold-tier budget for demoted prefix\n\
+                     pages; 0 = off) --cold-dtype f32|q8|q4 --spill-dir DIR\n\
        gen      --prompt 'Q:1+2=?\\nT:' [--width W] [--max-len L] [--temp T]\n\
        eval     --task math [--width W] [--max-len L] [--n N]\n\
        exp      fig1|fig3|fig4|fig5|fig6|fig7|table1|table2|table7|quant|alloc\n\
@@ -47,6 +49,7 @@ fn usage() -> &'static str {
        sim      [--replicas N] [--lanes N] [--requests N] [--seed S]\n\
                 [--routing ...] [--no-steal] [--arrival uniform|poisson|bursty|diurnal]\n\
                 [--mean-gap-us X] [--prompts N] [--fail-replica I --fail-at-ms T]\n\
+                [--cold-prompts N] (per-replica cold-tier capacity in prompts)\n\
                 [--trace-out FILE] [--metrics]\n\
                 [--slo] (mixed chat/long-context/voting workload under EDF +\n\
                 admission control; --slo-fcfs for the FCFS/open baseline)\n\
@@ -191,6 +194,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
     let mut cfg = TimeflowConfig::new(ccfg.replicas.max(1), lanes, ccfg.routing)
         .with_kv(ecfg.kv_dtype, ecfg.allocator);
     cfg.steal = ccfg.steal;
+    cfg.cold_retain_prompts = args.get_usize("cold-prompts", 0)?;
     let trace_out = args.get("trace-out").map(PathBuf::from);
     cfg.record_trace = trace_out.is_some();
     if args.get("fail-at-ms").is_some() {

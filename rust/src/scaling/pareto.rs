@@ -65,6 +65,29 @@ pub fn plan_kv_bytes(
     plan.total(layers, kv_heads) as f64 * 2.0 * dtype.row_payload_bytes(head_dim) as f64
 }
 
+/// Effective K+V payload bytes per cached token of a **tiered** prefix
+/// cache: a `hot_fraction` of cached tokens resident at `hot` dtype
+/// and the remainder demoted to the cold tier at `cold` dtype. The
+/// cold tier's whole point on the byte axis is visible here: demoting
+/// the LRU tail to q4 lets an equal-byte budget retain strictly more
+/// tokens than a hot-only pool, which is the retained-token gain the
+/// serve bench's cold-tier cell measures.
+pub fn tiered_kv_bytes_per_token(
+    hot: KvDtype,
+    cold: KvDtype,
+    hot_fraction: f64,
+    layers: usize,
+    kv_heads: usize,
+    head_dim: usize,
+) -> f64 {
+    assert!(
+        (0.0..=1.0).contains(&hot_fraction),
+        "hot_fraction must be in [0, 1]"
+    );
+    hot_fraction * kv_bytes_per_token(hot, layers, kv_heads, head_dim)
+        + (1.0 - hot_fraction) * kv_bytes_per_token(cold, layers, kv_heads, head_dim)
+}
+
 /// Rescale a point cloud's budget axis from token units to bytes
 /// (`bytes_per_token` from [`kv_bytes_per_token`]). Accuracy and
 /// labels are untouched; with a positive factor the Pareto-dominance
@@ -248,6 +271,24 @@ mod tests {
         assert_eq!(f, 8.0 * 2.0 * 64.0);
         assert!(f / q8 >= 3.0, "q8 shrinks the byte axis ≥ 3×");
         assert!(f / q4 >= 4.5, "q4 shrinks it further");
+    }
+
+    #[test]
+    fn tiered_bytes_interpolate_between_hot_and_cold() {
+        let (l, h, hd) = (4, 2, 16);
+        let hot = kv_bytes_per_token(KvDtype::F32, l, h, hd);
+        let cold = kv_bytes_per_token(KvDtype::Q4, l, h, hd);
+        // endpoints: all-hot and all-cold recover the plain factors
+        assert_eq!(tiered_kv_bytes_per_token(KvDtype::F32, KvDtype::Q4, 1.0, l, h, hd), hot);
+        assert_eq!(tiered_kv_bytes_per_token(KvDtype::F32, KvDtype::Q4, 0.0, l, h, hd), cold);
+        // a half-demoted cache sits strictly between, at the mean
+        let half = tiered_kv_bytes_per_token(KvDtype::F32, KvDtype::Q4, 0.5, l, h, hd);
+        assert!((half - 0.5 * (hot + cold)).abs() < 1e-12);
+        assert!(cold < half && half < hot);
+        // equal byte budget ⇒ more retained tokens with a cold tier:
+        // tokens = budget / bytes-per-token grows as the factor falls
+        let budget = 1e6;
+        assert!(budget / half > budget / hot);
     }
 
     #[test]

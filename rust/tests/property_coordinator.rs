@@ -932,3 +932,129 @@ fn cow_pool_refcounts_balance_under_random_lifecycle() {
         assert_eq!(c.pool_refs(), 0);
     }
 }
+
+#[test]
+fn cold_tier_demote_promote_spill_keeps_refcounts_balanced() {
+    // Extends the lifecycle property with the cold tier's traffic:
+    // demotion removes a page from the pool entirely (its payload
+    // moves into the tier), promotion re-inserts it as a fresh
+    // owner-referenced entry, and spill/reload happens transparently
+    // under a deliberately tiny RAM budget. The pool-ref balance
+    // (refs == lane mappings + held handles) must hold at every step —
+    // cold entries are *outside* the pool and contribute zero refs.
+    use hyperscale::kvcache::ColdTier;
+    let dir = std::env::temp_dir().join(format!("hyperscale-coldprop-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    for seed in 0..8u64 {
+        let mut rng = SplitMix64::new(0xC01D ^ seed);
+        let g = geom(32);
+        let lanes = 4usize;
+        let mut c = store(g, lanes);
+        // ~2 pages resident; the rest of the cold set spills to disk
+        let page_bytes = g.layers * g.kv_heads * g.page_size * g.head_dim * 8;
+        let mut cold = ColdTier::new(2 * page_bytes, KvDtype::Q4, Some(dir.clone()), g.head_dim);
+        let mut active = vec![false; lanes];
+        let mut held: Vec<u64> = Vec::new();
+        let mut cold_keys: Vec<Vec<u32>> = Vec::new();
+        let mut key_seq = 0u32;
+
+        let check_refs = |c: &CacheStore, held: &Vec<u64>| {
+            let mapped: usize = (0..lanes).map(|b| c.shared_pages(b)).sum();
+            assert_eq!(
+                c.pool_refs(),
+                mapped + held.len(),
+                "pool refs != lane mappings + held handles"
+            );
+        };
+
+        for _ in 0..250 {
+            let lane = rng.below(lanes);
+            match rng.below(6) {
+                0 => {
+                    if !active[lane] {
+                        prefill_identity(&mut c, lane, 1 + rng.below(16));
+                        active[lane] = true;
+                    }
+                }
+                1 => {
+                    // retain a clean page for later demotion
+                    if active[lane] && c.clean_prefix_pages(lane, g.page_size + 1) > 0 {
+                        held.push(c.export_page(lane, 0));
+                    }
+                }
+                2 => {
+                    // retire the lane (drops its mapping refs)
+                    if active[lane] {
+                        c.recycle_lane(lane);
+                        active[lane] = false;
+                    }
+                }
+                3 => {
+                    // demote a held page: the handle is consumed either
+                    // way; the payload enters the tier only when ours
+                    // was the final reference
+                    if let Some(id) = held.pop() {
+                        if let Some((page, data)) = c.demote_page(id) {
+                            key_seq += 1;
+                            cold.admit(&[key_seq], page, data);
+                            cold_keys.push(vec![key_seq]);
+                        }
+                    }
+                }
+                4 => {
+                    // promote a cold entry (may reload from disk) and
+                    // either hold the adopted handle or map it
+                    if !cold_keys.is_empty() {
+                        let key = cold_keys.swap_remove(rng.below(cold_keys.len()));
+                        // with a spill dir configured, over-budget
+                        // entries spill rather than evict, so every
+                        // admitted key is promotable
+                        let (page, data) = cold.promote(&key).expect("spilled, not evicted");
+                        let id = c.adopt_cold_page(page, data);
+                        match (0..lanes).find(|&d| !active[d]) {
+                            Some(dst) if rng.below(2) == 0 => {
+                                c.map_prefix_pages(dst, &[id]);
+                                c.materialize_pending();
+                                active[dst] = true;
+                            }
+                            _ => held.push(id),
+                        }
+                    }
+                }
+                _ => {
+                    // release a held handle without demoting
+                    if let Some(id) = held.pop() {
+                        c.release_page(id);
+                    }
+                }
+            }
+            check_refs(&c, &held);
+            // resident bytes never exceed budget; anything past it is
+            // spilled, never silently dropped while entries exist
+            assert!(
+                cold.resident_bytes() <= 2 * page_bytes,
+                "seed {seed}: cold budget overrun"
+            );
+        }
+        // drain: pool and tier both empty out with no leaks
+        c.materialize_pending();
+        for lane in 0..lanes {
+            c.recycle_lane(lane);
+        }
+        for id in held.drain(..) {
+            c.release_page(id);
+        }
+        cold.clear();
+        assert_eq!(c.pool_pages(), 0, "seed {seed}: leaked pool pages");
+        assert_eq!(c.pool_refs(), 0);
+        assert_eq!(cold.spilled_bytes(), 0, "seed {seed}: spill bytes leak");
+        assert!(cold.is_empty());
+    }
+    // every spill file is gone once the tiers are cleared
+    assert_eq!(
+        std::fs::read_dir(&dir).unwrap().count(),
+        0,
+        "spill files leaked"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -274,6 +274,99 @@ fn prefix_restore_equivalence_and_requantize_once() {
 }
 
 // ----------------------------------------------------------------------
+// Cold tier: the second lossy boundary (docs/NUMERICS.md)
+// ----------------------------------------------------------------------
+
+/// Demote one retained page through the store into a cold tier of
+/// `cold_dtype`, promote it back, and restore it into `dst`. Returns
+/// the lane view for comparison.
+fn demote_promote_restore(
+    c: &mut CacheStore,
+    cold: &mut hyperscale::kvcache::ColdTier,
+    id: u64,
+    key: &[u32],
+    dst: usize,
+) -> Vec<(SlotState, f32, Vec<f32>, Vec<f32>)> {
+    let (page, data) = c.demote_page(id).expect("sole owner demotes");
+    cold.admit(key, page, data);
+    let (page, data) = cold.promote(key).expect("cold hit");
+    let new_id = c.adopt_cold_page(page, data);
+    c.map_prefix_pages(dst, &[new_id]);
+    c.materialize_pending();
+    lane_view(c, dst)
+}
+
+/// Cold restores meet the documented per-dtype bound on an f32 hot
+/// store: an f32 cold tier is bit-exact, q8/q4 stay within the same
+/// half-step bound the hot quantized stores are held to.
+#[test]
+fn cold_tier_roundtrip_error_bounds_per_dtype() {
+    use hyperscale::kvcache::ColdTier;
+    let g = geom();
+    for cold_dtype in [KvDtype::F32, KvDtype::Q8, KvDtype::Q4] {
+        let mut c = CacheStore::new(g, 2); // exact hot payloads
+        prefill(&mut c, 0, g.page_size);
+        let reference = lane_view(&c, 0);
+        let id = c.export_page(0, 0);
+        c.recycle_lane(0);
+        let mut cold = ColdTier::new(1 << 20, cold_dtype, None, g.head_dim);
+        let restored = demote_promote_restore(&mut c, &mut cold, id, &[7, 7, 7], 1);
+        assert_eq!(cold.hits(), 1);
+        let bound = error_bound(cold_dtype, g.head_dim);
+        for (r, o) in reference.iter().zip(&restored) {
+            // metadata and masks cross the boundary exactly
+            assert_eq!(r.0, o.0, "{cold_dtype}: slot state must be exact");
+            assert_eq!(r.1, o.1, "{cold_dtype}: mask must be exact");
+            for (x, y) in r.2.iter().zip(&o.2).chain(r.3.iter().zip(&o.3)) {
+                assert!(
+                    (x - y).abs() <= bound,
+                    "{cold_dtype}: cold restore error {} > bound {bound}",
+                    (x - y).abs()
+                );
+            }
+        }
+        if cold_dtype == KvDtype::F32 {
+            assert_eq!(reference, restored, "f32 cold tier must be bit-exact");
+        }
+        c.recycle_lane(1);
+        assert_eq!(c.pool_pages(), 0, "{cold_dtype}: no leaked pool entries");
+        assert_eq!(c.pool_refs(), 0);
+    }
+}
+
+/// Demote → promote → demote → promote through the store never
+/// re-encodes: the second restore is bit-identical to the first, so
+/// cycles cannot compound the (single, documented) demotion error.
+#[test]
+fn cold_demote_promote_cycles_do_not_compound_error() {
+    use hyperscale::kvcache::ColdTier;
+    let g = geom();
+    let mut c = CacheStore::new(g, 2);
+    prefill(&mut c, 0, g.page_size);
+    let id = c.export_page(0, 0);
+    c.recycle_lane(0);
+    let mut cold = ColdTier::new(1 << 20, KvDtype::Q4, None, g.head_dim);
+
+    let first = demote_promote_restore(&mut c, &mut cold, id, &[3], 1);
+
+    // requantize-once carries over: re-exporting the promoted (clean)
+    // page reuses the pool entry, so the second demotion hands the
+    // cold tier the very same q4 block — admitted verbatim.
+    let again = c.export_page(1, 0);
+    c.recycle_lane(1);
+    let second = demote_promote_restore(&mut c, &mut cold, again, &[3], 1);
+    assert_eq!(
+        first, second,
+        "a demote/promote cycle must be bit-stable after the first demotion"
+    );
+    assert_eq!(cold.hits(), 2);
+
+    c.recycle_lane(1);
+    assert_eq!(c.pool_pages(), 0);
+    assert_eq!(c.pool_refs(), 0);
+}
+
+// ----------------------------------------------------------------------
 // Edge rows: non-finite, subnormal, and single-element payloads
 // ----------------------------------------------------------------------
 

@@ -135,6 +135,14 @@ def main() -> None:
     print(f"trace.enabled.events: {4 * n}  (submit/admit/first_token/finish x {n}")
     print("  requests; width 1 + prefix cache off => no COW/dequant/evict events)")
     print("trace.enabled.dropped: 0  (4096-event ring never wraps at this scale)")
+    print("\nprefix.cold.* (tiered-prefix-cache cell, same skewed workload):")
+    print("  hit/cold-token totals are deterministic but depend on radix trim")
+    print("  order (LRU leaf demotion under the 4-page hot budget), which this")
+    print("  seeder does not port -- seed them null (presence gate) and refresh")
+    print("  exact values from the uploaded BENCH_serve.json CI artifact.")
+    print("prefix.cold.tiered_beats_hot_only: 1  (bench-asserted invariant:")
+    print("  hot+cold at the same hot budget recovers strictly more prefix hit")
+    print("  tokens than hot-only; cold hits promote instead of re-prefilling)")
 
 
 if __name__ == "__main__":

@@ -165,10 +165,20 @@ def cost_model(dtype: str) -> dict:
     if dtype != "f32":
         dequant_s += bytes_per_token / DEQUANT_BYTES_PER_S
 
+    # cold promotion is always priced at the cold tier's q4 storage
+    # dtype (upload + dequant of the q4 lattice), independent of the
+    # hot pool dtype — one constant across the sweep
+    cold_bytes_per_token = rows_per_token * float(row_payload_bytes("q4", HEAD_DIM))
+    cold_hit_s = (
+        cold_bytes_per_token / UPLOAD_BYTES_PER_S
+        + cold_bytes_per_token / DEQUANT_BYTES_PER_S
+    )
+
     return {
         "prefill_ns": max(to_ns(prefill_s), 1),
         "decode_ns": max(to_ns(decode_s), 1),
         "dequant_ns": max(to_ns(dequant_s), 1),
+        "cold_hit_ns": max(to_ns(cold_hit_s), 1),
     }
 
 
